@@ -1,0 +1,137 @@
+//! End-to-end edge deployment driver — the full-system validation run
+//! recorded in EXPERIMENTS.md.
+//!
+//! Exercises every layer on a real workload: build a scene, prune + cluster
+//! it (the paper's model pipeline), render a camera orbit through BOTH the
+//! golden Rust rasterizer and the AOT JAX/Pallas artifacts via PJRT
+//! (proving L1/L2/L3 compose), verify the two backends agree, and run the
+//! cycle-accurate simulator per frame for FLICKER / GSCore / the edge GPU,
+//! reporting FPS, energy, and quality.
+//!
+//! Run: `cargo run --release --example edge_deployment`
+//! (needs `make artifacts` first for the PJRT path; skipped if absent)
+
+use flicker::config::ExperimentConfig;
+use flicker::coordinator::report::Report;
+use flicker::coordinator::{render_frame, Backend, FrameRequest};
+use flicker::render::metrics::{psnr, ssim};
+use flicker::render::raster::RenderOptions;
+use flicker::runtime::{default_artifact_dir, Runtime};
+use flicker::scene::clustering::cluster;
+use flicker::scene::pruning::{prune, PruneConfig};
+use flicker::sim::gpu::{estimate, GpuParams};
+use flicker::sim::top::simulate_frame;
+use flicker::sim::workload::extract;
+use flicker::sim::{HwConfig, SubtileTest};
+use flicker::util::stats::harmonic_mean;
+
+fn main() -> anyhow::Result<()> {
+    let cfg = ExperimentConfig {
+        scene: "garden".into(),
+        resolution: 192,
+        frames: 4,
+        ..Default::default()
+    };
+
+    // ---- model pipeline: train-time preparation ----
+    let mut scene = cfg.build_scene()?;
+    let n0 = scene.len();
+    let views = cfg.build_cameras();
+    let rep = prune(&mut scene, &views, &PruneConfig::default());
+    let cl = cluster(&scene, 32);
+    println!(
+        "model prep: {} → {} gaussians (pruned), {} clusters (mean {:.1})",
+        n0,
+        rep.after,
+        cl.num_clusters(),
+        cl.mean_size()
+    );
+
+    // ---- PJRT runtime (L1/L2 artifacts) ----
+    let rt = if default_artifact_dir().join("manifest.json").exists() {
+        Some(Runtime::load(&default_artifact_dir())?)
+    } else {
+        println!("NOTE: artifacts missing — run `make artifacts`; skipping PJRT backend");
+        None
+    };
+    if let Some(rt) = &rt {
+        println!("pjrt: platform {}, {} artifacts", rt.platform(), rt.manifest.files.len());
+    }
+
+    let mut report = Report::new("edge_deployment", "End-to-end orbit on garden (pruned+clustered)");
+    let mut golden_ms = Vec::new();
+    let mut pjrt_psnr = Vec::new();
+    let mut fl_fps = Vec::new();
+    let mut gs_fps = Vec::new();
+    let mut xnx_fps = Vec::new();
+    let mut fl_uj = Vec::new();
+
+    for (i, cam) in views.iter().enumerate() {
+        let req = FrameRequest {
+            scene: &scene,
+            camera: cam,
+            options: RenderOptions::default(),
+        };
+        let golden = render_frame(&req, &mut Backend::Golden)?;
+        golden_ms.push(golden.wall_ms);
+
+        // PJRT backend: all three layers compose.
+        let mut metrics: Vec<(&str, f64)> = vec![("golden_ms", golden.wall_ms)];
+        if let Some(rt) = &rt {
+            let pjrt = render_frame(&req, &mut Backend::Pjrt(rt))?;
+            let p = psnr(&golden.image, &pjrt.image);
+            let s = ssim(&golden.image, &pjrt.image);
+            pjrt_psnr.push(p);
+            metrics.push(("pjrt_ms", pjrt.wall_ms));
+            metrics.push(("pjrt_psnr", p));
+            metrics.push(("pjrt_ssim", s));
+        }
+
+        // Cycle-accurate accelerator + GPU baselines.
+        let fl = simulate_frame(&scene, cam, &HwConfig::flicker32());
+        let gs = simulate_frame(&scene, cam, &HwConfig::gscore64());
+        let wl = extract(
+            &scene,
+            cam,
+            &HwConfig {
+                subtile_test: SubtileTest::None,
+                ..HwConfig::simplified32()
+            },
+        );
+        let xnx = estimate(&wl, &GpuParams::xavier_nx());
+        fl_fps.push(fl.fps);
+        gs_fps.push(gs.fps);
+        xnx_fps.push(xnx.fps);
+        fl_uj.push(fl.energy.total_uj());
+        metrics.push(("flicker_fps", fl.fps));
+        metrics.push(("gscore_fps", gs.fps));
+        metrics.push(("xnx_fps", xnx.fps));
+        metrics.push(("flicker_uj", fl.energy.total_uj()));
+        report.row(&format!("frame{i}"), &metrics);
+    }
+    report.emit();
+
+    let fl = harmonic_mean(&fl_fps);
+    let gs = harmonic_mean(&gs_fps);
+    let xnx = harmonic_mean(&xnx_fps);
+    println!("== summary ==");
+    println!("golden render: {:.1} ms/frame host wall-clock", harmonic_mean(&golden_ms));
+    if !pjrt_psnr.is_empty() {
+        let worst = pjrt_psnr.iter().cloned().fold(f64::INFINITY, f64::min);
+        println!("pjrt backend agrees with golden: worst PSNR {worst:.1} dB");
+        assert!(worst > 25.0, "PJRT/golden divergence");
+    }
+    println!(
+        "simulated FPS: flicker32 {fl:.1}, gscore64 {gs:.1}, edge GPU {xnx:.2} \
+         (speedup vs GPU: {:.1}x / {:.1}x)",
+        fl / xnx,
+        gs / xnx
+    );
+    println!(
+        "flicker energy: {:.1} µJ/frame avg",
+        fl_uj.iter().sum::<f64>() / fl_uj.len() as f64
+    );
+    assert!(fl > xnx, "accelerator must beat the edge GPU");
+    println!("edge_deployment OK");
+    Ok(())
+}

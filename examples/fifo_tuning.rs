@@ -1,0 +1,59 @@
+//! FIFO-depth tuning study (paper Sec. V-B / Fig. 9): sweep the feature-
+//! FIFO depth, print the speedup/stall/SRAM trade-off, and report the knee.
+//!
+//! Run: `cargo run --release --example fifo_tuning [-- --scene garden]`
+
+use flicker::config::ExperimentConfig;
+use flicker::coordinator::report::Report;
+use flicker::sim::area::{area, AreaParams};
+use flicker::sim::top::simulate_workload;
+use flicker::sim::workload::extract;
+use flicker::sim::HwConfig;
+use flicker::util::cli::Args;
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env(&[]);
+    let cfg = ExperimentConfig::from_args(&args)?;
+    let scene = cfg.build_scene()?;
+    let cam = &cfg.build_cameras()[0];
+    let base = HwConfig {
+        clustering: false,
+        ..cfg.build_hw()?
+    };
+    let wl = extract(&scene, cam, &base);
+
+    let mut report = Report::new("fifo_tuning", "FIFO depth: speedup / stalls / SRAM");
+    let mut rows = Vec::new();
+    for depth in [1usize, 2, 4, 8, 16, 32, 64, 128] {
+        let hw = HwConfig {
+            fifo_depth: depth,
+            ..base.clone()
+        };
+        let r = simulate_workload(&scene, cam, &hw, wl.clone());
+        let fifo_mm2 = area(&hw, &AreaParams::default()).fifo_mm2;
+        rows.push((depth, r.render_cycles, r.pipe.stall_rate(), fifo_mm2));
+    }
+    let d1 = rows[0].1 as f64;
+    let max_speedup = rows.iter().map(|r| d1 / r.1 as f64).fold(0.0, f64::max);
+    let mut knee = rows[0].0;
+    for (depth, cycles, stall, mm2) in &rows {
+        let speedup = d1 / *cycles as f64;
+        if speedup >= 0.95 * max_speedup && knee == rows[0].0 && *depth != rows[0].0 {
+            knee = *depth;
+        }
+        report.row(
+            &format!("depth={depth}"),
+            &[
+                ("speedup", speedup),
+                ("stall_rate", *stall),
+                ("fifo_mm2", *mm2),
+            ],
+        );
+    }
+    report.emit();
+    println!(
+        "knee: depth {knee} reaches ≥95% of the max {max_speedup:.3}x — the paper picks 16 \
+         (96% of max at 12.5% of depth-128's SRAM)."
+    );
+    Ok(())
+}

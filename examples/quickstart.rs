@@ -1,0 +1,97 @@
+//! Quickstart: render a synthetic scene with and without Mini-Tile CAT,
+//! report the quality delta and the workload reduction, and run the cycle
+//! simulator on both FLICKER and GSCore configurations.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use flicker::cat::{CatConfig, CatEngine, LeaderMode, Precision};
+use flicker::config::ExperimentConfig;
+use flicker::coordinator::{render_frame, Backend, FrameRequest};
+use flicker::render::metrics::{psnr, ssim};
+use flicker::render::raster::RenderOptions;
+use flicker::sim::top::simulate_frame;
+use flicker::sim::HwConfig;
+
+fn main() -> anyhow::Result<()> {
+    let cfg = ExperimentConfig {
+        scene: "garden".into(),
+        resolution: 192,
+        frames: 1,
+        ..Default::default()
+    };
+    let scene = cfg.build_scene()?;
+    let cam = &cfg.build_cameras()[0];
+    println!(
+        "scene '{}': {} gaussians ({:.0}% spiky)",
+        scene.name,
+        scene.len(),
+        scene.spiky_fraction(3.0) * 100.0
+    );
+
+    // 1) Vanilla render (golden model).
+    let req = FrameRequest {
+        scene: &scene,
+        camera: cam,
+        options: RenderOptions::default(),
+    };
+    let vanilla = render_frame(&req, &mut Backend::Golden)?;
+    println!(
+        "vanilla:  {:.1} ms, {:.1} gaussians tested per pixel",
+        vanilla.wall_ms,
+        vanilla.stats.per_pixel_tested()
+    );
+
+    // 2) Mini-Tile CAT render (adaptive leaders, mixed precision).
+    let cat_cfg = CatConfig {
+        mode: LeaderMode::SmoothFocused,
+        precision: Precision::Mixed,
+        stage1: true,
+    };
+    let cat = render_frame(&req, &mut Backend::GoldenCat(cat_cfg))?;
+    println!(
+        "with CAT: {:.1} ms, {:.1} gaussians tested per pixel",
+        cat.wall_ms,
+        cat.stats.per_pixel_tested()
+    );
+    println!(
+        "quality:  {:.2} dB PSNR, {:.4} SSIM vs vanilla",
+        psnr(&vanilla.image, &cat.image),
+        ssim(&vanilla.image, &cat.image)
+    );
+
+    // A standalone CAT engine exposes the Stage-1/Stage-2 filter funnel.
+    let mut engine = CatEngine::new(cat_cfg);
+    let _ = flicker::render::raster::render_masked(
+        &scene,
+        cam,
+        &req.options,
+        &mut engine,
+        None,
+    );
+    println!(
+        "CAT funnel: stage1 cut {:.0}%, minitile pass rate {:.0}%, leader saving {:.0}%",
+        engine.stats.stage1_reject_rate() * 100.0,
+        engine.stats.minitile_pass_rate() * 100.0,
+        engine.stats.leader_saving_vs_dense() * 100.0
+    );
+
+    // 3) Cycle-accurate simulation: FLICKER vs GSCore.
+    for hw in [HwConfig::flicker32(), HwConfig::gscore64()] {
+        let r = simulate_frame(&scene, cam, &hw);
+        println!(
+            "sim {:<22} {:>9} render-cycles  {:>7.2} ms/frame  {:>6.1} µJ  (stall {:.1}%)",
+            r.config,
+            r.render_cycles,
+            r.frame_ms,
+            r.energy.total_uj(),
+            r.pipe.stall_rate() * 100.0
+        );
+    }
+
+    // 4) Save the CAT render.
+    let out = std::path::Path::new("target/quickstart.ppm");
+    std::fs::create_dir_all("target")?;
+    cat.image.write_ppm(out)?;
+    println!("wrote {}", out.display());
+    Ok(())
+}

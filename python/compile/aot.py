@@ -1,0 +1,94 @@
+"""AOT lowering: JAX entry points -> HLO *text* artifacts for the Rust
+PJRT runtime.
+
+HLO text (not serialized HloModuleProto) is the interchange format: jax
+>= 0.5 emits protos with 64-bit instruction ids which xla_extension 0.5.1
+(the version behind the published ``xla`` crate) rejects; the text parser
+reassigns ids and round-trips cleanly. See /opt/xla-example/gen_hlo.py.
+
+Run once at build time (``make artifacts``); Python never executes on the
+frame-rendering path.
+"""
+
+import argparse
+import hashlib
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def f32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def entries():
+    n, m, t = model.N_GAUSS, model.N_PR, model.TILE
+    return {
+        "project": (
+            model.project_entry,
+            (f32(n, 3), f32(n, 6), f32(4)),
+        ),
+        "pr_weight": (
+            model.pr_weight_entry,
+            (f32(n, 2), f32(n, 3), f32(m, 2), f32(m, 2)),
+        ),
+        "cat_masks": (
+            model.cat_masks_entry,
+            (f32(n, 2), f32(n, 3), f32(n), f32(m, 2), f32(m, 2)),
+        ),
+        "render_tile": (
+            model.render_tile_entry,
+            (f32(n, 2), f32(n, 3), f32(n), f32(n, 3), f32(2), f32(m, 2), f32(m, 2)),
+        ),
+        "_unused_tile": (lambda: None, (t,)),  # keeps TILE in the manifest
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default="../artifacts")
+    args = ap.parse_args()
+    os.makedirs(args.out_dir, exist_ok=True)
+
+    manifest = {
+        "n_gauss": model.N_GAUSS,
+        "n_pr": model.N_PR,
+        "tile": model.TILE,
+        "artifacts": {},
+    }
+    for name, (fn, specs) in entries().items():
+        if name.startswith("_"):
+            continue
+        lowered = jax.jit(fn).lower(*specs)
+        text = to_hlo_text(lowered)
+        path = os.path.join(args.out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        digest = hashlib.sha256(text.encode()).hexdigest()[:16]
+        manifest["artifacts"][name] = {
+            "file": f"{name}.hlo.txt",
+            "sha256_16": digest,
+            "inputs": [list(s.shape) for s in specs],
+        }
+        print(f"wrote {path} ({len(text)} chars, sha {digest})")
+
+    with open(os.path.join(args.out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+    print(f"wrote {args.out_dir}/manifest.json")
+
+
+if __name__ == "__main__":
+    main()

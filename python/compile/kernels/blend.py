@@ -1,0 +1,68 @@
+"""Layer-1 Pallas kernel: front-to-back alpha blending of one 16x16 tile.
+
+TPU adaptation of the VRU array (DESIGN.md section Hardware-Adaptation): a
+rendering core's 32 pixel lanes become a (16,16) VMEM-resident register
+tile; the depth-ordered Gaussian list is walked with a fori_loop carrying
+the (color, transmittance) state, which XLA keeps in registers/VMEM. The
+ASIC's per-mini-tile early termination becomes mask-predicated updates: a
+saturated pixel (T < t_min) simply stops changing, matching the functional
+semantics of the hardware skip (the *scheduling* skip is modeled by the
+Rust cycle simulator, which decides what enters this kernel).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+ALPHA_MIN = 1.0 / 255.0
+TILE = 16
+
+
+def _blend_kernel(mu_ref, conic_ref, opacity_ref, color_ref, origin_ref,
+                  rgb_ref, trans_ref, *, t_min):
+    n = mu_ref.shape[0]
+    ox = origin_ref[0]
+    oy = origin_ref[1]
+    xs = ox + jnp.arange(TILE, dtype=jnp.float32) + 0.5   # (T,)
+    ys = oy + jnp.arange(TILE, dtype=jnp.float32) + 0.5
+
+    def body(i, state):
+        rgb, trans = state  # (T,T,3), (T,T)
+        dx = xs[None, :] - mu_ref[i, 0]      # (1,T) broadcast over rows
+        dy = ys[:, None] - mu_ref[i, 1]      # (T,1)
+        e = (0.5 * (conic_ref[i, 0] * dx * dx + conic_ref[i, 2] * dy * dy)
+             + conic_ref[i, 1] * dx * dy)
+        alpha = jnp.minimum(opacity_ref[i] * jnp.exp(-e), 0.999)
+        alpha = jnp.where(alpha >= ALPHA_MIN, alpha, 0.0)
+        active = trans >= t_min
+        w = jnp.where(active, alpha * trans, 0.0)
+        rgb = rgb + w[:, :, None] * color_ref[i]
+        trans = jnp.where(active, trans * (1.0 - alpha), trans)
+        return rgb, trans
+
+    rgb0 = jnp.zeros((TILE, TILE, 3), jnp.float32)
+    t0 = jnp.ones((TILE, TILE), jnp.float32)
+    rgb, trans = jax.lax.fori_loop(0, n, body, (rgb0, t0))
+    rgb_ref[...] = rgb
+    trans_ref[...] = trans
+
+
+@functools.partial(jax.jit, static_argnames=("t_min",))
+def blend_tile(mu, conic, opacity, color, origin, t_min=1e-4):
+    """Blend N depth-sorted splats over one tile.
+
+    Shapes: mu (N,2), conic (N,3), opacity (N,), color (N,3), origin (2,).
+    Returns rgb (16,16,3) and transmittance (16,16). Padding convention:
+    splats with opacity 0 are no-ops, so callers pad N freely.
+    """
+    kernel = functools.partial(_blend_kernel, t_min=t_min)
+    return pl.pallas_call(
+        kernel,
+        out_shape=(
+            jax.ShapeDtypeStruct((TILE, TILE, 3), jnp.float32),
+            jax.ShapeDtypeStruct((TILE, TILE), jnp.float32),
+        ),
+        interpret=True,
+    )(mu, conic, opacity, color, origin)

@@ -1,0 +1,123 @@
+"""Layer-1 Pallas kernel: Pixel-Rectangle Gaussian weights (paper Alg. 1).
+
+TPU adaptation of the PRTU (DESIGN.md section Hardware-Adaptation): instead of
+two PRTUs sharing registers, the kernel tiles the (PR, Gaussian) grid into
+VMEM blocks and exploits the same corner symmetry in vectorized form - the
+per-axis terms s_x, s_y are computed once per (PR, Gaussian) pair and the
+four corners are assembled by cheap adds, mirroring the ~2x multiply saving
+of the hardware unit.
+
+The mixed-precision variant emulates the CTU datapath with
+quantize-dequantize pairs (fp16 deltas -> fp8 products -> fp16 accumulate);
+on a real TPU these map onto bf16 MXU passes.
+
+All kernels run with interpret=True: the CPU PJRT plugin cannot execute
+Mosaic custom-calls, and correctness (not CPU wallclock) is the goal of the
+interpret path.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# VMEM block sizes: 8 PRs x 128 Gaussians x 4 corners of f32 = 16 KiB per
+# operand block - comfortably inside a TPU core's ~16 MiB VMEM with double
+# buffering.
+BLOCK_M = 8
+BLOCK_N = 128
+
+
+def _q16(x):
+    return x.astype(jnp.float16).astype(jnp.float32)
+
+
+def _q8(x):
+    # Saturate at the E4M3 max like a hardware convert unit (XLA's raw cast
+    # overflows to NaN instead).
+    return jnp.clip(x, -448.0, 448.0).astype(jnp.float8_e4m3fn).astype(jnp.float32)
+
+
+def _pr_weight_kernel(mu_ref, conic_ref, ptop_ref, pbot_ref, out_ref, *, mixed):
+    """One (BLOCK_M, BLOCK_N) grid step."""
+    mu = mu_ref[...]          # (BLOCK_N, 2)
+    conic = conic_ref[...]    # (BLOCK_N, 3)
+    ptop = ptop_ref[...]      # (BLOCK_M, 2)
+    pbot = pbot_ref[...]      # (BLOCK_M, 2)
+
+    if mixed:
+        # Line 1 at FP16, then convert to FP8 (the paper's key trick:
+        # subtract *before* narrowing, so relative position survives).
+        dtx = _q8(_q16(_q16(ptop[:, None, 0]) - _q16(mu[None, :, 0])))
+        dty = _q8(_q16(_q16(ptop[:, None, 1]) - _q16(mu[None, :, 1])))
+        dbx = _q8(_q16(_q16(pbot[:, None, 0]) - _q16(mu[None, :, 0])))
+        dby = _q8(_q16(_q16(pbot[:, None, 1]) - _q16(mu[None, :, 1])))
+        ca = _q8(conic[None, :, 0])
+        cb = _q8(conic[None, :, 1])
+        cc = _q8(conic[None, :, 2])
+        qm, qa = _q8, _q16
+    else:
+        dtx = ptop[:, None, 0] - mu[None, :, 0]
+        dty = ptop[:, None, 1] - mu[None, :, 1]
+        dbx = pbot[:, None, 0] - mu[None, :, 0]
+        dby = pbot[:, None, 1] - mu[None, :, 1]
+        ca = conic[None, :, 0]
+        cb = conic[None, :, 1]
+        cc = conic[None, :, 2]
+        qm = qa = lambda x: x
+
+    # Lines 2-3: per-axis quadratic terms (shared between corners).
+    s_tx = qm(qm(0.5 * dtx * dtx) * ca)
+    s_ty = qm(qm(0.5 * dty * dty) * cc)
+    s_bx = qm(qm(0.5 * dbx * dbx) * ca)
+    s_by = qm(qm(0.5 * dby * dby) * cc)
+    # Lines 4-5: cross terms.
+    t0 = qm(qm(dtx * dty) * cb)
+    t1 = qm(qm(dbx * dty) * cb)
+    t2 = qm(qm(dtx * dby) * cb)
+    t3 = qm(qm(dbx * dby) * cb)
+    # Lines 6-7: corner assembly (QAU accumulate precision).
+    e0 = qa(qa(s_tx + s_ty) + t0)
+    e1 = qa(qa(s_bx + s_ty) + t1)
+    e2 = qa(qa(s_tx + s_by) + t2)
+    e3 = qa(qa(s_bx + s_by) + t3)
+    out_ref[...] = jnp.stack([e0, e1, e2, e3], axis=-1)
+
+
+@functools.partial(jax.jit, static_argnames=("mixed",))
+def pr_weights(mu, conic, p_top, p_bot, mixed=False):
+    """Batched Alg. 1 on the Pallas grid.
+
+    Shapes: mu (N,2), conic (N,3), p_top/p_bot (M,2) -> (M,N,4).
+    M must be a multiple of BLOCK_M and N of BLOCK_N (the coordinator pads).
+    """
+    m, n = p_top.shape[0], mu.shape[0]
+    assert m % BLOCK_M == 0, f"M={m} not a multiple of {BLOCK_M}"
+    assert n % BLOCK_N == 0, f"N={n} not a multiple of {BLOCK_N}"
+    grid = (m // BLOCK_M, n // BLOCK_N)
+    kernel = functools.partial(_pr_weight_kernel, mixed=mixed)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((BLOCK_N, 2), lambda i, j: (j, 0)),
+            pl.BlockSpec((BLOCK_N, 3), lambda i, j: (j, 0)),
+            pl.BlockSpec((BLOCK_M, 2), lambda i, j: (i, 0)),
+            pl.BlockSpec((BLOCK_M, 2), lambda i, j: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((BLOCK_M, BLOCK_N, 4), lambda i, j: (i, j, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, n, 4), jnp.float32),
+        interpret=True,
+    )(mu, conic, p_top, p_bot)
+
+
+@jax.jit
+def cat_masks(mu, conic, opacity, p_top, p_bot):
+    """Eq. 2 pass masks from the Pallas weights: ln(255*o) > E.
+
+    Returns (M, N, 4) float32 in {0,1} (bool upsets some PJRT paths).
+    """
+    e = pr_weights(mu, conic, p_top, p_bot, mixed=False)
+    lhs = jnp.log(255.0 * jnp.maximum(opacity, 1e-12))
+    return (lhs[None, :, None] > e).astype(jnp.float32)

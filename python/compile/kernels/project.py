@@ -1,0 +1,87 @@
+"""Layer-1 Pallas kernel: EWA projection (3D camera-space -> 2D splats).
+
+Elementwise over Gaussians: quaternion -> rotation, Sigma = R S S^T R^T in
+camera space is prepared by the caller (model.py fuses the world->camera
+rotation); this kernel applies the perspective Jacobian, covariance
+dilation, conic inversion, and 3-sigma radius - the preprocessing core's
+datapath (paper Fig. 5).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BLOCK = 128
+DILATION = 0.3
+
+
+def _project_kernel(pos_ref, cov_ref, cam_ref, mean_ref, conic_ref,
+                    depth_ref, radius_ref):
+    pos = pos_ref[...]            # (B, 3)
+    cov = cov_ref[...]            # (B, 6) packed symmetric [xx,xy,xz,yy,yz,zz]
+    fx = cam_ref[0]
+    fy = cam_ref[1]
+    cx = cam_ref[2]
+    cy = cam_ref[3]
+
+    x, y, z = pos[:, 0], pos[:, 1], pos[:, 2]
+    inv_z = 1.0 / z
+    mean_ref[...] = jnp.stack([fx * x * inv_z + cx, fy * y * inv_z + cy], axis=-1)
+    depth_ref[...] = z
+
+    j00 = fx * inv_z
+    j02 = -fx * x * inv_z * inv_z
+    j11 = fy * inv_z
+    j12 = -fy * y * inv_z * inv_z
+
+    cxx, cxy, cxz = cov[:, 0], cov[:, 1], cov[:, 2]
+    cyy, cyz, czz = cov[:, 3], cov[:, 4], cov[:, 5]
+
+    a = j00 * j00 * cxx + 2.0 * j00 * j02 * cxz + j02 * j02 * czz + DILATION
+    b = (j00 * j11 * cxy + j00 * j12 * cxz + j02 * j11 * cyz + j02 * j12 * czz)
+    c = j11 * j11 * cyy + 2.0 * j11 * j12 * cyz + j12 * j12 * czz + DILATION
+
+    det = a * c - b * b
+    inv_det = 1.0 / det
+    conic_ref[...] = jnp.stack([c * inv_det, -b * inv_det, a * inv_det], axis=-1)
+
+    mid = 0.5 * (a + c)
+    lam1 = mid + jnp.sqrt(jnp.maximum(mid * mid - det, 0.0))
+    radius_ref[...] = 3.0 * jnp.sqrt(lam1)
+
+
+@jax.jit
+def project(pos_cam, cov6_cam, cam_params):
+    """Project camera-space Gaussians.
+
+    Shapes: pos_cam (N,3), cov6_cam (N,6) packed [xx,xy,xz,yy,yz,zz],
+    cam_params (4,) = [fx, fy, cx, cy]. N must be a multiple of BLOCK.
+    Returns (mean (N,2), conic (N,3), depth (N,), radius (N,)).
+    """
+    n = pos_cam.shape[0]
+    assert n % BLOCK == 0, f"N={n} not a multiple of {BLOCK}"
+    grid = (n // BLOCK,)
+    return pl.pallas_call(
+        _project_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((BLOCK, 3), lambda i: (i, 0)),
+            pl.BlockSpec((BLOCK, 6), lambda i: (i, 0)),
+            pl.BlockSpec((4,), lambda i: (0,)),
+        ],
+        out_specs=(
+            pl.BlockSpec((BLOCK, 2), lambda i: (i, 0)),
+            pl.BlockSpec((BLOCK, 3), lambda i: (i, 0)),
+            pl.BlockSpec((BLOCK,), lambda i: (i,)),
+            pl.BlockSpec((BLOCK,), lambda i: (i,)),
+        ),
+        out_shape=(
+            jax.ShapeDtypeStruct((n, 2), jnp.float32),
+            jax.ShapeDtypeStruct((n, 3), jnp.float32),
+            jax.ShapeDtypeStruct((n,), jnp.float32),
+            jax.ShapeDtypeStruct((n,), jnp.float32),
+        ),
+        interpret=True,
+    )(pos_cam, cov6_cam, cam_params)

@@ -1,0 +1,203 @@
+"""Pure-jnp reference oracles for the Pallas kernels.
+
+These are the correctness contracts: every Pallas kernel in this package is
+asserted allclose against the function of the same name here (pytest +
+hypothesis sweeps in python/tests/). They also define the L2 math that the
+Rust golden model mirrors (rust/src/cat/pr.rs, rust/src/render/*).
+"""
+
+import jax.numpy as jnp
+
+# Minimum contributing alpha (1/255) - paper Eq. 1 threshold.
+ALPHA_MIN = 1.0 / 255.0
+
+
+def pr_weights_ref(mu, conic, p_top, p_bot):
+    """Pixel-Rectangle Gaussian weights (paper Alg. 1), batched.
+
+    Args:
+      mu:    (N, 2) projected means.
+      conic: (N, 3) inverse-covariance entries (a, b, c).
+      p_top: (M, 2) main-diagonal top pixel per PR.
+      p_bot: (M, 2) main-diagonal bottom pixel per PR.
+
+    Returns:
+      (M, N, 4) weights E at corners [(xt,yt), (xb,yt), (xt,yb), (xb,yb)].
+    """
+    dtx = p_top[:, None, 0] - mu[None, :, 0]  # (M, N)
+    dty = p_top[:, None, 1] - mu[None, :, 1]
+    dbx = p_bot[:, None, 0] - mu[None, :, 0]
+    dby = p_bot[:, None, 1] - mu[None, :, 1]
+    ca = conic[None, :, 0]
+    cb = conic[None, :, 1]
+    cc = conic[None, :, 2]
+    s_tx = 0.5 * dtx * dtx * ca
+    s_ty = 0.5 * dty * dty * cc
+    s_bx = 0.5 * dbx * dbx * ca
+    s_by = 0.5 * dby * dby * cc
+    t0 = dtx * dty * cb
+    t1 = dbx * dty * cb
+    t2 = dtx * dby * cb
+    t3 = dbx * dby * cb
+    e0 = s_tx + s_ty + t0
+    e1 = s_bx + s_ty + t1
+    e2 = s_tx + s_by + t2
+    e3 = s_bx + s_by + t3
+    return jnp.stack([e0, e1, e2, e3], axis=-1)
+
+
+def cat_masks_ref(mu, conic, opacity, p_top, p_bot):
+    """Eq. 2 decisions for a batch of PRs: ln(255*o) > E.
+
+    Returns (M, N, 4) boolean pass masks.
+    """
+    e = pr_weights_ref(mu, conic, p_top, p_bot)
+    lhs = jnp.log(255.0 * jnp.maximum(opacity, 1e-12))  # (N,)
+    return lhs[None, :, None] > e
+
+
+def alpha_map_ref(mu, conic, opacity, origin, tile=16):
+    """Per-pixel alpha (Eq. 1) of N splats over a tile x tile pixel block.
+
+    Returns (N, tile, tile) alphas clamped to <= 0.999 (3DGS convention).
+    """
+    xs = origin[0] + jnp.arange(tile, dtype=jnp.float32) + 0.5
+    ys = origin[1] + jnp.arange(tile, dtype=jnp.float32) + 0.5
+    dx = xs[None, None, :] - mu[:, 0, None, None]  # (N, 1, T)
+    dy = ys[None, :, None] - mu[:, 1, None, None]  # (N, T, 1)
+    ca = conic[:, 0, None, None]
+    cb = conic[:, 1, None, None]
+    cc = conic[:, 2, None, None]
+    e = 0.5 * (ca * dx * dx + cc * dy * dy) + cb * dx * dy
+    alpha = opacity[:, None, None] * jnp.exp(-e)
+    return jnp.minimum(alpha, 0.999)
+
+
+def blend_tile_ref(mu, conic, opacity, color, origin, t_min=1e-4, tile=16):
+    """Front-to-back alpha blending of depth-sorted splats over one tile.
+
+    Args:
+      mu/conic/opacity: (N, .) splat features, already depth-sorted.
+      color: (N, 3) view-evaluated RGB.
+      origin: (2,) tile pixel origin.
+
+    Returns (tile, tile, 3) color and (tile, tile) final transmittance.
+    """
+    alphas = alpha_map_ref(mu, conic, opacity, origin, tile)  # (N, T, T)
+    # Alpha below 1/255 contributes nothing (paper's skip threshold).
+    alphas = jnp.where(alphas >= ALPHA_MIN, alphas, 0.0)
+
+    # Transmittance before splat i: T_i = prod_{j<i} (1 - alpha_j), with the
+    # 3DGS stop rule: once T < t_min the pixel stops accumulating.
+    one_minus = 1.0 - alphas
+    t_after = jnp.cumprod(one_minus, axis=0)  # (N, T, T): T after splat i
+    t_before = jnp.concatenate(
+        [jnp.ones_like(alphas[:1]), t_after[:-1]], axis=0
+    )
+    active = t_before >= t_min
+    w = jnp.where(active, alphas * t_before, 0.0)  # (N, T, T)
+    rgb = jnp.einsum("nij,nc->ijc", w, color)
+    # Early termination freezes T at its first value below t_min (the pixel
+    # stops blending). Since t_after is non-increasing, that first value is
+    # the largest of those below the threshold.
+    crossed = t_after < t_min
+    frozen = jnp.where(crossed, t_after, -jnp.inf).max(axis=0)
+    t_final = jnp.where(crossed.any(axis=0), frozen, t_after[-1])
+    return rgb, t_final
+
+
+def project_ref(pos_cam, fx, fy, cx, cy, cov3_cam, dilation=0.3):
+    """EWA projection of camera-space Gaussians to 2D splats.
+
+    Args:
+      pos_cam: (N, 3) Gaussian centers in camera space (z > 0 assumed;
+               frustum culling happens upstream in the coordinator).
+      cov3_cam: (N, 3, 3) 3D covariance already rotated into camera space.
+
+    Returns dict with mean (N,2), cov (N,3) [a,b,c], conic (N,3), depth (N,),
+    radius (N,).
+    """
+    x, y, z = pos_cam[:, 0], pos_cam[:, 1], pos_cam[:, 2]
+    inv_z = 1.0 / z
+    mean = jnp.stack([fx * x * inv_z + cx, fy * y * inv_z + cy], axis=-1)
+
+    # Jacobian rows: [fx/z, 0, -fx*x/z^2], [0, fy/z, -fy*y/z^2].
+    j00 = fx * inv_z
+    j02 = -fx * x * inv_z * inv_z
+    j11 = fy * inv_z
+    j12 = -fy * y * inv_z * inv_z
+
+    c = cov3_cam
+    # Sigma2D = J Sigma J^T for the 2x3 Jacobian (rows [j00,0,j02],[0,j11,j12]).
+    a = (
+        j00 * j00 * c[:, 0, 0]
+        + 2.0 * j00 * j02 * c[:, 0, 2]
+        + j02 * j02 * c[:, 2, 2]
+    ) + dilation
+    b = (
+        j00 * j11 * c[:, 0, 1]
+        + j00 * j12 * c[:, 0, 2]
+        + j02 * j11 * c[:, 2, 1]
+        + j02 * j12 * c[:, 2, 2]
+    )
+    cc = (
+        j11 * j11 * c[:, 1, 1]
+        + 2.0 * j11 * j12 * c[:, 1, 2]
+        + j12 * j12 * c[:, 2, 2]
+    ) + dilation
+
+    det = a * cc - b * b
+    inv_det = 1.0 / det
+    conic = jnp.stack([cc * inv_det, -b * inv_det, a * inv_det], axis=-1)
+
+    mid = 0.5 * (a + cc)
+    lam1 = mid + jnp.sqrt(jnp.maximum(mid * mid - det, 0.0))
+    radius = 3.0 * jnp.sqrt(lam1)
+
+    return {
+        "mean": mean,
+        "cov": jnp.stack([a, b, cc], axis=-1),
+        "conic": conic,
+        "depth": z,
+        "radius": radius,
+    }
+
+
+def quantize_fp16(x):
+    """Round-trip through IEEE half (the FP16 stage of the mixed path)."""
+    return x.astype(jnp.float16).astype(jnp.float32)
+
+
+def quantize_fp8(x):
+    """Round-trip through FP8 E4M3, saturating at the format max (448).
+
+    Hardware convert units saturate; XLA's cast overflows to NaN (E4M3 has
+    no infinity), so clamp first. Matches rust/src/numeric/fp8.rs.
+    """
+    return jnp.clip(x, -448.0, 448.0).astype(jnp.float8_e4m3fn).astype(jnp.float32)
+
+
+def pr_weights_mixed_ref(mu, conic, p_top, p_bot):
+    """Mixed-precision Alg. 1 (paper Sec. IV-C): deltas in FP16, converted
+    to FP8 for the quadratic stage, FP16 accumulation (QAU)."""
+    q16, q8 = quantize_fp16, quantize_fp8
+    dtx = q8(q16(q16(p_top[:, None, 0]) - q16(mu[None, :, 0])))
+    dty = q8(q16(q16(p_top[:, None, 1]) - q16(mu[None, :, 1])))
+    dbx = q8(q16(q16(p_bot[:, None, 0]) - q16(mu[None, :, 0])))
+    dby = q8(q16(q16(p_bot[:, None, 1]) - q16(mu[None, :, 1])))
+    ca = q8(conic[None, :, 0])
+    cb = q8(conic[None, :, 1])
+    cc = q8(conic[None, :, 2])
+    s_tx = q8(q8(0.5 * dtx * dtx) * ca)
+    s_ty = q8(q8(0.5 * dty * dty) * cc)
+    s_bx = q8(q8(0.5 * dbx * dbx) * ca)
+    s_by = q8(q8(0.5 * dby * dby) * cc)
+    t0 = q8(q8(dtx * dty) * cb)
+    t1 = q8(q8(dbx * dty) * cb)
+    t2 = q8(q8(dtx * dby) * cb)
+    t3 = q8(q8(dbx * dby) * cb)
+    e0 = q16(q16(s_tx + s_ty) + t0)
+    e1 = q16(q16(s_bx + s_ty) + t1)
+    e2 = q16(q16(s_tx + s_by) + t2)
+    e3 = q16(q16(s_bx + s_by) + t3)
+    return jnp.stack([e0, e1, e2, e3], axis=-1)

@@ -1,0 +1,61 @@
+"""Layer-2 JAX model: the per-tile rendering pipeline composed from the
+Layer-1 Pallas kernels.
+
+Entry points (each AOT-lowered by aot.py to one HLO artifact):
+
+* ``project_entry``    - preprocessing-core datapath for a batch of Gaussians.
+* ``pr_weight_entry``  - raw Alg. 1 weights (CTU datapath, fp32 reference).
+* ``cat_masks_entry``  - Eq. 2 mini-tile pass decisions for a batch of PRs.
+* ``render_tile_entry``- CAT-masked tile render: CAT masks gate which splats
+  the blend loop sees, reproducing CTU -> FIFO -> VRU functionally.
+
+Shapes are fixed at lowering time (PJRT executables are monomorphic); the
+Rust coordinator pads batches to these shapes. Padding convention: splats
+with opacity 0 never pass CAT and never blend, so zero-padded tails are
+exact no-ops.
+"""
+
+import jax.numpy as jnp
+
+from .kernels.blend import blend_tile
+from .kernels.pr_weight import cat_masks, pr_weights
+from .kernels.project import project
+
+# Artifact shapes (see aot.py). N = Gaussian batch, M = PR batch.
+# M = 16: the four dense PRs of each of the tile's four sub-tiles, so the
+# artifact's CAT gate covers the full 16x16 tile (cat::leader::dense_layout).
+N_GAUSS = 256
+N_PR = 16
+TILE = 16
+
+
+def project_entry(pos_cam, cov6_cam, cam_params):
+    """(N,3), (N,6), (4,) -> mean (N,2), conic (N,3), depth (N,), radius (N,)."""
+    return project(pos_cam, cov6_cam, cam_params)
+
+
+def pr_weight_entry(mu, conic, p_top, p_bot):
+    """(N,2), (N,3), (M,2), (M,2) -> (M,N,4) Alg.1 weights."""
+    return (pr_weights(mu, conic, p_top, p_bot, mixed=False),)
+
+
+def cat_masks_entry(mu, conic, opacity, p_top, p_bot):
+    """(N,2), (N,3), (N,), (M,2), (M,2) -> (M,N,4) {0,1} pass masks."""
+    return (cat_masks(mu, conic, opacity, p_top, p_bot),)
+
+
+def render_tile_entry(mu, conic, opacity, color, origin, p_top, p_bot):
+    """CAT-gated tile render (the full L1+L2 composition).
+
+    The CAT decision for a splat gates its opacity before blending: a splat
+    whose PR corners all fail Eq. 2 in every mini-tile is skipped exactly
+    like the hardware drops it from the FIFOs. Gating by opacity keeps the
+    blend kernel oblivious to CAT, as the VRUs are.
+
+    Returns rgb (16,16,3), transmittance (16,16), skip mask (N,).
+    """
+    masks = cat_masks(mu, conic, opacity, p_top, p_bot)  # (M, N, 4)
+    passes = jnp.max(masks, axis=(0, 2))  # (N,) 1 if any leader pixel passes
+    gated_opacity = opacity * passes
+    rgb, trans = blend_tile(mu, conic, gated_opacity, color, origin)
+    return rgb, trans, passes

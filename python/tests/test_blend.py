@@ -1,0 +1,97 @@
+"""Pallas tile-blend kernel vs pure-jnp oracle."""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from compile.kernels.blend import blend_tile
+from compile.kernels import ref
+
+
+def make_splats(rng, n, origin=(0.0, 0.0), spread=24.0):
+    mu = (
+        np.array(origin)[None, :]
+        + rng.uniform(-spread * 0.25, spread, size=(n, 2))
+    ).astype(np.float32)
+    l11 = rng.uniform(0.05, 0.8, size=n).astype(np.float32)
+    l21 = rng.uniform(-0.3, 0.3, size=n).astype(np.float32)
+    l22 = rng.uniform(0.05, 0.8, size=n).astype(np.float32)
+    conic = np.stack([l11 * l11, l11 * l21, l21 * l21 + l22 * l22], axis=-1).astype(
+        np.float32
+    )
+    opacity = rng.uniform(0.0, 1.0, size=n).astype(np.float32)
+    color = rng.uniform(0.0, 1.5, size=(n, 3)).astype(np.float32)
+    return mu, conic, opacity, color
+
+
+def run_both(mu, conic, opacity, color, origin):
+    got_rgb, got_t = blend_tile(
+        jnp.array(mu), jnp.array(conic), jnp.array(opacity), jnp.array(color),
+        jnp.array(origin, dtype=jnp.float32),
+    )
+    want_rgb, want_t = ref.blend_tile_ref(
+        jnp.array(mu), jnp.array(conic), jnp.array(opacity), jnp.array(color),
+        jnp.array(origin, dtype=jnp.float32),
+    )
+    return (np.asarray(got_rgb), np.asarray(got_t)), (np.asarray(want_rgb), np.asarray(want_t))
+
+
+def test_matches_ref_basic():
+    rng = np.random.default_rng(0)
+    mu, conic, opacity, color = make_splats(rng, 32)
+    (g_rgb, g_t), (w_rgb, w_t) = run_both(mu, conic, opacity, color, (0.0, 0.0))
+    np.testing.assert_allclose(g_rgb, w_rgb, rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(g_t, w_t, rtol=1e-5, atol=1e-6)
+
+
+def test_empty_opacity_is_background():
+    rng = np.random.default_rng(1)
+    mu, conic, _, color = make_splats(rng, 8)
+    opacity = np.zeros(8, np.float32)
+    (g_rgb, g_t), _ = run_both(mu, conic, opacity, color, (0.0, 0.0))
+    assert np.allclose(g_rgb, 0.0)
+    assert np.allclose(g_t, 1.0)
+
+
+def test_opaque_front_occludes():
+    # One fully opaque splat centered on the tile, then a bright one behind:
+    # the back splat's color must be ~absent at the center pixel.
+    mu = np.array([[8.0, 8.0], [8.0, 8.0]], np.float32)
+    conic = np.array([[0.02, 0.0, 0.02], [0.02, 0.0, 0.02]], np.float32)
+    opacity = np.array([1.0, 1.0], np.float32)
+    color = np.array([[1.0, 0.0, 0.0], [0.0, 1.0, 0.0]], np.float32)
+    (g_rgb, _), (w_rgb, _) = run_both(mu, conic, opacity, color, (0.0, 0.0))
+    center = g_rgb[8, 8]
+    assert center[0] > 0.99
+    assert center[1] < 0.01
+    np.testing.assert_allclose(g_rgb, w_rgb, rtol=1e-5, atol=1e-5)
+
+
+def test_transmittance_monotone_decreasing_with_more_splats():
+    rng = np.random.default_rng(2)
+    mu, conic, opacity, color = make_splats(rng, 64, spread=12.0)
+    (_, t_all), _ = run_both(mu, conic, opacity, color, (0.0, 0.0))
+    (_, t_half), _ = run_both(mu[:32], conic[:32], opacity[:32], color[:32], (0.0, 0.0))
+    assert (t_all <= t_half + 1e-6).all()
+
+
+def test_origin_shift_equivariance():
+    # Shifting both origin and splats by the same offset gives identical tiles.
+    rng = np.random.default_rng(3)
+    mu, conic, opacity, color = make_splats(rng, 16)
+    (a_rgb, a_t), _ = run_both(mu, conic, opacity, color, (0.0, 0.0))
+    shift = np.array([128.0, 64.0], np.float32)
+    (b_rgb, b_t), _ = run_both(mu + shift, conic, opacity, color, tuple(shift))
+    np.testing.assert_allclose(a_rgb, b_rgb, rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(a_t, b_t, rtol=1e-4, atol=1e-5)
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), n=st.sampled_from([1, 7, 33, 128]))
+def test_hypothesis_sweep(seed, n):
+    rng = np.random.default_rng(seed)
+    mu, conic, opacity, color = make_splats(rng, n)
+    (g_rgb, g_t), (w_rgb, w_t) = run_both(mu, conic, opacity, color, (0.0, 0.0))
+    np.testing.assert_allclose(g_rgb, w_rgb, rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(g_t, w_t, rtol=1e-4, atol=1e-5)

@@ -1,0 +1,121 @@
+"""Pallas PR-weight kernel vs pure-jnp oracle (the core L1 signal)."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from compile.kernels.pr_weight import BLOCK_M, BLOCK_N, cat_masks, pr_weights
+from compile.kernels import ref
+
+
+def make_case(rng, m, n, coord_scale=1000.0):
+    mu = rng.uniform(0.0, coord_scale, size=(n, 2)).astype(np.float32)
+    # Positive-definite conic via Cholesky factors.
+    l11 = rng.uniform(0.05, 1.0, size=n).astype(np.float32)
+    l21 = rng.uniform(-0.5, 0.5, size=n).astype(np.float32)
+    l22 = rng.uniform(0.05, 1.0, size=n).astype(np.float32)
+    conic = np.stack([l11 * l11, l11 * l21, l21 * l21 + l22 * l22], axis=-1)
+    p_top = rng.uniform(0.0, coord_scale, size=(m, 2)).astype(np.float32)
+    p_bot = p_top + rng.uniform(1.0, 8.0, size=(m, 2)).astype(np.float32)
+    opacity = rng.uniform(0.01, 1.0, size=n).astype(np.float32)
+    return mu, conic.astype(np.float32), opacity, p_top, p_bot
+
+
+def test_matches_ref_fp32():
+    rng = np.random.default_rng(0)
+    mu, conic, _, pt, pb = make_case(rng, BLOCK_M, BLOCK_N)
+    got = pr_weights(jnp.array(mu), jnp.array(conic), jnp.array(pt), jnp.array(pb))
+    want = ref.pr_weights_ref(jnp.array(mu), jnp.array(conic), jnp.array(pt), jnp.array(pb))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-4)
+
+
+def test_matches_ref_multi_block():
+    rng = np.random.default_rng(1)
+    mu, conic, _, pt, pb = make_case(rng, BLOCK_M * 3, BLOCK_N * 2)
+    got = pr_weights(jnp.array(mu), jnp.array(conic), jnp.array(pt), jnp.array(pb))
+    want = ref.pr_weights_ref(jnp.array(mu), jnp.array(conic), jnp.array(pt), jnp.array(pb))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-5, atol=1e-4)
+
+
+def test_mixed_matches_mixed_ref():
+    rng = np.random.default_rng(2)
+    mu, conic, _, pt, pb = make_case(rng, BLOCK_M, BLOCK_N)
+    got = pr_weights(jnp.array(mu), jnp.array(conic), jnp.array(pt), jnp.array(pb), mixed=True)
+    want = ref.pr_weights_mixed_ref(
+        jnp.array(mu), jnp.array(conic), jnp.array(pt), jnp.array(pb)
+    )
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-6, atol=1e-6)
+
+
+def test_mixed_close_to_fp32_near_gaussian():
+    # Mixed precision must track fp32 for deltas in the decision-relevant
+    # range, i.e. pixels near the Gaussian (the paper's quality argument).
+    # Far pixels saturate the FP8 delta at 448 and deviate — by design:
+    # those weights are enormous either way and the Eq.-2 decision (E vs
+    # ln(255·o) ≤ 5.54) is unaffected.
+    rng = np.random.default_rng(3)
+    mu, conic, _, _, _ = make_case(rng, BLOCK_M, BLOCK_N)
+    base = mu[0]
+    mu = (base[None, :] + rng.uniform(-30, 30, size=(BLOCK_N, 2))).astype(np.float32)
+    pt = (base[None, :] + rng.uniform(-10, 10, size=(BLOCK_M, 2))).astype(np.float32)
+    pb = pt + 3.0
+    full = np.asarray(pr_weights(jnp.array(mu), jnp.array(conic), jnp.array(pt), jnp.array(pb)))
+    mix = np.asarray(
+        pr_weights(jnp.array(mu), jnp.array(conic), jnp.array(pt), jnp.array(pb), mixed=True)
+    )
+    rel = np.abs(mix - full) / (1.0 + np.abs(full))
+    # E4M3 carries ~6% per-operand rounding; squared terms land ~10-12%.
+    assert np.mean(rel) < 0.15, f"mean rel err {np.mean(rel)}"
+
+
+def test_cat_masks_match_ref():
+    rng = np.random.default_rng(4)
+    mu, conic, opacity, pt, pb = make_case(rng, BLOCK_M, BLOCK_N)
+    got = cat_masks(
+        jnp.array(mu), jnp.array(conic), jnp.array(opacity), jnp.array(pt), jnp.array(pb)
+    )
+    want = ref.cat_masks_ref(
+        jnp.array(mu), jnp.array(conic), jnp.array(opacity), jnp.array(pt), jnp.array(pb)
+    )
+    # Decisions may differ only where |lhs - E| is at float noise level.
+    got_b = np.asarray(got) > 0.5
+    want_b = np.asarray(want)
+    disagree = got_b != want_b
+    assert disagree.mean() < 1e-3, f"disagreement {disagree.mean()}"
+
+
+def test_weight_zero_at_mean():
+    rng = np.random.default_rng(5)
+    mu, conic, _, _, _ = make_case(rng, BLOCK_M, BLOCK_N)
+    pt = np.tile(mu[0], (BLOCK_M, 1)).astype(np.float32)
+    pb = pt + 4.0
+    got = np.asarray(
+        pr_weights(jnp.array(mu), jnp.array(conic), jnp.array(pt), jnp.array(pb))
+    )
+    assert abs(got[0, 0, 0]) < 1e-4
+
+
+def test_rejects_unpadded_shapes():
+    rng = np.random.default_rng(6)
+    mu, conic, _, pt, pb = make_case(rng, BLOCK_M, BLOCK_N + 1)
+    with pytest.raises(AssertionError):
+        pr_weights(jnp.array(mu), jnp.array(conic), jnp.array(pt), jnp.array(pb))
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    mblocks=st.integers(1, 2),
+    nblocks=st.integers(1, 2),
+    scale=st.sampled_from([16.0, 256.0, 2048.0]),
+)
+def test_hypothesis_sweep_matches_ref(seed, mblocks, nblocks, scale):
+    rng = np.random.default_rng(seed)
+    mu, conic, _, pt, pb = make_case(rng, BLOCK_M * mblocks, BLOCK_N * nblocks, scale)
+    got = pr_weights(jnp.array(mu), jnp.array(conic), jnp.array(pt), jnp.array(pb))
+    want = ref.pr_weights_ref(jnp.array(mu), jnp.array(conic), jnp.array(pt), jnp.array(pb))
+    np.testing.assert_allclose(
+        np.asarray(got), np.asarray(want), rtol=1e-4, atol=1e-3 * max(1.0, scale / 256.0)
+    )

@@ -1,0 +1,102 @@
+"""Pallas projection kernel vs pure-jnp oracle."""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from compile.kernels.project import BLOCK, project
+from compile.kernels import ref
+
+
+def make_case(rng, n):
+    pos = np.stack(
+        [
+            rng.uniform(-4.0, 4.0, size=n),
+            rng.uniform(-4.0, 4.0, size=n),
+            rng.uniform(2.0, 30.0, size=n),  # z > 0 (camera space)
+        ],
+        axis=-1,
+    ).astype(np.float32)
+    # PSD covariance via random factors L L^T (scaled small, like splats).
+    l = rng.normal(0.0, 0.15, size=(n, 3, 3)).astype(np.float32)
+    cov33 = np.einsum("nij,nkj->nik", l, l) + 1e-4 * np.eye(3, dtype=np.float32)
+    cov6 = np.stack(
+        [
+            cov33[:, 0, 0], cov33[:, 0, 1], cov33[:, 0, 2],
+            cov33[:, 1, 1], cov33[:, 1, 2], cov33[:, 2, 2],
+        ],
+        axis=-1,
+    ).astype(np.float32)
+    cam = np.array([300.0, 300.0, 128.0, 128.0], np.float32)
+    return pos, cov6, cov33, cam
+
+
+def run_kernel(pos, cov6, cam):
+    mean, conic, depth, radius = project(
+        jnp.array(pos), jnp.array(cov6), jnp.array(cam)
+    )
+    return map(np.asarray, (mean, conic, depth, radius))
+
+
+def test_matches_ref():
+    rng = np.random.default_rng(0)
+    pos, cov6, cov33, cam = make_case(rng, BLOCK)
+    mean, conic, depth, radius = run_kernel(pos, cov6, cam)
+    want = ref.project_ref(
+        jnp.array(pos), cam[0], cam[1], cam[2], cam[3], jnp.array(cov33)
+    )
+    np.testing.assert_allclose(mean, np.asarray(want["mean"]), rtol=1e-5, atol=1e-3)
+    np.testing.assert_allclose(conic, np.asarray(want["conic"]), rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(depth, np.asarray(want["depth"]), rtol=1e-6)
+    np.testing.assert_allclose(radius, np.asarray(want["radius"]), rtol=1e-4, atol=1e-4)
+
+
+def test_center_maps_to_principal_point():
+    rng = np.random.default_rng(1)
+    pos, cov6, _, cam = make_case(rng, BLOCK)
+    pos[0] = [0.0, 0.0, 10.0]
+    mean, _, depth, _ = run_kernel(pos, cov6, cam)
+    np.testing.assert_allclose(mean[0], [128.0, 128.0], atol=1e-3)
+    assert abs(depth[0] - 10.0) < 1e-5
+
+
+def test_conic_is_inverse_of_cov():
+    rng = np.random.default_rng(2)
+    pos, cov6, cov33, cam = make_case(rng, BLOCK)
+    _, conic, _, _ = run_kernel(pos, cov6, cam)
+    want = ref.project_ref(
+        jnp.array(pos), cam[0], cam[1], cam[2], cam[3], jnp.array(cov33)
+    )
+    cov = np.asarray(want["cov"])
+    # conic * cov must reconstruct identity: a*ia + b*ib = 1, etc.
+    a, b, c = cov[:, 0], cov[:, 1], cov[:, 2]
+    ia, ib, ic = conic[:, 0], conic[:, 1], conic[:, 2]
+    np.testing.assert_allclose(a * ia + b * ib, 1.0, atol=1e-3)
+    np.testing.assert_allclose(b * ia + c * ib, 0.0, atol=1e-3)
+    np.testing.assert_allclose(b * ib + c * ic, 1.0, atol=1e-3)
+
+
+def test_farther_is_smaller():
+    rng = np.random.default_rng(3)
+    pos, cov6, _, cam = make_case(rng, BLOCK)
+    pos[0] = [0.0, 0.0, 5.0]
+    pos[1] = [0.0, 0.0, 20.0]
+    cov6[1] = cov6[0]
+    _, _, _, radius = run_kernel(pos, cov6, cam)
+    assert radius[0] > radius[1]
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), blocks=st.integers(1, 3))
+def test_hypothesis_sweep(seed, blocks):
+    rng = np.random.default_rng(seed)
+    pos, cov6, cov33, cam = make_case(rng, BLOCK * blocks)
+    mean, conic, depth, radius = run_kernel(pos, cov6, cam)
+    want = ref.project_ref(
+        jnp.array(pos), cam[0], cam[1], cam[2], cam[3], jnp.array(cov33)
+    )
+    np.testing.assert_allclose(mean, np.asarray(want["mean"]), rtol=1e-4, atol=1e-2)
+    np.testing.assert_allclose(radius, np.asarray(want["radius"]), rtol=1e-3, atol=1e-3)
+    np.testing.assert_allclose(depth, np.asarray(want["depth"]), rtol=1e-6)
+    np.testing.assert_allclose(conic, np.asarray(want["conic"]), rtol=1e-3, atol=1e-3)

@@ -1,0 +1,52 @@
+//! Shared helpers for the figure/table benches.
+//!
+//! Every bench regenerates one paper artifact. Scenes default to a small
+//! scale so `cargo bench` finishes on CI hardware; set
+//! `FLICKER_SCENE_SCALE=1.0` for paper-scale runs (same code path).
+
+use flicker::camera::{orbit_path, Camera, Intrinsics};
+use flicker::config::default_scene_scale;
+use flicker::scene::gaussian::Scene;
+use flicker::scene::synthetic::{generate_scaled, preset, presets};
+
+/// Evaluation resolution for benches (paper uses dataset-native; the shape
+/// of every comparison is resolution-independent because all configs see the
+/// same workload).
+pub fn bench_resolution() -> u32 {
+    std::env::var("FLICKER_BENCH_RES")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(192)
+}
+
+/// Build a bench scene at the CI scale.
+pub fn bench_scene(name: &str) -> Scene {
+    generate_scaled(&preset(name), default_scene_scale())
+}
+
+/// All eight evaluation scenes.
+pub fn all_scene_names() -> Vec<&'static str> {
+    presets().iter().map(|p| p.name).collect()
+}
+
+/// The standard evaluation camera for a scene.
+pub fn bench_camera(res: u32) -> Camera {
+    orbit_path(
+        Intrinsics::from_fov(res, res, 1.2),
+        flicker::numeric::linalg::v3(0.0, 0.5, 0.0),
+        12.0,
+        3.0,
+        8,
+    )[1]
+}
+
+/// A short orbit for multi-view quality numbers.
+pub fn bench_orbit(res: u32, frames: usize) -> Vec<Camera> {
+    orbit_path(
+        Intrinsics::from_fov(res, res, 1.2),
+        flicker::numeric::linalg::v3(0.0, 0.5, 0.0),
+        12.0,
+        3.0,
+        frames,
+    )
+}

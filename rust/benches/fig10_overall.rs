@@ -1,0 +1,90 @@
+//! Fig. 10 — overall system speedup and energy efficiency across all eight
+//! scenes, normalized to the edge GPU (Jetson XNX), with pruning and
+//! clustering enabled (the paper's full-system configuration).
+//!
+//! Paper shape: FLICKER averages ~1.1× GSCore's speedup (14.4× vs XNX)
+//! and wins energy efficiency on every dataset (up to 2.6× GSCore,
+//! 26.7× vs XNX).
+
+mod common;
+
+use flicker::coordinator::report::Report;
+use flicker::scene::pruning::{prune, PruneConfig};
+use flicker::sim::gpu::{estimate, GpuParams};
+use flicker::sim::top::simulate_frame;
+use flicker::sim::workload::extract;
+use flicker::sim::{HwConfig, SubtileTest};
+use flicker::util::stats::geomean;
+
+fn main() {
+    let res = common::bench_resolution();
+    let cam = common::bench_camera(res);
+    let views = common::bench_orbit(res, 3);
+
+    let mut report = Report::new("fig10", "Fig.10: overall speedup & energy vs XNX");
+    let mut sp_flicker = Vec::new();
+    let mut sp_gscore = Vec::new();
+    let mut ee_flicker = Vec::new();
+    let mut ee_gscore = Vec::new();
+
+    for name in common::all_scene_names() {
+        let mut scene = common::bench_scene(name);
+        // Full-system configuration: pruned + clustered models.
+        prune(&mut scene, &views, &PruneConfig::default());
+
+        // GPU baseline (vanilla tile lists).
+        let wl_gpu = extract(
+            &scene,
+            &cam,
+            &HwConfig {
+                subtile_test: SubtileTest::None,
+                ..HwConfig::simplified32()
+            },
+        );
+        let xnx = estimate(&wl_gpu, &GpuParams::xavier_nx());
+
+        let fl = simulate_frame(&scene, &cam, &HwConfig::flicker32());
+        let gs = simulate_frame(&scene, &cam, &HwConfig::gscore64());
+
+        let xnx_ms = xnx.frame_ms;
+        let xnx_mj = xnx.energy_mj_per_frame;
+        let s_f = xnx_ms / fl.frame_ms;
+        let s_g = xnx_ms / gs.frame_ms;
+        let e_f = xnx_mj / (fl.energy.total_uj() / 1e3);
+        let e_g = xnx_mj / (gs.energy.total_uj() / 1e3);
+        sp_flicker.push(s_f);
+        sp_gscore.push(s_g);
+        ee_flicker.push(e_f);
+        ee_gscore.push(e_g);
+        report.row(
+            name,
+            &[
+                ("sp_flicker", s_f),
+                ("sp_gscore", s_g),
+                ("ee_flicker", e_f),
+                ("ee_gscore", e_g),
+            ],
+        );
+    }
+    report.row(
+        "GEOMEAN",
+        &[
+            ("sp_flicker", geomean(&sp_flicker)),
+            ("sp_gscore", geomean(&sp_gscore)),
+            ("ee_flicker", geomean(&ee_flicker)),
+            ("ee_gscore", geomean(&ee_gscore)),
+        ],
+    );
+    report.emit();
+
+    // Shape assertions: both accelerators far above the edge GPU; FLICKER
+    // at least on par with GSCore on speedup and ahead on energy.
+    let (sf, sg) = (geomean(&sp_flicker), geomean(&sp_gscore));
+    let (ef, eg) = (geomean(&ee_flicker), geomean(&ee_gscore));
+    assert!(sf > 3.0, "flicker vs xnx speedup {sf}");
+    assert!(sf > 0.8 * sg, "flicker {sf} vs gscore {sg}");
+    assert!(ef > eg, "flicker energy eff {ef} vs gscore {eg}");
+    println!(
+        "fig10 OK: speedup vs XNX — flicker {sf:.1}x, gscore {sg:.1}x; energy — flicker {ef:.1}x, gscore {eg:.1}x"
+    );
+}

@@ -1,0 +1,115 @@
+//! Fig. 4 — per-pixel processed Gaussians across intersection strategies,
+//! and duplicated Gaussians across tile sizes.
+//!
+//! Paper shape: Mini-Tile CAT processes ~10% of AABB-16×16's per-pixel
+//! Gaussians (lowest of all strategies); shrinking tiles 16→4 multiplies
+//! duplicates ~4×; Stage-1 sub-tile AABB cuts CTU load ~30%.
+
+mod common;
+
+use flicker::cat::{CatConfig, CatEngine, LeaderMode, ObbSubtileMask, Precision};
+use flicker::coordinator::report::Report;
+use flicker::render::raster::{render, render_masked, RenderOptions};
+use flicker::render::tile::{build_tile_lists, duplicate_count, Strategy, TileGrid};
+use flicker::render::project::project_scene;
+use flicker::sim::workload::extract;
+use flicker::sim::{HwConfig, SubtileTest};
+
+fn main() {
+    let res = common::bench_resolution();
+    let cam = common::bench_camera(res);
+    let scene = common::bench_scene("garden");
+    let opts = RenderOptions::default();
+
+    // Per-pixel processed Gaussians by strategy.
+    let mut report = Report::new("fig4", "Fig.4: per-pixel processed Gaussians by strategy");
+    let aabb16 = render(&scene, &cam, &opts);
+    let pp_aabb = aabb16.stats.per_pixel_tested();
+    report.row("aabb-16x16", &[("pp", pp_aabb), ("rel", 1.0)]);
+
+    let obb16 = render(
+        &scene,
+        &cam,
+        &RenderOptions {
+            strategy: Strategy::Obb,
+            ..opts
+        },
+    );
+    report.row(
+        "obb-16x16",
+        &[
+            ("pp", obb16.stats.per_pixel_tested()),
+            ("rel", obb16.stats.per_pixel_tested() / pp_aabb),
+        ],
+    );
+
+    let mut obb_sub = ObbSubtileMask::new();
+    let obb8 = render_masked(&scene, &cam, &opts, &mut obb_sub, None);
+    report.row(
+        "obb-8x8-subtile",
+        &[
+            ("pp", obb8.stats.per_pixel_tested()),
+            ("rel", obb8.stats.per_pixel_tested() / pp_aabb),
+        ],
+    );
+
+    let mut cat = CatEngine::new(CatConfig {
+        mode: LeaderMode::UniformDense,
+        precision: Precision::Fp32,
+        stage1: true,
+    });
+    let minitile = render_masked(&scene, &cam, &opts, &mut cat, None);
+    let pp_cat = minitile.stats.per_pixel_tested();
+    report.row("minitile-cat", &[("pp", pp_cat), ("rel", pp_cat / pp_aabb)]);
+    report.emit();
+
+    // Duplicates vs tile size.
+    let splats = project_scene(&scene, &cam);
+    let mut dup = Report::new("fig4b", "Fig.4: duplicated Gaussians vs tile size");
+    let mut d16 = 0usize;
+    for ts in [16u32, 8, 4] {
+        let grid = TileGrid::new(res, res, ts);
+        let d = duplicate_count(&build_tile_lists(&splats, &grid, Strategy::Aabb));
+        if ts == 16 {
+            d16 = d;
+        }
+        dup.row(
+            &format!("tile-{ts}x{ts}"),
+            &[("duplicates", d as f64), ("rel", d as f64 / d16 as f64)],
+        );
+    }
+    dup.emit();
+
+    // Stage-1 CTU-load reduction.
+    let wl_none = extract(
+        &scene,
+        &cam,
+        &HwConfig {
+            subtile_test: SubtileTest::None,
+            ..HwConfig::flicker32()
+        },
+    );
+    let wl_aabb = extract(&scene, &cam, &HwConfig::flicker32());
+    let cut = 1.0 - wl_aabb.stage2_pairs as f64 / wl_none.stage2_pairs as f64;
+    let mut s1 = Report::new("fig4c", "Fig.4: Stage-1 sub-tile AABB CTU-load cut");
+    s1.row("no-stage1", &[("ctu_pairs", wl_none.stage2_pairs as f64)]);
+    s1.row("with-stage1", &[("ctu_pairs", wl_aabb.stage2_pairs as f64), ("cut", cut)]);
+    s1.emit();
+
+    // Shape assertions.
+    assert!(
+        pp_cat < 0.35 * pp_aabb,
+        "CAT should cut per-pixel Gaussians sharply: {pp_cat} vs {pp_aabb}"
+    );
+    assert!(pp_cat < obb8.stats.per_pixel_tested(), "CAT below OBB-subtile");
+    let grid4 = TileGrid::new(res, res, 4);
+    let d4 = duplicate_count(&build_tile_lists(&splats, &grid4, Strategy::Aabb));
+    assert!(d4 as f64 > 2.0 * d16 as f64, "4px tiles must inflate duplicates");
+    assert!(cut > 0.10, "stage-1 cut {cut}");
+    println!(
+        "fig4 OK: CAT {:.1}% of AABB per-pixel work; 4px dup {:.1}x; stage1 cut {:.0}%",
+        100.0 * pp_cat / pp_aabb,
+        d4 as f64 / d16 as f64,
+        cut * 100.0
+    );
+}

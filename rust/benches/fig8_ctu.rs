@@ -1,0 +1,70 @@
+//! Fig. 8 — rendering-stage speedup and energy efficiency from the CTU,
+//! evaluated on the scene *Garden* only (baseline model, no pruning or
+//! clustering), normalized to the simplified FLICKER (no CTU, 32 VRUs).
+//!
+//! Paper shape: GSCore (OBB + 64 VRUs) ≈ 4× the simplified version;
+//! FLICKER+CTU matches GSCore with half the VRUs; Uniform-Sparse adds
+//! ~1.1×; FLICKER's energy efficiency reaches ~1.6× GSCore's.
+
+mod common;
+
+use flicker::coordinator::report::Report;
+use flicker::sim::top::simulate_frame;
+use flicker::sim::HwConfig;
+
+fn main() {
+    let res = common::bench_resolution();
+    let cam = common::bench_camera(res);
+    let scene = common::bench_scene("garden");
+
+    let configs = [
+        HwConfig::simplified32(),
+        HwConfig::gscore64(),
+        HwConfig::flicker32(),
+        HwConfig::flicker32_sparse(),
+    ];
+    let mut reports = Vec::new();
+    for hw in &configs {
+        // Fig. 8 isolates the rendering stage on the unpruned baseline
+        // model without clustering.
+        let hw = HwConfig {
+            clustering: false,
+            ..hw.clone()
+        };
+        reports.push(simulate_frame(&scene, &cam, &hw));
+    }
+
+    let base_cycles = reports[0].render_cycles as f64;
+    let base_energy = reports[0].energy.total_uj();
+    let mut report = Report::new("fig8", "Fig.8: rendering-stage speedup & energy (Garden)");
+    for r in &reports {
+        report.row(
+            &r.config,
+            &[
+                ("speedup", base_cycles / r.render_cycles as f64),
+                ("energy_eff", base_energy / r.energy.total_uj()),
+                ("cycles", r.render_cycles as f64),
+                ("energy_uj", r.energy.total_uj()),
+                ("stall_rate", r.pipe.stall_rate()),
+            ],
+        );
+    }
+    report.emit();
+
+    let sp = |i: usize| base_cycles / reports[i].render_cycles as f64;
+    let ee = |i: usize| base_energy / reports[i].energy.total_uj();
+    // Shape assertions: gscore ≫ simplified; flicker32 within 2× of
+    // gscore64 despite half the VRUs; sparse ≥ adaptive throughput;
+    // flicker more energy-efficient than gscore.
+    assert!(sp(1) > 2.0, "gscore speedup {}", sp(1));
+    assert!(sp(2) > 0.5 * sp(1), "flicker {} vs gscore {}", sp(2), sp(1));
+    assert!(sp(3) >= sp(2) * 0.98, "sparse {} vs adaptive {}", sp(3), sp(2));
+    assert!(ee(2) > ee(1), "flicker energy {} vs gscore {}", ee(2), ee(1));
+    println!(
+        "fig8 OK: gscore {:.2}x, flicker32 {:.2}x, sparse {:.2}x; energy eff flicker/gscore {:.2}",
+        sp(1),
+        sp(2),
+        sp(3),
+        ee(2) / ee(1)
+    );
+}

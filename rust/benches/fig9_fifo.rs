@@ -1,0 +1,70 @@
+//! Fig. 9 — sensitivity of rendering-stage speedup and CTU stall rate to
+//! the feature-FIFO depth (1..128), on *Garden*.
+//!
+//! Paper shape: speedup saturates around 1.36× at depth 128; depth 16
+//! already reaches ~96% of the maximum with 12.5% of the memory; stall
+//! rate falls monotonically.
+
+mod common;
+
+use flicker::coordinator::report::Report;
+use flicker::sim::top::simulate_workload;
+use flicker::sim::workload::extract;
+use flicker::sim::HwConfig;
+
+fn main() {
+    let res = common::bench_resolution();
+    let cam = common::bench_camera(res);
+    let scene = common::bench_scene("garden");
+    let base = HwConfig {
+        clustering: false,
+        ..HwConfig::flicker32()
+    };
+    // One functional pass, replayed against each depth.
+    let wl = extract(&scene, &cam, &base);
+
+    let depths = [1usize, 2, 4, 8, 16, 32, 64, 128];
+    let mut cycles = Vec::new();
+    let mut stalls = Vec::new();
+    for &d in &depths {
+        let hw = HwConfig {
+            fifo_depth: d,
+            ..base.clone()
+        };
+        let r = simulate_workload(&scene, &cam, &hw, wl.clone());
+        cycles.push(r.render_cycles as f64);
+        stalls.push(r.pipe.stall_rate());
+    }
+
+    let depth1 = cycles[0];
+    let mut report = Report::new("fig9", "Fig.9: FIFO depth vs speedup & CTU stall rate (Garden)");
+    for (i, &d) in depths.iter().enumerate() {
+        report.row(
+            &format!("depth={d}"),
+            &[
+                ("speedup", depth1 / cycles[i]),
+                ("stall_rate", stalls[i]),
+                ("cycles", cycles[i]),
+            ],
+        );
+    }
+    report.emit();
+
+    // Shape assertions.
+    let max_speedup = depth1 / cycles[cycles.len() - 1];
+    let sp16 = depth1 / cycles[4];
+    assert!(max_speedup >= 1.0);
+    assert!(
+        sp16 >= 0.90 * max_speedup,
+        "depth16 {sp16} should reach most of max {max_speedup}"
+    );
+    for w in stalls.windows(2) {
+        assert!(w[1] <= w[0] + 1e-9, "stall rate must fall with depth: {stalls:?}");
+    }
+    println!(
+        "fig9 OK: max speedup {max_speedup:.3}, depth-16 at {:.1}% of max, stall d1 {:.1}% → d128 {:.1}%",
+        100.0 * sp16 / max_speedup,
+        stalls[0] * 100.0,
+        stalls[stalls.len() - 1] * 100.0
+    );
+}

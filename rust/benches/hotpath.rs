@@ -1,0 +1,78 @@
+//! Hot-path microbenchmarks (the §Perf instrument): wall-clock timings of
+//! the L3 pipeline stages so the optimization pass has a stable baseline.
+//! Not a paper figure — this is the profiling harness.
+
+mod common;
+
+use flicker::cat::{CatConfig, CatEngine, LeaderMode, Precision};
+use flicker::render::project::project_scene;
+use flicker::render::raster::{render, render_masked, RenderOptions};
+use flicker::render::sort::sort_by_depth;
+use flicker::render::tile::{build_tile_lists, Strategy, TileGrid};
+use flicker::sim::top::simulate_workload;
+use flicker::sim::workload::extract;
+use flicker::sim::HwConfig;
+use flicker::util::bench::{black_box, Bencher};
+
+fn main() {
+    let res = common::bench_resolution();
+    let cam = common::bench_camera(res);
+    let scene = common::bench_scene("garden");
+    let mut b = Bencher::new("hotpath");
+
+    b.bench("project_scene", || {
+        black_box(project_scene(&scene, &cam));
+    });
+
+    let splats = project_scene(&scene, &cam);
+    let grid = TileGrid::new(res, res, 16);
+    b.bench("tile_binning_aabb", || {
+        black_box(build_tile_lists(&splats, &grid, Strategy::Aabb));
+    });
+    b.bench("tile_binning_obb", || {
+        black_box(build_tile_lists(&splats, &grid, Strategy::Obb));
+    });
+
+    let mut lists = build_tile_lists(&splats, &grid, Strategy::Aabb);
+    b.bench("depth_sort", || {
+        let mut ls = lists.clone();
+        for l in &mut ls {
+            sort_by_depth(l, &splats);
+        }
+        black_box(ls);
+    });
+    for l in &mut lists {
+        sort_by_depth(l, &splats);
+    }
+
+    b.bench("raster_vanilla", || {
+        black_box(render(&scene, &cam, &RenderOptions::default()));
+    });
+
+    b.bench("raster_cat", || {
+        let mut engine = CatEngine::new(CatConfig {
+            mode: LeaderMode::SmoothFocused,
+            precision: Precision::Mixed,
+            stage1: true,
+        });
+        black_box(render_masked(
+            &scene,
+            &cam,
+            &RenderOptions::default(),
+            &mut engine,
+            None,
+        ));
+    });
+
+    let hw = HwConfig::flicker32();
+    b.bench("workload_extract", || {
+        black_box(extract(&scene, &cam, &hw));
+    });
+
+    let wl = extract(&scene, &cam, &hw);
+    b.bench("cycle_sim_replay", || {
+        black_box(simulate_workload(&scene, &cam, &hw, wl.clone()));
+    });
+
+    b.finish("hot-path stage timings");
+}

@@ -1,0 +1,81 @@
+//! Table I — rendering quality (PSNR/SSIM) across the three dataset groups:
+//! Baseline (vanilla render), Pruned, and Ours (pruned + adaptive Mini-Tile
+//! CAT at mixed precision).
+//!
+//! Paper shape: pruning costs ~0.5 dB on average; CAT adds only ~0.1 dB on
+//! top of pruning; SSIM essentially unchanged.
+
+mod common;
+
+use flicker::cat::{CatConfig, CatEngine, LeaderMode, Precision};
+use flicker::coordinator::report::Report;
+use flicker::render::metrics::{psnr, ssim};
+use flicker::render::raster::{render, render_masked, RenderOptions};
+use flicker::scene::pruning::{prune, PruneConfig};
+
+fn main() {
+    let res = common::bench_resolution();
+    let cam = common::bench_camera(res);
+    let views = common::bench_orbit(res, 3);
+    let opts = RenderOptions::default();
+
+    let mut report = Report::new("table1", "Table I: PSNR/SSIM across approaches");
+    let mut deltas_prune = Vec::new();
+    let mut deltas_ours = Vec::new();
+
+    for name in common::all_scene_names() {
+        let scene = common::bench_scene(name);
+        // "Baseline" reference image: vanilla render of the unpruned model.
+        let gt = render(&scene, &cam, &opts).image;
+
+        // Pruned model.
+        let mut pruned = scene.clone();
+        prune(&mut pruned, &views, &PruneConfig::default());
+        let img_pruned = render(&pruned, &cam, &opts).image;
+
+        // Ours: pruned + adaptive CAT at mixed precision.
+        let mut engine = CatEngine::new(CatConfig {
+            mode: LeaderMode::SmoothFocused,
+            precision: Precision::Mixed,
+            stage1: true,
+        });
+        let img_ours = render_masked(&pruned, &cam, &opts, &mut engine, None).image;
+
+        let p_prune = psnr(&gt, &img_pruned);
+        let p_ours = psnr(&gt, &img_ours);
+        deltas_prune.push(p_prune);
+        deltas_ours.push(p_ours);
+        report.row(
+            name,
+            &[
+                ("psnr_prune", p_prune),
+                ("psnr_ours", p_ours),
+                ("ssim_prune", ssim(&gt, &img_pruned)),
+                ("ssim_ours", ssim(&gt, &img_ours)),
+            ],
+        );
+    }
+    let avg = |v: &[f64]| v.iter().sum::<f64>() / v.len() as f64;
+    report.row(
+        "AVERAGE",
+        &[
+            ("psnr_prune", avg(&deltas_prune)),
+            ("psnr_ours", avg(&deltas_ours)),
+        ],
+    );
+    report.emit();
+
+    // Shape: CAT costs little on top of pruning (paper: −0.11 dB).
+    let delta = avg(&deltas_prune) - avg(&deltas_ours);
+    assert!(
+        delta < 1.5,
+        "CAT should cost ≲1 dB over pruning, got {delta}"
+    );
+    assert!(avg(&deltas_ours) > 22.0, "ours avg PSNR {}", avg(&deltas_ours));
+    println!(
+        "table1 OK: prune avg {:.2} dB, ours avg {:.2} dB (Δ {:.2} dB)",
+        avg(&deltas_prune),
+        avg(&deltas_ours),
+        delta
+    );
+}

@@ -1,0 +1,44 @@
+//! Table II — (a) hardware configuration and area breakdown of FLICKER;
+//! (b) area comparison against the 64-VRU simplified baseline.
+//!
+//! Paper shape: CTU < 10% of the rendering-core area; FLICKER-32+CTU saves
+//! ~14% total area vs scaling the simplified design to 64 VRUs.
+
+mod common;
+
+use flicker::coordinator::report::Report;
+use flicker::sim::area::{area, AreaParams};
+use flicker::sim::HwConfig;
+
+fn main() {
+    let p = AreaParams::default();
+    let flicker = HwConfig::flicker32();
+    let r = area(&flicker, &p);
+
+    let mut ta = Report::new("table2a", "Table II(a): FLICKER area breakdown");
+    for (component, mm2, share) in r.rows() {
+        ta.row(component, &[("mm2", mm2), ("share_pct", share * 100.0)]);
+    }
+    ta.row("TOTAL", &[("mm2", r.total_mm2()), ("share_pct", 100.0)]);
+    ta.emit();
+
+    let base = area(&HwConfig::simplified64(), &p);
+    let mut tb = Report::new("table2b", "Table II(b): area vs 64-VRU baseline");
+    tb.row("flicker32+ctu", &[("mm2", r.total_mm2())]);
+    tb.row("simplified64", &[("mm2", base.total_mm2())]);
+    let saving = 1.0 - r.total_mm2() / base.total_mm2();
+    tb.row("saving", &[("fraction", saving)]);
+    tb.emit();
+
+    let ctu_ratio = r.ctu_mm2 / r.rendering_core_mm2();
+    assert!(ctu_ratio < 0.10, "CTU/core {ctu_ratio}");
+    assert!(
+        (0.05..0.30).contains(&saving),
+        "total saving {saving} out of band"
+    );
+    println!(
+        "table2 OK: CTU {:.1}% of rendering core; {:.1}% total saving vs 64-VRU baseline",
+        ctu_ratio * 100.0,
+        saving * 100.0
+    );
+}

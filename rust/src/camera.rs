@@ -1,0 +1,203 @@
+//! Pinhole camera model, view frustum, and evaluation trajectories.
+
+use crate::numeric::linalg::{v2, v3, Mat3, Vec2, Vec3};
+
+/// Pinhole intrinsics in pixels.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Intrinsics {
+    pub fx: f32,
+    pub fy: f32,
+    pub cx: f32,
+    pub cy: f32,
+    pub width: u32,
+    pub height: u32,
+}
+
+impl Intrinsics {
+    /// Square image with the given horizontal FoV (radians).
+    pub fn from_fov(width: u32, height: u32, fov_x: f32) -> Intrinsics {
+        let fx = width as f32 / (2.0 * (fov_x * 0.5).tan());
+        Intrinsics {
+            fx,
+            fy: fx,
+            cx: width as f32 * 0.5,
+            cy: height as f32 * 0.5,
+            width,
+            height,
+        }
+    }
+}
+
+/// Camera pose: world→camera rotation and camera position in world space.
+#[derive(Clone, Copy, Debug)]
+pub struct Camera {
+    pub intr: Intrinsics,
+    /// Rotation world→camera (camera looks down +z in camera space).
+    pub r_wc: Mat3,
+    pub position: Vec3,
+    pub near: f32,
+    pub far: f32,
+}
+
+impl Camera {
+    /// Look-at constructor: camera at `eye` looking toward `target`, with
+    /// approximate up vector `up`.
+    pub fn look_at(intr: Intrinsics, eye: Vec3, target: Vec3, up: Vec3) -> Camera {
+        let fwd = (target - eye).normalized(); // camera +z
+        let right = fwd.cross(up).normalized(); // camera +x
+        let down = fwd.cross(right); // camera +y (y grows downward in image)
+        // Rows of world→camera rotation are camera basis vectors in world.
+        let r_wc = Mat3([
+            right.x, right.y, right.z, //
+            down.x, down.y, down.z, //
+            fwd.x, fwd.y, fwd.z,
+        ]);
+        Camera {
+            intr,
+            r_wc,
+            position: eye,
+            near: 0.05,
+            far: 1000.0,
+        }
+    }
+
+    /// World → camera-space point.
+    #[inline]
+    pub fn to_camera(&self, p: Vec3) -> Vec3 {
+        self.r_wc.mul_vec(p - self.position)
+    }
+
+    /// Camera-space point → pixel coordinates.
+    #[inline]
+    pub fn project_cam(&self, t: Vec3) -> Vec2 {
+        v2(
+            self.intr.fx * t.x / t.z + self.intr.cx,
+            self.intr.fy * t.y / t.z + self.intr.cy,
+        )
+    }
+
+    /// Unit direction from camera to world point.
+    #[inline]
+    pub fn view_dir(&self, p: Vec3) -> Vec3 {
+        (p - self.position).normalized()
+    }
+
+    /// Conservative sphere-vs-frustum test (used for frustum culling,
+    /// both per-Gaussian and per-cluster "big Gaussian").
+    pub fn sphere_in_frustum(&self, center: Vec3, radius: f32) -> bool {
+        let t = self.to_camera(center);
+        if t.z + radius < self.near || t.z - radius > self.far {
+            return false;
+        }
+        // Tangent-plane test against the four image-border planes,
+        // written via the half-FoV tangents.
+        let tan_x = self.intr.width as f32 * 0.5 / self.intr.fx;
+        let tan_y = self.intr.height as f32 * 0.5 / self.intr.fy;
+        // Margin: 3DGS uses a 1.3× guard band so splats straddling the edge
+        // still rasterize.
+        let guard = 1.3;
+        let zx = t.z.max(self.near);
+        let lim_x = guard * tan_x * zx + radius / (1.0 + tan_x * tan_x).sqrt() * 2.0;
+        let lim_y = guard * tan_y * zx + radius / (1.0 + tan_y * tan_y).sqrt() * 2.0;
+        t.x.abs() <= lim_x && t.y.abs() <= lim_y
+    }
+}
+
+/// Circular orbit around a center point — the evaluation trajectory used by
+/// the experiment harness (stand-in for the datasets' held-out test views).
+pub fn orbit_path(
+    intr: Intrinsics,
+    center: Vec3,
+    radius: f32,
+    height: f32,
+    frames: usize,
+) -> Vec<Camera> {
+    (0..frames)
+        .map(|i| {
+            let theta = i as f32 / frames as f32 * std::f32::consts::TAU;
+            let eye = v3(
+                center.x + radius * theta.cos(),
+                center.y + height,
+                center.z + radius * theta.sin(),
+            );
+            Camera::look_at(intr, eye, center, v3(0.0, 1.0, 0.0))
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cam() -> Camera {
+        let intr = Intrinsics::from_fov(640, 480, 1.2);
+        Camera::look_at(intr, v3(0.0, 0.0, -5.0), v3(0.0, 0.0, 0.0), v3(0.0, 1.0, 0.0))
+    }
+
+    #[test]
+    fn center_projects_to_principal_point() {
+        let c = cam();
+        let t = c.to_camera(v3(0.0, 0.0, 0.0));
+        assert!((t.z - 5.0).abs() < 1e-5);
+        let px = c.project_cam(t);
+        assert!((px.x - 320.0).abs() < 1e-3);
+        assert!((px.y - 240.0).abs() < 1e-3);
+    }
+
+    #[test]
+    fn rotation_is_orthonormal() {
+        let c = cam();
+        let rrt = c.r_wc.mul(&c.r_wc.transpose());
+        for i in 0..3 {
+            for j in 0..3 {
+                let e = if i == j { 1.0 } else { 0.0 };
+                assert!((rrt.at(i, j) - e).abs() < 1e-5);
+            }
+        }
+    }
+
+    #[test]
+    fn image_y_grows_downward_for_lower_points() {
+        let c = cam();
+        // A point below the camera axis (negative world y) should appear at
+        // larger pixel y than the center.
+        let t = c.to_camera(v3(0.0, -1.0, 0.0));
+        let px = c.project_cam(t);
+        assert!(px.y > 240.0);
+    }
+
+    #[test]
+    fn frustum_accepts_visible_rejects_behind() {
+        let c = cam();
+        assert!(c.sphere_in_frustum(v3(0.0, 0.0, 0.0), 0.5));
+        assert!(!c.sphere_in_frustum(v3(0.0, 0.0, -20.0), 0.5)); // behind camera
+    }
+
+    #[test]
+    fn frustum_rejects_far_off_axis() {
+        let c = cam();
+        assert!(!c.sphere_in_frustum(v3(100.0, 0.0, 0.0), 0.5));
+        // ...but accepts it when the radius is big enough to overlap.
+        assert!(c.sphere_in_frustum(v3(7.0, 0.0, 0.0), 7.0));
+    }
+
+    #[test]
+    fn orbit_all_frames_see_center() {
+        let intr = Intrinsics::from_fov(320, 240, 1.2);
+        let path = orbit_path(intr, v3(0.0, 0.0, 0.0), 8.0, 2.0, 12);
+        assert_eq!(path.len(), 12);
+        for c in &path {
+            assert!(c.sphere_in_frustum(v3(0.0, 0.0, 0.0), 1.0));
+            let px = c.project_cam(c.to_camera(v3(0.0, 0.0, 0.0)));
+            assert!((px.x - 160.0).abs() < 1.0);
+            assert!((px.y - 120.0).abs() < 1.0);
+        }
+    }
+
+    #[test]
+    fn view_dir_unit() {
+        let c = cam();
+        let d = c.view_dir(v3(3.0, 4.0, 0.0));
+        assert!((d.norm() - 1.0).abs() < 1e-5);
+    }
+}

@@ -1,0 +1,478 @@
+//! Mini-Tile CAT engine: the two-stage hierarchical test (paper Sec. IV-B)
+//! producing per-mini-tile skip masks, with op accounting.
+//!
+//! Stage 1 — sub-tile AABB (preprocessing core): cheap rejection at 8×8
+//! granularity; rejected sub-tiles never reach the CTU.
+//! Stage 2 — Mini-Tile CAT (CTU): leader pixels via pixel-rectangles at the
+//! configured sampling mode and precision; a mini-tile is marked intersected
+//! if **any** of its leader pixels receives α ≥ 1/255 (Eq. 2).
+//!
+//! The engine implements `render::raster::MaskProvider` so the golden
+//! rasterizer consumes its masks directly — quality experiments (Table I,
+//! Fig. 3, Fig. 7c) render through exactly this path.
+
+use super::leader::{dense_layout, prs_per_subtile, sparse_layout, LeaderMode, PrLayout, Sampling};
+use super::mixed::{shared_threshold_quant, PreQuant, Precision};
+use super::pr::{pr_op_cost, OpCount};
+use crate::numeric::linalg::v2;
+use crate::render::project::Splat;
+use crate::render::raster::MaskProvider;
+use crate::render::tile::{intersects_aabb, intersects_exact, intersects_obb, Rect};
+
+/// CAT configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct CatConfig {
+    pub mode: LeaderMode,
+    pub precision: Precision,
+    /// Enable hierarchical Stage 1 (sub-tile AABB pre-filter).
+    pub stage1: bool,
+}
+
+impl Default for CatConfig {
+    fn default() -> Self {
+        CatConfig {
+            mode: LeaderMode::SmoothFocused,
+            precision: Precision::Mixed,
+            stage1: true,
+        }
+    }
+}
+
+/// Counters over a frame (drives Fig. 4 and feeds the CTU cycle model).
+#[derive(Clone, Debug, Default)]
+pub struct CatStats {
+    /// (Gaussian, sub-tile) pairs offered to Stage 1.
+    pub stage1_tested: u64,
+    /// Pairs rejected by the sub-tile AABB.
+    pub stage1_rejected: u64,
+    /// Pairs reaching the CTU (Stage 2).
+    pub ctu_tested: u64,
+    /// PRs evaluated.
+    pub prs: u64,
+    /// Dense-sampled pairs (vs sparse) — the adaptive-mode split.
+    pub dense_pairs: u64,
+    pub sparse_pairs: u64,
+    /// Mini-tile bits set / examined.
+    pub minitiles_passed: u64,
+    pub minitiles_tested: u64,
+    /// Arithmetic ops spent on CAT itself (the "overhead" side).
+    pub ops: OpCount,
+}
+
+impl CatStats {
+    /// Fraction of CTU work removed by Stage 1.
+    pub fn stage1_reject_rate(&self) -> f64 {
+        self.stage1_rejected as f64 / self.stage1_tested.max(1) as f64
+    }
+
+    /// Fraction of examined mini-tiles that pass.
+    pub fn minitile_pass_rate(&self) -> f64 {
+        self.minitiles_passed as f64 / self.minitiles_tested.max(1) as f64
+    }
+
+    /// Leader pixels saved by the adaptive mode vs Uniform-Dense.
+    pub fn leader_saving_vs_dense(&self) -> f64 {
+        let total = self.dense_pairs + self.sparse_pairs;
+        if total == 0 {
+            return 0.0;
+        }
+        let used = self.dense_pairs * 16 + self.sparse_pairs * 8;
+        1.0 - used as f64 / (total * 16) as f64
+    }
+}
+
+/// The Mini-Tile CAT engine.
+pub struct CatEngine {
+    pub cfg: CatConfig,
+    pub stats: CatStats,
+    /// One-entry pre-quantization cache: (splat id, operands, ln(255·o)).
+    /// Sub-tiles of the same Gaussian arrive consecutively, so this hits
+    /// on 3 of every 4 calls (§Perf).
+    cache: Option<(u32, PreQuant, f32)>,
+}
+
+impl CatEngine {
+    pub fn new(cfg: CatConfig) -> CatEngine {
+        CatEngine {
+            cfg,
+            stats: CatStats::default(),
+            cache: None,
+        }
+    }
+
+    fn prepared(&mut self, splat: &Splat) -> (PreQuant, f32) {
+        if let Some((id, pq, lhs)) = self.cache {
+            if id == splat.id {
+                return (pq, lhs);
+            }
+        }
+        let pq = PreQuant::new(splat.mean, splat.conic, self.cfg.precision);
+        let lhs = shared_threshold_quant(splat.opacity, self.cfg.precision);
+        self.cache = Some((splat.id, pq, lhs));
+        (pq, lhs)
+    }
+
+    /// Run Stage 2 on one 8×8 sub-tile; returns a 4-bit mini-tile mask
+    /// (bit m = mini-tile m row-major inside the sub-tile).
+    pub fn subtile_mask(&mut self, sub: &Rect, splat: &Splat) -> u8 {
+        let sampling = self.cfg.mode.sampling(splat);
+        match sampling {
+            Sampling::Dense => self.stats.dense_pairs += 1,
+            Sampling::Sparse => self.stats.sparse_pairs += 1,
+        }
+        let (pq, lhs) = self.prepared(splat);
+        // ln + mul for the shared term, amortized per Gaussian·sub-tile.
+        self.stats.ops.mul += 1;
+        let mut mask = 0u8;
+        let run_pr = |engine: &mut CatEngine, pr: &PrLayout, mask: &mut u8| {
+            engine.stats.prs += 1;
+            engine.stats.ops.accumulate(pr_op_cost());
+            let w = pq.weights(
+                v2(sub.x0 + pr.x_top, sub.y0 + pr.y_top),
+                v2(sub.x0 + pr.x_bot, sub.y0 + pr.y_bot),
+            );
+            for k in 0..4 {
+                if lhs > w.e[k] {
+                    *mask |= 1 << pr.corner_minitile[k];
+                }
+            }
+        };
+        match sampling {
+            Sampling::Dense => {
+                for pr in dense_layout().iter() {
+                    run_pr(self, pr, &mut mask);
+                }
+            }
+            Sampling::Sparse => {
+                for pr in sparse_layout().iter() {
+                    run_pr(self, pr, &mut mask);
+                }
+            }
+        }
+        self.stats.minitiles_tested += 4;
+        self.stats.minitiles_passed += mask.count_ones() as u64;
+        mask
+    }
+
+    /// Expected PR count for a splat under the current mode (used by the
+    /// cycle model without re-running the mask).
+    pub fn prs_for(&self, splat: &Splat) -> usize {
+        prs_per_subtile(self.cfg.mode.sampling(splat))
+    }
+}
+
+impl MaskProvider for CatEngine {
+    /// Full-tile mask: 16 bits, one per 4×4 mini-tile of a 16×16 tile,
+    /// row-major as consumed by the rasterizer.
+    fn mask(&mut self, tile: &Rect, splat: &Splat) -> u32 {
+        let mut out = 0u32;
+        for sy in 0..2u32 {
+            for sx in 0..2u32 {
+                let sub = Rect {
+                    x0: tile.x0 + (sx * 8) as f32,
+                    y0: tile.y0 + (sy * 8) as f32,
+                    x1: tile.x0 + (sx * 8 + 8) as f32,
+                    y1: tile.y0 + (sy * 8 + 8) as f32,
+                };
+                self.stats.stage1_tested += 1;
+                if self.cfg.stage1 && !intersects_aabb(splat, &sub) {
+                    self.stats.stage1_rejected += 1;
+                    continue;
+                }
+                self.stats.ctu_tested += 1;
+                let m4 = self.subtile_mask(&sub, splat);
+                // Map sub-tile-local mini-tiles to tile bits: tile mini-tile
+                // grid is 4×4; sub-tile (sx,sy) holds cols 2sx..2sx+1, rows
+                // 2sy..2sy+1.
+                for m in 0..4u32 {
+                    if m4 & (1 << m) != 0 {
+                        let col = sx * 2 + (m % 2);
+                        let row = sy * 2 + (m / 2);
+                        out |= 1 << (row * 4 + col);
+                    }
+                }
+            }
+        }
+        out
+    }
+}
+
+/// GSCore-style mask provider: OBB test per 8×8 sub-tile; every mini-tile of
+/// a passing sub-tile processes the splat (no contribution awareness).
+pub struct ObbSubtileMask {
+    /// (gaussian, sub-tile) pairs passing — GSCore's duplicate metric.
+    pub subtiles_passed: u64,
+    pub subtiles_tested: u64,
+}
+
+impl ObbSubtileMask {
+    pub fn new() -> Self {
+        ObbSubtileMask {
+            subtiles_passed: 0,
+            subtiles_tested: 0,
+        }
+    }
+}
+
+impl Default for ObbSubtileMask {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl MaskProvider for ObbSubtileMask {
+    fn mask(&mut self, tile: &Rect, splat: &Splat) -> u32 {
+        let mut out = 0u32;
+        for sy in 0..2u32 {
+            for sx in 0..2u32 {
+                let sub = Rect {
+                    x0: tile.x0 + (sx * 8) as f32,
+                    y0: tile.y0 + (sy * 8) as f32,
+                    x1: tile.x0 + (sx * 8 + 8) as f32,
+                    y1: tile.y0 + (sy * 8 + 8) as f32,
+                };
+                self.subtiles_tested += 1;
+                if intersects_obb(splat, &sub) {
+                    self.subtiles_passed += 1;
+                    for m in 0..4u32 {
+                        let col = sx * 2 + (m % 2);
+                        let row = sy * 2 + (m / 2);
+                        out |= 1 << (row * 4 + col);
+                    }
+                }
+            }
+        }
+        out
+    }
+}
+
+/// Oracle provider: the exact continuous test per mini-tile (upper bound on
+/// achievable skipping; CAT approximates this with finitely many leaders).
+pub struct ExactMinitileMask;
+
+impl MaskProvider for ExactMinitileMask {
+    fn mask(&mut self, tile: &Rect, splat: &Splat) -> u32 {
+        let mut out = 0u32;
+        for row in 0..4u32 {
+            for col in 0..4u32 {
+                let mt = Rect {
+                    x0: tile.x0 + (col * 4) as f32,
+                    y0: tile.y0 + (row * 4) as f32,
+                    x1: tile.x0 + (col * 4 + 4) as f32,
+                    y1: tile.y0 + (row * 4 + 4) as f32,
+                };
+                if intersects_exact(splat, &mt, crate::render::project::ALPHA_MIN) {
+                    out |= 1 << (row * 4 + col);
+                }
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::camera::{Camera, Intrinsics};
+    use crate::numeric::linalg::{v3, Quat};
+    use crate::render::project::project_one;
+    use crate::scene::gaussian::Scene;
+
+    fn splat(scale: crate::numeric::linalg::Vec3, mean_px: (f32, f32), opacity: f32) -> Splat {
+        let cam = Camera::look_at(
+            Intrinsics::from_fov(256, 256, 1.2),
+            v3(0.0, 0.0, -6.0),
+            v3(0.0, 0.0, 0.0),
+            v3(0.0, 1.0, 0.0),
+        );
+        let mut sc = Scene::with_capacity(1, "t");
+        sc.push(v3(0.0, 0.0, 0.0), Quat::IDENTITY, scale, opacity, [1.0; 3], [[0.0; 3]; 3]);
+        let mut s = project_one(&sc, 0, &cam).unwrap();
+        s.mean = v2(mean_px.0, mean_px.1);
+        s
+    }
+
+    fn tile_at(x: f32, y: f32) -> Rect {
+        Rect { x0: x, y0: y, x1: x + 16.0, y1: y + 16.0 }
+    }
+
+    #[test]
+    fn big_gaussian_lights_every_minitile() {
+        let s = splat(v3(2.0, 2.0, 2.0), (104.0, 104.0), 0.95);
+        let mut e = CatEngine::new(CatConfig::default());
+        let m = e.mask(&tile_at(96.0, 96.0), &s);
+        assert_eq!(m, 0xFFFF, "mask {m:#06x}");
+    }
+
+    #[test]
+    fn distant_gaussian_lights_nothing() {
+        let s = splat(v3(0.2, 0.2, 0.2), (400.0, 400.0), 0.95);
+        let mut e = CatEngine::new(CatConfig::default());
+        // Stage 1 rejects all sub-tiles.
+        let m = e.mask(&tile_at(0.0, 0.0), &s);
+        assert_eq!(m, 0);
+        assert_eq!(e.stats.stage1_rejected, 4);
+        assert_eq!(e.stats.ctu_tested, 0);
+    }
+
+    #[test]
+    fn small_gaussian_lights_only_its_corner() {
+        // Tiny splat near tile origin: top-left mini-tile(s) only.
+        let s = splat(v3(0.08, 0.08, 0.08), (98.0, 98.0), 0.95);
+        let mut e = CatEngine::new(CatConfig::default());
+        let m = e.mask(&tile_at(96.0, 96.0), &s);
+        assert!(m & 1 != 0, "top-left minitile must pass: {m:#06x}");
+        // Bottom-right quadrant untouched.
+        for row in 2..4 {
+            for col in 2..4 {
+                assert_eq!(m & (1 << (row * 4 + col)), 0, "bit {row},{col}");
+            }
+        }
+    }
+
+    #[test]
+    fn dense_mask_superset_of_exact_center_hits() {
+        // If the exact oracle says a mini-tile's *leader corner pixels*
+        // contribute, dense CAT must catch it; globally CAT(dense) must hit
+        // every mini-tile whose 4 corners include a contributing pixel.
+        let s = splat(v3(0.6, 0.15, 0.15), (128.0, 120.0), 0.9);
+        let cfg = CatConfig {
+            mode: LeaderMode::UniformDense,
+            precision: Precision::Fp32,
+            stage1: false,
+        };
+        let mut e = CatEngine::new(cfg);
+        let tile = tile_at(112.0, 112.0);
+        let m = e.mask(&tile, &s);
+        for row in 0..4u32 {
+            for col in 0..4u32 {
+                // Dense leader pixels of this minitile:
+                let corners = [
+                    (0.5f32, 0.5f32),
+                    (3.5, 0.5),
+                    (0.5, 3.5),
+                    (3.5, 3.5),
+                ];
+                let any = corners.iter().any(|&(dx, dy)| {
+                    s.alpha_at(
+                        tile.x0 + (col * 4) as f32 + dx,
+                        tile.y0 + (row * 4) as f32 + dy,
+                    ) >= 1.0 / 255.0
+                });
+                if any {
+                    assert!(
+                        m & (1 << (row * 4 + col)) != 0,
+                        "minitile {row},{col} corner contributes but mask missed"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn sparse_uses_fewer_prs() {
+        let s = splat(v3(1.0, 1.0, 1.0), (104.0, 104.0), 0.9);
+        let mut dense = CatEngine::new(CatConfig {
+            mode: LeaderMode::UniformDense,
+            precision: Precision::Fp32,
+            stage1: false,
+        });
+        let mut sparse = CatEngine::new(CatConfig {
+            mode: LeaderMode::UniformSparse,
+            precision: Precision::Fp32,
+            stage1: false,
+        });
+        dense.mask(&tile_at(96.0, 96.0), &s);
+        sparse.mask(&tile_at(96.0, 96.0), &s);
+        assert_eq!(dense.stats.prs, 16); // 4 sub-tiles × 4 PRs
+        assert_eq!(sparse.stats.prs, 8); // 4 sub-tiles × 2 PRs
+        assert!(sparse.stats.ops.total() < dense.stats.ops.total());
+    }
+
+    #[test]
+    fn adaptive_splits_by_shape() {
+        let smooth = splat(v3(0.5, 0.5, 0.5), (104.0, 104.0), 0.9);
+        let spiky = splat(v3(1.5, 0.1, 0.1), (104.0, 104.0), 0.9);
+        assert!(!smooth.is_spiky(3.0));
+        assert!(spiky.is_spiky(3.0));
+        let mut e = CatEngine::new(CatConfig {
+            mode: LeaderMode::SmoothFocused,
+            precision: Precision::Fp32,
+            stage1: false,
+        });
+        e.mask(&tile_at(96.0, 96.0), &smooth);
+        e.mask(&tile_at(96.0, 96.0), &spiky);
+        assert_eq!(e.stats.dense_pairs, 4); // smooth → dense, 4 sub-tiles
+        assert_eq!(e.stats.sparse_pairs, 4); // spiky → sparse
+        assert!(e.stats.leader_saving_vs_dense() > 0.2);
+    }
+
+    #[test]
+    fn obb_subtile_mask_quantized_to_subtiles() {
+        let s = splat(v3(0.3, 0.3, 0.3), (98.0, 98.0), 0.9);
+        let mut p = ObbSubtileMask::new();
+        let m = p.mask(&tile_at(96.0, 96.0), &s);
+        // Whole sub-tiles: the top-left 2×2 mini-tile block all set or none.
+        let tl = (m & 1 != 0, m & 2 != 0, m & (1 << 4) != 0, m & (1 << 5) != 0);
+        assert!(tl.0 == tl.1 && tl.1 == tl.2 && tl.2 == tl.3, "subtile not atomic: {m:#06x}");
+        assert!(p.subtiles_tested == 4);
+    }
+
+    #[test]
+    fn cat_mask_tighter_than_obb() {
+        // For a spiky diagonal splat the CAT mask has fewer bits than the
+        // OBB sub-tile mask.
+        let cam = Camera::look_at(
+            Intrinsics::from_fov(256, 256, 1.2),
+            v3(0.0, 0.0, -6.0),
+            v3(0.0, 0.0, 0.0),
+            v3(0.0, 1.0, 0.0),
+        );
+        let mut sc = Scene::with_capacity(1, "t");
+        sc.push(
+            v3(0.0, 0.0, 0.0),
+            Quat::from_axis_angle(v3(0.0, 0.0, 1.0), 0.8),
+            v3(1.2, 0.05, 0.05),
+            0.9,
+            [1.0; 3],
+            [[0.0; 3]; 3],
+        );
+        let s = project_one(&sc, 0, &cam).unwrap();
+        let tile = tile_at(120.0, 120.0);
+        let mut cat = CatEngine::new(CatConfig::default());
+        let mut obb = ObbSubtileMask::new();
+        let mc = cat.mask(&tile, &s).count_ones();
+        let mo = obb.mask(&tile, &s).count_ones();
+        assert!(mc <= mo, "cat {mc} bits vs obb {mo}");
+    }
+
+    #[test]
+    fn exact_oracle_subset_of_dense_superset_check() {
+        // CAT can miss interior-only contributions but must never *add*
+        // mini-tiles the oracle rejects (leaders are inside the mini-tile).
+        let s = splat(v3(0.4, 0.12, 0.12), (130.0, 125.0), 0.9);
+        let tile = tile_at(112.0, 112.0);
+        let mut cat = CatEngine::new(CatConfig {
+            mode: LeaderMode::UniformDense,
+            precision: Precision::Fp32,
+            stage1: false,
+        });
+        let mut oracle = ExactMinitileMask;
+        let mc = cat.mask(&tile, &s);
+        let mo = oracle.mask(&tile, &s);
+        assert_eq!(mc & !mo, 0, "cat {mc:#06x} claims minitiles oracle rejects {mo:#06x}");
+    }
+
+    #[test]
+    fn stage1_reduces_ctu_load_without_changing_mask() {
+        // Small enough that its 3σ box misses the far sub-tiles.
+        let s = splat(v3(0.05, 0.05, 0.05), (98.0, 98.0), 0.9);
+        let tile = tile_at(96.0, 96.0);
+        let mut with = CatEngine::new(CatConfig { stage1: true, ..Default::default() });
+        let mut without = CatEngine::new(CatConfig { stage1: false, ..Default::default() });
+        let mw = with.mask(&tile, &s);
+        let mo = without.mask(&tile, &s);
+        assert_eq!(mw, mo, "stage1 must be conservative");
+        assert!(with.stats.ctu_tested < without.stats.ctu_tested);
+    }
+}

@@ -1,0 +1,232 @@
+//! Adaptive leader-pixel schemes (paper Sec. III-A) and the PR layout each
+//! induces inside an 8×8 sub-tile (paper Fig. 3).
+//!
+//! A sub-tile holds 4 mini-tiles of 4×4 pixels. Leader pixels per mini-tile:
+//! * **Dense** — the mini-tile's four corner pixels; they form one PR per
+//!   mini-tile (4 PRs / sub-tile).
+//! * **Sparse** — two diagonal corner pixels. Mini-tiles 0/3 use the main
+//!   diagonal and 1/2 the anti-diagonal, so the sub-tile's 8 sparse leaders
+//!   form exactly **two** PRs across mini-tiles: the outer PR
+//!   {0,7}×{0,7} and the inner PR {3,4}×{3,4}.
+//!
+//! The adaptive modes pick Dense or Sparse *per Gaussian* from its projected
+//! axis ratio (smooth < 3 ≤ spiky).
+
+use crate::render::project::Splat;
+
+/// Uniform or shape-adaptive sampling selection.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum LeaderMode {
+    UniformDense,
+    UniformSparse,
+    /// Smooth Gaussians get Dense sampling, spiky get Sparse (the paper's
+    /// default adaptive mode).
+    SmoothFocused,
+    /// Inverse: spiky get Dense (for scenes whose detail lives in spiky
+    /// Gaussians).
+    SpikyFocused,
+}
+
+/// Sampling density chosen for one Gaussian.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Sampling {
+    Dense,
+    Sparse,
+}
+
+/// Paper threshold: axis ratio ≥ 3 ⇒ spiky.
+pub const SPIKY_AXIS_RATIO: f32 = 3.0;
+
+impl LeaderMode {
+    /// Pick the sampling for a splat.
+    #[inline]
+    pub fn sampling(self, splat: &Splat) -> Sampling {
+        self.sampling_for(splat.is_spiky(SPIKY_AXIS_RATIO))
+    }
+
+    #[inline]
+    pub fn sampling_for(self, spiky: bool) -> Sampling {
+        match self {
+            LeaderMode::UniformDense => Sampling::Dense,
+            LeaderMode::UniformSparse => Sampling::Sparse,
+            LeaderMode::SmoothFocused => {
+                if spiky {
+                    Sampling::Sparse
+                } else {
+                    Sampling::Dense
+                }
+            }
+            LeaderMode::SpikyFocused => {
+                if spiky {
+                    Sampling::Dense
+                } else {
+                    Sampling::Sparse
+                }
+            }
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<LeaderMode> {
+        Some(match s {
+            "dense" | "uniform-dense" => LeaderMode::UniformDense,
+            "sparse" | "uniform-sparse" => LeaderMode::UniformSparse,
+            "adaptive" | "smooth-focused" => LeaderMode::SmoothFocused,
+            "spiky-focused" => LeaderMode::SpikyFocused,
+            _ => return None,
+        })
+    }
+}
+
+/// One PR inside a sub-tile: x/y coordinate pairs (sub-tile local, pixel
+/// centers at +0.5) and, per corner, which mini-tile the corner's decision
+/// feeds (0..4, row-major mini-tile index inside the sub-tile).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct PrLayout {
+    /// (x_top, y_top) and (x_bot, y_bot) in sub-tile pixel coords.
+    pub x_top: f32,
+    pub y_top: f32,
+    pub x_bot: f32,
+    pub y_bot: f32,
+    /// Mini-tile fed by corner k (order E0..E3 as in Alg. 1:
+    /// (xt,yt), (xb,yt), (xt,yb), (xb,yb)).
+    pub corner_minitile: [u8; 4],
+}
+
+/// Dense layout: one PR per mini-tile (4 PRs). Mini-tile m at (mx, my)
+/// covers pixels [4mx, 4mx+3] × [4my, 4my+3]; its corner pixels are the PR.
+pub const fn dense_layout() -> [PrLayout; 4] {
+    let mut prs = [PrLayout {
+        x_top: 0.0,
+        y_top: 0.0,
+        x_bot: 0.0,
+        y_bot: 0.0,
+        corner_minitile: [0; 4],
+    }; 4];
+    let mut m = 0;
+    while m < 4 {
+        let mx = (m % 2) as f32;
+        let my = (m / 2) as f32;
+        prs[m] = PrLayout {
+            x_top: 4.0 * mx + 0.5,
+            y_top: 4.0 * my + 0.5,
+            x_bot: 4.0 * mx + 3.5,
+            y_bot: 4.0 * my + 3.5,
+            corner_minitile: [m as u8; 4],
+        };
+        m += 1;
+    }
+    prs
+}
+
+/// Sparse layout: two PRs spanning the sub-tile.
+/// Outer PR corners (0,0),(7,0),(0,7),(7,7) feed mini-tiles 0,1,2,3;
+/// inner PR corners (3,3),(4,3),(3,4),(4,4) feed mini-tiles 0,1,2,3.
+/// Each mini-tile thus gets its two diagonal leader pixels.
+pub const fn sparse_layout() -> [PrLayout; 2] {
+    [
+        PrLayout {
+            x_top: 0.5,
+            y_top: 0.5,
+            x_bot: 7.5,
+            y_bot: 7.5,
+            corner_minitile: [0, 1, 2, 3],
+        },
+        PrLayout {
+            x_top: 3.5,
+            y_top: 3.5,
+            x_bot: 4.5,
+            y_bot: 4.5,
+            corner_minitile: [0, 1, 2, 3],
+        },
+    ]
+}
+
+/// Leader pixels per Gaussian per sub-tile for a sampling mode.
+pub fn leaders_per_subtile(s: Sampling) -> usize {
+    match s {
+        Sampling::Dense => 16, // 4 PRs × 4 corners
+        Sampling::Sparse => 8, // 2 PRs × 4 corners
+    }
+}
+
+/// PRs per Gaussian per sub-tile.
+pub fn prs_per_subtile(s: Sampling) -> usize {
+    match s {
+        Sampling::Dense => 4,
+        Sampling::Sparse => 2,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dense_prs_cover_each_minitile() {
+        let prs = dense_layout();
+        for (m, pr) in prs.iter().enumerate() {
+            assert_eq!(pr.corner_minitile, [m as u8; 4]);
+            // Corners inside the mini-tile bounds.
+            let mx = (m % 2) as f32 * 4.0;
+            let my = (m / 2) as f32 * 4.0;
+            assert!(pr.x_top >= mx && pr.x_bot < mx + 4.0);
+            assert!(pr.y_top >= my && pr.y_bot < my + 4.0);
+        }
+    }
+
+    #[test]
+    fn sparse_gives_each_minitile_two_diagonal_leaders() {
+        // Collect (minitile, pixel) pairs from the sparse layout.
+        let mut per_mt: [Vec<(f32, f32)>; 4] = Default::default();
+        for pr in sparse_layout() {
+            let corners = [
+                (pr.x_top, pr.y_top),
+                (pr.x_bot, pr.y_top),
+                (pr.x_top, pr.y_bot),
+                (pr.x_bot, pr.y_bot),
+            ];
+            for (k, &(x, y)) in corners.iter().enumerate() {
+                per_mt[pr.corner_minitile[k] as usize].push((x, y));
+            }
+        }
+        for (m, leaders) in per_mt.iter().enumerate() {
+            assert_eq!(leaders.len(), 2, "mini-tile {m}");
+            // Both leaders inside the mini-tile.
+            let mx = (m % 2) as f32 * 4.0;
+            let my = (m / 2) as f32 * 4.0;
+            for &(x, y) in leaders {
+                assert!(x >= mx && x < mx + 4.0, "mt {m} leader x {x}");
+                assert!(y >= my && y < my + 4.0, "mt {m} leader y {y}");
+            }
+            // Diagonal: the two leaders differ in both coordinates.
+            assert!(leaders[0].0 != leaders[1].0);
+            assert!(leaders[0].1 != leaders[1].1);
+        }
+    }
+
+    #[test]
+    fn sparse_halves_leader_count() {
+        assert_eq!(leaders_per_subtile(Sampling::Dense), 16);
+        assert_eq!(leaders_per_subtile(Sampling::Sparse), 8);
+        assert_eq!(prs_per_subtile(Sampling::Dense), 4);
+        assert_eq!(prs_per_subtile(Sampling::Sparse), 2);
+    }
+
+    #[test]
+    fn mode_selection_logic() {
+        assert_eq!(LeaderMode::UniformDense.sampling_for(true), Sampling::Dense);
+        assert_eq!(LeaderMode::UniformSparse.sampling_for(false), Sampling::Sparse);
+        assert_eq!(LeaderMode::SmoothFocused.sampling_for(false), Sampling::Dense);
+        assert_eq!(LeaderMode::SmoothFocused.sampling_for(true), Sampling::Sparse);
+        assert_eq!(LeaderMode::SpikyFocused.sampling_for(true), Sampling::Dense);
+        assert_eq!(LeaderMode::SpikyFocused.sampling_for(false), Sampling::Sparse);
+    }
+
+    #[test]
+    fn mode_parsing() {
+        assert_eq!(LeaderMode::parse("dense"), Some(LeaderMode::UniformDense));
+        assert_eq!(LeaderMode::parse("adaptive"), Some(LeaderMode::SmoothFocused));
+        assert_eq!(LeaderMode::parse("spiky-focused"), Some(LeaderMode::SpikyFocused));
+        assert_eq!(LeaderMode::parse("bogus"), None);
+    }
+}

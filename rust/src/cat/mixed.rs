@@ -1,0 +1,339 @@
+//! Precision schemes for the PR weight datapath (paper Sec. IV-C, Fig. 7).
+//!
+//! * `Fp32` — reference (what the software rasterizer uses).
+//! * `Fp16` — every operand and operation at binary16.
+//! * `Fp8`  — every operand (including absolute pixel/μ coordinates!) at
+//!   E4M3 before the subtraction. Absolute coordinates up to ~10³ quantize
+//!   with steps of tens of pixels, destroying relative position — the
+//!   mechanism behind the paper's "blocky artifacts" finding.
+//! * `Mixed` — the paper's scheme: line 1 of Alg. 1 (the deltas) in FP16,
+//!   results converted to FP8, lines 2–7 on FP8 operands with FP16
+//!   accumulation in the Quadratic Accumulation Unit.
+
+use super::pr::PrWeights;
+use crate::numeric::fp16::quantize_f16;
+use crate::numeric::fp8::{quantize_fp8, Fp8Format};
+use crate::numeric::linalg::{Sym2, Vec2};
+
+/// CTU numeric scheme.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Precision {
+    Fp32,
+    Fp16,
+    Fp8,
+    Mixed,
+}
+
+impl Precision {
+    pub fn parse(s: &str) -> Option<Precision> {
+        Some(match s {
+            "fp32" => Precision::Fp32,
+            "fp16" => Precision::Fp16,
+            "fp8" => Precision::Fp8,
+            "mixed" => Precision::Mixed,
+            _ => return None,
+        })
+    }
+}
+
+const FMT: Fp8Format = Fp8Format::E4M3;
+
+#[inline]
+fn q16(x: f32) -> f32 {
+    quantize_f16(x)
+}
+
+#[inline]
+fn q8(x: f32) -> f32 {
+    quantize_fp8(x, FMT)
+}
+
+/// PR weights under a precision scheme. Mirrors `pr::pr_weights` (Alg. 1)
+/// with quantization inserted at the exact points the hardware converts.
+pub fn pr_weights_quant(
+    mu: Vec2,
+    conic: Sym2,
+    p_top: Vec2,
+    p_bot: Vec2,
+    prec: Precision,
+) -> PrWeights {
+    match prec {
+        Precision::Fp32 => super::pr::pr_weights(mu, conic, p_top, p_bot),
+        Precision::Fp16 => {
+            // All operands + ops at FP16.
+            let dtx = q16(q16(p_top.x) - q16(mu.x));
+            let dty = q16(q16(p_top.y) - q16(mu.y));
+            let dbx = q16(q16(p_bot.x) - q16(mu.x));
+            let dby = q16(q16(p_bot.y) - q16(mu.y));
+            let (ca, cb, cc) = (q16(conic.a), q16(conic.b), q16(conic.c));
+            weights_from_deltas(dtx, dty, dbx, dby, ca, cb, cc, q16, q16)
+        }
+        Precision::Fp8 => {
+            // Everything at E4M3 — including the absolute coordinates.
+            let dtx = q8(q8(p_top.x) - q8(mu.x));
+            let dty = q8(q8(p_top.y) - q8(mu.y));
+            let dbx = q8(q8(p_bot.x) - q8(mu.x));
+            let dby = q8(q8(p_bot.y) - q8(mu.y));
+            let (ca, cb, cc) = (q8(conic.a), q8(conic.b), q8(conic.c));
+            weights_from_deltas(dtx, dty, dbx, dby, ca, cb, cc, q8, q8)
+        }
+        Precision::Mixed => {
+            // Deltas exact at FP16, then converted to FP8; products at FP8,
+            // accumulation at FP16 (QAU).
+            let dtx = q8(q16(q16(p_top.x) - q16(mu.x)));
+            let dty = q8(q16(q16(p_top.y) - q16(mu.y)));
+            let dbx = q8(q16(q16(p_bot.x) - q16(mu.x)));
+            let dby = q8(q16(q16(p_bot.y) - q16(mu.y)));
+            let (ca, cb, cc) = (q8(conic.a), q8(conic.b), q8(conic.c));
+            weights_from_deltas(dtx, dty, dbx, dby, ca, cb, cc, q8, q16)
+        }
+    }
+}
+
+/// Lines 2–7 of Alg. 1 with injectable rounding for the multiply stage
+/// (`qm`) and the accumulate stage (`qa`).
+#[allow(clippy::too_many_arguments)]
+fn weights_from_deltas(
+    dtx: f32,
+    dty: f32,
+    dbx: f32,
+    dby: f32,
+    ca: f32,
+    cb: f32,
+    cc: f32,
+    qm: fn(f32) -> f32,
+    qa: fn(f32) -> f32,
+) -> PrWeights {
+    // lines 2–3
+    let s_top_x = qm(qm(0.5 * dtx * dtx) * ca);
+    let s_top_y = qm(qm(0.5 * dty * dty) * cc);
+    let s_bot_x = qm(qm(0.5 * dbx * dbx) * ca);
+    let s_bot_y = qm(qm(0.5 * dby * dby) * cc);
+    // lines 4–5
+    let t0 = qm(qm(dtx * dty) * cb);
+    let t1 = qm(qm(dbx * dty) * cb);
+    let t2 = qm(qm(dtx * dby) * cb);
+    let t3 = qm(qm(dbx * dby) * cb);
+    // lines 6–7 (accumulate precision)
+    PrWeights {
+        e: [
+            qa(qa(s_top_x + s_top_y) + t0),
+            qa(qa(s_bot_x + s_top_y) + t1),
+            qa(qa(s_top_x + s_bot_y) + t2),
+            qa(qa(s_bot_x + s_bot_y) + t3),
+        ],
+    }
+}
+
+/// Pre-quantized Gaussian operands (§Perf): μ and the conic are constant
+/// across every PR tested against the same Gaussian, so the engine
+/// quantizes them once per (Gaussian, tile) instead of per PR — the same
+/// sharing the hardware gets from registering the Gaussian's features at
+/// the CTU input.
+#[derive(Clone, Copy, Debug)]
+pub struct PreQuant {
+    pub prec: Precision,
+    mu: Vec2,
+    conic: Sym2,
+}
+
+impl PreQuant {
+    pub fn new(mu: Vec2, conic: Sym2, prec: Precision) -> PreQuant {
+        let (mu, conic) = match prec {
+            Precision::Fp32 => (mu, conic),
+            // Mixed keeps μ at FP16 (line 1 runs in FP16) and narrows the
+            // conic to FP8 (it feeds the FP8 multiply stage directly).
+            Precision::Fp16 => (
+                Vec2 { x: q16(mu.x), y: q16(mu.y) },
+                Sym2 { a: q16(conic.a), b: q16(conic.b), c: q16(conic.c) },
+            ),
+            Precision::Mixed => (
+                Vec2 { x: q16(mu.x), y: q16(mu.y) },
+                Sym2 { a: q8(conic.a), b: q8(conic.b), c: q8(conic.c) },
+            ),
+            Precision::Fp8 => (
+                Vec2 { x: q8(mu.x), y: q8(mu.y) },
+                Sym2 { a: q8(conic.a), b: q8(conic.b), c: q8(conic.c) },
+            ),
+        };
+        PreQuant { prec, mu, conic }
+    }
+
+    /// Alg. 1 on pre-quantized operands. Identical numerics to
+    /// `pr_weights_quant` (quantizers are idempotent, verified by test).
+    pub fn weights(&self, p_top: Vec2, p_bot: Vec2) -> PrWeights {
+        let (mu, conic) = (self.mu, self.conic);
+        match self.prec {
+            Precision::Fp32 => super::pr::pr_weights(mu, conic, p_top, p_bot),
+            Precision::Fp16 => {
+                let dtx = q16(q16(p_top.x) - mu.x);
+                let dty = q16(q16(p_top.y) - mu.y);
+                let dbx = q16(q16(p_bot.x) - mu.x);
+                let dby = q16(q16(p_bot.y) - mu.y);
+                weights_from_deltas(dtx, dty, dbx, dby, conic.a, conic.b, conic.c, q16, q16)
+            }
+            Precision::Fp8 => {
+                let dtx = q8(q8(p_top.x) - mu.x);
+                let dty = q8(q8(p_top.y) - mu.y);
+                let dbx = q8(q8(p_bot.x) - mu.x);
+                let dby = q8(q8(p_bot.y) - mu.y);
+                weights_from_deltas(dtx, dty, dbx, dby, conic.a, conic.b, conic.c, q8, q8)
+            }
+            Precision::Mixed => {
+                let dtx = q8(q16(q16(p_top.x) - mu.x));
+                let dty = q8(q16(q16(p_top.y) - mu.y));
+                let dbx = q8(q16(q16(p_bot.x) - mu.x));
+                let dby = q8(q16(q16(p_bot.y) - mu.y));
+                weights_from_deltas(dtx, dty, dbx, dby, conic.a, conic.b, conic.c, q8, q16)
+            }
+        }
+    }
+}
+
+/// Shared-term ln(255·o) at the CTU's FP16 shared unit.
+pub fn shared_threshold_quant(opacity: f32, prec: Precision) -> f32 {
+    let t = super::pr::shared_threshold(opacity);
+    match prec {
+        Precision::Fp32 => t,
+        // The shared unit is FP16 in all reduced schemes (it's one op per
+        // Gaussian; the paper's area savings come from the per-pixel path).
+        Precision::Fp16 | Precision::Mixed => q16(t),
+        Precision::Fp8 => q8(t),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cat::pr::pr_weights;
+    use crate::numeric::linalg::v2;
+    use crate::util::rng::Pcg32;
+
+    #[test]
+    fn prequant_matches_direct_quant_path() {
+        // PreQuant::weights must be bit-identical to pr_weights_quant for
+        // every precision (quantizer idempotence makes hoisting safe).
+        let mut rng = Pcg32::new(91);
+        for _ in 0..500 {
+            let (mu, conic, pt, pb) = case(&mut rng);
+            for prec in [Precision::Fp32, Precision::Fp16, Precision::Mixed, Precision::Fp8] {
+                let direct = pr_weights_quant(mu, conic, pt, pb, prec);
+                let pre = PreQuant::new(mu, conic, prec).weights(pt, pb);
+                assert_eq!(direct, pre, "{prec:?}");
+            }
+        }
+    }
+
+    fn case(rng: &mut Pcg32) -> (Vec2, Sym2, Vec2, Vec2) {
+        // μ near the PR (the regime that decides mask bits).
+        let mu = v2(rng.range_f32(100.0, 900.0), rng.range_f32(100.0, 900.0));
+        let p_top = v2(mu.x + rng.range_f32(-12.0, 12.0), mu.y + rng.range_f32(-12.0, 12.0));
+        let p_bot = v2(p_top.x + 3.0, p_top.y + 3.0);
+        let l11 = rng.range_f32(0.05, 0.8);
+        let l21 = rng.range_f32(-0.3, 0.3);
+        let l22 = rng.range_f32(0.05, 0.8);
+        let conic = Sym2 {
+            a: l11 * l11,
+            b: l11 * l21,
+            c: l21 * l21 + l22 * l22,
+        };
+        (mu, conic, p_top, p_bot)
+    }
+
+    #[test]
+    fn fp32_equals_reference() {
+        let mut rng = Pcg32::new(81);
+        for _ in 0..100 {
+            let (mu, conic, pt, pb) = case(&mut rng);
+            let a = pr_weights_quant(mu, conic, pt, pb, Precision::Fp32);
+            let b = pr_weights(mu, conic, pt, pb);
+            assert_eq!(a, b);
+        }
+    }
+
+    #[test]
+    fn error_ordering_fp16_mixed_fp8() {
+        // Mean relative error must satisfy fp16 ≤ mixed ≪ fp8 — the paper's
+        // Fig. 7(c) mechanism.
+        let mut rng = Pcg32::new(82);
+        let mut err = [0.0f64; 3];
+        let mut n = 0usize;
+        for _ in 0..2000 {
+            let (mu, conic, pt, pb) = case(&mut rng);
+            let reference = pr_weights(mu, conic, pt, pb);
+            for (k, prec) in [Precision::Fp16, Precision::Mixed, Precision::Fp8]
+                .iter()
+                .enumerate()
+            {
+                let w = pr_weights_quant(mu, conic, pt, pb, *prec);
+                for c in 0..4 {
+                    let denom = 1.0 + reference.e[c].abs() as f64;
+                    err[k] += ((w.e[c] - reference.e[c]).abs() as f64) / denom;
+                }
+            }
+            n += 4;
+        }
+        let (e16, emix, e8) = (err[0] / n as f64, err[1] / n as f64, err[2] / n as f64);
+        assert!(e16 <= emix + 1e-9, "fp16 {e16} vs mixed {emix}");
+        assert!(emix * 3.0 < e8, "mixed {emix} should be ≪ fp8 {e8}");
+    }
+
+    #[test]
+    fn fp8_destroys_absolute_coordinates() {
+        // At x≈500, E4M3 steps are 32 px: two pixels 3 px apart collapse.
+        let a = quantize_fp8(500.0, Fp8Format::E4M3);
+        let b = quantize_fp8(503.0, Fp8Format::E4M3);
+        assert_eq!(a, b, "FP8 cannot distinguish nearby absolute coordinates");
+    }
+
+    #[test]
+    fn mixed_preserves_small_deltas() {
+        // Same two pixels via the mixed path keep distinct deltas.
+        let mu = v2(500.0, 500.0);
+        let conic = Sym2 { a: 0.1, b: 0.0, c: 0.1 };
+        let w = pr_weights_quant(mu, conic, v2(500.5, 500.5), v2(503.5, 503.5), Precision::Mixed);
+        assert!(w.e[0] < w.e[3], "E should grow with distance: {:?}", w.e);
+    }
+
+    #[test]
+    fn decision_agreement_rates() {
+        // Mask-bit agreement with FP32, mixed must beat fp8 decisively.
+        let mut rng = Pcg32::new(83);
+        let mut agree_mixed = 0usize;
+        let mut agree_fp8 = 0usize;
+        let mut total = 0usize;
+        for _ in 0..3000 {
+            let (mu, conic, pt, pb) = case(&mut rng);
+            let o = rng.range_f32(0.05, 1.0);
+            let refw = pr_weights(mu, conic, pt, pb);
+            let lhs = super::super::pr::shared_threshold(o);
+            for prec in [Precision::Mixed, Precision::Fp8] {
+                let w = pr_weights_quant(mu, conic, pt, pb, prec);
+                let lhs_q = shared_threshold_quant(o, prec);
+                for c in 0..4 {
+                    let want = lhs > refw.e[c];
+                    let got = lhs_q > w.e[c];
+                    if want == got {
+                        if prec == Precision::Mixed {
+                            agree_mixed += 1;
+                        } else {
+                            agree_fp8 += 1;
+                        }
+                    }
+                }
+            }
+            total += 4;
+        }
+        let am = agree_mixed as f64 / total as f64;
+        let a8 = agree_fp8 as f64 / total as f64;
+        assert!(am > 0.97, "mixed agreement {am}");
+        assert!(am > a8, "mixed {am} must beat fp8 {a8}");
+    }
+
+    #[test]
+    fn precision_parse() {
+        assert_eq!(Precision::parse("mixed"), Some(Precision::Mixed));
+        assert_eq!(Precision::parse("fp8"), Some(Precision::Fp8));
+        assert_eq!(Precision::parse("x"), None);
+    }
+}

@@ -1,0 +1,12 @@
+//! Mini-Tile Contribution-Aware Test (paper Sec. III): adaptive leader
+//! pixels, pixel-rectangle grouping (Alg. 1), mixed-precision datapath, and
+//! the hierarchical two-stage engine that produces mini-tile skip masks.
+
+pub mod engine;
+pub mod leader;
+pub mod mixed;
+pub mod pr;
+
+pub use engine::{CatConfig, CatEngine, CatStats, ExactMinitileMask, ObbSubtileMask};
+pub use leader::{LeaderMode, Sampling};
+pub use mixed::Precision;

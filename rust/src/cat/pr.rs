@@ -1,0 +1,222 @@
+//! Pixel-Rectangle (PR) Gaussian-weight computation — paper Alg. 1.
+//!
+//! A PR is four leader pixels at the corners of an axis-aligned rectangle
+//! {x_top, x_bot} × {y_top, y_bot}. The quadratic form
+//! E(p) = ½ (p−μ)ᵀ Σ′⁻¹ (p−μ) decomposes into per-axis terms
+//! sˣ = ½ Δx² Σ′⁻¹ₓₓ and sʸ = ½ Δy² Σ′⁻¹ᵧᵧ plus the cross term
+//! t = Δx Δy Σ′⁻¹ₓᵧ. Because the four corners share the two Δx and two Δy
+//! values, the PRTU computes 4 axis terms + 4 cross terms and assembles all
+//! four E values — nearly half the multiplies of four independent
+//! evaluations (the ACU baseline [7][17][18]).
+
+use crate::numeric::linalg::{Sym2, Vec2};
+
+/// Arithmetic-op counters (multiplies/adds dominate CTU area & energy; the
+/// analysis behind Fig. 3(b) and the CTU throughput model).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct OpCount {
+    pub mul: u64,
+    pub add: u64,
+    /// Subtractions (coordinate deltas).
+    pub sub: u64,
+    pub cmp: u64,
+}
+
+impl OpCount {
+    pub fn total(&self) -> u64 {
+        self.mul + self.add + self.sub + self.cmp
+    }
+
+    pub fn accumulate(&mut self, o: OpCount) {
+        self.mul += o.mul;
+        self.add += o.add;
+        self.sub += o.sub;
+        self.cmp += o.cmp;
+    }
+}
+
+/// Gaussian weights E at the four PR corners, in the paper's order:
+/// E0 = (x_top, y_top), E1 = (x_bot, y_top), E2 = (x_top, y_bot),
+/// E3 = (x_bot, y_bot).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct PrWeights {
+    pub e: [f32; 4],
+}
+
+/// Alg. 1 exactly as written (FP32 reference). `p_top` and `p_bot` are the
+/// main-diagonal pixel coordinates (p0 and p3 of the PR).
+pub fn pr_weights(mu: Vec2, conic: Sym2, p_top: Vec2, p_bot: Vec2) -> PrWeights {
+    // line 1: deltas
+    let d_top_x = p_top.x - mu.x;
+    let d_top_y = p_top.y - mu.y;
+    let d_bot_x = p_bot.x - mu.x;
+    let d_bot_y = p_bot.y - mu.y;
+    // lines 2–3: per-axis quadratic terms
+    let s_top_x = 0.5 * d_top_x * d_top_x * conic.a;
+    let s_top_y = 0.5 * d_top_y * d_top_y * conic.c;
+    let s_bot_x = 0.5 * d_bot_x * d_bot_x * conic.a;
+    let s_bot_y = 0.5 * d_bot_y * d_bot_y * conic.c;
+    // lines 4–5: cross terms (Σ′⁻¹ₓᵧ = conic.b)
+    let t0 = d_top_x * d_top_y * conic.b;
+    let t1 = d_bot_x * d_top_y * conic.b;
+    let t2 = d_top_x * d_bot_y * conic.b;
+    let t3 = d_bot_x * d_bot_y * conic.b;
+    // lines 6–7: assemble corners
+    PrWeights {
+        e: [
+            s_top_x + s_top_y + t0,
+            s_bot_x + s_top_y + t1,
+            s_top_x + s_bot_y + t2,
+            s_bot_x + s_bot_y + t3,
+        ],
+    }
+}
+
+/// Direct per-pixel evaluation (what the ACU computes): E for one pixel.
+pub fn acu_weight(mu: Vec2, conic: Sym2, p: Vec2) -> f32 {
+    let dx = p.x - mu.x;
+    let dy = p.y - mu.y;
+    0.5 * (conic.a * dx * dx + conic.c * dy * dy) + conic.b * dx * dy
+}
+
+/// Op cost of one PR through Alg. 1 (4 pixels).
+/// line 1: 4 subs; lines 2–3: 4×3 muls; lines 4–5: 4×2 muls;
+/// lines 6–7: 4×2 adds; plus 4 threshold compares.
+pub fn pr_op_cost() -> OpCount {
+    OpCount {
+        sub: 4,
+        mul: 12 + 8,
+        add: 8,
+        cmp: 4,
+    }
+}
+
+/// Op cost of evaluating the same 4 pixels individually on an ACU.
+/// Per pixel: 2 subs; E = ½(a·dx² + c·dy²) + b·dx·dy →
+/// dx²,dy² (2) + ·a,·c (2) + ·½ (2, no shared factor in the per-pixel
+/// datapath) + dx·dy (1) + ·b (1) = 8 muls; 2 adds; 1 compare.
+pub fn acu_op_cost_4px() -> OpCount {
+    OpCount {
+        sub: 8,
+        mul: 32,
+        add: 8,
+        cmp: 4,
+    }
+}
+
+/// The shared left-hand side of Eq. 2: ln(255·o). One per Gaussian,
+/// amortized over every leader pixel tested against it.
+#[inline]
+pub fn shared_threshold(opacity: f32) -> f32 {
+    (255.0 * opacity).ln()
+}
+
+/// Eq. 2 decision: does the pixel pass (contribute)?
+/// α = o·e^{−E} ≥ 1/255  ⇔  ln(255·o) > E.
+#[inline]
+pub fn passes(threshold_lhs: f32, e: f32) -> bool {
+    threshold_lhs > e
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::numeric::linalg::v2;
+    use crate::util::rng::Pcg32;
+
+    fn random_conic(rng: &mut Pcg32) -> Sym2 {
+        // Positive-definite: A = LLᵀ with L lower-triangular.
+        let l11 = rng.range_f32(0.05, 1.0);
+        let l21 = rng.range_f32(-0.5, 0.5);
+        let l22 = rng.range_f32(0.05, 1.0);
+        Sym2 {
+            a: l11 * l11,
+            b: l11 * l21,
+            c: l21 * l21 + l22 * l22,
+        }
+    }
+
+    #[test]
+    fn pr_matches_acu_at_all_corners() {
+        let mut rng = Pcg32::new(71);
+        for _ in 0..500 {
+            let mu = v2(rng.range_f32(0.0, 256.0), rng.range_f32(0.0, 256.0));
+            let conic = random_conic(&mut rng);
+            let p_top = v2(rng.range_f32(0.0, 256.0), rng.range_f32(0.0, 256.0));
+            let p_bot = v2(p_top.x + rng.range_f32(1.0, 8.0), p_top.y + rng.range_f32(1.0, 8.0));
+            let w = pr_weights(mu, conic, p_top, p_bot);
+            let expect = [
+                acu_weight(mu, conic, v2(p_top.x, p_top.y)),
+                acu_weight(mu, conic, v2(p_bot.x, p_top.y)),
+                acu_weight(mu, conic, v2(p_top.x, p_bot.y)),
+                acu_weight(mu, conic, v2(p_bot.x, p_bot.y)),
+            ];
+            for k in 0..4 {
+                assert!(
+                    (w.e[k] - expect[k]).abs() <= 1e-3 * (1.0 + expect[k].abs()),
+                    "corner {k}: {} vs {}",
+                    w.e[k],
+                    expect[k]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn weights_nonnegative_for_psd_conic() {
+        let mut rng = Pcg32::new(72);
+        for _ in 0..200 {
+            let conic = random_conic(&mut rng);
+            let mu = v2(100.0, 100.0);
+            let w = pr_weights(mu, conic, v2(90.0, 95.0), v2(110.0, 105.0));
+            for e in w.e {
+                assert!(e >= -1e-4, "negative weight {e}");
+            }
+        }
+    }
+
+    #[test]
+    fn weight_zero_at_mean() {
+        let conic = Sym2 { a: 0.5, b: 0.1, c: 0.3 };
+        let mu = v2(10.0, 20.0);
+        let w = pr_weights(mu, conic, mu, v2(14.0, 24.0));
+        assert!(w.e[0].abs() < 1e-6);
+    }
+
+    #[test]
+    fn op_saving_is_nearly_half() {
+        let pr = pr_op_cost();
+        let acu = acu_op_cost_4px();
+        let saving = 1.0 - pr.mul as f64 / acu.mul as f64;
+        assert!(
+            saving >= 0.35,
+            "multiplier saving {saving} should be ~0.4–0.5"
+        );
+        assert!(pr.total() < acu.total());
+    }
+
+    #[test]
+    fn threshold_equation_matches_alpha_test() {
+        // ln(255·o) > E  ⇔  o·e^{−E} > 1/255.
+        let mut rng = Pcg32::new(73);
+        for _ in 0..1000 {
+            let o = rng.range_f32(0.01, 1.0);
+            let e = rng.range_f32(0.0, 12.0);
+            let lhs = shared_threshold(o);
+            let alpha = o * (-e).exp();
+            assert_eq!(
+                passes(lhs, e),
+                alpha > 1.0 / 255.0 + 1e-9 || (alpha - 1.0 / 255.0).abs() < 1e-7 && lhs > e,
+                "o={o} e={e} alpha={alpha}"
+            );
+        }
+    }
+
+    #[test]
+    fn low_opacity_never_passes() {
+        // o < 1/255 ⇒ ln(255·o) < 0 ≤ E for all points.
+        let lhs = shared_threshold(1.0 / 300.0);
+        assert!(lhs < 0.0);
+        assert!(!passes(lhs, 0.0));
+    }
+}

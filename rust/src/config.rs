@@ -1,0 +1,251 @@
+//! Experiment configuration: JSON-backed settings for scenes, cameras,
+//! algorithm modes, and hardware presets, with CLI overrides.
+//!
+//! The config system is the single entry point benches, examples, and the
+//! CLI use to construct consistent (scene, camera set, hardware) triples, so
+//! every experiment in EXPERIMENTS.md is reproducible from a config dump.
+
+use crate::camera::{orbit_path, Camera, Intrinsics};
+use crate::cat::{LeaderMode, Precision};
+use crate::numeric::linalg::v3;
+use crate::scene::gaussian::Scene;
+use crate::scene::synthetic::{generate_scaled, preset};
+use crate::sim::HwConfig;
+use crate::util::json::{jnum, jstr, Json};
+use anyhow::{anyhow, Result};
+
+/// One experiment setup.
+#[derive(Clone, Debug)]
+pub struct ExperimentConfig {
+    /// Scene preset name ("garden", "truck", …) or a .gsz path.
+    pub scene: String,
+    /// Fraction of the full-size synthetic scene to generate (CI scale).
+    pub scene_scale: f32,
+    /// Render resolution (square).
+    pub resolution: u32,
+    /// Number of orbit views to evaluate.
+    pub frames: usize,
+    /// Hardware preset name (see `sim::HwConfig::by_name`).
+    pub hardware: String,
+    /// Leader mode override ("dense", "sparse", "adaptive", "spiky-focused").
+    pub cat_mode: Option<String>,
+    /// Precision override ("fp32", "fp16", "fp8", "mixed").
+    pub precision: Option<String>,
+    /// FIFO depth override.
+    pub fifo_depth: Option<usize>,
+    /// Apply contribution pruning before evaluation.
+    pub prune: bool,
+    pub seed: u64,
+}
+
+impl Default for ExperimentConfig {
+    fn default() -> Self {
+        ExperimentConfig {
+            scene: "garden".into(),
+            scene_scale: default_scene_scale(),
+            resolution: 256,
+            frames: 3,
+            hardware: "flicker32".into(),
+            cat_mode: None,
+            precision: None,
+            fifo_depth: None,
+            prune: false,
+            seed: 0xF11C,
+        }
+    }
+}
+
+/// CI-friendly default: FLICKER_SCENE_SCALE overrides (1.0 = paper scale).
+pub fn default_scene_scale() -> f32 {
+    std::env::var("FLICKER_SCENE_SCALE")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0.05)
+}
+
+impl ExperimentConfig {
+    /// Build the scene (synthetic preset or .gsz file).
+    pub fn build_scene(&self) -> Result<Scene> {
+        if self.scene.ends_with(".gsz") {
+            return Ok(crate::scene::io::load(std::path::Path::new(&self.scene))?);
+        }
+        Ok(generate_scaled(&preset(&self.scene), self.scene_scale))
+    }
+
+    /// Evaluation cameras: an orbit whose radius adapts to the scene kind.
+    pub fn build_cameras(&self) -> Vec<Camera> {
+        let intr = Intrinsics::from_fov(self.resolution, self.resolution, 1.2);
+        orbit_path(intr, v3(0.0, 0.5, 0.0), 12.0, 3.0, self.frames.max(1))
+    }
+
+    /// Resolve the hardware config with overrides applied.
+    pub fn build_hw(&self) -> Result<HwConfig> {
+        let mut hw = HwConfig::by_name(&self.hardware)
+            .ok_or_else(|| anyhow!("unknown hardware preset '{}'", self.hardware))?;
+        if let Some(m) = &self.cat_mode {
+            hw.cat_mode =
+                LeaderMode::parse(m).ok_or_else(|| anyhow!("unknown cat mode '{m}'"))?;
+        }
+        if let Some(p) = &self.precision {
+            hw.cat_precision =
+                Precision::parse(p).ok_or_else(|| anyhow!("unknown precision '{p}'"))?;
+        }
+        if let Some(d) = self.fifo_depth {
+            hw.fifo_depth = d;
+        }
+        Ok(hw)
+    }
+
+    /// Parse overrides from CLI args.
+    pub fn from_args(args: &crate::util::cli::Args) -> Result<ExperimentConfig> {
+        let mut cfg = ExperimentConfig::default();
+        if let Some(path) = args.get("config") {
+            cfg = Self::from_json_file(std::path::Path::new(path))?;
+        }
+        if let Some(s) = args.get("scene") {
+            cfg.scene = s.to_string();
+        }
+        cfg.scene_scale = args.f64_or("scene-scale", cfg.scene_scale as f64)? as f32;
+        cfg.resolution = args.u64_or("resolution", cfg.resolution as u64)? as u32;
+        cfg.frames = args.usize_or("frames", cfg.frames)?;
+        if let Some(h) = args.get("hardware") {
+            cfg.hardware = h.to_string();
+        }
+        cfg.cat_mode = args.get("cat-mode").map(|s| s.to_string()).or(cfg.cat_mode);
+        cfg.precision = args.get("precision").map(|s| s.to_string()).or(cfg.precision);
+        if let Some(d) = args.get("fifo-depth") {
+            cfg.fifo_depth = Some(
+                d.parse()
+                    .map_err(|_| anyhow!("--fifo-depth: bad integer '{d}'"))?,
+            );
+        }
+        if args.flag("prune") {
+            cfg.prune = true;
+        }
+        cfg.seed = args.u64_or("seed", cfg.seed)?;
+        Ok(cfg)
+    }
+
+    pub fn from_json_file(path: &std::path::Path) -> Result<ExperimentConfig> {
+        let text = std::fs::read_to_string(path)?;
+        let j = Json::parse(&text).map_err(|e| anyhow!("{}: {e}", path.display()))?;
+        let mut cfg = ExperimentConfig::default();
+        let s = |k: &str| j.at(&[k]).and_then(Json::as_str).map(str::to_string);
+        let n = |k: &str| j.at(&[k]).and_then(Json::as_f64);
+        if let Some(v) = s("scene") {
+            cfg.scene = v;
+        }
+        if let Some(v) = n("scene_scale") {
+            cfg.scene_scale = v as f32;
+        }
+        if let Some(v) = n("resolution") {
+            cfg.resolution = v as u32;
+        }
+        if let Some(v) = n("frames") {
+            cfg.frames = v as usize;
+        }
+        if let Some(v) = s("hardware") {
+            cfg.hardware = v;
+        }
+        cfg.cat_mode = s("cat_mode").or(cfg.cat_mode);
+        cfg.precision = s("precision").or(cfg.precision);
+        if let Some(v) = n("fifo_depth") {
+            cfg.fifo_depth = Some(v as usize);
+        }
+        if let Some(v) = j.at(&["prune"]).and_then(Json::as_bool) {
+            cfg.prune = v;
+        }
+        if let Some(v) = n("seed") {
+            cfg.seed = v as u64;
+        }
+        Ok(cfg)
+    }
+
+    /// Serialize (for report provenance).
+    pub fn to_json(&self) -> Json {
+        let mut o = Json::obj();
+        o.insert("scene", jstr(&self.scene));
+        o.insert("scene_scale", jnum(self.scene_scale as f64));
+        o.insert("resolution", jnum(self.resolution as f64));
+        o.insert("frames", jnum(self.frames as f64));
+        o.insert("hardware", jstr(&self.hardware));
+        if let Some(m) = &self.cat_mode {
+            o.insert("cat_mode", jstr(m));
+        }
+        if let Some(p) = &self.precision {
+            o.insert("precision", jstr(p));
+        }
+        if let Some(d) = self.fifo_depth {
+            o.insert("fifo_depth", jnum(d as f64));
+        }
+        o.insert("prune", Json::Bool(self.prune));
+        o.insert("seed", jnum(self.seed as f64));
+        Json::Obj(o)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::cli::Args;
+
+    fn args(toks: &[&str]) -> Args {
+        Args::parse(toks.iter().map(|s| s.to_string()), &["prune"])
+    }
+
+    #[test]
+    fn defaults_build() {
+        let cfg = ExperimentConfig::default();
+        let scene = cfg.build_scene().unwrap();
+        assert!(scene.len() > 100);
+        assert_eq!(cfg.build_cameras().len(), 3);
+        assert_eq!(cfg.build_hw().unwrap().name, "flicker32");
+    }
+
+    #[test]
+    fn cli_overrides() {
+        let a = args(&[
+            "simulate",
+            "--scene",
+            "truck",
+            "--resolution",
+            "128",
+            "--hardware",
+            "gscore64",
+            "--cat-mode",
+            "sparse",
+            "--fifo-depth",
+            "4",
+            "--prune",
+        ]);
+        let cfg = ExperimentConfig::from_args(&a).unwrap();
+        assert_eq!(cfg.scene, "truck");
+        assert_eq!(cfg.resolution, 128);
+        assert!(cfg.prune);
+        let hw = cfg.build_hw().unwrap();
+        assert_eq!(hw.fifo_depth, 4);
+        assert_eq!(hw.cat_mode, crate::cat::LeaderMode::UniformSparse);
+    }
+
+    #[test]
+    fn bad_hardware_is_error() {
+        let a = args(&["x", "--hardware", "bogus"]);
+        let cfg = ExperimentConfig::from_args(&a).unwrap();
+        assert!(cfg.build_hw().is_err());
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let mut cfg = ExperimentConfig::default();
+        cfg.cat_mode = Some("sparse".into());
+        cfg.fifo_depth = Some(8);
+        let dir = std::env::temp_dir().join("flicker_cfg");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("c.json");
+        std::fs::write(&p, cfg.to_json().pretty()).unwrap();
+        let back = ExperimentConfig::from_json_file(&p).unwrap();
+        assert_eq!(back.scene, cfg.scene);
+        assert_eq!(back.cat_mode, cfg.cat_mode);
+        assert_eq!(back.fifo_depth, cfg.fifo_depth);
+    }
+}

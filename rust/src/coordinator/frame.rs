@@ -1,0 +1,219 @@
+//! Per-frame rendering coordination.
+
+use crate::camera::Camera;
+use crate::cat::{CatConfig, CatEngine};
+use crate::config::ExperimentConfig;
+use crate::render::image::Image;
+use crate::render::project::project_scene;
+use crate::render::raster::{render_lists, AllOnes, MaskProvider, RenderOptions, RenderStats};
+use crate::render::sort::sort_by_depth;
+use crate::render::tile::{build_tile_lists, TileGrid};
+use crate::runtime::executor::TileExecutor;
+use crate::runtime::Runtime;
+use crate::scene::gaussian::Scene;
+use anyhow::Result;
+use std::time::Instant;
+
+/// Which execution engine renders the frame's tiles.
+pub enum Backend<'rt> {
+    /// Pure-Rust golden rasterizer, vanilla masks.
+    Golden,
+    /// Golden rasterizer with Mini-Tile CAT masks at the given config.
+    GoldenCat(CatConfig),
+    /// AOT JAX/Pallas artifacts through PJRT.
+    Pjrt(&'rt Runtime),
+}
+
+/// A frame to render.
+pub struct FrameRequest<'a> {
+    pub scene: &'a Scene,
+    pub camera: &'a Camera,
+    pub options: RenderOptions,
+}
+
+/// What came back.
+pub struct FrameMetrics {
+    pub image: Image,
+    pub stats: RenderStats,
+    pub wall_ms: f64,
+    pub backend: &'static str,
+}
+
+/// Render one frame through the chosen backend.
+pub fn render_frame(req: &FrameRequest, backend: &mut Backend) -> Result<FrameMetrics> {
+    let t0 = Instant::now();
+    let (image, stats, name) = match backend {
+        Backend::Golden => {
+            let out = crate::render::raster::render(req.scene, req.camera, &req.options);
+            (out.image, out.stats, "golden")
+        }
+        Backend::GoldenCat(cfg) => {
+            let mut engine = CatEngine::new(*cfg);
+            let out = crate::render::raster::render_masked(
+                req.scene,
+                req.camera,
+                &req.options,
+                &mut engine,
+                None,
+            );
+            (out.image, out.stats, "golden+cat")
+        }
+        Backend::Pjrt(rt) => {
+            let splats = project_scene(req.scene, req.camera);
+            let grid = TileGrid::new(
+                req.camera.intr.width,
+                req.camera.intr.height,
+                req.options.tile_size,
+            );
+            let mut lists = build_tile_lists(&splats, &grid, req.options.strategy);
+            for l in &mut lists {
+                sort_by_depth(l, &splats);
+            }
+            let mut img = Image::new(grid.width, grid.height);
+            let mut ex = TileExecutor::new(rt);
+            for (t, list) in lists.iter().enumerate() {
+                ex.render_tile(
+                    &grid.rect(t),
+                    &splats,
+                    list,
+                    &mut img,
+                    req.options.background,
+                )?;
+            }
+            let stats = RenderStats {
+                splats: splats.len(),
+                tile_pairs: lists.iter().map(|l| l.len()).sum(),
+                pixels: (grid.width * grid.height) as u64,
+                ..Default::default()
+            };
+            (img, stats, "pjrt")
+        }
+    };
+    Ok(FrameMetrics {
+        image,
+        stats,
+        wall_ms: t0.elapsed().as_secs_f64() * 1e3,
+        backend: name,
+    })
+}
+
+/// Render an experiment's whole camera orbit through the golden backend,
+/// returning per-frame metrics (the multi-frame evaluation driver used by
+/// examples and benches).
+pub fn render_orbit(cfg: &ExperimentConfig, backend: &mut Backend) -> Result<Vec<FrameMetrics>> {
+    let scene = cfg.build_scene()?;
+    let cams = cfg.build_cameras();
+    let mut out = Vec::with_capacity(cams.len());
+    for cam in &cams {
+        let req = FrameRequest {
+            scene: &scene,
+            camera: cam,
+            options: RenderOptions::default(),
+        };
+        out.push(render_frame(&req, backend)?);
+    }
+    Ok(out)
+}
+
+/// Convenience: render the same frame through Golden and a mask provider,
+/// returning (golden, masked) images — the quality-delta primitive used by
+/// Table I / Fig. 3 / Fig. 7 experiments.
+pub fn golden_vs_masked(
+    scene: &Scene,
+    cam: &Camera,
+    opts: &RenderOptions,
+    masks: &mut dyn MaskProvider,
+) -> (Image, Image) {
+    let golden = crate::render::raster::render(scene, cam, opts);
+    let splats = project_scene(scene, cam);
+    let grid = TileGrid::new(cam.intr.width, cam.intr.height, opts.tile_size);
+    let mut lists = build_tile_lists(&splats, &grid, opts.strategy);
+    for l in &mut lists {
+        sort_by_depth(l, &splats);
+    }
+    let masked = render_lists(&splats, &lists, &grid, opts, masks, None);
+    let _ = AllOnes; // referenced for doc purposes
+    (golden.image, masked.image)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::camera::Intrinsics;
+    use crate::cat::{LeaderMode, Precision};
+    use crate::numeric::linalg::v3;
+    use crate::render::metrics::psnr;
+    use crate::scene::synthetic::{generate_scaled, preset};
+
+    fn setup() -> (Scene, Camera) {
+        let scene = generate_scaled(&preset("truck"), 0.02);
+        let cam = Camera::look_at(
+            Intrinsics::from_fov(96, 96, 1.2),
+            v3(0.0, 2.5, -12.0),
+            v3(0.0, 0.5, 0.0),
+            v3(0.0, 1.0, 0.0),
+        );
+        (scene, cam)
+    }
+
+    #[test]
+    fn golden_and_cat_agree_visually() {
+        let (scene, cam) = setup();
+        let req = FrameRequest {
+            scene: &scene,
+            camera: &cam,
+            options: RenderOptions::default(),
+        };
+        let golden = render_frame(&req, &mut Backend::Golden).unwrap();
+        let cat = render_frame(
+            &req,
+            &mut Backend::GoldenCat(CatConfig {
+                mode: LeaderMode::UniformDense,
+                precision: Precision::Fp32,
+                stage1: true,
+            }),
+        )
+        .unwrap();
+        let p = psnr(&golden.image, &cat.image);
+        assert!(p > 30.0, "CAT vs golden PSNR {p}");
+        // CAT must reduce tested work.
+        assert!(cat.stats.pairs_tested < golden.stats.pairs_tested);
+    }
+
+    #[test]
+    fn orbit_runs_all_frames() {
+        let cfg = ExperimentConfig {
+            scene: "truck".into(),
+            scene_scale: 0.01,
+            resolution: 64,
+            frames: 2,
+            ..Default::default()
+        };
+        let frames = render_orbit(&cfg, &mut Backend::Golden).unwrap();
+        assert_eq!(frames.len(), 2);
+        for f in frames {
+            assert_eq!(f.backend, "golden");
+            assert!(f.wall_ms > 0.0);
+        }
+    }
+
+    #[test]
+    fn pjrt_backend_composes_if_artifacts_present() {
+        let dir = crate::runtime::default_artifact_dir();
+        if !dir.join("manifest.json").exists() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let rt = Runtime::load(&dir).unwrap();
+        let (scene, cam) = setup();
+        let req = FrameRequest {
+            scene: &scene,
+            camera: &cam,
+            options: RenderOptions::default(),
+        };
+        let golden = render_frame(&req, &mut Backend::Golden).unwrap();
+        let pjrt = render_frame(&req, &mut Backend::Pjrt(&rt)).unwrap();
+        let p = psnr(&golden.image, &pjrt.image);
+        assert!(p > 28.0, "PJRT vs golden PSNR {p}");
+    }
+}

@@ -1,0 +1,17 @@
+//! Layer-3 frame coordinator: schedules per-tile work across backends,
+//! collects frame metrics, and drives multi-frame evaluation runs.
+//!
+//! Backends:
+//! * **Golden** — the in-process Rust rasterizer (reference numerics), with
+//!   any `MaskProvider` (vanilla / OBB / Mini-Tile CAT).
+//! * **Pjrt** — the AOT JAX/Pallas artifacts through the PJRT runtime
+//!   (`runtime::executor`), proving the three layers compose.
+//!
+//! The per-frame flow mirrors the accelerator's: project → tile-bin →
+//! depth-sort → (CAT-mask) → blend, with tiles fanned across the worker
+//! pool.
+
+pub mod frame;
+pub mod report;
+
+pub use frame::{render_frame, Backend, FrameMetrics, FrameRequest};

@@ -1,0 +1,166 @@
+//! Report writer: turns experiment results into the JSON sidecars and
+//! human tables the benches and EXPERIMENTS.md consume.
+
+use crate::util::json::{jarr, jnum, jstr, Json, JsonObj};
+use std::path::Path;
+
+/// A generic experiment report: named scalar rows plus provenance.
+#[derive(Clone, Debug, Default)]
+pub struct Report {
+    pub id: String,
+    pub title: String,
+    rows: Vec<(String, Vec<(String, f64)>)>,
+    provenance: Option<Json>,
+}
+
+impl Report {
+    pub fn new(id: &str, title: &str) -> Report {
+        Report {
+            id: id.to_string(),
+            title: title.to_string(),
+            ..Default::default()
+        }
+    }
+
+    pub fn set_provenance(&mut self, j: Json) {
+        self.provenance = Some(j);
+    }
+
+    /// Add a row with (metric, value) pairs.
+    pub fn row(&mut self, name: &str, metrics: &[(&str, f64)]) {
+        self.rows.push((
+            name.to_string(),
+            metrics.iter().map(|(k, v)| (k.to_string(), *v)).collect(),
+        ));
+    }
+
+    pub fn rows(&self) -> &[(String, Vec<(String, f64)>)] {
+        &self.rows
+    }
+
+    /// Find a value.
+    pub fn get(&self, row: &str, metric: &str) -> Option<f64> {
+        self.rows
+            .iter()
+            .find(|(n, _)| n == row)?
+            .1
+            .iter()
+            .find(|(k, _)| k == metric)
+            .map(|(_, v)| *v)
+    }
+
+    /// Render as an aligned text table.
+    pub fn table(&self) -> String {
+        if self.rows.is_empty() {
+            return format!("== {} ==\n(empty)\n", self.title);
+        }
+        // Column set = union of metric names in insertion order.
+        let mut cols: Vec<String> = Vec::new();
+        for (_, ms) in &self.rows {
+            for (k, _) in ms {
+                if !cols.contains(k) {
+                    cols.push(k.clone());
+                }
+            }
+        }
+        let name_w = self
+            .rows
+            .iter()
+            .map(|(n, _)| n.len())
+            .max()
+            .unwrap_or(4)
+            .max(4);
+        let mut out = format!("== {} ==\n", self.title);
+        out.push_str(&format!("{:<name_w$}", ""));
+        for c in &cols {
+            out.push_str(&format!("  {:>12}", c));
+        }
+        out.push('\n');
+        for (name, ms) in &self.rows {
+            out.push_str(&format!("{:<name_w$}", name));
+            for c in &cols {
+                match ms.iter().find(|(k, _)| k == c) {
+                    Some((_, v)) => {
+                        if v.abs() >= 1000.0 || (*v != 0.0 && v.abs() < 0.01) {
+                            out.push_str(&format!("  {:>12.3e}", v));
+                        } else {
+                            out.push_str(&format!("  {:>12.3}", v));
+                        }
+                    }
+                    None => out.push_str(&format!("  {:>12}", "-")),
+                }
+            }
+            out.push('\n');
+        }
+        out
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut o = JsonObj::new();
+        o.insert("id", jstr(&self.id));
+        o.insert("title", jstr(&self.title));
+        if let Some(p) = &self.provenance {
+            o.insert("provenance", p.clone());
+        }
+        let rows: Vec<Json> = self
+            .rows
+            .iter()
+            .map(|(name, ms)| {
+                let mut r = JsonObj::new();
+                r.insert("name", jstr(name));
+                for (k, v) in ms {
+                    r.insert(k.clone(), jnum(*v));
+                }
+                Json::Obj(r)
+            })
+            .collect();
+        o.insert("rows", jarr(rows));
+        Json::Obj(o)
+    }
+
+    /// Print the table and write `target/bench-reports/<id>.json`.
+    pub fn emit(&self) {
+        print!("{}", self.table());
+        let dir = Path::new("target/bench-reports");
+        let _ = std::fs::create_dir_all(dir);
+        let path = dir.join(format!("{}.json", self.id));
+        match std::fs::write(&path, self.to_json().pretty()) {
+            Ok(()) => println!("(report: {})\n", path.display()),
+            Err(e) => eprintln!("warn: {}: {e}", path.display()),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_renders_union_of_columns() {
+        let mut r = Report::new("t", "Test");
+        r.row("a", &[("x", 1.0), ("y", 2.0)]);
+        r.row("b", &[("y", 3.0), ("z", 4.0)]);
+        let t = r.table();
+        assert!(t.contains("x"));
+        assert!(t.contains("z"));
+        assert!(t.contains('-'), "missing metric shown as dash");
+    }
+
+    #[test]
+    fn get_retrieves_values() {
+        let mut r = Report::new("t", "Test");
+        r.row("speedup", &[("flicker", 1.5)]);
+        assert_eq!(r.get("speedup", "flicker"), Some(1.5));
+        assert_eq!(r.get("speedup", "nope"), None);
+        assert_eq!(r.get("nope", "flicker"), None);
+    }
+
+    #[test]
+    fn json_shape() {
+        let mut r = Report::new("fig9", "FIFO sweep");
+        r.row("depth=16", &[("speedup", 1.3)]);
+        let j = r.to_json();
+        assert_eq!(j.at(&["id"]).unwrap().as_str(), Some("fig9"));
+        assert_eq!(j.at(&["rows"]).unwrap().as_arr().unwrap().len(), 1);
+    }
+}

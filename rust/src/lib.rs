@@ -1,0 +1,32 @@
+//! # FLICKER — fine-grained contribution-aware 3DGS accelerator (reproduction)
+//!
+//! Full-system reproduction of *FLICKER: A Fine-Grained Contribution-Aware
+//! Accelerator for Real-Time 3D Gaussian Splatting* as a three-layer
+//! Rust + JAX + Pallas stack:
+//!
+//! * [`scene`], [`camera`], [`render`] — the 3DGS substrate: synthetic
+//!   datasets, EWA projection, tiling/intersection, depth sort, the
+//!   reference rasterizer (golden model), and quality metrics.
+//! * [`cat`] — the paper's algorithmic contribution (Sec. III): Mini-Tile
+//!   CAT with adaptive leader pixels, pixel-rectangle grouping (Alg. 1),
+//!   and the mixed-precision FP16→FP8 test path.
+//! * [`sim`] — the paper's hardware contribution (Sec. IV): cycle-accurate
+//!   simulator of the FLICKER accelerator (preprocessing cores, sorters,
+//!   CTUs, rendering cores with VRUs and feature FIFOs, LPDDR4 DRAM,
+//!   energy and area models) plus the GSCore and edge-GPU baselines.
+//! * [`runtime`], [`coordinator`] — the Layer-3 driver: PJRT client that
+//!   loads the AOT-compiled JAX/Pallas artifacts (`artifacts/*.hlo.txt`)
+//!   and the frame coordinator that schedules tile work across backends.
+//! * [`util`], [`numeric`] — in-tree substrates (RNG, JSON, CLI, bench
+//!   harness, property tests, FP16/FP8 emulation, linear algebra).
+
+pub mod camera;
+pub mod cat;
+pub mod config;
+pub mod coordinator;
+pub mod numeric;
+pub mod render;
+pub mod runtime;
+pub mod scene;
+pub mod sim;
+pub mod util;

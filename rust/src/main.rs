@@ -1,0 +1,278 @@
+//! `flicker` CLI — the Layer-3 entry point.
+//!
+//! Subcommands:
+//!   render    Render an orbit through a backend (golden | golden-cat | pjrt)
+//!             and write PPM frames + metrics.
+//!   simulate  Run the cycle-accurate simulator on a scene/hardware preset.
+//!   sweep     FIFO-depth sweep (Fig. 9 style) on one scene.
+//!   quality   PSNR/SSIM of CAT modes vs the vanilla render (Table I style).
+//!   area      Print the area model breakdown (Table II style).
+//!   info      Print scene/workload statistics.
+
+use anyhow::{anyhow, Result};
+use flicker::camera::Camera;
+use flicker::cat::{CatConfig, CatEngine, LeaderMode, Precision};
+use flicker::config::ExperimentConfig;
+use flicker::coordinator::report::Report;
+use flicker::coordinator::{render_frame, Backend, FrameRequest};
+use flicker::render::metrics::{psnr, ssim};
+use flicker::render::raster::RenderOptions;
+use flicker::sim::area::{area, AreaParams};
+use flicker::sim::top::simulate_frame;
+use flicker::sim::HwConfig;
+use flicker::util::cli::Args;
+
+const USAGE: &str = "\
+flicker — contribution-aware 3DGS accelerator (paper reproduction)
+
+USAGE: flicker <command> [options]
+
+COMMANDS
+  render    --scene S --resolution N --backend golden|golden-cat|pjrt
+            [--out-dir D] [--frames K] [--cat-mode M] [--precision P]
+  simulate  --scene S --hardware H [--fifo-depth D] [--frames K] [--prune]
+  sweep     --scene S --depths 1,2,4,...  FIFO-depth sweep
+  quality   --scene S [--prune]           PSNR/SSIM of CAT modes
+  area      [--hardware H]                area model breakdown
+  info      --scene S                     scene & workload statistics
+
+COMMON OPTIONS
+  --scene        garden|truck|train|bicycle|stump|flowers|playroom|drjohnson
+                 or a path to a .gsz file              (default garden)
+  --scene-scale  fraction of full scene size           (default 0.05, env FLICKER_SCENE_SCALE)
+  --resolution   square render size in px              (default 256)
+  --hardware     flicker32|flicker32-sparse|simplified32|simplified64|gscore64
+";
+
+fn main() {
+    let args = Args::from_env(&["prune", "help", "verbose"]);
+    let code = match run(&args) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e:#}");
+            1
+        }
+    };
+    std::process::exit(code);
+}
+
+fn run(args: &Args) -> Result<()> {
+    if args.flag("help") || args.command.is_none() {
+        println!("{USAGE}");
+        return Ok(());
+    }
+    match args.command.as_deref().unwrap() {
+        "render" => cmd_render(args),
+        "simulate" => cmd_simulate(args),
+        "sweep" => cmd_sweep(args),
+        "quality" => cmd_quality(args),
+        "area" => cmd_area(args),
+        "info" => cmd_info(args),
+        other => Err(anyhow!("unknown command '{other}'\n{USAGE}")),
+    }
+}
+
+fn prepared_scene(cfg: &ExperimentConfig) -> Result<flicker::scene::gaussian::Scene> {
+    let mut scene = cfg.build_scene()?;
+    if cfg.prune {
+        let views = cfg.build_cameras();
+        let rep = flicker::scene::pruning::prune(
+            &mut scene,
+            &views,
+            &flicker::scene::pruning::PruneConfig::default(),
+        );
+        println!("pruned {} → {} gaussians", rep.before, rep.after);
+    }
+    Ok(scene)
+}
+
+fn cmd_render(args: &Args) -> Result<()> {
+    let cfg = ExperimentConfig::from_args(args)?;
+    let scene = prepared_scene(&cfg)?;
+    let cams = cfg.build_cameras();
+    let backend_name = args.str_or("backend", "golden");
+    let out_dir = std::path::PathBuf::from(args.str_or("out-dir", "target/frames"));
+    std::fs::create_dir_all(&out_dir)?;
+
+    let rt;
+    let mut backend = match backend_name.as_str() {
+        "golden" => Backend::Golden,
+        "golden-cat" => {
+            let mode = LeaderMode::parse(&args.str_or("cat-mode", "adaptive"))
+                .ok_or_else(|| anyhow!("bad --cat-mode"))?;
+            let precision = Precision::parse(&args.str_or("precision", "mixed"))
+                .ok_or_else(|| anyhow!("bad --precision"))?;
+            Backend::GoldenCat(CatConfig {
+                mode,
+                precision,
+                stage1: true,
+            })
+        }
+        "pjrt" => {
+            rt = flicker::runtime::Runtime::load(&flicker::runtime::default_artifact_dir())?;
+            println!("pjrt platform: {}", rt.platform());
+            Backend::Pjrt(&rt)
+        }
+        other => return Err(anyhow!("unknown backend '{other}'")),
+    };
+
+    let mut report = Report::new("render", &format!("render {} ({backend_name})", scene.name));
+    report.set_provenance(cfg.to_json());
+    for (i, cam) in cams.iter().enumerate() {
+        let req = FrameRequest {
+            scene: &scene,
+            camera: cam,
+            options: RenderOptions::default(),
+        };
+        let m = render_frame(&req, &mut backend)?;
+        let path = out_dir.join(format!("{}_{i:03}.ppm", scene.name));
+        m.image.write_ppm(&path)?;
+        println!(
+            "frame {i}: {:.1} ms, {} splats, {} tile-pairs → {}",
+            m.wall_ms,
+            m.stats.splats,
+            m.stats.tile_pairs,
+            path.display()
+        );
+        report.row(
+            &format!("frame{i}"),
+            &[
+                ("wall_ms", m.wall_ms),
+                ("splats", m.stats.splats as f64),
+                ("tile_pairs", m.stats.tile_pairs as f64),
+                ("pp_tested", m.stats.per_pixel_tested()),
+            ],
+        );
+    }
+    report.emit();
+    Ok(())
+}
+
+fn cmd_simulate(args: &Args) -> Result<()> {
+    let cfg = ExperimentConfig::from_args(args)?;
+    let scene = prepared_scene(&cfg)?;
+    let cams = cfg.build_cameras();
+    let hw = cfg.build_hw()?;
+    let mut report = Report::new(
+        "simulate",
+        &format!("simulate {} on {}", scene.name, hw.name),
+    );
+    report.set_provenance(cfg.to_json());
+    for (i, cam) in cams.iter().enumerate() {
+        let r = simulate_frame(&scene, cam, &hw);
+        println!(
+            "frame {i}: {} render-cycles, {:.2} ms, {:.1} fps, stall {:.1}%, {:.1} µJ",
+            r.render_cycles,
+            r.frame_ms,
+            r.fps,
+            r.pipe.stall_rate() * 100.0,
+            r.energy.total_uj()
+        );
+        report.row(
+            &format!("frame{i}"),
+            &[
+                ("render_cycles", r.render_cycles as f64),
+                ("frame_ms", r.frame_ms),
+                ("fps", r.fps),
+                ("stall_rate", r.pipe.stall_rate()),
+                ("energy_uj", r.energy.total_uj()),
+                ("dram_mb", r.traffic.total() as f64 / 1e6),
+            ],
+        );
+    }
+    report.emit();
+    Ok(())
+}
+
+fn cmd_sweep(args: &Args) -> Result<()> {
+    let cfg = ExperimentConfig::from_args(args)?;
+    let scene = prepared_scene(&cfg)?;
+    let cam = &cfg.build_cameras()[0];
+    let depths = args.u64_list_or("depths", &[1, 2, 4, 8, 16, 32, 64, 128])?;
+    let base_hw = cfg.build_hw()?;
+    let wl = flicker::sim::workload::extract(&scene, cam, &base_hw);
+    let mut report = Report::new("sweep", &format!("FIFO sweep on {}", scene.name));
+    report.set_provenance(cfg.to_json());
+    let mut base_cycles = None;
+    for d in depths {
+        let hw = HwConfig {
+            fifo_depth: d as usize,
+            ..base_hw.clone()
+        };
+        let r = flicker::sim::top::simulate_workload(&scene, cam, &hw, wl.clone());
+        let base = *base_cycles.get_or_insert(r.render_cycles as f64);
+        report.row(
+            &format!("depth={d}"),
+            &[
+                ("speedup", base / r.render_cycles as f64),
+                ("stall_rate", r.pipe.stall_rate()),
+                ("cycles", r.render_cycles as f64),
+            ],
+        );
+    }
+    report.emit();
+    Ok(())
+}
+
+fn cmd_quality(args: &Args) -> Result<()> {
+    let cfg = ExperimentConfig::from_args(args)?;
+    let scene = prepared_scene(&cfg)?;
+    let cam = &cfg.build_cameras()[0];
+    let opts = RenderOptions::default();
+    let golden = flicker::render::raster::render(&scene, cam, &opts);
+    let mut report = Report::new("quality", &format!("CAT quality on {}", scene.name));
+    report.set_provenance(cfg.to_json());
+    for (name, mode, precision) in [
+        ("uniform-dense", LeaderMode::UniformDense, Precision::Fp32),
+        ("uniform-sparse", LeaderMode::UniformSparse, Precision::Fp32),
+        ("adaptive", LeaderMode::SmoothFocused, Precision::Fp32),
+        ("adaptive-mixed", LeaderMode::SmoothFocused, Precision::Mixed),
+        ("adaptive-fp8", LeaderMode::SmoothFocused, Precision::Fp8),
+    ] {
+        let mut engine = CatEngine::new(CatConfig {
+            mode,
+            precision,
+            stage1: true,
+        });
+        let out = flicker::render::raster::render_masked(&scene, cam, &opts, &mut engine, None);
+        report.row(
+            name,
+            &[
+                ("psnr", psnr(&golden.image, &out.image)),
+                ("ssim", ssim(&golden.image, &out.image)),
+                ("pp_tested", out.stats.per_pixel_tested()),
+            ],
+        );
+    }
+    report.emit();
+    Ok(())
+}
+
+fn cmd_area(args: &Args) -> Result<()> {
+    let name = args.str_or("hardware", "flicker32");
+    let hw = HwConfig::by_name(&name).ok_or_else(|| anyhow!("unknown hardware '{name}'"))?;
+    let r = area(&hw, &AreaParams::default());
+    let mut report = Report::new("area", &format!("area breakdown: {}", hw.name));
+    for (component, mm2, share) in r.rows() {
+        report.row(component, &[("mm2", mm2), ("share", share)]);
+    }
+    report.row("TOTAL", &[("mm2", r.total_mm2()), ("share", 1.0)]);
+    report.emit();
+    Ok(())
+}
+
+fn cmd_info(args: &Args) -> Result<()> {
+    let cfg = ExperimentConfig::from_args(args)?;
+    let scene = cfg.build_scene()?;
+    let cam: &Camera = &cfg.build_cameras()[0];
+    let hw = cfg.build_hw()?;
+    let wl = flicker::sim::workload::extract(&scene, cam, &hw);
+    println!("scene {}: {} gaussians", scene.name, scene.len());
+    println!("  spiky fraction (ratio≥3): {:.2}", scene.spiky_fraction(3.0));
+    println!("  visible splats: {}", wl.visible_splats);
+    println!("  tile pairs: {}", wl.tile_pairs);
+    println!("  stage1 pairs: {} → stage2: {}", wl.stage1_pairs, wl.stage2_pairs);
+    println!("  minitile pairs: {}", wl.minitile_pairs);
+    println!("  per-pixel processed: {:.2}", wl.per_pixel_processed());
+    Ok(())
+}

@@ -1,0 +1,212 @@
+//! IEEE 754 binary16 (half precision) software emulation.
+//!
+//! FLICKER's CTU computes pixel–Gaussian coordinate deltas in FP16 before
+//! converting to FP8 (paper Sec. IV-C). We model the exact numerics in
+//! software: round-to-nearest-even conversion, subnormals, infinities.
+
+/// A 16-bit IEEE half-precision float stored as raw bits.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct F16(pub u16);
+
+impl F16 {
+    pub const ZERO: F16 = F16(0);
+    pub const ONE: F16 = F16(0x3C00);
+    pub const INFINITY: F16 = F16(0x7C00);
+    pub const NEG_INFINITY: F16 = F16(0xFC00);
+    pub const MAX: F16 = F16(0x7BFF); // 65504
+    /// Smallest positive normal (2^-14).
+    pub const MIN_POSITIVE: F16 = F16(0x0400);
+
+    /// Convert from f32 with round-to-nearest-even (matches hardware FCVT).
+    pub fn from_f32(x: f32) -> F16 {
+        let bits = x.to_bits();
+        let sign = ((bits >> 16) & 0x8000) as u16;
+        let exp = ((bits >> 23) & 0xFF) as i32;
+        let man = bits & 0x7F_FFFF;
+
+        if exp == 0xFF {
+            // Inf / NaN
+            return if man == 0 {
+                F16(sign | 0x7C00)
+            } else {
+                F16(sign | 0x7E00) // quiet NaN
+            };
+        }
+
+        // Unbiased exponent, rebiased for half (bias 15).
+        let e = exp - 127 + 15;
+        if e >= 0x1F {
+            // Overflow → infinity.
+            return F16(sign | 0x7C00);
+        }
+        if e <= 0 {
+            // Subnormal or underflow to zero.
+            if e < -10 {
+                return F16(sign);
+            }
+            // Implicit leading 1, shifted into subnormal position.
+            let man = man | 0x80_0000;
+            let shift = (14 - e) as u32; // 14..24
+            let half_ulp = 1u32 << (shift - 1);
+            let rounded = man + half_ulp - 1 + ((man >> shift) & 1);
+            return F16(sign | (rounded >> shift) as u16);
+        }
+        // Normal: round mantissa from 23 to 10 bits, RNE.
+        let half_ulp = 0x0FFF + ((man >> 13) & 1);
+        let man_r = man + half_ulp;
+        if man_r & 0x80_0000 != 0 {
+            // Mantissa overflow bumps exponent.
+            let e2 = e + 1;
+            if e2 >= 0x1F {
+                return F16(sign | 0x7C00);
+            }
+            return F16(sign | ((e2 as u16) << 10));
+        }
+        F16(sign | ((e as u16) << 10) | (man_r >> 13) as u16)
+    }
+
+    /// Exact widening conversion to f32.
+    pub fn to_f32(self) -> f32 {
+        let sign = ((self.0 & 0x8000) as u32) << 16;
+        let exp = ((self.0 >> 10) & 0x1F) as u32;
+        let man = (self.0 & 0x3FF) as u32;
+        let bits = if exp == 0 {
+            if man == 0 {
+                sign
+            } else {
+                // Subnormal: value = man · 2⁻²⁴, exact in f32.
+                let v = man as f32 * 2.0f32.powi(-24);
+                return if sign != 0 { -v } else { v };
+            }
+        } else if exp == 0x1F {
+            sign | 0x7F80_0000 | (man << 13)
+        } else {
+            sign | ((exp + 127 - 15) << 23) | (man << 13)
+        };
+        f32::from_bits(bits)
+    }
+
+    pub fn is_nan(self) -> bool {
+        (self.0 & 0x7C00) == 0x7C00 && (self.0 & 0x3FF) != 0
+    }
+
+    pub fn is_infinite(self) -> bool {
+        (self.0 & 0x7FFF) == 0x7C00
+    }
+}
+
+/// Round-trip an f32 through FP16 (the "compute in FP16" primitive used by
+/// the mixed-precision CAT model).
+#[inline]
+pub fn quantize_f16(x: f32) -> f32 {
+    F16::from_f32(x).to_f32()
+}
+
+/// FP16 arithmetic = compute in f32, round result to FP16 (what an FP16 FPU
+/// with RNE does for single ops).
+#[inline]
+pub fn add_f16(a: f32, b: f32) -> f32 {
+    quantize_f16(quantize_f16(a) + quantize_f16(b))
+}
+
+#[inline]
+pub fn mul_f16(a: f32, b: f32) -> f32 {
+    quantize_f16(quantize_f16(a) * quantize_f16(b))
+}
+
+#[inline]
+pub fn sub_f16(a: f32, b: f32) -> f32 {
+    quantize_f16(quantize_f16(a) - quantize_f16(b))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exact_small_integers() {
+        for i in -2048i32..=2048 {
+            let x = i as f32;
+            assert_eq!(quantize_f16(x), x, "{i}");
+        }
+    }
+
+    #[test]
+    fn one_and_simple_fractions() {
+        assert_eq!(F16::ONE.to_f32(), 1.0);
+        assert_eq!(quantize_f16(0.5), 0.5);
+        assert_eq!(quantize_f16(0.25), 0.25);
+        assert_eq!(quantize_f16(1.5), 1.5);
+    }
+
+    #[test]
+    fn max_and_overflow() {
+        assert_eq!(F16::MAX.to_f32(), 65504.0);
+        assert_eq!(quantize_f16(65504.0), 65504.0);
+        assert!(F16::from_f32(1e6).is_infinite());
+        assert!(F16::from_f32(-1e6).is_infinite());
+        assert_eq!(F16::from_f32(-1e6), F16::NEG_INFINITY);
+    }
+
+    #[test]
+    fn subnormals() {
+        let min_sub = 2.0f32.powi(-24);
+        assert_eq!(quantize_f16(min_sub), min_sub);
+        assert_eq!(quantize_f16(min_sub * 3.0), min_sub * 3.0);
+        // Below half of min subnormal → flush to zero (RNE).
+        assert_eq!(quantize_f16(min_sub * 0.4), 0.0);
+    }
+
+    #[test]
+    fn round_to_nearest_even() {
+        // 1 + 2^-11 is exactly halfway between 1.0 and 1+2^-10: rounds to even (1.0).
+        let x = 1.0 + 2.0f32.powi(-11);
+        assert_eq!(quantize_f16(x), 1.0);
+        // 1 + 3*2^-11 is halfway between 1+2^-10 and 1+2^-9: rounds to even (1+2^-9).
+        let y = 1.0 + 3.0 * 2.0f32.powi(-11);
+        assert_eq!(quantize_f16(y), 1.0 + 2.0f32.powi(-9));
+    }
+
+    #[test]
+    fn nan_propagates() {
+        assert!(F16::from_f32(f32::NAN).is_nan());
+        assert!(F16::from_f32(f32::NAN).to_f32().is_nan());
+    }
+
+    #[test]
+    fn sign_preserved() {
+        assert_eq!(quantize_f16(-1.5), -1.5);
+        assert_eq!(F16::from_f32(-0.0).0, 0x8000);
+    }
+
+    #[test]
+    fn roundtrip_is_idempotent() {
+        let mut rng = crate::util::rng::Pcg32::new(21);
+        for _ in 0..10_000 {
+            let x = rng.range_f32(-100.0, 100.0);
+            let q = quantize_f16(x);
+            assert_eq!(quantize_f16(q), q);
+        }
+    }
+
+    #[test]
+    fn relative_error_bound_normals() {
+        let mut rng = crate::util::rng::Pcg32::new(22);
+        for _ in 0..10_000 {
+            let x = rng.range_f32(0.001, 1000.0);
+            let q = quantize_f16(x);
+            let rel = ((q - x) / x).abs();
+            assert!(rel <= 1.0 / 1024.0, "x={x} q={q} rel={rel}");
+        }
+    }
+
+    #[test]
+    fn fp16_ops_quantize_inputs_and_result() {
+        // (a+b) computed in fp16 differs from f32 when the sum needs >11 bits.
+        let a = 2048.0f32;
+        let b = 1.0f32;
+        assert_eq!(add_f16(a, b), 2048.0); // 2049 not representable
+        assert_eq!(mul_f16(3.0, 0.5), 1.5);
+        assert_eq!(sub_f16(5.0, 2.0), 3.0);
+    }
+}

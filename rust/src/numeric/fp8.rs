@@ -1,0 +1,316 @@
+//! FP8 software emulation: E4M3 (default) and E5M2.
+//!
+//! The mixed-precision PRTU converts FP16 coordinate deltas to FP8 for the
+//! quadratic-form accumulation (paper Sec. IV-C, lines 2–7 of Alg. 1).
+//! E4M3 follows the OCP FP8 spec: bias 7, no infinities, 0x7F = NaN,
+//! max finite = 448. E5M2 is IEEE-like: bias 15, has infinities, max 57344.
+
+/// FP8 format descriptor.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Fp8Format {
+    E4M3,
+    E5M2,
+}
+
+impl Fp8Format {
+    fn mantissa_bits(self) -> u32 {
+        match self {
+            Fp8Format::E4M3 => 3,
+            Fp8Format::E5M2 => 2,
+        }
+    }
+
+    fn exp_bits(self) -> u32 {
+        match self {
+            Fp8Format::E4M3 => 4,
+            Fp8Format::E5M2 => 5,
+        }
+    }
+
+    fn bias(self) -> i32 {
+        match self {
+            Fp8Format::E4M3 => 7,
+            Fp8Format::E5M2 => 15,
+        }
+    }
+
+    /// Largest finite magnitude.
+    pub fn max_finite(self) -> f32 {
+        match self {
+            Fp8Format::E4M3 => 448.0,
+            Fp8Format::E5M2 => 57344.0,
+        }
+    }
+
+    /// Smallest positive subnormal.
+    pub fn min_subnormal(self) -> f32 {
+        match self {
+            Fp8Format::E4M3 => 2.0f32.powi(-9),  // 2^-6 * 2^-3
+            Fp8Format::E5M2 => 2.0f32.powi(-16), // 2^-14 * 2^-2
+        }
+    }
+}
+
+/// Encode f32 → 8-bit code, round-to-nearest-even, saturating at max finite
+/// (saturation matches accelerator convert units; E4M3 has no Inf anyway).
+pub fn encode(x: f32, fmt: Fp8Format) -> u8 {
+    let mb = fmt.mantissa_bits();
+    let bias = fmt.bias();
+    let sign: u8 = if x.is_sign_negative() { 0x80 } else { 0 };
+    if x.is_nan() {
+        return match fmt {
+            Fp8Format::E4M3 => sign | 0x7F,
+            Fp8Format::E5M2 => sign | 0x7E,
+        };
+    }
+    let ax = x.abs();
+    if ax == 0.0 {
+        return sign;
+    }
+    if ax >= fmt.max_finite() {
+        // Saturate (hardware convert behaviour).
+        return match fmt {
+            Fp8Format::E4M3 => sign | 0x7E,                  // 448
+            Fp8Format::E5M2 => sign | 0x7B,                  // 57344
+        };
+    }
+    let bits = ax.to_bits();
+    let e32 = ((bits >> 23) & 0xFF) as i32 - 127;
+    let m32 = bits & 0x7F_FFFF;
+    let e8 = e32 + bias;
+    if e8 >= 1 {
+        // Normal.
+        let shift = 23 - mb;
+        let half = (1u32 << (shift - 1)) - 1 + ((m32 >> shift) & 1);
+        let m_r = m32 + half;
+        let (e8, m_r) = if m_r & 0x80_0000 != 0 {
+            (e8 + 1, 0)
+        } else {
+            (e8, m_r >> shift)
+        };
+        let max_exp = (1 << fmt.exp_bits()) - 1;
+        // Check E4M3 top-of-range: exp=15 mantissa=7 is NaN, so 448=0x7E is max.
+        let code = ((e8 as u32) << mb) | m_r;
+        let max_code: u32 = match fmt {
+            Fp8Format::E4M3 => 0x7E,
+            Fp8Format::E5M2 => 0x7B,
+        };
+        if e8 > max_exp || code > max_code {
+            return sign | max_code as u8;
+        }
+        sign | code as u8
+    } else {
+        // Subnormal: value = m * 2^(1-bias-mb).
+        let min_sub = fmt.min_subnormal();
+        let q = ax / min_sub;
+        let m = q.round_ties_even() as u32;
+        let max_sub = (1u32 << mb) - 1;
+        if m > max_sub {
+            // Rounds up into the smallest normal (exponent 1, mantissa 0).
+            return sign | (1u8 << mb);
+        }
+        sign | m as u8
+    }
+}
+
+/// Decode 8-bit code → f32 (exact).
+pub fn decode(code: u8, fmt: Fp8Format) -> f32 {
+    let mb = fmt.mantissa_bits();
+    let bias = fmt.bias();
+    let sign = if code & 0x80 != 0 { -1.0f32 } else { 1.0 };
+    let e = ((code >> mb) & ((1 << fmt.exp_bits()) - 1)) as i32;
+    let m = (code & ((1 << mb) - 1)) as u32;
+    match fmt {
+        Fp8Format::E4M3 => {
+            if e == 0xF && m == 0x7 {
+                return f32::NAN * sign;
+            }
+        }
+        Fp8Format::E5M2 => {
+            if e == 0x1F {
+                return if m == 0 {
+                    sign * f32::INFINITY
+                } else {
+                    f32::NAN
+                };
+            }
+        }
+    }
+    if e == 0 {
+        sign * (m as f32) * fmt.min_subnormal()
+    } else {
+        let frac = 1.0 + (m as f32) / (1 << mb) as f32;
+        sign * frac * 2.0f32.powi(e - bias)
+    }
+}
+
+/// Round-trip through FP8 (the quantization primitive used by the
+/// mixed-precision CAT model and the Pallas kernel emulation).
+/// E4M3 uses a direct bit-level rounding (§Perf: the CAT hot loop calls
+/// this ~12× per PR; the encode/decode pair was the profile leader).
+/// Equivalence with the codec path is asserted by `fast_path_matches_codec`.
+#[inline]
+pub fn quantize_fp8(x: f32, fmt: Fp8Format) -> f32 {
+    match fmt {
+        Fp8Format::E4M3 => round_e4m3(x),
+        Fp8Format::E5M2 => decode(encode(x, fmt), fmt),
+    }
+}
+
+/// Branch-light round-to-nearest-even of an f32 to the E4M3 value set,
+/// saturating at ±448 (hardware convert semantics).
+#[inline]
+fn round_e4m3(x: f32) -> f32 {
+    if x.is_nan() {
+        return x;
+    }
+    let ax = x.abs();
+    if ax >= 448.0 {
+        return 448.0_f32.copysign(x);
+    }
+    const MIN_NORMAL: f32 = 0.015625; // 2⁻⁶
+    if ax < MIN_NORMAL {
+        // Subnormals: multiples of 2⁻⁹; RNE via round_ties_even.
+        let q = (ax * 512.0).round_ties_even() * (1.0 / 512.0);
+        return q.copysign(x);
+    }
+    // Normals: RNE the f32 mantissa down to 3 bits; carries propagate into
+    // the exponent naturally through the integer add.
+    const SHIFT: u32 = 23 - 3;
+    let bits = ax.to_bits();
+    let half = (1u32 << (SHIFT - 1)) - 1 + ((bits >> SHIFT) & 1);
+    let r = (bits + half) & !((1u32 << SHIFT) - 1);
+    let q = f32::from_bits(r).min(448.0);
+    q.copysign(x)
+}
+
+/// FP8 multiply: quantize inputs, multiply, quantize result.
+#[inline]
+pub fn mul_fp8(a: f32, b: f32, fmt: Fp8Format) -> f32 {
+    quantize_fp8(quantize_fp8(a, fmt) * quantize_fp8(b, fmt), fmt)
+}
+
+/// FP8-input multiply with wider (FP16) accumulate, as in the Quarda
+/// Accumulation Unit: products formed from FP8 operands, accumulated at
+/// FP16 precision.
+#[inline]
+pub fn qau_mac(acc: f32, a: f32, b: f32, fmt: Fp8Format) -> f32 {
+    crate::numeric::fp16::quantize_f16(acc + quantize_fp8(a, fmt) * quantize_fp8(b, fmt))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn e4m3_exact_values() {
+        // All powers of two in normal range are exact.
+        for p in -6..=8 {
+            let x = 2.0f32.powi(p);
+            assert_eq!(quantize_fp8(x, Fp8Format::E4M3), x, "2^{p}");
+        }
+        assert_eq!(quantize_fp8(448.0, Fp8Format::E4M3), 448.0);
+        assert_eq!(quantize_fp8(1.5, Fp8Format::E4M3), 1.5);
+        assert_eq!(quantize_fp8(-1.75, Fp8Format::E4M3), -1.75);
+    }
+
+    #[test]
+    fn e4m3_saturates_not_inf() {
+        assert_eq!(quantize_fp8(1e9, Fp8Format::E4M3), 448.0);
+        assert_eq!(quantize_fp8(-1e9, Fp8Format::E4M3), -448.0);
+        assert_eq!(quantize_fp8(500.0, Fp8Format::E4M3), 448.0);
+    }
+
+    #[test]
+    fn e5m2_range() {
+        assert_eq!(quantize_fp8(57344.0, Fp8Format::E5M2), 57344.0);
+        assert_eq!(quantize_fp8(1e9, Fp8Format::E5M2), 57344.0);
+        assert_eq!(quantize_fp8(2.0f32.powi(-14), Fp8Format::E5M2), 2.0f32.powi(-14));
+    }
+
+    #[test]
+    fn subnormals_e4m3() {
+        let s = Fp8Format::E4M3.min_subnormal();
+        for k in 0..8 {
+            let x = s * k as f32;
+            assert_eq!(quantize_fp8(x, Fp8Format::E4M3), x, "k={k}");
+        }
+        // Tiny values flush toward zero/min-subnormal.
+        assert_eq!(quantize_fp8(s * 0.4, Fp8Format::E4M3), 0.0);
+        assert_eq!(quantize_fp8(s * 0.6, Fp8Format::E4M3), s);
+    }
+
+    #[test]
+    fn all_codes_roundtrip() {
+        for fmt in [Fp8Format::E4M3, Fp8Format::E5M2] {
+            for code in 0u16..=255 {
+                let code = code as u8;
+                let x = decode(code, fmt);
+                if x.is_nan() {
+                    continue;
+                }
+                if fmt == Fp8Format::E5M2 && x.is_infinite() {
+                    continue; // encode saturates, never emits Inf
+                }
+                let back = encode(x, fmt);
+                // -0 and +0 both acceptable.
+                if x == 0.0 {
+                    assert_eq!(back & 0x7F, 0);
+                } else {
+                    assert_eq!(back, code, "fmt {fmt:?} code {code:#x} val {x}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn rne_ties() {
+        // Halfway between 1.0 and 1.125 (E4M3 step 1/8): 1.0625 → 1.0 (even).
+        assert_eq!(quantize_fp8(1.0625, Fp8Format::E4M3), 1.0);
+        // Halfway between 1.125 and 1.25: 1.1875 → 1.25 (even mantissa).
+        assert_eq!(quantize_fp8(1.1875, Fp8Format::E4M3), 1.25);
+    }
+
+    #[test]
+    fn relative_error_bound() {
+        let mut rng = crate::util::rng::Pcg32::new(33);
+        for _ in 0..10_000 {
+            let x = rng.range_f32(0.02, 400.0);
+            let q = quantize_fp8(x, Fp8Format::E4M3);
+            let rel = ((q - x) / x).abs();
+            assert!(rel <= 1.0 / 16.0 + 1e-6, "x={x} q={q}");
+        }
+    }
+
+    #[test]
+    fn qau_mac_behaves() {
+        let acc = qau_mac(0.0, 1.5, 2.0, Fp8Format::E4M3);
+        assert_eq!(acc, 3.0);
+        // Inputs get quantized before multiply.
+        let acc2 = qau_mac(0.0, 1.01, 1.0, Fp8Format::E4M3);
+        assert_eq!(acc2, 1.0);
+    }
+
+    #[test]
+    fn fast_path_matches_codec() {
+        // round_e4m3 must agree with decode(encode(x)) everywhere.
+        let mut rng = crate::util::rng::Pcg32::new(44);
+        for _ in 0..200_000 {
+            let x = match rng.below(4) {
+                0 => rng.range_f32(-500.0, 500.0),
+                1 => rng.range_f32(-1.0, 1.0),
+                2 => rng.range_f32(-0.02, 0.02),
+                _ => rng.range_f32(-0.002, 0.002),
+            };
+            let fast = quantize_fp8(x, Fp8Format::E4M3);
+            let slow = decode(encode(x, Fp8Format::E4M3), Fp8Format::E4M3);
+            assert_eq!(fast.to_bits(), slow.to_bits(), "x={x}");
+        }
+    }
+
+    #[test]
+    fn nan_handling() {
+        assert!(decode(encode(f32::NAN, Fp8Format::E4M3), Fp8Format::E4M3).is_nan());
+        assert!(decode(encode(f32::NAN, Fp8Format::E5M2), Fp8Format::E5M2).is_nan());
+    }
+}

@@ -1,0 +1,388 @@
+//! Small fixed-size linear algebra for splatting math: Vec2/3/4, Mat2/3,
+//! quaternions. Only what projection and CAT need — no generic dimensions.
+
+use std::ops::{Add, Div, Mul, Neg, Sub};
+
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct Vec2 {
+    pub x: f32,
+    pub y: f32,
+}
+
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct Vec3 {
+    pub x: f32,
+    pub y: f32,
+    pub z: f32,
+}
+
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct Vec4 {
+    pub x: f32,
+    pub y: f32,
+    pub z: f32,
+    pub w: f32,
+}
+
+/// Symmetric 2×2 matrix (covariance / conic): [[a, b], [b, c]].
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct Sym2 {
+    pub a: f32,
+    pub b: f32,
+    pub c: f32,
+}
+
+/// Row-major 3×3.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Mat3(pub [f32; 9]);
+
+/// Unit quaternion (w, x, y, z).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Quat {
+    pub w: f32,
+    pub x: f32,
+    pub y: f32,
+    pub z: f32,
+}
+
+pub const fn v2(x: f32, y: f32) -> Vec2 {
+    Vec2 { x, y }
+}
+
+pub const fn v3(x: f32, y: f32, z: f32) -> Vec3 {
+    Vec3 { x, y, z }
+}
+
+impl Vec2 {
+    pub fn dot(self, o: Vec2) -> f32 {
+        self.x * o.x + self.y * o.y
+    }
+
+    pub fn norm(self) -> f32 {
+        self.dot(self).sqrt()
+    }
+}
+
+impl Add for Vec2 {
+    type Output = Vec2;
+    fn add(self, o: Vec2) -> Vec2 {
+        v2(self.x + o.x, self.y + o.y)
+    }
+}
+
+impl Sub for Vec2 {
+    type Output = Vec2;
+    fn sub(self, o: Vec2) -> Vec2 {
+        v2(self.x - o.x, self.y - o.y)
+    }
+}
+
+impl Mul<f32> for Vec2 {
+    type Output = Vec2;
+    fn mul(self, s: f32) -> Vec2 {
+        v2(self.x * s, self.y * s)
+    }
+}
+
+impl Vec3 {
+    pub fn dot(self, o: Vec3) -> f32 {
+        self.x * o.x + self.y * o.y + self.z * o.z
+    }
+
+    pub fn cross(self, o: Vec3) -> Vec3 {
+        v3(
+            self.y * o.z - self.z * o.y,
+            self.z * o.x - self.x * o.z,
+            self.x * o.y - self.y * o.x,
+        )
+    }
+
+    pub fn norm(self) -> f32 {
+        self.dot(self).sqrt()
+    }
+
+    pub fn normalized(self) -> Vec3 {
+        let n = self.norm();
+        if n == 0.0 {
+            self
+        } else {
+            self * (1.0 / n)
+        }
+    }
+}
+
+impl Add for Vec3 {
+    type Output = Vec3;
+    fn add(self, o: Vec3) -> Vec3 {
+        v3(self.x + o.x, self.y + o.y, self.z + o.z)
+    }
+}
+
+impl Sub for Vec3 {
+    type Output = Vec3;
+    fn sub(self, o: Vec3) -> Vec3 {
+        v3(self.x - o.x, self.y - o.y, self.z - o.z)
+    }
+}
+
+impl Neg for Vec3 {
+    type Output = Vec3;
+    fn neg(self) -> Vec3 {
+        v3(-self.x, -self.y, -self.z)
+    }
+}
+
+impl Mul<f32> for Vec3 {
+    type Output = Vec3;
+    fn mul(self, s: f32) -> Vec3 {
+        v3(self.x * s, self.y * s, self.z * s)
+    }
+}
+
+impl Div<f32> for Vec3 {
+    type Output = Vec3;
+    fn div(self, s: f32) -> Vec3 {
+        self * (1.0 / s)
+    }
+}
+
+impl Sym2 {
+    pub fn det(self) -> f32 {
+        self.a * self.c - self.b * self.b
+    }
+
+    /// Inverse of a symmetric 2×2 (the "conic" of a 2D covariance).
+    pub fn inverse(self) -> Option<Sym2> {
+        let d = self.det();
+        if d.abs() < 1e-12 {
+            return None;
+        }
+        let inv = 1.0 / d;
+        Some(Sym2 {
+            a: self.c * inv,
+            b: -self.b * inv,
+            c: self.a * inv,
+        })
+    }
+
+    /// Quadratic form xᵀ M x.
+    pub fn quad(self, p: Vec2) -> f32 {
+        self.a * p.x * p.x + 2.0 * self.b * p.x * p.y + self.c * p.y * p.y
+    }
+
+    /// Eigenvalues (λmax, λmin); both real since symmetric.
+    pub fn eigenvalues(self) -> (f32, f32) {
+        let mid = 0.5 * (self.a + self.c);
+        let d = (0.25 * (self.a - self.c) * (self.a - self.c) + self.b * self.b).sqrt();
+        (mid + d, (mid - d).max(0.0))
+    }
+
+    /// Eigenvector of the larger eigenvalue (unit).
+    pub fn major_axis(self) -> Vec2 {
+        let (l1, _) = self.eigenvalues();
+        // (M - λI) v = 0 → v ∝ (b, λ-a) or (λ-c, b)
+        let v = if self.b.abs() > 1e-12 {
+            v2(self.b, l1 - self.a)
+        } else if self.a >= self.c {
+            v2(1.0, 0.0)
+        } else {
+            v2(0.0, 1.0)
+        };
+        let n = v.norm();
+        if n == 0.0 {
+            v2(1.0, 0.0)
+        } else {
+            v * (1.0 / n)
+        }
+    }
+}
+
+impl Mat3 {
+    pub const IDENTITY: Mat3 = Mat3([1.0, 0.0, 0.0, 0.0, 1.0, 0.0, 0.0, 0.0, 1.0]);
+
+    pub fn at(&self, r: usize, c: usize) -> f32 {
+        self.0[r * 3 + c]
+    }
+
+    pub fn mul_vec(&self, v: Vec3) -> Vec3 {
+        v3(
+            self.at(0, 0) * v.x + self.at(0, 1) * v.y + self.at(0, 2) * v.z,
+            self.at(1, 0) * v.x + self.at(1, 1) * v.y + self.at(1, 2) * v.z,
+            self.at(2, 0) * v.x + self.at(2, 1) * v.y + self.at(2, 2) * v.z,
+        )
+    }
+
+    pub fn mul(&self, o: &Mat3) -> Mat3 {
+        let mut out = [0.0f32; 9];
+        for r in 0..3 {
+            for c in 0..3 {
+                let mut s = 0.0;
+                for k in 0..3 {
+                    s += self.at(r, k) * o.at(k, c);
+                }
+                out[r * 3 + c] = s;
+            }
+        }
+        Mat3(out)
+    }
+
+    pub fn transpose(&self) -> Mat3 {
+        let m = &self.0;
+        Mat3([m[0], m[3], m[6], m[1], m[4], m[7], m[2], m[5], m[8]])
+    }
+
+    /// Diagonal scale matrix.
+    pub fn scale(s: Vec3) -> Mat3 {
+        Mat3([s.x, 0.0, 0.0, 0.0, s.y, 0.0, 0.0, 0.0, s.z])
+    }
+}
+
+impl Quat {
+    pub const IDENTITY: Quat = Quat {
+        w: 1.0,
+        x: 0.0,
+        y: 0.0,
+        z: 0.0,
+    };
+
+    pub fn normalized(self) -> Quat {
+        let n = (self.w * self.w + self.x * self.x + self.y * self.y + self.z * self.z).sqrt();
+        if n == 0.0 {
+            return Quat::IDENTITY;
+        }
+        Quat {
+            w: self.w / n,
+            x: self.x / n,
+            y: self.y / n,
+            z: self.z / n,
+        }
+    }
+
+    /// Axis-angle constructor (axis need not be unit).
+    pub fn from_axis_angle(axis: Vec3, angle: f32) -> Quat {
+        let a = axis.normalized();
+        let (s, c) = (angle * 0.5).sin_cos();
+        Quat {
+            w: c,
+            x: a.x * s,
+            y: a.y * s,
+            z: a.z * s,
+        }
+    }
+
+    /// Rotation matrix of a (normalized) quaternion.
+    pub fn to_mat3(self) -> Mat3 {
+        let Quat { w, x, y, z } = self.normalized();
+        Mat3([
+            1.0 - 2.0 * (y * y + z * z),
+            2.0 * (x * y - w * z),
+            2.0 * (x * z + w * y),
+            2.0 * (x * y + w * z),
+            1.0 - 2.0 * (x * x + z * z),
+            2.0 * (y * z - w * x),
+            2.0 * (x * z - w * y),
+            2.0 * (y * z + w * x),
+            1.0 - 2.0 * (x * x + y * y),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn assert_close(a: f32, b: f32, tol: f32) {
+        assert!((a - b).abs() < tol, "{a} vs {b}");
+    }
+
+    #[test]
+    fn vec_ops() {
+        assert_eq!(v3(1.0, 2.0, 3.0) + v3(4.0, 5.0, 6.0), v3(5.0, 7.0, 9.0));
+        assert_eq!(v3(1.0, 0.0, 0.0).cross(v3(0.0, 1.0, 0.0)), v3(0.0, 0.0, 1.0));
+        assert_close(v3(3.0, 4.0, 0.0).norm(), 5.0, 1e-6);
+        assert_close(v2(1.0, 1.0).dot(v2(2.0, 3.0)), 5.0, 1e-6);
+    }
+
+    #[test]
+    fn sym2_inverse_roundtrip() {
+        let m = Sym2 { a: 4.0, b: 1.0, c: 3.0 };
+        let inv = m.inverse().unwrap();
+        // m * inv == I
+        assert_close(m.a * inv.a + m.b * inv.b, 1.0, 1e-5);
+        assert_close(m.a * inv.b + m.b * inv.c, 0.0, 1e-5);
+        assert_close(m.b * inv.b + m.c * inv.c, 1.0, 1e-5);
+    }
+
+    #[test]
+    fn sym2_singular_none() {
+        assert!(Sym2 { a: 1.0, b: 1.0, c: 1.0 }.inverse().is_none());
+    }
+
+    #[test]
+    fn sym2_quad_form() {
+        let m = Sym2 { a: 2.0, b: 0.5, c: 1.0 };
+        let q = m.quad(v2(1.0, 2.0));
+        assert_close(q, 2.0 + 2.0 * 0.5 * 2.0 + 4.0, 1e-6);
+    }
+
+    #[test]
+    fn eigen_diagonal() {
+        let m = Sym2 { a: 9.0, b: 0.0, c: 1.0 };
+        let (l1, l2) = m.eigenvalues();
+        assert_close(l1, 9.0, 1e-6);
+        assert_close(l2, 1.0, 1e-6);
+        let ax = m.major_axis();
+        assert_close(ax.x.abs(), 1.0, 1e-6);
+    }
+
+    #[test]
+    fn eigen_rotated() {
+        // 45°-rotated anisotropic covariance: eigenvalues preserved.
+        let (l1, l2) = (16.0f32, 1.0f32);
+        let c = std::f32::consts::FRAC_1_SQRT_2;
+        // R diag(l) Rᵀ with R = rot(45°)
+        let a = c * c * l1 + c * c * l2;
+        let b = c * c * (l1 - l2);
+        let m = Sym2 { a, b, c: a };
+        let (e1, e2) = m.eigenvalues();
+        assert_close(e1, l1, 1e-4);
+        assert_close(e2, l2, 1e-4);
+        let ax = m.major_axis();
+        assert_close(ax.x.abs(), c, 1e-4);
+        assert_close(ax.y.abs(), c, 1e-4);
+    }
+
+    #[test]
+    fn quat_identity_rotation() {
+        let m = Quat::IDENTITY.to_mat3();
+        assert_eq!(m, Mat3::IDENTITY);
+    }
+
+    #[test]
+    fn quat_z_rotation() {
+        let q = Quat::from_axis_angle(v3(0.0, 0.0, 1.0), std::f32::consts::FRAC_PI_2);
+        let r = q.to_mat3().mul_vec(v3(1.0, 0.0, 0.0));
+        assert_close(r.x, 0.0, 1e-6);
+        assert_close(r.y, 1.0, 1e-6);
+        assert_close(r.z, 0.0, 1e-6);
+    }
+
+    #[test]
+    fn mat3_mul_transpose() {
+        let q = Quat::from_axis_angle(v3(1.0, 2.0, 3.0), 0.7);
+        let r = q.to_mat3();
+        let rrt = r.mul(&r.transpose());
+        for i in 0..3 {
+            for j in 0..3 {
+                let expect = if i == j { 1.0 } else { 0.0 };
+                assert_close(rrt.at(i, j), expect, 1e-5);
+            }
+        }
+    }
+
+    #[test]
+    fn mat3_vec_identity() {
+        let v = v3(1.0, -2.0, 3.0);
+        assert_eq!(Mat3::IDENTITY.mul_vec(v), v);
+    }
+}

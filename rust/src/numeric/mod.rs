@@ -1,0 +1,6 @@
+//! Numeric substrates: software FP16/FP8 (mixed-precision CTU emulation)
+//! and the fixed-size linear algebra used by EWA splatting.
+
+pub mod fp16;
+pub mod fp8;
+pub mod linalg;

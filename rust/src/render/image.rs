@@ -1,0 +1,174 @@
+//! Framebuffer and simple image IO (PPM/PGM — no external codecs offline).
+
+/// RGB float framebuffer, row-major, values nominally in [0, 1].
+#[derive(Clone, Debug)]
+pub struct Image {
+    pub width: u32,
+    pub height: u32,
+    /// width*height*3 floats, RGB interleaved.
+    pub data: Vec<f32>,
+}
+
+impl Image {
+    pub fn new(width: u32, height: u32) -> Image {
+        Image {
+            width,
+            height,
+            data: vec![0.0; (width * height * 3) as usize],
+        }
+    }
+
+    pub fn filled(width: u32, height: u32, rgb: [f32; 3]) -> Image {
+        let mut img = Image::new(width, height);
+        for px in img.data.chunks_exact_mut(3) {
+            px.copy_from_slice(&rgb);
+        }
+        img
+    }
+
+    #[inline]
+    pub fn idx(&self, x: u32, y: u32) -> usize {
+        debug_assert!(x < self.width && y < self.height);
+        ((y * self.width + x) * 3) as usize
+    }
+
+    #[inline]
+    pub fn get(&self, x: u32, y: u32) -> [f32; 3] {
+        let i = self.idx(x, y);
+        [self.data[i], self.data[i + 1], self.data[i + 2]]
+    }
+
+    #[inline]
+    pub fn set(&mut self, x: u32, y: u32, rgb: [f32; 3]) {
+        let i = self.idx(x, y);
+        self.data[i..i + 3].copy_from_slice(&rgb);
+    }
+
+    /// Mean absolute difference against another image (quick diagnostics).
+    pub fn mad(&self, other: &Image) -> f64 {
+        assert_eq!(self.data.len(), other.data.len());
+        let s: f64 = self
+            .data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b).abs() as f64)
+            .sum();
+        s / self.data.len() as f64
+    }
+
+    /// Write binary PPM (P6), sRGB-ish clamp to 8 bit.
+    pub fn write_ppm(&self, path: &std::path::Path) -> std::io::Result<()> {
+        let mut buf = format!("P6\n{} {}\n255\n", self.width, self.height).into_bytes();
+        buf.reserve(self.data.len());
+        for &v in &self.data {
+            buf.push((v.clamp(0.0, 1.0) * 255.0 + 0.5) as u8);
+        }
+        std::fs::write(path, buf)
+    }
+
+    /// Read binary PPM (P6) written by `write_ppm`.
+    pub fn read_ppm(path: &std::path::Path) -> std::io::Result<Image> {
+        let bytes = std::fs::read(path)?;
+        let err = |m: &str| std::io::Error::new(std::io::ErrorKind::InvalidData, m.to_string());
+        // Parse header: magic, width, height, maxval — whitespace separated.
+        let mut pos = 0usize;
+        let mut fields: Vec<String> = Vec::new();
+        while fields.len() < 4 && pos < bytes.len() {
+            while pos < bytes.len() && bytes[pos].is_ascii_whitespace() {
+                pos += 1;
+            }
+            if pos < bytes.len() && bytes[pos] == b'#' {
+                while pos < bytes.len() && bytes[pos] != b'\n' {
+                    pos += 1;
+                }
+                continue;
+            }
+            let start = pos;
+            while pos < bytes.len() && !bytes[pos].is_ascii_whitespace() {
+                pos += 1;
+            }
+            fields.push(String::from_utf8_lossy(&bytes[start..pos]).into_owned());
+        }
+        if fields.len() < 4 || fields[0] != "P6" {
+            return Err(err("not a P6 ppm"));
+        }
+        let width: u32 = fields[1].parse().map_err(|_| err("bad width"))?;
+        let height: u32 = fields[2].parse().map_err(|_| err("bad height"))?;
+        pos += 1; // single whitespace after maxval
+        let need = (width * height * 3) as usize;
+        if bytes.len() < pos + need {
+            return Err(err("truncated pixel data"));
+        }
+        let data = bytes[pos..pos + need]
+            .iter()
+            .map(|&b| b as f32 / 255.0)
+            .collect();
+        Ok(Image { width, height, data })
+    }
+
+    /// Luma (Rec.601) plane, used by SSIM.
+    pub fn luma(&self) -> Vec<f32> {
+        self.data
+            .chunks_exact(3)
+            .map(|px| 0.299 * px[0] + 0.587 * px[1] + 0.114 * px[2])
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn set_get_roundtrip() {
+        let mut img = Image::new(8, 4);
+        img.set(3, 2, [0.1, 0.5, 0.9]);
+        assert_eq!(img.get(3, 2), [0.1, 0.5, 0.9]);
+        assert_eq!(img.get(0, 0), [0.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn ppm_roundtrip() {
+        let mut img = Image::new(5, 3);
+        for y in 0..3 {
+            for x in 0..5 {
+                img.set(x, y, [x as f32 / 4.0, y as f32 / 2.0, 0.25]);
+            }
+        }
+        let dir = std::env::temp_dir().join("flicker_test_ppm");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("t.ppm");
+        img.write_ppm(&p).unwrap();
+        let back = Image::read_ppm(&p).unwrap();
+        assert_eq!(back.width, 5);
+        assert_eq!(back.height, 3);
+        // 8-bit quantization error only.
+        assert!(img.mad(&back) < 1.0 / 255.0);
+    }
+
+    #[test]
+    fn mad_zero_for_identical() {
+        let img = Image::filled(4, 4, [0.3, 0.3, 0.3]);
+        assert_eq!(img.mad(&img.clone()), 0.0);
+    }
+
+    #[test]
+    fn luma_weights() {
+        let img = Image::filled(2, 2, [1.0, 0.0, 0.0]);
+        let l = img.luma();
+        assert!((l[0] - 0.299).abs() < 1e-6);
+    }
+
+    #[test]
+    fn clamp_on_write() {
+        let mut img = Image::new(1, 1);
+        img.set(0, 0, [2.0, -1.0, 0.5]);
+        let dir = std::env::temp_dir().join("flicker_test_ppm2");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("c.ppm");
+        img.write_ppm(&p).unwrap();
+        let back = Image::read_ppm(&p).unwrap();
+        assert_eq!(back.get(0, 0)[0], 1.0);
+        assert_eq!(back.get(0, 0)[1], 0.0);
+    }
+}

@@ -1,0 +1,156 @@
+//! Image quality metrics: PSNR and SSIM (paper Table I).
+
+use super::image::Image;
+
+/// PSNR in dB over all RGB channels (peak = 1.0).
+pub fn psnr(a: &Image, b: &Image) -> f64 {
+    assert_eq!(a.data.len(), b.data.len(), "image size mismatch");
+    let mse: f64 = a
+        .data
+        .iter()
+        .zip(&b.data)
+        .map(|(x, y)| {
+            let d = (x - y) as f64;
+            d * d
+        })
+        .sum::<f64>()
+        / a.data.len() as f64;
+    if mse <= 0.0 {
+        return f64::INFINITY;
+    }
+    10.0 * (1.0 / mse).log10()
+}
+
+/// Mean SSIM over the luma plane, 8×8 windows with stride 4, standard
+/// constants (K1=0.01, K2=0.03, L=1).
+pub fn ssim(a: &Image, b: &Image) -> f64 {
+    assert_eq!(a.width, b.width);
+    assert_eq!(a.height, b.height);
+    let la = a.luma();
+    let lb = b.luma();
+    let (w, h) = (a.width as usize, a.height as usize);
+    let win = 8usize;
+    let stride = 4usize;
+    const C1: f64 = 0.01 * 0.01;
+    const C2: f64 = 0.03 * 0.03;
+
+    let mut total = 0.0f64;
+    let mut count = 0usize;
+    let mut y = 0;
+    while y + win <= h {
+        let mut x = 0;
+        while x + win <= w {
+            let (mut sa, mut sb, mut saa, mut sbb, mut sab) = (0f64, 0f64, 0f64, 0f64, 0f64);
+            for dy in 0..win {
+                let row = (y + dy) * w + x;
+                for dx in 0..win {
+                    let va = la[row + dx] as f64;
+                    let vb = lb[row + dx] as f64;
+                    sa += va;
+                    sb += vb;
+                    saa += va * va;
+                    sbb += vb * vb;
+                    sab += va * vb;
+                }
+            }
+            let n = (win * win) as f64;
+            let ma = sa / n;
+            let mb = sb / n;
+            let va = (saa / n - ma * ma).max(0.0);
+            let vb = (sbb / n - mb * mb).max(0.0);
+            let cov = sab / n - ma * mb;
+            let s = ((2.0 * ma * mb + C1) * (2.0 * cov + C2))
+                / ((ma * ma + mb * mb + C1) * (va + vb + C2));
+            total += s;
+            count += 1;
+            x += stride;
+        }
+        y += stride;
+    }
+    if count == 0 {
+        1.0
+    } else {
+        total / count as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg32;
+
+    fn noisy(img: &Image, sigma: f32, seed: u64) -> Image {
+        let mut rng = Pcg32::new(seed);
+        let mut out = img.clone();
+        for v in &mut out.data {
+            *v = (*v + rng.normal_ms(0.0, sigma)).clamp(0.0, 1.0);
+        }
+        out
+    }
+
+    fn test_pattern(w: u32, h: u32) -> Image {
+        let mut img = Image::new(w, h);
+        for y in 0..h {
+            for x in 0..w {
+                img.set(
+                    x,
+                    y,
+                    [
+                        (x as f32 / w as f32),
+                        (y as f32 / h as f32),
+                        ((x + y) % 7) as f32 / 7.0,
+                    ],
+                );
+            }
+        }
+        img
+    }
+
+    #[test]
+    fn psnr_identical_is_infinite() {
+        let img = test_pattern(32, 32);
+        assert!(psnr(&img, &img).is_infinite());
+    }
+
+    #[test]
+    fn psnr_of_known_mse() {
+        let a = Image::filled(16, 16, [0.5, 0.5, 0.5]);
+        let b = Image::filled(16, 16, [0.6, 0.6, 0.6]);
+        // MSE = 0.01 → PSNR = 20 dB (f32 rounding of 0.6−0.5 allows ~1e-3).
+        assert!((psnr(&a, &b) - 20.0).abs() < 1e-3);
+    }
+
+    #[test]
+    fn psnr_decreases_with_noise() {
+        let img = test_pattern(64, 64);
+        let p1 = psnr(&img, &noisy(&img, 0.01, 1));
+        let p2 = psnr(&img, &noisy(&img, 0.05, 2));
+        assert!(p1 > p2);
+        assert!(p1 > 35.0);
+        assert!(p2 > 20.0 && p2 < 35.0);
+    }
+
+    #[test]
+    fn ssim_identical_is_one() {
+        let img = test_pattern(64, 64);
+        assert!((ssim(&img, &img) - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn ssim_penalizes_structure_loss() {
+        let img = test_pattern(64, 64);
+        let blurred = Image::filled(64, 64, [0.5, 0.5, 0.5]);
+        let s_noise = ssim(&img, &noisy(&img, 0.02, 3));
+        let s_flat = ssim(&img, &blurred);
+        assert!(s_noise > s_flat);
+        assert!(s_noise > 0.8);
+        assert!(s_flat < 0.5);
+    }
+
+    #[test]
+    fn ssim_symmetric() {
+        let a = test_pattern(48, 48);
+        let b = noisy(&a, 0.03, 4);
+        assert!((ssim(&a, &b) - ssim(&b, &a)).abs() < 1e-12);
+    }
+}

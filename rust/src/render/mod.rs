@@ -1,0 +1,9 @@
+//! Functional 3DGS rendering pipeline (golden model): projection, tiling,
+//! depth sort, reference rasterizer, framebuffer, and quality metrics.
+
+pub mod image;
+pub mod metrics;
+pub mod project;
+pub mod raster;
+pub mod sort;
+pub mod tile;

@@ -1,0 +1,250 @@
+//! 3D → 2D Gaussian projection (EWA splatting), paper Step (1).
+//!
+//! Produces the per-view 2D features the rest of the pipeline consumes:
+//! mean μ′, covariance Σ′ (and its inverse, the conic), depth, view-dependent
+//! color, the 3σ radius, and the projected axis ratio used by the adaptive
+//! leader-pixel classifier.
+
+use crate::camera::Camera;
+use crate::numeric::linalg::{Mat3, Sym2, Vec2};
+use crate::scene::gaussian::Scene;
+
+/// A projected 2D splat.
+#[derive(Clone, Copy, Debug)]
+pub struct Splat {
+    /// Index of the source Gaussian in the scene.
+    pub id: u32,
+    /// Mean in pixel coordinates.
+    pub mean: Vec2,
+    /// 2D covariance.
+    pub cov: Sym2,
+    /// Inverse covariance (conic) — what Eq. (1) consumes.
+    pub conic: Sym2,
+    /// Camera-space depth (z).
+    pub depth: f32,
+    pub opacity: f32,
+    pub color: [f32; 3],
+    /// 3σ radius along the major axis (pixels).
+    pub radius: f32,
+    /// Projected axis ratio sqrt(λmax/λmin) — spiky classifier input.
+    pub axis_ratio: f32,
+}
+
+impl Splat {
+    /// Is this Gaussian "spiky" under the paper's threshold (ratio ≥ 3)?
+    #[inline]
+    pub fn is_spiky(&self, threshold: f32) -> bool {
+        self.axis_ratio >= threshold
+    }
+
+    /// Evaluate α at pixel `p` (Eq. 1), full precision.
+    #[inline]
+    pub fn alpha_at(&self, px: f32, py: f32) -> f32 {
+        let dx = px - self.mean.x;
+        let dy = py - self.mean.y;
+        let e = 0.5 * (self.conic.a * dx * dx + self.conic.c * dy * dy)
+            + self.conic.b * dx * dy;
+        if e < 0.0 {
+            // Numerically impossible for PSD conic; guard anyway.
+            return self.opacity;
+        }
+        (self.opacity * (-e).exp()).min(0.999)
+    }
+}
+
+/// Low-pass dilation added to the projected covariance diagonal, as in the
+/// reference 3DGS rasterizer (anti-aliasing guard: every splat covers at
+/// least ~1 pixel).
+pub const COV_DILATION: f32 = 0.3;
+
+/// Minimum α for a Gaussian to count as contributing (1/255).
+pub const ALPHA_MIN: f32 = 1.0 / 255.0;
+
+/// Project Gaussian `i` of `scene` into `cam`. Returns `None` if culled
+/// (behind near plane, outside frustum, or degenerate projection).
+pub fn project_one(scene: &Scene, i: usize, cam: &Camera) -> Option<Splat> {
+    let p = scene.pos[i];
+    let t = cam.to_camera(p);
+    if t.z < cam.near || t.z > cam.far {
+        return None;
+    }
+    if !cam.sphere_in_frustum(p, scene.bounding_radius(i)) {
+        return None;
+    }
+
+    // 3D covariance Σ = R S Sᵀ Rᵀ.
+    let r = scene.rot[i].to_mat3();
+    let s = scene.scale[i];
+    let rs = r.mul(&Mat3::scale(s));
+    let sigma3 = rs.mul(&rs.transpose());
+
+    // Jacobian of the perspective projection at t (EWA approximation),
+    // with the camera rotation W folded in: Σ′ = J W Σ Wᵀ Jᵀ.
+    let (fx, fy) = (cam.intr.fx, cam.intr.fy);
+    let inv_z = 1.0 / t.z;
+    let inv_z2 = inv_z * inv_z;
+    // Clamp the in-plane offsets like the reference implementation does to
+    // bound the linearization error for splats near the frustum border.
+    let lim_x = 1.3 * (cam.intr.width as f32 * 0.5 / fx);
+    let lim_y = 1.3 * (cam.intr.height as f32 * 0.5 / fy);
+    let txz = (t.x * inv_z).clamp(-lim_x, lim_x) * t.z;
+    let tyz = (t.y * inv_z).clamp(-lim_y, lim_y) * t.z;
+    let j = Mat3([
+        fx * inv_z, 0.0, -fx * txz * inv_z2, //
+        0.0, fy * inv_z, -fy * tyz * inv_z2, //
+        0.0, 0.0, 0.0,
+    ]);
+    let jw = j.mul(&cam.r_wc);
+    let cov3 = jw.mul(&sigma3).mul(&jw.transpose());
+    let cov = Sym2 {
+        a: cov3.at(0, 0) + COV_DILATION,
+        b: cov3.at(0, 1),
+        c: cov3.at(1, 1) + COV_DILATION,
+    };
+    let conic = cov.inverse()?;
+
+    let (l1, l2) = cov.eigenvalues();
+    if l1 <= 0.0 {
+        return None;
+    }
+    let radius = 3.0 * l1.sqrt();
+    let axis_ratio = (l1 / l2.max(1e-9)).sqrt();
+
+    let mean = cam.project_cam(t);
+    // Off-screen beyond the radius guard → cull.
+    let (w, h) = (cam.intr.width as f32, cam.intr.height as f32);
+    if mean.x + radius < 0.0 || mean.x - radius > w || mean.y + radius < 0.0 || mean.y - radius > h
+    {
+        return None;
+    }
+
+    Some(Splat {
+        id: i as u32,
+        mean,
+        cov,
+        conic,
+        depth: t.z,
+        opacity: scene.opacity[i],
+        color: scene.eval_color(i, cam.view_dir(p)),
+        radius,
+        axis_ratio,
+    })
+}
+
+/// Project the whole scene; culled Gaussians are dropped.
+pub fn project_scene(scene: &Scene, cam: &Camera) -> Vec<Splat> {
+    (0..scene.len())
+        .filter_map(|i| project_one(scene, i, cam))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::camera::{Camera, Intrinsics};
+    use crate::numeric::linalg::{v3, Quat, Vec3};
+
+    fn cam() -> Camera {
+        Camera::look_at(
+            Intrinsics::from_fov(256, 256, 1.2),
+            v3(0.0, 0.0, -6.0),
+            v3(0.0, 0.0, 0.0),
+            v3(0.0, 1.0, 0.0),
+        )
+    }
+
+    fn one_gaussian(scale: Vec3, rot: Quat) -> Scene {
+        let mut s = Scene::with_capacity(1, "t");
+        s.push(v3(0.0, 0.0, 0.0), rot, scale, 0.8, [1.0, 1.0, 1.0], [[0.0; 3]; 3]);
+        s
+    }
+
+    #[test]
+    fn isotropic_projects_isotropic() {
+        let s = one_gaussian(v3(0.2, 0.2, 0.2), Quat::IDENTITY);
+        let sp = project_one(&s, 0, &cam()).unwrap();
+        assert!((sp.mean.x - 128.0).abs() < 1e-2);
+        assert!((sp.mean.y - 128.0).abs() < 1e-2);
+        assert!((sp.axis_ratio - 1.0).abs() < 0.05, "ratio {}", sp.axis_ratio);
+        assert!((sp.depth - 6.0).abs() < 1e-4);
+    }
+
+    #[test]
+    fn anisotropic_is_spiky() {
+        // Long axis along x (perpendicular to view) → projected ratio ≈ 3D ratio.
+        let s = one_gaussian(v3(1.0, 0.1, 0.1), Quat::IDENTITY);
+        let sp = project_one(&s, 0, &cam()).unwrap();
+        assert!(sp.is_spiky(3.0), "ratio {}", sp.axis_ratio);
+    }
+
+    #[test]
+    fn behind_camera_culled() {
+        let mut s = Scene::with_capacity(1, "t");
+        s.push(v3(0.0, 0.0, -20.0), Quat::IDENTITY, v3(0.3, 0.3, 0.3), 0.5, [0.5; 3], [[0.0; 3]; 3]);
+        assert!(project_one(&s, 0, &cam()).is_none());
+    }
+
+    #[test]
+    fn alpha_peaks_at_mean() {
+        let s = one_gaussian(v3(0.3, 0.3, 0.3), Quat::IDENTITY);
+        let sp = project_one(&s, 0, &cam()).unwrap();
+        let a0 = sp.alpha_at(sp.mean.x, sp.mean.y);
+        assert!((a0 - 0.8).abs() < 1e-4);
+        let a1 = sp.alpha_at(sp.mean.x + 5.0, sp.mean.y);
+        assert!(a1 < a0);
+        let a2 = sp.alpha_at(sp.mean.x + 20.0, sp.mean.y);
+        assert!(a2 < a1);
+    }
+
+    #[test]
+    fn alpha_matches_closed_form() {
+        let s = one_gaussian(v3(0.3, 0.3, 0.3), Quat::IDENTITY);
+        let sp = project_one(&s, 0, &cam()).unwrap();
+        let (dx, dy) = (4.0f32, -2.5f32);
+        let e = 0.5 * sp.conic.quad(crate::numeric::linalg::v2(dx, dy));
+        let expect = sp.opacity * (-e).exp();
+        let got = sp.alpha_at(sp.mean.x + dx, sp.mean.y + dy);
+        assert!((got - expect).abs() < 1e-5);
+    }
+
+    #[test]
+    fn radius_covers_3sigma() {
+        let s = one_gaussian(v3(0.5, 0.1, 0.1), Quat::IDENTITY);
+        let sp = project_one(&s, 0, &cam()).unwrap();
+        // α at distance radius along the major axis should be ≤ e^{-4.5}·o.
+        let ax = sp.cov.major_axis();
+        let a = sp.alpha_at(sp.mean.x + ax.x * sp.radius, sp.mean.y + ax.y * sp.radius);
+        assert!(a <= sp.opacity * (-4.4f32).exp(), "a={a}");
+    }
+
+    #[test]
+    fn closer_gaussian_is_bigger() {
+        let mut s = Scene::with_capacity(2, "t");
+        s.push(v3(0.0, 0.0, 0.0), Quat::IDENTITY, v3(0.2, 0.2, 0.2), 0.5, [0.5; 3], [[0.0; 3]; 3]);
+        s.push(v3(0.0, 0.0, 6.0), Quat::IDENTITY, v3(0.2, 0.2, 0.2), 0.5, [0.5; 3], [[0.0; 3]; 3]);
+        let c = cam();
+        let near = project_one(&s, 0, &c).unwrap(); // depth 6
+        let far = project_one(&s, 1, &c).unwrap(); // depth 12
+        assert!(near.radius > far.radius * 1.5);
+        assert!(far.depth > near.depth);
+    }
+
+    #[test]
+    fn dilation_bounds_minimum_size() {
+        // A vanishingly small Gaussian still covers ≳1 px (cov ≥ dilation).
+        let s = one_gaussian(v3(1e-4, 1e-4, 1e-4), Quat::IDENTITY);
+        let sp = project_one(&s, 0, &cam()).unwrap();
+        assert!(sp.cov.a >= COV_DILATION);
+        assert!(sp.radius >= 3.0 * COV_DILATION.sqrt() * 0.99);
+    }
+
+    #[test]
+    fn project_scene_culls_and_keeps() {
+        let mut s = Scene::with_capacity(2, "t");
+        s.push(v3(0.0, 0.0, 0.0), Quat::IDENTITY, v3(0.2, 0.2, 0.2), 0.5, [0.5; 3], [[0.0; 3]; 3]);
+        s.push(v3(0.0, 0.0, -30.0), Quat::IDENTITY, v3(0.2, 0.2, 0.2), 0.5, [0.5; 3], [[0.0; 3]; 3]);
+        let splats = project_scene(&s, &cam());
+        assert_eq!(splats.len(), 1);
+        assert_eq!(splats[0].id, 0);
+    }
+}

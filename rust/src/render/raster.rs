@@ -1,0 +1,412 @@
+//! Reference tile rasterizer (paper Step (3)) — the golden functional model.
+//!
+//! Splat-major alpha blending within each tile, exactly the vanilla 3DGS
+//! kernel semantics: per pixel, iterate the depth-sorted tile list, skip
+//! Gaussians with α < 1/255, accumulate color with transmittance, and stop
+//! when transmittance drops below `t_min` ("early termination").
+//!
+//! The rasterizer accepts an optional **mini-tile mask provider** so the same
+//! code path renders: vanilla (mask = all ones), GSCore-style OBB-filtered
+//! lists, or FLICKER's Mini-Tile CAT (mask from `crate::cat`). It also
+//! optionally accumulates per-Gaussian contribution scores (used by pruning)
+//! and tracks the per-pixel workload counters behind paper Fig. 4.
+
+use super::image::Image;
+use super::project::{project_scene, Splat, ALPHA_MIN};
+use super::sort::sort_by_depth;
+use super::tile::{build_tile_lists, Rect, Strategy, TileGrid};
+use crate::camera::Camera;
+use crate::scene::gaussian::Scene;
+
+/// Mini-tile edge in pixels (paper: 4×4 mini-tiles inside 16×16 tiles).
+pub const MINITILE: u32 = 4;
+
+/// Rendering configuration.
+#[derive(Clone, Copy, Debug)]
+pub struct RenderOptions {
+    pub tile_size: u32,
+    pub strategy: Strategy,
+    /// Transmittance threshold for early termination (3DGS: 1e-4).
+    pub t_min: f32,
+    pub background: [f32; 3],
+}
+
+impl Default for RenderOptions {
+    fn default() -> Self {
+        RenderOptions {
+            tile_size: 16,
+            strategy: Strategy::Aabb,
+            t_min: 1e-4,
+            background: [0.0, 0.0, 0.0],
+        }
+    }
+}
+
+/// Workload counters (inputs to Fig. 4 and the simulator's workload trace).
+#[derive(Clone, Debug, Default)]
+pub struct RenderStats {
+    /// Splats surviving projection/culling.
+    pub splats: usize,
+    /// Σ per-tile list lengths ("duplicated Gaussians", Fig. 4 right).
+    pub tile_pairs: usize,
+    /// Per-pixel α evaluations attempted (pixel × splat pairs entering Eq. 1).
+    pub pairs_tested: u64,
+    /// Pairs that actually blended (α ≥ 1/255 and pixel still active).
+    pub pairs_blended: u64,
+    /// Pixels rendered.
+    pub pixels: u64,
+    /// Tiles whose loop ended early on full opacity.
+    pub tiles_early_terminated: usize,
+}
+
+impl RenderStats {
+    /// Average Gaussians *processed per pixel* — the paper's Fig. 4 metric.
+    pub fn per_pixel_tested(&self) -> f64 {
+        self.pairs_tested as f64 / self.pixels.max(1) as f64
+    }
+
+    pub fn per_pixel_blended(&self) -> f64 {
+        self.pairs_blended as f64 / self.pixels.max(1) as f64
+    }
+}
+
+/// Mini-tile mask provider: given a tile rect and a splat, return one bit per
+/// mini-tile (row-major, bit 0 = top-left) saying whether the splat must be
+/// processed by that mini-tile's pixels. `u32` leaves room for tiles up to
+/// 16 mini-tiles (16×16 px tile → 16 bits).
+pub trait MaskProvider {
+    fn mask(&mut self, tile: &Rect, splat: &Splat) -> u32;
+
+    /// Number of mini-tile columns for a tile of `tile_size`.
+    fn minitiles_per_row(&self, tile_size: u32) -> u32 {
+        tile_size.div_ceil(MINITILE)
+    }
+}
+
+/// Vanilla: every mini-tile processes every listed splat.
+pub struct AllOnes;
+
+impl MaskProvider for AllOnes {
+    fn mask(&mut self, _tile: &Rect, _splat: &Splat) -> u32 {
+        u32::MAX
+    }
+}
+
+/// Full render product: image + stats (+ optional per-Gaussian scores).
+pub struct RenderOutput {
+    pub image: Image,
+    pub stats: RenderStats,
+}
+
+/// Render the scene through the reference pipeline.
+pub fn render(scene: &Scene, cam: &Camera, opts: &RenderOptions) -> RenderOutput {
+    render_masked(scene, cam, opts, &mut AllOnes, None)
+}
+
+/// Render with a mini-tile mask provider (CAT integration point) and an
+/// optional per-Gaussian contribution accumulator (pruning integration).
+pub fn render_masked(
+    scene: &Scene,
+    cam: &Camera,
+    opts: &RenderOptions,
+    masks: &mut dyn MaskProvider,
+    mut contributions: Option<&mut [f32]>,
+) -> RenderOutput {
+    let splats = project_scene(scene, cam);
+    let grid = TileGrid::new(cam.intr.width, cam.intr.height, opts.tile_size);
+    let mut lists = build_tile_lists(&splats, &grid, opts.strategy);
+    for list in &mut lists {
+        sort_by_depth(list, &splats);
+    }
+    render_lists(
+        &splats,
+        &lists,
+        &grid,
+        opts,
+        masks,
+        contributions.as_deref_mut(),
+    )
+}
+
+/// Core loop over prebuilt, depth-sorted tile lists.
+pub fn render_lists(
+    splats: &[Splat],
+    lists: &[Vec<u32>],
+    grid: &TileGrid,
+    opts: &RenderOptions,
+    masks: &mut dyn MaskProvider,
+    mut contributions: Option<&mut [f32]>,
+) -> RenderOutput {
+    let mut img = Image::new(grid.width, grid.height);
+    let mut stats = RenderStats {
+        splats: splats.len(),
+        tile_pairs: lists.iter().map(|l| l.len()).sum(),
+        pixels: (grid.width * grid.height) as u64,
+        ..Default::default()
+    };
+
+    let ts = grid.tile as usize;
+    let mt_cols = grid.tile.div_ceil(MINITILE) as usize;
+    // Per-tile scratch, reused across tiles (no allocation in the loop).
+    let mut trans = vec![1.0f32; ts * ts];
+    let mut color = vec![[0.0f32; 3]; ts * ts];
+
+    for (t, list) in lists.iter().enumerate() {
+        let rect = grid.rect(t);
+        let x_lo = rect.x0 as u32;
+        let y_lo = rect.y0 as u32;
+        let w = (grid.width - x_lo).min(grid.tile) as usize;
+        let h = (grid.height - y_lo).min(grid.tile) as usize;
+        trans[..ts * ts].fill(1.0);
+        for c in color.iter_mut() {
+            *c = [0.0; 3];
+        }
+        let mut active = (w * h) as u32;
+
+        'splat_loop: for &si in list {
+            let s = &splats[si as usize];
+            let mask = masks.mask(&rect, s);
+            if mask == 0 {
+                continue;
+            }
+            // Hot-loop locals (§Perf): hoist splat fields and precompute the
+            // Eq.-2 threshold so the (majority) sub-threshold pixels skip the
+            // exp() entirely: α = o·e^{−E} ≥ 1/255 ⇔ E ≤ ln(255·o).
+            let (ca, cb, cc) = (s.conic.a, s.conic.b, s.conic.c);
+            let (mx, my) = (s.mean.x, s.mean.y);
+            let opacity = s.opacity;
+            let e_max = (255.0 * opacity).max(1e-12).ln();
+            let col = s.color;
+            for py in 0..h {
+                let gy = y_lo as f32 + py as f32 + 0.5;
+                let dy = gy - my;
+                let half_cc_dy2 = 0.5 * cc * dy * dy;
+                let cb_dy = cb * dy;
+                let mt_row = py / MINITILE as usize;
+                for px in 0..w {
+                    let mt = mt_row * mt_cols + px / MINITILE as usize;
+                    if mask & (1 << mt) == 0 {
+                        continue;
+                    }
+                    let idx = py * ts + px;
+                    let t_cur = trans[idx];
+                    if t_cur < opts.t_min {
+                        continue;
+                    }
+                    stats.pairs_tested += 1;
+                    let gx = x_lo as f32 + px as f32 + 0.5;
+                    let dx = gx - mx;
+                    let e = 0.5 * ca * dx * dx + half_cc_dy2 + cb_dy * dx;
+                    if e >= e_max || e < 0.0 {
+                        continue; // α below 1/255 — no exp needed
+                    }
+                    let a = (opacity * (-e).exp()).min(0.999);
+                    if a < ALPHA_MIN {
+                        continue;
+                    }
+                    stats.pairs_blended += 1;
+                    let wgt = a * t_cur;
+                    color[idx][0] += wgt * col[0];
+                    color[idx][1] += wgt * col[1];
+                    color[idx][2] += wgt * col[2];
+                    if let Some(sc) = contributions.as_deref_mut() {
+                        sc[s.id as usize] += wgt;
+                    }
+                    let t_new = t_cur * (1.0 - a);
+                    trans[idx] = t_new;
+                    if t_new < opts.t_min {
+                        active -= 1;
+                        if active == 0 {
+                            stats.tiles_early_terminated += 1;
+                            break 'splat_loop;
+                        }
+                    }
+                }
+            }
+        }
+
+        // Composite over background.
+        for py in 0..h {
+            for px in 0..w {
+                let idx = py * ts + px;
+                let tr = trans[idx];
+                let c = color[idx];
+                img.set(
+                    x_lo + px as u32,
+                    y_lo + py as u32,
+                    [
+                        c[0] + tr * opts.background[0],
+                        c[1] + tr * opts.background[1],
+                        c[2] + tr * opts.background[2],
+                    ],
+                );
+            }
+        }
+    }
+    RenderOutput { image: img, stats }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::camera::{Camera, Intrinsics};
+    use crate::numeric::linalg::{v3, Quat};
+    use crate::scene::synthetic::{generate_scaled, preset};
+
+    fn cam(px: u32) -> Camera {
+        Camera::look_at(
+            Intrinsics::from_fov(px, px, 1.2),
+            v3(0.0, 2.5, -12.0),
+            v3(0.0, 0.5, 0.0),
+            v3(0.0, 1.0, 0.0),
+        )
+    }
+
+    fn single_gaussian_scene(opacity: f32) -> Scene {
+        let mut s = Scene::with_capacity(1, "t");
+        s.push(
+            v3(0.0, 0.5, 0.0),
+            Quat::IDENTITY,
+            v3(0.8, 0.8, 0.8),
+            opacity,
+            [2.0, -1.77, -1.77], // bright red after +0.5 shift
+            [[0.0; 3]; 3],
+        );
+        s
+    }
+
+    #[test]
+    fn single_gaussian_renders_centered_blob() {
+        let scene = single_gaussian_scene(0.95);
+        let out = render(&scene, &cam(64), &RenderOptions::default());
+        let center = out.image.get(32, 32);
+        let corner = out.image.get(0, 0);
+        assert!(center[0] > 0.4, "center red {}", center[0]);
+        assert!(center[0] > center[1] * 2.0);
+        assert!(corner[0] < 0.05, "corner should be ~background");
+    }
+
+    #[test]
+    fn opacity_zero_renders_background() {
+        let mut scene = single_gaussian_scene(0.95);
+        scene.opacity[0] = 0.0019; // below 1/255 at peak ⇒ invisible: α = o
+        let opts = RenderOptions {
+            background: [0.2, 0.3, 0.4],
+            ..Default::default()
+        };
+        let out = render(&scene, &cam(32), &opts);
+        let c = out.image.get(16, 16);
+        assert!((c[0] - 0.2).abs() < 1e-3);
+        assert!((c[2] - 0.4).abs() < 1e-3);
+        assert_eq!(out.stats.pairs_blended, 0);
+    }
+
+    #[test]
+    fn front_occludes_back() {
+        let mut scene = Scene::with_capacity(2, "t");
+        // Opaque red in front, green behind.
+        scene.push(v3(0.0, 0.5, -2.0), Quat::IDENTITY, v3(1.0, 1.0, 1.0), 0.999, [2.0, -1.77, -1.77], [[0.0; 3]; 3]);
+        scene.push(v3(0.0, 0.5, 2.0), Quat::IDENTITY, v3(1.0, 1.0, 1.0), 0.999, [-1.77, 2.0, -1.77], [[0.0; 3]; 3]);
+        let out = render(&scene, &cam(64), &RenderOptions::default());
+        let c = out.image.get(32, 32);
+        assert!(c[0] > 5.0 * c[1], "front red must dominate: {c:?}");
+    }
+
+    #[test]
+    fn order_independence_of_input() {
+        // Same scene, reversed insertion order → same image (depth sort).
+        let mut a = Scene::with_capacity(2, "t");
+        a.push(v3(0.0, 0.5, -2.0), Quat::IDENTITY, v3(1.0, 1.0, 1.0), 0.9, [2.0, -1.77, -1.77], [[0.0; 3]; 3]);
+        a.push(v3(0.0, 0.5, 2.0), Quat::IDENTITY, v3(1.0, 1.0, 1.0), 0.9, [-1.77, 2.0, -1.77], [[0.0; 3]; 3]);
+        let mut b = Scene::with_capacity(2, "t");
+        b.push(v3(0.0, 0.5, 2.0), Quat::IDENTITY, v3(1.0, 1.0, 1.0), 0.9, [-1.77, 2.0, -1.77], [[0.0; 3]; 3]);
+        b.push(v3(0.0, 0.5, -2.0), Quat::IDENTITY, v3(1.0, 1.0, 1.0), 0.9, [2.0, -1.77, -1.77], [[0.0; 3]; 3]);
+        let ia = render(&a, &cam(48), &RenderOptions::default()).image;
+        let ib = render(&b, &cam(48), &RenderOptions::default()).image;
+        assert!(ia.mad(&ib) < 1e-6);
+    }
+
+    #[test]
+    fn early_termination_fires_behind_opaque_wall() {
+        let mut scene = Scene::with_capacity(40, "t");
+        // Six huge fully-opaque Gaussians cover the whole view: even at the
+        // image corners (α ≈ 0.94 each) transmittance drops below t_min
+        // after all six blend.
+        for k in 0..6 {
+            scene.push(
+                v3(0.0, 0.5, -3.0 - 0.1 * k as f32),
+                Quat::IDENTITY,
+                v3(30.0, 30.0, 30.0),
+                0.999,
+                [1.0, 1.0, 1.0],
+                [[0.0; 3]; 3],
+            );
+        }
+        // ...and many behind it.
+        for i in 0..20 {
+            scene.push(
+                v3(-2.0 + 0.2 * i as f32, 0.5, 3.0),
+                Quat::IDENTITY,
+                v3(0.5, 0.5, 0.5),
+                0.9,
+                [0.0, 1.0, 0.0],
+                [[0.0; 3]; 3],
+            );
+        }
+        let out = render(&scene, &cam(64), &RenderOptions::default());
+        assert!(
+            out.stats.tiles_early_terminated > 0,
+            "expected early termination: {:?}",
+            out.stats
+        );
+    }
+
+    #[test]
+    fn mask_zero_skips_everything() {
+        struct NoneMask;
+        impl MaskProvider for NoneMask {
+            fn mask(&mut self, _t: &Rect, _s: &Splat) -> u32 {
+                0
+            }
+        }
+        let scene = single_gaussian_scene(0.9);
+        let opts = RenderOptions::default();
+        let out = render_masked(&scene, &cam(32), &opts, &mut NoneMask, None);
+        assert_eq!(out.stats.pairs_tested, 0);
+        assert!(out.image.get(16, 16)[0] < 1e-6);
+    }
+
+    #[test]
+    fn contributions_accumulate_where_visible() {
+        let scene = single_gaussian_scene(0.9);
+        let mut scores = vec![0.0f32; 1];
+        let opts = RenderOptions::default();
+        render_masked(&scene, &cam(32), &opts, &mut AllOnes, Some(&mut scores));
+        assert!(scores[0] > 1.0, "visible gaussian should score: {}", scores[0]);
+    }
+
+    #[test]
+    fn obb_and_aabb_agree_visually() {
+        // OBB only removes tiles whose pixels all have α < threshold, so the
+        // image difference must be tiny (bounded by ALPHA_MIN leakage).
+        let scene = generate_scaled(&preset("truck"), 0.01);
+        let c = cam(96);
+        let a = render(&scene, &c, &RenderOptions { strategy: Strategy::Aabb, ..Default::default() });
+        let o = render(&scene, &c, &RenderOptions { strategy: Strategy::Obb, ..Default::default() });
+        let p = super::super::metrics::psnr(&a.image, &o.image);
+        assert!(p > 38.0, "OBB vs AABB PSNR {p}");
+        // And OBB must do less per-pixel work.
+        assert!(o.stats.pairs_tested <= a.stats.pairs_tested);
+        assert!(o.stats.tile_pairs <= a.stats.tile_pairs);
+    }
+
+    #[test]
+    fn stats_sane_on_synthetic_scene() {
+        let scene = generate_scaled(&preset("garden"), 0.01);
+        let out = render(&scene, &cam(128), &RenderOptions::default());
+        assert!(out.stats.splats > 100);
+        assert!(out.stats.tile_pairs >= out.stats.splats / 4);
+        assert!(out.stats.pairs_tested > out.stats.pairs_blended);
+        assert_eq!(out.stats.pixels, 128 * 128);
+    }
+}

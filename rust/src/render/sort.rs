@@ -1,0 +1,163 @@
+//! Depth sorting of per-tile splat lists, paper Step (2).
+//!
+//! The reference path uses a stable sort by camera-space depth (near→far).
+//! We also provide counting-sort over quantized depth keys — the form a
+//! hardware bitonic/merge sorting unit produces — so the simulator's sorter
+//! model and the functional path agree on ordering semantics.
+
+use super::project::Splat;
+
+/// Sort indices of `splats` (near → far) using exact f32 depth, stable.
+pub fn sort_by_depth(list: &mut [u32], splats: &[Splat]) {
+    list.sort_by(|&a, &b| {
+        splats[a as usize]
+            .depth
+            .partial_cmp(&splats[b as usize].depth)
+            .unwrap_or(std::cmp::Ordering::Equal)
+    });
+}
+
+/// Quantize a depth to the 16-bit key a hardware sorter would use.
+/// Linear in 1/z between near and far gives better near-field resolution.
+pub fn depth_key(depth: f32, near: f32, far: f32) -> u16 {
+    let inv = 1.0 / depth.max(near);
+    let inv_near = 1.0 / near;
+    let inv_far = 1.0 / far;
+    let t = ((inv_near - inv) / (inv_near - inv_far)).clamp(0.0, 1.0);
+    (t * 65535.0) as u16
+}
+
+/// Counting sort on 16-bit quantized keys (stable). This is the ordering the
+/// simulator's sorting unit produces; ties keep submission order, matching a
+/// merge network's stability.
+pub fn sort_by_key16(list: &mut Vec<u32>, splats: &[Splat], near: f32, far: f32) {
+    if list.len() <= 1 {
+        return;
+    }
+    let keys: Vec<u16> = list
+        .iter()
+        .map(|&i| depth_key(splats[i as usize].depth, near, far))
+        .collect();
+    // Radix-2×8, stable: low byte pass into tmp, high byte pass back.
+    let n = list.len();
+    let mut tmp: Vec<u32> = vec![0; n];
+    let mut tmp_keys: Vec<u16> = vec![0; n];
+
+    // Pass 1: low byte, list → tmp (carry keys along).
+    let mut counts = [0usize; 257];
+    for &k in &keys {
+        counts[(k & 0xFF) as usize + 1] += 1;
+    }
+    for b in 1..257 {
+        counts[b] += counts[b - 1];
+    }
+    for pos in 0..n {
+        let b = (keys[pos] & 0xFF) as usize;
+        tmp[counts[b]] = list[pos];
+        tmp_keys[counts[b]] = keys[pos];
+        counts[b] += 1;
+    }
+
+    // Pass 2: high byte, tmp → list.
+    let mut counts = [0usize; 257];
+    for &k in &tmp_keys {
+        counts[(k >> 8) as usize + 1] += 1;
+    }
+    for b in 1..257 {
+        counts[b] += counts[b - 1];
+    }
+    for pos in 0..n {
+        let b = (tmp_keys[pos] >> 8) as usize;
+        list[counts[b]] = tmp[pos];
+        counts[b] += 1;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::camera::{Camera, Intrinsics};
+    use crate::numeric::linalg::{v3, Quat};
+    use crate::render::project::project_one;
+    use crate::scene::gaussian::Scene;
+    use crate::util::rng::Pcg32;
+
+    fn splats_with_depths(depths: &[f32]) -> Vec<Splat> {
+        let cam = Camera::look_at(
+            Intrinsics::from_fov(128, 128, 1.2),
+            v3(0.0, 0.0, -10.0),
+            v3(0.0, 0.0, 0.0),
+            v3(0.0, 1.0, 0.0),
+        );
+        depths
+            .iter()
+            .map(|&d| {
+                let mut sc = Scene::with_capacity(1, "t");
+                sc.push(
+                    v3(0.0, 0.0, d - 10.0),
+                    Quat::IDENTITY,
+                    v3(0.2, 0.2, 0.2),
+                    0.5,
+                    [0.5; 3],
+                    [[0.0; 3]; 3],
+                );
+                project_one(&sc, 0, &cam).unwrap()
+            })
+            .collect()
+    }
+
+    #[test]
+    fn exact_sort_orders_near_to_far() {
+        let splats = splats_with_depths(&[5.0, 2.0, 9.0, 3.0]);
+        let mut list: Vec<u32> = vec![0, 1, 2, 3];
+        sort_by_depth(&mut list, &splats);
+        assert_eq!(list, vec![1, 3, 0, 2]);
+    }
+
+    #[test]
+    fn key16_monotone_in_depth() {
+        let mut prev = 0u16;
+        for i in 1..100 {
+            let d = 0.1 + i as f32 * 0.5;
+            let k = depth_key(d, 0.05, 1000.0);
+            assert!(k >= prev, "depth {d}");
+            prev = k;
+        }
+    }
+
+    #[test]
+    fn radix_matches_exact_up_to_key_ties() {
+        let mut rng = Pcg32::new(99);
+        let depths: Vec<f32> = (0..300).map(|_| rng.range_f32(1.0, 50.0)).collect();
+        let splats = splats_with_depths(&depths);
+        let mut exact: Vec<u32> = (0..300).collect();
+        sort_by_depth(&mut exact, &splats);
+        let mut radix: Vec<u32> = (0..300).collect();
+        sort_by_key16(&mut radix, &splats, 0.05, 1000.0);
+        // Keys are monotone in depth, so sequences of keys must agree.
+        let k = |i: u32| depth_key(splats[i as usize].depth, 0.05, 1000.0);
+        let ek: Vec<u16> = exact.iter().map(|&i| k(i)).collect();
+        let rk: Vec<u16> = radix.iter().map(|&i| k(i)).collect();
+        assert_eq!(ek, rk);
+    }
+
+    #[test]
+    fn radix_is_stable() {
+        // Equal depths keep submission order.
+        let splats = splats_with_depths(&[4.0, 4.0, 4.0]);
+        let mut list = vec![2u32, 0, 1];
+        sort_by_key16(&mut list, &splats, 0.05, 1000.0);
+        assert_eq!(list, vec![2, 0, 1]);
+    }
+
+    #[test]
+    fn empty_and_single() {
+        let splats = splats_with_depths(&[4.0]);
+        let mut empty: Vec<u32> = vec![];
+        sort_by_key16(&mut empty, &splats, 0.05, 1000.0);
+        assert!(empty.is_empty());
+        let mut one = vec![0u32];
+        sort_by_key16(&mut one, &splats, 0.05, 1000.0);
+        assert_eq!(one, vec![0]);
+    }
+}

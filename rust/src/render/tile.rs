@@ -1,0 +1,382 @@
+//! Tiling and tile↔splat intersection tests, paper Fig. 2(b).
+//!
+//! Three intersection strategies are implemented:
+//! * **AABB** — vanilla 3DGS: axis-aligned 3σ bounding box vs tile rect.
+//! * **OBB**  — GSCore [7]: oriented bounding box aligned to the splat's
+//!   eigenbasis, tested with the separating-axis theorem; much tighter for
+//!   spiky splats.
+//! * sub-tile refinement — GSCore splits tiles into 8×8 sub-tiles; FLICKER's
+//!   hierarchical Stage-1 uses the same AABB-at-sub-tile-granularity test.
+//!
+//! The contribution-level test (Mini-Tile CAT) lives in `crate::cat`.
+
+use super::project::Splat;
+use crate::numeric::linalg::{v2, Vec2};
+
+/// Pixel rectangle [x0, x1) × [y0, y1).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Rect {
+    pub x0: f32,
+    pub y0: f32,
+    pub x1: f32,
+    pub y1: f32,
+}
+
+impl Rect {
+    pub fn tile(tx: u32, ty: u32, size: u32) -> Rect {
+        Rect {
+            x0: (tx * size) as f32,
+            y0: (ty * size) as f32,
+            x1: ((tx + 1) * size) as f32,
+            y1: ((ty + 1) * size) as f32,
+        }
+    }
+
+    pub fn center(&self) -> Vec2 {
+        v2(0.5 * (self.x0 + self.x1), 0.5 * (self.y0 + self.y1))
+    }
+
+    pub fn half_extent(&self) -> Vec2 {
+        v2(0.5 * (self.x1 - self.x0), 0.5 * (self.y1 - self.y0))
+    }
+}
+
+/// Grid geometry for an image tiled at `tile` pixels.
+#[derive(Clone, Copy, Debug)]
+pub struct TileGrid {
+    pub width: u32,
+    pub height: u32,
+    pub tile: u32,
+    pub tiles_x: u32,
+    pub tiles_y: u32,
+}
+
+impl TileGrid {
+    pub fn new(width: u32, height: u32, tile: u32) -> TileGrid {
+        TileGrid {
+            width,
+            height,
+            tile,
+            tiles_x: width.div_ceil(tile),
+            tiles_y: height.div_ceil(tile),
+        }
+    }
+
+    pub fn num_tiles(&self) -> usize {
+        (self.tiles_x * self.tiles_y) as usize
+    }
+
+    pub fn rect(&self, t: usize) -> Rect {
+        let tx = t as u32 % self.tiles_x;
+        let ty = t as u32 / self.tiles_x;
+        Rect::tile(tx, ty, self.tile)
+    }
+
+    /// Tiles whose AABB-range the splat's 3σ box touches (the candidate set
+    /// every strategy starts from).
+    pub fn candidate_range(&self, s: &Splat) -> (u32, u32, u32, u32) {
+        let r = s.radius;
+        let x0 = ((s.mean.x - r) / self.tile as f32).floor().max(0.0) as u32;
+        let y0 = ((s.mean.y - r) / self.tile as f32).floor().max(0.0) as u32;
+        let x1 = (((s.mean.x + r) / self.tile as f32).ceil() as u32).min(self.tiles_x);
+        let y1 = (((s.mean.y + r) / self.tile as f32).ceil() as u32).min(self.tiles_y);
+        (x0, y0, x1.max(x0), y1.max(y0))
+    }
+}
+
+/// AABB test: splat's axis-aligned 3σ box vs tile rect (vanilla 3DGS).
+#[inline]
+pub fn intersects_aabb(s: &Splat, rect: &Rect) -> bool {
+    s.mean.x + s.radius >= rect.x0
+        && s.mean.x - s.radius < rect.x1
+        && s.mean.y + s.radius >= rect.y0
+        && s.mean.y - s.radius < rect.y1
+}
+
+/// OBB test (GSCore): oriented 3σ box in the splat eigenbasis vs tile rect,
+/// separating-axis theorem over the 4 candidate axes (2 box axes are enough
+/// for rect-vs-rect in 2D: the tile's axes and the OBB's axes).
+pub fn intersects_obb(s: &Splat, rect: &Rect) -> bool {
+    let (l1, l2) = s.cov.eigenvalues();
+    let major = s.cov.major_axis();
+    let minor = v2(-major.y, major.x);
+    let e1 = 3.0 * l1.sqrt(); // half-length along major
+    let e2 = 3.0 * l2.max(0.0).sqrt();
+
+    let c = rect.center();
+    let h = rect.half_extent();
+    let d = s.mean - c;
+
+    // Axes of the tile (x, y): project OBB onto them.
+    for (axis, tile_h) in [(v2(1.0, 0.0), h.x), (v2(0.0, 1.0), h.y)] {
+        let obb_r = e1 * major.dot(axis).abs() + e2 * minor.dot(axis).abs();
+        if d.dot(axis).abs() > tile_h + obb_r {
+            return false;
+        }
+    }
+    // Axes of the OBB: project tile onto them.
+    for (axis, obb_h) in [(major, e1), (minor, e2)] {
+        let tile_r = h.x * axis.x.abs() + h.y * axis.y.abs();
+        if d.dot(axis).abs() > obb_h + tile_r {
+            return false;
+        }
+    }
+    true
+}
+
+/// Exact "does any point of the rect have α ≥ 1/255" test — the oracle the
+/// cheaper tests approximate. Finds the rect point minimizing the quadratic
+/// form (clamped Newton on the box) — for a convex quadratic the minimum
+/// over a box is at the clamped unconstrained minimum for each fixed
+/// coordinate; we evaluate the clamped mean plus the 4 edges' minimizers.
+pub fn intersects_exact(s: &Splat, rect: &Rect, alpha_min: f32) -> bool {
+    if s.opacity < alpha_min {
+        return false;
+    }
+    // Threshold on the quadratic form E: α = o·e^{-E} ≥ αmin  ⇔  E ≤ ln(o/αmin).
+    let e_max = (s.opacity / alpha_min).ln();
+    min_quad_on_rect(s, rect) <= e_max
+}
+
+/// Minimum of E(p) = ½ (p-μ)ᵀ Σ⁻¹ (p-μ) over the rect.
+pub fn min_quad_on_rect(s: &Splat, rect: &Rect) -> f32 {
+    let cx = s.mean.x.clamp(rect.x0, rect.x1);
+    let cy = s.mean.y.clamp(rect.y0, rect.y1);
+    // If μ inside rect, min is 0.
+    if cx == s.mean.x && cy == s.mean.y {
+        return 0.0;
+    }
+    let q = |x: f32, y: f32| {
+        let dx = x - s.mean.x;
+        let dy = y - s.mean.y;
+        0.5 * (s.conic.a * dx * dx + 2.0 * s.conic.b * dx * dy + s.conic.c * dy * dy)
+    };
+    // Candidate minimizers: for each edge, minimize the 1-D restriction.
+    let mut best = f32::INFINITY;
+    // Vertical edges x = x0, x1: dE/dy = 0 → y* = μy - b/c (x-μx)
+    for x in [rect.x0, rect.x1] {
+        let y_star = s.mean.y - s.conic.b / s.conic.c * (x - s.mean.x);
+        let y = y_star.clamp(rect.y0, rect.y1);
+        best = best.min(q(x, y));
+    }
+    // Horizontal edges y = y0, y1.
+    for y in [rect.y0, rect.y1] {
+        let x_star = s.mean.x - s.conic.b / s.conic.a * (y - s.mean.y);
+        let x = x_star.clamp(rect.x0, rect.x1);
+        best = best.min(q(x, y));
+    }
+    best
+}
+
+/// Build per-tile splat index lists with the chosen strategy. Splat order is
+/// preserved (callers depth-sort afterwards). Returns `lists[tile] -> Vec<splat idx>`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Strategy {
+    Aabb,
+    Obb,
+}
+
+pub fn build_tile_lists(splats: &[Splat], grid: &TileGrid, strategy: Strategy) -> Vec<Vec<u32>> {
+    let mut lists = vec![Vec::new(); grid.num_tiles()];
+    for (si, s) in splats.iter().enumerate() {
+        let (x0, y0, x1, y1) = grid.candidate_range(s);
+        for ty in y0..y1 {
+            for tx in x0..x1 {
+                let rect = Rect::tile(tx, ty, grid.tile);
+                let hit = match strategy {
+                    Strategy::Aabb => intersects_aabb(s, &rect),
+                    Strategy::Obb => intersects_obb(s, &rect),
+                };
+                if hit {
+                    lists[(ty * grid.tiles_x + tx) as usize].push(si as u32);
+                }
+            }
+        }
+    }
+    lists
+}
+
+/// Total number of (splat, tile) pairs — the "duplicated Gaussians" metric
+/// of paper Fig. 4 (right).
+pub fn duplicate_count(lists: &[Vec<u32>]) -> usize {
+    lists.iter().map(|l| l.len()).sum()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::camera::{Camera, Intrinsics};
+    use crate::numeric::linalg::{v3, Quat};
+    use crate::render::project::project_one;
+    use crate::scene::gaussian::Scene;
+
+    fn splat_at(mx: f32, my: f32, scale: crate::numeric::linalg::Vec3, rot: Quat) -> Splat {
+        // Build via real projection so conic/cov stay consistent.
+        let cam = Camera::look_at(
+            Intrinsics::from_fov(256, 256, 1.2),
+            v3(0.0, 0.0, -6.0),
+            v3(0.0, 0.0, 0.0),
+            v3(0.0, 1.0, 0.0),
+        );
+        let mut sc = Scene::with_capacity(1, "t");
+        sc.push(v3(0.0, 0.0, 0.0), rot, scale, 0.9, [1.0; 3], [[0.0; 3]; 3]);
+        let mut s = project_one(&sc, 0, &cam).unwrap();
+        s.mean = v2(mx, my);
+        s
+    }
+
+    #[test]
+    fn grid_geometry() {
+        let g = TileGrid::new(256, 256, 16);
+        assert_eq!(g.tiles_x, 16);
+        assert_eq!(g.num_tiles(), 256);
+        let r = g.rect(17); // tile (1,1)
+        assert_eq!(r.x0, 16.0);
+        assert_eq!(r.y0, 16.0);
+    }
+
+    #[test]
+    fn grid_non_divisible() {
+        let g = TileGrid::new(250, 130, 16);
+        assert_eq!(g.tiles_x, 16);
+        assert_eq!(g.tiles_y, 9);
+    }
+
+    #[test]
+    fn aabb_hits_overlapping_tile() {
+        let s = splat_at(24.0, 24.0, v3(0.3, 0.3, 0.3), Quat::IDENTITY);
+        assert!(intersects_aabb(&s, &Rect::tile(1, 1, 16)));
+        // Far-away tile misses.
+        assert!(!intersects_aabb(&s, &Rect::tile(10, 10, 16)));
+    }
+
+    #[test]
+    fn obb_is_subset_of_aabb() {
+        // OBB can only reject more than AABB (it's tighter).
+        let s = splat_at(100.0, 100.0, v3(1.5, 0.05, 0.05), Quat::from_axis_angle(v3(0.0, 0.0, 1.0), 0.8));
+        let g = TileGrid::new(256, 256, 16);
+        for t in 0..g.num_tiles() {
+            let r = g.rect(t);
+            if intersects_obb(&s, &r) {
+                assert!(intersects_aabb(&s, &r), "OBB hit but AABB miss at tile {t}");
+            }
+        }
+    }
+
+    #[test]
+    fn obb_tighter_for_diagonal_spiky() {
+        // 45°-oriented elongated splat: AABB covers a big square, OBB a thin
+        // diagonal band.
+        let s = splat_at(
+            128.0,
+            128.0,
+            v3(2.0, 0.05, 0.05),
+            Quat::from_axis_angle(v3(0.0, 0.0, 1.0), std::f32::consts::FRAC_PI_4),
+        );
+        let g = TileGrid::new(256, 256, 16);
+        let aabb = build_tile_lists(&[s], &g, Strategy::Aabb);
+        let obb = build_tile_lists(&[s], &g, Strategy::Obb);
+        let (na, no) = (duplicate_count(&aabb), duplicate_count(&obb));
+        assert!(
+            no * 2 < na,
+            "expected OBB to at least halve tiles: aabb {na}, obb {no}"
+        );
+    }
+
+    #[test]
+    fn exact_is_subset_of_obb() {
+        // The OBB truncates at 3σ (E = 4.5), so containment of the exact
+        // α-threshold test only holds when ln(255·o) ≤ 4.5, i.e. o ≲ 0.353
+        // — contributions beyond 3σ are dropped by convention in 3DGS.
+        let mut s = splat_at(
+            77.0,
+            133.0,
+            v3(1.0, 0.08, 0.08),
+            Quat::from_axis_angle(v3(0.0, 0.0, 1.0), 1.1),
+        );
+        s.opacity = 0.3;
+        let g = TileGrid::new(256, 256, 16);
+        for t in 0..g.num_tiles() {
+            let r = g.rect(t);
+            if intersects_exact(&s, &r, 1.0 / 255.0) {
+                assert!(intersects_obb(&s, &r), "exact hit but OBB miss at {t}");
+            }
+        }
+    }
+
+    #[test]
+    fn exact_matches_dense_sampling_oracle() {
+        let s = splat_at(
+            90.0,
+            90.0,
+            v3(0.6, 0.1, 0.1),
+            Quat::from_axis_angle(v3(0.0, 0.0, 1.0), 0.5),
+        );
+        let g = TileGrid::new(192, 192, 16);
+        let alpha_min = 1.0 / 255.0;
+        for t in 0..g.num_tiles() {
+            let r = g.rect(t);
+            // Brute-force: sample every pixel center in the tile.
+            let mut any = false;
+            let mut y = r.y0 + 0.5;
+            while y < r.y1 {
+                let mut x = r.x0 + 0.5;
+                while x < r.x1 {
+                    if s.alpha_at(x, y) >= alpha_min {
+                        any = true;
+                    }
+                    x += 1.0;
+                }
+                y += 1.0;
+            }
+            let exact = intersects_exact(&s, &r, alpha_min);
+            // `exact` uses the continuous rect so it can only over-include
+            // relative to pixel centers.
+            if any {
+                assert!(exact, "tile {t}: pixel hit but exact miss");
+            }
+        }
+    }
+
+    #[test]
+    fn min_quad_zero_inside() {
+        let s = splat_at(50.0, 50.0, v3(0.3, 0.3, 0.3), Quat::IDENTITY);
+        let r = Rect { x0: 48.0, y0: 48.0, x1: 64.0, y1: 64.0 };
+        assert_eq!(min_quad_on_rect(&s, &r), 0.0);
+    }
+
+    #[test]
+    fn candidate_range_clipped_to_grid() {
+        let s = splat_at(2.0, 2.0, v3(2.0, 2.0, 2.0), Quat::IDENTITY);
+        let g = TileGrid::new(64, 64, 16);
+        let (x0, y0, x1, y1) = g.candidate_range(&s);
+        assert_eq!(x0, 0);
+        assert_eq!(y0, 0);
+        assert!(x1 <= g.tiles_x && y1 <= g.tiles_y);
+    }
+
+    #[test]
+    fn duplicates_grow_as_tiles_shrink() {
+        let splats: Vec<Splat> = (0..20)
+            .map(|i| {
+                splat_at(
+                    20.0 + 10.0 * i as f32,
+                    128.0,
+                    v3(0.5, 0.2, 0.2),
+                    Quat::from_axis_angle(v3(0.0, 0.0, 1.0), i as f32 * 0.3),
+                )
+            })
+            .collect();
+        let d16 = duplicate_count(&build_tile_lists(
+            &splats,
+            &TileGrid::new(256, 256, 16),
+            Strategy::Aabb,
+        ));
+        let d4 = duplicate_count(&build_tile_lists(
+            &splats,
+            &TileGrid::new(256, 256, 4),
+            Strategy::Aabb,
+        ));
+        assert!(d4 > d16 * 2, "d4={d4} d16={d16}");
+    }
+}

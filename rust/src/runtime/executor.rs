@@ -1,0 +1,213 @@
+//! Tile executor: the bridge between the coordinator's per-tile work units
+//! and the fixed-shape PJRT artifacts.
+//!
+//! Artifacts are monomorphic (N_GAUSS splats, N_PR pixel-rectangles), so the
+//! executor pads each tile's depth-sorted splat list with zero-opacity
+//! entries (exact no-ops through CAT and blending — validated by
+//! python/tests/test_model.py) and chunks lists longer than N_GAUSS,
+//! carrying transmittance between chunks on the Rust side.
+
+use super::Runtime;
+use crate::cat::leader::dense_layout;
+use crate::render::image::Image;
+use crate::render::project::Splat;
+use crate::render::tile::Rect;
+use anyhow::Result;
+
+/// Per-tile PJRT render statistics.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ExecStats {
+    pub tiles: usize,
+    pub chunks: usize,
+    pub splats_submitted: usize,
+    pub splats_passed_cat: usize,
+}
+
+/// Executes tile renders through the `render_tile` artifact.
+pub struct TileExecutor<'rt> {
+    rt: &'rt Runtime,
+    pub stats: ExecStats,
+}
+
+impl<'rt> TileExecutor<'rt> {
+    pub fn new(rt: &'rt Runtime) -> Self {
+        TileExecutor {
+            rt,
+            stats: ExecStats::default(),
+        }
+    }
+
+    /// Render one 16×16 tile from its depth-sorted splats; writes pixels
+    /// into `img`. Splat lists longer than the artifact batch are chunked;
+    /// because the artifact restarts transmittance per call, chunk results
+    /// are composited front-to-back on the host: out += T_acc · chunk_rgb,
+    /// T_acc *= chunk_T.
+    pub fn render_tile(
+        &mut self,
+        tile: &Rect,
+        splats: &[Splat],
+        order: &[u32],
+        img: &mut Image,
+        background: [f32; 3],
+    ) -> Result<()> {
+        let n = self.rt.manifest.n_gauss;
+        let m = self.rt.manifest.n_pr;
+        let t = self.rt.manifest.tile as u32;
+        self.stats.tiles += 1;
+
+        // Dense PR layout over the tile's 4 sub-tiles: M = 16 PRs cover the
+        // whole tile (Uniform-Dense CAT; the golden-model engine remains the
+        // reference for the adaptive modes).
+        let mut p_top = vec![0.0f32; m * 2];
+        let mut p_bot = vec![0.0f32; m * 2];
+        let layouts = dense_layout();
+        for k in 0..m {
+            let sub = k / 4; // sub-tile ordinal, row-major 2×2
+            let (sx, sy) = ((sub % 2) as f32 * 8.0, (sub / 2) as f32 * 8.0);
+            let pr = &layouts[k % 4];
+            p_top[k * 2] = tile.x0 + sx + pr.x_top;
+            p_top[k * 2 + 1] = tile.y0 + sy + pr.y_top;
+            p_bot[k * 2] = tile.x0 + sx + pr.x_bot;
+            p_bot[k * 2 + 1] = tile.y0 + sy + pr.y_bot;
+        }
+
+        let mut acc_rgb = vec![[0.0f32; 3]; (t * t) as usize];
+        let mut acc_t = vec![1.0f32; (t * t) as usize];
+
+        for chunk in order.chunks(n) {
+            self.stats.chunks += 1;
+            self.stats.splats_submitted += chunk.len();
+            let mut mu = vec![0.0f32; n * 2];
+            let mut conic = vec![0.0f32; n * 3];
+            let mut opacity = vec![0.0f32; n];
+            let mut color = vec![0.0f32; n * 3];
+            for (i, &si) in chunk.iter().enumerate() {
+                let s = &splats[si as usize];
+                mu[i * 2] = s.mean.x;
+                mu[i * 2 + 1] = s.mean.y;
+                conic[i * 3] = s.conic.a;
+                conic[i * 3 + 1] = s.conic.b;
+                conic[i * 3 + 2] = s.conic.c;
+                opacity[i] = s.opacity;
+                color[i * 3] = s.color[0];
+                color[i * 3 + 1] = s.color[1];
+                color[i * 3 + 2] = s.color[2];
+            }
+            // Padding rows keep conic PSD-ish to avoid NaNs (opacity 0
+            // already guarantees no contribution).
+            for i in chunk.len()..n {
+                conic[i * 3] = 1.0;
+                conic[i * 3 + 2] = 1.0;
+            }
+            let origin = [tile.x0, tile.y0];
+            let out = self.rt.exec_f32(
+                "render_tile",
+                &[
+                    (&mu, &[n as i64, 2]),
+                    (&conic, &[n as i64, 3]),
+                    (&opacity, &[n as i64]),
+                    (&color, &[n as i64, 3]),
+                    (&origin, &[2]),
+                    (&p_top, &[m as i64, 2]),
+                    (&p_bot, &[m as i64, 2]),
+                ],
+            )?;
+            let rgb = &out[0]; // (16,16,3)
+            let trans = &out[1]; // (16,16)
+            let passes = &out[2]; // (N,)
+            self.stats.splats_passed_cat +=
+                passes.iter().take(chunk.len()).filter(|&&p| p > 0.5).count();
+            for p in 0..(t * t) as usize {
+                let ta = acc_t[p];
+                acc_rgb[p][0] += ta * rgb[p * 3];
+                acc_rgb[p][1] += ta * rgb[p * 3 + 1];
+                acc_rgb[p][2] += ta * rgb[p * 3 + 2];
+                acc_t[p] = ta * trans[p];
+            }
+            // All pixels saturated → later chunks contribute nothing.
+            if acc_t.iter().all(|&tv| tv < 1e-4) {
+                break;
+            }
+        }
+
+        for py in 0..t {
+            for px in 0..t {
+                let gx = tile.x0 as u32 + px;
+                let gy = tile.y0 as u32 + py;
+                if gx >= img.width || gy >= img.height {
+                    continue;
+                }
+                let p = (py * t + px) as usize;
+                let tr = acc_t[p];
+                img.set(
+                    gx,
+                    gy,
+                    [
+                        acc_rgb[p][0] + tr * background[0],
+                        acc_rgb[p][1] + tr * background[1],
+                        acc_rgb[p][2] + tr * background[2],
+                    ],
+                );
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::camera::{Camera, Intrinsics};
+    use crate::numeric::linalg::{v3, Quat};
+    use crate::render::project::project_scene;
+    use crate::render::sort::sort_by_depth;
+    use crate::render::tile::{build_tile_lists, Strategy, TileGrid};
+    use crate::runtime::default_artifact_dir;
+    use crate::scene::gaussian::Scene;
+
+    #[test]
+    fn executor_matches_golden_rasterizer() {
+        if !default_artifact_dir().join("manifest.json").exists() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let rt = Runtime::load(&default_artifact_dir()).unwrap();
+        let cam = Camera::look_at(
+            Intrinsics::from_fov(32, 32, 1.2),
+            v3(0.0, 0.0, -6.0),
+            v3(0.0, 0.0, 0.0),
+            v3(0.0, 1.0, 0.0),
+        );
+        let mut scene = Scene::with_capacity(3, "t");
+        scene.push(v3(0.0, 0.0, 0.0), Quat::IDENTITY, v3(0.6, 0.6, 0.6), 0.9, [1.5, 0.0, 0.0], [[0.0; 3]; 3]);
+        scene.push(v3(0.4, 0.2, 1.0), Quat::IDENTITY, v3(0.4, 0.4, 0.4), 0.7, [0.0, 1.5, 0.0], [[0.0; 3]; 3]);
+        scene.push(v3(-0.4, -0.2, 2.0), Quat::IDENTITY, v3(0.5, 0.5, 0.5), 0.5, [0.0, 0.0, 1.5], [[0.0; 3]; 3]);
+
+        // Golden render.
+        let golden = crate::render::raster::render(
+            &scene,
+            &cam,
+            &crate::render::raster::RenderOptions::default(),
+        );
+
+        // PJRT render.
+        let splats = project_scene(&scene, &cam);
+        let grid = TileGrid::new(32, 32, 16);
+        let mut lists = build_tile_lists(&splats, &grid, Strategy::Aabb);
+        for l in &mut lists {
+            sort_by_depth(l, &splats);
+        }
+        let mut img = Image::new(32, 32);
+        let mut ex = TileExecutor::new(&rt);
+        for (t, list) in lists.iter().enumerate() {
+            ex.render_tile(&grid.rect(t), &splats, list, &mut img, [0.0; 3])
+                .unwrap();
+        }
+        // CAT gating in the artifact may drop marginal splats the golden
+        // model blends, so compare with PSNR, not exactness.
+        let p = crate::render::metrics::psnr(&golden.image, &img);
+        assert!(p > 30.0, "PJRT vs golden PSNR {p}");
+        assert!(ex.stats.tiles == 4);
+        assert!(ex.stats.splats_passed_cat > 0);
+    }
+}

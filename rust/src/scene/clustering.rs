@@ -1,0 +1,207 @@
+//! Gaussian clustering into "big Gaussians" (PS-GS [18]).
+//!
+//! The paper reduces DDR traffic by grouping Gaussians into clusters and
+//! frustum-culling the cluster's bounding sphere instead of each member
+//! (Sec. IV-A "Memory Access Optimization"). We implement voxel-grid
+//! clustering with a target mean cluster size, producing bounding spheres
+//! consumed by the preprocessing-core model and the DRAM traffic model.
+
+use super::gaussian::Scene;
+use crate::camera::Camera;
+use crate::numeric::linalg::{v3, Vec3};
+use std::collections::HashMap;
+
+/// One cluster ("big Gaussian"): bounding sphere + member indices.
+#[derive(Clone, Debug)]
+pub struct Cluster {
+    pub center: Vec3,
+    pub radius: f32,
+    pub members: Vec<u32>,
+}
+
+/// The clustered scene index.
+#[derive(Clone, Debug, Default)]
+pub struct Clustering {
+    pub clusters: Vec<Cluster>,
+    /// Voxel edge used.
+    pub cell: f32,
+}
+
+impl Clustering {
+    pub fn num_clusters(&self) -> usize {
+        self.clusters.len()
+    }
+
+    pub fn mean_size(&self) -> f64 {
+        if self.clusters.is_empty() {
+            return 0.0;
+        }
+        self.clusters.iter().map(|c| c.members.len()).sum::<usize>() as f64
+            / self.clusters.len() as f64
+    }
+
+    /// Indices of Gaussians surviving cluster-level frustum culling: all
+    /// members of clusters whose sphere intersects the frustum.
+    pub fn cull(&self, cam: &Camera) -> Vec<u32> {
+        let mut out = Vec::new();
+        for c in &self.clusters {
+            if cam.sphere_in_frustum(c.center, c.radius) {
+                out.extend_from_slice(&c.members);
+            }
+        }
+        out
+    }
+
+    /// Count clusters visible from `cam` (metadata reads the DRAM model charges).
+    pub fn visible_clusters(&self, cam: &Camera) -> usize {
+        self.clusters
+            .iter()
+            .filter(|c| cam.sphere_in_frustum(c.center, c.radius))
+            .count()
+    }
+}
+
+/// Voxel-grid clustering with `target_size` mean members per cluster.
+/// The voxel edge is derived from scene density so cluster occupancy is
+/// roughly uniform regardless of scene scale.
+pub fn cluster(scene: &Scene, target_size: usize) -> Clustering {
+    assert!(target_size >= 1);
+    if scene.is_empty() {
+        return Clustering::default();
+    }
+    let (lo, hi) = scene.bounds();
+    let extent = hi - lo;
+    let volume = (extent.x.max(1e-3) * extent.y.max(1e-3) * extent.z.max(1e-3)) as f64;
+    // cell³ · density ≈ target_size  →  cell = (target·V/N)^(1/3)
+    let cell = ((target_size as f64 * volume / scene.len() as f64).cbrt() as f32).max(1e-3);
+
+    let mut map: HashMap<(i32, i32, i32), Vec<u32>> = HashMap::new();
+    for i in 0..scene.len() {
+        let p = scene.pos[i];
+        let key = (
+            ((p.x - lo.x) / cell).floor() as i32,
+            ((p.y - lo.y) / cell).floor() as i32,
+            ((p.z - lo.z) / cell).floor() as i32,
+        );
+        map.entry(key).or_default().push(i as u32);
+    }
+
+    let mut clusters: Vec<Cluster> = map
+        .into_values()
+        .map(|members| {
+            let mut c = v3(0.0, 0.0, 0.0);
+            for &m in &members {
+                c = c + scene.pos[m as usize];
+            }
+            let center = c / members.len() as f32;
+            let mut radius = 0.0f32;
+            for &m in &members {
+                let r = (scene.pos[m as usize] - center).norm()
+                    + scene.bounding_radius(m as usize);
+                radius = radius.max(r);
+            }
+            Cluster {
+                center,
+                radius,
+                members,
+            }
+        })
+        .collect();
+    // Deterministic order (HashMap iteration isn't).
+    clusters.sort_by(|a, b| {
+        (a.center.x, a.center.y, a.center.z)
+            .partial_cmp(&(b.center.x, b.center.y, b.center.z))
+            .unwrap()
+    });
+    Clustering { clusters, cell }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::camera::{Camera, Intrinsics};
+    use crate::render::project::project_one;
+    use crate::scene::synthetic::{generate_scaled, preset};
+
+    fn test_cam() -> Camera {
+        Camera::look_at(
+            Intrinsics::from_fov(128, 128, 1.2),
+            v3(0.0, 2.5, -12.0),
+            v3(0.0, 0.5, 0.0),
+            v3(0.0, 1.0, 0.0),
+        )
+    }
+
+    #[test]
+    fn every_gaussian_in_exactly_one_cluster() {
+        let scene = generate_scaled(&preset("truck"), 0.02);
+        let cl = cluster(&scene, 32);
+        let mut seen = vec![false; scene.len()];
+        for c in &cl.clusters {
+            for &m in &c.members {
+                assert!(!seen[m as usize], "duplicate member {m}");
+                seen[m as usize] = true;
+            }
+        }
+        assert!(seen.iter().all(|&s| s), "missing members");
+    }
+
+    #[test]
+    fn cluster_sphere_bounds_members() {
+        let scene = generate_scaled(&preset("playroom"), 0.02);
+        let cl = cluster(&scene, 16);
+        for c in &cl.clusters {
+            for &m in &c.members {
+                let d = (scene.pos[m as usize] - c.center).norm()
+                    + scene.bounding_radius(m as usize);
+                assert!(d <= c.radius + 1e-4);
+            }
+        }
+    }
+
+    #[test]
+    fn mean_size_near_target() {
+        let scene = generate_scaled(&preset("garden"), 0.05);
+        let cl = cluster(&scene, 32);
+        // Voxel occupancy is lumpy; just require the right order of magnitude.
+        assert!(cl.mean_size() > 4.0, "mean {}", cl.mean_size());
+        assert!(cl.num_clusters() > 8);
+    }
+
+    #[test]
+    fn cull_is_conservative() {
+        // Every Gaussian that projects successfully must survive cluster culling.
+        let scene = generate_scaled(&preset("truck"), 0.02);
+        let cam = test_cam();
+        let cl = cluster(&scene, 32);
+        let survivors: std::collections::HashSet<u32> = cl.cull(&cam).into_iter().collect();
+        for i in 0..scene.len() {
+            if project_one(&scene, i, &cam).is_some() {
+                assert!(
+                    survivors.contains(&(i as u32)),
+                    "visible gaussian {i} culled at cluster level"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn culling_reduces_metadata_reads() {
+        // A camera looking at one corner shouldn't need every cluster.
+        let scene = generate_scaled(&preset("bicycle"), 0.05);
+        let intr = Intrinsics::from_fov(128, 128, 0.7);
+        let cam = Camera::look_at(intr, v3(16.0, 2.0, 16.0), v3(20.0, 2.0, 20.0), v3(0.0, 1.0, 0.0));
+        let cl = cluster(&scene, 32);
+        assert!(
+            cl.visible_clusters(&cam) < cl.num_clusters(),
+            "expected some clusters culled"
+        );
+    }
+
+    #[test]
+    fn empty_scene() {
+        let scene = Scene::with_capacity(0, "empty");
+        let cl = cluster(&scene, 8);
+        assert_eq!(cl.num_clusters(), 0);
+    }
+}

@@ -1,0 +1,268 @@
+//! Scene representation: a set of anisotropic 3D Gaussians (SoA layout).
+//!
+//! Parameters follow 3DGS [2]: position (3), rotation quaternion (4), scale
+//! stdevs (3) — the 10 "geometric features" the paper's DRAM optimizer loads
+//! during culling — plus opacity and spherical-harmonics color. We carry SH
+//! degree 1 (DC + 3 linear coefficients per channel) which is enough for the
+//! view-dependence the experiments exercise; the DRAM model accounts for the
+//! paper's full 45-parameter color payload via `params::COLOR_F32S`.
+
+use crate::numeric::linalg::{v3, Quat, Vec3};
+
+/// Parameter-count constants used by the DRAM traffic model (paper Sec. IV-A).
+pub mod params {
+    /// Geometric features fetched during culling: μ(3) + q(4) + s(3).
+    pub const GEOM_F32S: usize = 10;
+    /// Color features fetched only for surviving Gaussians (SH deg-3 payload
+    /// minus DC, as in the paper's "45 parameters").
+    pub const COLOR_F32S: usize = 45;
+    /// Opacity + DC color + misc fetched with color.
+    pub const MISC_F32S: usize = 4;
+    /// Bytes per Gaussian for the two fetch phases.
+    pub const GEOM_BYTES: usize = GEOM_F32S * 4;
+    pub const COLOR_BYTES: usize = (COLOR_F32S + MISC_F32S) * 4;
+}
+
+/// SoA container for a Gaussian scene.
+#[derive(Clone, Debug, Default)]
+pub struct Scene {
+    pub pos: Vec<Vec3>,
+    pub rot: Vec<Quat>,
+    /// Per-axis standard deviations (σ), not variances.
+    pub scale: Vec<Vec3>,
+    /// Opacity in [0, 1] (already sigmoid-activated).
+    pub opacity: Vec<f32>,
+    /// SH DC color term (RGB), linear space.
+    pub sh_dc: Vec<[f32; 3]>,
+    /// SH degree-1 coefficients: [channel][basis(x,y,z)].
+    pub sh1: Vec<[[f32; 3]; 3]>,
+    /// Human-readable name ("garden", "truck", …).
+    pub name: String,
+}
+
+impl Scene {
+    pub fn with_capacity(n: usize, name: &str) -> Scene {
+        Scene {
+            pos: Vec::with_capacity(n),
+            rot: Vec::with_capacity(n),
+            scale: Vec::with_capacity(n),
+            opacity: Vec::with_capacity(n),
+            sh_dc: Vec::with_capacity(n),
+            sh1: Vec::with_capacity(n),
+            name: name.to_string(),
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.pos.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.pos.is_empty()
+    }
+
+    /// Append one Gaussian; returns its index.
+    #[allow(clippy::too_many_arguments)]
+    pub fn push(
+        &mut self,
+        pos: Vec3,
+        rot: Quat,
+        scale: Vec3,
+        opacity: f32,
+        sh_dc: [f32; 3],
+        sh1: [[f32; 3]; 3],
+    ) -> usize {
+        debug_assert!((0.0..=1.0).contains(&opacity), "opacity {opacity}");
+        debug_assert!(scale.x > 0.0 && scale.y > 0.0 && scale.z > 0.0);
+        self.pos.push(pos);
+        self.rot.push(rot.normalized());
+        self.scale.push(scale);
+        self.opacity.push(opacity);
+        self.sh_dc.push(sh_dc);
+        self.sh1.push(sh1);
+        self.len() - 1
+    }
+
+    /// Retain only Gaussians whose index passes `keep` (used by pruning).
+    pub fn retain_indices(&mut self, keep: &[bool]) {
+        assert_eq!(keep.len(), self.len());
+        let mut w = 0;
+        for r in 0..self.len() {
+            if keep[r] {
+                self.pos.swap(w, r);
+                self.rot.swap(w, r);
+                self.scale.swap(w, r);
+                self.opacity.swap(w, r);
+                self.sh_dc.swap(w, r);
+                self.sh1.swap(w, r);
+                w += 1;
+            }
+        }
+        self.pos.truncate(w);
+        self.rot.truncate(w);
+        self.scale.truncate(w);
+        self.opacity.truncate(w);
+        self.sh_dc.truncate(w);
+        self.sh1.truncate(w);
+    }
+
+    /// 3D axis ratio of Gaussian `i`: max σ / min σ — the classifier input
+    /// for the paper's smooth/spiky split (Sec. III-A uses the projected 2D
+    /// ratio; this is the scene-space analogue used by the preprocessing
+    /// core's quick classification).
+    pub fn axis_ratio3d(&self, i: usize) -> f32 {
+        let s = self.scale[i];
+        let max = s.x.max(s.y).max(s.z);
+        let min = s.x.min(s.y).min(s.z).max(1e-9);
+        max / min
+    }
+
+    /// Bounding radius (3σ of the largest axis).
+    pub fn bounding_radius(&self, i: usize) -> f32 {
+        let s = self.scale[i];
+        3.0 * s.x.max(s.y).max(s.z)
+    }
+
+    /// Evaluate view-dependent color for Gaussian `i` seen from direction
+    /// `dir` (unit, camera→gaussian). SH degree 1.
+    pub fn eval_color(&self, i: usize, dir: Vec3) -> [f32; 3] {
+        // Real-valued SH basis: Y00 = 0.2820948, Y1{-1,0,1} ∝ (y, z, x).
+        const C0: f32 = 0.282_094_8;
+        const C1: f32 = 0.488_602_5;
+        let dc = self.sh_dc[i];
+        let sh1 = self.sh1[i];
+        let mut rgb = [0.0f32; 3];
+        for ch in 0..3 {
+            let v = C0 * dc[ch]
+                + C1 * (-dir.y * sh1[ch][0] + dir.z * sh1[ch][1] - dir.x * sh1[ch][2]);
+            // 3DGS adds 0.5 and clamps at rasterization time.
+            rgb[ch] = (v + 0.5).max(0.0);
+        }
+        rgb
+    }
+
+    /// Scene axis-aligned bounds (min, max).
+    pub fn bounds(&self) -> (Vec3, Vec3) {
+        let mut lo = v3(f32::INFINITY, f32::INFINITY, f32::INFINITY);
+        let mut hi = v3(f32::NEG_INFINITY, f32::NEG_INFINITY, f32::NEG_INFINITY);
+        for (p, s) in self.pos.iter().zip(&self.scale) {
+            let r = 3.0 * s.x.max(s.y).max(s.z);
+            lo.x = lo.x.min(p.x - r);
+            lo.y = lo.y.min(p.y - r);
+            lo.z = lo.z.min(p.z - r);
+            hi.x = hi.x.max(p.x + r);
+            hi.y = hi.y.max(p.y + r);
+            hi.z = hi.z.max(p.z + r);
+        }
+        (lo, hi)
+    }
+
+    /// Fraction of Gaussians classified spiky at the given threshold.
+    pub fn spiky_fraction(&self, axis_ratio_threshold: f32) -> f32 {
+        if self.is_empty() {
+            return 0.0;
+        }
+        let n = (0..self.len())
+            .filter(|&i| self.axis_ratio3d(i) >= axis_ratio_threshold)
+            .count();
+        n as f32 / self.len() as f32
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::numeric::linalg::v3;
+
+    fn tiny_scene() -> Scene {
+        let mut s = Scene::with_capacity(3, "test");
+        s.push(
+            v3(0.0, 0.0, 5.0),
+            Quat::IDENTITY,
+            v3(1.0, 1.0, 1.0),
+            0.9,
+            [1.0, 0.0, 0.0],
+            [[0.0; 3]; 3],
+        );
+        s.push(
+            v3(1.0, 0.0, 6.0),
+            Quat::IDENTITY,
+            v3(0.1, 0.5, 0.1),
+            0.5,
+            [0.0, 1.0, 0.0],
+            [[0.0; 3]; 3],
+        );
+        s.push(
+            v3(-1.0, 2.0, 7.0),
+            Quat::IDENTITY,
+            v3(2.0, 0.2, 0.2),
+            0.2,
+            [0.0, 0.0, 1.0],
+            [[0.0; 3]; 3],
+        );
+        s
+    }
+
+    #[test]
+    fn push_and_len() {
+        let s = tiny_scene();
+        assert_eq!(s.len(), 3);
+        assert!(!s.is_empty());
+    }
+
+    #[test]
+    fn axis_ratio() {
+        let s = tiny_scene();
+        assert!((s.axis_ratio3d(0) - 1.0).abs() < 1e-6);
+        assert!((s.axis_ratio3d(1) - 5.0).abs() < 1e-6);
+        assert!((s.axis_ratio3d(2) - 10.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn spiky_fraction_threshold3() {
+        let s = tiny_scene();
+        // Gaussian 0 smooth (ratio 1), 1 & 2 spiky (5, 10).
+        assert!((s.spiky_fraction(3.0) - 2.0 / 3.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn retain_keeps_order() {
+        let mut s = tiny_scene();
+        s.retain_indices(&[true, false, true]);
+        assert_eq!(s.len(), 2);
+        assert_eq!(s.sh_dc[0], [1.0, 0.0, 0.0]);
+        assert_eq!(s.sh_dc[1], [0.0, 0.0, 1.0]);
+    }
+
+    #[test]
+    fn bounds_cover_all() {
+        let s = tiny_scene();
+        let (lo, hi) = s.bounds();
+        assert!(lo.x <= -1.0 - 3.0 * 2.0);
+        assert!(hi.z >= 7.0);
+        assert!(lo.z <= 5.0 - 3.0);
+    }
+
+    #[test]
+    fn color_dc_only() {
+        let s = tiny_scene();
+        let c = s.eval_color(0, v3(0.0, 0.0, 1.0));
+        assert!((c[0] - (0.282_094_8 + 0.5)).abs() < 1e-5);
+        assert!((c[1] - 0.5).abs() < 1e-5);
+    }
+
+    #[test]
+    fn color_view_dependence() {
+        let mut s = tiny_scene();
+        s.sh1[0][0] = [0.0, 0.0, 1.0]; // red varies with -x of dir
+        let c_px = s.eval_color(0, v3(1.0, 0.0, 0.0));
+        let c_nx = s.eval_color(0, v3(-1.0, 0.0, 0.0));
+        assert!(c_px[0] < c_nx[0]);
+    }
+
+    #[test]
+    fn bounding_radius_is_3sigma() {
+        let s = tiny_scene();
+        assert!((s.bounding_radius(2) - 6.0).abs() < 1e-6);
+    }
+}

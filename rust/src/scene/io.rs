@@ -1,0 +1,193 @@
+//! Binary scene IO (`.gsz`): a small fixed-layout format so trained/pruned
+//! scenes can be cached between runs and shared with the Python build path.
+//!
+//! Layout (little-endian):
+//!   magic "GSZ1" | u32 count | u32 name_len | name bytes
+//!   then per field, contiguous arrays: pos (3f32·n), rot (4f32·n),
+//!   scale (3f32·n), opacity (f32·n), sh_dc (3f32·n), sh1 (9f32·n).
+
+use super::gaussian::Scene;
+use crate::numeric::linalg::{v3, Quat};
+use std::io::{Error, ErrorKind, Result};
+use std::path::Path;
+
+const MAGIC: &[u8; 4] = b"GSZ1";
+
+fn push_f32s(buf: &mut Vec<u8>, xs: &[f32]) {
+    for x in xs {
+        buf.extend_from_slice(&x.to_le_bytes());
+    }
+}
+
+/// Serialize a scene to bytes.
+pub fn to_bytes(scene: &Scene) -> Vec<u8> {
+    let n = scene.len();
+    let mut buf = Vec::with_capacity(16 + n * (3 + 4 + 3 + 1 + 3 + 9) * 4);
+    buf.extend_from_slice(MAGIC);
+    buf.extend_from_slice(&(n as u32).to_le_bytes());
+    let name = scene.name.as_bytes();
+    buf.extend_from_slice(&(name.len() as u32).to_le_bytes());
+    buf.extend_from_slice(name);
+    for p in &scene.pos {
+        push_f32s(&mut buf, &[p.x, p.y, p.z]);
+    }
+    for q in &scene.rot {
+        push_f32s(&mut buf, &[q.w, q.x, q.y, q.z]);
+    }
+    for s in &scene.scale {
+        push_f32s(&mut buf, &[s.x, s.y, s.z]);
+    }
+    push_f32s(&mut buf, &scene.opacity);
+    for c in &scene.sh_dc {
+        push_f32s(&mut buf, c);
+    }
+    for sh in &scene.sh1 {
+        for ch in sh {
+            push_f32s(&mut buf, ch);
+        }
+    }
+    buf
+}
+
+struct Reader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Reader<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.pos + n > self.buf.len() {
+            return Err(Error::new(ErrorKind::UnexpectedEof, "truncated gsz"));
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        let b = self.take(4)?;
+        Ok(u32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+
+    fn f32(&mut self) -> Result<f32> {
+        let b = self.take(4)?;
+        Ok(f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+    }
+}
+
+/// Deserialize a scene from bytes.
+pub fn from_bytes(bytes: &[u8]) -> Result<Scene> {
+    let mut r = Reader { buf: bytes, pos: 0 };
+    if r.take(4)? != MAGIC {
+        return Err(Error::new(ErrorKind::InvalidData, "bad gsz magic"));
+    }
+    let n = r.u32()? as usize;
+    let name_len = r.u32()? as usize;
+    let name = String::from_utf8_lossy(r.take(name_len)?).into_owned();
+    let mut scene = Scene::with_capacity(n, &name);
+    let mut pos = Vec::with_capacity(n);
+    for _ in 0..n {
+        pos.push(v3(r.f32()?, r.f32()?, r.f32()?));
+    }
+    let mut rot = Vec::with_capacity(n);
+    for _ in 0..n {
+        rot.push(Quat {
+            w: r.f32()?,
+            x: r.f32()?,
+            y: r.f32()?,
+            z: r.f32()?,
+        });
+    }
+    let mut scale = Vec::with_capacity(n);
+    for _ in 0..n {
+        scale.push(v3(r.f32()?, r.f32()?, r.f32()?));
+    }
+    let mut opacity = Vec::with_capacity(n);
+    for _ in 0..n {
+        opacity.push(r.f32()?);
+    }
+    let mut sh_dc = Vec::with_capacity(n);
+    for _ in 0..n {
+        sh_dc.push([r.f32()?, r.f32()?, r.f32()?]);
+    }
+    let mut sh1 = Vec::with_capacity(n);
+    for _ in 0..n {
+        let mut v = [[0.0f32; 3]; 3];
+        for ch in &mut v {
+            for b in ch.iter_mut() {
+                *b = r.f32()?;
+            }
+        }
+        sh1.push(v);
+    }
+    scene.pos = pos;
+    scene.rot = rot;
+    scene.scale = scale;
+    scene.opacity = opacity;
+    scene.sh_dc = sh_dc;
+    scene.sh1 = sh1;
+    scene.name = name;
+    Ok(scene)
+}
+
+pub fn save(scene: &Scene, path: &Path) -> Result<()> {
+    std::fs::write(path, to_bytes(scene))
+}
+
+pub fn load(path: &Path) -> Result<Scene> {
+    from_bytes(&std::fs::read(path)?)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::scene::synthetic::{generate_scaled, preset};
+
+    #[test]
+    fn roundtrip_exact() {
+        let scene = generate_scaled(&preset("truck"), 0.005);
+        let bytes = to_bytes(&scene);
+        let back = from_bytes(&bytes).unwrap();
+        assert_eq!(back.len(), scene.len());
+        assert_eq!(back.name, scene.name);
+        assert_eq!(back.pos, scene.pos);
+        assert_eq!(back.rot, scene.rot);
+        assert_eq!(back.scale, scene.scale);
+        assert_eq!(back.opacity, scene.opacity);
+        assert_eq!(back.sh_dc, scene.sh_dc);
+        assert_eq!(back.sh1, scene.sh1);
+    }
+
+    #[test]
+    fn file_roundtrip() {
+        let scene = generate_scaled(&preset("playroom"), 0.005);
+        let dir = std::env::temp_dir().join("flicker_gsz");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join("s.gsz");
+        save(&scene, &p).unwrap();
+        let back = load(&p).unwrap();
+        assert_eq!(back.len(), scene.len());
+        assert_eq!(back.pos[3], scene.pos[3]);
+    }
+
+    #[test]
+    fn rejects_bad_magic() {
+        assert!(from_bytes(b"NOPE____________").is_err());
+    }
+
+    #[test]
+    fn rejects_truncation() {
+        let scene = generate_scaled(&preset("truck"), 0.005);
+        let bytes = to_bytes(&scene);
+        assert!(from_bytes(&bytes[..bytes.len() / 2]).is_err());
+        assert!(from_bytes(&bytes[..6]).is_err());
+    }
+
+    #[test]
+    fn empty_scene_roundtrip() {
+        let scene = Scene::with_capacity(0, "void");
+        let back = from_bytes(&to_bytes(&scene)).unwrap();
+        assert_eq!(back.len(), 0);
+        assert_eq!(back.name, "void");
+    }
+}

@@ -1,0 +1,8 @@
+//! Scene substrate: Gaussian container, procedural synthetic datasets,
+//! contribution pruning, clustering into "big Gaussians", and binary IO.
+
+pub mod clustering;
+pub mod gaussian;
+pub mod io;
+pub mod pruning;
+pub mod synthetic;

@@ -1,0 +1,399 @@
+//! Procedural synthetic scene generation — the dataset substitute.
+//!
+//! The paper evaluates on eight real trained-3DGS scenes (2× Tanks&Temples,
+//! 4× Mip-NeRF360 outdoor, 2× Deep Blending indoor). We do not have those
+//! assets, so we generate Gaussian clouds whose *statistics* match what the
+//! experiments depend on: Gaussian count, spiky/smooth axis-ratio mix,
+//! opacity distribution, scale distribution, and spatial clustering (objects
+//! on a ground plane for outdoor scenes; room-bounded layouts for indoor).
+//! Ground truth for quality metrics is the full-FP32 vanilla render of the
+//! same scene, so PSNR/SSIM deltas measure exactly what the paper's Table I
+//! measures: degradation introduced by pruning/CAT relative to the baseline
+//! model.
+
+use super::gaussian::Scene;
+use crate::numeric::linalg::{v3, Quat, Vec3};
+use crate::util::rng::Pcg32;
+
+/// Scene category, mirroring the paper's three dataset sources.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SceneKind {
+    /// Large-scale outdoor capture (Tanks & Temples): one dominant object.
+    OutdoorObject,
+    /// Unbounded outdoor (Mip-NeRF360): object + wide background shell.
+    Outdoor360,
+    /// Indoor (Deep Blending): room box with furniture blobs.
+    Indoor,
+}
+
+/// Generation parameters for one synthetic scene.
+#[derive(Clone, Debug)]
+pub struct ScenePreset {
+    pub name: &'static str,
+    pub kind: SceneKind,
+    /// Gaussian count at "30K-iteration" quality (pre-pruning).
+    pub count: usize,
+    /// Target fraction of spiky (axis ratio ≥ 3) Gaussians.
+    pub spiky_frac: f32,
+    /// Log-normal μ of the base scale (world units).
+    pub scale_mu: f32,
+    pub seed: u64,
+}
+
+/// The eight evaluation scenes (names mirror the real datasets').
+pub fn presets() -> Vec<ScenePreset> {
+    vec![
+        // Tanks & Temples (2 outdoor scenes)
+        ScenePreset { name: "truck", kind: SceneKind::OutdoorObject, count: 60_000, spiky_frac: 0.47, scale_mu: -3.4, seed: 1 },
+        ScenePreset { name: "train", kind: SceneKind::OutdoorObject, count: 52_000, spiky_frac: 0.50, scale_mu: -3.3, seed: 2 },
+        // Mip-NeRF360 outdoor (4 scenes)
+        ScenePreset { name: "bicycle", kind: SceneKind::Outdoor360, count: 90_000, spiky_frac: 0.55, scale_mu: -3.6, seed: 3 },
+        ScenePreset { name: "garden", kind: SceneKind::Outdoor360, count: 85_000, spiky_frac: 0.57, scale_mu: -3.7, seed: 4 },
+        ScenePreset { name: "stump", kind: SceneKind::Outdoor360, count: 75_000, spiky_frac: 0.52, scale_mu: -3.5, seed: 5 },
+        ScenePreset { name: "flowers", kind: SceneKind::Outdoor360, count: 80_000, spiky_frac: 0.58, scale_mu: -3.6, seed: 6 },
+        // Deep Blending indoor (2 scenes)
+        ScenePreset { name: "playroom", kind: SceneKind::Indoor, count: 45_000, spiky_frac: 0.40, scale_mu: -3.2, seed: 7 },
+        ScenePreset { name: "drjohnson", kind: SceneKind::Indoor, count: 55_000, spiky_frac: 0.42, scale_mu: -3.2, seed: 8 },
+    ]
+}
+
+/// Look up a preset by name (panics on unknown name — callers validate).
+pub fn preset(name: &str) -> ScenePreset {
+    presets()
+        .into_iter()
+        .find(|p| p.name == name)
+        .unwrap_or_else(|| panic!("unknown scene '{name}'; known: {:?}",
+            presets().iter().map(|p| p.name).collect::<Vec<_>>()))
+}
+
+/// Scale every preset's Gaussian count (CI runs use scale < 1).
+pub fn generate_scaled(p: &ScenePreset, count_scale: f32) -> Scene {
+    let mut p = p.clone();
+    p.count = ((p.count as f32 * count_scale) as usize).max(100);
+    generate(&p)
+}
+
+/// Generate the scene for a preset.
+pub fn generate(p: &ScenePreset) -> Scene {
+    let mut rng = Pcg32::new(0xF11C_E200 ^ p.seed);
+    let mut scene = Scene::with_capacity(p.count, p.name);
+
+    // Spatial layout: a set of anchor "surfaces" Gaussians cluster around.
+    let anchors = layout_anchors(p, &mut rng);
+
+    while scene.len() < p.count {
+        let a = rng.pick(&anchors).clone();
+        let (pos, normal) = a.sample_point(&mut rng);
+        let spiky = rng.chance(p.spiky_frac);
+
+        // Scale: log-normal base; spiky Gaussians stretch one axis.
+        let base = rng.lognormal(p.scale_mu, 0.55) * a.scale_boost;
+        let scale = if spiky {
+            // ratio in [3, 12): elongated splinter (edges, thin structures).
+            let ratio = rng.range_f32(3.0, 12.0);
+            v3(base * ratio, base, base * rng.range_f32(0.5, 1.5))
+        } else {
+            // ratio in [1, 3): blobby surface element.
+            v3(
+                base * rng.range_f32(1.0, 2.8),
+                base,
+                base * rng.range_f32(0.8, 1.6),
+            )
+        };
+
+        // Orientation: mostly tangent to the anchor surface (Gaussians in
+        // trained scenes flatten against geometry), with jitter.
+        let rot = orient_tangent(normal, &mut rng);
+
+        // Opacity: trained-3DGS opacities are strongly bimodal: many near 1
+        // (surface), a haze of low-opacity floaters.
+        let opacity = if rng.chance(0.65) {
+            rng.range_f32(0.55, 0.995)
+        } else {
+            rng.range_f32(0.02, 0.35)
+        };
+
+        // Color: per-anchor base hue + per-Gaussian variation; SH1 gives
+        // mild view dependence (specular-ish).
+        let mut sh_dc = [0.0f32; 3];
+        for ch in 0..3 {
+            sh_dc[ch] = (a.color[ch] + rng.normal_ms(0.0, 0.25)).clamp(-0.8, 2.5);
+        }
+        let mut sh1 = [[0.0f32; 3]; 3];
+        for ch in 0..3 {
+            for b in 0..3 {
+                sh1[ch][b] = rng.normal_ms(0.0, 0.08);
+            }
+        }
+
+        scene.push(pos, rot, scale, opacity, sh_dc, sh1);
+    }
+    scene
+}
+
+/// A surface patch Gaussians cluster on.
+#[derive(Clone, Debug)]
+struct Anchor {
+    center: Vec3,
+    /// Half-extents of the patch.
+    extent: Vec3,
+    /// Surface normal (Gaussians flatten along it).
+    normal: Vec3,
+    color: [f32; 3],
+    scale_boost: f32,
+    /// Sampling weight ∝ area.
+    weight: f32,
+}
+
+impl Anchor {
+    fn sample_point(&self, rng: &mut Pcg32) -> (Vec3, Vec3) {
+        let jitter = 0.15 * self.extent.y.min(self.extent.x);
+        let p = v3(
+            self.center.x + rng.range_f32(-1.0, 1.0) * self.extent.x,
+            self.center.y + rng.range_f32(-1.0, 1.0) * self.extent.y,
+            self.center.z + rng.range_f32(-1.0, 1.0) * self.extent.z,
+        ) + self.normal * rng.normal_ms(0.0, jitter.max(0.01));
+        (p, self.normal)
+    }
+}
+
+fn layout_anchors(p: &ScenePreset, rng: &mut Pcg32) -> Vec<Anchor> {
+    let mut anchors = Vec::new();
+    let up = v3(0.0, 1.0, 0.0);
+    match p.kind {
+        SceneKind::OutdoorObject | SceneKind::Outdoor360 => {
+            // Ground plane.
+            let ground_r = if p.kind == SceneKind::Outdoor360 { 14.0 } else { 9.0 };
+            anchors.push(Anchor {
+                center: v3(0.0, 0.0, 0.0),
+                extent: v3(ground_r, 0.02, ground_r),
+                normal: up,
+                color: [0.25, 0.45, 0.18], // grass/dirt
+                scale_boost: 1.6,
+                weight: 2.5,
+            });
+            // Central object: a cluster of boxes/blobs.
+            let nblobs = rng.range_u32(6, 12);
+            for _ in 0..nblobs {
+                let c = v3(
+                    rng.normal_ms(0.0, 1.2),
+                    rng.range_f32(0.2, 2.2),
+                    rng.normal_ms(0.0, 1.2),
+                );
+                let n = v3(rng.normal(), rng.normal() * 0.3 + 0.5, rng.normal()).normalized();
+                anchors.push(Anchor {
+                    center: c,
+                    extent: v3(
+                        rng.range_f32(0.3, 1.2),
+                        rng.range_f32(0.3, 1.0),
+                        rng.range_f32(0.3, 1.2),
+                    ),
+                    normal: n,
+                    color: [
+                        rng.range_f32(0.1, 1.2),
+                        rng.range_f32(0.1, 1.2),
+                        rng.range_f32(0.1, 1.2),
+                    ],
+                    scale_boost: 1.0,
+                    weight: 1.0,
+                });
+            }
+            if p.kind == SceneKind::Outdoor360 {
+                // Background shell: distant, large, fuzzy Gaussians (sky,
+                // far vegetation) — these dominate tile lists at the edges.
+                for k in 0..8 {
+                    let theta = k as f32 / 8.0 * std::f32::consts::TAU;
+                    anchors.push(Anchor {
+                        center: v3(18.0 * theta.cos(), 4.0, 18.0 * theta.sin()),
+                        extent: v3(5.0, 4.0, 5.0),
+                        normal: v3(-theta.cos(), 0.0, -theta.sin()),
+                        color: [0.4, 0.55, 0.9],
+                        scale_boost: 4.0,
+                        weight: 0.6,
+                    });
+                }
+            }
+        }
+        SceneKind::Indoor => {
+            // Room: floor, ceiling, 4 walls.
+            let (hx, hy, hz) = (5.0, 2.6, 4.0);
+            let faces: [(Vec3, Vec3, Vec3); 6] = [
+                (v3(0.0, 0.0, 0.0), v3(hx, 0.02, hz), up),
+                (v3(0.0, 2.0 * hy, 0.0), v3(hx, 0.02, hz), up * -1.0),
+                (v3(-hx, hy, 0.0), v3(0.02, hy, hz), v3(1.0, 0.0, 0.0)),
+                (v3(hx, hy, 0.0), v3(0.02, hy, hz), v3(-1.0, 0.0, 0.0)),
+                (v3(0.0, hy, -hz), v3(hx, hy, 0.02), v3(0.0, 0.0, 1.0)),
+                (v3(0.0, hy, hz), v3(hx, hy, 0.02), v3(0.0, 0.0, -1.0)),
+            ];
+            for (c, e, n) in faces {
+                anchors.push(Anchor {
+                    center: c,
+                    extent: e,
+                    normal: n,
+                    color: [
+                        rng.range_f32(0.5, 1.1),
+                        rng.range_f32(0.45, 1.0),
+                        rng.range_f32(0.4, 0.95),
+                    ],
+                    scale_boost: 1.8,
+                    weight: 1.2,
+                });
+            }
+            // Furniture blobs.
+            for _ in 0..rng.range_u32(5, 9) {
+                anchors.push(Anchor {
+                    center: v3(
+                        rng.range_f32(-hx * 0.7, hx * 0.7),
+                        rng.range_f32(0.3, 1.4),
+                        rng.range_f32(-hz * 0.7, hz * 0.7),
+                    ),
+                    extent: v3(
+                        rng.range_f32(0.3, 0.9),
+                        rng.range_f32(0.3, 0.8),
+                        rng.range_f32(0.3, 0.9),
+                    ),
+                    normal: v3(rng.normal(), rng.normal(), rng.normal()).normalized(),
+                    color: [
+                        rng.range_f32(0.1, 1.2),
+                        rng.range_f32(0.1, 1.2),
+                        rng.range_f32(0.1, 1.2),
+                    ],
+                    scale_boost: 0.9,
+                    weight: 1.0,
+                });
+            }
+        }
+    }
+    // Expand by weight so `pick` approximates weighted sampling.
+    let mut weighted = Vec::new();
+    for a in anchors {
+        let copies = (a.weight * 4.0).round().max(1.0) as usize;
+        for _ in 0..copies {
+            weighted.push(a.clone());
+        }
+    }
+    weighted
+}
+
+/// Random rotation whose local z-axis roughly aligns with the surface normal
+/// (so the smallest Gaussian axis points off-surface, as in trained scenes).
+fn orient_tangent(normal: Vec3, rng: &mut Pcg32) -> Quat {
+    // Rotation taking +z to `normal`, then random spin about the normal.
+    let z = v3(0.0, 0.0, 1.0);
+    let n = normal.normalized();
+    let axis = z.cross(n);
+    let dot = z.dot(n).clamp(-1.0, 1.0);
+    let align = if axis.norm() < 1e-6 {
+        if dot > 0.0 {
+            Quat::IDENTITY
+        } else {
+            Quat::from_axis_angle(v3(1.0, 0.0, 0.0), std::f32::consts::PI)
+        }
+    } else {
+        Quat::from_axis_angle(axis, dot.acos())
+    };
+    let spin = Quat::from_axis_angle(n, rng.range_f32(0.0, std::f32::consts::TAU));
+    // Jitter to avoid perfectly coplanar splats.
+    let jitter = Quat::from_axis_angle(
+        v3(rng.normal(), rng.normal(), rng.normal()),
+        rng.normal_ms(0.0, 0.15),
+    );
+    mul_quat(mul_quat(spin, align), jitter).normalized()
+}
+
+fn mul_quat(a: Quat, b: Quat) -> Quat {
+    Quat {
+        w: a.w * b.w - a.x * b.x - a.y * b.y - a.z * b.z,
+        x: a.w * b.x + a.x * b.w + a.y * b.z - a.z * b.y,
+        y: a.w * b.y - a.x * b.z + a.y * b.w + a.z * b.x,
+        z: a.w * b.z + a.x * b.y - a.y * b.x + a.z * b.w,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn presets_cover_eight_scenes() {
+        let ps = presets();
+        assert_eq!(ps.len(), 8);
+        let names: Vec<_> = ps.iter().map(|p| p.name).collect();
+        assert!(names.contains(&"garden"));
+        assert!(names.contains(&"truck"));
+        assert!(names.contains(&"playroom"));
+    }
+
+    #[test]
+    fn generation_is_deterministic() {
+        let p = preset("garden");
+        let a = generate_scaled(&p, 0.02);
+        let b = generate_scaled(&p, 0.02);
+        assert_eq!(a.len(), b.len());
+        assert_eq!(a.pos[10], b.pos[10]);
+        assert_eq!(a.opacity[42], b.opacity[42]);
+    }
+
+    #[test]
+    fn spiky_fraction_near_target() {
+        let p = preset("garden");
+        let s = generate_scaled(&p, 0.05);
+        let f = s.spiky_fraction(3.0);
+        assert!(
+            (f - p.spiky_frac).abs() < 0.08,
+            "target {} got {f}",
+            p.spiky_frac
+        );
+    }
+
+    #[test]
+    fn scales_positive_opacity_in_range() {
+        let s = generate_scaled(&preset("truck"), 0.02);
+        for i in 0..s.len() {
+            let sc = s.scale[i];
+            assert!(sc.x > 0.0 && sc.y > 0.0 && sc.z > 0.0);
+            assert!((0.0..=1.0).contains(&s.opacity[i]));
+        }
+    }
+
+    #[test]
+    fn indoor_scene_is_bounded() {
+        // Check Gaussian *centers* stay room-bounded (bounds() also adds 3σ
+        // radii, which a single large spiky splat can inflate arbitrarily).
+        let s = generate_scaled(&preset("playroom"), 0.05);
+        let (mut lo, mut hi) = (f32::INFINITY, f32::NEG_INFINITY);
+        let (mut lo_y, mut hi_y) = (f32::INFINITY, f32::NEG_INFINITY);
+        for p in &s.pos {
+            lo = lo.min(p.x);
+            hi = hi.max(p.x);
+            lo_y = lo_y.min(p.y);
+            hi_y = hi_y.max(p.y);
+        }
+        assert!(hi - lo < 15.0, "indoor x spread {}", hi - lo);
+        assert!(hi_y - lo_y < 10.0, "indoor y spread {}", hi_y - lo_y);
+    }
+
+    #[test]
+    fn outdoor360_has_background_shell() {
+        let s = generate_scaled(&preset("bicycle"), 0.05);
+        let far = (0..s.len())
+            .filter(|&i| (s.pos[i].x * s.pos[i].x + s.pos[i].z * s.pos[i].z).sqrt() > 10.0)
+            .count();
+        assert!(far > s.len() / 50, "expected distant background Gaussians");
+    }
+
+    #[test]
+    fn count_scaling() {
+        let p = preset("stump");
+        let s = generate_scaled(&p, 0.01);
+        assert!(s.len() >= (p.count as f32 * 0.01) as usize);
+        assert!(s.len() < p.count / 50);
+    }
+
+    #[test]
+    fn different_scenes_differ() {
+        let a = generate_scaled(&preset("truck"), 0.02);
+        let b = generate_scaled(&preset("train"), 0.02);
+        assert_ne!(a.pos[0], b.pos[0]);
+    }
+}

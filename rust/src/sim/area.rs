@@ -1,0 +1,183 @@
+//! Area model (paper Table II): per-unit areas at TSMC 28 nm, calibrated so
+//! the *shape* of the paper's breakdown holds — CTU < 10% of the rendering
+//! cores, and FLICKER-32+CTU ≈ 14% smaller than the 64-VRU simplified
+//! baseline. Absolute mm² are synthesis-grade estimates from published
+//! 28 nm datapath/SRAM densities, not DC results.
+
+use super::HwConfig;
+use crate::cat::Precision;
+
+/// Per-unit areas in mm² (28 nm).
+#[derive(Clone, Copy, Debug)]
+pub struct AreaParams {
+    /// One VRU: FP16 Eq.-1 datapath + blend accumulators.
+    pub vru_mm2: f64,
+    /// Per-channel fixed logic (sequencer, transmittance check).
+    pub channel_ctrl_mm2: f64,
+    /// Feature-FIFO SRAM per entry (8×32-bit record) incl. periphery.
+    pub fifo_entry_mm2: f64,
+    /// One PRTU at FP32 (scales down with precision).
+    pub prtu_fp32_mm2: f64,
+    /// CTU control + MMU + shared-term unit.
+    pub ctu_ctrl_mm2: f64,
+    /// Sorting unit (per rendering core).
+    pub sorter_mm2: f64,
+    /// Preprocessing core (projection + cull + classify + sub-tile test).
+    pub preprocess_mm2: f64,
+    /// Feature buffers and misc SRAM per rendering core.
+    pub corebuf_mm2: f64,
+}
+
+impl Default for AreaParams {
+    fn default() -> Self {
+        AreaParams {
+            vru_mm2: 0.040,
+            channel_ctrl_mm2: 0.010,
+            fifo_entry_mm2: 0.00060,
+            prtu_fp32_mm2: 0.060,
+            ctu_ctrl_mm2: 0.012,
+            sorter_mm2: 0.20,
+            preprocess_mm2: 0.90,
+            corebuf_mm2: 0.17,
+        }
+    }
+}
+
+/// PRTU scaling with datapath precision (multiplier area ∝ ~mantissa²;
+/// mixed = FP16 front + FP8 quad-accumulate).
+fn prtu_scale(p: Precision) -> f64 {
+    match p {
+        Precision::Fp32 => 1.0,
+        Precision::Fp16 => 0.38,
+        Precision::Mixed => 0.22,
+        Precision::Fp8 => 0.14,
+    }
+}
+
+/// Area breakdown for a config, in mm².
+#[derive(Clone, Debug, Default)]
+pub struct AreaReport {
+    pub vru_mm2: f64,
+    pub fifo_mm2: f64,
+    pub ctu_mm2: f64,
+    pub sorter_mm2: f64,
+    pub preprocess_mm2: f64,
+    pub buffers_mm2: f64,
+}
+
+impl AreaReport {
+    pub fn rendering_core_mm2(&self) -> f64 {
+        self.vru_mm2 + self.fifo_mm2 + self.buffers_mm2
+    }
+
+    pub fn total_mm2(&self) -> f64 {
+        self.vru_mm2 + self.fifo_mm2 + self.ctu_mm2 + self.sorter_mm2 + self.preprocess_mm2
+            + self.buffers_mm2
+    }
+
+    /// Rows for the Table II printer: (component, mm², share).
+    pub fn rows(&self) -> Vec<(&'static str, f64, f64)> {
+        let total = self.total_mm2();
+        vec![
+            ("VRUs (rendering cores)", self.vru_mm2, self.vru_mm2 / total),
+            ("Feature FIFOs", self.fifo_mm2, self.fifo_mm2 / total),
+            ("CTUs", self.ctu_mm2, self.ctu_mm2 / total),
+            ("Sorting units", self.sorter_mm2, self.sorter_mm2 / total),
+            ("Preprocessing cores", self.preprocess_mm2, self.preprocess_mm2 / total),
+            ("Core buffers", self.buffers_mm2, self.buffers_mm2 / total),
+        ]
+    }
+}
+
+/// Compute the area of a hardware config.
+pub fn area(hw: &HwConfig, p: &AreaParams) -> AreaReport {
+    let channels = (hw.rendering_cores * hw.channels_per_core) as f64;
+    let mut r = AreaReport {
+        vru_mm2: hw.total_vrus() as f64 * p.vru_mm2 + channels * p.channel_ctrl_mm2,
+        fifo_mm2: channels * hw.fifo_depth as f64 * p.fifo_entry_mm2,
+        sorter_mm2: hw.rendering_cores as f64 * p.sorter_mm2,
+        preprocess_mm2: hw.rendering_cores as f64 * p.preprocess_mm2,
+        buffers_mm2: hw.rendering_cores as f64 * p.corebuf_mm2,
+        ..Default::default()
+    };
+    if hw.ctu {
+        // One CTU per rendering core: 2 PRTUs + control, plus its built-in
+        // stall FIFO.
+        let prtu = p.prtu_fp32_mm2 * prtu_scale(hw.cat_precision);
+        r.ctu_mm2 = hw.rendering_cores as f64
+            * (2.0 * prtu + p.ctu_ctrl_mm2 + hw.ctu_fifo_depth as f64 * p.fifo_entry_mm2);
+    }
+    r
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ctu_below_ten_percent_of_rendering_core() {
+        // Paper: "the CTU occupies less than 10% of the VRUs area
+        // (rendering core)".
+        let r = area(&HwConfig::flicker32(), &AreaParams::default());
+        let ratio = r.ctu_mm2 / r.rendering_core_mm2();
+        assert!(ratio < 0.10, "CTU/core ratio {ratio}");
+        assert!(ratio > 0.01, "CTU should not be negligible: {ratio}");
+    }
+
+    #[test]
+    fn flicker_saves_vs_64vru_baseline() {
+        // Paper Table II(b): ~14% total area saving vs the 64-VRU
+        // simplified baseline.
+        let p = AreaParams::default();
+        let ours = area(&HwConfig::flicker32(), &p).total_mm2();
+        let base = area(&HwConfig::simplified64(), &p).total_mm2();
+        let saving = 1.0 - ours / base;
+        assert!(
+            (0.08..0.25).contains(&saving),
+            "area saving {saving}, ours {ours} base {base}"
+        );
+    }
+
+    #[test]
+    fn mixed_precision_shrinks_ctu() {
+        let p = AreaParams::default();
+        let mixed = area(&HwConfig::flicker32(), &p).ctu_mm2;
+        let fp32 = area(
+            &HwConfig {
+                cat_precision: Precision::Fp32,
+                ..HwConfig::flicker32()
+            },
+            &p,
+        )
+        .ctu_mm2;
+        assert!(mixed < fp32 * 0.5, "mixed {mixed} vs fp32 {fp32}");
+    }
+
+    #[test]
+    fn fifo_area_scales_with_depth() {
+        let p = AreaParams::default();
+        let d16 = area(&HwConfig::flicker32(), &p).fifo_mm2;
+        let d128 = area(
+            &HwConfig {
+                fifo_depth: 128,
+                ..HwConfig::flicker32()
+            },
+            &p,
+        )
+        .fifo_mm2;
+        assert!((d128 / d16 - 8.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn rows_shares_sum_to_one() {
+        let r = area(&HwConfig::flicker32(), &AreaParams::default());
+        let s: f64 = r.rows().iter().map(|(_, _, share)| share).sum();
+        assert!((s - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn no_ctu_means_zero_ctu_area() {
+        let r = area(&HwConfig::gscore64(), &AreaParams::default());
+        assert_eq!(r.ctu_mm2, 0.0);
+    }
+}

@@ -1,0 +1,158 @@
+//! LPDDR4 DRAM traffic + timing model (paper Sec. IV-A memory optimization).
+//!
+//! Traffic accounting follows the paper's two-phase fetch: during frustum
+//! culling only *geometric* features are read (10 f32 per Gaussian, or one
+//! cluster descriptor per "big Gaussian" when clustering is enabled); color
+//! payloads (45+ parameters) are fetched only for Gaussians that survive
+//! culling. Tile-list duplication adds on-chip-buffered feature writes that
+//! spill to DRAM when lists exceed the feature buffer.
+
+use super::workload::FrameWorkload;
+use super::HwConfig;
+use crate::scene::gaussian::params;
+
+/// DRAM traffic breakdown for one frame, in bytes.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct DramTraffic {
+    /// Cluster descriptors (center+radius+range: 8 f32) or per-Gaussian
+    /// geometric reads during culling.
+    pub cull_bytes: u64,
+    /// Geometric features of Gaussians in visible clusters.
+    pub geom_bytes: u64,
+    /// Color payloads of surviving Gaussians.
+    pub color_bytes: u64,
+    /// Per-tile list spill traffic (duplicates × compact feature record).
+    pub list_bytes: u64,
+    /// Framebuffer writeout.
+    pub framebuffer_bytes: u64,
+}
+
+impl DramTraffic {
+    pub fn total(&self) -> u64 {
+        self.cull_bytes + self.geom_bytes + self.color_bytes + self.list_bytes
+            + self.framebuffer_bytes
+    }
+}
+
+/// Cluster statistics the traffic model needs (from `scene::clustering`).
+#[derive(Clone, Copy, Debug)]
+pub struct ClusterInfo {
+    pub num_clusters: usize,
+    pub visible_clusters: usize,
+    /// Gaussians inside visible clusters.
+    pub gaussians_in_visible: usize,
+}
+
+/// Compute frame traffic.
+pub fn frame_traffic(wl: &FrameWorkload, hw: &HwConfig, clusters: Option<ClusterInfo>) -> DramTraffic {
+    const CLUSTER_DESC_BYTES: u64 = 32;
+    /// Compact per-duplicate record in the tile lists (id + depth key).
+    const LIST_RECORD_BYTES: u64 = 8;
+
+    let mut t = DramTraffic::default();
+    match (hw.clustering, clusters) {
+        (true, Some(ci)) => {
+            // Read every cluster descriptor, then geometry only for visible
+            // clusters' members.
+            t.cull_bytes = ci.num_clusters as u64 * CLUSTER_DESC_BYTES;
+            t.geom_bytes = ci.gaussians_in_visible as u64 * params::GEOM_BYTES as u64;
+        }
+        _ => {
+            // No clustering: geometry of *every* Gaussian streams through
+            // the frustum-culling unit.
+            t.cull_bytes = 0;
+            t.geom_bytes = wl.scene_gaussians as u64 * params::GEOM_BYTES as u64;
+        }
+    }
+    t.color_bytes = wl.visible_splats as u64 * params::COLOR_BYTES as u64;
+    t.list_bytes = wl.tile_pairs as u64 * LIST_RECORD_BYTES;
+    t.framebuffer_bytes = (wl.width as u64) * (wl.height as u64) * 4;
+    t
+}
+
+/// Transfer time in seconds at the configured bandwidth (with a fixed 85%
+/// efficiency factor for LPDDR4 row-activation overhead).
+pub fn transfer_seconds(bytes: u64, hw: &HwConfig) -> f64 {
+    const EFFICIENCY: f64 = 0.85;
+    bytes as f64 / (hw.dram_gbps * 1e9 * EFFICIENCY)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::camera::{Camera, Intrinsics};
+    use crate::numeric::linalg::v3;
+    use crate::scene::clustering::cluster;
+    use crate::scene::synthetic::{generate_scaled, preset};
+    use crate::sim::workload::extract;
+
+    fn setup() -> (FrameWorkload, ClusterInfo) {
+        let scene = generate_scaled(&preset("garden"), 0.01);
+        // Camera facing *away* from the scene core: most clusters fall
+        // outside the frustum, which is where cluster-level culling pays.
+        let cam = Camera::look_at(
+            Intrinsics::from_fov(128, 128, 0.5),
+            v3(0.0, 2.5, -6.0),
+            v3(0.0, 2.5, -40.0),
+            v3(0.0, 1.0, 0.0),
+        );
+        let wl = extract(&scene, &cam, &HwConfig::flicker32());
+        let cl = cluster(&scene, 32);
+        let visible = cl.cull(&cam);
+        let ci = ClusterInfo {
+            num_clusters: cl.num_clusters(),
+            visible_clusters: cl.visible_clusters(&cam),
+            gaussians_in_visible: visible.len(),
+        };
+        (wl, ci)
+    }
+
+    #[test]
+    fn clustering_reduces_cull_traffic() {
+        let (wl, ci) = setup();
+        let hw_c = HwConfig::flicker32();
+        let hw_n = HwConfig {
+            clustering: false,
+            ..HwConfig::flicker32()
+        };
+        let with = frame_traffic(&wl, &hw_c, Some(ci));
+        let without = frame_traffic(&wl, &hw_n, None);
+        assert!(
+            with.cull_bytes + with.geom_bytes < without.geom_bytes,
+            "clustered {} vs flat {}",
+            with.cull_bytes + with.geom_bytes,
+            without.geom_bytes
+        );
+        // Color traffic identical (same survivors).
+        assert_eq!(with.color_bytes, without.color_bytes);
+    }
+
+    #[test]
+    fn color_fetched_only_for_survivors() {
+        let (wl, ci) = setup();
+        let t = frame_traffic(&wl, &HwConfig::flicker32(), Some(ci));
+        let full = wl.scene_gaussians as u64 * crate::scene::gaussian::params::COLOR_BYTES as u64;
+        assert!(t.color_bytes < full, "color must be gated by culling");
+    }
+
+    #[test]
+    fn transfer_time_linear() {
+        let hw = HwConfig::flicker32();
+        let t1 = transfer_seconds(1_000_000, &hw);
+        let t2 = transfer_seconds(2_000_000, &hw);
+        assert!((t2 / t1 - 2.0).abs() < 1e-12);
+        // 51.2 GB/s × 0.85 → ~43.5 GB/s effective.
+        assert!((transfer_seconds(43_520_000_000, &hw) - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn totals_sum() {
+        let (wl, ci) = setup();
+        let t = frame_traffic(&wl, &HwConfig::flicker32(), Some(ci));
+        assert_eq!(
+            t.total(),
+            t.cull_bytes + t.geom_bytes + t.color_bytes + t.list_bytes + t.framebuffer_bytes
+        );
+        assert!(t.total() > 0);
+    }
+}

@@ -1,0 +1,215 @@
+//! Energy model: 28 nm per-operation energies + DRAM access energy.
+//!
+//! Per-op numbers follow the widely used 45 nm estimates (Horowitz,
+//! ISSCC'14) scaled to 28 nm (~0.6×), consistent with the accelerator
+//! literature the paper cites ([22][24]-class designs). Absolute joules are
+//! *not* the claim — the comparisons in Figs. 8/10 are ratios on the same
+//! model, which is exactly how the paper's own simulator-based energy
+//! numbers work.
+
+use super::workload::FrameWorkload;
+use super::HwConfig;
+use crate::cat::Precision;
+
+/// Per-op energies in picojoules (28 nm).
+#[derive(Clone, Copy, Debug)]
+pub struct EnergyParams {
+    pub fp32_mul_pj: f64,
+    pub fp32_add_pj: f64,
+    pub fp16_mul_pj: f64,
+    pub fp16_add_pj: f64,
+    pub fp8_mul_pj: f64,
+    pub fp8_add_pj: f64,
+    /// On-chip SRAM access per 32-bit word.
+    pub sram_word_pj: f64,
+    /// DRAM energy per byte (LPDDR4-class).
+    pub dram_byte_pj: f64,
+    /// Static/clock power per unit-cycle (VRU-equivalent), pJ.
+    pub static_unit_cycle_pj: f64,
+    /// Board/system power floor (W): DRAM refresh, IO, PLLs, regulators —
+    /// what a deployed edge module burns beyond the datapath. Keeps the
+    /// accelerator-vs-GPU energy ratios at the paper's scale (the XNX
+    /// baseline is measured at board power).
+    pub system_w: f64,
+}
+
+impl Default for EnergyParams {
+    fn default() -> Self {
+        EnergyParams {
+            fp32_mul_pj: 2.3,
+            fp32_add_pj: 0.55,
+            fp16_mul_pj: 0.70,
+            fp16_add_pj: 0.25,
+            fp8_mul_pj: 0.20,
+            fp8_add_pj: 0.10,
+            sram_word_pj: 3.0,
+            dram_byte_pj: 21.0,
+            static_unit_cycle_pj: 0.15,
+            system_w: 0.8,
+        }
+    }
+}
+
+/// Energy breakdown for one frame, in microjoules.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct EnergyReport {
+    pub vru_uj: f64,
+    pub ctu_uj: f64,
+    pub fifo_uj: f64,
+    pub preprocess_uj: f64,
+    pub dram_uj: f64,
+    pub static_uj: f64,
+}
+
+impl EnergyReport {
+    pub fn total_uj(&self) -> f64 {
+        self.vru_uj + self.ctu_uj + self.fifo_uj + self.preprocess_uj + self.dram_uj
+            + self.static_uj
+    }
+}
+
+/// Blend cost per (pixel, Gaussian): Eq. 1 evaluation + color accumulation
+/// ≈ 9 FP16 muls + 6 FP16 adds + exp (≈ 4 mul-equivalents) on the VRU's
+/// full-FP16 rendering datapath.
+fn blend_pair_pj(p: &EnergyParams) -> f64 {
+    13.0 * p.fp16_mul_pj + 6.0 * p.fp16_add_pj
+}
+
+/// CTU energy per PR at the configured precision (Alg. 1: 20 mul + 8 add
+/// + 4 cmp on the quantized path, plus FP16 convert costs for mixed).
+fn pr_pj(p: &EnergyParams, prec: Precision) -> f64 {
+    match prec {
+        Precision::Fp32 => 20.0 * p.fp32_mul_pj + 12.0 * p.fp32_add_pj,
+        Precision::Fp16 => 20.0 * p.fp16_mul_pj + 12.0 * p.fp16_add_pj,
+        Precision::Fp8 => 20.0 * p.fp8_mul_pj + 12.0 * p.fp8_add_pj,
+        // Mixed: 4 FP16 subs (line 1) + FP8 mul stage + FP16 accumulation.
+        Precision::Mixed => {
+            4.0 * p.fp16_add_pj + 16.0 * p.fp8_mul_pj + 8.0 * p.fp16_add_pj + 4.0 * p.fp8_add_pj
+        }
+    }
+}
+
+/// Compute the frame energy from workload counters + pipeline occupancy.
+pub fn frame_energy(
+    wl: &FrameWorkload,
+    hw: &HwConfig,
+    total_cycles: u64,
+    dram_bytes: u64,
+    p: &EnergyParams,
+) -> EnergyReport {
+    let mut e = EnergyReport::default();
+
+    // VRUs: actual per-pixel blends + the wasted evaluations on masked-in
+    // pixels that failed the α test (they still occupy the lane).
+    let vru_evals = wl.minitile_pairs * 16;
+    e.vru_uj = vru_evals as f64 * blend_pair_pj(p) * 1e-6;
+
+    // CTU: PRs at the configured precision + shared ln(255·o) term per job.
+    if hw.ctu {
+        let jobs = wl.dense_jobs + wl.sparse_jobs;
+        e.ctu_uj = (wl.ctu_prs as f64 * pr_pj(p, hw.cat_precision)
+            + jobs as f64 * (2.0 * p.fp16_mul_pj))
+            * 1e-6;
+    }
+
+    // Feature FIFOs: one push + one pop per (job, masked channel); a feature
+    // record is ~8 words (μ′, conic, color, opacity, depth).
+    let fifo_words = wl.minitile_pairs * 2 * 8;
+    e.fifo_uj = fifo_words as f64 * p.sram_word_pj * 1e-6;
+
+    // Preprocessing: projection (~60 FP32 mul-equivalents per visible
+    // Gaussian) + sub-tile tests (~8 mul-eq per stage-1 pair; OBB ≈ 2×).
+    let st_cost = match hw.subtile_test {
+        super::SubtileTest::None => 0.0,
+        super::SubtileTest::Aabb => 8.0,
+        super::SubtileTest::Obb => 16.0,
+    };
+    e.preprocess_uj = (wl.visible_splats as f64 * 60.0 * p.fp32_mul_pj
+        + wl.stage1_pairs as f64 * st_cost * p.fp32_mul_pj)
+        * 1e-6;
+
+    e.dram_uj = dram_bytes as f64 * p.dram_byte_pj * 1e-6;
+
+    // Static: proportional to active units × cycles. VRU-equivalents:
+    // VRUs + CTU (≈ 0.1 VRU each per Table II) + front-end (~4).
+    let units = hw.total_vrus() as f64
+        + if hw.ctu { hw.rendering_cores as f64 * 0.8 } else { 0.0 }
+        + 4.0;
+    // Datapath leakage + board/system floor over the frame duration.
+    let frame_s = total_cycles as f64 / (hw.freq_ghz * 1e9);
+    e.static_uj = total_cycles as f64 * units * p.static_unit_cycle_pj * 1e-6
+        + frame_s * p.system_w * 1e6;
+
+    e
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::camera::{Camera, Intrinsics};
+    use crate::numeric::linalg::v3;
+    use crate::scene::synthetic::{generate_scaled, preset};
+    use crate::sim::workload::extract;
+
+    fn wl(hw: &HwConfig) -> FrameWorkload {
+        let scene = generate_scaled(&preset("garden"), 0.01);
+        let cam = Camera::look_at(
+            Intrinsics::from_fov(128, 128, 1.2),
+            v3(0.0, 2.5, -12.0),
+            v3(0.0, 0.5, 0.0),
+            v3(0.0, 1.0, 0.0),
+        );
+        extract(&scene, &cam, hw)
+    }
+
+    #[test]
+    fn totals_are_positive_and_sum() {
+        let hw = HwConfig::flicker32();
+        let w = wl(&hw);
+        let e = frame_energy(&w, &hw, 100_000, 1_000_000, &EnergyParams::default());
+        assert!(e.vru_uj > 0.0);
+        assert!(e.ctu_uj > 0.0);
+        assert!(e.dram_uj > 0.0);
+        let sum = e.vru_uj + e.ctu_uj + e.fifo_uj + e.preprocess_uj + e.dram_uj + e.static_uj;
+        assert!((e.total_uj() - sum).abs() < 1e-12);
+    }
+
+    #[test]
+    fn ctu_saves_more_vru_energy_than_it_costs() {
+        // The core energy claim of Fig. 8(b): CAT's own energy ≪ the blend
+        // energy it eliminates.
+        let p = EnergyParams::default();
+        let hw_ctu = HwConfig::flicker32();
+        let hw_no = HwConfig::simplified32();
+        let w_ctu = wl(&hw_ctu);
+        let w_no = wl(&hw_no);
+        let e_ctu = frame_energy(&w_ctu, &hw_ctu, 0, 0, &p);
+        let e_no = frame_energy(&w_no, &hw_no, 0, 0, &p);
+        let saved = e_no.vru_uj - e_ctu.vru_uj;
+        assert!(
+            e_ctu.ctu_uj < saved * 0.5,
+            "CTU {} µJ vs saved {} µJ",
+            e_ctu.ctu_uj,
+            saved
+        );
+        assert!(e_ctu.total_uj() < e_no.total_uj());
+    }
+
+    #[test]
+    fn mixed_precision_cheaper_than_fp32_ctu() {
+        let p = EnergyParams::default();
+        assert!(pr_pj(&p, Precision::Mixed) < pr_pj(&p, Precision::Fp16));
+        assert!(pr_pj(&p, Precision::Fp16) < pr_pj(&p, Precision::Fp32));
+        assert!(pr_pj(&p, Precision::Fp8) < pr_pj(&p, Precision::Mixed));
+    }
+
+    #[test]
+    fn dram_energy_scales_with_bytes() {
+        let hw = HwConfig::flicker32();
+        let w = wl(&hw);
+        let p = EnergyParams::default();
+        let e1 = frame_energy(&w, &hw, 0, 1_000_000, &p);
+        let e2 = frame_energy(&w, &hw, 0, 2_000_000, &p);
+        assert!((e2.dram_uj / e1.dram_uj - 2.0).abs() < 1e-9);
+    }
+}

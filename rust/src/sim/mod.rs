@@ -1,0 +1,189 @@
+//! Cycle-accurate simulator of the FLICKER accelerator (paper Sec. IV) and
+//! its baselines.
+//!
+//! The simulated machine follows Fig. 5: per tile, four *sub-tile complexes*
+//! each consisting of a CTU (two PRTUs + MMU, fully pipelined, with a small
+//! built-in FIFO for stall resilience) feeding four feature FIFOs; each FIFO
+//! drives a channel of two VRUs rendering one 4×4 mini-tile. Preprocessing
+//! cores and sorting units run a tile ahead (double-buffered), so the frame
+//! bottleneck is max(rendering pipeline, preprocessing compute, DRAM).
+//!
+//! Baselines share the same template:
+//! * **GSCore** [7] — OBB sub-tile test in preprocessing, no CTU, 64 VRUs.
+//! * **FLICKER-simplified** — sub-tile AABB only, no CTU (the ablation of
+//!   Fig. 8), in 32- and 64-VRU flavours (Table II(b)).
+//! * **Edge/desktop GPU** — analytic SM model with warp-divergence
+//!   accounting (`gpu`), for Fig. 1 and the Fig. 10 normalization.
+
+pub mod area;
+pub mod dram;
+pub mod energy;
+pub mod gpu;
+pub mod pipe;
+pub mod top;
+pub mod workload;
+
+use crate::cat::{LeaderMode, Precision};
+
+/// Sub-tile pre-filter performed by the preprocessing core (Stage 1).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SubtileTest {
+    /// Tile-level AABB only: every sub-tile of an intersected tile is fed.
+    None,
+    /// Sub-tile AABB (FLICKER Stage 1).
+    Aabb,
+    /// Sub-tile OBB (GSCore).
+    Obb,
+}
+
+/// Hardware configuration (paper Table II(a) plus ablation knobs).
+#[derive(Clone, Debug)]
+pub struct HwConfig {
+    pub name: String,
+    /// Core clock (paper-class edge accelerator: 1 GHz at 28 nm).
+    pub freq_ghz: f64,
+    /// Rendering cores; each covers one 8×8 sub-tile.
+    pub rendering_cores: usize,
+    /// Channels per rendering core; each renders one 4×4 mini-tile.
+    pub channels_per_core: usize,
+    /// VRUs per channel (pixels blended per cycle per channel ×8).
+    pub vrus_per_channel: usize,
+    /// Contribution-aware test unit present?
+    pub ctu: bool,
+    /// Leader-pixel mode the CTU runs (ignored without CTU).
+    pub cat_mode: LeaderMode,
+    /// CTU datapath precision.
+    pub cat_precision: Precision,
+    /// Stage-1 sub-tile test.
+    pub subtile_test: SubtileTest,
+    /// Feature-FIFO depth per channel (Fig. 9 sweep knob).
+    pub fifo_depth: usize,
+    /// Depth of the CTU's built-in stall-resilience FIFO.
+    pub ctu_fifo_depth: usize,
+    /// DRAM bandwidth (LPDDR4: 51.2 GB/s).
+    pub dram_gbps: f64,
+    /// Use clustering ("big Gaussians") for frustum-culling traffic.
+    pub clustering: bool,
+}
+
+impl HwConfig {
+    pub fn total_vrus(&self) -> usize {
+        self.rendering_cores * self.channels_per_core * self.vrus_per_channel
+    }
+
+    /// Cycles one channel needs to blend one Gaussian over its mini-tile
+    /// (16 pixels / VRUs-per-channel).
+    pub fn blend_cycles(&self) -> u32 {
+        16u32.div_ceil(self.vrus_per_channel as u32)
+    }
+
+    /// FLICKER as evaluated: 4 cores × 4 ch × 2 VRUs = 32 VRUs, CTU with
+    /// adaptive leaders at mixed precision, sub-tile AABB Stage 1, FIFO 16.
+    pub fn flicker32() -> HwConfig {
+        HwConfig {
+            name: "flicker32".into(),
+            freq_ghz: 1.0,
+            rendering_cores: 4,
+            channels_per_core: 4,
+            vrus_per_channel: 2,
+            ctu: true,
+            cat_mode: LeaderMode::SmoothFocused,
+            cat_precision: Precision::Mixed,
+            subtile_test: SubtileTest::Aabb,
+            fifo_depth: 16,
+            ctu_fifo_depth: 4,
+            dram_gbps: 51.2,
+            clustering: true,
+        }
+    }
+
+    /// FLICKER forced to Uniform-Sparse (the +1.1× mode of Fig. 8).
+    pub fn flicker32_sparse() -> HwConfig {
+        HwConfig {
+            name: "flicker32-sparse".into(),
+            cat_mode: LeaderMode::UniformSparse,
+            ..Self::flicker32()
+        }
+    }
+
+    /// Ablation: FLICKER without the CTU (basic sub-tile AABB only).
+    pub fn simplified32() -> HwConfig {
+        HwConfig {
+            name: "flicker-simplified32".into(),
+            ctu: false,
+            ..Self::flicker32()
+        }
+    }
+
+    /// Simplified version scaled to 64 VRUs (Table II(b) baseline).
+    pub fn simplified64() -> HwConfig {
+        HwConfig {
+            name: "flicker-simplified64".into(),
+            ctu: false,
+            vrus_per_channel: 4,
+            ..Self::flicker32()
+        }
+    }
+
+    /// GSCore-like baseline: OBB sub-tile test, 64 VRUs, no CTU.
+    pub fn gscore64() -> HwConfig {
+        HwConfig {
+            name: "gscore64".into(),
+            ctu: false,
+            vrus_per_channel: 4,
+            subtile_test: SubtileTest::Obb,
+            clustering: false,
+            ..Self::flicker32()
+        }
+    }
+
+    pub fn by_name(name: &str) -> Option<HwConfig> {
+        Some(match name {
+            "flicker32" | "flicker" => Self::flicker32(),
+            "flicker32-sparse" | "sparse" => Self::flicker32_sparse(),
+            "flicker-simplified32" | "simplified32" => Self::simplified32(),
+            "flicker-simplified64" | "simplified64" => Self::simplified64(),
+            "gscore64" | "gscore" => Self::gscore64(),
+            _ => return None,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn vru_counts_match_paper() {
+        assert_eq!(HwConfig::flicker32().total_vrus(), 32);
+        assert_eq!(HwConfig::gscore64().total_vrus(), 64);
+        assert_eq!(HwConfig::simplified64().total_vrus(), 64);
+    }
+
+    #[test]
+    fn blend_cycles() {
+        assert_eq!(HwConfig::flicker32().blend_cycles(), 8);
+        assert_eq!(HwConfig::gscore64().blend_cycles(), 4);
+    }
+
+    #[test]
+    fn presets_resolvable_by_name() {
+        for n in [
+            "flicker32",
+            "gscore64",
+            "simplified32",
+            "simplified64",
+            "flicker32-sparse",
+        ] {
+            assert!(HwConfig::by_name(n).is_some(), "{n}");
+        }
+        assert!(HwConfig::by_name("nope").is_none());
+    }
+
+    #[test]
+    fn gscore_has_obb_no_ctu() {
+        let g = HwConfig::gscore64();
+        assert!(!g.ctu);
+        assert_eq!(g.subtile_test, SubtileTest::Obb);
+    }
+}

@@ -1,0 +1,297 @@
+//! Cycle-level pipeline model of one sub-tile complex (paper Fig. 5/6):
+//! CTU (or plain dispatcher) → 4 feature FIFOs → 4 VRU channels, with the
+//! stall-resilient backpressure protocol of Sec. IV-B.
+//!
+//! Timing rules (1 job = one Gaussian for one sub-tile):
+//! * CTU occupancy: `ctu_cycles` per job (1 sparse / 2 dense). Without CTU
+//!   the dispatcher issues 1 job/cycle.
+//! * A completed job enqueues into **all** masked-in channel FIFOs
+//!   atomically; if any target FIFO is full the result waits in the CTU's
+//!   built-in FIFO. When that fills, the CTU halts intake (stall).
+//! * A channel pops one job per `blend_cycles` (16 px / VRUs). Once its
+//!   mini-tile has saturated (early termination), remaining pops cost one
+//!   cycle each (transmittance check, no blend).
+//!
+//! Pops happen before pushes within a cycle, so a full FIFO frees a slot the
+//! same cycle its channel finishes — matching a same-edge SRAM FIFO.
+
+use super::workload::SubtileStream;
+
+/// Per-complex cycle statistics.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct PipeStats {
+    pub cycles: u64,
+    /// Cycles the CTU (or dispatcher) was processing a job.
+    pub ctu_busy: u64,
+    /// Cycles the CTU was halted on backpressure (paper Fig. 9 stall rate).
+    pub ctu_stalled: u64,
+    /// Σ over channels of cycles spent blending.
+    pub vru_busy: u64,
+    /// Σ over channels of cycles spent discarding post-saturation jobs.
+    pub vru_discard: u64,
+    /// Jobs fully filtered by the CTU (mask 0) — never reached a FIFO.
+    pub filtered_jobs: u64,
+    /// Peak FIFO occupancy observed (validates the Fig. 9 depth choice).
+    pub peak_fifo: u32,
+}
+
+impl PipeStats {
+    /// CTU stall rate as plotted in Fig. 9.
+    pub fn stall_rate(&self) -> f64 {
+        self.ctu_stalled as f64 / (self.ctu_busy + self.ctu_stalled).max(1) as f64
+    }
+
+    pub fn merge_max_cycles(&mut self, o: &PipeStats) {
+        self.cycles = self.cycles.max(o.cycles);
+        self.ctu_busy += o.ctu_busy;
+        self.ctu_stalled += o.ctu_stalled;
+        self.vru_busy += o.vru_busy;
+        self.vru_discard += o.vru_discard;
+        self.filtered_jobs += o.filtered_jobs;
+        self.peak_fifo = self.peak_fifo.max(o.peak_fifo);
+    }
+}
+
+/// Simulate one sub-tile complex over its job stream.
+///
+/// `fifo_depth` — feature FIFO capacity per channel; `ctu_fifo_depth` — the
+/// CTU's built-in output FIFO; `blend_cycles` — per-job channel occupancy.
+pub fn run_subtile(
+    stream: &SubtileStream,
+    fifo_depth: usize,
+    ctu_fifo_depth: usize,
+    blend_cycles: u32,
+) -> PipeStats {
+    let mut stats = PipeStats::default();
+    if stream.jobs.is_empty() {
+        return stats;
+    }
+
+    // Channel state: FIFO occupancy (queue of job ordinals is unnecessary —
+    // only counts and saturation ordinals matter), busy countdown, and how
+    // many masked-in jobs each channel has consumed so far.
+    #[derive(Default, Clone, Copy)]
+    struct Channel {
+        fifo: u32,
+        busy: u32,
+        consumed: u32,
+    }
+    let mut ch = [Channel::default(); 4];
+
+    // CTU state.
+    let mut next_job = 0usize; // index into stream.jobs
+    let mut ctu_remaining = 0u32; // cycles left on current job
+    let mut ctu_out: Vec<u8> = Vec::new(); // built-in FIFO of completed masks
+    let mut cur_mask: Option<u8> = None; // job being processed
+
+    let n = stream.jobs.len();
+    // Safety bound: every job ≤ (ctu + 4 × blend) cycles plus drain.
+    let bound = (n as u64 + 8) * (blend_cycles as u64 * 4 + 4) + 1024;
+
+    loop {
+        if next_job >= n
+            && cur_mask.is_none()
+            && ctu_out.is_empty()
+            && ch.iter().all(|c| c.fifo == 0 && c.busy == 0)
+        {
+            break;
+        }
+        stats.cycles += 1;
+        assert!(stats.cycles < bound, "pipe livelock: {stats:?}");
+
+        // 1. Channels: advance blending; pop when idle.
+        for (m, c) in ch.iter_mut().enumerate() {
+            if c.busy > 0 {
+                c.busy -= 1;
+            }
+            if c.busy == 0 && c.fifo > 0 {
+                c.fifo -= 1;
+                c.consumed += 1;
+                if c.consumed <= stream.sat[m] {
+                    c.busy = blend_cycles;
+                    stats.vru_busy += blend_cycles as u64;
+                } else {
+                    // Post-saturation: transmittance check + drop, 1 cycle.
+                    c.busy = 1;
+                    stats.vru_discard += 1;
+                }
+            }
+        }
+
+        // 2. CTU output stage: drain the built-in FIFO into channel FIFOs.
+        while let Some(&mask) = ctu_out.first() {
+            let targets: Vec<usize> = (0..4).filter(|&m| mask & (1 << m) != 0).collect();
+            let room = targets
+                .iter()
+                .all(|&m| (ch[m].fifo as usize) < fifo_depth);
+            if !room {
+                break;
+            }
+            for &m in &targets {
+                ch[m].fifo += 1;
+                stats.peak_fifo = stats.peak_fifo.max(ch[m].fifo);
+            }
+            ctu_out.remove(0);
+        }
+
+        // 3. CTU compute stage.
+        if cur_mask.is_none() && next_job < n {
+            // Intake halts when the built-in FIFO is full (stall signal).
+            if ctu_out.len() < ctu_fifo_depth {
+                let job = stream.jobs[next_job];
+                next_job += 1;
+                ctu_remaining = job.ctu_cycles as u32;
+                cur_mask = Some(job.mask);
+            } else {
+                stats.ctu_stalled += 1;
+            }
+        }
+        if let Some(mask) = cur_mask {
+            stats.ctu_busy += 1;
+            ctu_remaining -= 1;
+            if ctu_remaining == 0 {
+                if mask == 0 {
+                    stats.filtered_jobs += 1;
+                } else {
+                    ctu_out.push(mask);
+                }
+                cur_mask = None;
+            }
+        }
+    }
+    stats
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::workload::{GaussianJob, SubtileStream};
+
+    fn stream(jobs: Vec<GaussianJob>, sat: [u32; 4]) -> SubtileStream {
+        SubtileStream { jobs, sat }
+    }
+
+    fn job(ctu: u8, mask: u8) -> GaussianJob {
+        GaussianJob {
+            ctu_cycles: ctu,
+            mask,
+        }
+    }
+
+    #[test]
+    fn empty_stream_zero_cycles() {
+        let s = stream(vec![], [0; 4]);
+        let st = run_subtile(&s, 16, 4, 8);
+        assert_eq!(st.cycles, 0);
+    }
+
+    #[test]
+    fn single_job_latency() {
+        // 1 CTU cycle + 8 blend cycles, plus the pipeline handoff cycle.
+        let s = stream(vec![job(1, 0b0001)], [1, 0, 0, 0]);
+        let st = run_subtile(&s, 16, 4, 8);
+        assert!(st.cycles >= 9 && st.cycles <= 11, "cycles {}", st.cycles);
+        assert_eq!(st.vru_busy, 8);
+        assert_eq!(st.ctu_busy, 1);
+        assert_eq!(st.ctu_stalled, 0);
+    }
+
+    #[test]
+    fn filtered_jobs_never_touch_fifos() {
+        let s = stream(vec![job(1, 0), job(2, 0), job(1, 0)], [0; 4]);
+        let st = run_subtile(&s, 16, 4, 8);
+        assert_eq!(st.filtered_jobs, 3);
+        assert_eq!(st.vru_busy, 0);
+        assert_eq!(st.peak_fifo, 0);
+        assert_eq!(st.ctu_busy, 4); // 1+2+1
+    }
+
+    #[test]
+    fn throughput_bound_by_vru_when_all_pass() {
+        // 50 jobs all hitting one channel: steady state = 8 cycles/job.
+        let jobs: Vec<_> = (0..50).map(|_| job(1, 0b0001)).collect();
+        let s = stream(jobs, [50, 0, 0, 0]);
+        let st = run_subtile(&s, 16, 4, 8);
+        assert!(
+            (st.cycles as i64 - 50 * 8).unsigned_abs() < 24,
+            "cycles {}",
+            st.cycles
+        );
+    }
+
+    #[test]
+    fn throughput_bound_by_ctu_when_filtered() {
+        // Dense jobs (2 cycles) all filtered: pure CTU throughput.
+        let jobs: Vec<_> = (0..50).map(|_| job(2, 0)).collect();
+        let s = stream(jobs, [0; 4]);
+        let st = run_subtile(&s, 16, 4, 8);
+        assert!(
+            (st.cycles as i64 - 100).unsigned_abs() < 8,
+            "cycles {}",
+            st.cycles
+        );
+    }
+
+    #[test]
+    fn shallow_fifo_stalls_deep_fifo_doesnt() {
+        // Bursty: all four channels loaded, CTU far faster than VRUs.
+        let jobs: Vec<_> = (0..64).map(|_| job(1, 0b1111)).collect();
+        let shallow = run_subtile(&stream(jobs.clone(), [64; 4]), 1, 1, 8);
+        let deep = run_subtile(&stream(jobs, [64; 4]), 128, 4, 8);
+        assert!(shallow.ctu_stalled > 0, "shallow must stall");
+        assert!(
+            deep.ctu_stalled < shallow.ctu_stalled,
+            "deep {} vs shallow {}",
+            deep.ctu_stalled,
+            shallow.ctu_stalled
+        );
+        // Total work identical.
+        assert_eq!(shallow.vru_busy, deep.vru_busy);
+    }
+
+    #[test]
+    fn deeper_fifo_never_slower() {
+        let jobs: Vec<_> = (0..40)
+            .map(|i| job(1 + (i % 2) as u8, 0b0011 | ((i % 4) as u8) << 2))
+            .collect();
+        let mut prev = u64::MAX;
+        for depth in [1usize, 2, 4, 8, 16, 32] {
+            let st = run_subtile(&stream(jobs.clone(), [40; 4]), depth, 4, 8);
+            assert!(st.cycles <= prev, "depth {depth}: {} > {prev}", st.cycles);
+            prev = st.cycles;
+        }
+    }
+
+    #[test]
+    fn saturation_discards_cheaply() {
+        // Channel 0 saturates after 2 jobs; the rest of 30 jobs cost 1 cycle.
+        let jobs: Vec<_> = (0..30).map(|_| job(1, 0b0001)).collect();
+        let st = run_subtile(&stream(jobs, [2, 0, 0, 0]), 16, 4, 8);
+        assert_eq!(st.vru_busy, 16); // 2 × 8
+        assert_eq!(st.vru_discard, 28);
+        assert!(st.cycles < 2 * 8 + 28 + 10, "cycles {}", st.cycles);
+    }
+
+    #[test]
+    fn peak_fifo_bounded_by_depth() {
+        let jobs: Vec<_> = (0..100).map(|_| job(1, 0b1111)).collect();
+        for depth in [1usize, 3, 7] {
+            let st = run_subtile(&stream(jobs.clone(), [100; 4]), depth, 4, 8);
+            assert!(st.peak_fifo as usize <= depth, "depth {depth}");
+        }
+    }
+
+    #[test]
+    fn work_conservation_across_depths() {
+        // vru_busy + vru_discard constant for any depth.
+        let jobs: Vec<_> = (0..60)
+            .map(|i| job(1, (0b0001 << (i % 4)) as u8))
+            .collect();
+        let base = run_subtile(&stream(jobs.clone(), [10, 10, 10, 10]), 128, 4, 8);
+        for depth in [1usize, 2, 16] {
+            let st = run_subtile(&stream(jobs.clone(), [10, 10, 10, 10]), depth, 4, 8);
+            assert_eq!(st.vru_busy, base.vru_busy);
+            assert_eq!(st.vru_discard, base.vru_discard);
+        }
+    }
+}

@@ -1,0 +1,236 @@
+//! Top-level simulator: ties workload extraction, the per-sub-tile cycle
+//! model, DRAM timing, and the energy model into a frame-level report.
+//!
+//! Frame phases (paper Fig. 5): preprocessing + sorting run a tile ahead of
+//! the rendering complex (double-buffered feature buffers), so frame time is
+//! max(rendering-pipeline cycles, preprocessing cycles, DRAM transfer) plus
+//! a small pipeline fill term.
+
+use super::dram::{frame_traffic, transfer_seconds, ClusterInfo, DramTraffic};
+use super::energy::{frame_energy, EnergyParams, EnergyReport};
+use super::pipe::{run_subtile, PipeStats};
+use super::workload::{extract, FrameWorkload};
+use super::HwConfig;
+use crate::camera::Camera;
+use crate::scene::clustering::cluster;
+use crate::scene::gaussian::Scene;
+
+/// Full per-frame simulation report.
+#[derive(Clone, Debug)]
+pub struct SimReport {
+    pub config: String,
+    /// Rendering-stage cycles (the Fig. 8/9 quantity).
+    pub render_cycles: u64,
+    /// Preprocessing/sorting cycles (overlapped).
+    pub preprocess_cycles: u64,
+    /// Frame-level cycles after overlap.
+    pub frame_cycles: u64,
+    pub frame_ms: f64,
+    pub fps: f64,
+    pub pipe: PipeStats,
+    pub traffic: DramTraffic,
+    pub energy: EnergyReport,
+    pub workload: FrameWorkload,
+}
+
+impl SimReport {
+    /// Rendering-stage time in ms (ignores preprocessing/DRAM overlap).
+    pub fn render_ms(&self, hw: &HwConfig) -> f64 {
+        self.render_cycles as f64 / (hw.freq_ghz * 1e9) * 1e3
+    }
+}
+
+/// Simulate one frame.
+pub fn simulate_frame(scene: &Scene, cam: &Camera, hw: &HwConfig) -> SimReport {
+    let wl = extract(scene, cam, hw);
+    simulate_workload(scene, cam, hw, wl)
+}
+
+/// Simulate a frame from an already-extracted workload (lets sweeps reuse
+/// the expensive functional pass when only pipe parameters change).
+pub fn simulate_workload(
+    scene: &Scene,
+    cam: &Camera,
+    hw: &HwConfig,
+    wl: FrameWorkload,
+) -> SimReport {
+    // Rendering pipeline: the 4 sub-tile complexes of a tile run in
+    // parallel; tiles are processed back-to-back.
+    let mut pipe = PipeStats::default();
+    let mut render_cycles: u64 = 0;
+    let blend = hw.blend_cycles();
+    for tile in &wl.tiles {
+        let mut tile_stats = PipeStats::default();
+        for st in &tile.subtiles {
+            let s = run_subtile(st, hw.fifo_depth, hw.ctu_fifo_depth, blend);
+            tile_stats.merge_max_cycles(&s);
+        }
+        render_cycles += tile_stats.cycles;
+        pipe.ctu_busy += tile_stats.ctu_busy;
+        pipe.ctu_stalled += tile_stats.ctu_stalled;
+        pipe.vru_busy += tile_stats.vru_busy;
+        pipe.vru_discard += tile_stats.vru_discard;
+        pipe.filtered_jobs += tile_stats.filtered_jobs;
+        pipe.peak_fifo = pipe.peak_fifo.max(tile_stats.peak_fifo);
+    }
+    pipe.cycles = render_cycles;
+
+    // Preprocessing: projection ≈ 16 cycles/Gaussian on each of the 4
+    // parallel preprocessing cores, plus 1 cycle per stage-1 test; sorting
+    // ≈ n·log n / 4-lane merge network, overlapped.
+    let proj = wl.visible_splats as u64 * 16 / 4;
+    let tests = wl.stage1_pairs / 4;
+    let nlogn = {
+        let n = wl.tile_pairs.max(2) as f64;
+        (n * n.log2() / 4.0) as u64
+    };
+    let preprocess_cycles = proj + tests + nlogn;
+
+    // DRAM.
+    let ci = if hw.clustering {
+        let cl = cluster(scene, 32);
+        Some(ClusterInfo {
+            num_clusters: cl.num_clusters(),
+            visible_clusters: cl.visible_clusters(cam),
+            gaussians_in_visible: cl.cull(cam).len(),
+        })
+    } else {
+        None
+    };
+    let traffic = frame_traffic(&wl, hw, ci);
+    let dram_s = transfer_seconds(traffic.total(), hw);
+    let dram_cycles = (dram_s * hw.freq_ghz * 1e9) as u64;
+
+    // Fixed per-frame overhead: host kickoff, descriptor setup, pipeline
+    // fill/drain (~30 µs at 1 GHz) — keeps tiny-workload comparisons sane.
+    const FRAME_OVERHEAD_CYCLES: u64 = 30_000;
+    let frame_cycles = render_cycles.max(preprocess_cycles).max(dram_cycles)
+        + (preprocess_cycles.min(render_cycles) / wl.tiles.len().max(1) as u64)
+        + FRAME_OVERHEAD_CYCLES;
+    let frame_s = frame_cycles as f64 / (hw.freq_ghz * 1e9);
+
+    let energy = frame_energy(&wl, hw, frame_cycles, traffic.total(), &EnergyParams::default());
+
+    SimReport {
+        config: hw.name.clone(),
+        render_cycles,
+        preprocess_cycles,
+        frame_cycles,
+        frame_ms: frame_s * 1e3,
+        fps: 1.0 / frame_s,
+        pipe,
+        traffic,
+        energy,
+        workload: wl,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::camera::{Camera, Intrinsics};
+    use crate::numeric::linalg::v3;
+    use crate::scene::synthetic::{generate_scaled, preset};
+
+    fn setup() -> (Scene, Camera) {
+        let scene = generate_scaled(&preset("garden"), 0.01);
+        let cam = Camera::look_at(
+            Intrinsics::from_fov(128, 128, 1.2),
+            v3(0.0, 2.5, -12.0),
+            v3(0.0, 0.5, 0.0),
+            v3(0.0, 1.0, 0.0),
+        );
+        (scene, cam)
+    }
+
+    #[test]
+    fn report_is_consistent() {
+        let (s, c) = setup();
+        let r = simulate_frame(&s, &c, &HwConfig::flicker32());
+        assert!(r.render_cycles > 0);
+        assert!(r.frame_cycles >= r.render_cycles.min(r.preprocess_cycles));
+        assert!(r.fps > 0.0);
+        assert!((r.frame_ms * r.fps - 1000.0).abs() < 1.0);
+        assert!(r.energy.total_uj() > 0.0);
+    }
+
+    #[test]
+    fn ctu_speeds_up_rendering_stage() {
+        // Fig. 8(a) mechanism: CTU cuts VRU work enough to beat the
+        // simplified config even at equal VRU count.
+        let (s, c) = setup();
+        let ctu = simulate_frame(&s, &c, &HwConfig::flicker32());
+        let plain = simulate_frame(&s, &c, &HwConfig::simplified32());
+        let speedup = plain.render_cycles as f64 / ctu.render_cycles as f64;
+        assert!(speedup > 1.5, "CTU speedup {speedup}");
+    }
+
+    #[test]
+    fn flicker32_competitive_with_gscore64() {
+        // Fig. 8: FLICKER with 32 VRUs ≈ GSCore with 64 VRUs.
+        let (s, c) = setup();
+        let f = simulate_frame(&s, &c, &HwConfig::flicker32());
+        let g = simulate_frame(&s, &c, &HwConfig::gscore64());
+        let ratio = g.render_cycles as f64 / f.render_cycles as f64;
+        assert!(
+            (0.6..2.5).contains(&ratio),
+            "flicker-vs-gscore ratio {ratio}"
+        );
+    }
+
+    #[test]
+    fn flicker_more_energy_efficient_than_gscore() {
+        let (s, c) = setup();
+        let f = simulate_frame(&s, &c, &HwConfig::flicker32());
+        let g = simulate_frame(&s, &c, &HwConfig::gscore64());
+        assert!(
+            f.energy.total_uj() < g.energy.total_uj(),
+            "flicker {} µJ vs gscore {} µJ",
+            f.energy.total_uj(),
+            g.energy.total_uj()
+        );
+    }
+
+    #[test]
+    fn deeper_fifo_not_slower() {
+        let (s, c) = setup();
+        let mut prev: Option<u64> = None;
+        for depth in [1usize, 4, 16, 64] {
+            let hw = HwConfig {
+                fifo_depth: depth,
+                ..HwConfig::flicker32()
+            };
+            let r = simulate_frame(&s, &c, &hw);
+            if let Some(p) = prev {
+                assert!(
+                    r.render_cycles <= p + p / 50,
+                    "depth {depth}: {} vs {p}",
+                    r.render_cycles
+                );
+            }
+            prev = Some(r.render_cycles);
+        }
+    }
+
+    #[test]
+    fn stall_rate_decreases_with_depth() {
+        let (s, c) = setup();
+        let shallow = simulate_frame(
+            &s,
+            &c,
+            &HwConfig {
+                fifo_depth: 1,
+                ..HwConfig::flicker32()
+            },
+        );
+        let deep = simulate_frame(
+            &s,
+            &c,
+            &HwConfig {
+                fifo_depth: 64,
+                ..HwConfig::flicker32()
+            },
+        );
+        assert!(shallow.pipe.stall_rate() >= deep.pipe.stall_rate());
+    }
+}

@@ -1,0 +1,341 @@
+//! Frame workload extraction: turns a (scene, camera, config) triple into
+//! the per-tile, per-sub-tile Gaussian streams the cycle model consumes.
+//!
+//! This is the *functional* half of the simulator: it runs projection, tile
+//! binning, depth sorting, Stage-1 sub-tile tests, Mini-Tile CAT, and a
+//! per-mini-tile transmittance sweep that determines where early termination
+//! fires. The cycle model (`pipe`) then replays these streams against FIFO /
+//! CTU / VRU timing.
+
+use super::{HwConfig, SubtileTest};
+use crate::camera::Camera;
+use crate::cat::{CatConfig, CatEngine};
+use crate::render::project::{project_scene, Splat, ALPHA_MIN};
+use crate::render::raster::MINITILE;
+use crate::render::sort::sort_by_depth;
+use crate::render::tile::{
+    build_tile_lists, intersects_aabb, intersects_obb, Rect, Strategy, TileGrid,
+};
+use crate::scene::gaussian::Scene;
+
+/// One Gaussian's entry in a sub-tile stream.
+#[derive(Clone, Copy, Debug)]
+pub struct GaussianJob {
+    /// CTU occupancy in cycles: 1 (sparse: 2 PRs on 2 PRTUs) or 2 (dense:
+    /// 4 PRs in two batches). Without a CTU, dispatch takes 1 cycle.
+    pub ctu_cycles: u8,
+    /// 4-bit mini-tile mask within the sub-tile (output of Stage 2, or all
+    /// ones for non-CTU configs).
+    pub mask: u8,
+}
+
+/// Stream of jobs for one sub-tile complex, plus per-mini-tile saturation
+/// ordinals: `sat[m]` = number of *masked-in* jobs mini-tile `m` consumes
+/// before all its pixels saturate (jobs after that are popped & discarded).
+#[derive(Clone, Debug, Default)]
+pub struct SubtileStream {
+    pub jobs: Vec<GaussianJob>,
+    pub sat: [u32; 4],
+}
+
+/// Workload for one 16×16 tile: one stream per sub-tile complex.
+#[derive(Clone, Debug, Default)]
+pub struct TileWork {
+    pub subtiles: [SubtileStream; 4],
+}
+
+/// Whole-frame workload plus the aggregate counters the DRAM/energy models
+/// and Fig. 4 need.
+#[derive(Clone, Debug, Default)]
+pub struct FrameWorkload {
+    pub tiles: Vec<TileWork>,
+    /// Gaussians in the scene (DRAM: metadata universe).
+    pub scene_gaussians: usize,
+    /// Splats surviving frustum culling + projection.
+    pub visible_splats: usize,
+    /// Σ tile-list lengths (tile-level duplicates).
+    pub tile_pairs: usize,
+    /// (gaussian, sub-tile) pairs offered to Stage 1.
+    pub stage1_pairs: u64,
+    /// Pairs surviving Stage 1 (CTU input).
+    pub stage2_pairs: u64,
+    /// (gaussian, mini-tile) pairs surviving CAT (VRU input).
+    pub minitile_pairs: u64,
+    /// Σ CTU PRs evaluated (mixed-precision datapath activations).
+    pub ctu_prs: u64,
+    /// Dense/sparse split of CTU jobs.
+    pub dense_jobs: u64,
+    pub sparse_jobs: u64,
+    /// Per-pixel blends actually performed (energy model).
+    pub blended_pairs: u64,
+    pub width: u32,
+    pub height: u32,
+}
+
+impl FrameWorkload {
+    /// Average Gaussians processed per pixel (Fig. 4 metric): every
+    /// mini-tile job costs its 16 pixels one Eq.-1 evaluation each.
+    pub fn per_pixel_processed(&self) -> f64 {
+        (self.minitile_pairs * 16) as f64 / (self.width as u64 * self.height as u64) as f64
+    }
+}
+
+/// Extract the frame workload for a hardware config.
+pub fn extract(scene: &Scene, cam: &Camera, hw: &HwConfig) -> FrameWorkload {
+    let splats = project_scene(scene, cam);
+    let grid = TileGrid::new(cam.intr.width, cam.intr.height, 16);
+    let mut lists = build_tile_lists(&splats, &grid, Strategy::Aabb);
+    for list in &mut lists {
+        sort_by_depth(list, &splats);
+    }
+
+    let mut wl = FrameWorkload {
+        scene_gaussians: scene.len(),
+        visible_splats: splats.len(),
+        tile_pairs: lists.iter().map(|l| l.len()).sum(),
+        width: cam.intr.width,
+        height: cam.intr.height,
+        ..Default::default()
+    };
+    let mut cat = CatEngine::new(CatConfig {
+        mode: hw.cat_mode,
+        precision: hw.cat_precision,
+        stage1: false, // stage 1 handled explicitly below
+    });
+
+    wl.tiles.reserve(lists.len());
+    // Per-mini-tile transmittance state, reset per tile.
+    let mut trans; // [minitile 0..16][pixel 0..16]
+    let mut done;
+
+    for (t, list) in lists.iter().enumerate() {
+        let rect = grid.rect(t);
+        let mut tile = TileWork::default();
+        trans = [[1.0f32; 16]; 16];
+        done = [false; 16];
+
+        for &si in list {
+            let s = &splats[si as usize];
+            for (sub_idx, sub) in subtile_rects(&rect).iter().enumerate() {
+                wl.stage1_pairs += 1;
+                let pass1 = match hw.subtile_test {
+                    SubtileTest::None => true,
+                    SubtileTest::Aabb => intersects_aabb(s, sub),
+                    SubtileTest::Obb => intersects_obb(s, sub),
+                };
+                if !pass1 {
+                    continue;
+                }
+                wl.stage2_pairs += 1;
+
+                let (mask, ctu_cycles) = if hw.ctu {
+                    let prs = cat.prs_for(s);
+                    let m = cat.subtile_mask(sub, s);
+                    if prs == 4 {
+                        wl.dense_jobs += 1;
+                    } else {
+                        wl.sparse_jobs += 1;
+                    }
+                    wl.ctu_prs += prs as u64;
+                    (m, (prs as u8).div_ceil(2))
+                } else {
+                    (0xF, 1)
+                };
+                if mask == 0 {
+                    // CTU filtered it entirely: occupies the CTU but never
+                    // reaches a FIFO.
+                    tile.subtiles[sub_idx].jobs.push(GaussianJob {
+                        ctu_cycles,
+                        mask: 0,
+                    });
+                    continue;
+                }
+                wl.minitile_pairs += mask.count_ones() as u64;
+
+                // Functional per-mini-tile transmittance sweep for
+                // saturation ordinals + blend-energy accounting.
+                // §Perf: hoisted conic locals + Eq.-2 threshold skip the
+                // exp() for sub-threshold pixels (same trick as raster.rs).
+                let (ca, cb, cc) = (s.conic.a, s.conic.b, s.conic.c);
+                let (mx, my) = (s.mean.x, s.mean.y);
+                let e_max = (255.0 * s.opacity).max(1e-12).ln();
+                for m in 0..4usize {
+                    if mask & (1 << m) == 0 {
+                        continue;
+                    }
+                    let g_mt = sub_idx * 4 + m;
+                    if done[g_mt] {
+                        continue;
+                    }
+                    let mt_x = sub.x0 + (m % 2) as f32 * MINITILE as f32;
+                    let mt_y = sub.y0 + (m / 2) as f32 * MINITILE as f32;
+                    let mut all_sat = true;
+                    for py in 0..MINITILE {
+                        let dy = mt_y + py as f32 + 0.5 - my;
+                        let half_cc_dy2 = 0.5 * cc * dy * dy;
+                        let cb_dy = cb * dy;
+                        for px in 0..MINITILE {
+                            let pi = (py * MINITILE + px) as usize;
+                            let tcur = trans[g_mt][pi];
+                            if tcur < 1e-4 {
+                                continue;
+                            }
+                            let dx = mt_x + px as f32 + 0.5 - mx;
+                            let e = 0.5 * ca * dx * dx + half_cc_dy2 + cb_dy * dx;
+                            if e < e_max && e >= 0.0 {
+                                let a = (s.opacity * (-e).exp()).min(0.999);
+                                if a >= ALPHA_MIN {
+                                    wl.blended_pairs += 1;
+                                    trans[g_mt][pi] = tcur * (1.0 - a);
+                                }
+                            }
+                            if trans[g_mt][pi] >= 1e-4 {
+                                all_sat = false;
+                            }
+                        }
+                    }
+                    // This mini-tile consumed one masked-in job.
+                    tile.subtiles[sub_idx].sat[m] += 1;
+                    if all_sat {
+                        done[g_mt] = true;
+                    }
+                }
+                tile.subtiles[sub_idx].jobs.push(GaussianJob { ctu_cycles, mask });
+            }
+        }
+        wl.tiles.push(tile);
+    }
+    wl
+}
+
+/// The four 8×8 sub-tile rects of a 16×16 tile, row-major.
+pub fn subtile_rects(tile: &Rect) -> [Rect; 4] {
+    let mut out = [*tile; 4];
+    for (i, r) in out.iter_mut().enumerate() {
+        let sx = (i % 2) as f32;
+        let sy = (i / 2) as f32;
+        *r = Rect {
+            x0: tile.x0 + sx * 8.0,
+            y0: tile.y0 + sy * 8.0,
+            x1: tile.x0 + sx * 8.0 + 8.0,
+            y1: tile.y0 + sy * 8.0 + 8.0,
+        };
+    }
+    out
+}
+
+/// Splat re-export for bench code.
+pub type ProjectedSplat = Splat;
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::camera::{Camera, Intrinsics};
+    use crate::numeric::linalg::v3;
+    use crate::scene::synthetic::{generate_scaled, preset};
+
+    fn cam() -> Camera {
+        Camera::look_at(
+            Intrinsics::from_fov(128, 128, 1.2),
+            v3(0.0, 2.5, -12.0),
+            v3(0.0, 0.5, 0.0),
+            v3(0.0, 1.0, 0.0),
+        )
+    }
+
+    fn scene() -> Scene {
+        generate_scaled(&preset("garden"), 0.01)
+    }
+
+    #[test]
+    fn tile_count_matches_grid() {
+        let wl = extract(&scene(), &cam(), &HwConfig::flicker32());
+        assert_eq!(wl.tiles.len(), (128 / 16) * (128 / 16));
+        assert_eq!(wl.width, 128);
+    }
+
+    #[test]
+    fn ctu_reduces_minitile_pairs_vs_no_ctu() {
+        let s = scene();
+        let c = cam();
+        let with = extract(&s, &c, &HwConfig::flicker32());
+        let without = extract(&s, &c, &HwConfig::simplified32());
+        assert!(
+            with.minitile_pairs < without.minitile_pairs / 2,
+            "CAT should cut mini-tile work sharply: {} vs {}",
+            with.minitile_pairs,
+            without.minitile_pairs
+        );
+        // Same visibility work upstream.
+        assert_eq!(with.visible_splats, without.visible_splats);
+        assert_eq!(with.stage1_pairs, without.stage1_pairs);
+    }
+
+    #[test]
+    fn stage1_cuts_ctu_load() {
+        let s = scene();
+        let c = cam();
+        let aabb = extract(&s, &c, &HwConfig::flicker32());
+        let none = extract(
+            &s,
+            &c,
+            &HwConfig {
+                subtile_test: SubtileTest::None,
+                ..HwConfig::flicker32()
+            },
+        );
+        assert!(aabb.stage2_pairs < none.stage2_pairs);
+        // Paper: ~30% CTU-load reduction from Stage 1. Accept a broad band.
+        let cut = 1.0 - aabb.stage2_pairs as f64 / none.stage2_pairs as f64;
+        assert!(cut > 0.10, "stage1 cut only {cut}");
+    }
+
+    #[test]
+    fn obb_stage1_tighter_than_aabb() {
+        let s = scene();
+        let c = cam();
+        let aabb = extract(&s, &c, &HwConfig::simplified32());
+        let obb = extract(&s, &c, &HwConfig::gscore64());
+        assert!(obb.stage2_pairs <= aabb.stage2_pairs);
+    }
+
+    #[test]
+    fn sparse_mode_has_no_dense_jobs() {
+        let wl = extract(&scene(), &cam(), &HwConfig::flicker32_sparse());
+        assert_eq!(wl.dense_jobs, 0);
+        assert!(wl.sparse_jobs > 0);
+    }
+
+    #[test]
+    fn adaptive_mode_mixes() {
+        let wl = extract(&scene(), &cam(), &HwConfig::flicker32());
+        assert!(wl.dense_jobs > 0, "smooth gaussians exist");
+        assert!(wl.sparse_jobs > 0, "spiky gaussians exist");
+    }
+
+    #[test]
+    fn saturation_ordinals_bounded_by_masked_jobs() {
+        let wl = extract(&scene(), &cam(), &HwConfig::flicker32());
+        for tile in &wl.tiles {
+            for st in &tile.subtiles {
+                for m in 0..4usize {
+                    let masked = st
+                        .jobs
+                        .iter()
+                        .filter(|j| j.mask & (1 << m) != 0)
+                        .count() as u32;
+                    assert!(st.sat[m] <= masked, "sat {} > masked {}", st.sat[m], masked);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn per_pixel_processed_reasonable() {
+        let wl = extract(&scene(), &cam(), &HwConfig::simplified32());
+        let pp = wl.per_pixel_processed();
+        assert!(pp > 1.0, "per-pixel {pp}");
+        let wl2 = extract(&scene(), &cam(), &HwConfig::flicker32());
+        assert!(wl2.per_pixel_processed() < pp * 0.5);
+    }
+}

@@ -1,0 +1,177 @@
+//! Micro-bench harness (the offline image has no `criterion`).
+//!
+//! Every `[[bench]]` target uses `harness = false` and drives this module:
+//! warmup, timed iterations, outlier-robust summary, and a machine-readable
+//! JSON sidecar next to the human table so EXPERIMENTS.md can be regenerated.
+
+use super::json::{jarr, jnum, jstr, Json};
+use super::stats::Summary;
+use std::time::Instant;
+
+/// One timed measurement series.
+#[derive(Clone, Debug)]
+pub struct BenchResult {
+    pub name: String,
+    /// seconds per iteration
+    pub samples: Vec<f64>,
+    pub summary: Summary,
+}
+
+impl BenchResult {
+    pub fn throughput(&self, items_per_iter: f64) -> f64 {
+        items_per_iter / self.summary.p50
+    }
+}
+
+/// Runs closures with warmup + sampling.
+pub struct Bencher {
+    pub warmup_iters: usize,
+    pub sample_iters: usize,
+    results: Vec<BenchResult>,
+    /// Figure/table id, e.g. "fig9"; used for the JSON sidecar filename.
+    pub id: String,
+}
+
+impl Bencher {
+    pub fn new(id: &str) -> Self {
+        // Keep runs short: single-core machine, many bench targets.
+        let quick = std::env::var("FLICKER_BENCH_QUICK").is_ok();
+        Bencher {
+            warmup_iters: if quick { 1 } else { 2 },
+            sample_iters: if quick { 3 } else { 7 },
+            results: Vec::new(),
+            id: id.to_string(),
+        }
+    }
+
+    /// Time `f` (called once per iteration) and record under `name`.
+    pub fn bench<F: FnMut()>(&mut self, name: &str, mut f: F) -> &BenchResult {
+        for _ in 0..self.warmup_iters {
+            f();
+        }
+        let mut samples = Vec::with_capacity(self.sample_iters);
+        for _ in 0..self.sample_iters {
+            let t0 = Instant::now();
+            f();
+            samples.push(t0.elapsed().as_secs_f64());
+        }
+        let summary = Summary::of(&samples);
+        self.results.push(BenchResult {
+            name: name.to_string(),
+            samples,
+            summary,
+        });
+        self.results.last().unwrap()
+    }
+
+    /// Record an externally computed scalar metric (cycles, PSNR, joules…):
+    /// benches in this repo mostly report *simulated* quantities, which are
+    /// deterministic — one "sample".
+    pub fn record(&mut self, name: &str, value: f64) {
+        self.results.push(BenchResult {
+            name: name.to_string(),
+            samples: vec![value],
+            summary: Summary::of(&[value]),
+        });
+    }
+
+    pub fn results(&self) -> &[BenchResult] {
+        &self.results
+    }
+
+    /// Pretty-print a table and write `target/bench-reports/<id>.json`.
+    pub fn finish(&self, header: &str) {
+        println!("\n== {} ==", header);
+        let wname = self
+            .results
+            .iter()
+            .map(|r| r.name.len())
+            .max()
+            .unwrap_or(10)
+            .max(10);
+        println!("{:<wname$}  {:>14}  {:>12}  {:>12}", "case", "median", "mean", "std");
+        for r in &self.results {
+            if r.samples.len() == 1 {
+                println!("{:<wname$}  {:>14.6}", r.name, r.summary.p50);
+            } else {
+                println!(
+                    "{:<wname$}  {:>12.3}ms  {:>10.3}ms  {:>10.3}ms",
+                    r.name,
+                    r.summary.p50 * 1e3,
+                    r.summary.mean * 1e3,
+                    r.summary.std * 1e3
+                );
+            }
+        }
+        let mut obj = Json::obj();
+        obj.insert("id", jstr(&self.id));
+        obj.insert("header", jstr(header));
+        let rows: Vec<Json> = self
+            .results
+            .iter()
+            .map(|r| {
+                let mut o = Json::obj();
+                o.insert("name", jstr(&r.name));
+                o.insert("median", jnum(r.summary.p50));
+                o.insert("mean", jnum(r.summary.mean));
+                o.insert("std", jnum(r.summary.std));
+                o.insert("n", jnum(r.summary.n as f64));
+                Json::Obj(o)
+            })
+            .collect();
+        obj.insert("results", jarr(rows));
+        let dir = std::path::Path::new("target/bench-reports");
+        let _ = std::fs::create_dir_all(dir);
+        let path = dir.join(format!("{}.json", self.id));
+        if let Err(e) = std::fs::write(&path, Json::Obj(obj).pretty()) {
+            eprintln!("warn: could not write {}: {e}", path.display());
+        } else {
+            println!("(report: {})", path.display());
+        }
+    }
+}
+
+/// Black-box to stop the optimizer deleting benched work.
+#[inline]
+pub fn black_box<T>(x: T) -> T {
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_records_samples() {
+        let mut b = Bencher::new("test");
+        b.sample_iters = 3;
+        b.warmup_iters = 1;
+        let r = b.bench("spin", || {
+            let mut acc = 0u64;
+            for i in 0..1000 {
+                acc = acc.wrapping_add(black_box(i));
+            }
+            black_box(acc);
+        });
+        assert_eq!(r.samples.len(), 3);
+        assert!(r.summary.p50 >= 0.0);
+    }
+
+    #[test]
+    fn record_scalar() {
+        let mut b = Bencher::new("test2");
+        b.record("speedup", 1.36);
+        assert_eq!(b.results().len(), 1);
+        assert_eq!(b.results()[0].summary.p50, 1.36);
+    }
+
+    #[test]
+    fn throughput_math() {
+        let r = BenchResult {
+            name: "x".into(),
+            samples: vec![0.5],
+            summary: Summary::of(&[0.5]),
+        };
+        assert!((r.throughput(100.0) - 200.0).abs() < 1e-9);
+    }
+}

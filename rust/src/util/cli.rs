@@ -1,0 +1,176 @@
+//! Tiny CLI argument parser (the offline image has no `clap`).
+//!
+//! Supports subcommands, `--flag`, `--key value`, `--key=value`, and
+//! positional arguments, with typed accessors and a generated usage string.
+
+use std::collections::BTreeMap;
+use std::fmt;
+
+/// Parsed command line.
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    /// First non-flag token (subcommand), if any.
+    pub command: Option<String>,
+    /// `--key value` / `--key=value` pairs.
+    opts: BTreeMap<String, String>,
+    /// Bare `--flag`s.
+    flags: Vec<String>,
+    /// Positional arguments after the subcommand.
+    pub positional: Vec<String>,
+}
+
+/// CLI parse/validation error.
+#[derive(Debug)]
+pub struct CliError(pub String);
+
+impl fmt::Display for CliError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.0)
+    }
+}
+
+impl std::error::Error for CliError {}
+
+impl Args {
+    /// Parse from an iterator of tokens (excluding argv[0]).
+    /// `known_flags` lists options that take NO value; anything else starting
+    /// with `--` is treated as `--key value` unless written as `--key=value`.
+    pub fn parse<I: IntoIterator<Item = String>>(tokens: I, known_flags: &[&str]) -> Args {
+        let mut out = Args::default();
+        let mut it = tokens.into_iter().peekable();
+        while let Some(tok) = it.next() {
+            if let Some(rest) = tok.strip_prefix("--") {
+                if let Some((k, v)) = rest.split_once('=') {
+                    out.opts.insert(k.to_string(), v.to_string());
+                } else if known_flags.contains(&rest) {
+                    out.flags.push(rest.to_string());
+                } else if it
+                    .peek()
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = it.next().unwrap();
+                    out.opts.insert(rest.to_string(), v);
+                } else {
+                    // trailing --key with no value: treat as flag
+                    out.flags.push(rest.to_string());
+                }
+            } else if out.command.is_none() {
+                out.command = Some(tok);
+            } else {
+                out.positional.push(tok);
+            }
+        }
+        out
+    }
+
+    pub fn from_env(known_flags: &[&str]) -> Args {
+        Args::parse(std::env::args().skip(1), known_flags)
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.opts.get(key).map(|s| s.as_str())
+    }
+
+    pub fn str_or(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+
+    pub fn u64_or(&self, key: &str, default: u64) -> Result<u64, CliError> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| CliError(format!("--{key}: expected integer, got '{v}'"))),
+        }
+    }
+
+    pub fn usize_or(&self, key: &str, default: usize) -> Result<usize, CliError> {
+        self.u64_or(key, default as u64).map(|x| x as usize)
+    }
+
+    pub fn f64_or(&self, key: &str, default: f64) -> Result<f64, CliError> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| CliError(format!("--{key}: expected number, got '{v}'"))),
+        }
+    }
+
+    /// Comma-separated list of integers, e.g. `--depths 1,2,4,8`.
+    pub fn u64_list_or(&self, key: &str, default: &[u64]) -> Result<Vec<u64>, CliError> {
+        match self.get(key) {
+            None => Ok(default.to_vec()),
+            Some(v) => v
+                .split(',')
+                .map(|t| {
+                    t.trim()
+                        .parse()
+                        .map_err(|_| CliError(format!("--{key}: bad integer '{t}'")))
+                })
+                .collect(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(toks: &[&str], flags: &[&str]) -> Args {
+        Args::parse(toks.iter().map(|s| s.to_string()), flags)
+    }
+
+    #[test]
+    fn subcommand_and_opts() {
+        let a = parse(&["render", "--scene", "garden", "--width=640"], &[]);
+        assert_eq!(a.command.as_deref(), Some("render"));
+        assert_eq!(a.get("scene"), Some("garden"));
+        assert_eq!(a.u64_or("width", 0).unwrap(), 640);
+    }
+
+    #[test]
+    fn flags_vs_valued() {
+        let a = parse(&["sim", "--verbose", "--depth", "16"], &["verbose"]);
+        assert!(a.flag("verbose"));
+        assert_eq!(a.usize_or("depth", 0).unwrap(), 16);
+        assert!(!a.flag("depth"));
+    }
+
+    #[test]
+    fn positional_args() {
+        let a = parse(&["quality", "scene1", "scene2"], &[]);
+        assert_eq!(a.positional, vec!["scene1", "scene2"]);
+    }
+
+    #[test]
+    fn list_option() {
+        let a = parse(&["sweep", "--depths", "1,2, 4,128"], &[]);
+        assert_eq!(a.u64_list_or("depths", &[]).unwrap(), vec![1, 2, 4, 128]);
+    }
+
+    #[test]
+    fn bad_number_is_error() {
+        let a = parse(&["x", "--n", "abc"], &[]);
+        assert!(a.u64_or("n", 1).is_err());
+        assert!(a.f64_or("n", 1.0).is_err());
+    }
+
+    #[test]
+    fn trailing_flag_without_value() {
+        let a = parse(&["x", "--dry-run"], &[]);
+        assert!(a.flag("dry-run"));
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = parse(&["x"], &[]);
+        assert_eq!(a.str_or("mode", "adaptive"), "adaptive");
+        assert_eq!(a.f64_or("scale", 1.5).unwrap(), 1.5);
+    }
+}

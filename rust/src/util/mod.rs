@@ -1,0 +1,11 @@
+//! In-tree substrates replacing unavailable external crates (offline image):
+//! deterministic RNG, JSON, statistics, CLI parsing, bench harness,
+//! property-testing helper, and a scoped thread pool.
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod pool;
+pub mod prop;
+pub mod rng;
+pub mod stats;

@@ -1,0 +1,107 @@
+//! Scoped thread pool for tile-parallel work (no tokio/rayon offline).
+//!
+//! The coordinator splits a frame into tiles and fans them across worker
+//! threads. On this CI image there is a single core, so the pool defaults to
+//! `available_parallelism()` and degrades gracefully to sequential execution.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
+
+/// Number of workers to use by default.
+pub fn default_workers() -> usize {
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1)
+}
+
+/// Run `f(i)` for every index in `0..n`, distributing indices across
+/// `workers` threads via an atomic work-stealing counter. `f` must be
+/// `Sync` (it only gets shared access); results are written through
+/// interior mutability or returned via `map_indexed`.
+pub fn for_each_index<F>(n: usize, workers: usize, f: F)
+where
+    F: Fn(usize) + Sync,
+{
+    if n == 0 {
+        return;
+    }
+    let workers = workers.max(1).min(n);
+    if workers == 1 {
+        for i in 0..n {
+            f(i);
+        }
+        return;
+    }
+    let next = AtomicUsize::new(0);
+    std::thread::scope(|scope| {
+        for _ in 0..workers {
+            scope.spawn(|| loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                f(i);
+            });
+        }
+    });
+}
+
+/// Parallel map preserving order.
+pub fn map_indexed<T, F>(n: usize, workers: usize, f: F) -> Vec<T>
+where
+    T: Send + Default + Clone,
+    F: Fn(usize) -> T + Sync,
+{
+    let out: Arc<Vec<std::sync::Mutex<T>>> =
+        Arc::new((0..n).map(|_| std::sync::Mutex::new(T::default())).collect());
+    {
+        let out = Arc::clone(&out);
+        for_each_index(n, workers, move |i| {
+            *out[i].lock().unwrap() = f(i);
+        });
+    }
+    Arc::try_unwrap(out)
+        .unwrap_or_else(|_| panic!("pool: outstanding refs"))
+        .into_iter()
+        .map(|m| m.into_inner().unwrap())
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    #[test]
+    fn covers_all_indices() {
+        let hits: Vec<AtomicU64> = (0..100).map(|_| AtomicU64::new(0)).collect();
+        for_each_index(100, 4, |i| {
+            hits[i].fetch_add(1, Ordering::Relaxed);
+        });
+        for (i, h) in hits.iter().enumerate() {
+            assert_eq!(h.load(Ordering::Relaxed), 1, "index {i}");
+        }
+    }
+
+    #[test]
+    fn sequential_fallback() {
+        let sum = AtomicU64::new(0);
+        for_each_index(10, 1, |i| {
+            sum.fetch_add(i as u64, Ordering::Relaxed);
+        });
+        assert_eq!(sum.load(Ordering::Relaxed), 45);
+    }
+
+    #[test]
+    fn map_preserves_order() {
+        let v = map_indexed(16, 4, |i| i * i);
+        assert_eq!(v, (0..16).map(|i| i * i).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn empty_is_noop() {
+        for_each_index(0, 4, |_| panic!("should not run"));
+        let v: Vec<usize> = map_indexed(0, 4, |i| i);
+        assert!(v.is_empty());
+    }
+}

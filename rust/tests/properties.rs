@@ -1,0 +1,322 @@
+//! Property-based tests over the core invariants, using the in-tree
+//! `util::prop` helper (seeded, replayable; FLICKER_PROP_CASES scales
+//! coverage).
+
+use flicker::camera::{Camera, Intrinsics};
+use flicker::cat::mixed::{pr_weights_quant, Precision};
+use flicker::cat::pr::{acu_weight, pr_weights, shared_threshold};
+use flicker::numeric::fp16::quantize_f16;
+use flicker::numeric::fp8::{quantize_fp8, Fp8Format};
+use flicker::numeric::linalg::{v2, v3, Quat, Sym2};
+use flicker::render::project::project_one;
+use flicker::render::sort::{depth_key, sort_by_key16};
+use flicker::render::tile::{intersects_aabb, min_quad_on_rect, Rect};
+use flicker::scene::gaussian::Scene;
+use flicker::sim::pipe::run_subtile;
+use flicker::sim::workload::{GaussianJob, SubtileStream};
+use flicker::util::prop::{check, ensure, PropConfig};
+use flicker::util::rng::Pcg32;
+
+fn random_conic(rng: &mut Pcg32) -> Sym2 {
+    let l11 = rng.range_f32(0.03, 1.0);
+    let l21 = rng.range_f32(-0.5, 0.5);
+    let l22 = rng.range_f32(0.03, 1.0);
+    Sym2 {
+        a: l11 * l11,
+        b: l11 * l21,
+        c: l21 * l21 + l22 * l22,
+    }
+}
+
+#[test]
+fn prop_pr_weights_equal_acu_at_corners() {
+    check(
+        "PR corners == per-pixel ACU",
+        PropConfig::default(),
+        |rng, size| {
+            let mu = v2(rng.range_f32(0.0, 512.0), rng.range_f32(0.0, 512.0));
+            let conic = random_conic(rng);
+            let span = 1.0 + size * 15.0;
+            let pt = v2(rng.range_f32(0.0, 512.0), rng.range_f32(0.0, 512.0));
+            let pb = v2(pt.x + span, pt.y + span);
+            (mu, conic, pt, pb)
+        },
+        |&(mu, conic, pt, pb)| {
+            let w = pr_weights(mu, conic, pt, pb);
+            let corners = [
+                v2(pt.x, pt.y),
+                v2(pb.x, pt.y),
+                v2(pt.x, pb.y),
+                v2(pb.x, pb.y),
+            ];
+            for (k, c) in corners.iter().enumerate() {
+                let direct = acu_weight(mu, conic, *c);
+                let tol = 1e-3 * (1.0 + direct.abs());
+                ensure(
+                    (w.e[k] - direct).abs() <= tol,
+                    format!("corner {k}: {} vs {direct}", w.e[k]),
+                )?;
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_quantized_weights_preserve_strong_decisions() {
+    // Mixed precision may flip borderline decisions but never ones with a
+    // wide margin (>25% of the threshold).
+    check(
+        "mixed precision preserves strong Eq.2 decisions",
+        PropConfig::default(),
+        |rng, _| {
+            let mu = v2(rng.range_f32(50.0, 450.0), rng.range_f32(50.0, 450.0));
+            let conic = random_conic(rng);
+            let pt = v2(mu.x + rng.range_f32(-12.0, 12.0), mu.y + rng.range_f32(-12.0, 12.0));
+            let pb = v2(pt.x + 3.0, pt.y + 3.0);
+            let o = rng.range_f32(0.05, 1.0);
+            (mu, conic, pt, pb, o)
+        },
+        |&(mu, conic, pt, pb, o)| {
+            let full = pr_weights(mu, conic, pt, pb);
+            let mixed = pr_weights_quant(mu, conic, pt, pb, Precision::Mixed);
+            let lhs = shared_threshold(o);
+            for k in 0..4 {
+                let margin = (lhs - full.e[k]).abs();
+                if margin > 0.25 * (1.0 + lhs.abs() + full.e[k].abs()) {
+                    let want = lhs > full.e[k];
+                    let got = quantize_f16(lhs) > mixed.e[k];
+                    ensure(
+                        want == got,
+                        format!(
+                            "strong decision flipped at corner {k}: lhs {lhs}, full {}, mixed {}",
+                            full.e[k], mixed.e[k]
+                        ),
+                    )?;
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_fp16_fp8_roundtrips_are_idempotent_and_monotone() {
+    check(
+        "quantizers idempotent + monotone",
+        PropConfig::default(),
+        |rng, _| {
+            let a = rng.range_f32(-500.0, 500.0);
+            let b = a + rng.range_f32(0.0, 100.0);
+            (a, b)
+        },
+        |&(a, b)| {
+            let q16 = quantize_f16(a);
+            ensure(quantize_f16(q16) == q16, "fp16 not idempotent")?;
+            let q8 = quantize_fp8(a, Fp8Format::E4M3);
+            ensure(
+                quantize_fp8(q8, Fp8Format::E4M3) == q8,
+                "fp8 not idempotent",
+            )?;
+            ensure(
+                quantize_f16(a) <= quantize_f16(b),
+                format!("fp16 not monotone: {a} {b}"),
+            )?;
+            ensure(
+                quantize_fp8(a, Fp8Format::E4M3) <= quantize_fp8(b, Fp8Format::E4M3),
+                format!("fp8 not monotone: {a} {b}"),
+            )?;
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_projection_radius_bounds_footprint() {
+    // Any pixel farther than `radius` from the projected mean must have
+    // E > 4.5 (α below the 3σ cutoff).
+    let cam = Camera::look_at(
+        Intrinsics::from_fov(256, 256, 1.2),
+        v3(0.0, 0.0, -8.0),
+        v3(0.0, 0.0, 0.0),
+        v3(0.0, 1.0, 0.0),
+    );
+    check(
+        "3σ radius bounds the splat footprint",
+        PropConfig::default(),
+        |rng, _| {
+            let mut s = Scene::with_capacity(1, "p");
+            let q = Quat::from_axis_angle(
+                v3(rng.normal(), rng.normal(), rng.normal()),
+                rng.range_f32(0.0, 3.0),
+            );
+            s.push(
+                v3(rng.range_f32(-1.0, 1.0), rng.range_f32(-1.0, 1.0), rng.range_f32(-2.0, 4.0)),
+                q,
+                v3(
+                    rng.range_f32(0.02, 0.8),
+                    rng.range_f32(0.02, 0.8),
+                    rng.range_f32(0.02, 0.8),
+                ),
+                rng.range_f32(0.05, 1.0),
+                [1.0; 3],
+                [[0.0; 3]; 3],
+            );
+            let angle = rng.range_f32(0.0, std::f32::consts::TAU);
+            (s, angle)
+        },
+        |(s, angle)| {
+            let Some(sp) = project_one(s, 0, &cam) else {
+                return Ok(()); // culled is fine
+            };
+            // Test points just beyond the radius in a random direction.
+            let d = 1.05 * sp.radius;
+            let px = sp.mean.x + d * angle.cos();
+            let py = sp.mean.y + d * angle.sin();
+            let dx = px - sp.mean.x;
+            let dy = py - sp.mean.y;
+            let e = 0.5 * (sp.conic.a * dx * dx + sp.conic.c * dy * dy) + sp.conic.b * dx * dy;
+            ensure(e > 4.4, format!("E={e} inside 3σ at 1.05r"))?;
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_min_quad_on_rect_is_a_lower_bound() {
+    let cam = Camera::look_at(
+        Intrinsics::from_fov(256, 256, 1.2),
+        v3(0.0, 0.0, -8.0),
+        v3(0.0, 0.0, 0.0),
+        v3(0.0, 1.0, 0.0),
+    );
+    let mut base = Scene::with_capacity(1, "p");
+    base.push(
+        v3(0.0, 0.0, 0.0),
+        Quat::from_axis_angle(v3(0.0, 0.0, 1.0), 0.6),
+        v3(0.5, 0.08, 0.08),
+        0.8,
+        [1.0; 3],
+        [[0.0; 3]; 3],
+    );
+    let splat = project_one(&base, 0, &cam).unwrap();
+    check(
+        "min_quad_on_rect lower-bounds sampled E",
+        PropConfig::default(),
+        |rng, _| {
+            let x0 = rng.range_f32(0.0, 240.0);
+            let y0 = rng.range_f32(0.0, 240.0);
+            let rect = Rect { x0, y0, x1: x0 + 16.0, y1: y0 + 16.0 };
+            let sx = rng.range_f32(rect.x0, rect.x1);
+            let sy = rng.range_f32(rect.y0, rect.y1);
+            (rect, sx, sy)
+        },
+        |&(rect, sx, sy)| {
+            let lo = min_quad_on_rect(&splat, &rect);
+            let dx = sx - splat.mean.x;
+            let dy = sy - splat.mean.y;
+            let e = 0.5
+                * (splat.conic.a * dx * dx + splat.conic.c * dy * dy)
+                + splat.conic.b * dx * dy;
+            ensure(lo <= e + 1e-3, format!("min {lo} > sample {e}"))?;
+            // And AABB containment: if the rect passes min-quad at 0 the
+            // splat's mean is inside, so AABB must also pass.
+            if lo == 0.0 {
+                ensure(intersects_aabb(&splat, &rect), "mean inside but AABB missed")?;
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_depth_key_sort_agrees_with_depth_order() {
+    let cam = Camera::look_at(
+        Intrinsics::from_fov(64, 64, 1.2),
+        v3(0.0, 0.0, -30.0),
+        v3(0.0, 0.0, 0.0),
+        v3(0.0, 1.0, 0.0),
+    );
+    check(
+        "radix key sort is depth-ordered",
+        PropConfig::default(),
+        |rng, size| {
+            let n = 2 + (size * 120.0) as usize;
+            let mut scene = Scene::with_capacity(n, "p");
+            for _ in 0..n {
+                scene.push(
+                    v3(0.0, 0.0, rng.range_f32(-20.0, 25.0)),
+                    Quat::IDENTITY,
+                    v3(0.2, 0.2, 0.2),
+                    0.5,
+                    [0.5; 3],
+                    [[0.0; 3]; 3],
+                );
+            }
+            scene
+        },
+        |scene| {
+            let splats: Vec<_> = (0..scene.len())
+                .filter_map(|i| project_one(scene, i, &cam))
+                .collect();
+            if splats.len() < 2 {
+                return Ok(());
+            }
+            let mut order: Vec<u32> = (0..splats.len() as u32).collect();
+            sort_by_key16(&mut order, &splats, 0.05, 1000.0);
+            for w in order.windows(2) {
+                let ka = depth_key(splats[w[0] as usize].depth, 0.05, 1000.0);
+                let kb = depth_key(splats[w[1] as usize].depth, 0.05, 1000.0);
+                ensure(ka <= kb, format!("keys out of order: {ka} > {kb}"))?;
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_pipe_conserves_work_and_depth_monotone() {
+    check(
+        "pipe: work conserved across FIFO depths; deeper never slower",
+        PropConfig::default(),
+        |rng, size| {
+            let n = 1 + (size * 80.0) as usize;
+            let jobs: Vec<GaussianJob> = (0..n)
+                .map(|_| GaussianJob {
+                    ctu_cycles: 1 + rng.below(2) as u8,
+                    mask: rng.below(16) as u8,
+                })
+                .collect();
+            let sat = [
+                rng.below(n as u32 + 1),
+                rng.below(n as u32 + 1),
+                rng.below(n as u32 + 1),
+                rng.below(n as u32 + 1),
+            ];
+            SubtileStream { jobs, sat }
+        },
+        |stream| {
+            let mut prev_cycles = None;
+            let mut work = None;
+            for depth in [1usize, 2, 8, 64] {
+                let st = run_subtile(stream, depth, 4, 8);
+                if let Some((busy, discard)) = work {
+                    ensure(
+                        st.vru_busy == busy && st.vru_discard == discard,
+                        format!("work not conserved at depth {depth}"),
+                    )?;
+                } else {
+                    work = Some((st.vru_busy, st.vru_discard));
+                }
+                if let Some(p) = prev_cycles {
+                    ensure(
+                        st.cycles <= p,
+                        format!("depth {depth} slower: {} > {p}", st.cycles),
+                    )?;
+                }
+                prev_cycles = Some(st.cycles);
+            }
+            Ok(())
+        },
+    );
+}
