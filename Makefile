@@ -1,0 +1,45 @@
+# FLICKER build entry points. `make ci` mirrors .github/workflows/ci.yml so
+# the tier-1 command (`cargo build --release && cargo test -q`) and CI never
+# drift.
+
+CARGO ?= cargo
+PYTHON ?= python3
+
+.PHONY: build test bench fmt clippy artifacts pytest ci clean
+
+build:
+	$(CARGO) build --release
+
+test:
+	$(CARGO) test -q
+
+# Build the benches (paper figures/tables) under the Cargo layout.
+bench:
+	$(CARGO) bench --no-run
+
+fmt:
+	$(CARGO) fmt --all -- --check
+
+clippy:
+	$(CARGO) clippy --all-targets -- -D warnings
+
+# AOT-lower the JAX/Pallas kernels to HLO text for the Rust PJRT runtime.
+# Writes rust/artifacts/ (the location `default_artifact_dir` resolves from
+# both the CLI and `cargo test`). Requires jax.
+artifacts:
+	cd python && $(PYTHON) -m compile.aot --out-dir ../rust/artifacts
+
+# Python kernel tests; skips cleanly when pytest (or jax) is unavailable.
+pytest:
+	@if $(PYTHON) -c "import pytest" 2>/dev/null; then \
+		$(PYTHON) -m pytest python/tests -q; \
+	else \
+		echo "pytest not installed - skipping python tests"; \
+	fi
+
+ci: build test fmt clippy pytest
+	$(CARGO) build --release --features pjrt
+	$(CARGO) test -q --features pjrt
+
+clean:
+	$(CARGO) clean

@@ -11,7 +11,7 @@ use flicker::render::metrics::psnr;
 use flicker::render::raster::{render, render_masked, RenderOptions};
 use flicker::scene::synthetic::presets;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> flicker::util::error::Result<()> {
     let mut report = Report::new(
         "adaptive_modes",
         "Leader-pixel modes across scenes (PSNR vs vanilla / leader-pixel saving)",

@@ -11,7 +11,7 @@ use flicker::sim::workload::extract;
 use flicker::sim::HwConfig;
 use flicker::util::cli::Args;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> flicker::util::error::Result<()> {
     let args = Args::from_env(&[]);
     let cfg = ExperimentConfig::from_args(&args)?;
     let scene = cfg.build_scene()?;

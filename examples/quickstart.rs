@@ -6,13 +6,14 @@
 
 use flicker::cat::{CatConfig, CatEngine, LeaderMode, Precision};
 use flicker::config::ExperimentConfig;
-use flicker::coordinator::{render_frame, Backend, FrameRequest};
+use flicker::coordinator::{render_frame, FrameRequest, Golden, GoldenCat};
 use flicker::render::metrics::{psnr, ssim};
 use flicker::render::raster::RenderOptions;
 use flicker::sim::top::simulate_frame;
 use flicker::sim::HwConfig;
+use flicker::util::pool::default_workers;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> flicker::util::error::Result<()> {
     let cfg = ExperimentConfig {
         scene: "garden".into(),
         resolution: 192,
@@ -34,11 +35,31 @@ fn main() -> anyhow::Result<()> {
         camera: cam,
         options: RenderOptions::default(),
     };
-    let vanilla = render_frame(&req, &mut Backend::Golden)?;
+    let vanilla = render_frame(&req, &Golden)?;
     println!(
         "vanilla:  {:.1} ms, {:.1} gaussians tested per pixel",
         vanilla.wall_ms,
         vanilla.stats.per_pixel_tested()
+    );
+
+    // 1b) Same frame with the tile fan-out on every core — bit-identical.
+    let par_req = FrameRequest {
+        scene: &scene,
+        camera: cam,
+        options: RenderOptions {
+            workers: 0, // auto
+            ..RenderOptions::default()
+        },
+    };
+    let parallel = render_frame(&par_req, &Golden)?;
+    assert_eq!(
+        vanilla.image.data, parallel.image.data,
+        "tile-parallel render must match sequential bit-for-bit"
+    );
+    println!(
+        "parallel: {:.1} ms on {} workers (bit-identical)",
+        parallel.wall_ms,
+        default_workers()
     );
 
     // 2) Mini-Tile CAT render (adaptive leaders, mixed precision).
@@ -47,7 +68,7 @@ fn main() -> anyhow::Result<()> {
         precision: Precision::Mixed,
         stage1: true,
     };
-    let cat = render_frame(&req, &mut Backend::GoldenCat(cat_cfg))?;
+    let cat = render_frame(&req, &GoldenCat(cat_cfg))?;
     println!(
         "with CAT: {:.1} ms, {:.1} gaussians tested per pixel",
         cat.wall_ms,

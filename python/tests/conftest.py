@@ -1,5 +1,24 @@
-"""Make `compile.*` importable when pytest runs from the repo root."""
+"""Make `compile.*` importable when pytest runs from the repo root, and
+skip gracefully when optional dependencies are missing: the kernels (and
+all their tests) need `jax`, and the property tests need `hypothesis`."""
 import os
 import sys
 
 sys.path.insert(0, os.path.abspath(os.path.join(os.path.dirname(__file__), "..")))
+
+
+def _missing(module):
+    try:
+        __import__(module)
+        return False
+    except ImportError:
+        return True
+
+
+collect_ignore_glob = []
+if _missing("jax"):
+    print("jax unavailable - skipping python kernel tests", file=sys.stderr)
+    collect_ignore_glob = ["test_*.py"]
+elif _missing("hypothesis"):
+    print("hypothesis unavailable - skipping property tests", file=sys.stderr)
+    collect_ignore_glob = ["test_blend.py", "test_pr_weight.py", "test_project.py"]

@@ -49,6 +49,15 @@ fn main() {
         black_box(render(&scene, &cam, &RenderOptions::default()));
     });
 
+    // Tile fan-out across all cores (bit-identical output, wall-clock win).
+    let par_opts = RenderOptions {
+        workers: 0, // auto
+        ..RenderOptions::default()
+    };
+    b.bench("raster_vanilla_parallel", || {
+        black_box(render(&scene, &cam, &par_opts));
+    });
+
     b.bench("raster_cat", || {
         let mut engine = CatEngine::new(CatConfig {
             mode: LeaderMode::SmoothFocused,
@@ -61,6 +70,17 @@ fn main() {
             &RenderOptions::default(),
             &mut engine,
             None,
+        ));
+    });
+
+    let cat_cfg = CatConfig {
+        mode: LeaderMode::SmoothFocused,
+        precision: Precision::Mixed,
+        stage1: true,
+    };
+    b.bench("raster_cat_parallel", || {
+        black_box(flicker::render::raster::render_with_source(
+            &scene, &cam, &par_opts, &cat_cfg,
         ));
     });
 

@@ -16,7 +16,7 @@ use super::mixed::{shared_threshold_quant, PreQuant, Precision};
 use super::pr::{pr_op_cost, OpCount};
 use crate::numeric::linalg::v2;
 use crate::render::project::Splat;
-use crate::render::raster::MaskProvider;
+use crate::render::raster::{MaskProvider, MaskSource};
 use crate::render::tile::{intersects_aabb, intersects_exact, intersects_obb, Rect};
 
 /// CAT configuration.
@@ -194,6 +194,17 @@ impl MaskProvider for CatEngine {
             }
         }
         out
+    }
+}
+
+/// A `CatConfig` is a thread-safe mask source: each tile worker gets its
+/// own `CatEngine`, so CAT mask generation fans across the worker pool with
+/// the tiles. Masks are a pure function of `(tile, splat)` — the engine's
+/// cache and counters never change the bits — so tile-parallel CAT renders
+/// are bit-identical to sequential ones.
+impl MaskSource for CatConfig {
+    fn tile_masks(&self) -> Box<dyn MaskProvider + '_> {
+        Box::new(CatEngine::new(*self))
     }
 }
 
@@ -461,6 +472,26 @@ mod tests {
         let mc = cat.mask(&tile, &s);
         let mo = oracle.mask(&tile, &s);
         assert_eq!(mc & !mo, 0, "cat {mc:#06x} claims minitiles oracle rejects {mo:#06x}");
+    }
+
+    #[test]
+    fn cat_source_parallel_matches_sequential_engine() {
+        use crate::render::raster::{render_masked, render_with_source, RenderOptions};
+        use crate::scene::synthetic::{generate_scaled, preset};
+        let scene = generate_scaled(&preset("truck"), 0.01);
+        let cam = Camera::look_at(
+            Intrinsics::from_fov(96, 96, 1.2),
+            v3(0.0, 2.5, -12.0),
+            v3(0.0, 0.5, 0.0),
+            v3(0.0, 1.0, 0.0),
+        );
+        let cfg = CatConfig::default();
+        let opts = RenderOptions::default();
+        let mut engine = CatEngine::new(cfg);
+        let seq = render_masked(&scene, &cam, &opts, &mut engine, None);
+        let par = render_with_source(&scene, &cam, &RenderOptions { workers: 4, ..opts }, &cfg);
+        assert_eq!(seq.image.data, par.image.data);
+        assert_eq!(seq.stats.pairs_tested, par.stats.pairs_tested);
     }
 
     #[test]

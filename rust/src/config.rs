@@ -7,12 +7,13 @@
 
 use crate::camera::{orbit_path, Camera, Intrinsics};
 use crate::cat::{LeaderMode, Precision};
+use crate::err;
 use crate::numeric::linalg::v3;
 use crate::scene::gaussian::Scene;
 use crate::scene::synthetic::{generate_scaled, preset};
 use crate::sim::HwConfig;
+use crate::util::error::Result;
 use crate::util::json::{jnum, jstr, Json};
-use anyhow::{anyhow, Result};
 
 /// One experiment setup.
 #[derive(Clone, Debug)]
@@ -35,6 +36,9 @@ pub struct ExperimentConfig {
     pub fifo_depth: Option<usize>,
     /// Apply contribution pruning before evaluation.
     pub prune: bool,
+    /// Worker threads for frame/tile parallel rendering (0 = auto, 1 =
+    /// sequential; parallel output is bit-identical to sequential).
+    pub workers: usize,
     pub seed: u64,
 }
 
@@ -50,6 +54,7 @@ impl Default for ExperimentConfig {
             precision: None,
             fifo_depth: None,
             prune: false,
+            workers: 1,
             seed: 0xF11C,
         }
     }
@@ -67,7 +72,7 @@ impl ExperimentConfig {
     /// Build the scene (synthetic preset or .gsz file).
     pub fn build_scene(&self) -> Result<Scene> {
         if self.scene.ends_with(".gsz") {
-            return Ok(crate::scene::io::load(std::path::Path::new(&self.scene))?);
+            return crate::scene::io::load(std::path::Path::new(&self.scene));
         }
         Ok(generate_scaled(&preset(&self.scene), self.scene_scale))
     }
@@ -81,14 +86,13 @@ impl ExperimentConfig {
     /// Resolve the hardware config with overrides applied.
     pub fn build_hw(&self) -> Result<HwConfig> {
         let mut hw = HwConfig::by_name(&self.hardware)
-            .ok_or_else(|| anyhow!("unknown hardware preset '{}'", self.hardware))?;
+            .ok_or_else(|| err!("unknown hardware preset '{}'", self.hardware))?;
         if let Some(m) = &self.cat_mode {
-            hw.cat_mode =
-                LeaderMode::parse(m).ok_or_else(|| anyhow!("unknown cat mode '{m}'"))?;
+            hw.cat_mode = LeaderMode::parse(m).ok_or_else(|| err!("unknown cat mode '{m}'"))?;
         }
         if let Some(p) = &self.precision {
             hw.cat_precision =
-                Precision::parse(p).ok_or_else(|| anyhow!("unknown precision '{p}'"))?;
+                Precision::parse(p).ok_or_else(|| err!("unknown precision '{p}'"))?;
         }
         if let Some(d) = self.fifo_depth {
             hw.fifo_depth = d;
@@ -114,21 +118,20 @@ impl ExperimentConfig {
         cfg.cat_mode = args.get("cat-mode").map(|s| s.to_string()).or(cfg.cat_mode);
         cfg.precision = args.get("precision").map(|s| s.to_string()).or(cfg.precision);
         if let Some(d) = args.get("fifo-depth") {
-            cfg.fifo_depth = Some(
-                d.parse()
-                    .map_err(|_| anyhow!("--fifo-depth: bad integer '{d}'"))?,
-            );
+            cfg.fifo_depth =
+                Some(d.parse().map_err(|_| err!("--fifo-depth: bad integer '{d}'"))?);
         }
         if args.flag("prune") {
             cfg.prune = true;
         }
+        cfg.workers = args.usize_or("workers", cfg.workers)?;
         cfg.seed = args.u64_or("seed", cfg.seed)?;
         Ok(cfg)
     }
 
     pub fn from_json_file(path: &std::path::Path) -> Result<ExperimentConfig> {
         let text = std::fs::read_to_string(path)?;
-        let j = Json::parse(&text).map_err(|e| anyhow!("{}: {e}", path.display()))?;
+        let j = Json::parse(&text).map_err(|e| err!("{}: {e}", path.display()))?;
         let mut cfg = ExperimentConfig::default();
         let s = |k: &str| j.at(&[k]).and_then(Json::as_str).map(str::to_string);
         let n = |k: &str| j.at(&[k]).and_then(Json::as_f64);
@@ -155,6 +158,9 @@ impl ExperimentConfig {
         if let Some(v) = j.at(&["prune"]).and_then(Json::as_bool) {
             cfg.prune = v;
         }
+        if let Some(v) = n("workers") {
+            cfg.workers = v as usize;
+        }
         if let Some(v) = n("seed") {
             cfg.seed = v as u64;
         }
@@ -179,6 +185,7 @@ impl ExperimentConfig {
             o.insert("fifo_depth", jnum(d as f64));
         }
         o.insert("prune", Json::Bool(self.prune));
+        o.insert("workers", jnum(self.workers as f64));
         o.insert("seed", jnum(self.seed as f64));
         Json::Obj(o)
     }
@@ -216,11 +223,14 @@ mod tests {
             "sparse",
             "--fifo-depth",
             "4",
+            "--workers",
+            "4",
             "--prune",
         ]);
         let cfg = ExperimentConfig::from_args(&a).unwrap();
         assert_eq!(cfg.scene, "truck");
         assert_eq!(cfg.resolution, 128);
+        assert_eq!(cfg.workers, 4);
         assert!(cfg.prune);
         let hw = cfg.build_hw().unwrap();
         assert_eq!(hw.fifo_depth, 4);
@@ -236,9 +246,12 @@ mod tests {
 
     #[test]
     fn json_roundtrip() {
-        let mut cfg = ExperimentConfig::default();
-        cfg.cat_mode = Some("sparse".into());
-        cfg.fifo_depth = Some(8);
+        let cfg = ExperimentConfig {
+            cat_mode: Some("sparse".into()),
+            fifo_depth: Some(8),
+            workers: 3,
+            ..Default::default()
+        };
         let dir = std::env::temp_dir().join("flicker_cfg");
         std::fs::create_dir_all(&dir).unwrap();
         let p = dir.join("c.json");
@@ -247,5 +260,6 @@ mod tests {
         assert_eq!(back.scene, cfg.scene);
         assert_eq!(back.cat_mode, cfg.cat_mode);
         assert_eq!(back.fifo_depth, cfg.fifo_depth);
+        assert_eq!(back.workers, cfg.workers);
     }
 }

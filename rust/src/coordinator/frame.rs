@@ -1,28 +1,19 @@
 //! Per-frame rendering coordination.
+//!
+//! [`RenderBackend`] is the extension point: a backend turns a
+//! [`FrameRequest`] into an image + stats, and new execution engines slot
+//! in without touching `render_frame`/`render_orbit` callers. Backends must
+//! be `Sync` so [`render_orbit`] can fan frames across the worker pool.
 
 use crate::camera::Camera;
-use crate::cat::{CatConfig, CatEngine};
+use crate::cat::CatConfig;
 use crate::config::ExperimentConfig;
 use crate::render::image::Image;
-use crate::render::project::project_scene;
-use crate::render::raster::{render_lists, AllOnes, MaskProvider, RenderOptions, RenderStats};
-use crate::render::sort::sort_by_depth;
-use crate::render::tile::{build_tile_lists, TileGrid};
-use crate::runtime::executor::TileExecutor;
-use crate::runtime::Runtime;
+use crate::render::raster::{RenderOptions, RenderOutput, RenderStats};
 use crate::scene::gaussian::Scene;
-use anyhow::Result;
+use crate::util::error::Result;
+use crate::util::pool;
 use std::time::Instant;
-
-/// Which execution engine renders the frame's tiles.
-pub enum Backend<'rt> {
-    /// Pure-Rust golden rasterizer, vanilla masks.
-    Golden,
-    /// Golden rasterizer with Mini-Tile CAT masks at the given config.
-    GoldenCat(CatConfig),
-    /// AOT JAX/Pallas artifacts through PJRT.
-    Pjrt(&'rt Runtime),
-}
 
 /// A frame to render.
 pub struct FrameRequest<'a> {
@@ -32,6 +23,7 @@ pub struct FrameRequest<'a> {
 }
 
 /// What came back.
+#[derive(Clone)]
 pub struct FrameMetrics {
     pub image: Image,
     pub stats: RenderStats,
@@ -39,80 +31,159 @@ pub struct FrameMetrics {
     pub backend: &'static str,
 }
 
+/// An execution engine for a frame's tiles.
+pub trait RenderBackend: Sync {
+    /// Short stable name recorded in [`FrameMetrics`].
+    fn name(&self) -> &'static str;
+
+    /// Render the frame. Implementations honor `req.options.workers` for
+    /// their internal tile fan-out where parallelism is safe.
+    fn render(&self, req: &FrameRequest) -> Result<RenderOutput>;
+}
+
+/// Pure-Rust golden rasterizer, vanilla masks.
+pub struct Golden;
+
+impl RenderBackend for Golden {
+    fn name(&self) -> &'static str {
+        "golden"
+    }
+
+    fn render(&self, req: &FrameRequest) -> Result<RenderOutput> {
+        Ok(crate::render::raster::render(req.scene, req.camera, &req.options))
+    }
+}
+
+/// Golden rasterizer with Mini-Tile CAT masks at the given config.
+pub struct GoldenCat(pub CatConfig);
+
+impl RenderBackend for GoldenCat {
+    fn name(&self) -> &'static str {
+        "golden+cat"
+    }
+
+    fn render(&self, req: &FrameRequest) -> Result<RenderOutput> {
+        Ok(crate::render::raster::render_with_source(
+            req.scene,
+            req.camera,
+            &req.options,
+            &self.0,
+        ))
+    }
+}
+
+/// AOT JAX/Pallas artifacts through PJRT (only with `--features pjrt`).
+/// Tiles run sequentially, and whole frames serialize through an internal
+/// gate: the executor chunks splat lists and carries transmittance on the
+/// host, and PJRT executable thread-safety is owned by the runtime, so
+/// concurrent frames (the `render_orbit` fan-out) queue rather than enter
+/// `exec_f32` in parallel.
+#[cfg(feature = "pjrt")]
+pub struct Pjrt<'rt> {
+    rt: &'rt crate::runtime::Runtime,
+    gate: std::sync::Mutex<()>,
+}
+
+#[cfg(feature = "pjrt")]
+impl<'rt> Pjrt<'rt> {
+    pub fn new(rt: &'rt crate::runtime::Runtime) -> Self {
+        Pjrt {
+            rt,
+            gate: std::sync::Mutex::new(()),
+        }
+    }
+}
+
+#[cfg(feature = "pjrt")]
+impl RenderBackend for Pjrt<'_> {
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+
+    fn render(&self, req: &FrameRequest) -> Result<RenderOutput> {
+        use crate::render::project::project_scene;
+        use crate::render::sort::sort_by_depth;
+        use crate::render::tile::{build_tile_lists, TileGrid};
+        use crate::runtime::executor::TileExecutor;
+
+        let _serial = self
+            .gate
+            .lock()
+            .unwrap_or_else(std::sync::PoisonError::into_inner);
+        let splats = project_scene(req.scene, req.camera);
+        let grid = TileGrid::new(
+            req.camera.intr.width,
+            req.camera.intr.height,
+            req.options.tile_size,
+        );
+        let mut lists = build_tile_lists(&splats, &grid, req.options.strategy);
+        for l in &mut lists {
+            sort_by_depth(l, &splats);
+        }
+        let mut img = Image::new(grid.width, grid.height);
+        let mut ex = TileExecutor::new(self.rt);
+        for (t, list) in lists.iter().enumerate() {
+            ex.render_tile(
+                &grid.rect(t),
+                &splats,
+                list,
+                &mut img,
+                req.options.background,
+            )?;
+        }
+        let stats = RenderStats {
+            splats: splats.len(),
+            tile_pairs: lists.iter().map(|l| l.len()).sum(),
+            pixels: (grid.width * grid.height) as u64,
+            ..Default::default()
+        };
+        Ok(RenderOutput { image: img, stats })
+    }
+}
+
 /// Render one frame through the chosen backend.
-pub fn render_frame(req: &FrameRequest, backend: &mut Backend) -> Result<FrameMetrics> {
+pub fn render_frame(req: &FrameRequest, backend: &dyn RenderBackend) -> Result<FrameMetrics> {
     let t0 = Instant::now();
-    let (image, stats, name) = match backend {
-        Backend::Golden => {
-            let out = crate::render::raster::render(req.scene, req.camera, &req.options);
-            (out.image, out.stats, "golden")
-        }
-        Backend::GoldenCat(cfg) => {
-            let mut engine = CatEngine::new(*cfg);
-            let out = crate::render::raster::render_masked(
-                req.scene,
-                req.camera,
-                &req.options,
-                &mut engine,
-                None,
-            );
-            (out.image, out.stats, "golden+cat")
-        }
-        Backend::Pjrt(rt) => {
-            let splats = project_scene(req.scene, req.camera);
-            let grid = TileGrid::new(
-                req.camera.intr.width,
-                req.camera.intr.height,
-                req.options.tile_size,
-            );
-            let mut lists = build_tile_lists(&splats, &grid, req.options.strategy);
-            for l in &mut lists {
-                sort_by_depth(l, &splats);
-            }
-            let mut img = Image::new(grid.width, grid.height);
-            let mut ex = TileExecutor::new(rt);
-            for (t, list) in lists.iter().enumerate() {
-                ex.render_tile(
-                    &grid.rect(t),
-                    &splats,
-                    list,
-                    &mut img,
-                    req.options.background,
-                )?;
-            }
-            let stats = RenderStats {
-                splats: splats.len(),
-                tile_pairs: lists.iter().map(|l| l.len()).sum(),
-                pixels: (grid.width * grid.height) as u64,
-                ..Default::default()
-            };
-            (img, stats, "pjrt")
-        }
-    };
+    let out = backend.render(req)?;
     Ok(FrameMetrics {
-        image,
-        stats,
+        image: out.image,
+        stats: out.stats,
         wall_ms: t0.elapsed().as_secs_f64() * 1e3,
-        backend: name,
+        backend: backend.name(),
     })
 }
 
-/// Render an experiment's whole camera orbit through the golden backend,
-/// returning per-frame metrics (the multi-frame evaluation driver used by
-/// examples and benches).
-pub fn render_orbit(cfg: &ExperimentConfig, backend: &mut Backend) -> Result<Vec<FrameMetrics>> {
+/// Render an experiment's whole camera orbit, fanning frames across the
+/// worker pool (`cfg.workers`; 0 = auto, 1 = sequential). Frames are
+/// independent, so any worker count returns bit-identical images in orbit
+/// order. The worker budget is split: up to one thread per frame, and each
+/// frame spends the remainder on its tile fan-out, so short orbits on wide
+/// machines still use the whole allotment without oversubscribing.
+pub fn render_orbit(
+    cfg: &ExperimentConfig,
+    backend: &dyn RenderBackend,
+) -> Result<Vec<FrameMetrics>> {
     let scene = cfg.build_scene()?;
     let cams = cfg.build_cameras();
-    let mut out = Vec::with_capacity(cams.len());
-    for cam in &cams {
-        let req = FrameRequest {
-            scene: &scene,
-            camera: cam,
-            options: RenderOptions::default(),
-        };
-        out.push(render_frame(&req, backend)?);
-    }
-    Ok(out)
+    let total_workers = pool::resolve_workers(cfg.workers);
+    let frame_workers = total_workers.min(cams.len().max(1));
+    let tile_workers = (total_workers / frame_workers.max(1)).max(1);
+    let frames: Vec<Option<Result<FrameMetrics>>> =
+        pool::map_indexed(cams.len(), frame_workers, |i| {
+            let req = FrameRequest {
+                scene: &scene,
+                camera: &cams[i],
+                options: RenderOptions {
+                    workers: tile_workers,
+                    ..RenderOptions::default()
+                },
+            };
+            Some(render_frame(&req, backend))
+        });
+    frames
+        .into_iter()
+        .map(|f| f.expect("pool fills every frame slot"))
+        .collect()
 }
 
 /// Convenience: render the same frame through Golden and a mask provider,
@@ -122,8 +193,12 @@ pub fn golden_vs_masked(
     scene: &Scene,
     cam: &Camera,
     opts: &RenderOptions,
-    masks: &mut dyn MaskProvider,
+    masks: &mut dyn crate::render::raster::MaskProvider,
 ) -> (Image, Image) {
+    use crate::render::project::project_scene;
+    use crate::render::sort::sort_by_depth;
+    use crate::render::tile::{build_tile_lists, TileGrid};
+
     let golden = crate::render::raster::render(scene, cam, opts);
     let splats = project_scene(scene, cam);
     let grid = TileGrid::new(cam.intr.width, cam.intr.height, opts.tile_size);
@@ -131,8 +206,7 @@ pub fn golden_vs_masked(
     for l in &mut lists {
         sort_by_depth(l, &splats);
     }
-    let masked = render_lists(&splats, &lists, &grid, opts, masks, None);
-    let _ = AllOnes; // referenced for doc purposes
+    let masked = crate::render::raster::render_lists(&splats, &lists, &grid, opts, masks, None);
     (golden.image, masked.image)
 }
 
@@ -164,10 +238,10 @@ mod tests {
             camera: &cam,
             options: RenderOptions::default(),
         };
-        let golden = render_frame(&req, &mut Backend::Golden).unwrap();
+        let golden = render_frame(&req, &Golden).unwrap();
         let cat = render_frame(
             &req,
-            &mut Backend::GoldenCat(CatConfig {
+            &GoldenCat(CatConfig {
                 mode: LeaderMode::UniformDense,
                 precision: Precision::Fp32,
                 stage1: true,
@@ -189,7 +263,7 @@ mod tests {
             frames: 2,
             ..Default::default()
         };
-        let frames = render_orbit(&cfg, &mut Backend::Golden).unwrap();
+        let frames = render_orbit(&cfg, &Golden).unwrap();
         assert_eq!(frames.len(), 2);
         for f in frames {
             assert_eq!(f.backend, "golden");
@@ -197,6 +271,7 @@ mod tests {
         }
     }
 
+    #[cfg(feature = "pjrt")]
     #[test]
     fn pjrt_backend_composes_if_artifacts_present() {
         let dir = crate::runtime::default_artifact_dir();
@@ -204,15 +279,21 @@ mod tests {
             eprintln!("skipping: artifacts not built");
             return;
         }
-        let rt = Runtime::load(&dir).unwrap();
+        let rt = match crate::runtime::Runtime::load(&dir) {
+            Ok(rt) => rt,
+            Err(e) => {
+                eprintln!("skipping: pjrt runtime unavailable ({e})");
+                return;
+            }
+        };
         let (scene, cam) = setup();
         let req = FrameRequest {
             scene: &scene,
             camera: &cam,
             options: RenderOptions::default(),
         };
-        let golden = render_frame(&req, &mut Backend::Golden).unwrap();
-        let pjrt = render_frame(&req, &mut Backend::Pjrt(&rt)).unwrap();
+        let golden = render_frame(&req, &Golden).unwrap();
+        let pjrt = render_frame(&req, &Pjrt::new(&rt)).unwrap();
         let p = psnr(&golden.image, &pjrt.image);
         assert!(p > 28.0, "PJRT vs golden PSNR {p}");
     }

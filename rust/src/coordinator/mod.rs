@@ -1,17 +1,26 @@
 //! Layer-3 frame coordinator: schedules per-tile work across backends,
 //! collects frame metrics, and drives multi-frame evaluation runs.
 //!
-//! Backends:
-//! * **Golden** — the in-process Rust rasterizer (reference numerics), with
-//!   any `MaskProvider` (vanilla / OBB / Mini-Tile CAT).
-//! * **Pjrt** — the AOT JAX/Pallas artifacts through the PJRT runtime
-//!   (`runtime::executor`), proving the three layers compose.
+//! Backends implement the [`frame::RenderBackend`] trait:
+//! * [`frame::Golden`] — the in-process Rust rasterizer (reference
+//!   numerics) with vanilla masks.
+//! * [`frame::GoldenCat`] — the golden rasterizer driven by Mini-Tile CAT
+//!   masks at a given `CatConfig`.
+//! * `frame::Pjrt` — the AOT JAX/Pallas artifacts through the PJRT runtime
+//!   (`runtime::executor`), proving the three layers compose. Only
+//!   compiled with `--features pjrt`.
 //!
 //! The per-frame flow mirrors the accelerator's: project → tile-bin →
 //! depth-sort → (CAT-mask) → blend, with tiles fanned across the worker
-//! pool.
+//! pool (`RenderOptions::workers`) and orbits fanned across frames
+//! (`ExperimentConfig::workers`).
 
 pub mod frame;
 pub mod report;
 
-pub use frame::{render_frame, Backend, FrameMetrics, FrameRequest};
+pub use frame::{
+    render_frame, render_orbit, FrameMetrics, FrameRequest, Golden, GoldenCat, RenderBackend,
+};
+
+#[cfg(feature = "pjrt")]
+pub use frame::Pjrt;

@@ -14,11 +14,14 @@
 //!   simulator of the FLICKER accelerator (preprocessing cores, sorters,
 //!   CTUs, rendering cores with VRUs and feature FIFOs, LPDDR4 DRAM,
 //!   energy and area models) plus the GSCore and edge-GPU baselines.
-//! * [`runtime`], [`coordinator`] — the Layer-3 driver: PJRT client that
-//!   loads the AOT-compiled JAX/Pallas artifacts (`artifacts/*.hlo.txt`)
-//!   and the frame coordinator that schedules tile work across backends.
-//! * [`util`], [`numeric`] — in-tree substrates (RNG, JSON, CLI, bench
-//!   harness, property tests, FP16/FP8 emulation, linear algebra).
+//! * [`runtime`], [`coordinator`] — the Layer-3 driver: the artifact
+//!   manifest plus (behind the `pjrt` cargo feature) the PJRT client that
+//!   loads the AOT-compiled JAX/Pallas artifacts (`artifacts/*.hlo.txt`),
+//!   and the frame coordinator that schedules tile/frame work across
+//!   [`coordinator::frame::RenderBackend`] implementations on the worker
+//!   pool.
+//! * [`util`], [`numeric`] — in-tree substrates (RNG, JSON, CLI, errors,
+//!   bench harness, property tests, FP16/FP8 emulation, linear algebra).
 
 pub mod camera;
 pub mod cat;

@@ -9,18 +9,19 @@
 //!   area      Print the area model breakdown (Table II style).
 //!   info      Print scene/workload statistics.
 
-use anyhow::{anyhow, Result};
 use flicker::camera::Camera;
-use flicker::cat::{CatConfig, CatEngine, LeaderMode, Precision};
+use flicker::cat::{CatConfig, LeaderMode, Precision};
 use flicker::config::ExperimentConfig;
 use flicker::coordinator::report::Report;
-use flicker::coordinator::{render_frame, Backend, FrameRequest};
+use flicker::coordinator::{render_frame, FrameRequest, Golden, GoldenCat, RenderBackend};
 use flicker::render::metrics::{psnr, ssim};
 use flicker::render::raster::RenderOptions;
 use flicker::sim::area::{area, AreaParams};
 use flicker::sim::top::simulate_frame;
 use flicker::sim::HwConfig;
 use flicker::util::cli::Args;
+use flicker::util::error::Result;
+use flicker::{bail, err};
 
 const USAGE: &str = "\
 flicker — contribution-aware 3DGS accelerator (paper reproduction)
@@ -41,7 +42,12 @@ COMMON OPTIONS
                  or a path to a .gsz file              (default garden)
   --scene-scale  fraction of full scene size           (default 0.05, env FLICKER_SCENE_SCALE)
   --resolution   square render size in px              (default 256)
+  --workers      tile/frame worker threads, 0 = auto   (default 1; output is
+                 bit-identical for any worker count)
   --hardware     flicker32|flicker32-sparse|simplified32|simplified64|gscore64
+
+The pjrt backend requires a build with `--features pjrt` and AOT artifacts
+(`make artifacts`).
 ";
 
 fn main() {
@@ -49,7 +55,7 @@ fn main() {
     let code = match run(&args) {
         Ok(()) => 0,
         Err(e) => {
-            eprintln!("error: {e:#}");
+            eprintln!("error: {e}");
             1
         }
     };
@@ -68,7 +74,7 @@ fn run(args: &Args) -> Result<()> {
         "quality" => cmd_quality(args),
         "area" => cmd_area(args),
         "info" => cmd_info(args),
-        other => Err(anyhow!("unknown command '{other}'\n{USAGE}")),
+        other => bail!("unknown command '{other}'\n{USAGE}"),
     }
 }
 
@@ -91,40 +97,74 @@ fn cmd_render(args: &Args) -> Result<()> {
     let scene = prepared_scene(&cfg)?;
     let cams = cfg.build_cameras();
     let backend_name = args.str_or("backend", "golden");
-    let out_dir = std::path::PathBuf::from(args.str_or("out-dir", "target/frames"));
-    std::fs::create_dir_all(&out_dir)?;
 
-    let rt;
-    let mut backend = match backend_name.as_str() {
-        "golden" => Backend::Golden,
+    match backend_name.as_str() {
+        "golden" => render_orbit_to_disk(args, &cfg, &scene, &cams, &Golden),
         "golden-cat" => {
             let mode = LeaderMode::parse(&args.str_or("cat-mode", "adaptive"))
-                .ok_or_else(|| anyhow!("bad --cat-mode"))?;
+                .ok_or_else(|| err!("bad --cat-mode"))?;
             let precision = Precision::parse(&args.str_or("precision", "mixed"))
-                .ok_or_else(|| anyhow!("bad --precision"))?;
-            Backend::GoldenCat(CatConfig {
+                .ok_or_else(|| err!("bad --precision"))?;
+            let backend = GoldenCat(CatConfig {
                 mode,
                 precision,
                 stage1: true,
-            })
+            });
+            render_orbit_to_disk(args, &cfg, &scene, &cams, &backend)
         }
-        "pjrt" => {
-            rt = flicker::runtime::Runtime::load(&flicker::runtime::default_artifact_dir())?;
-            println!("pjrt platform: {}", rt.platform());
-            Backend::Pjrt(&rt)
-        }
-        other => return Err(anyhow!("unknown backend '{other}'")),
-    };
+        "pjrt" => cmd_render_pjrt(args, &cfg, &scene, &cams),
+        other => bail!("unknown backend '{other}'"),
+    }
+}
 
-    let mut report = Report::new("render", &format!("render {} ({backend_name})", scene.name));
+#[cfg(feature = "pjrt")]
+fn cmd_render_pjrt(
+    args: &Args,
+    cfg: &ExperimentConfig,
+    scene: &flicker::scene::gaussian::Scene,
+    cams: &[Camera],
+) -> Result<()> {
+    let rt = flicker::runtime::Runtime::load(&flicker::runtime::default_artifact_dir())?;
+    println!("pjrt platform: {}", rt.platform());
+    render_orbit_to_disk(args, cfg, scene, cams, &flicker::coordinator::Pjrt::new(&rt))
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn cmd_render_pjrt(
+    _args: &Args,
+    _cfg: &ExperimentConfig,
+    _scene: &flicker::scene::gaussian::Scene,
+    _cams: &[Camera],
+) -> Result<()> {
+    bail!("this build has no PJRT runtime; rebuild with `cargo build --features pjrt`")
+}
+
+/// Shared render-command loop: render every orbit camera through `backend`,
+/// write PPM frames, and emit the metrics report.
+fn render_orbit_to_disk(
+    args: &Args,
+    cfg: &ExperimentConfig,
+    scene: &flicker::scene::gaussian::Scene,
+    cams: &[Camera],
+    backend: &dyn RenderBackend,
+) -> Result<()> {
+    let out_dir = std::path::PathBuf::from(args.str_or("out-dir", "target/frames"));
+    std::fs::create_dir_all(&out_dir)?;
+    let mut report = Report::new(
+        "render",
+        &format!("render {} ({})", scene.name, backend.name()),
+    );
     report.set_provenance(cfg.to_json());
     for (i, cam) in cams.iter().enumerate() {
         let req = FrameRequest {
-            scene: &scene,
+            scene,
             camera: cam,
-            options: RenderOptions::default(),
+            options: RenderOptions {
+                workers: cfg.workers,
+                ..RenderOptions::default()
+            },
         };
-        let m = render_frame(&req, &mut backend)?;
+        let m = render_frame(&req, backend)?;
         let path = out_dir.join(format!("{}_{i:03}.ppm", scene.name));
         m.image.write_ppm(&path)?;
         println!(
@@ -218,7 +258,10 @@ fn cmd_quality(args: &Args) -> Result<()> {
     let cfg = ExperimentConfig::from_args(args)?;
     let scene = prepared_scene(&cfg)?;
     let cam = &cfg.build_cameras()[0];
-    let opts = RenderOptions::default();
+    let opts = RenderOptions {
+        workers: cfg.workers,
+        ..RenderOptions::default()
+    };
     let golden = flicker::render::raster::render(&scene, cam, &opts);
     let mut report = Report::new("quality", &format!("CAT quality on {}", scene.name));
     report.set_provenance(cfg.to_json());
@@ -229,12 +272,12 @@ fn cmd_quality(args: &Args) -> Result<()> {
         ("adaptive-mixed", LeaderMode::SmoothFocused, Precision::Mixed),
         ("adaptive-fp8", LeaderMode::SmoothFocused, Precision::Fp8),
     ] {
-        let mut engine = CatEngine::new(CatConfig {
+        let cat = CatConfig {
             mode,
             precision,
             stage1: true,
-        });
-        let out = flicker::render::raster::render_masked(&scene, cam, &opts, &mut engine, None);
+        };
+        let out = flicker::render::raster::render_with_source(&scene, cam, &opts, &cat);
         report.row(
             name,
             &[
@@ -250,7 +293,7 @@ fn cmd_quality(args: &Args) -> Result<()> {
 
 fn cmd_area(args: &Args) -> Result<()> {
     let name = args.str_or("hardware", "flicker32");
-    let hw = HwConfig::by_name(&name).ok_or_else(|| anyhow!("unknown hardware '{name}'"))?;
+    let hw = HwConfig::by_name(&name).ok_or_else(|| err!("unknown hardware '{name}'"))?;
     let r = area(&hw, &AreaParams::default());
     let mut report = Report::new("area", &format!("area breakdown: {}", hw.name));
     for (component, mm2, share) in r.rows() {

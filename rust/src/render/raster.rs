@@ -17,6 +17,7 @@ use super::sort::sort_by_depth;
 use super::tile::{build_tile_lists, Rect, Strategy, TileGrid};
 use crate::camera::Camera;
 use crate::scene::gaussian::Scene;
+use crate::util::pool;
 
 /// Mini-tile edge in pixels (paper: 4×4 mini-tiles inside 16×16 tiles).
 pub const MINITILE: u32 = 4;
@@ -29,6 +30,9 @@ pub struct RenderOptions {
     /// Transmittance threshold for early termination (3DGS: 1e-4).
     pub t_min: f32,
     pub background: [f32; 3],
+    /// Worker threads for the tile fan-out (0 = auto, 1 = sequential).
+    /// Tiles are independent, so any value yields bit-identical images.
+    pub workers: usize,
 }
 
 impl Default for RenderOptions {
@@ -38,6 +42,7 @@ impl Default for RenderOptions {
             strategy: Strategy::Aabb,
             t_min: 1e-4,
             background: [0.0, 0.0, 0.0],
+            workers: 1,
         }
     }
 }
@@ -68,6 +73,17 @@ impl RenderStats {
     pub fn per_pixel_blended(&self) -> f64 {
         self.pairs_blended as f64 / self.pixels.max(1) as f64
     }
+
+    /// Fold another tile's counters into this one. Integer sums are
+    /// order-independent, so parallel tile stats match sequential exactly.
+    pub fn absorb(&mut self, other: &RenderStats) {
+        self.splats += other.splats;
+        self.tile_pairs += other.tile_pairs;
+        self.pairs_tested += other.pairs_tested;
+        self.pairs_blended += other.pairs_blended;
+        self.pixels += other.pixels;
+        self.tiles_early_terminated += other.tiles_early_terminated;
+    }
 }
 
 /// Mini-tile mask provider: given a tile rect and a splat, return one bit per
@@ -92,19 +108,44 @@ impl MaskProvider for AllOnes {
     }
 }
 
+/// Thread-safe factory handing each tile worker its own [`MaskProvider`].
+///
+/// Providers may be stateful (caches, counters), but the mask bits must be
+/// a pure function of `(tile, splat)` — that is what keeps tile-parallel
+/// rendering bit-identical to the sequential loop. `cat::CatConfig`
+/// implements this by building a fresh `CatEngine` per tile, so CAT mask
+/// generation fans across the pool together with rasterization.
+pub trait MaskSource: Sync {
+    fn tile_masks(&self) -> Box<dyn MaskProvider + '_>;
+}
+
+/// Mask source for the vanilla pipeline: every mini-tile processes every
+/// listed splat.
+pub struct VanillaMasks;
+
+impl MaskSource for VanillaMasks {
+    fn tile_masks(&self) -> Box<dyn MaskProvider + '_> {
+        Box::new(AllOnes)
+    }
+}
+
 /// Full render product: image + stats (+ optional per-Gaussian scores).
 pub struct RenderOutput {
     pub image: Image,
     pub stats: RenderStats,
 }
 
-/// Render the scene through the reference pipeline.
+/// Render the scene through the reference pipeline. Tiles (and their mask
+/// generation) fan across the worker pool when `opts.workers != 1`; the
+/// output is bit-identical for any worker count.
 pub fn render(scene: &Scene, cam: &Camera, opts: &RenderOptions) -> RenderOutput {
-    render_masked(scene, cam, opts, &mut AllOnes, None)
+    render_with_source(scene, cam, opts, &VanillaMasks)
 }
 
 /// Render with a mini-tile mask provider (CAT integration point) and an
 /// optional per-Gaussian contribution accumulator (pruning integration).
+/// Always sequential: the borrowed provider and the contribution array are
+/// shared across tiles. Use [`render_with_source`] for the parallel path.
 pub fn render_masked(
     scene: &Scene,
     cam: &Camera,
@@ -128,7 +169,130 @@ pub fn render_masked(
     )
 }
 
-/// Core loop over prebuilt, depth-sorted tile lists.
+/// Project → tile-bin → depth-sort → render through `source`, fanning the
+/// per-tile work (rasterization and mask generation) across
+/// `util::pool::for_each_index` when `opts.workers != 1`.
+pub fn render_with_source(
+    scene: &Scene,
+    cam: &Camera,
+    opts: &RenderOptions,
+    source: &dyn MaskSource,
+) -> RenderOutput {
+    let splats = project_scene(scene, cam);
+    let grid = TileGrid::new(cam.intr.width, cam.intr.height, opts.tile_size);
+    let mut lists = build_tile_lists(&splats, &grid, opts.strategy);
+    for list in &mut lists {
+        sort_by_depth(list, &splats);
+    }
+    render_lists_parallel(&splats, &lists, &grid, opts, source)
+}
+
+/// Render one tile's depth-sorted list into tile-local scratch buffers
+/// (`trans`/`color`, `tile_size²` entries, reset on entry). Returns the
+/// valid `(w, h)` region — edge tiles are cropped by the image bounds.
+/// This is the one blending loop shared by the sequential and parallel
+/// paths, which is what makes them bit-identical.
+#[allow(clippy::too_many_arguments)]
+fn render_tile(
+    splats: &[Splat],
+    list: &[u32],
+    rect: &Rect,
+    grid: &TileGrid,
+    opts: &RenderOptions,
+    masks: &mut dyn MaskProvider,
+    trans: &mut [f32],
+    color: &mut [[f32; 3]],
+    mut contributions: Option<&mut [f32]>,
+    stats: &mut RenderStats,
+) -> (usize, usize) {
+    let ts = grid.tile as usize;
+    let mt_cols = grid.tile.div_ceil(MINITILE) as usize;
+    let x_lo = rect.x0 as u32;
+    let y_lo = rect.y0 as u32;
+    let w = (grid.width - x_lo).min(grid.tile) as usize;
+    let h = (grid.height - y_lo).min(grid.tile) as usize;
+    trans[..ts * ts].fill(1.0);
+    for c in color.iter_mut() {
+        *c = [0.0; 3];
+    }
+    let mut active = (w * h) as u32;
+
+    'splat_loop: for &si in list {
+        let s = &splats[si as usize];
+        let mask = masks.mask(rect, s);
+        if mask == 0 {
+            continue;
+        }
+        // Hot-loop locals (§Perf): hoist splat fields and precompute the
+        // Eq.-2 threshold so the (majority) sub-threshold pixels skip the
+        // exp() entirely: α = o·e^{−E} ≥ 1/255 ⇔ E ≤ ln(255·o).
+        let (ca, cb, cc) = (s.conic.a, s.conic.b, s.conic.c);
+        let (mx, my) = (s.mean.x, s.mean.y);
+        let opacity = s.opacity;
+        let e_max = (255.0 * opacity).max(1e-12).ln();
+        let col = s.color;
+        for py in 0..h {
+            let gy = y_lo as f32 + py as f32 + 0.5;
+            let dy = gy - my;
+            let half_cc_dy2 = 0.5 * cc * dy * dy;
+            let cb_dy = cb * dy;
+            let mt_row = py / MINITILE as usize;
+            for px in 0..w {
+                let mt = mt_row * mt_cols + px / MINITILE as usize;
+                if mask & (1 << mt) == 0 {
+                    continue;
+                }
+                let idx = py * ts + px;
+                let t_cur = trans[idx];
+                if t_cur < opts.t_min {
+                    continue;
+                }
+                stats.pairs_tested += 1;
+                let gx = x_lo as f32 + px as f32 + 0.5;
+                let dx = gx - mx;
+                let e = 0.5 * ca * dx * dx + half_cc_dy2 + cb_dy * dx;
+                if e >= e_max || e < 0.0 {
+                    continue; // α below 1/255 — no exp needed
+                }
+                let a = (opacity * (-e).exp()).min(0.999);
+                if a < ALPHA_MIN {
+                    continue;
+                }
+                stats.pairs_blended += 1;
+                let wgt = a * t_cur;
+                color[idx][0] += wgt * col[0];
+                color[idx][1] += wgt * col[1];
+                color[idx][2] += wgt * col[2];
+                if let Some(sc) = contributions.as_deref_mut() {
+                    sc[s.id as usize] += wgt;
+                }
+                let t_new = t_cur * (1.0 - a);
+                trans[idx] = t_new;
+                if t_new < opts.t_min {
+                    active -= 1;
+                    if active == 0 {
+                        stats.tiles_early_terminated += 1;
+                        break 'splat_loop;
+                    }
+                }
+            }
+        }
+    }
+    (w, h)
+}
+
+/// Frame-level stats skeleton: the per-tile loops only touch the pair and
+/// early-termination counters, so these totals are set once up front.
+fn frame_stats(splats: &[Splat], lists: &[Vec<u32>], grid: &TileGrid) -> RenderStats {
+    RenderStats {
+        splats: splats.len(),
+        tile_pairs: lists.iter().map(|l| l.len()).sum(),
+        pixels: (grid.width * grid.height) as u64,
+        ..Default::default()
+    }
+}
+
+/// Core loop over prebuilt, depth-sorted tile lists (sequential).
 pub fn render_lists(
     splats: &[Splat],
     lists: &[Vec<u32>],
@@ -138,94 +302,29 @@ pub fn render_lists(
     mut contributions: Option<&mut [f32]>,
 ) -> RenderOutput {
     let mut img = Image::new(grid.width, grid.height);
-    let mut stats = RenderStats {
-        splats: splats.len(),
-        tile_pairs: lists.iter().map(|l| l.len()).sum(),
-        pixels: (grid.width * grid.height) as u64,
-        ..Default::default()
-    };
-
+    let mut stats = frame_stats(splats, lists, grid);
     let ts = grid.tile as usize;
-    let mt_cols = grid.tile.div_ceil(MINITILE) as usize;
     // Per-tile scratch, reused across tiles (no allocation in the loop).
     let mut trans = vec![1.0f32; ts * ts];
     let mut color = vec![[0.0f32; 3]; ts * ts];
 
     for (t, list) in lists.iter().enumerate() {
         let rect = grid.rect(t);
+        let (w, h) = render_tile(
+            splats,
+            list,
+            &rect,
+            grid,
+            opts,
+            masks,
+            &mut trans,
+            &mut color,
+            contributions.as_deref_mut(),
+            &mut stats,
+        );
+        // Composite over background.
         let x_lo = rect.x0 as u32;
         let y_lo = rect.y0 as u32;
-        let w = (grid.width - x_lo).min(grid.tile) as usize;
-        let h = (grid.height - y_lo).min(grid.tile) as usize;
-        trans[..ts * ts].fill(1.0);
-        for c in color.iter_mut() {
-            *c = [0.0; 3];
-        }
-        let mut active = (w * h) as u32;
-
-        'splat_loop: for &si in list {
-            let s = &splats[si as usize];
-            let mask = masks.mask(&rect, s);
-            if mask == 0 {
-                continue;
-            }
-            // Hot-loop locals (§Perf): hoist splat fields and precompute the
-            // Eq.-2 threshold so the (majority) sub-threshold pixels skip the
-            // exp() entirely: α = o·e^{−E} ≥ 1/255 ⇔ E ≤ ln(255·o).
-            let (ca, cb, cc) = (s.conic.a, s.conic.b, s.conic.c);
-            let (mx, my) = (s.mean.x, s.mean.y);
-            let opacity = s.opacity;
-            let e_max = (255.0 * opacity).max(1e-12).ln();
-            let col = s.color;
-            for py in 0..h {
-                let gy = y_lo as f32 + py as f32 + 0.5;
-                let dy = gy - my;
-                let half_cc_dy2 = 0.5 * cc * dy * dy;
-                let cb_dy = cb * dy;
-                let mt_row = py / MINITILE as usize;
-                for px in 0..w {
-                    let mt = mt_row * mt_cols + px / MINITILE as usize;
-                    if mask & (1 << mt) == 0 {
-                        continue;
-                    }
-                    let idx = py * ts + px;
-                    let t_cur = trans[idx];
-                    if t_cur < opts.t_min {
-                        continue;
-                    }
-                    stats.pairs_tested += 1;
-                    let gx = x_lo as f32 + px as f32 + 0.5;
-                    let dx = gx - mx;
-                    let e = 0.5 * ca * dx * dx + half_cc_dy2 + cb_dy * dx;
-                    if e >= e_max || e < 0.0 {
-                        continue; // α below 1/255 — no exp needed
-                    }
-                    let a = (opacity * (-e).exp()).min(0.999);
-                    if a < ALPHA_MIN {
-                        continue;
-                    }
-                    stats.pairs_blended += 1;
-                    let wgt = a * t_cur;
-                    color[idx][0] += wgt * col[0];
-                    color[idx][1] += wgt * col[1];
-                    color[idx][2] += wgt * col[2];
-                    if let Some(sc) = contributions.as_deref_mut() {
-                        sc[s.id as usize] += wgt;
-                    }
-                    let t_new = t_cur * (1.0 - a);
-                    trans[idx] = t_new;
-                    if t_new < opts.t_min {
-                        active -= 1;
-                        if active == 0 {
-                            stats.tiles_early_terminated += 1;
-                            break 'splat_loop;
-                        }
-                    }
-                }
-            }
-        }
-
-        // Composite over background.
         for py in 0..h {
             for px in 0..w {
                 let idx = py * ts + px;
@@ -239,6 +338,80 @@ pub fn render_lists(
                         c[1] + tr * opts.background[1],
                         c[2] + tr * opts.background[2],
                     ],
+                );
+            }
+        }
+    }
+    RenderOutput { image: img, stats }
+}
+
+/// Tile-parallel core: each tile renders independently (fresh mask provider
+/// from `source`, tile-local scratch) on the scoped worker pool, then the
+/// composited tiles are stitched in index order. Falls back to
+/// [`render_lists`] when one worker resolves.
+pub fn render_lists_parallel(
+    splats: &[Splat],
+    lists: &[Vec<u32>],
+    grid: &TileGrid,
+    opts: &RenderOptions,
+    source: &dyn MaskSource,
+) -> RenderOutput {
+    let workers = pool::resolve_workers(opts.workers).min(lists.len().max(1));
+    if workers <= 1 {
+        let mut masks = source.tile_masks();
+        return render_lists(splats, lists, grid, opts, masks.as_mut(), None);
+    }
+    let ts = grid.tile as usize;
+    let tiles: Vec<(Vec<f32>, RenderStats)> = pool::map_indexed(lists.len(), workers, |t| {
+        let mut masks = source.tile_masks();
+        let mut trans = vec![1.0f32; ts * ts];
+        let mut color = vec![[0.0f32; 3]; ts * ts];
+        let mut stats = RenderStats::default();
+        let rect = grid.rect(t);
+        let (w, h) = render_tile(
+            splats,
+            &lists[t],
+            &rect,
+            grid,
+            opts,
+            masks.as_mut(),
+            &mut trans,
+            &mut color,
+            None,
+            &mut stats,
+        );
+        // Composite over background into a w×h tile pixel block.
+        let mut pixels = vec![0.0f32; w * h * 3];
+        for py in 0..h {
+            for px in 0..w {
+                let idx = py * ts + px;
+                let tr = trans[idx];
+                let c = color[idx];
+                let o = (py * w + px) * 3;
+                pixels[o] = c[0] + tr * opts.background[0];
+                pixels[o + 1] = c[1] + tr * opts.background[1];
+                pixels[o + 2] = c[2] + tr * opts.background[2];
+            }
+        }
+        (pixels, stats)
+    });
+
+    let mut img = Image::new(grid.width, grid.height);
+    let mut stats = frame_stats(splats, lists, grid);
+    for (t, (pixels, tile_stats)) in tiles.iter().enumerate() {
+        stats.absorb(tile_stats);
+        let rect = grid.rect(t);
+        let x_lo = rect.x0 as u32;
+        let y_lo = rect.y0 as u32;
+        let w = (grid.width - x_lo).min(grid.tile) as usize;
+        let h = (grid.height - y_lo).min(grid.tile) as usize;
+        for py in 0..h {
+            for px in 0..w {
+                let o = (py * w + px) * 3;
+                img.set(
+                    x_lo + px as u32,
+                    y_lo + py as u32,
+                    [pixels[o], pixels[o + 1], pixels[o + 2]],
                 );
             }
         }
@@ -398,6 +571,23 @@ mod tests {
         // And OBB must do less per-pixel work.
         assert!(o.stats.pairs_tested <= a.stats.pairs_tested);
         assert!(o.stats.tile_pairs <= a.stats.tile_pairs);
+    }
+
+    #[test]
+    fn tile_parallel_matches_sequential_bitwise() {
+        let scene = generate_scaled(&preset("truck"), 0.01);
+        let c = cam(96);
+        let seq = render(&scene, &c, &RenderOptions::default());
+        for workers in [0, 2, 4] {
+            let par = render(&scene, &c, &RenderOptions { workers, ..Default::default() });
+            assert_eq!(seq.image.data, par.image.data, "workers={workers}");
+            assert_eq!(seq.stats.pairs_tested, par.stats.pairs_tested);
+            assert_eq!(seq.stats.pairs_blended, par.stats.pairs_blended);
+            assert_eq!(
+                seq.stats.tiles_early_terminated,
+                par.stats.tiles_early_terminated
+            );
+        }
     }
 
     #[test]

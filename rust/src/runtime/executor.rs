@@ -12,7 +12,7 @@ use crate::cat::leader::dense_layout;
 use crate::render::image::Image;
 use crate::render::project::Splat;
 use crate::render::tile::Rect;
-use anyhow::Result;
+use crate::util::error::Result;
 
 /// Per-tile PJRT render statistics.
 #[derive(Clone, Copy, Debug, Default)]
@@ -171,7 +171,13 @@ mod tests {
             eprintln!("skipping: artifacts not built");
             return;
         }
-        let rt = Runtime::load(&default_artifact_dir()).unwrap();
+        let rt = match Runtime::load(&default_artifact_dir()) {
+            Ok(rt) => rt,
+            Err(e) => {
+                eprintln!("skipping: pjrt runtime unavailable ({e})");
+                return;
+            }
+        };
         let cam = Camera::look_at(
             Intrinsics::from_fov(32, 32, 1.2),
             v3(0.0, 0.0, -6.0),

@@ -1,14 +1,24 @@
-//! PJRT runtime: loads the AOT-compiled JAX/Pallas artifacts
-//! (`artifacts/*.hlo.txt`) and executes them from the Rust hot path.
+//! Artifact manifest + (feature-gated) PJRT runtime.
 //!
-//! Interchange is HLO *text* (xla_extension 0.5.1 rejects jax>=0.5's 64-bit
-//! instruction-id protos; the text parser reassigns ids). Executables are
-//! compiled once at startup and cached; Python never runs at frame time.
+//! The manifest layer (`Manifest`, [`default_artifact_dir`]) is pure Rust
+//! and always compiled: tests and tooling can inspect
+//! `artifacts/manifest.json` (written by python/compile/aot.py) without any
+//! XLA linkage. The PJRT execution path ([`Runtime`], [`executor`]) loads
+//! the AOT-compiled JAX/Pallas artifacts (`artifacts/*.hlo.txt`) and only
+//! exists under the `pjrt` cargo feature; the default build is offline and
+//! dependency-free.
 
+#[cfg(feature = "pjrt")]
 pub mod executor;
+#[cfg(feature = "pjrt")]
+mod pjrt;
 
+#[cfg(feature = "pjrt")]
+pub use pjrt::Runtime;
+
+use crate::err;
+use crate::util::error::{Context, Result};
 use crate::util::json::Json;
-use anyhow::{anyhow, bail, Context, Result};
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
 
@@ -29,19 +39,19 @@ impl Manifest {
         let path = dir.join("manifest.json");
         let text = std::fs::read_to_string(&path)
             .with_context(|| format!("reading {} (run `make artifacts`)", path.display()))?;
-        let j = Json::parse(&text).map_err(|e| anyhow!("manifest parse: {e}"))?;
+        let j = Json::parse(&text).map_err(|e| err!("manifest parse: {e}"))?;
         let need =
-            |k: &str| j.at(&[k]).and_then(Json::as_u64).ok_or_else(|| anyhow!("manifest: {k}"));
+            |k: &str| j.at(&[k]).and_then(Json::as_u64).ok_or_else(|| err!("manifest: {k}"));
         let mut files = HashMap::new();
         let arts = j
             .at(&["artifacts"])
             .and_then(Json::as_obj)
-            .ok_or_else(|| anyhow!("manifest: artifacts"))?;
+            .ok_or_else(|| err!("manifest: artifacts"))?;
         for (name, v) in arts.iter() {
             let file = v
                 .at(&["file"])
                 .and_then(Json::as_str)
-                .ok_or_else(|| anyhow!("manifest: artifacts.{name}.file"))?;
+                .ok_or_else(|| err!("manifest: artifacts.{name}.file"))?;
             files.insert(name.clone(), file.to_string());
         }
         Ok(Manifest {
@@ -50,89 +60,6 @@ impl Manifest {
             tile: need("tile")? as usize,
             files,
         })
-    }
-}
-
-/// A compiled PJRT runtime with all artifacts loaded.
-pub struct Runtime {
-    client: xla::PjRtClient,
-    pub manifest: Manifest,
-    executables: HashMap<String, xla::PjRtLoadedExecutable>,
-    dir: PathBuf,
-}
-
-impl Runtime {
-    /// Create a CPU PJRT client and compile every artifact in the manifest.
-    pub fn load(dir: &Path) -> Result<Runtime> {
-        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("pjrt cpu client: {e:?}"))?;
-        let manifest = Manifest::load(dir)?;
-        let mut executables = HashMap::new();
-        for (name, file) in &manifest.files {
-            let path = dir.join(file);
-            let proto = xla::HloModuleProto::from_text_file(
-                path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
-            )
-            .map_err(|e| anyhow!("parsing {}: {e:?}", path.display()))?;
-            let comp = xla::XlaComputation::from_proto(&proto);
-            let exe = client
-                .compile(&comp)
-                .map_err(|e| anyhow!("compiling {name}: {e:?}"))?;
-            executables.insert(name.clone(), exe);
-        }
-        Ok(Runtime {
-            client,
-            manifest,
-            executables,
-            dir: dir.to_path_buf(),
-        })
-    }
-
-    pub fn platform(&self) -> String {
-        self.client.platform_name()
-    }
-
-    pub fn artifact_dir(&self) -> &Path {
-        &self.dir
-    }
-
-    pub fn has(&self, name: &str) -> bool {
-        self.executables.contains_key(name)
-    }
-
-    /// Execute artifact `name` on f32 input tensors (data, dims). Returns
-    /// the flattened f32 outputs (artifacts are lowered with
-    /// `return_tuple=True`, so results arrive as one tuple literal).
-    pub fn exec_f32(&self, name: &str, inputs: &[(&[f32], &[i64])]) -> Result<Vec<Vec<f32>>> {
-        let exe = self
-            .executables
-            .get(name)
-            .ok_or_else(|| anyhow!("unknown artifact '{name}'"))?;
-        let mut lits = Vec::with_capacity(inputs.len());
-        for (data, dims) in inputs {
-            let expect: i64 = dims.iter().product();
-            if expect as usize != data.len() {
-                bail!(
-                    "{name}: input length {} != shape {:?} product",
-                    data.len(),
-                    dims
-                );
-            }
-            let lit = xla::Literal::vec1(data)
-                .reshape(dims)
-                .map_err(|e| anyhow!("reshape {dims:?}: {e:?}"))?;
-            lits.push(lit);
-        }
-        let result = exe
-            .execute::<xla::Literal>(&lits)
-            .map_err(|e| anyhow!("executing {name}: {e:?}"))?;
-        let out = result[0][0]
-            .to_literal_sync()
-            .map_err(|e| anyhow!("fetch {name}: {e:?}"))?;
-        let parts = out.to_tuple().map_err(|e| anyhow!("untuple {name}: {e:?}"))?;
-        parts
-            .into_iter()
-            .map(|p| p.to_vec::<f32>().map_err(|e| anyhow!("to_vec: {e:?}")))
-            .collect()
     }
 }
 
@@ -153,13 +80,9 @@ pub fn default_artifact_dir() -> PathBuf {
 mod tests {
     use super::*;
 
-    fn artifacts_ready() -> bool {
-        default_artifact_dir().join("manifest.json").exists()
-    }
-
     #[test]
     fn manifest_parses() {
-        if !artifacts_ready() {
+        if !default_artifact_dir().join("manifest.json").exists() {
             eprintln!("skipping: artifacts not built");
             return;
         }
@@ -172,49 +95,10 @@ mod tests {
     }
 
     #[test]
-    fn runtime_loads_and_runs_pr_weight() {
-        if !artifacts_ready() {
-            eprintln!("skipping: artifacts not built");
-            return;
-        }
-        let rt = Runtime::load(&default_artifact_dir()).unwrap();
-        let n = rt.manifest.n_gauss;
-        let m = rt.manifest.n_pr;
-        // One Gaussian at (10, 10) with a simple diagonal conic, rest far.
-        let mut mu = vec![1e6f32; n * 2];
-        mu[0] = 10.0;
-        mu[1] = 10.0;
-        let mut conic = vec![0.0f32; n * 3];
-        for i in 0..n {
-            conic[i * 3] = 0.5;
-            conic[i * 3 + 2] = 0.5;
-        }
-        let mut p_top = vec![0.0f32; m * 2];
-        let mut p_bot = vec![0.0f32; m * 2];
-        for k in 0..m {
-            p_top[k * 2] = 10.0;
-            p_top[k * 2 + 1] = 10.0;
-            p_bot[k * 2] = 13.0;
-            p_bot[k * 2 + 1] = 13.0;
-        }
-        let out = rt
-            .exec_f32(
-                "pr_weight",
-                &[
-                    (&mu, &[n as i64, 2]),
-                    (&conic, &[n as i64, 3]),
-                    (&p_top, &[m as i64, 2]),
-                    (&p_bot, &[m as i64, 2]),
-                ],
-            )
-            .unwrap();
-        assert_eq!(out.len(), 1);
-        let e = &out[0]; // (M, N, 4)
-        assert_eq!(e.len(), m * n * 4);
-        // Corner 0 of PR 0 vs Gaussian 0 sits exactly on mu -> E = 0.
-        assert!(e[0].abs() < 1e-4, "E00 = {}", e[0]);
-        // Corner 3 at (13,13): E = 0.5*0.5*(9+9) = 4.5.
-        let e3 = e[3];
-        assert!((e3 - 4.5).abs() < 1e-3, "E03 = {e3}");
+    fn missing_manifest_is_a_clean_error() {
+        let dir = std::env::temp_dir().join("flicker_no_artifacts");
+        std::fs::create_dir_all(&dir).unwrap();
+        let e = Manifest::load(&dir).unwrap_err();
+        assert!(e.to_string().contains("make artifacts"), "{e}");
     }
 }

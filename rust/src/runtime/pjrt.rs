@@ -1,0 +1,163 @@
+//! PJRT runtime (`pjrt` feature): compiles the AOT artifacts once at
+//! startup and executes them from the Rust hot path.
+//!
+//! Interchange is HLO *text* (xla_extension 0.5.1 rejects jax>=0.5's 64-bit
+//! instruction-id protos; the text parser reassigns ids). Python never runs
+//! at frame time. The default `xla` dependency is the in-tree API stub
+//! (`rust/xla-stub`) whose client constructor fails cleanly — callers skip
+//! the PJRT path when [`Runtime::load`] errors.
+
+use super::Manifest;
+use crate::err;
+use crate::util::error::Result;
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+/// A compiled PJRT runtime with all artifacts loaded.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    pub manifest: Manifest,
+    executables: HashMap<String, xla::PjRtLoadedExecutable>,
+    dir: PathBuf,
+}
+
+impl Runtime {
+    /// Create a CPU PJRT client and compile every artifact in the manifest.
+    pub fn load(dir: &Path) -> Result<Runtime> {
+        let client = xla::PjRtClient::cpu().map_err(|e| err!("pjrt cpu client: {e:?}"))?;
+        let manifest = Manifest::load(dir)?;
+        let mut executables = HashMap::new();
+        for (name, file) in &manifest.files {
+            let path = dir.join(file);
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().ok_or_else(|| err!("non-utf8 path"))?,
+            )
+            .map_err(|e| err!("parsing {}: {e:?}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client
+                .compile(&comp)
+                .map_err(|e| err!("compiling {name}: {e:?}"))?;
+            executables.insert(name.clone(), exe);
+        }
+        Ok(Runtime {
+            client,
+            manifest,
+            executables,
+            dir: dir.to_path_buf(),
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    pub fn artifact_dir(&self) -> &Path {
+        &self.dir
+    }
+
+    pub fn has(&self, name: &str) -> bool {
+        self.executables.contains_key(name)
+    }
+
+    /// Execute artifact `name` on f32 input tensors (data, dims). Returns
+    /// the flattened f32 outputs (artifacts are lowered with
+    /// `return_tuple=True`, so results arrive as one tuple literal).
+    pub fn exec_f32(&self, name: &str, inputs: &[(&[f32], &[i64])]) -> Result<Vec<Vec<f32>>> {
+        let exe = self
+            .executables
+            .get(name)
+            .ok_or_else(|| err!("unknown artifact '{name}'"))?;
+        let mut lits = Vec::with_capacity(inputs.len());
+        for (data, dims) in inputs {
+            let expect: i64 = dims.iter().product();
+            if expect as usize != data.len() {
+                return Err(err!(
+                    "{name}: input length {} != shape {:?} product",
+                    data.len(),
+                    dims
+                ));
+            }
+            let lit = xla::Literal::vec1(data)
+                .reshape(dims)
+                .map_err(|e| err!("reshape {dims:?}: {e:?}"))?;
+            lits.push(lit);
+        }
+        let result = exe
+            .execute::<xla::Literal>(&lits)
+            .map_err(|e| err!("executing {name}: {e:?}"))?;
+        let out = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| err!("fetch {name}: {e:?}"))?;
+        let parts = out.to_tuple().map_err(|e| err!("untuple {name}: {e:?}"))?;
+        parts
+            .into_iter()
+            .map(|p| p.to_vec::<f32>().map_err(|e| err!("to_vec: {e:?}")))
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::default_artifact_dir;
+
+    /// Load the runtime, skipping (None) when artifacts are missing or the
+    /// `xla` dependency is the offline stub.
+    fn runtime() -> Option<Runtime> {
+        let dir = default_artifact_dir();
+        if !dir.join("manifest.json").exists() {
+            eprintln!("skipping: artifacts not built");
+            return None;
+        }
+        match Runtime::load(&dir) {
+            Ok(rt) => Some(rt),
+            Err(e) => {
+                eprintln!("skipping: pjrt runtime unavailable ({e})");
+                None
+            }
+        }
+    }
+
+    #[test]
+    fn runtime_loads_and_runs_pr_weight() {
+        let Some(rt) = runtime() else { return };
+        let n = rt.manifest.n_gauss;
+        let m = rt.manifest.n_pr;
+        // One Gaussian at (10, 10) with a simple diagonal conic, rest far.
+        let mut mu = vec![1e6f32; n * 2];
+        mu[0] = 10.0;
+        mu[1] = 10.0;
+        let mut conic = vec![0.0f32; n * 3];
+        for i in 0..n {
+            conic[i * 3] = 0.5;
+            conic[i * 3 + 2] = 0.5;
+        }
+        let mut p_top = vec![0.0f32; m * 2];
+        let mut p_bot = vec![0.0f32; m * 2];
+        for k in 0..m {
+            p_top[k * 2] = 10.0;
+            p_top[k * 2 + 1] = 10.0;
+            p_bot[k * 2] = 13.0;
+            p_bot[k * 2 + 1] = 13.0;
+        }
+        let out = rt
+            .exec_f32(
+                "pr_weight",
+                &[
+                    (&mu, &[n as i64, 2]),
+                    (&conic, &[n as i64, 3]),
+                    (&p_top, &[m as i64, 2]),
+                    (&p_bot, &[m as i64, 2]),
+                ],
+            )
+            .unwrap();
+        assert_eq!(out.len(), 1);
+        let e = &out[0]; // (M, N, 4)
+        assert_eq!(e.len(), m * n * 4);
+        // Corner 0 of PR 0 vs Gaussian 0 sits exactly on mu -> E = 0.
+        assert!(e[0].abs() < 1e-4, "E00 = {}", e[0]);
+        // Corner 3 at (13,13): E = 0.5*0.5*(9+9) = 4.5.
+        let e3 = e[3];
+        assert!((e3 - 4.5).abs() < 1e-3, "E03 = {e3}");
+    }
+}

@@ -8,7 +8,7 @@
 
 use super::gaussian::Scene;
 use crate::numeric::linalg::{v3, Quat};
-use std::io::{Error, ErrorKind, Result};
+use crate::util::error::{Error, Result};
 use std::path::Path;
 
 const MAGIC: &[u8; 4] = b"GSZ1";
@@ -57,7 +57,7 @@ struct Reader<'a> {
 impl<'a> Reader<'a> {
     fn take(&mut self, n: usize) -> Result<&'a [u8]> {
         if self.pos + n > self.buf.len() {
-            return Err(Error::new(ErrorKind::UnexpectedEof, "truncated gsz"));
+            return Err(Error::msg("truncated gsz"));
         }
         let s = &self.buf[self.pos..self.pos + n];
         self.pos += n;
@@ -79,7 +79,7 @@ impl<'a> Reader<'a> {
 pub fn from_bytes(bytes: &[u8]) -> Result<Scene> {
     let mut r = Reader { buf: bytes, pos: 0 };
     if r.take(4)? != MAGIC {
-        return Err(Error::new(ErrorKind::InvalidData, "bad gsz magic"));
+        return Err(Error::msg("bad gsz magic"));
     }
     let n = r.u32()? as usize;
     let name_len = r.u32()? as usize;
@@ -131,7 +131,7 @@ pub fn from_bytes(bytes: &[u8]) -> Result<Scene> {
 }
 
 pub fn save(scene: &Scene, path: &Path) -> Result<()> {
-    std::fs::write(path, to_bytes(scene))
+    Ok(std::fs::write(path, to_bytes(scene))?)
 }
 
 pub fn load(path: &Path) -> Result<Scene> {

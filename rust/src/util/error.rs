@@ -1,0 +1,165 @@
+//! In-tree error substrate replacing the `anyhow` dependency (consistent
+//! with the JSON/RNG/CLI substrates — the offline image has no external
+//! crates).
+//!
+//! A string-backed [`Error`], a [`Result`] alias, an `anyhow::Context`-style
+//! [`Context`] extension for `Result`/`Option`, and the [`crate::err!`] /
+//! [`crate::bail!`] macros.
+
+use std::fmt;
+
+/// String-backed error. Conversions from the error types produced inside
+/// the crate (`std::io`, the CLI parser) let `?` flow through the driver
+/// layers without an external error-trait object.
+#[derive(Clone, Debug)]
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    /// Build an error from a message.
+    pub fn msg(msg: impl Into<String>) -> Error {
+        Error { msg: msg.into() }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl std::error::Error for Error {}
+
+/// Crate-wide result alias (drop-in for `anyhow::Result`).
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Error {
+        Error::msg(e.to_string())
+    }
+}
+
+impl From<crate::util::cli::CliError> for Error {
+    fn from(e: crate::util::cli::CliError) -> Error {
+        Error::msg(e.0)
+    }
+}
+
+impl From<String> for Error {
+    fn from(msg: String) -> Error {
+        Error::msg(msg)
+    }
+}
+
+impl From<&str> for Error {
+    fn from(msg: &str) -> Error {
+        Error::msg(msg)
+    }
+}
+
+/// Attach context to a failure, mirroring `anyhow::Context`.
+pub trait Context<T> {
+    /// Wrap the error (or empty option) with a fixed message.
+    fn context(self, msg: impl Into<String>) -> Result<T>;
+
+    /// Wrap with a lazily-built message (use when formatting is not free).
+    fn with_context<S: Into<String>, F: FnOnce() -> S>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: fmt::Display> Context<T> for std::result::Result<T, E> {
+    fn context(self, msg: impl Into<String>) -> Result<T> {
+        self.map_err(|e| Error::msg(format!("{}: {e}", msg.into())))
+    }
+
+    fn with_context<S: Into<String>, F: FnOnce() -> S>(self, f: F) -> Result<T> {
+        self.map_err(|e| Error::msg(format!("{}: {e}", f().into())))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context(self, msg: impl Into<String>) -> Result<T> {
+        self.ok_or_else(|| Error::msg(msg))
+    }
+
+    fn with_context<S: Into<String>, F: FnOnce() -> S>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`](crate::util::error::Error) from a format string
+/// (drop-in for `anyhow::anyhow!`).
+#[macro_export]
+macro_rules! err {
+    ($($arg:tt)*) => {
+        $crate::util::error::Error::msg(format!($($arg)*))
+    };
+}
+
+/// Early-return a formatted [`Error`](crate::util::error::Error) (drop-in
+/// for `anyhow::bail!`).
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::err!($($arg)*).into())
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fails() -> Result<u32> {
+        Err(err!("broke at {}", 42))
+    }
+
+    #[test]
+    fn macro_formats() {
+        let e = fails().unwrap_err();
+        assert_eq!(e.to_string(), "broke at 42");
+    }
+
+    #[test]
+    fn bail_early_returns() {
+        fn f(x: u32) -> Result<u32> {
+            if x == 0 {
+                bail!("zero input");
+            }
+            Ok(x * 2)
+        }
+        assert_eq!(f(3).unwrap(), 6);
+        assert_eq!(f(0).unwrap_err().to_string(), "zero input");
+    }
+
+    #[test]
+    fn io_error_converts() {
+        fn f() -> Result<String> {
+            Ok(std::fs::read_to_string("/definitely/not/a/file")?)
+        }
+        assert!(f().is_err());
+    }
+
+    #[test]
+    fn context_wraps_result_and_option() {
+        let r: std::result::Result<(), std::fmt::Error> = Err(std::fmt::Error);
+        let e = r.context("writing report").unwrap_err();
+        assert!(e.to_string().starts_with("writing report: "));
+
+        let o: Option<u32> = None;
+        let e = o.with_context(|| format!("missing key '{}'", "tile")).unwrap_err();
+        assert_eq!(e.to_string(), "missing key 'tile'");
+        assert_eq!(Some(7).context("present").unwrap(), 7);
+    }
+
+    #[test]
+    fn cli_error_converts() {
+        fn f() -> Result<u64> {
+            let args = crate::util::cli::Args::parse(
+                ["x", "--n", "abc"].iter().map(|s| s.to_string()),
+                &[],
+            );
+            Ok(args.u64_or("n", 1)?)
+        }
+        assert!(f().unwrap_err().to_string().contains("expected integer"));
+    }
+}

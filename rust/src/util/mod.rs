@@ -1,9 +1,10 @@
 //! In-tree substrates replacing unavailable external crates (offline image):
-//! deterministic RNG, JSON, statistics, CLI parsing, bench harness,
-//! property-testing helper, and a scoped thread pool.
+//! deterministic RNG, JSON, statistics, CLI parsing, error handling, bench
+//! harness, property-testing helper, and a scoped thread pool.
 
 pub mod bench;
 pub mod cli;
+pub mod error;
 pub mod json;
 pub mod pool;
 pub mod prop;

@@ -14,6 +14,16 @@ pub fn default_workers() -> usize {
         .unwrap_or(1)
 }
 
+/// Resolve a `workers` knob: `0` means "auto" (`default_workers()`), any
+/// other value is taken literally.
+pub fn resolve_workers(workers: usize) -> usize {
+    if workers == 0 {
+        default_workers()
+    } else {
+        workers
+    }
+}
+
 /// Run `f(i)` for every index in `0..n`, distributing indices across
 /// `workers` threads via an atomic work-stealing counter. `f` must be
 /// `Sync` (it only gets shared access); results are written through
@@ -96,6 +106,13 @@ mod tests {
     fn map_preserves_order() {
         let v = map_indexed(16, 4, |i| i * i);
         assert_eq!(v, (0..16).map(|i| i * i).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn resolve_workers_auto_and_literal() {
+        assert!(resolve_workers(0) >= 1);
+        assert_eq!(resolve_workers(1), 1);
+        assert_eq!(resolve_workers(7), 7);
     }
 
     #[test]

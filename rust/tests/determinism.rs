@@ -1,0 +1,122 @@
+//! Parallelism must never change the pixels: tile-parallel and
+//! frame-parallel rendering are bit-identical to sequential execution for
+//! every backend, because tiles and frames are independent work units and
+//! the per-tile blending loop is shared between both paths.
+
+use flicker::camera::{Camera, Intrinsics};
+use flicker::cat::{CatConfig, LeaderMode, Precision};
+use flicker::config::ExperimentConfig;
+use flicker::coordinator::{render_frame, render_orbit, FrameRequest, Golden, GoldenCat};
+use flicker::numeric::linalg::v3;
+use flicker::render::raster::{render, RenderOptions};
+use flicker::scene::gaussian::Scene;
+use flicker::scene::synthetic::{generate_scaled, preset};
+
+fn truck_frame() -> (Scene, Camera) {
+    let scene = generate_scaled(&preset("truck"), 0.02);
+    let cam = Camera::look_at(
+        Intrinsics::from_fov(112, 112, 1.2),
+        v3(0.0, 2.5, -12.0),
+        v3(0.0, 0.5, 0.0),
+        v3(0.0, 1.0, 0.0),
+    );
+    (scene, cam)
+}
+
+fn opts_with_workers(workers: usize) -> RenderOptions {
+    RenderOptions {
+        workers,
+        ..RenderOptions::default()
+    }
+}
+
+#[test]
+fn golden_tile_parallel_is_bit_identical() {
+    let (scene, cam) = truck_frame();
+    let seq = render(&scene, &cam, &opts_with_workers(1));
+    for workers in [2, 3, 8, 0] {
+        let par = render(&scene, &cam, &opts_with_workers(workers));
+        assert_eq!(seq.image.data, par.image.data, "workers={workers}");
+        assert_eq!(seq.stats.pairs_tested, par.stats.pairs_tested, "workers={workers}");
+        assert_eq!(seq.stats.pairs_blended, par.stats.pairs_blended, "workers={workers}");
+        assert_eq!(seq.stats.tile_pairs, par.stats.tile_pairs, "workers={workers}");
+        assert_eq!(
+            seq.stats.tiles_early_terminated, par.stats.tiles_early_terminated,
+            "workers={workers}"
+        );
+    }
+}
+
+#[test]
+fn cat_backend_tile_parallel_is_bit_identical() {
+    let (scene, cam) = truck_frame();
+    let backend = GoldenCat(CatConfig {
+        mode: LeaderMode::SmoothFocused,
+        precision: Precision::Mixed,
+        stage1: true,
+    });
+    let seq = render_frame(
+        &FrameRequest {
+            scene: &scene,
+            camera: &cam,
+            options: opts_with_workers(1),
+        },
+        &backend,
+    )
+    .unwrap();
+    let par = render_frame(
+        &FrameRequest {
+            scene: &scene,
+            camera: &cam,
+            options: opts_with_workers(4),
+        },
+        &backend,
+    )
+    .unwrap();
+    assert_eq!(seq.image.data, par.image.data);
+    assert_eq!(seq.stats.pairs_tested, par.stats.pairs_tested);
+    assert_eq!(seq.backend, "golden+cat");
+}
+
+#[test]
+fn orbit_frame_parallel_is_bit_identical() {
+    let base = ExperimentConfig {
+        scene: "truck".into(),
+        scene_scale: 0.01,
+        resolution: 64,
+        frames: 3,
+        ..Default::default()
+    };
+    let seq = render_orbit(&base, &Golden).unwrap();
+    let par_cfg = ExperimentConfig {
+        workers: 3,
+        ..base.clone()
+    };
+    let par = render_orbit(&par_cfg, &Golden).unwrap();
+    assert_eq!(seq.len(), par.len());
+    for (i, (a, b)) in seq.iter().zip(&par).enumerate() {
+        assert_eq!(a.image.data, b.image.data, "frame {i}");
+        assert_eq!(a.stats.pairs_blended, b.stats.pairs_blended, "frame {i}");
+        assert_eq!(b.backend, "golden");
+    }
+}
+
+#[test]
+fn orbit_auto_workers_is_bit_identical() {
+    let base = ExperimentConfig {
+        scene: "garden".into(),
+        scene_scale: 0.008,
+        resolution: 48,
+        frames: 2,
+        ..Default::default()
+    };
+    let seq = render_orbit(&base, &Golden).unwrap();
+    let auto_cfg = ExperimentConfig {
+        workers: 0,
+        ..base.clone()
+    };
+    let auto = render_orbit(&auto_cfg, &Golden).unwrap();
+    for (a, b) in seq.iter().zip(&auto) {
+        assert_eq!(a.image.data, b.image.data);
+    }
+}

@@ -5,7 +5,7 @@
 use flicker::camera::{orbit_path, Camera, Intrinsics};
 use flicker::cat::{CatConfig, CatEngine, LeaderMode, ObbSubtileMask, Precision};
 use flicker::config::ExperimentConfig;
-use flicker::coordinator::{render_frame, Backend, FrameRequest};
+use flicker::coordinator::{render_frame, FrameRequest, Golden, GoldenCat};
 use flicker::numeric::linalg::v3;
 use flicker::render::metrics::{psnr, ssim};
 use flicker::render::raster::{render, render_masked, RenderOptions};
@@ -132,11 +132,11 @@ fn backend_parity_golden_vs_cat_modes() {
         camera: &c,
         options: RenderOptions::default(),
     };
-    let golden = render_frame(&req, &mut Backend::Golden).unwrap();
+    let golden = render_frame(&req, &Golden).unwrap();
     for precision in [Precision::Fp32, Precision::Fp16, Precision::Mixed] {
         let m = render_frame(
             &req,
-            &mut Backend::GoldenCat(CatConfig {
+            &GoldenCat(CatConfig {
                 mode: LeaderMode::UniformDense,
                 precision,
                 stage1: true,

@@ -1,8 +1,10 @@
 //! L1↔L3 consistency: the AOT JAX/Pallas artifacts executed through PJRT
 //! must agree with the Rust golden implementations of the same math
 //! (cat::pr for Alg. 1, the rasterizer for tile blending, render::project
-//! for EWA projection). These tests skip gracefully when `make artifacts`
-//! has not run.
+//! for EWA projection). The whole file only compiles with `--features
+//! pjrt`, and every test skips gracefully when `make artifacts` has not
+//! run or when the `xla` dependency is the offline stub.
+#![cfg(feature = "pjrt")]
 
 use flicker::cat::pr::{pr_weights, shared_threshold};
 use flicker::numeric::linalg::{v2, Sym2};
@@ -15,7 +17,13 @@ fn runtime() -> Option<Runtime> {
         eprintln!("skipping: artifacts not built (run `make artifacts`)");
         return None;
     }
-    Some(Runtime::load(&dir).expect("runtime load"))
+    match Runtime::load(&dir) {
+        Ok(rt) => Some(rt),
+        Err(e) => {
+            eprintln!("skipping: pjrt runtime unavailable ({e})");
+            None
+        }
+    }
 }
 
 fn random_conic(rng: &mut Pcg32) -> Sym2 {

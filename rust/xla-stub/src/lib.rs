@@ -1,0 +1,144 @@
+//! Offline stub of the `xla` crate (xla_extension 0.5.1 bindings).
+//!
+//! The flicker build must stay pure-Rust and offline, but the `pjrt`
+//! feature's runtime code is written against the published `xla` crate's
+//! API. This stub mirrors exactly the surface `flicker::runtime` uses so
+//! `cargo build --features pjrt` type-checks and links with no network and
+//! no native XLA library present.
+//!
+//! Every entry point that would touch a real PJRT client fails at runtime
+//! with [`Error::StubUnavailable`]; callers (tests, examples, the CLI)
+//! treat that as "PJRT runtime unavailable" and skip. To execute real AOT
+//! artifacts, point the `xla` dependency in `rust/Cargo.toml` at the
+//! published crate instead of this path.
+
+use std::fmt;
+
+/// Error surface of the real bindings; the stub only ever produces
+/// `StubUnavailable`.
+pub enum Error {
+    /// The stub cannot create a PJRT client.
+    StubUnavailable,
+    /// Catch-all mirroring the real crate's error payloads.
+    Message(String),
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Error::StubUnavailable => f.write_str(
+                "xla stub: PJRT runtime not linked (swap rust/xla-stub for the real `xla` crate)",
+            ),
+            Error::Message(m) => f.write_str(m),
+        }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        fmt::Debug::fmt(self, f)
+    }
+}
+
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+/// PJRT client handle. The stub's constructor always fails, so no method
+/// past construction is ever reached at runtime.
+pub struct PjRtClient;
+
+impl PjRtClient {
+    /// Create a CPU PJRT client. Always fails in the stub.
+    pub fn cpu() -> Result<PjRtClient> {
+        Err(Error::StubUnavailable)
+    }
+
+    pub fn platform_name(&self) -> String {
+        "stub".to_string()
+    }
+
+    pub fn compile(&self, _computation: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(Error::StubUnavailable)
+    }
+}
+
+/// Parsed HLO module (text form in the real crate).
+pub struct HloModuleProto;
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: &str) -> Result<HloModuleProto> {
+        Err(Error::StubUnavailable)
+    }
+}
+
+/// An XLA computation wrapping an HLO module.
+pub struct XlaComputation;
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation
+    }
+}
+
+/// Host-side literal (tensor) value.
+pub struct Literal;
+
+impl Literal {
+    /// Build a rank-1 f32 literal.
+    pub fn vec1(_data: &[f32]) -> Literal {
+        Literal
+    }
+
+    pub fn reshape(&self, _dims: &[i64]) -> Result<Literal> {
+        Err(Error::StubUnavailable)
+    }
+
+    pub fn to_tuple(self) -> Result<Vec<Literal>> {
+        Err(Error::StubUnavailable)
+    }
+
+    pub fn to_vec<T>(&self) -> Result<Vec<T>> {
+        Err(Error::StubUnavailable)
+    }
+}
+
+/// Device-side buffer returned by an execution.
+pub struct PjRtBuffer;
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(Error::StubUnavailable)
+    }
+}
+
+/// A compiled, loaded executable.
+pub struct PjRtLoadedExecutable(());
+
+impl PjRtLoadedExecutable {
+    /// Execute on the given argument literals; one result buffer list per
+    /// device (the runtime uses `result[0][0]`).
+    pub fn execute<T>(&self, _args: &[T]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(Error::StubUnavailable)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn client_creation_fails_cleanly() {
+        assert!(PjRtClient::cpu().is_err());
+        let msg = format!("{:?}", PjRtClient::cpu().unwrap_err());
+        assert!(msg.contains("stub"));
+    }
+
+    #[test]
+    fn literal_surface_is_inert() {
+        let lit = Literal::vec1(&[1.0, 2.0]);
+        assert!(lit.reshape(&[2]).is_err());
+        assert!(lit.to_vec::<f32>().is_err());
+        assert!(lit.to_tuple().is_err());
+    }
+}
