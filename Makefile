@@ -5,7 +5,7 @@
 CARGO ?= cargo
 PYTHON ?= python3
 
-.PHONY: build test bench fmt clippy artifacts pytest ci clean
+.PHONY: build test bench fmt clippy docs artifacts pytest ci clean
 
 build:
 	$(CARGO) build --release
@@ -23,6 +23,12 @@ fmt:
 clippy:
 	$(CARGO) clippy --all-targets -- -D warnings
 
+# API docs must build warning-free (missing_docs is warn at the crate
+# root), and the doctest examples must pass.
+docs:
+	RUSTDOCFLAGS="-D warnings" $(CARGO) doc --no-deps
+	$(CARGO) test --doc
+
 # AOT-lower the JAX/Pallas kernels to HLO text for the Rust PJRT runtime.
 # Writes rust/artifacts/ (the location `default_artifact_dir` resolves from
 # both the CLI and `cargo test`). Requires jax.
@@ -37,7 +43,7 @@ pytest:
 		echo "pytest not installed - skipping python tests"; \
 	fi
 
-ci: build test fmt clippy pytest
+ci: build test fmt clippy docs pytest
 	$(CARGO) build --release --features pjrt
 	$(CARGO) test -q --features pjrt
 

@@ -4,11 +4,14 @@
 
 mod common;
 
+use flicker::camera::{orbit_path, Intrinsics};
 use flicker::cat::{CatConfig, CatEngine, LeaderMode, Precision};
+use flicker::numeric::linalg::v3;
 use flicker::render::project::project_scene;
 use flicker::render::raster::{render, render_masked, RenderOptions};
 use flicker::render::sort::sort_by_depth;
 use flicker::render::tile::{build_tile_lists, Strategy, TileGrid};
+use flicker::scene::pruning::score_views;
 use flicker::sim::top::simulate_workload;
 use flicker::sim::workload::extract;
 use flicker::sim::HwConfig;
@@ -82,6 +85,23 @@ fn main() {
         black_box(flicker::render::raster::render_with_source(
             &scene, &cam, &par_opts, &cat_cfg,
         ));
+    });
+
+    // Pruning contribution scoring (Σ T·α over scoring views) — the pass
+    // FLICKER's premise says dominates edge 3DGS cost. Sequential vs
+    // full-pool fan-out; scores are bit-identical either way.
+    let score_cams = orbit_path(
+        Intrinsics::from_fov(res, res, 1.2),
+        v3(0.0, 0.5, 0.0),
+        12.0,
+        3.0,
+        4,
+    );
+    b.bench("prune_scoring", || {
+        black_box(score_views(&scene, &score_cams, &RenderOptions::default(), 1));
+    });
+    b.bench("prune_scoring_parallel", || {
+        black_box(score_views(&scene, &score_cams, &RenderOptions::default(), 0));
     });
 
     let hw = HwConfig::flicker32();

@@ -5,11 +5,17 @@ use crate::numeric::linalg::{v2, v3, Mat3, Vec2, Vec3};
 /// Pinhole intrinsics in pixels.
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub struct Intrinsics {
+    /// Focal length, x (pixels).
     pub fx: f32,
+    /// Focal length, y (pixels).
     pub fy: f32,
+    /// Principal point, x (pixels).
     pub cx: f32,
+    /// Principal point, y (pixels).
     pub cy: f32,
+    /// Image width (pixels).
     pub width: u32,
+    /// Image height (pixels).
     pub height: u32,
 }
 
@@ -31,11 +37,15 @@ impl Intrinsics {
 /// Camera pose: world→camera rotation and camera position in world space.
 #[derive(Clone, Copy, Debug)]
 pub struct Camera {
+    /// Pinhole intrinsics.
     pub intr: Intrinsics,
     /// Rotation world→camera (camera looks down +z in camera space).
     pub r_wc: Mat3,
+    /// Camera position in world space.
     pub position: Vec3,
+    /// Near clip distance.
     pub near: f32,
+    /// Far clip distance.
     pub far: f32,
 }
 

@@ -22,7 +22,9 @@ use crate::render::tile::{intersects_aabb, intersects_exact, intersects_obb, Rec
 /// CAT configuration.
 #[derive(Clone, Copy, Debug)]
 pub struct CatConfig {
+    /// Leader-pixel sampling mode.
     pub mode: LeaderMode,
+    /// Arithmetic precision of the contribution test.
     pub precision: Precision,
     /// Enable hierarchical Stage 1 (sub-tile AABB pre-filter).
     pub stage1: bool,
@@ -51,9 +53,11 @@ pub struct CatStats {
     pub prs: u64,
     /// Dense-sampled pairs (vs sparse) — the adaptive-mode split.
     pub dense_pairs: u64,
+    /// Sparse-sampled pairs.
     pub sparse_pairs: u64,
-    /// Mini-tile bits set / examined.
+    /// Mini-tile bits set.
     pub minitiles_passed: u64,
+    /// Mini-tile bits examined.
     pub minitiles_tested: u64,
     /// Arithmetic ops spent on CAT itself (the "overhead" side).
     pub ops: OpCount,
@@ -83,7 +87,9 @@ impl CatStats {
 
 /// The Mini-Tile CAT engine.
 pub struct CatEngine {
+    /// The configuration this engine runs.
     pub cfg: CatConfig,
+    /// Counters accumulated over the engine's lifetime.
     pub stats: CatStats,
     /// One-entry pre-quantization cache: (splat id, operands, ln(255·o)).
     /// Sub-tiles of the same Gaussian arrive consecutively, so this hits
@@ -92,6 +98,7 @@ pub struct CatEngine {
 }
 
 impl CatEngine {
+    /// New engine with zeroed counters.
     pub fn new(cfg: CatConfig) -> CatEngine {
         CatEngine {
             cfg,
@@ -213,10 +220,12 @@ impl MaskSource for CatConfig {
 pub struct ObbSubtileMask {
     /// (gaussian, sub-tile) pairs passing — GSCore's duplicate metric.
     pub subtiles_passed: u64,
+    /// (gaussian, sub-tile) pairs tested.
     pub subtiles_tested: u64,
 }
 
 impl ObbSubtileMask {
+    /// New provider with zeroed counters.
     pub fn new() -> Self {
         ObbSubtileMask {
             subtiles_passed: 0,

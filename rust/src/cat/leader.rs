@@ -17,7 +17,9 @@ use crate::render::project::Splat;
 /// Uniform or shape-adaptive sampling selection.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum LeaderMode {
+    /// Every Gaussian gets Dense sampling (4 leader pixels per mini-tile).
     UniformDense,
+    /// Every Gaussian gets Sparse sampling (2 leader pixels per mini-tile).
     UniformSparse,
     /// Smooth Gaussians get Dense sampling, spiky get Sparse (the paper's
     /// default adaptive mode).
@@ -30,7 +32,9 @@ pub enum LeaderMode {
 /// Sampling density chosen for one Gaussian.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Sampling {
+    /// Four corner leader pixels per mini-tile.
     Dense,
+    /// Two diagonal leader pixels per mini-tile.
     Sparse,
 }
 
@@ -44,6 +48,7 @@ impl LeaderMode {
         self.sampling_for(splat.is_spiky(SPIKY_AXIS_RATIO))
     }
 
+    /// Pick the sampling from a precomputed spikiness classification.
     #[inline]
     pub fn sampling_for(self, spiky: bool) -> Sampling {
         match self {
@@ -66,6 +71,7 @@ impl LeaderMode {
         }
     }
 
+    /// Parse a CLI/config mode name ("dense", "sparse", "adaptive", …).
     pub fn parse(s: &str) -> Option<LeaderMode> {
         Some(match s {
             "dense" | "uniform-dense" => LeaderMode::UniformDense,
@@ -82,10 +88,13 @@ impl LeaderMode {
 /// feeds (0..4, row-major mini-tile index inside the sub-tile).
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub struct PrLayout {
-    /// (x_top, y_top) and (x_bot, y_bot) in sub-tile pixel coords.
+    /// Top corner x (sub-tile pixel coords, centers at +0.5).
     pub x_top: f32,
+    /// Top corner y.
     pub y_top: f32,
+    /// Bottom corner x.
     pub x_bot: f32,
+    /// Bottom corner y.
     pub y_bot: f32,
     /// Mini-tile fed by corner k (order E0..E3 as in Alg. 1:
     /// (xt,yt), (xb,yt), (xt,yb), (xb,yb)).

@@ -18,13 +18,18 @@ use crate::numeric::linalg::{Sym2, Vec2};
 /// CTU numeric scheme.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Precision {
+    /// Full single precision (software reference).
     Fp32,
+    /// All operands and operations at binary16.
     Fp16,
+    /// All operands at E4M3, including absolute coordinates.
     Fp8,
+    /// The paper's scheme: FP16 deltas → FP8 products → FP16 accumulation.
     Mixed,
 }
 
 impl Precision {
+    /// Parse a CLI/config precision name ("fp32", "fp16", "fp8", "mixed").
     pub fn parse(s: &str) -> Option<Precision> {
         Some(match s {
             "fp32" => Precision::Fp32,
@@ -132,12 +137,14 @@ fn weights_from_deltas(
 /// the CTU input.
 #[derive(Clone, Copy, Debug)]
 pub struct PreQuant {
+    /// The precision the operands were quantized for.
     pub prec: Precision,
     mu: Vec2,
     conic: Sym2,
 }
 
 impl PreQuant {
+    /// Quantize μ and the conic once for `prec`.
     pub fn new(mu: Vec2, conic: Sym2, prec: Precision) -> PreQuant {
         let (mu, conic) = match prec {
             Precision::Fp32 => (mu, conic),

@@ -15,18 +15,23 @@ use crate::numeric::linalg::{Sym2, Vec2};
 /// analysis behind Fig. 3(b) and the CTU throughput model).
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
 pub struct OpCount {
+    /// Multiplies.
     pub mul: u64,
+    /// Additions.
     pub add: u64,
     /// Subtractions (coordinate deltas).
     pub sub: u64,
+    /// Comparisons (threshold tests).
     pub cmp: u64,
 }
 
 impl OpCount {
+    /// All operations combined.
     pub fn total(&self) -> u64 {
         self.mul + self.add + self.sub + self.cmp
     }
 
+    /// Fold another counter into this one.
     pub fn accumulate(&mut self, o: OpCount) {
         self.mul += o.mul;
         self.add += o.add;
@@ -40,6 +45,7 @@ impl OpCount {
 /// E3 = (x_bot, y_bot).
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub struct PrWeights {
+    /// E at corners [E0, E1, E2, E3].
     pub e: [f32; 4],
 }
 

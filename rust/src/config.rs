@@ -36,9 +36,11 @@ pub struct ExperimentConfig {
     pub fifo_depth: Option<usize>,
     /// Apply contribution pruning before evaluation.
     pub prune: bool,
-    /// Worker threads for frame/tile parallel rendering (0 = auto, 1 =
-    /// sequential; parallel output is bit-identical to sequential).
+    /// Worker threads for frame/tile parallel rendering and pruning's
+    /// contribution scoring (0 = auto, 1 = sequential; parallel output is
+    /// bit-identical to sequential).
     pub workers: usize,
+    /// RNG seed for synthetic scene generation.
     pub seed: u64,
 }
 
@@ -129,6 +131,7 @@ impl ExperimentConfig {
         Ok(cfg)
     }
 
+    /// Load a config from a JSON file (keys mirror [`ExperimentConfig`]).
     pub fn from_json_file(path: &std::path::Path) -> Result<ExperimentConfig> {
         let text = std::fs::read_to_string(path)?;
         let j = Json::parse(&text).map_err(|e| err!("{}: {e}", path.display()))?;

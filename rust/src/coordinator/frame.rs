@@ -17,17 +17,24 @@ use std::time::Instant;
 
 /// A frame to render.
 pub struct FrameRequest<'a> {
+    /// The scene to render.
     pub scene: &'a Scene,
+    /// The viewpoint.
     pub camera: &'a Camera,
+    /// Rasterization settings (tile size, strategy, workers, …).
     pub options: RenderOptions,
 }
 
 /// What came back.
 #[derive(Clone)]
 pub struct FrameMetrics {
+    /// The rendered frame.
     pub image: Image,
+    /// Workload counters.
     pub stats: RenderStats,
+    /// Wall-clock render time in milliseconds.
     pub wall_ms: f64,
+    /// Name of the backend that rendered the frame.
     pub backend: &'static str,
 }
 
@@ -55,7 +62,10 @@ impl RenderBackend for Golden {
 }
 
 /// Golden rasterizer with Mini-Tile CAT masks at the given config.
-pub struct GoldenCat(pub CatConfig);
+pub struct GoldenCat(
+    /// The CAT configuration driving mask generation.
+    pub CatConfig,
+);
 
 impl RenderBackend for GoldenCat {
     fn name(&self) -> &'static str {
@@ -86,6 +96,7 @@ pub struct Pjrt<'rt> {
 
 #[cfg(feature = "pjrt")]
 impl<'rt> Pjrt<'rt> {
+    /// New PJRT backend over a loaded runtime.
     pub fn new(rt: &'rt crate::runtime::Runtime) -> Self {
         Pjrt {
             rt,

@@ -7,13 +7,16 @@ use std::path::Path;
 /// A generic experiment report: named scalar rows plus provenance.
 #[derive(Clone, Debug, Default)]
 pub struct Report {
+    /// Stable id (JSON sidecar filename).
     pub id: String,
+    /// Human-readable title.
     pub title: String,
     rows: Vec<(String, Vec<(String, f64)>)>,
     provenance: Option<Json>,
 }
 
 impl Report {
+    /// Empty report with an id and title.
     pub fn new(id: &str, title: &str) -> Report {
         Report {
             id: id.to_string(),
@@ -22,6 +25,7 @@ impl Report {
         }
     }
 
+    /// Attach the experiment config that produced this report.
     pub fn set_provenance(&mut self, j: Json) {
         self.provenance = Some(j);
     }
@@ -34,6 +38,7 @@ impl Report {
         ));
     }
 
+    /// All rows, in insertion order.
     pub fn rows(&self) -> &[(String, Vec<(String, f64)>)] {
         &self.rows
     }
@@ -95,6 +100,7 @@ impl Report {
         out
     }
 
+    /// Serialize the report (id, title, provenance, rows) to JSON.
     pub fn to_json(&self) -> Json {
         let mut o = JsonObj::new();
         o.insert("id", jstr(&self.id));

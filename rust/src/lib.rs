@@ -23,6 +23,8 @@
 //! * [`util`], [`numeric`] — in-tree substrates (RNG, JSON, CLI, errors,
 //!   bench harness, property tests, FP16/FP8 emulation, linear algebra).
 
+#![warn(missing_docs)]
+
 pub mod camera;
 pub mod cat;
 pub mod config;

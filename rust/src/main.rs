@@ -42,7 +42,8 @@ COMMON OPTIONS
                  or a path to a .gsz file              (default garden)
   --scene-scale  fraction of full scene size           (default 0.05, env FLICKER_SCENE_SCALE)
   --resolution   square render size in px              (default 256)
-  --workers      tile/frame worker threads, 0 = auto   (default 1; output is
+  --workers      tile/frame/prune-scoring worker threads, 0 = auto
+                 (default 1; output — images and pruning decisions — is
                  bit-identical for any worker count)
   --hardware     flicker32|flicker32-sparse|simplified32|simplified64|gscore64
 
@@ -82,12 +83,23 @@ fn prepared_scene(cfg: &ExperimentConfig) -> Result<flicker::scene::gaussian::Sc
     let mut scene = cfg.build_scene()?;
     if cfg.prune {
         let views = cfg.build_cameras();
+        // Contribution scoring honors the CLI worker budget; the pruning
+        // decision is bit-identical for any --workers value.
         let rep = flicker::scene::pruning::prune(
             &mut scene,
             &views,
-            &flicker::scene::pruning::PruneConfig::default(),
+            &flicker::scene::pruning::PruneConfig {
+                workers: cfg.workers,
+                ..Default::default()
+            },
         );
-        println!("pruned {} → {} gaussians", rep.before, rep.after);
+        println!(
+            "pruned {} → {} gaussians ({} scoring views, {:.1} pairs/px tested)",
+            rep.before,
+            rep.after,
+            rep.views,
+            rep.stats.per_pixel_tested()
+        );
     }
     Ok(scene)
 }

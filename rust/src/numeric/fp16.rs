@@ -6,14 +6,22 @@
 
 /// A 16-bit IEEE half-precision float stored as raw bits.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
-pub struct F16(pub u16);
+pub struct F16(
+    /// Raw binary16 bits.
+    pub u16,
+);
 
 impl F16 {
+    /// Positive zero.
     pub const ZERO: F16 = F16(0);
+    /// One.
     pub const ONE: F16 = F16(0x3C00);
+    /// Positive infinity.
     pub const INFINITY: F16 = F16(0x7C00);
+    /// Negative infinity.
     pub const NEG_INFINITY: F16 = F16(0xFC00);
-    pub const MAX: F16 = F16(0x7BFF); // 65504
+    /// Largest finite value (65504).
+    pub const MAX: F16 = F16(0x7BFF);
     /// Smallest positive normal (2^-14).
     pub const MIN_POSITIVE: F16 = F16(0x0400);
 
@@ -86,10 +94,12 @@ impl F16 {
         f32::from_bits(bits)
     }
 
+    /// Is this bit pattern a NaN?
     pub fn is_nan(self) -> bool {
         (self.0 & 0x7C00) == 0x7C00 && (self.0 & 0x3FF) != 0
     }
 
+    /// Is this bit pattern ±∞?
     pub fn is_infinite(self) -> bool {
         (self.0 & 0x7FFF) == 0x7C00
     }
@@ -109,11 +119,13 @@ pub fn add_f16(a: f32, b: f32) -> f32 {
     quantize_f16(quantize_f16(a) + quantize_f16(b))
 }
 
+/// FP16 multiply (see [`add_f16`]).
 #[inline]
 pub fn mul_f16(a: f32, b: f32) -> f32 {
     quantize_f16(quantize_f16(a) * quantize_f16(b))
 }
 
+/// FP16 subtract (see [`add_f16`]).
 #[inline]
 pub fn sub_f16(a: f32, b: f32) -> f32 {
     quantize_f16(quantize_f16(a) - quantize_f16(b))

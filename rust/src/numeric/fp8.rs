@@ -8,7 +8,9 @@
 /// FP8 format descriptor.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Fp8Format {
+    /// OCP E4M3: bias 7, no infinities, max finite 448.
     E4M3,
+    /// IEEE-like E5M2: bias 15, has infinities, max finite 57344.
     E5M2,
 }
 

@@ -3,61 +3,87 @@
 
 use std::ops::{Add, Div, Mul, Neg, Sub};
 
+/// 2D vector (pixel coordinates, conic axes).
 #[derive(Clone, Copy, Debug, Default, PartialEq)]
 pub struct Vec2 {
+    /// x component.
     pub x: f32,
+    /// y component.
     pub y: f32,
 }
 
+/// 3D vector (world/camera space positions and directions).
 #[derive(Clone, Copy, Debug, Default, PartialEq)]
 pub struct Vec3 {
+    /// x component.
     pub x: f32,
+    /// y component.
     pub y: f32,
+    /// z component.
     pub z: f32,
 }
 
+/// 4D vector (homogeneous coordinates).
 #[derive(Clone, Copy, Debug, Default, PartialEq)]
 pub struct Vec4 {
+    /// x component.
     pub x: f32,
+    /// y component.
     pub y: f32,
+    /// z component.
     pub z: f32,
+    /// w component.
     pub w: f32,
 }
 
 /// Symmetric 2×2 matrix (covariance / conic): [[a, b], [b, c]].
 #[derive(Clone, Copy, Debug, Default, PartialEq)]
 pub struct Sym2 {
+    /// Top-left entry.
     pub a: f32,
+    /// Off-diagonal entry.
     pub b: f32,
+    /// Bottom-right entry.
     pub c: f32,
 }
 
 /// Row-major 3×3.
 #[derive(Clone, Copy, Debug, PartialEq)]
-pub struct Mat3(pub [f32; 9]);
+pub struct Mat3(
+    /// Row-major entries.
+    pub [f32; 9],
+);
 
 /// Unit quaternion (w, x, y, z).
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub struct Quat {
+    /// Scalar part.
     pub w: f32,
+    /// Vector part, x.
     pub x: f32,
+    /// Vector part, y.
     pub y: f32,
+    /// Vector part, z.
     pub z: f32,
 }
 
+/// Shorthand [`Vec2`] constructor.
 pub const fn v2(x: f32, y: f32) -> Vec2 {
     Vec2 { x, y }
 }
 
+/// Shorthand [`Vec3`] constructor.
 pub const fn v3(x: f32, y: f32, z: f32) -> Vec3 {
     Vec3 { x, y, z }
 }
 
 impl Vec2 {
+    /// Dot product.
     pub fn dot(self, o: Vec2) -> f32 {
         self.x * o.x + self.y * o.y
     }
 
+    /// Euclidean length.
     pub fn norm(self) -> f32 {
         self.dot(self).sqrt()
     }
@@ -85,10 +111,12 @@ impl Mul<f32> for Vec2 {
 }
 
 impl Vec3 {
+    /// Dot product.
     pub fn dot(self, o: Vec3) -> f32 {
         self.x * o.x + self.y * o.y + self.z * o.z
     }
 
+    /// Cross product (right-handed).
     pub fn cross(self, o: Vec3) -> Vec3 {
         v3(
             self.y * o.z - self.z * o.y,
@@ -97,10 +125,12 @@ impl Vec3 {
         )
     }
 
+    /// Euclidean length.
     pub fn norm(self) -> f32 {
         self.dot(self).sqrt()
     }
 
+    /// Unit vector in the same direction (zero stays zero).
     pub fn normalized(self) -> Vec3 {
         let n = self.norm();
         if n == 0.0 {
@@ -147,6 +177,7 @@ impl Div<f32> for Vec3 {
 }
 
 impl Sym2 {
+    /// Determinant.
     pub fn det(self) -> f32 {
         self.a * self.c - self.b * self.b
     }
@@ -198,12 +229,15 @@ impl Sym2 {
 }
 
 impl Mat3 {
+    /// The identity matrix.
     pub const IDENTITY: Mat3 = Mat3([1.0, 0.0, 0.0, 0.0, 1.0, 0.0, 0.0, 0.0, 1.0]);
 
+    /// Entry at row `r`, column `c`.
     pub fn at(&self, r: usize, c: usize) -> f32 {
         self.0[r * 3 + c]
     }
 
+    /// Matrix–vector product.
     pub fn mul_vec(&self, v: Vec3) -> Vec3 {
         v3(
             self.at(0, 0) * v.x + self.at(0, 1) * v.y + self.at(0, 2) * v.z,
@@ -212,6 +246,7 @@ impl Mat3 {
         )
     }
 
+    /// Matrix–matrix product.
     pub fn mul(&self, o: &Mat3) -> Mat3 {
         let mut out = [0.0f32; 9];
         for r in 0..3 {
@@ -226,6 +261,7 @@ impl Mat3 {
         Mat3(out)
     }
 
+    /// Transposed copy.
     pub fn transpose(&self) -> Mat3 {
         let m = &self.0;
         Mat3([m[0], m[3], m[6], m[1], m[4], m[7], m[2], m[5], m[8]])
@@ -238,6 +274,7 @@ impl Mat3 {
 }
 
 impl Quat {
+    /// The identity rotation.
     pub const IDENTITY: Quat = Quat {
         w: 1.0,
         x: 0.0,
@@ -245,6 +282,7 @@ impl Quat {
         z: 0.0,
     };
 
+    /// Unit quaternion in the same direction (zero becomes identity).
     pub fn normalized(self) -> Quat {
         let n = (self.w * self.w + self.x * self.x + self.y * self.y + self.z * self.z).sqrt();
         if n == 0.0 {

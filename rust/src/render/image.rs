@@ -3,13 +3,16 @@
 /// RGB float framebuffer, row-major, values nominally in [0, 1].
 #[derive(Clone, Debug)]
 pub struct Image {
+    /// Width in pixels.
     pub width: u32,
+    /// Height in pixels.
     pub height: u32,
     /// width*height*3 floats, RGB interleaved.
     pub data: Vec<f32>,
 }
 
 impl Image {
+    /// Black image of the given size.
     pub fn new(width: u32, height: u32) -> Image {
         Image {
             width,
@@ -18,6 +21,7 @@ impl Image {
         }
     }
 
+    /// Constant-color image of the given size.
     pub fn filled(width: u32, height: u32, rgb: [f32; 3]) -> Image {
         let mut img = Image::new(width, height);
         for px in img.data.chunks_exact_mut(3) {
@@ -26,18 +30,21 @@ impl Image {
         img
     }
 
+    /// Flat index of pixel `(x, y)` into [`Image::data`].
     #[inline]
     pub fn idx(&self, x: u32, y: u32) -> usize {
         debug_assert!(x < self.width && y < self.height);
         ((y * self.width + x) * 3) as usize
     }
 
+    /// RGB at pixel `(x, y)`.
     #[inline]
     pub fn get(&self, x: u32, y: u32) -> [f32; 3] {
         let i = self.idx(x, y);
         [self.data[i], self.data[i + 1], self.data[i + 2]]
     }
 
+    /// Overwrite RGB at pixel `(x, y)`.
     #[inline]
     pub fn set(&mut self, x: u32, y: u32, rgb: [f32; 3]) {
         let i = self.idx(x, y);

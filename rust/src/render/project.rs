@@ -22,7 +22,9 @@ pub struct Splat {
     pub conic: Sym2,
     /// Camera-space depth (z).
     pub depth: f32,
+    /// Base opacity `o` in Eq. (1).
     pub opacity: f32,
+    /// View-dependent RGB (SH evaluated at the view direction).
     pub color: [f32; 3],
     /// 3σ radius along the major axis (pixels).
     pub radius: f32,

@@ -10,6 +10,14 @@
 //! lists, or FLICKER's Mini-Tile CAT (mask from `crate::cat`). It also
 //! optionally accumulates per-Gaussian contribution scores (used by pruning)
 //! and tracks the per-pixel workload counters behind paper Fig. 4.
+//!
+//! **Determinism contract.** Tiles are independent work units and share one
+//! blending loop (`render_tile`) between the sequential and parallel
+//! paths, so images are bit-identical for any worker count. Contribution
+//! scores obey the same contract: each tile accumulates into a private
+//! list-aligned partial buffer, and partials are reduced into the global
+//! per-Gaussian array in ascending tile index, whether tiles ran on one
+//! thread or many.
 
 use super::image::Image;
 use super::project::{project_scene, Splat, ALPHA_MIN};
@@ -25,10 +33,13 @@ pub const MINITILE: u32 = 4;
 /// Rendering configuration.
 #[derive(Clone, Copy, Debug)]
 pub struct RenderOptions {
+    /// Tile edge in pixels (paper: 16×16).
     pub tile_size: u32,
+    /// Tile-intersection strategy (AABB or OBB).
     pub strategy: Strategy,
     /// Transmittance threshold for early termination (3DGS: 1e-4).
     pub t_min: f32,
+    /// Background color composited under the residual transmittance.
     pub background: [f32; 3],
     /// Worker threads for the tile fan-out (0 = auto, 1 = sequential).
     /// Tiles are independent, so any value yields bit-identical images.
@@ -70,6 +81,7 @@ impl RenderStats {
         self.pairs_tested as f64 / self.pixels.max(1) as f64
     }
 
+    /// Average Gaussians *blended per pixel* (pairs that passed the α gate).
     pub fn per_pixel_blended(&self) -> f64 {
         self.pairs_blended as f64 / self.pixels.max(1) as f64
     }
@@ -91,6 +103,7 @@ impl RenderStats {
 /// processed by that mini-tile's pixels. `u32` leaves room for tiles up to
 /// 16 mini-tiles (16×16 px tile → 16 bits).
 pub trait MaskProvider {
+    /// Mini-tile bits for `splat` within `tile` (1 = process).
     fn mask(&mut self, tile: &Rect, splat: &Splat) -> u32;
 
     /// Number of mini-tile columns for a tile of `tile_size`.
@@ -116,6 +129,7 @@ impl MaskProvider for AllOnes {
 /// implements this by building a fresh `CatEngine` per tile, so CAT mask
 /// generation fans across the pool together with rasterization.
 pub trait MaskSource: Sync {
+    /// Hand out a fresh per-tile mask provider for one worker.
     fn tile_masks(&self) -> Box<dyn MaskProvider + '_>;
 }
 
@@ -131,7 +145,9 @@ impl MaskSource for VanillaMasks {
 
 /// Full render product: image + stats (+ optional per-Gaussian scores).
 pub struct RenderOutput {
+    /// The composited framebuffer.
     pub image: Image,
+    /// Workload counters for the frame.
     pub stats: RenderStats,
 }
 
@@ -144,8 +160,39 @@ pub fn render(scene: &Scene, cam: &Camera, opts: &RenderOptions) -> RenderOutput
 
 /// Render with a mini-tile mask provider (CAT integration point) and an
 /// optional per-Gaussian contribution accumulator (pruning integration).
-/// Always sequential: the borrowed provider and the contribution array are
-/// shared across tiles. Use [`render_with_source`] for the parallel path.
+/// `contributions` is indexed by Gaussian id and must be `scene.len()`
+/// long. Tiles run sequentially (the provider is borrowed mutably), but
+/// scores accumulate through the same per-tile partial-sum fold as the
+/// parallel path, so the result is bit-identical to [`render_scored`] at
+/// any worker count. Use [`render_with_source`] / [`render_scored`] for
+/// the tile-parallel paths.
+///
+/// # Examples
+///
+/// ```
+/// use flicker::camera::{Camera, Intrinsics};
+/// use flicker::numeric::linalg::v3;
+/// use flicker::render::raster::{render_masked, AllOnes, RenderOptions};
+/// use flicker::scene::synthetic::{generate_scaled, preset};
+///
+/// let scene = generate_scaled(&preset("truck"), 0.01);
+/// let cam = Camera::look_at(
+///     Intrinsics::from_fov(64, 64, 1.2),
+///     v3(0.0, 2.5, -12.0),
+///     v3(0.0, 0.5, 0.0),
+///     v3(0.0, 1.0, 0.0),
+/// );
+/// let mut scores = vec![0.0f32; scene.len()];
+/// let out = render_masked(
+///     &scene,
+///     &cam,
+///     &RenderOptions::default(),
+///     &mut AllOnes,
+///     Some(&mut scores),
+/// );
+/// assert_eq!(out.image.width, 64);
+/// assert!(scores.iter().any(|&s| s > 0.0), "something must contribute");
+/// ```
 pub fn render_masked(
     scene: &Scene,
     cam: &Camera,
@@ -187,11 +234,41 @@ pub fn render_with_source(
     render_lists_parallel(&splats, &lists, &grid, opts, source)
 }
 
+/// Project → tile-bin → depth-sort → render through `source`, accumulating
+/// per-Gaussian contribution scores (Σ T·α over all pixels, the pruning
+/// signal) into `scores` — indexed by Gaussian id, so it must be
+/// `scene.len()` long. Tiles (and their mask generation) fan across the
+/// worker pool exactly like [`render_with_source`]; the per-tile score
+/// partials reduce in ascending tile order, so both the image **and** the
+/// scores are bit-identical for any `opts.workers` value.
+pub fn render_scored(
+    scene: &Scene,
+    cam: &Camera,
+    opts: &RenderOptions,
+    source: &dyn MaskSource,
+    scores: &mut [f32],
+) -> RenderOutput {
+    let splats = project_scene(scene, cam);
+    let grid = TileGrid::new(cam.intr.width, cam.intr.height, opts.tile_size);
+    let mut lists = build_tile_lists(&splats, &grid, opts.strategy);
+    for list in &mut lists {
+        sort_by_depth(list, &splats);
+    }
+    render_lists_scored(&splats, &lists, &grid, opts, source, scores)
+}
+
 /// Render one tile's depth-sorted list into tile-local scratch buffers
 /// (`trans`/`color`, `tile_size²` entries, reset on entry). Returns the
 /// valid `(w, h)` region — edge tiles are cropped by the image bounds.
 /// This is the one blending loop shared by the sequential and parallel
 /// paths, which is what makes them bit-identical.
+///
+/// `contributions`, when present, is a **tile-local** partial-sum buffer
+/// aligned to `list` (entry `li` accumulates Σ T·α of splat `list[li]`
+/// over this tile's pixels). Callers fold partials into the global
+/// per-Gaussian score array via [`fold_tile_scores`] in tile order — the
+/// fixed reduce order that keeps parallel scoring bit-identical to the
+/// sequential pass.
 #[allow(clippy::too_many_arguments)]
 fn render_tile(
     splats: &[Splat],
@@ -217,7 +294,7 @@ fn render_tile(
     }
     let mut active = (w * h) as u32;
 
-    'splat_loop: for &si in list {
+    'splat_loop: for (li, &si) in list.iter().enumerate() {
         let s = &splats[si as usize];
         let mask = masks.mask(rect, s);
         if mask == 0 {
@@ -264,7 +341,7 @@ fn render_tile(
                 color[idx][1] += wgt * col[1];
                 color[idx][2] += wgt * col[2];
                 if let Some(sc) = contributions.as_deref_mut() {
-                    sc[s.id as usize] += wgt;
+                    sc[li] += wgt;
                 }
                 let t_new = t_cur * (1.0 - a);
                 trans[idx] = t_new;
@@ -292,7 +369,22 @@ fn frame_stats(splats: &[Splat], lists: &[Vec<u32>], grid: &TileGrid) -> RenderS
     }
 }
 
+/// Fold one tile's list-aligned contribution partials into the global
+/// per-Gaussian score array (indexed by Gaussian id), iterating in list
+/// order. Sequential and parallel scoring both reduce through this helper
+/// in ascending tile index, which is what makes the accumulated scores
+/// bit-identical for any worker count.
+fn fold_tile_scores(scores: &mut [f32], splats: &[Splat], list: &[u32], partial: &[f32]) {
+    for (li, &si) in list.iter().enumerate() {
+        scores[splats[si as usize].id as usize] += partial[li];
+    }
+}
+
 /// Core loop over prebuilt, depth-sorted tile lists (sequential).
+/// `contributions`, when present, is the global per-Gaussian score array
+/// (indexed by Gaussian id); each tile accumulates into a tile-local
+/// partial buffer which is folded in ascending tile order — the same
+/// reduce order as the parallel path.
 pub fn render_lists(
     splats: &[Splat],
     lists: &[Vec<u32>],
@@ -307,9 +399,15 @@ pub fn render_lists(
     // Per-tile scratch, reused across tiles (no allocation in the loop).
     let mut trans = vec![1.0f32; ts * ts];
     let mut color = vec![[0.0f32; 3]; ts * ts];
+    let scoring = contributions.is_some();
+    let mut partial: Vec<f32> = Vec::new();
 
     for (t, list) in lists.iter().enumerate() {
         let rect = grid.rect(t);
+        if scoring {
+            partial.clear();
+            partial.resize(list.len(), 0.0);
+        }
         let (w, h) = render_tile(
             splats,
             list,
@@ -319,9 +417,12 @@ pub fn render_lists(
             masks,
             &mut trans,
             &mut color,
-            contributions.as_deref_mut(),
+            if scoring { Some(partial.as_mut_slice()) } else { None },
             &mut stats,
         );
+        if let Some(sc) = contributions.as_deref_mut() {
+            fold_tile_scores(sc, splats, list, &partial);
+        }
         // Composite over background.
         let x_lo = rect.x0 as u32;
         let y_lo = rect.y0 as u32;
@@ -356,50 +457,88 @@ pub fn render_lists_parallel(
     opts: &RenderOptions,
     source: &dyn MaskSource,
 ) -> RenderOutput {
+    render_lists_core(splats, lists, grid, opts, source, None)
+}
+
+/// Tile-parallel render that also accumulates per-Gaussian contribution
+/// scores (Σ T·α, the pruning signal) into `scores` — the global score
+/// array indexed by Gaussian id. Each tile accumulates into a private
+/// list-aligned partial buffer on its worker, and partials are reduced in
+/// ascending tile order after the fan-out, so `scores` is bit-identical to
+/// the sequential [`render_lists`] pass for any worker count.
+pub fn render_lists_scored(
+    splats: &[Splat],
+    lists: &[Vec<u32>],
+    grid: &TileGrid,
+    opts: &RenderOptions,
+    source: &dyn MaskSource,
+    scores: &mut [f32],
+) -> RenderOutput {
+    render_lists_core(splats, lists, grid, opts, source, Some(scores))
+}
+
+/// Shared tile-parallel implementation behind [`render_lists_parallel`] and
+/// [`render_lists_scored`]: fan tiles across the pool, then stitch pixels,
+/// absorb stats, and fold score partials in ascending tile index.
+fn render_lists_core(
+    splats: &[Splat],
+    lists: &[Vec<u32>],
+    grid: &TileGrid,
+    opts: &RenderOptions,
+    source: &dyn MaskSource,
+    mut scores: Option<&mut [f32]>,
+) -> RenderOutput {
     let workers = pool::resolve_workers(opts.workers).min(lists.len().max(1));
     if workers <= 1 {
         let mut masks = source.tile_masks();
-        return render_lists(splats, lists, grid, opts, masks.as_mut(), None);
+        return render_lists(splats, lists, grid, opts, masks.as_mut(), scores.as_deref_mut());
     }
     let ts = grid.tile as usize;
-    let tiles: Vec<(Vec<f32>, RenderStats)> = pool::map_indexed(lists.len(), workers, |t| {
-        let mut masks = source.tile_masks();
-        let mut trans = vec![1.0f32; ts * ts];
-        let mut color = vec![[0.0f32; 3]; ts * ts];
-        let mut stats = RenderStats::default();
-        let rect = grid.rect(t);
-        let (w, h) = render_tile(
-            splats,
-            &lists[t],
-            &rect,
-            grid,
-            opts,
-            masks.as_mut(),
-            &mut trans,
-            &mut color,
-            None,
-            &mut stats,
-        );
-        // Composite over background into a w×h tile pixel block.
-        let mut pixels = vec![0.0f32; w * h * 3];
-        for py in 0..h {
-            for px in 0..w {
-                let idx = py * ts + px;
-                let tr = trans[idx];
-                let c = color[idx];
-                let o = (py * w + px) * 3;
-                pixels[o] = c[0] + tr * opts.background[0];
-                pixels[o + 1] = c[1] + tr * opts.background[1];
-                pixels[o + 2] = c[2] + tr * opts.background[2];
+    let want_scores = scores.is_some();
+    let tiles: Vec<(Vec<f32>, Vec<f32>, RenderStats)> =
+        pool::map_indexed(lists.len(), workers, |t| {
+            let mut masks = source.tile_masks();
+            let mut trans = vec![1.0f32; ts * ts];
+            let mut color = vec![[0.0f32; 3]; ts * ts];
+            let mut stats = RenderStats::default();
+            // Private per-tile score partials, aligned to this tile's list.
+            let mut partial = vec![0.0f32; if want_scores { lists[t].len() } else { 0 }];
+            let rect = grid.rect(t);
+            let (w, h) = render_tile(
+                splats,
+                &lists[t],
+                &rect,
+                grid,
+                opts,
+                masks.as_mut(),
+                &mut trans,
+                &mut color,
+                if want_scores { Some(partial.as_mut_slice()) } else { None },
+                &mut stats,
+            );
+            // Composite over background into a w×h tile pixel block.
+            let mut pixels = vec![0.0f32; w * h * 3];
+            for py in 0..h {
+                for px in 0..w {
+                    let idx = py * ts + px;
+                    let tr = trans[idx];
+                    let c = color[idx];
+                    let o = (py * w + px) * 3;
+                    pixels[o] = c[0] + tr * opts.background[0];
+                    pixels[o + 1] = c[1] + tr * opts.background[1];
+                    pixels[o + 2] = c[2] + tr * opts.background[2];
+                }
             }
-        }
-        (pixels, stats)
-    });
+            (pixels, partial, stats)
+        });
 
     let mut img = Image::new(grid.width, grid.height);
     let mut stats = frame_stats(splats, lists, grid);
-    for (t, (pixels, tile_stats)) in tiles.iter().enumerate() {
+    for (t, (pixels, partial, tile_stats)) in tiles.iter().enumerate() {
         stats.absorb(tile_stats);
+        if let Some(sc) = scores.as_deref_mut() {
+            fold_tile_scores(sc, splats, &lists[t], partial);
+        }
         let rect = grid.rect(t);
         let x_lo = rect.x0 as u32;
         let y_lo = rect.y0 as u32;
@@ -588,6 +727,46 @@ mod tests {
                 par.stats.tiles_early_terminated
             );
         }
+    }
+
+    #[test]
+    fn scored_parallel_matches_sequential_bitwise() {
+        let scene = generate_scaled(&preset("truck"), 0.01);
+        let c = cam(96);
+        // Sequential reference: render_masked folds the same per-tile
+        // partial sums in tile order.
+        let mut seq = vec![0.0f32; scene.len()];
+        let opts = RenderOptions::default();
+        let seq_out = render_masked(&scene, &c, &opts, &mut AllOnes, Some(&mut seq));
+        assert!(seq.iter().any(|&s| s > 0.0), "scene must contribute");
+        for workers in [2, 4, 0] {
+            let mut par = vec![0.0f32; scene.len()];
+            let popts = RenderOptions {
+                workers,
+                ..RenderOptions::default()
+            };
+            let par_out = render_scored(&scene, &c, &popts, &VanillaMasks, &mut par);
+            let seq_bits: Vec<u32> = seq.iter().map(|s| s.to_bits()).collect();
+            let par_bits: Vec<u32> = par.iter().map(|s| s.to_bits()).collect();
+            assert_eq!(seq_bits, par_bits, "workers={workers}");
+            assert_eq!(seq_out.image.data, par_out.image.data, "workers={workers}");
+            assert_eq!(seq_out.stats.pairs_blended, par_out.stats.pairs_blended);
+        }
+    }
+
+    #[test]
+    fn scoring_does_not_change_the_image() {
+        let scene = generate_scaled(&preset("garden"), 0.01);
+        let c = cam(96);
+        let opts = RenderOptions {
+            workers: 0,
+            ..RenderOptions::default()
+        };
+        let plain = render(&scene, &c, &opts);
+        let mut scores = vec![0.0f32; scene.len()];
+        let scored = render_scored(&scene, &c, &opts, &VanillaMasks, &mut scores);
+        assert_eq!(plain.image.data, scored.image.data);
+        assert_eq!(plain.stats.pairs_tested, scored.stats.pairs_tested);
     }
 
     #[test]

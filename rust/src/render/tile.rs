@@ -16,13 +16,18 @@ use crate::numeric::linalg::{v2, Vec2};
 /// Pixel rectangle [x0, x1) × [y0, y1).
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub struct Rect {
+    /// Left edge (inclusive).
     pub x0: f32,
+    /// Top edge (inclusive).
     pub y0: f32,
+    /// Right edge (exclusive).
     pub x1: f32,
+    /// Bottom edge (exclusive).
     pub y1: f32,
 }
 
 impl Rect {
+    /// Rect of tile `(tx, ty)` in a grid of `size`-pixel tiles.
     pub fn tile(tx: u32, ty: u32, size: u32) -> Rect {
         Rect {
             x0: (tx * size) as f32,
@@ -32,10 +37,12 @@ impl Rect {
         }
     }
 
+    /// Center point.
     pub fn center(&self) -> Vec2 {
         v2(0.5 * (self.x0 + self.x1), 0.5 * (self.y0 + self.y1))
     }
 
+    /// Half width/height.
     pub fn half_extent(&self) -> Vec2 {
         v2(0.5 * (self.x1 - self.x0), 0.5 * (self.y1 - self.y0))
     }
@@ -44,14 +51,20 @@ impl Rect {
 /// Grid geometry for an image tiled at `tile` pixels.
 #[derive(Clone, Copy, Debug)]
 pub struct TileGrid {
+    /// Image width (pixels).
     pub width: u32,
+    /// Image height (pixels).
     pub height: u32,
+    /// Tile edge (pixels).
     pub tile: u32,
+    /// Number of tile columns.
     pub tiles_x: u32,
+    /// Number of tile rows.
     pub tiles_y: u32,
 }
 
 impl TileGrid {
+    /// Grid covering a `width`×`height` image with `tile`-pixel tiles.
     pub fn new(width: u32, height: u32, tile: u32) -> TileGrid {
         TileGrid {
             width,
@@ -62,10 +75,12 @@ impl TileGrid {
         }
     }
 
+    /// Total tile count.
     pub fn num_tiles(&self) -> usize {
         (self.tiles_x * self.tiles_y) as usize
     }
 
+    /// Pixel rect of tile index `t` (row-major).
     pub fn rect(&self, t: usize) -> Rect {
         let tx = t as u32 % self.tiles_x;
         let ty = t as u32 / self.tiles_x;
@@ -168,14 +183,18 @@ pub fn min_quad_on_rect(s: &Splat, rect: &Rect) -> f32 {
     best
 }
 
-/// Build per-tile splat index lists with the chosen strategy. Splat order is
-/// preserved (callers depth-sort afterwards). Returns `lists[tile] -> Vec<splat idx>`.
+/// Tile↔splat intersection strategy.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Strategy {
+    /// Vanilla 3DGS: axis-aligned 3σ box vs tile rect.
     Aabb,
+    /// GSCore-style oriented bounding box (separating-axis test).
     Obb,
 }
 
+/// Build per-tile splat index lists with the chosen strategy. Splat order
+/// is preserved (callers depth-sort afterwards). Returns
+/// `lists[tile] -> Vec<splat idx>`.
 pub fn build_tile_lists(splats: &[Splat], grid: &TileGrid, strategy: Strategy) -> Vec<Vec<u32>> {
     let mut lists = vec![Vec::new(); grid.num_tiles()];
     for (si, s) in splats.iter().enumerate() {

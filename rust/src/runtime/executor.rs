@@ -17,19 +17,25 @@ use crate::util::error::Result;
 /// Per-tile PJRT render statistics.
 #[derive(Clone, Copy, Debug, Default)]
 pub struct ExecStats {
+    /// Tiles rendered.
     pub tiles: usize,
+    /// Artifact invocations (tiles × list chunks).
     pub chunks: usize,
+    /// Splats submitted across all chunks (after padding).
     pub splats_submitted: usize,
+    /// Splats that passed the artifact's CAT filter.
     pub splats_passed_cat: usize,
 }
 
 /// Executes tile renders through the `render_tile` artifact.
 pub struct TileExecutor<'rt> {
     rt: &'rt Runtime,
+    /// Counters accumulated over this executor's lifetime.
     pub stats: ExecStats,
 }
 
 impl<'rt> TileExecutor<'rt> {
+    /// New executor bound to a loaded runtime.
     pub fn new(rt: &'rt Runtime) -> Self {
         TileExecutor {
             rt,

@@ -29,12 +29,14 @@ pub struct Manifest {
     pub n_gauss: usize,
     /// PR batch size.
     pub n_pr: usize,
+    /// Tile edge the artifacts are compiled for (pixels).
     pub tile: usize,
     /// name -> artifact filename.
     pub files: HashMap<String, String>,
 }
 
 impl Manifest {
+    /// Parse `manifest.json` from `dir`.
     pub fn load(dir: &Path) -> Result<Manifest> {
         let path = dir.join("manifest.json");
         let text = std::fs::read_to_string(&path)

@@ -16,6 +16,7 @@ use std::path::{Path, PathBuf};
 /// A compiled PJRT runtime with all artifacts loaded.
 pub struct Runtime {
     client: xla::PjRtClient,
+    /// The parsed artifact manifest.
     pub manifest: Manifest,
     executables: HashMap<String, xla::PjRtLoadedExecutable>,
     dir: PathBuf,
@@ -47,14 +48,17 @@ impl Runtime {
         })
     }
 
+    /// PJRT platform name (e.g. "cpu").
     pub fn platform(&self) -> String {
         self.client.platform_name()
     }
 
+    /// Directory the artifacts were loaded from.
     pub fn artifact_dir(&self) -> &Path {
         &self.dir
     }
 
+    /// Is artifact `name` compiled and ready?
     pub fn has(&self, name: &str) -> bool {
         self.executables.contains_key(name)
     }

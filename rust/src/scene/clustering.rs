@@ -14,24 +14,30 @@ use std::collections::HashMap;
 /// One cluster ("big Gaussian"): bounding sphere + member indices.
 #[derive(Clone, Debug)]
 pub struct Cluster {
+    /// Bounding sphere center.
     pub center: Vec3,
+    /// Bounding sphere radius.
     pub radius: f32,
+    /// Member Gaussian indices.
     pub members: Vec<u32>,
 }
 
 /// The clustered scene index.
 #[derive(Clone, Debug, Default)]
 pub struct Clustering {
+    /// All clusters.
     pub clusters: Vec<Cluster>,
     /// Voxel edge used.
     pub cell: f32,
 }
 
 impl Clustering {
+    /// Number of clusters.
     pub fn num_clusters(&self) -> usize {
         self.clusters.len()
     }
 
+    /// Mean members per cluster.
     pub fn mean_size(&self) -> f64 {
         if self.clusters.is_empty() {
             return 0.0;

@@ -18,15 +18,18 @@ pub mod params {
     pub const COLOR_F32S: usize = 45;
     /// Opacity + DC color + misc fetched with color.
     pub const MISC_F32S: usize = 4;
-    /// Bytes per Gaussian for the two fetch phases.
+    /// Bytes per Gaussian for the geometry fetch phase.
     pub const GEOM_BYTES: usize = GEOM_F32S * 4;
+    /// Bytes per Gaussian for the color fetch phase.
     pub const COLOR_BYTES: usize = (COLOR_F32S + MISC_F32S) * 4;
 }
 
 /// SoA container for a Gaussian scene.
 #[derive(Clone, Debug, Default)]
 pub struct Scene {
+    /// Gaussian centers in world space.
     pub pos: Vec<Vec3>,
+    /// Orientation quaternions.
     pub rot: Vec<Quat>,
     /// Per-axis standard deviations (σ), not variances.
     pub scale: Vec<Vec3>,
@@ -41,6 +44,7 @@ pub struct Scene {
 }
 
 impl Scene {
+    /// Empty scene with room for `n` Gaussians.
     pub fn with_capacity(n: usize, name: &str) -> Scene {
         Scene {
             pos: Vec::with_capacity(n),
@@ -53,10 +57,12 @@ impl Scene {
         }
     }
 
+    /// Number of Gaussians.
     pub fn len(&self) -> usize {
         self.pos.len()
     }
 
+    /// Is the scene empty?
     pub fn is_empty(&self) -> bool {
         self.pos.is_empty()
     }

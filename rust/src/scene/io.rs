@@ -130,10 +130,12 @@ pub fn from_bytes(bytes: &[u8]) -> Result<Scene> {
     Ok(scene)
 }
 
+/// Write a scene to a `.gsz` file.
 pub fn save(scene: &Scene, path: &Path) -> Result<()> {
     Ok(std::fs::write(path, to_bytes(scene))?)
 }
 
+/// Read a scene from a `.gsz` file.
 pub fn load(path: &Path) -> Result<Scene> {
     from_bytes(&std::fs::read(path)?)
 }

@@ -6,10 +6,19 @@
 //! of training views — and approximate the fine-tune with an opacity
 //! renormalization that compensates lost transmittance (the part of
 //! fine-tuning that matters for downstream workload shape).
+//!
+//! **Determinism contract.** The scoring pass ([`score_views`]) fans
+//! scoring views across the worker pool (and each view's tiles across the
+//! remaining budget, the same split as `coordinator::render_orbit`). Every
+//! view accumulates into a private score buffer built from per-tile partial
+//! sums reduced in tile order; per-view buffers then reduce in view order.
+//! The accumulated scores — and therefore the pruning decision — are
+//! bit-identical for any worker count.
 
 use super::gaussian::Scene;
 use crate::camera::Camera;
-use crate::render::raster::{render_masked, AllOnes, RenderOptions};
+use crate::render::raster::{render_scored, RenderOptions, RenderStats, VanillaMasks};
+use crate::util::pool;
 
 /// Pruning configuration.
 #[derive(Clone, Copy, Debug)]
@@ -19,6 +28,10 @@ pub struct PruneConfig {
     pub prune_fraction: f32,
     /// Opacity boost factor applied as the fine-tune stand-in.
     pub finetune_opacity_gain: f32,
+    /// Worker threads for the contribution-scoring pass (0 = auto, 1 =
+    /// sequential). The budget splits across scoring views first and each
+    /// view's tile fan-out second; scores are bit-identical for any value.
+    pub workers: usize,
 }
 
 impl Default for PruneConfig {
@@ -26,6 +39,7 @@ impl Default for PruneConfig {
         PruneConfig {
             prune_fraction: 0.4,
             finetune_opacity_gain: 1.06,
+            workers: 1,
         }
     }
 }
@@ -33,28 +47,105 @@ impl Default for PruneConfig {
 /// Result of a pruning pass.
 #[derive(Clone, Debug)]
 pub struct PruneReport {
+    /// Gaussian count before pruning.
     pub before: usize,
+    /// Gaussian count after pruning.
     pub after: usize,
     /// Contribution score threshold used.
     pub threshold: f32,
+    /// Number of scoring views accumulated.
+    pub views: usize,
+    /// Rasterizer workload counters absorbed across all scoring views.
+    pub stats: RenderStats,
+}
+
+/// Accumulate per-Gaussian contribution scores (Σ T·α) over `views`,
+/// fanning the scoring work across `workers` threads (0 = auto, 1 =
+/// sequential). Returns the score array (indexed by Gaussian id) and the
+/// [`RenderStats`] absorbed across all scoring views.
+///
+/// The worker budget splits like `coordinator::render_orbit`: up to one
+/// thread per view, with each view spending the remainder on its tile
+/// fan-out. Scores are bit-identical for any worker count — per-tile
+/// partial sums reduce in tile order within a view, and per-view sums
+/// reduce in view order.
+pub fn score_views(
+    scene: &Scene,
+    views: &[Camera],
+    opts: &RenderOptions,
+    workers: usize,
+) -> (Vec<f32>, RenderStats) {
+    assert!(!views.is_empty(), "need at least one scoring view");
+    let total_workers = pool::resolve_workers(workers);
+    let view_workers = total_workers.min(views.len());
+    let tile_workers = (total_workers / view_workers.max(1)).max(1);
+    let per_view: Vec<(Vec<f32>, RenderStats)> =
+        pool::map_indexed(views.len(), view_workers, |v| {
+            let mut scores = vec![0.0f32; scene.len()];
+            let vopts = RenderOptions {
+                workers: tile_workers,
+                ..*opts
+            };
+            let out = render_scored(scene, &views[v], &vopts, &VanillaMasks, &mut scores);
+            (scores, out.stats)
+        });
+    // Fixed (view-index) reduce order on top of the rasterizer's fixed
+    // (tile-index) order — the whole scoring pass is order-deterministic.
+    let mut scores = vec![0.0f32; scene.len()];
+    let mut stats = RenderStats::default();
+    for (view_scores, view_stats) in &per_view {
+        for (acc, s) in scores.iter_mut().zip(view_scores) {
+            *acc += *s;
+        }
+        stats.absorb(view_stats);
+    }
+    (scores, stats)
+}
+
+/// Ascending contribution order (lowest score first — the prune front).
+///
+/// Sorts with [`f32::total_cmp`], so degenerate scores can never panic the
+/// pass: a NaN score (e.g. from a Gaussian with non-finite parameters)
+/// orders after +∞ and is treated as highest contribution — kept, never
+/// silently pruned.
+fn contribution_order(scores: &[f32]) -> Vec<u32> {
+    let mut order: Vec<u32> = (0..scores.len() as u32).collect();
+    order.sort_by(|&a, &b| scores[a as usize].total_cmp(&scores[b as usize]));
+    order
 }
 
 /// Accumulate contribution scores over `views` and prune the lowest
 /// `prune_fraction`. Returns the report; `scene` is modified in place.
+/// Scoring fans across `cfg.workers` threads with a bit-deterministic
+/// reduction, so the pruning decision is identical for any worker count.
+///
+/// # Examples
+///
+/// ```
+/// use flicker::camera::{orbit_path, Intrinsics};
+/// use flicker::numeric::linalg::v3;
+/// use flicker::scene::pruning::{prune, PruneConfig};
+/// use flicker::scene::synthetic::{generate_scaled, preset};
+///
+/// let mut scene = generate_scaled(&preset("truck"), 0.01);
+/// let views = orbit_path(
+///     Intrinsics::from_fov(64, 64, 1.2),
+///     v3(0.0, 0.5, 0.0),
+///     12.0,
+///     3.0,
+///     2,
+/// );
+/// let before = scene.len();
+/// let report = prune(&mut scene, &views, &PruneConfig::default());
+/// assert_eq!(report.before, before);
+/// assert_eq!(report.after, scene.len());
+/// assert!(scene.len() < before, "the low-contribution tail is removed");
+/// ```
 pub fn prune(scene: &mut Scene, views: &[Camera], cfg: &PruneConfig) -> PruneReport {
-    assert!(!views.is_empty(), "need at least one scoring view");
-    let mut scores = vec![0.0f32; scene.len()];
     let opts = RenderOptions::default();
-    for cam in views {
-        render_masked(scene, cam, &opts, &mut AllOnes, Some(&mut scores));
-    }
+    let (scores, stats) = score_views(scene, views, &opts, cfg.workers);
 
-    let mut order: Vec<u32> = (0..scene.len() as u32).collect();
-    order.sort_by(|&a, &b| {
-        scores[a as usize]
-            .partial_cmp(&scores[b as usize])
-            .unwrap()
-    });
+    let order = contribution_order(&scores);
     let cut = ((scene.len() as f32) * cfg.prune_fraction) as usize;
     let threshold = if cut > 0 && cut < order.len() {
         scores[order[cut] as usize]
@@ -78,6 +169,8 @@ pub fn prune(scene: &mut Scene, views: &[Camera], cfg: &PruneConfig) -> PruneRep
         before,
         after: scene.len(),
         threshold,
+        views: views.len(),
+        stats,
     }
 }
 
@@ -85,7 +178,7 @@ pub fn prune(scene: &mut Scene, views: &[Camera], cfg: &PruneConfig) -> PruneRep
 mod tests {
     use super::*;
     use crate::camera::{orbit_path, Intrinsics};
-    use crate::numeric::linalg::v3;
+    use crate::numeric::linalg::{v3, Quat};
     use crate::render::metrics::psnr;
     use crate::render::raster::render;
     use crate::scene::synthetic::{generate_scaled, preset};
@@ -148,8 +241,85 @@ mod tests {
         let cfg = PruneConfig {
             prune_fraction: 0.0,
             finetune_opacity_gain: 1.0,
+            workers: 1,
         };
         prune(&mut scene, &views(), &cfg);
         assert_eq!(scene.len(), n);
+    }
+
+    #[test]
+    fn prune_is_deterministic_across_workers() {
+        let base = generate_scaled(&preset("truck"), 0.02);
+        let mut seq = base.clone();
+        let mut par = base.clone();
+        let rep_seq = prune(&mut seq, &views(), &PruneConfig::default());
+        let rep_par = prune(
+            &mut par,
+            &views(),
+            &PruneConfig {
+                workers: 4,
+                ..Default::default()
+            },
+        );
+        assert_eq!(rep_seq.after, rep_par.after);
+        assert_eq!(rep_seq.threshold.to_bits(), rep_par.threshold.to_bits());
+        assert_eq!(seq.len(), par.len());
+        // The exact same Gaussians must survive.
+        for (a, b) in seq.pos.iter().zip(&par.pos) {
+            assert_eq!(a.x.to_bits(), b.x.to_bits());
+            assert_eq!(a.y.to_bits(), b.y.to_bits());
+            assert_eq!(a.z.to_bits(), b.z.to_bits());
+        }
+    }
+
+    #[test]
+    fn scoring_stats_are_surfaced() {
+        let mut scene = generate_scaled(&preset("truck"), 0.02);
+        let rep = prune(&mut scene, &views(), &PruneConfig::default());
+        assert_eq!(rep.views, 4);
+        // Four 96×96 scoring views absorbed via RenderStats::absorb.
+        assert_eq!(rep.stats.pixels, 4 * 96 * 96);
+        assert!(rep.stats.pairs_blended > 0);
+        assert!(rep.stats.splats > 0);
+    }
+
+    #[test]
+    fn nan_scores_do_not_panic_the_sort() {
+        // Regression: the score sort used partial_cmp().unwrap(), which
+        // panics on NaN. total_cmp gives NaN a fixed position instead
+        // (after +inf — treated as highest contribution).
+        let order = contribution_order(&[1.0, f32::NAN, 0.5, 0.0]);
+        assert_eq!(order, vec![3, 2, 0, 1]);
+    }
+
+    #[test]
+    fn degenerate_gaussians_do_not_panic_prune() {
+        // A NaN-opacity Gaussian and a zero-opacity Gaussian must flow
+        // through scoring + sorting without panicking. `Scene::push`
+        // debug-asserts opacity ∈ [0, 1], so the NaN is injected directly
+        // into the SoA field, the way a corrupt .gsz load would surface it.
+        let mut scene = generate_scaled(&preset("truck"), 0.01);
+        let nan_idx = scene.push(
+            v3(0.0, 0.5, 0.0),
+            Quat::IDENTITY,
+            v3(0.5, 0.5, 0.5),
+            0.9,
+            [1.0, 1.0, 1.0],
+            [[0.0; 3]; 3],
+        );
+        scene.opacity[nan_idx] = f32::NAN;
+        scene.push(
+            v3(0.5, 0.5, 0.0),
+            Quat::IDENTITY,
+            v3(0.5, 0.5, 0.5),
+            0.0,
+            [1.0, 1.0, 1.0],
+            [[0.0; 3]; 3],
+        );
+        let n0 = scene.len();
+        let rep = prune(&mut scene, &views(), &PruneConfig::default());
+        assert_eq!(rep.before, n0);
+        assert!(rep.after < n0, "pruning still removes the low tail");
+        assert_eq!(scene.len(), rep.after);
     }
 }

@@ -29,7 +29,9 @@ pub enum SceneKind {
 /// Generation parameters for one synthetic scene.
 #[derive(Clone, Debug)]
 pub struct ScenePreset {
+    /// Preset name ("garden", "truck", …).
     pub name: &'static str,
+    /// Scene archetype driving the generator.
     pub kind: SceneKind,
     /// Gaussian count at "30K-iteration" quality (pre-pruning).
     pub count: usize,
@@ -37,6 +39,7 @@ pub struct ScenePreset {
     pub spiky_frac: f32,
     /// Log-normal μ of the base scale (world units).
     pub scale_mu: f32,
+    /// Generation seed (fixed per preset for reproducibility).
     pub seed: u64,
 }
 

@@ -57,19 +57,27 @@ fn prtu_scale(p: Precision) -> f64 {
 /// Area breakdown for a config, in mm².
 #[derive(Clone, Debug, Default)]
 pub struct AreaReport {
+    /// Volume rendering units.
     pub vru_mm2: f64,
+    /// Feature FIFOs.
     pub fifo_mm2: f64,
+    /// Contribution-aware test units.
     pub ctu_mm2: f64,
+    /// Sorting units.
     pub sorter_mm2: f64,
+    /// Preprocessing cores.
     pub preprocess_mm2: f64,
+    /// On-chip buffers.
     pub buffers_mm2: f64,
 }
 
 impl AreaReport {
+    /// Area of the rendering cores (VRUs + FIFOs + buffers).
     pub fn rendering_core_mm2(&self) -> f64 {
         self.vru_mm2 + self.fifo_mm2 + self.buffers_mm2
     }
 
+    /// Total accelerator area.
     pub fn total_mm2(&self) -> f64 {
         self.vru_mm2 + self.fifo_mm2 + self.ctu_mm2 + self.sorter_mm2 + self.preprocess_mm2
             + self.buffers_mm2

@@ -28,6 +28,7 @@ pub struct DramTraffic {
 }
 
 impl DramTraffic {
+    /// Total bytes moved per frame.
     pub fn total(&self) -> u64 {
         self.cull_bytes + self.geom_bytes + self.color_bytes + self.list_bytes
             + self.framebuffer_bytes
@@ -37,7 +38,9 @@ impl DramTraffic {
 /// Cluster statistics the traffic model needs (from `scene::clustering`).
 #[derive(Clone, Copy, Debug)]
 pub struct ClusterInfo {
+    /// Total clusters in the scene.
     pub num_clusters: usize,
+    /// Clusters whose sphere intersects the frustum.
     pub visible_clusters: usize,
     /// Gaussians inside visible clusters.
     pub gaussians_in_visible: usize,

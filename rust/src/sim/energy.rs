@@ -14,11 +14,17 @@ use crate::cat::Precision;
 /// Per-op energies in picojoules (28 nm).
 #[derive(Clone, Copy, Debug)]
 pub struct EnergyParams {
+    /// FP32 multiply.
     pub fp32_mul_pj: f64,
+    /// FP32 add.
     pub fp32_add_pj: f64,
+    /// FP16 multiply.
     pub fp16_mul_pj: f64,
+    /// FP16 add.
     pub fp16_add_pj: f64,
+    /// FP8 multiply.
     pub fp8_mul_pj: f64,
+    /// FP8 add.
     pub fp8_add_pj: f64,
     /// On-chip SRAM access per 32-bit word.
     pub sram_word_pj: f64,
@@ -53,15 +59,22 @@ impl Default for EnergyParams {
 /// Energy breakdown for one frame, in microjoules.
 #[derive(Clone, Copy, Debug, Default)]
 pub struct EnergyReport {
+    /// Blending (VRU) energy.
     pub vru_uj: f64,
+    /// Contribution-test (CTU) energy.
     pub ctu_uj: f64,
+    /// Feature-FIFO energy.
     pub fifo_uj: f64,
+    /// Preprocessing-core energy.
     pub preprocess_uj: f64,
+    /// DRAM traffic energy.
     pub dram_uj: f64,
+    /// Static/system-floor energy.
     pub static_uj: f64,
 }
 
 impl EnergyReport {
+    /// Total frame energy.
     pub fn total_uj(&self) -> f64 {
         self.vru_uj + self.ctu_uj + self.fifo_uj + self.preprocess_uj + self.dram_uj
             + self.static_uj

@@ -11,6 +11,7 @@ use super::workload::FrameWorkload;
 /// GPU device parameters.
 #[derive(Clone, Debug)]
 pub struct GpuParams {
+    /// Device name ("Orin NX"-class, desktop-class, …).
     pub name: String,
     /// Peak FP32 throughput (GFLOP/s).
     pub peak_gflops: f64,
@@ -56,13 +57,16 @@ impl GpuParams {
 /// Per-frame GPU estimate.
 #[derive(Clone, Copy, Debug)]
 pub struct GpuEstimate {
+    /// Estimated frame time (ms).
     pub frame_ms: f64,
+    /// Estimated frames per second.
     pub fps: f64,
     /// Issue-level ("CU") utilization: fraction of cycles a warp was
     /// resident and issuing (includes divergent-lane waste).
     pub cu_util: f64,
     /// Achieved-FP32 fraction of peak: only lanes doing useful blends.
     pub fp_util: f64,
+    /// Estimated energy per frame (mJ).
     pub energy_mj_per_frame: f64,
 }
 

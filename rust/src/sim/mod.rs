@@ -39,6 +39,7 @@ pub enum SubtileTest {
 /// Hardware configuration (paper Table II(a) plus ablation knobs).
 #[derive(Clone, Debug)]
 pub struct HwConfig {
+    /// Preset name ("flicker32", "gscore64", …).
     pub name: String,
     /// Core clock (paper-class edge accelerator: 1 GHz at 28 nm).
     pub freq_ghz: f64,
@@ -67,6 +68,7 @@ pub struct HwConfig {
 }
 
 impl HwConfig {
+    /// Total VRU count across all rendering cores.
     pub fn total_vrus(&self) -> usize {
         self.rendering_cores * self.channels_per_core * self.vrus_per_channel
     }
@@ -137,6 +139,7 @@ impl HwConfig {
         }
     }
 
+    /// Resolve a hardware preset by CLI/config name.
     pub fn by_name(name: &str) -> Option<HwConfig> {
         Some(match name {
             "flicker32" | "flicker" => Self::flicker32(),

@@ -20,6 +20,7 @@ use super::workload::SubtileStream;
 /// Per-complex cycle statistics.
 #[derive(Clone, Copy, Debug, Default)]
 pub struct PipeStats {
+    /// Total cycles to drain the complex.
     pub cycles: u64,
     /// Cycles the CTU (or dispatcher) was processing a job.
     pub ctu_busy: u64,
@@ -41,6 +42,8 @@ impl PipeStats {
         self.ctu_stalled as f64 / (self.ctu_busy + self.ctu_stalled).max(1) as f64
     }
 
+    /// Merge a parallel complex: cycles take the max (complexes run
+    /// side-by-side), busy/stall counters sum.
     pub fn merge_max_cycles(&mut self, o: &PipeStats) {
         self.cycles = self.cycles.max(o.cycles);
         self.ctu_busy += o.ctu_busy;

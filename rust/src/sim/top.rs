@@ -18,6 +18,7 @@ use crate::scene::gaussian::Scene;
 /// Full per-frame simulation report.
 #[derive(Clone, Debug)]
 pub struct SimReport {
+    /// Hardware preset name.
     pub config: String,
     /// Rendering-stage cycles (the Fig. 8/9 quantity).
     pub render_cycles: u64,
@@ -25,11 +26,17 @@ pub struct SimReport {
     pub preprocess_cycles: u64,
     /// Frame-level cycles after overlap.
     pub frame_cycles: u64,
+    /// Frame time at the configured clock (ms).
     pub frame_ms: f64,
+    /// Frames per second.
     pub fps: f64,
+    /// Pipeline busy/stall counters.
     pub pipe: PipeStats,
+    /// DRAM traffic breakdown.
     pub traffic: DramTraffic,
+    /// Energy breakdown.
     pub energy: EnergyReport,
+    /// The workload the simulation replayed.
     pub workload: FrameWorkload,
 }
 

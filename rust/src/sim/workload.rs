@@ -34,13 +34,16 @@ pub struct GaussianJob {
 /// before all its pixels saturate (jobs after that are popped & discarded).
 #[derive(Clone, Debug, Default)]
 pub struct SubtileStream {
+    /// The depth-ordered jobs for this complex.
     pub jobs: Vec<GaussianJob>,
+    /// Saturation ordinal per mini-tile.
     pub sat: [u32; 4],
 }
 
 /// Workload for one 16×16 tile: one stream per sub-tile complex.
 #[derive(Clone, Debug, Default)]
 pub struct TileWork {
+    /// Streams for the four 8×8 sub-tile complexes.
     pub subtiles: [SubtileStream; 4],
 }
 
@@ -48,6 +51,7 @@ pub struct TileWork {
 /// and Fig. 4 need.
 #[derive(Clone, Debug, Default)]
 pub struct FrameWorkload {
+    /// Per-tile job streams.
     pub tiles: Vec<TileWork>,
     /// Gaussians in the scene (DRAM: metadata universe).
     pub scene_gaussians: usize,
@@ -65,10 +69,13 @@ pub struct FrameWorkload {
     pub ctu_prs: u64,
     /// Dense/sparse split of CTU jobs.
     pub dense_jobs: u64,
+    /// Sparse-sampled CTU jobs.
     pub sparse_jobs: u64,
     /// Per-pixel blends actually performed (energy model).
     pub blended_pairs: u64,
+    /// Frame width (pixels).
     pub width: u32,
+    /// Frame height (pixels).
     pub height: u32,
 }
 

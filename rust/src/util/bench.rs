@@ -11,13 +11,16 @@ use std::time::Instant;
 /// One timed measurement series.
 #[derive(Clone, Debug)]
 pub struct BenchResult {
+    /// Measurement name (one row in the output table).
     pub name: String,
     /// seconds per iteration
     pub samples: Vec<f64>,
+    /// Summary statistics over `samples`.
     pub summary: Summary,
 }
 
 impl BenchResult {
+    /// Items per second at the median iteration time.
     pub fn throughput(&self, items_per_iter: f64) -> f64 {
         items_per_iter / self.summary.p50
     }
@@ -25,7 +28,9 @@ impl BenchResult {
 
 /// Runs closures with warmup + sampling.
 pub struct Bencher {
+    /// Untimed iterations before sampling starts.
     pub warmup_iters: usize,
+    /// Timed iterations per measurement.
     pub sample_iters: usize,
     results: Vec<BenchResult>,
     /// Figure/table id, e.g. "fig9"; used for the JSON sidecar filename.
@@ -33,6 +38,7 @@ pub struct Bencher {
 }
 
 impl Bencher {
+    /// New harness for the figure/table `id` (sidecar filename).
     pub fn new(id: &str) -> Self {
         // Keep runs short: single-core machine, many bench targets.
         let quick = std::env::var("FLICKER_BENCH_QUICK").is_ok();
@@ -75,6 +81,7 @@ impl Bencher {
         });
     }
 
+    /// All measurements recorded so far, in order.
     pub fn results(&self) -> &[BenchResult] {
         &self.results
     }

@@ -21,7 +21,10 @@ pub struct Args {
 
 /// CLI parse/validation error.
 #[derive(Debug)]
-pub struct CliError(pub String);
+pub struct CliError(
+    /// Human-readable message.
+    pub String,
+);
 
 impl fmt::Display for CliError {
     fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
@@ -64,22 +67,27 @@ impl Args {
         out
     }
 
+    /// Parse the process arguments (skipping argv[0]).
     pub fn from_env(known_flags: &[&str]) -> Args {
         Args::parse(std::env::args().skip(1), known_flags)
     }
 
+    /// Was the bare `--name` flag given?
     pub fn flag(&self, name: &str) -> bool {
         self.flags.iter().any(|f| f == name)
     }
 
+    /// Raw value of `--key`, if present.
     pub fn get(&self, key: &str) -> Option<&str> {
         self.opts.get(key).map(|s| s.as_str())
     }
 
+    /// String value of `--key`, or `default`.
     pub fn str_or(&self, key: &str, default: &str) -> String {
         self.get(key).unwrap_or(default).to_string()
     }
 
+    /// Integer value of `--key`, or `default`; errors on a non-integer.
     pub fn u64_or(&self, key: &str, default: u64) -> Result<u64, CliError> {
         match self.get(key) {
             None => Ok(default),
@@ -89,10 +97,12 @@ impl Args {
         }
     }
 
+    /// Like [`Args::u64_or`], narrowed to `usize`.
     pub fn usize_or(&self, key: &str, default: usize) -> Result<usize, CliError> {
         self.u64_or(key, default as u64).map(|x| x as usize)
     }
 
+    /// Float value of `--key`, or `default`; errors on a non-number.
     pub fn f64_or(&self, key: &str, default: f64) -> Result<f64, CliError> {
         match self.get(key) {
             None => Ok(default),

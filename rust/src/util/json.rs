@@ -12,10 +12,15 @@ use std::fmt;
 /// A parsed JSON value.
 #[derive(Clone, Debug, PartialEq)]
 pub enum Json {
+    /// `null`.
     Null,
+    /// `true` / `false`.
     Bool(bool),
+    /// Any JSON number (always stored as f64).
     Num(f64),
+    /// A string.
     Str(String),
+    /// An array.
     Arr(Vec<Json>),
     /// Objects keep insertion order via a parallel key list.
     Obj(JsonObj),
@@ -29,10 +34,12 @@ pub struct JsonObj {
 }
 
 impl JsonObj {
+    /// Empty object.
     pub fn new() -> Self {
         Self::default()
     }
 
+    /// Insert (or overwrite) `key`; first insertion fixes its print order.
     pub fn insert(&mut self, key: impl Into<String>, val: Json) {
         let key = key.into();
         if !self.map.contains_key(&key) {
@@ -41,28 +48,34 @@ impl JsonObj {
         self.map.insert(key, val);
     }
 
+    /// Value under `key`, if present.
     pub fn get(&self, key: &str) -> Option<&Json> {
         self.map.get(key)
     }
 
+    /// Number of entries.
     pub fn len(&self) -> usize {
         self.keys.len()
     }
 
+    /// Is the object empty?
     pub fn is_empty(&self) -> bool {
         self.keys.is_empty()
     }
 
+    /// Iterate entries in insertion order.
     pub fn iter(&self) -> impl Iterator<Item = (&String, &Json)> {
         self.keys.iter().map(move |k| (k, &self.map[k]))
     }
 }
 
 impl Json {
+    /// Empty object builder (wrap with [`Json::Obj`] when done).
     pub fn obj() -> JsonObj {
         JsonObj::new()
     }
 
+    /// Numeric value, if this is a number.
     pub fn as_f64(&self) -> Option<f64> {
         match self {
             Json::Num(x) => Some(*x),
@@ -70,10 +83,12 @@ impl Json {
         }
     }
 
+    /// Numeric value truncated to u64, if this is a number.
     pub fn as_u64(&self) -> Option<u64> {
         self.as_f64().map(|x| x as u64)
     }
 
+    /// String slice, if this is a string.
     pub fn as_str(&self) -> Option<&str> {
         match self {
             Json::Str(s) => Some(s),
@@ -81,6 +96,7 @@ impl Json {
         }
     }
 
+    /// Boolean value, if this is a bool.
     pub fn as_bool(&self) -> Option<bool> {
         match self {
             Json::Bool(b) => Some(*b),
@@ -88,6 +104,7 @@ impl Json {
         }
     }
 
+    /// Array slice, if this is an array.
     pub fn as_arr(&self) -> Option<&[Json]> {
         match self {
             Json::Arr(v) => Some(v),
@@ -95,6 +112,7 @@ impl Json {
         }
     }
 
+    /// Object reference, if this is an object.
     pub fn as_obj(&self) -> Option<&JsonObj> {
         match self {
             Json::Obj(o) => Some(o),
@@ -219,7 +237,9 @@ fn write_escaped(out: &mut String, s: &str) {
 /// Parse error with byte offset.
 #[derive(Debug, Clone)]
 pub struct JsonError {
+    /// Byte offset of the failure in the input.
     pub pos: usize,
+    /// What went wrong.
     pub msg: String,
 }
 
@@ -446,9 +466,13 @@ impl<'a> Parser<'a> {
 pub fn jnum(x: f64) -> Json {
     Json::Num(x)
 }
+
+/// Build a [`Json::Str`].
 pub fn jstr(s: impl Into<String>) -> Json {
     Json::Str(s.into())
 }
+
+/// Build a [`Json::Arr`].
 pub fn jarr(v: Vec<Json>) -> Json {
     Json::Arr(v)
 }

@@ -9,7 +9,9 @@ use super::rng::Pcg32;
 /// Configuration for a property run.
 #[derive(Clone, Debug)]
 pub struct PropConfig {
+    /// Number of generated cases per property.
     pub cases: usize,
+    /// Base seed; each case derives its own replayable seed from it.
     pub seed: u64,
 }
 
@@ -56,6 +58,7 @@ pub fn ensure(cond: bool, msg: impl Into<String>) -> Result<(), String> {
     }
 }
 
+/// Relative-tolerance equality check for property bodies.
 pub fn approx_eq(a: f64, b: f64, tol: f64, what: &str) -> Result<(), String> {
     if (a - b).abs() <= tol * (1.0 + a.abs().max(b.abs())) {
         Ok(())

@@ -40,6 +40,7 @@ impl Pcg32 {
         Pcg32::new(s ^ tag.wrapping_mul(0x9E37_79B9_7F4A_7C15))
     }
 
+    /// Next 32 random bits.
     #[inline]
     pub fn next_u32(&mut self) -> u32 {
         let old = self.state;
@@ -51,6 +52,7 @@ impl Pcg32 {
         xorshifted.rotate_right(rot)
     }
 
+    /// Next 64 random bits (two PCG32 draws).
     #[inline]
     pub fn next_u64(&mut self) -> u64 {
         ((self.next_u32() as u64) << 32) | self.next_u32() as u64

@@ -3,17 +3,26 @@
 /// Summary statistics over a sample.
 #[derive(Clone, Debug, PartialEq)]
 pub struct Summary {
+    /// Sample count.
     pub n: usize,
+    /// Arithmetic mean.
     pub mean: f64,
+    /// Population standard deviation.
     pub std: f64,
+    /// Smallest sample.
     pub min: f64,
+    /// Largest sample.
     pub max: f64,
+    /// Median.
     pub p50: f64,
+    /// 95th percentile.
     pub p95: f64,
+    /// 99th percentile.
     pub p99: f64,
 }
 
 impl Summary {
+    /// Summarize a non-empty sample.
     pub fn of(xs: &[f64]) -> Summary {
         assert!(!xs.is_empty(), "summary of empty sample");
         let n = xs.len();
@@ -94,6 +103,7 @@ pub struct Online {
 }
 
 impl Online {
+    /// Fresh accumulator with no samples.
     pub fn new() -> Self {
         Online {
             n: 0,
@@ -104,6 +114,7 @@ impl Online {
         }
     }
 
+    /// Fold one sample into the running moments.
     pub fn push(&mut self, x: f64) {
         self.n += 1;
         let d = x - self.mean;
@@ -113,14 +124,17 @@ impl Online {
         self.max = self.max.max(x);
     }
 
+    /// Number of samples pushed.
     pub fn count(&self) -> u64 {
         self.n
     }
 
+    /// Running mean.
     pub fn mean(&self) -> f64 {
         self.mean
     }
 
+    /// Population variance (0 for fewer than two samples).
     pub fn var(&self) -> f64 {
         if self.n < 2 {
             0.0
@@ -129,14 +143,17 @@ impl Online {
         }
     }
 
+    /// Population standard deviation.
     pub fn std(&self) -> f64 {
         self.var().sqrt()
     }
 
+    /// Smallest sample seen.
     pub fn min(&self) -> f64 {
         self.min
     }
 
+    /// Largest sample seen.
     pub fn max(&self) -> f64 {
         self.max
     }

@@ -1,15 +1,18 @@
-//! Parallelism must never change the pixels: tile-parallel and
-//! frame-parallel rendering are bit-identical to sequential execution for
-//! every backend, because tiles and frames are independent work units and
-//! the per-tile blending loop is shared between both paths.
+//! Parallelism must never change the pixels — or the pruning signal:
+//! tile-parallel and frame-parallel rendering are bit-identical to
+//! sequential execution for every backend, because tiles and frames are
+//! independent work units and the per-tile blending loop is shared between
+//! both paths. Contribution scoring obeys the same contract via per-tile
+//! (and per-view) partial sums reduced in a fixed order.
 
-use flicker::camera::{Camera, Intrinsics};
+use flicker::camera::{orbit_path, Camera, Intrinsics};
 use flicker::cat::{CatConfig, LeaderMode, Precision};
 use flicker::config::ExperimentConfig;
 use flicker::coordinator::{render_frame, render_orbit, FrameRequest, Golden, GoldenCat};
 use flicker::numeric::linalg::v3;
 use flicker::render::raster::{render, RenderOptions};
 use flicker::scene::gaussian::Scene;
+use flicker::scene::pruning::score_views;
 use flicker::scene::synthetic::{generate_scaled, preset};
 
 fn truck_frame() -> (Scene, Camera) {
@@ -99,6 +102,53 @@ fn orbit_frame_parallel_is_bit_identical() {
         assert_eq!(a.stats.pairs_blended, b.stats.pairs_blended, "frame {i}");
         assert_eq!(b.backend, "golden");
     }
+}
+
+fn scoring_setup() -> (Scene, Vec<Camera>) {
+    let scene = generate_scaled(&preset("truck"), 0.02);
+    let views = orbit_path(
+        Intrinsics::from_fov(96, 96, 1.2),
+        v3(0.0, 0.5, 0.0),
+        12.0,
+        3.0,
+        3,
+    );
+    (scene, views)
+}
+
+fn score_bits(scores: &[f32]) -> Vec<u32> {
+    scores.iter().map(|s| s.to_bits()).collect()
+}
+
+#[test]
+fn contribution_scores_bit_identical_across_workers() {
+    let (scene, views) = scoring_setup();
+    let opts = RenderOptions::default();
+    let (base, base_stats) = score_views(&scene, &views, &opts, 1);
+    assert!(
+        base.iter().any(|&s| s > 0.0),
+        "scoring must see the scene"
+    );
+    for workers in [2, 8, 0] {
+        let (scores, stats) = score_views(&scene, &views, &opts, workers);
+        assert_eq!(score_bits(&base), score_bits(&scores), "workers={workers}");
+        assert_eq!(base_stats.pairs_tested, stats.pairs_tested, "workers={workers}");
+        assert_eq!(base_stats.pairs_blended, stats.pairs_blended, "workers={workers}");
+        assert_eq!(base_stats.pixels, stats.pixels, "workers={workers}");
+        assert_eq!(
+            base_stats.tiles_early_terminated, stats.tiles_early_terminated,
+            "workers={workers}"
+        );
+    }
+}
+
+#[test]
+fn contribution_scores_stable_across_repeated_runs() {
+    let (scene, views) = scoring_setup();
+    let opts = RenderOptions::default();
+    let (a, _) = score_views(&scene, &views, &opts, 0);
+    let (b, _) = score_views(&scene, &views, &opts, 0);
+    assert_eq!(score_bits(&a), score_bits(&b));
 }
 
 #[test]
