@@ -5,7 +5,7 @@
 CARGO ?= cargo
 PYTHON ?= python3
 
-.PHONY: build test bench fmt clippy docs artifacts pytest ci clean
+.PHONY: build test bench bench-smoke fmt clippy docs artifacts pytest ci clean
 
 build:
 	$(CARGO) build --release
@@ -16,6 +16,12 @@ test:
 # Build the benches (paper figures/tables) under the Cargo layout.
 bench:
 	$(CARGO) bench --no-run
+
+# Run every bench once at tiny scale (`--quick` halves the resolution and
+# drops to 1 warmup + 3 samples) so bench targets can't bitrot between
+# perf PRs. Mirrored by the CI bench-smoke lane.
+bench-smoke:
+	$(CARGO) bench -- --quick
 
 fmt:
 	$(CARGO) fmt --all -- --check
@@ -43,7 +49,7 @@ pytest:
 		echo "pytest not installed - skipping python tests"; \
 	fi
 
-ci: build test fmt clippy docs pytest
+ci: build test fmt clippy docs pytest bench-smoke
 	$(CARGO) build --release --features pjrt
 	$(CARGO) test -q --features pjrt
 

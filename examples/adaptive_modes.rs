@@ -8,7 +8,8 @@ use flicker::cat::{CatConfig, CatEngine, LeaderMode, Precision};
 use flicker::config::ExperimentConfig;
 use flicker::coordinator::report::Report;
 use flicker::render::metrics::psnr;
-use flicker::render::raster::{render, render_masked, RenderOptions};
+use flicker::render::plan::FramePlan;
+use flicker::render::raster::{RenderOptions, VanillaMasks};
 use flicker::scene::synthetic::presets;
 
 fn main() -> flicker::util::error::Result<()> {
@@ -26,7 +27,10 @@ fn main() -> flicker::util::error::Result<()> {
         let scene = cfg.build_scene()?;
         let cam = &cfg.build_cameras()[0];
         let opts = RenderOptions::default();
-        let golden = render(&scene, cam, &opts);
+        // One FramePlan per scene: the golden reference and all four
+        // leader-pixel modes re-render the same prepared view.
+        let plan = FramePlan::build(&scene, cam, &opts);
+        let golden = plan.render(&VanillaMasks, None);
 
         let mut metrics: Vec<(&str, f64)> = Vec::new();
         for (name, mode) in [
@@ -40,7 +44,7 @@ fn main() -> flicker::util::error::Result<()> {
                 precision: Precision::Fp32,
                 stage1: true,
             });
-            let out = render_masked(&scene, cam, &opts, &mut engine, None);
+            let out = plan.render_with(&mut engine, None);
             metrics.push((name, psnr(&golden.image, &out.image)));
         }
         report.row(preset.name, &metrics);

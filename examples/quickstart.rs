@@ -81,14 +81,11 @@ fn main() -> flicker::util::error::Result<()> {
     );
 
     // A standalone CAT engine exposes the Stage-1/Stage-2 filter funnel.
+    // Re-rendering the same view? Build the FramePlan once and reuse it —
+    // projection, tile binning, and depth sorting don't run again.
+    let plan = flicker::render::plan::FramePlan::build(&scene, cam, &req.options);
     let mut engine = CatEngine::new(cat_cfg);
-    let _ = flicker::render::raster::render_masked(
-        &scene,
-        cam,
-        &req.options,
-        &mut engine,
-        None,
-    );
+    let _ = plan.render_with(&mut engine, None);
     println!(
         "CAT funnel: stage1 cut {:.0}%, minitile pass rate {:.0}%, leader saving {:.0}%",
         engine.stats.stage1_reject_rate() * 100.0,

@@ -11,12 +11,18 @@ use flicker::scene::synthetic::{generate_scaled, preset, presets};
 
 /// Evaluation resolution for benches (paper uses dataset-native; the shape
 /// of every comparison is resolution-independent because all configs see the
-/// same workload).
+/// same workload). Under the smoke knob (`--quick` /
+/// `FLICKER_BENCH_QUICK`, see `util::bench::quick_mode`) the default drops
+/// so every bench target runs end-to-end in seconds.
 pub fn bench_resolution() -> u32 {
     std::env::var("FLICKER_BENCH_RES")
         .ok()
         .and_then(|s| s.parse().ok())
-        .unwrap_or(192)
+        .unwrap_or(if flicker::util::bench::quick_mode() {
+            96
+        } else {
+            192
+        })
 }
 
 /// Build a bench scene at the CI scale.

@@ -13,14 +13,18 @@ use flicker::cat::pr::{acu_op_cost_4px, pr_op_cost};
 use flicker::cat::{CatConfig, CatEngine, LeaderMode, Precision};
 use flicker::coordinator::report::Report;
 use flicker::render::metrics::psnr;
-use flicker::render::raster::{render, render_masked, RenderOptions};
+use flicker::render::plan::FramePlan;
+use flicker::render::raster::{RenderOptions, VanillaMasks};
 
 fn main() {
     let res = common::bench_resolution();
     let cam = common::bench_camera(res);
     let scene = common::bench_scene("garden");
     let opts = RenderOptions::default();
-    let golden = render(&scene, &cam, &opts);
+    // One FramePlan for the whole mode sweep: the golden reference and all
+    // four leader-pixel configs re-render the same prepared view.
+    let plan = FramePlan::build(&scene, &cam, &opts);
+    let golden = plan.render(&VanillaMasks, None);
 
     let mut report = Report::new("fig3", "Fig.3(a): adaptive leader pixels");
     let mut results = Vec::new();
@@ -35,7 +39,7 @@ fn main() {
             precision: Precision::Fp32,
             stage1: true,
         });
-        let out = render_masked(&scene, &cam, &opts, &mut engine, None);
+        let out = plan.render_with(&mut engine, None);
         let p = psnr(&golden.image, &out.image);
         let leaders_used = engine.stats.dense_pairs * 16 + engine.stats.sparse_pairs * 8;
         report.row(

@@ -9,9 +9,9 @@ mod common;
 
 use flicker::cat::{CatConfig, CatEngine, LeaderMode, ObbSubtileMask, Precision};
 use flicker::coordinator::report::Report;
-use flicker::render::raster::{render, render_masked, RenderOptions};
+use flicker::render::plan::FramePlan;
+use flicker::render::raster::{RenderOptions, VanillaMasks};
 use flicker::render::tile::{build_tile_lists, duplicate_count, Strategy, TileGrid};
-use flicker::render::project::project_scene;
 use flicker::sim::workload::extract;
 use flicker::sim::{HwConfig, SubtileTest};
 
@@ -21,20 +21,24 @@ fn main() {
     let scene = common::bench_scene("garden");
     let opts = RenderOptions::default();
 
-    // Per-pixel processed Gaussians by strategy.
+    // Per-pixel processed Gaussians by strategy. One AABB FramePlan serves
+    // the vanilla, OBB-subtile, and Mini-Tile CAT rows (same tile lists,
+    // different masks); only the OBB binning needs its own plan.
     let mut report = Report::new("fig4", "Fig.4: per-pixel processed Gaussians by strategy");
-    let aabb16 = render(&scene, &cam, &opts);
+    let plan = FramePlan::build(&scene, &cam, &opts);
+    let aabb16 = plan.render(&VanillaMasks, None);
     let pp_aabb = aabb16.stats.per_pixel_tested();
     report.row("aabb-16x16", &[("pp", pp_aabb), ("rel", 1.0)]);
 
-    let obb16 = render(
+    let obb16 = FramePlan::build(
         &scene,
         &cam,
         &RenderOptions {
             strategy: Strategy::Obb,
             ..opts
         },
-    );
+    )
+    .render(&VanillaMasks, None);
     report.row(
         "obb-16x16",
         &[
@@ -44,7 +48,7 @@ fn main() {
     );
 
     let mut obb_sub = ObbSubtileMask::new();
-    let obb8 = render_masked(&scene, &cam, &opts, &mut obb_sub, None);
+    let obb8 = plan.render_with(&mut obb_sub, None);
     report.row(
         "obb-8x8-subtile",
         &[
@@ -58,18 +62,19 @@ fn main() {
         precision: Precision::Fp32,
         stage1: true,
     });
-    let minitile = render_masked(&scene, &cam, &opts, &mut cat, None);
+    let minitile = plan.render_with(&mut cat, None);
     let pp_cat = minitile.stats.per_pixel_tested();
     report.row("minitile-cat", &[("pp", pp_cat), ("rel", pp_cat / pp_aabb)]);
     report.emit();
 
-    // Duplicates vs tile size.
-    let splats = project_scene(&scene, &cam);
+    // Duplicates vs tile size — reuse the plan's projected splats instead
+    // of re-projecting the scene.
+    let splats = &plan.splats;
     let mut dup = Report::new("fig4b", "Fig.4: duplicated Gaussians vs tile size");
     let mut d16 = 0usize;
     for ts in [16u32, 8, 4] {
         let grid = TileGrid::new(res, res, ts);
-        let d = duplicate_count(&build_tile_lists(&splats, &grid, Strategy::Aabb));
+        let d = duplicate_count(&build_tile_lists(splats, &grid, Strategy::Aabb));
         if ts == 16 {
             d16 = d;
         }
@@ -103,7 +108,7 @@ fn main() {
     );
     assert!(pp_cat < obb8.stats.per_pixel_tested(), "CAT below OBB-subtile");
     let grid4 = TileGrid::new(res, res, 4);
-    let d4 = duplicate_count(&build_tile_lists(&splats, &grid4, Strategy::Aabb));
+    let d4 = duplicate_count(&build_tile_lists(splats, &grid4, Strategy::Aabb));
     assert!(d4 as f64 > 2.0 * d16 as f64, "4px tiles must inflate duplicates");
     assert!(cut > 0.10, "stage-1 cut {cut}");
     println!(

@@ -9,14 +9,18 @@ mod common;
 use flicker::cat::{CatConfig, CatEngine, LeaderMode, Precision};
 use flicker::coordinator::report::Report;
 use flicker::render::metrics::{psnr, ssim};
-use flicker::render::raster::{render, render_masked, RenderOptions};
+use flicker::render::plan::FramePlan;
+use flicker::render::raster::{RenderOptions, VanillaMasks};
 
 fn main() {
     let res = common::bench_resolution();
     let cam = common::bench_camera(res);
     let scene = common::bench_scene("garden");
     let opts = RenderOptions::default();
-    let golden = render(&scene, &cam, &opts);
+    // One FramePlan reused across the golden reference and all four
+    // precision configs (the fig-sweep plan-reuse pattern).
+    let plan = FramePlan::build(&scene, &cam, &opts);
+    let golden = plan.render(&VanillaMasks, None);
 
     let mut report = Report::new("fig7c", "Fig.7(c): CTU precision schemes");
     let mut vals = Vec::new();
@@ -31,7 +35,7 @@ fn main() {
             precision: prec,
             stage1: true,
         });
-        let out = render_masked(&scene, &cam, &opts, &mut engine, None);
+        let out = plan.render_with(&mut engine, None);
         let p = psnr(&golden.image, &out.image);
         let s = ssim(&golden.image, &out.image);
         report.row(name, &[("psnr", p), ("ssim", s)]);

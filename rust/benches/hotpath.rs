@@ -7,8 +7,9 @@ mod common;
 use flicker::camera::{orbit_path, Intrinsics};
 use flicker::cat::{CatConfig, CatEngine, LeaderMode, Precision};
 use flicker::numeric::linalg::v3;
+use flicker::render::plan::FramePlan;
 use flicker::render::project::project_scene;
-use flicker::render::raster::{render, render_masked, RenderOptions};
+use flicker::render::raster::{render, render_masked, RenderOptions, VanillaMasks};
 use flicker::render::sort::sort_by_depth;
 use flicker::render::tile::{build_tile_lists, Strategy, TileGrid};
 use flicker::scene::pruning::score_views;
@@ -48,8 +49,23 @@ fn main() {
         sort_by_depth(l, &splats);
     }
 
+    // Rebuild-per-call baseline: the one-shot wrapper re-derives the plan
+    // (project → bin → sort) on every render — what quality sweeps paid
+    // before FramePlan.
     b.bench("raster_vanilla", || {
         black_box(render(&scene, &cam, &RenderOptions::default()));
+    });
+
+    // FramePlan reuse: the fig3/fig7/Table-I sweep pattern — one view
+    // re-rendered under many configs. `plan_build` is the amortized cost,
+    // `plan_reuse` the steady-state per-render cost; plan_reuse must beat
+    // raster_vanilla by roughly plan_build per call.
+    b.bench("plan_build", || {
+        black_box(FramePlan::build(&scene, &cam, &RenderOptions::default()));
+    });
+    let plan = FramePlan::build(&scene, &cam, &RenderOptions::default());
+    b.bench("plan_reuse", || {
+        black_box(plan.render(&VanillaMasks, None));
     });
 
     // Tile fan-out across all cores (bit-identical output, wall-clock win).
@@ -76,15 +92,16 @@ fn main() {
         ));
     });
 
+    // Rebuilds the plan per call (like raster_cat above) so the
+    // sequential-vs-parallel comparison stays apples-to-apples; the
+    // plan-reuse saving is measured separately by plan_build/plan_reuse.
     let cat_cfg = CatConfig {
         mode: LeaderMode::SmoothFocused,
         precision: Precision::Mixed,
         stage1: true,
     };
     b.bench("raster_cat_parallel", || {
-        black_box(flicker::render::raster::render_with_source(
-            &scene, &cam, &par_opts, &cat_cfg,
-        ));
+        black_box(FramePlan::build(&scene, &cam, &par_opts).render(&cat_cfg, None));
     });
 
     // Pruning contribution scoring (Σ T·α over scoring views) — the pass
@@ -102,6 +119,21 @@ fn main() {
     });
     b.bench("prune_scoring_parallel", || {
         black_box(score_views(&scene, &score_cams, &RenderOptions::default(), 0));
+    });
+
+    // The view×tile work-stealing regime: FEWER views than cores. The old
+    // views-first budget split would strand all but two workers here; the
+    // flattened (view × tile) queue drains every tile of both views across
+    // the whole pool. Bit-identical to prune_scoring for the same views.
+    let few_cams = orbit_path(
+        Intrinsics::from_fov(res, res, 1.2),
+        v3(0.0, 0.5, 0.0),
+        12.0,
+        3.0,
+        2,
+    );
+    b.bench("score_views_viewtile", || {
+        black_box(score_views(&scene, &few_cams, &RenderOptions::default(), 0));
     });
 
     let hw = HwConfig::flicker32();

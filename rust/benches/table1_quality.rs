@@ -10,7 +10,8 @@ mod common;
 use flicker::cat::{CatConfig, CatEngine, LeaderMode, Precision};
 use flicker::coordinator::report::Report;
 use flicker::render::metrics::{psnr, ssim};
-use flicker::render::raster::{render, render_masked, RenderOptions};
+use flicker::render::plan::FramePlan;
+use flicker::render::raster::{render, RenderOptions, VanillaMasks};
 use flicker::scene::pruning::{prune, PruneConfig};
 
 fn main() {
@@ -28,10 +29,12 @@ fn main() {
         // "Baseline" reference image: vanilla render of the unpruned model.
         let gt = render(&scene, &cam, &opts).image;
 
-        // Pruned model.
+        // Pruned model: one FramePlan serves both the "Prun." and "Ours"
+        // rows (same scene + view, different masks).
         let mut pruned = scene.clone();
         prune(&mut pruned, &views, &PruneConfig::default());
-        let img_pruned = render(&pruned, &cam, &opts).image;
+        let pruned_plan = FramePlan::build(&pruned, &cam, &opts);
+        let img_pruned = pruned_plan.render(&VanillaMasks, None).image;
 
         // Ours: pruned + adaptive CAT at mixed precision.
         let mut engine = CatEngine::new(CatConfig {
@@ -39,7 +42,7 @@ fn main() {
             precision: Precision::Mixed,
             stage1: true,
         });
-        let img_ours = render_masked(&pruned, &cam, &opts, &mut engine, None).image;
+        let img_ours = pruned_plan.render_with(&mut engine, None).image;
 
         let p_prune = psnr(&gt, &img_pruned);
         let p_ours = psnr(&gt, &img_ours);

@@ -485,7 +485,8 @@ mod tests {
 
     #[test]
     fn cat_source_parallel_matches_sequential_engine() {
-        use crate::render::raster::{render_masked, render_with_source, RenderOptions};
+        use crate::render::plan::FramePlan;
+        use crate::render::raster::{render_masked, RenderOptions};
         use crate::scene::synthetic::{generate_scaled, preset};
         let scene = generate_scaled(&preset("truck"), 0.01);
         let cam = Camera::look_at(
@@ -498,7 +499,8 @@ mod tests {
         let opts = RenderOptions::default();
         let mut engine = CatEngine::new(cfg);
         let seq = render_masked(&scene, &cam, &opts, &mut engine, None);
-        let par = render_with_source(&scene, &cam, &RenderOptions { workers: 4, ..opts }, &cfg);
+        let plan = FramePlan::build(&scene, &cam, &RenderOptions { workers: 4, ..opts });
+        let par = plan.render(&cfg, None);
         assert_eq!(seq.image.data, par.image.data);
         assert_eq!(seq.stats.pairs_tested, par.stats.pairs_tested);
     }

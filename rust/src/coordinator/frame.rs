@@ -1,15 +1,20 @@
 //! Per-frame rendering coordination.
 //!
-//! [`RenderBackend`] is the extension point: a backend turns a
-//! [`FrameRequest`] into an image + stats, and new execution engines slot
-//! in without touching `render_frame`/`render_orbit` callers. Backends must
-//! be `Sync` so [`render_orbit`] can fan frames across the worker pool.
+//! [`RenderBackend`] is the extension point: a backend turns a prepared
+//! [`FramePlan`] into an image + stats, and new execution engines slot in
+//! without touching `render_frame`/`render_orbit` callers. The coordinator
+//! builds the plan (project → tile-bin → depth-sort) exactly once per
+//! frame and hands every backend the same intermediates — sweeps that
+//! re-render one view through many backends or configs reuse the plan via
+//! [`render_planned`]. Backends must be `Sync` so [`render_orbit`] can fan
+//! frames across the worker pool.
 
 use crate::camera::Camera;
 use crate::cat::CatConfig;
 use crate::config::ExperimentConfig;
 use crate::render::image::Image;
-use crate::render::raster::{RenderOptions, RenderOutput, RenderStats};
+use crate::render::plan::FramePlan;
+use crate::render::raster::{RenderOptions, RenderOutput, RenderStats, VanillaMasks};
 use crate::scene::gaussian::Scene;
 use crate::util::error::Result;
 use crate::util::pool;
@@ -38,14 +43,17 @@ pub struct FrameMetrics {
     pub backend: &'static str,
 }
 
-/// An execution engine for a frame's tiles.
+/// An execution engine for a prepared frame's tiles.
 pub trait RenderBackend: Sync {
     /// Short stable name recorded in [`FrameMetrics`].
     fn name(&self) -> &'static str;
 
-    /// Render the frame. Implementations honor `req.options.workers` for
-    /// their internal tile fan-out where parallelism is safe.
-    fn render(&self, req: &FrameRequest) -> Result<RenderOutput>;
+    /// Render a prepared [`FramePlan`]. Implementations honor
+    /// `plan.opts.workers` for their internal tile fan-out where
+    /// parallelism is safe, and must not re-derive splats or tile lists —
+    /// the plan is the single source of frame-preparation truth, which is
+    /// what lets callers reuse it across backends and configs.
+    fn render_plan(&self, plan: &FramePlan) -> Result<RenderOutput>;
 }
 
 /// Pure-Rust golden rasterizer, vanilla masks.
@@ -56,8 +64,8 @@ impl RenderBackend for Golden {
         "golden"
     }
 
-    fn render(&self, req: &FrameRequest) -> Result<RenderOutput> {
-        Ok(crate::render::raster::render(req.scene, req.camera, &req.options))
+    fn render_plan(&self, plan: &FramePlan) -> Result<RenderOutput> {
+        Ok(plan.render(&VanillaMasks, None))
     }
 }
 
@@ -72,22 +80,18 @@ impl RenderBackend for GoldenCat {
         "golden+cat"
     }
 
-    fn render(&self, req: &FrameRequest) -> Result<RenderOutput> {
-        Ok(crate::render::raster::render_with_source(
-            req.scene,
-            req.camera,
-            &req.options,
-            &self.0,
-        ))
+    fn render_plan(&self, plan: &FramePlan) -> Result<RenderOutput> {
+        Ok(plan.render(&self.0, None))
     }
 }
 
 /// AOT JAX/Pallas artifacts through PJRT (only with `--features pjrt`).
-/// Tiles run sequentially, and whole frames serialize through an internal
-/// gate: the executor chunks splat lists and carries transmittance on the
-/// host, and PJRT executable thread-safety is owned by the runtime, so
-/// concurrent frames (the `render_orbit` fan-out) queue rather than enter
-/// `exec_f32` in parallel.
+/// Consumes the coordinator's [`FramePlan`] directly — no host-side
+/// re-projection or re-binning. Tiles run sequentially, and whole frames
+/// serialize through an internal gate: the executor chunks splat lists and
+/// carries transmittance on the host, and PJRT executable thread-safety is
+/// owned by the runtime, so concurrent frames (the `render_orbit` fan-out)
+/// queue rather than enter `exec_f32` in parallel.
 #[cfg(feature = "pjrt")]
 pub struct Pjrt<'rt> {
     rt: &'rt crate::runtime::Runtime,
@@ -111,51 +115,52 @@ impl RenderBackend for Pjrt<'_> {
         "pjrt"
     }
 
-    fn render(&self, req: &FrameRequest) -> Result<RenderOutput> {
-        use crate::render::project::project_scene;
-        use crate::render::sort::sort_by_depth;
-        use crate::render::tile::{build_tile_lists, TileGrid};
+    fn render_plan(&self, plan: &FramePlan) -> Result<RenderOutput> {
         use crate::runtime::executor::TileExecutor;
 
         let _serial = self
             .gate
             .lock()
             .unwrap_or_else(std::sync::PoisonError::into_inner);
-        let splats = project_scene(req.scene, req.camera);
-        let grid = TileGrid::new(
-            req.camera.intr.width,
-            req.camera.intr.height,
-            req.options.tile_size,
-        );
-        let mut lists = build_tile_lists(&splats, &grid, req.options.strategy);
-        for l in &mut lists {
-            sort_by_depth(l, &splats);
-        }
-        let mut img = Image::new(grid.width, grid.height);
+        let mut img = Image::new(plan.grid.width, plan.grid.height);
         let mut ex = TileExecutor::new(self.rt);
-        for (t, list) in lists.iter().enumerate() {
+        for (t, list) in plan.lists.iter().enumerate() {
             ex.render_tile(
-                &grid.rect(t),
-                &splats,
+                &plan.grid.rect(t),
+                &plan.splats,
                 list,
                 &mut img,
-                req.options.background,
+                plan.opts.background,
             )?;
         }
-        let stats = RenderStats {
-            splats: splats.len(),
-            tile_pairs: lists.iter().map(|l| l.len()).sum(),
-            pixels: (grid.width * grid.height) as u64,
-            ..Default::default()
-        };
-        Ok(RenderOutput { image: img, stats })
+        Ok(RenderOutput {
+            image: img,
+            stats: plan.frame_stats(),
+        })
     }
 }
 
-/// Render one frame through the chosen backend.
+/// Render one frame through the chosen backend: build the [`FramePlan`]
+/// and render it once. The wall-clock covers build + render — the
+/// one-shot cost a sweep amortizes away via [`render_planned`].
 pub fn render_frame(req: &FrameRequest, backend: &dyn RenderBackend) -> Result<FrameMetrics> {
     let t0 = Instant::now();
-    let out = backend.render(req)?;
+    let plan = FramePlan::build(req.scene, req.camera, &req.options);
+    let out = backend.render_plan(&plan)?;
+    Ok(FrameMetrics {
+        image: out.image,
+        stats: out.stats,
+        wall_ms: t0.elapsed().as_secs_f64() * 1e3,
+        backend: backend.name(),
+    })
+}
+
+/// Render a **prebuilt** plan through the chosen backend — the sweep
+/// primitive: build the plan once per view, then render it under many
+/// backends/configs. The wall-clock covers only the render.
+pub fn render_planned(plan: &FramePlan, backend: &dyn RenderBackend) -> Result<FrameMetrics> {
+    let t0 = Instant::now();
+    let out = backend.render_plan(plan)?;
     Ok(FrameMetrics {
         image: out.image,
         stats: out.stats,
@@ -179,7 +184,7 @@ pub fn render_orbit(
     let total_workers = pool::resolve_workers(cfg.workers);
     let frame_workers = total_workers.min(cams.len().max(1));
     let tile_workers = (total_workers / frame_workers.max(1)).max(1);
-    let frames: Vec<Option<Result<FrameMetrics>>> =
+    let frames: Vec<Result<FrameMetrics>> =
         pool::map_indexed(cams.len(), frame_workers, |i| {
             let req = FrameRequest {
                 scene: &scene,
@@ -189,35 +194,24 @@ pub fn render_orbit(
                     ..RenderOptions::default()
                 },
             };
-            Some(render_frame(&req, backend))
+            render_frame(&req, backend)
         });
-    frames
-        .into_iter()
-        .map(|f| f.expect("pool fills every frame slot"))
-        .collect()
+    frames.into_iter().collect()
 }
 
 /// Convenience: render the same frame through Golden and a mask provider,
 /// returning (golden, masked) images — the quality-delta primitive used by
-/// Table I / Fig. 3 / Fig. 7 experiments.
+/// Table I / Fig. 3 / Fig. 7 experiments. Both renders share one
+/// [`FramePlan`], so frame preparation runs once.
 pub fn golden_vs_masked(
     scene: &Scene,
     cam: &Camera,
     opts: &RenderOptions,
     masks: &mut dyn crate::render::raster::MaskProvider,
 ) -> (Image, Image) {
-    use crate::render::project::project_scene;
-    use crate::render::sort::sort_by_depth;
-    use crate::render::tile::{build_tile_lists, TileGrid};
-
-    let golden = crate::render::raster::render(scene, cam, opts);
-    let splats = project_scene(scene, cam);
-    let grid = TileGrid::new(cam.intr.width, cam.intr.height, opts.tile_size);
-    let mut lists = build_tile_lists(&splats, &grid, opts.strategy);
-    for l in &mut lists {
-        sort_by_depth(l, &splats);
-    }
-    let masked = crate::render::raster::render_lists(&splats, &lists, &grid, opts, masks, None);
+    let plan = FramePlan::build(scene, cam, opts);
+    let golden = plan.render(&VanillaMasks, None);
+    let masked = plan.render_with(masks, None);
     (golden.image, masked.image)
 }
 
@@ -263,6 +257,25 @@ mod tests {
         assert!(p > 30.0, "CAT vs golden PSNR {p}");
         // CAT must reduce tested work.
         assert!(cat.stats.pairs_tested < golden.stats.pairs_tested);
+    }
+
+    #[test]
+    fn planned_render_matches_oneshot() {
+        // render_planned over a reused plan must reproduce render_frame.
+        let (scene, cam) = setup();
+        let opts = RenderOptions::default();
+        let req = FrameRequest {
+            scene: &scene,
+            camera: &cam,
+            options: opts,
+        };
+        let oneshot = render_frame(&req, &Golden).unwrap();
+        let plan = FramePlan::build(&scene, &cam, &opts);
+        let a = render_planned(&plan, &Golden).unwrap();
+        let b = render_planned(&plan, &Golden).unwrap();
+        assert_eq!(oneshot.image.data, a.image.data);
+        assert_eq!(a.image.data, b.image.data, "plan reuse must be stable");
+        assert_eq!(a.backend, "golden");
     }
 
     #[test]

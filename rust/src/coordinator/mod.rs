@@ -1,7 +1,10 @@
-//! Layer-3 frame coordinator: schedules per-tile work across backends,
-//! collects frame metrics, and drives multi-frame evaluation runs.
+//! Layer-3 frame coordinator: builds one `FramePlan` per frame, schedules
+//! per-tile work across backends, collects frame metrics, and drives
+//! multi-frame evaluation runs.
 //!
-//! Backends implement the [`frame::RenderBackend`] trait:
+//! Backends implement the [`frame::RenderBackend`] trait and consume a
+//! prepared `render::plan::FramePlan` (they never re-derive splats or tile
+//! lists):
 //! * [`frame::Golden`] — the in-process Rust rasterizer (reference
 //!   numerics) with vanilla masks.
 //! * [`frame::GoldenCat`] — the golden rasterizer driven by Mini-Tile CAT
@@ -11,15 +14,17 @@
 //!   compiled with `--features pjrt`.
 //!
 //! The per-frame flow mirrors the accelerator's: project → tile-bin →
-//! depth-sort → (CAT-mask) → blend, with tiles fanned across the worker
-//! pool (`RenderOptions::workers`) and orbits fanned across frames
-//! (`ExperimentConfig::workers`).
+//! depth-sort (the plan, built once) → (CAT-mask) → blend (per render),
+//! with tiles fanned across the worker pool (`RenderOptions::workers`) and
+//! orbits fanned across frames (`ExperimentConfig::workers`). Sweeps that
+//! re-render one view reuse the plan through [`frame::render_planned`].
 
 pub mod frame;
 pub mod report;
 
 pub use frame::{
-    render_frame, render_orbit, FrameMetrics, FrameRequest, Golden, GoldenCat, RenderBackend,
+    render_frame, render_orbit, render_planned, FrameMetrics, FrameRequest, Golden, GoldenCat,
+    RenderBackend,
 };
 
 #[cfg(feature = "pjrt")]

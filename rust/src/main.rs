@@ -274,7 +274,11 @@ fn cmd_quality(args: &Args) -> Result<()> {
         workers: cfg.workers,
         ..RenderOptions::default()
     };
-    let golden = flicker::render::raster::render(&scene, cam, &opts);
+    // One FramePlan for the whole sweep: projection, tile binning, and
+    // depth sorting run once; every CAT config re-renders from the same
+    // prepared intermediates.
+    let plan = flicker::render::plan::FramePlan::build(&scene, cam, &opts);
+    let golden = plan.render(&flicker::render::raster::VanillaMasks, None);
     let mut report = Report::new("quality", &format!("CAT quality on {}", scene.name));
     report.set_provenance(cfg.to_json());
     for (name, mode, precision) in [
@@ -289,7 +293,7 @@ fn cmd_quality(args: &Args) -> Result<()> {
             precision,
             stage1: true,
         };
-        let out = flicker::render::raster::render_with_source(&scene, cam, &opts, &cat);
+        let out = plan.render(&cat, None);
         report.row(
             name,
             &[

@@ -1,8 +1,10 @@
 //! Functional 3DGS rendering pipeline (golden model): projection, tiling,
-//! depth sort, reference rasterizer, framebuffer, and quality metrics.
+//! depth sort, the staged [`plan::FramePlan`] pipeline, reference
+//! rasterizer entry points, framebuffer, and quality metrics.
 
 pub mod image;
 pub mod metrics;
+pub mod plan;
 pub mod project;
 pub mod raster;
 pub mod sort;

@@ -1,0 +1,531 @@
+//! `FramePlan`: the staged frame pipeline built once, rendered many times.
+//!
+//! FLICKER's frame preparation — projection, tile binning, depth sorting —
+//! is a pure function of `(scene, camera, options)`. Every consumer that
+//! re-renders the same view (quality sweeps over CAT configs, pruning's
+//! scoring views, the PJRT backend, the workload extractor) used to redo
+//! that work per call. [`FramePlan::build`] runs the stages once and the
+//! plan's render/score/extract consumers reuse the intermediates:
+//!
+//! ```text
+//!   build:  project_scene ─► build_tile_lists ─► sort_by_depth
+//!                       (splats)          (lists)        (lists, sorted)
+//!   render: for each tile: mask ─► blend ─► composite      (per consumer)
+//!   score:  for each tile: mask ─► blend ─► fold partials  (per consumer)
+//! ```
+//!
+//! **Determinism contract.** A plan is immutable after `build`, tiles are
+//! independent work units, and every consumer shares the one blending loop
+//! (`render_tile`), so repeated renders of one plan — sequential, tile-
+//! parallel, or drained through an external work queue like pruning's
+//! view×tile scheduler — are bit-identical. Contribution scores accumulate
+//! into tile-local list-aligned partial buffers and fold in ascending tile
+//! index whether tiles ran on one thread or many.
+
+use super::image::Image;
+use super::project::{project_scene, Splat, ALPHA_MIN};
+use super::raster::{
+    MaskProvider, MaskSource, RenderOptions, RenderOutput, RenderStats, MINITILE,
+};
+use super::sort::sort_by_depth;
+use super::tile::{build_tile_lists, Rect, TileGrid};
+use crate::camera::Camera;
+use crate::scene::gaussian::Scene;
+use crate::util::pool;
+
+/// The reusable frame-preparation product: projected splats, the tile grid,
+/// and depth-sorted per-tile splat lists for one `(scene, camera, options)`
+/// triple. Build once with [`FramePlan::build`], then render or score any
+/// number of times — each render walks the prebuilt lists instead of
+/// re-deriving them.
+pub struct FramePlan {
+    /// Splats surviving frustum culling + EWA projection.
+    pub splats: Vec<Splat>,
+    /// Tile grid geometry for the target image.
+    pub grid: TileGrid,
+    /// Depth-sorted splat index list per tile (row-major tile order).
+    pub lists: Vec<Vec<u32>>,
+    /// The render options the plan was built with. `tile_size` and
+    /// `strategy` are baked into `grid`/`lists`; `t_min`, `background`,
+    /// and `workers` apply at render time.
+    pub opts: RenderOptions,
+}
+
+impl FramePlan {
+    /// Run the preparation stages (project → tile-bin → depth-sort) once.
+    ///
+    /// # Examples
+    ///
+    /// ```
+    /// use flicker::camera::{Camera, Intrinsics};
+    /// use flicker::numeric::linalg::v3;
+    /// use flicker::render::plan::FramePlan;
+    /// use flicker::render::raster::{RenderOptions, VanillaMasks};
+    /// use flicker::scene::synthetic::{generate_scaled, preset};
+    ///
+    /// let scene = generate_scaled(&preset("truck"), 0.01);
+    /// let cam = Camera::look_at(
+    ///     Intrinsics::from_fov(64, 64, 1.2),
+    ///     v3(0.0, 2.5, -12.0),
+    ///     v3(0.0, 0.5, 0.0),
+    ///     v3(0.0, 1.0, 0.0),
+    /// );
+    /// // Build once, render twice (e.g. a config sweep) — bit-identical.
+    /// let plan = FramePlan::build(&scene, &cam, &RenderOptions::default());
+    /// let a = plan.render(&VanillaMasks, None);
+    /// let b = plan.render(&VanillaMasks, None);
+    /// assert_eq!(a.image.data, b.image.data);
+    /// ```
+    pub fn build(scene: &Scene, cam: &Camera, opts: &RenderOptions) -> FramePlan {
+        let splats = project_scene(scene, cam);
+        let grid = TileGrid::new(cam.intr.width, cam.intr.height, opts.tile_size);
+        let mut lists = build_tile_lists(&splats, &grid, opts.strategy);
+        for list in &mut lists {
+            sort_by_depth(list, &splats);
+        }
+        FramePlan {
+            splats,
+            grid,
+            lists,
+            opts: *opts,
+        }
+    }
+
+    /// Number of tiles in the plan (== `lists.len()`).
+    pub fn num_tiles(&self) -> usize {
+        self.lists.len()
+    }
+
+    /// Frame-level stats skeleton: the per-tile loops only touch the pair
+    /// and early-termination counters, so these totals are fixed at build
+    /// time. Consumers that drain tiles themselves (PJRT, the view×tile
+    /// scoring queue) start from this and absorb per-tile counters.
+    pub fn frame_stats(&self) -> RenderStats {
+        RenderStats {
+            splats: self.splats.len(),
+            tile_pairs: self.lists.iter().map(|l| l.len()).sum(),
+            pixels: (self.grid.width * self.grid.height) as u64,
+            ..Default::default()
+        }
+    }
+
+    /// Render the planned frame through `source`, optionally accumulating
+    /// per-Gaussian contribution scores (Σ T·α, the pruning signal) into
+    /// `scores` — indexed by Gaussian id, `scene.len()` long.
+    ///
+    /// Tiles (and their mask generation) fan across the worker pool when
+    /// `self.opts.workers != 1`; images, stats, and scores are
+    /// bit-identical for any worker count because every path shares the
+    /// blending loop and folds score partials in ascending tile index.
+    pub fn render(&self, source: &dyn MaskSource, mut scores: Option<&mut [f32]>) -> RenderOutput {
+        let workers = pool::resolve_workers(self.opts.workers).min(self.lists.len().max(1));
+        if workers <= 1 {
+            let mut masks = source.tile_masks();
+            return self.render_with(masks.as_mut(), scores.as_deref_mut());
+        }
+        let ts = self.grid.tile as usize;
+        let want_scores = scores.is_some();
+        let opts = &self.opts;
+        let tiles: Vec<(Vec<f32>, Vec<f32>, RenderStats)> =
+            pool::map_indexed(self.lists.len(), workers, |t| {
+                let run = self.run_tile(t, source, want_scores);
+                // Composite over background into a w×h tile pixel block.
+                let mut pixels = vec![0.0f32; run.w * run.h * 3];
+                for py in 0..run.h {
+                    for px in 0..run.w {
+                        let idx = py * ts + px;
+                        let tr = run.trans[idx];
+                        let c = run.color[idx];
+                        let o = (py * run.w + px) * 3;
+                        pixels[o] = c[0] + tr * opts.background[0];
+                        pixels[o + 1] = c[1] + tr * opts.background[1];
+                        pixels[o + 2] = c[2] + tr * opts.background[2];
+                    }
+                }
+                (pixels, run.partial, run.stats)
+            });
+
+        let mut img = Image::new(self.grid.width, self.grid.height);
+        let mut stats = self.frame_stats();
+        for (t, (pixels, partial, tile_stats)) in tiles.iter().enumerate() {
+            stats.absorb(tile_stats);
+            if let Some(sc) = scores.as_deref_mut() {
+                fold_tile_scores(sc, &self.splats, &self.lists[t], partial);
+            }
+            let rect = self.grid.rect(t);
+            let x_lo = rect.x0 as u32;
+            let y_lo = rect.y0 as u32;
+            let w = (self.grid.width - x_lo).min(self.grid.tile) as usize;
+            let h = (self.grid.height - y_lo).min(self.grid.tile) as usize;
+            for py in 0..h {
+                for px in 0..w {
+                    let o = (py * w + px) * 3;
+                    img.set(
+                        x_lo + px as u32,
+                        y_lo + py as u32,
+                        [pixels[o], pixels[o + 1], pixels[o + 2]],
+                    );
+                }
+            }
+        }
+        RenderOutput { image: img, stats }
+    }
+
+    /// Render the planned frame sequentially through a caller-owned
+    /// (possibly stateful) mask provider — the CAT-instrumentation path:
+    /// callers keep the provider and read its counters afterwards.
+    ///
+    /// Scores accumulate through the same per-tile partial-sum fold as the
+    /// parallel path, so the result is bit-identical to [`FramePlan::render`]
+    /// at any worker count.
+    pub fn render_with(
+        &self,
+        masks: &mut dyn MaskProvider,
+        mut contributions: Option<&mut [f32]>,
+    ) -> RenderOutput {
+        let (splats, grid, lists, opts) = (&self.splats, &self.grid, &self.lists, &self.opts);
+        let mut img = Image::new(grid.width, grid.height);
+        let mut stats = self.frame_stats();
+        let ts = grid.tile as usize;
+        // Per-tile scratch, reused across tiles (no allocation in the loop).
+        let mut trans = vec![1.0f32; ts * ts];
+        let mut color = vec![[0.0f32; 3]; ts * ts];
+        let scoring = contributions.is_some();
+        let mut partial: Vec<f32> = Vec::new();
+
+        for (t, list) in lists.iter().enumerate() {
+            let rect = grid.rect(t);
+            if scoring {
+                partial.clear();
+                partial.resize(list.len(), 0.0);
+            }
+            let (w, h) = render_tile(
+                splats,
+                list,
+                &rect,
+                grid,
+                opts,
+                masks,
+                &mut trans,
+                &mut color,
+                if scoring { Some(partial.as_mut_slice()) } else { None },
+                &mut stats,
+            );
+            if let Some(sc) = contributions.as_deref_mut() {
+                fold_tile_scores(sc, splats, list, &partial);
+            }
+            // Composite over background.
+            let x_lo = rect.x0 as u32;
+            let y_lo = rect.y0 as u32;
+            for py in 0..h {
+                for px in 0..w {
+                    let idx = py * ts + px;
+                    let tr = trans[idx];
+                    let c = color[idx];
+                    img.set(
+                        x_lo + px as u32,
+                        y_lo + py as u32,
+                        [
+                            c[0] + tr * opts.background[0],
+                            c[1] + tr * opts.background[1],
+                            c[2] + tr * opts.background[2],
+                        ],
+                    );
+                }
+            }
+        }
+        RenderOutput { image: img, stats }
+    }
+
+    /// Run the blending loop for one tile and return its list-aligned
+    /// contribution partials (Σ T·α of `lists[t][li]` over the tile's
+    /// pixels) plus the tile's workload counters — without compositing any
+    /// pixels. This is the drain unit of pruning's flattened view×tile
+    /// work queue: any worker can score any `(plan, tile)` pair, and the
+    /// caller folds partials in a fixed order via [`FramePlan::fold_scores`].
+    pub fn score_tile(&self, t: usize, source: &dyn MaskSource) -> (Vec<f32>, RenderStats) {
+        let run = self.run_tile(t, source, true);
+        (run.partial, run.stats)
+    }
+
+    /// The one per-tile drain shared by the parallel render fan-out and
+    /// [`FramePlan::score_tile`]: fresh provider from `source`, fresh
+    /// tile-local scratch, one [`render_tile`] call. Keeping a single
+    /// entry keeps the rendering and scoring paths structurally identical
+    /// — the bit-identity contract cannot drift between them.
+    fn run_tile(&self, t: usize, source: &dyn MaskSource, want_scores: bool) -> TileRun {
+        let ts = self.grid.tile as usize;
+        let mut masks = source.tile_masks();
+        let mut trans = vec![1.0f32; ts * ts];
+        let mut color = vec![[0.0f32; 3]; ts * ts];
+        let mut stats = RenderStats::default();
+        // Private per-tile score partials, aligned to this tile's list.
+        let mut partial = vec![0.0f32; if want_scores { self.lists[t].len() } else { 0 }];
+        let rect = self.grid.rect(t);
+        let (w, h) = render_tile(
+            &self.splats,
+            &self.lists[t],
+            &rect,
+            &self.grid,
+            &self.opts,
+            masks.as_mut(),
+            &mut trans,
+            &mut color,
+            if want_scores { Some(partial.as_mut_slice()) } else { None },
+            &mut stats,
+        );
+        TileRun {
+            trans,
+            color,
+            partial,
+            stats,
+            w,
+            h,
+        }
+    }
+
+    /// Fold tile `t`'s list-aligned contribution partials into the global
+    /// per-Gaussian score array (indexed by Gaussian id). Callers must fold
+    /// in ascending tile index (and, across plans, ascending view index) —
+    /// the fixed reduce order that keeps scoring bit-identical to the
+    /// sequential pass for any worker count.
+    pub fn fold_scores(&self, t: usize, partial: &[f32], scores: &mut [f32]) {
+        fold_tile_scores(scores, &self.splats, &self.lists[t], partial);
+    }
+}
+
+/// One tile's blending products: tile-local transmittance/color scratch,
+/// list-aligned contribution partials, and workload counters (valid region
+/// `w × h` — edge tiles are cropped by the image bounds).
+struct TileRun {
+    trans: Vec<f32>,
+    color: Vec<[f32; 3]>,
+    partial: Vec<f32>,
+    stats: RenderStats,
+    w: usize,
+    h: usize,
+}
+
+/// Fold one tile's list-aligned contribution partials into the global
+/// per-Gaussian score array (indexed by Gaussian id), iterating in list
+/// order. Sequential and parallel scoring both reduce through this helper
+/// in ascending tile index, which is what makes the accumulated scores
+/// bit-identical for any worker count.
+fn fold_tile_scores(scores: &mut [f32], splats: &[Splat], list: &[u32], partial: &[f32]) {
+    for (li, &si) in list.iter().enumerate() {
+        scores[splats[si as usize].id as usize] += partial[li];
+    }
+}
+
+/// Render one tile's depth-sorted list into tile-local scratch buffers
+/// (`trans`/`color`, `tile_size²` entries, reset on entry). Returns the
+/// valid `(w, h)` region — edge tiles are cropped by the image bounds.
+/// This is the one blending loop shared by every consumer (sequential,
+/// tile-parallel, and the view×tile scoring queue), which is what makes
+/// them bit-identical.
+///
+/// `contributions`, when present, is a **tile-local** partial-sum buffer
+/// aligned to `list` (entry `li` accumulates Σ T·α of splat `list[li]`
+/// over this tile's pixels). Callers fold partials into the global
+/// per-Gaussian score array via [`fold_tile_scores`] in tile order — the
+/// fixed reduce order that keeps parallel scoring bit-identical to the
+/// sequential pass.
+#[allow(clippy::too_many_arguments)]
+fn render_tile(
+    splats: &[Splat],
+    list: &[u32],
+    rect: &Rect,
+    grid: &TileGrid,
+    opts: &RenderOptions,
+    masks: &mut dyn MaskProvider,
+    trans: &mut [f32],
+    color: &mut [[f32; 3]],
+    mut contributions: Option<&mut [f32]>,
+    stats: &mut RenderStats,
+) -> (usize, usize) {
+    let ts = grid.tile as usize;
+    let mt_cols = grid.tile.div_ceil(MINITILE) as usize;
+    let x_lo = rect.x0 as u32;
+    let y_lo = rect.y0 as u32;
+    let w = (grid.width - x_lo).min(grid.tile) as usize;
+    let h = (grid.height - y_lo).min(grid.tile) as usize;
+    trans[..ts * ts].fill(1.0);
+    for c in color.iter_mut() {
+        *c = [0.0; 3];
+    }
+    let mut active = (w * h) as u32;
+
+    'splat_loop: for (li, &si) in list.iter().enumerate() {
+        let s = &splats[si as usize];
+        let mask = masks.mask(rect, s);
+        if mask == 0 {
+            continue;
+        }
+        // Hot-loop locals (§Perf): hoist splat fields and precompute the
+        // Eq.-2 threshold so the (majority) sub-threshold pixels skip the
+        // exp() entirely: α = o·e^{−E} ≥ 1/255 ⇔ E ≤ ln(255·o).
+        let (ca, cb, cc) = (s.conic.a, s.conic.b, s.conic.c);
+        let (mx, my) = (s.mean.x, s.mean.y);
+        let opacity = s.opacity;
+        let e_max = (255.0 * opacity).max(1e-12).ln();
+        let col = s.color;
+        for py in 0..h {
+            let gy = y_lo as f32 + py as f32 + 0.5;
+            let dy = gy - my;
+            let half_cc_dy2 = 0.5 * cc * dy * dy;
+            let cb_dy = cb * dy;
+            let mt_row = py / MINITILE as usize;
+            for px in 0..w {
+                let mt = mt_row * mt_cols + px / MINITILE as usize;
+                if mask & (1 << mt) == 0 {
+                    continue;
+                }
+                let idx = py * ts + px;
+                let t_cur = trans[idx];
+                if t_cur < opts.t_min {
+                    continue;
+                }
+                stats.pairs_tested += 1;
+                let gx = x_lo as f32 + px as f32 + 0.5;
+                let dx = gx - mx;
+                let e = 0.5 * ca * dx * dx + half_cc_dy2 + cb_dy * dx;
+                if e >= e_max || e < 0.0 {
+                    continue; // α below 1/255 — no exp needed
+                }
+                let a = (opacity * (-e).exp()).min(0.999);
+                if a < ALPHA_MIN {
+                    continue;
+                }
+                stats.pairs_blended += 1;
+                let wgt = a * t_cur;
+                color[idx][0] += wgt * col[0];
+                color[idx][1] += wgt * col[1];
+                color[idx][2] += wgt * col[2];
+                if let Some(sc) = contributions.as_deref_mut() {
+                    sc[li] += wgt;
+                }
+                let t_new = t_cur * (1.0 - a);
+                trans[idx] = t_new;
+                if t_new < opts.t_min {
+                    active -= 1;
+                    if active == 0 {
+                        stats.tiles_early_terminated += 1;
+                        break 'splat_loop;
+                    }
+                }
+            }
+        }
+    }
+    (w, h)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::camera::{Camera, Intrinsics};
+    use crate::numeric::linalg::v3;
+    use crate::render::raster::{render, render_masked, AllOnes, VanillaMasks};
+    use crate::scene::synthetic::{generate_scaled, preset};
+
+    fn cam(px: u32) -> Camera {
+        Camera::look_at(
+            Intrinsics::from_fov(px, px, 1.2),
+            v3(0.0, 2.5, -12.0),
+            v3(0.0, 0.5, 0.0),
+            v3(0.0, 1.0, 0.0),
+        )
+    }
+
+    #[test]
+    fn plan_matches_oneshot_wrappers_bitwise() {
+        let scene = generate_scaled(&preset("truck"), 0.01);
+        let c = cam(96);
+        let opts = RenderOptions::default();
+        let oneshot = render(&scene, &c, &opts);
+        let plan = FramePlan::build(&scene, &c, &opts);
+        let planned = plan.render(&VanillaMasks, None);
+        assert_eq!(oneshot.image.data, planned.image.data);
+        assert_eq!(oneshot.stats.pairs_tested, planned.stats.pairs_tested);
+        assert_eq!(oneshot.stats.tile_pairs, planned.stats.tile_pairs);
+    }
+
+    #[test]
+    fn plan_reuse_is_bit_stable() {
+        let scene = generate_scaled(&preset("garden"), 0.01);
+        let c = cam(96);
+        let plan = FramePlan::build(&scene, &c, &RenderOptions::default());
+        let a = plan.render(&VanillaMasks, None);
+        let b = plan.render(&VanillaMasks, None);
+        assert_eq!(a.image.data, b.image.data);
+        assert_eq!(a.stats.pairs_blended, b.stats.pairs_blended);
+    }
+
+    #[test]
+    fn scored_parallel_matches_sequential_bitwise() {
+        let scene = generate_scaled(&preset("truck"), 0.01);
+        let c = cam(96);
+        // Sequential reference: render_masked folds the same per-tile
+        // partial sums in tile order.
+        let mut seq = vec![0.0f32; scene.len()];
+        let opts = RenderOptions::default();
+        let seq_out = render_masked(&scene, &c, &opts, &mut AllOnes, Some(&mut seq));
+        assert!(seq.iter().any(|&s| s > 0.0), "scene must contribute");
+        for workers in [2, 4, 0] {
+            let mut par = vec![0.0f32; scene.len()];
+            let popts = RenderOptions {
+                workers,
+                ..RenderOptions::default()
+            };
+            let plan = FramePlan::build(&scene, &c, &popts);
+            let par_out = plan.render(&VanillaMasks, Some(&mut par));
+            let seq_bits: Vec<u32> = seq.iter().map(|s| s.to_bits()).collect();
+            let par_bits: Vec<u32> = par.iter().map(|s| s.to_bits()).collect();
+            assert_eq!(seq_bits, par_bits, "workers={workers}");
+            assert_eq!(seq_out.image.data, par_out.image.data, "workers={workers}");
+            assert_eq!(seq_out.stats.pairs_blended, par_out.stats.pairs_blended);
+        }
+    }
+
+    #[test]
+    fn scoring_does_not_change_the_image() {
+        let scene = generate_scaled(&preset("garden"), 0.01);
+        let c = cam(96);
+        let opts = RenderOptions {
+            workers: 0,
+            ..RenderOptions::default()
+        };
+        let plan = FramePlan::build(&scene, &c, &opts);
+        let plain = plan.render(&VanillaMasks, None);
+        let mut scores = vec![0.0f32; scene.len()];
+        let scored = plan.render(&VanillaMasks, Some(&mut scores));
+        assert_eq!(plain.image.data, scored.image.data);
+        assert_eq!(plain.stats.pairs_tested, scored.stats.pairs_tested);
+    }
+
+    #[test]
+    fn score_tile_drain_matches_full_render() {
+        // Draining tiles one by one through score_tile + fold_scores (the
+        // view×tile queue's unit) must reproduce the full render's scores.
+        let scene = generate_scaled(&preset("truck"), 0.01);
+        let c = cam(96);
+        let plan = FramePlan::build(&scene, &c, &RenderOptions::default());
+        let mut full = vec![0.0f32; scene.len()];
+        let full_out = plan.render(&VanillaMasks, Some(&mut full));
+        let mut drained = vec![0.0f32; scene.len()];
+        let mut stats = plan.frame_stats();
+        for t in 0..plan.num_tiles() {
+            let (partial, tstats) = plan.score_tile(t, &VanillaMasks);
+            plan.fold_scores(t, &partial, &mut drained);
+            stats.absorb(&tstats);
+        }
+        let a: Vec<u32> = full.iter().map(|s| s.to_bits()).collect();
+        let b: Vec<u32> = drained.iter().map(|s| s.to_bits()).collect();
+        assert_eq!(a, b);
+        assert_eq!(full_out.stats.pairs_tested, stats.pairs_tested);
+        assert_eq!(full_out.stats.pairs_blended, stats.pairs_blended);
+        assert_eq!(
+            full_out.stats.tiles_early_terminated,
+            stats.tiles_early_terminated
+        );
+    }
+}

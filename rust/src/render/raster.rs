@@ -1,31 +1,36 @@
-//! Reference tile rasterizer (paper Step (3)) — the golden functional model.
+//! Rasterizer entry points and mask-provider contracts (paper Step (3)).
 //!
-//! Splat-major alpha blending within each tile, exactly the vanilla 3DGS
-//! kernel semantics: per pixel, iterate the depth-sorted tile list, skip
-//! Gaussians with α < 1/255, accumulate color with transmittance, and stop
-//! when transmittance drops below `t_min` ("early termination").
+//! The actual staged pipeline — project → tile-bin → depth-sort → blend —
+//! lives in [`super::plan::FramePlan`]; this module holds the shared types
+//! (`RenderOptions`, `RenderStats`, the mask-provider traits) and two thin
+//! one-shot wrappers ([`render`], [`render_masked`]) that build a plan and
+//! render it once. Consumers that re-render one view (config sweeps,
+//! scoring, the PJRT backend) should build a `FramePlan` and reuse it.
 //!
-//! The rasterizer accepts an optional **mini-tile mask provider** so the same
-//! code path renders: vanilla (mask = all ones), GSCore-style OBB-filtered
-//! lists, or FLICKER's Mini-Tile CAT (mask from `crate::cat`). It also
-//! optionally accumulates per-Gaussian contribution scores (used by pruning)
-//! and tracks the per-pixel workload counters behind paper Fig. 4.
+//! Splat-major alpha blending within each tile follows the vanilla 3DGS
+//! kernel semantics exactly: per pixel, iterate the depth-sorted tile list,
+//! skip Gaussians with α < 1/255, accumulate color with transmittance, and
+//! stop when transmittance drops below `t_min` ("early termination").
+//!
+//! The rasterizer accepts an optional **mini-tile mask provider** so the
+//! same code path renders: vanilla (mask = all ones), GSCore-style
+//! OBB-filtered lists, or FLICKER's Mini-Tile CAT (mask from `crate::cat`).
+//! It also optionally accumulates per-Gaussian contribution scores (used by
+//! pruning) and tracks the per-pixel workload counters behind paper Fig. 4.
 //!
 //! **Determinism contract.** Tiles are independent work units and share one
-//! blending loop (`render_tile`) between the sequential and parallel
-//! paths, so images are bit-identical for any worker count. Contribution
-//! scores obey the same contract: each tile accumulates into a private
-//! list-aligned partial buffer, and partials are reduced into the global
-//! per-Gaussian array in ascending tile index, whether tiles ran on one
-//! thread or many.
+//! blending loop between the sequential and parallel paths, so images are
+//! bit-identical for any worker count. Contribution scores obey the same
+//! contract: each tile accumulates into a private list-aligned partial
+//! buffer, and partials are reduced into the global per-Gaussian array in
+//! ascending tile index, whether tiles ran on one thread or many.
 
 use super::image::Image;
-use super::project::{project_scene, Splat, ALPHA_MIN};
-use super::sort::sort_by_depth;
-use super::tile::{build_tile_lists, Rect, Strategy, TileGrid};
+use super::plan::FramePlan;
+use super::project::Splat;
+use super::tile::{Rect, Strategy};
 use crate::camera::Camera;
 use crate::scene::gaussian::Scene;
-use crate::util::pool;
 
 /// Mini-tile edge in pixels (paper: 4×4 mini-tiles inside 16×16 tiles).
 pub const MINITILE: u32 = 4;
@@ -151,21 +156,24 @@ pub struct RenderOutput {
     pub stats: RenderStats,
 }
 
-/// Render the scene through the reference pipeline. Tiles (and their mask
+/// One-shot render through the reference pipeline: build a [`FramePlan`]
+/// and render it once with vanilla masks. Tiles (and their mask
 /// generation) fan across the worker pool when `opts.workers != 1`; the
 /// output is bit-identical for any worker count.
+///
+/// Re-rendering the same view (sweeps, scoring)? Build the plan once with
+/// [`FramePlan::build`] and call [`FramePlan::render`] per config instead.
 pub fn render(scene: &Scene, cam: &Camera, opts: &RenderOptions) -> RenderOutput {
-    render_with_source(scene, cam, opts, &VanillaMasks)
+    FramePlan::build(scene, cam, opts).render(&VanillaMasks, None)
 }
 
-/// Render with a mini-tile mask provider (CAT integration point) and an
-/// optional per-Gaussian contribution accumulator (pruning integration).
-/// `contributions` is indexed by Gaussian id and must be `scene.len()`
-/// long. Tiles run sequentially (the provider is borrowed mutably), but
-/// scores accumulate through the same per-tile partial-sum fold as the
-/// parallel path, so the result is bit-identical to [`render_scored`] at
-/// any worker count. Use [`render_with_source`] / [`render_scored`] for
-/// the tile-parallel paths.
+/// One-shot render with a caller-owned mini-tile mask provider (CAT
+/// instrumentation point) and an optional per-Gaussian contribution
+/// accumulator (pruning integration). `contributions` is indexed by
+/// Gaussian id and must be `scene.len()` long. Tiles run sequentially (the
+/// provider is borrowed mutably), but scores accumulate through the same
+/// per-tile partial-sum fold as the parallel path, so the result is
+/// bit-identical to [`FramePlan::render`] at any worker count.
 ///
 /// # Examples
 ///
@@ -198,364 +206,9 @@ pub fn render_masked(
     cam: &Camera,
     opts: &RenderOptions,
     masks: &mut dyn MaskProvider,
-    mut contributions: Option<&mut [f32]>,
+    contributions: Option<&mut [f32]>,
 ) -> RenderOutput {
-    let splats = project_scene(scene, cam);
-    let grid = TileGrid::new(cam.intr.width, cam.intr.height, opts.tile_size);
-    let mut lists = build_tile_lists(&splats, &grid, opts.strategy);
-    for list in &mut lists {
-        sort_by_depth(list, &splats);
-    }
-    render_lists(
-        &splats,
-        &lists,
-        &grid,
-        opts,
-        masks,
-        contributions.as_deref_mut(),
-    )
-}
-
-/// Project → tile-bin → depth-sort → render through `source`, fanning the
-/// per-tile work (rasterization and mask generation) across
-/// `util::pool::for_each_index` when `opts.workers != 1`.
-pub fn render_with_source(
-    scene: &Scene,
-    cam: &Camera,
-    opts: &RenderOptions,
-    source: &dyn MaskSource,
-) -> RenderOutput {
-    let splats = project_scene(scene, cam);
-    let grid = TileGrid::new(cam.intr.width, cam.intr.height, opts.tile_size);
-    let mut lists = build_tile_lists(&splats, &grid, opts.strategy);
-    for list in &mut lists {
-        sort_by_depth(list, &splats);
-    }
-    render_lists_parallel(&splats, &lists, &grid, opts, source)
-}
-
-/// Project → tile-bin → depth-sort → render through `source`, accumulating
-/// per-Gaussian contribution scores (Σ T·α over all pixels, the pruning
-/// signal) into `scores` — indexed by Gaussian id, so it must be
-/// `scene.len()` long. Tiles (and their mask generation) fan across the
-/// worker pool exactly like [`render_with_source`]; the per-tile score
-/// partials reduce in ascending tile order, so both the image **and** the
-/// scores are bit-identical for any `opts.workers` value.
-pub fn render_scored(
-    scene: &Scene,
-    cam: &Camera,
-    opts: &RenderOptions,
-    source: &dyn MaskSource,
-    scores: &mut [f32],
-) -> RenderOutput {
-    let splats = project_scene(scene, cam);
-    let grid = TileGrid::new(cam.intr.width, cam.intr.height, opts.tile_size);
-    let mut lists = build_tile_lists(&splats, &grid, opts.strategy);
-    for list in &mut lists {
-        sort_by_depth(list, &splats);
-    }
-    render_lists_scored(&splats, &lists, &grid, opts, source, scores)
-}
-
-/// Render one tile's depth-sorted list into tile-local scratch buffers
-/// (`trans`/`color`, `tile_size²` entries, reset on entry). Returns the
-/// valid `(w, h)` region — edge tiles are cropped by the image bounds.
-/// This is the one blending loop shared by the sequential and parallel
-/// paths, which is what makes them bit-identical.
-///
-/// `contributions`, when present, is a **tile-local** partial-sum buffer
-/// aligned to `list` (entry `li` accumulates Σ T·α of splat `list[li]`
-/// over this tile's pixels). Callers fold partials into the global
-/// per-Gaussian score array via [`fold_tile_scores`] in tile order — the
-/// fixed reduce order that keeps parallel scoring bit-identical to the
-/// sequential pass.
-#[allow(clippy::too_many_arguments)]
-fn render_tile(
-    splats: &[Splat],
-    list: &[u32],
-    rect: &Rect,
-    grid: &TileGrid,
-    opts: &RenderOptions,
-    masks: &mut dyn MaskProvider,
-    trans: &mut [f32],
-    color: &mut [[f32; 3]],
-    mut contributions: Option<&mut [f32]>,
-    stats: &mut RenderStats,
-) -> (usize, usize) {
-    let ts = grid.tile as usize;
-    let mt_cols = grid.tile.div_ceil(MINITILE) as usize;
-    let x_lo = rect.x0 as u32;
-    let y_lo = rect.y0 as u32;
-    let w = (grid.width - x_lo).min(grid.tile) as usize;
-    let h = (grid.height - y_lo).min(grid.tile) as usize;
-    trans[..ts * ts].fill(1.0);
-    for c in color.iter_mut() {
-        *c = [0.0; 3];
-    }
-    let mut active = (w * h) as u32;
-
-    'splat_loop: for (li, &si) in list.iter().enumerate() {
-        let s = &splats[si as usize];
-        let mask = masks.mask(rect, s);
-        if mask == 0 {
-            continue;
-        }
-        // Hot-loop locals (§Perf): hoist splat fields and precompute the
-        // Eq.-2 threshold so the (majority) sub-threshold pixels skip the
-        // exp() entirely: α = o·e^{−E} ≥ 1/255 ⇔ E ≤ ln(255·o).
-        let (ca, cb, cc) = (s.conic.a, s.conic.b, s.conic.c);
-        let (mx, my) = (s.mean.x, s.mean.y);
-        let opacity = s.opacity;
-        let e_max = (255.0 * opacity).max(1e-12).ln();
-        let col = s.color;
-        for py in 0..h {
-            let gy = y_lo as f32 + py as f32 + 0.5;
-            let dy = gy - my;
-            let half_cc_dy2 = 0.5 * cc * dy * dy;
-            let cb_dy = cb * dy;
-            let mt_row = py / MINITILE as usize;
-            for px in 0..w {
-                let mt = mt_row * mt_cols + px / MINITILE as usize;
-                if mask & (1 << mt) == 0 {
-                    continue;
-                }
-                let idx = py * ts + px;
-                let t_cur = trans[idx];
-                if t_cur < opts.t_min {
-                    continue;
-                }
-                stats.pairs_tested += 1;
-                let gx = x_lo as f32 + px as f32 + 0.5;
-                let dx = gx - mx;
-                let e = 0.5 * ca * dx * dx + half_cc_dy2 + cb_dy * dx;
-                if e >= e_max || e < 0.0 {
-                    continue; // α below 1/255 — no exp needed
-                }
-                let a = (opacity * (-e).exp()).min(0.999);
-                if a < ALPHA_MIN {
-                    continue;
-                }
-                stats.pairs_blended += 1;
-                let wgt = a * t_cur;
-                color[idx][0] += wgt * col[0];
-                color[idx][1] += wgt * col[1];
-                color[idx][2] += wgt * col[2];
-                if let Some(sc) = contributions.as_deref_mut() {
-                    sc[li] += wgt;
-                }
-                let t_new = t_cur * (1.0 - a);
-                trans[idx] = t_new;
-                if t_new < opts.t_min {
-                    active -= 1;
-                    if active == 0 {
-                        stats.tiles_early_terminated += 1;
-                        break 'splat_loop;
-                    }
-                }
-            }
-        }
-    }
-    (w, h)
-}
-
-/// Frame-level stats skeleton: the per-tile loops only touch the pair and
-/// early-termination counters, so these totals are set once up front.
-fn frame_stats(splats: &[Splat], lists: &[Vec<u32>], grid: &TileGrid) -> RenderStats {
-    RenderStats {
-        splats: splats.len(),
-        tile_pairs: lists.iter().map(|l| l.len()).sum(),
-        pixels: (grid.width * grid.height) as u64,
-        ..Default::default()
-    }
-}
-
-/// Fold one tile's list-aligned contribution partials into the global
-/// per-Gaussian score array (indexed by Gaussian id), iterating in list
-/// order. Sequential and parallel scoring both reduce through this helper
-/// in ascending tile index, which is what makes the accumulated scores
-/// bit-identical for any worker count.
-fn fold_tile_scores(scores: &mut [f32], splats: &[Splat], list: &[u32], partial: &[f32]) {
-    for (li, &si) in list.iter().enumerate() {
-        scores[splats[si as usize].id as usize] += partial[li];
-    }
-}
-
-/// Core loop over prebuilt, depth-sorted tile lists (sequential).
-/// `contributions`, when present, is the global per-Gaussian score array
-/// (indexed by Gaussian id); each tile accumulates into a tile-local
-/// partial buffer which is folded in ascending tile order — the same
-/// reduce order as the parallel path.
-pub fn render_lists(
-    splats: &[Splat],
-    lists: &[Vec<u32>],
-    grid: &TileGrid,
-    opts: &RenderOptions,
-    masks: &mut dyn MaskProvider,
-    mut contributions: Option<&mut [f32]>,
-) -> RenderOutput {
-    let mut img = Image::new(grid.width, grid.height);
-    let mut stats = frame_stats(splats, lists, grid);
-    let ts = grid.tile as usize;
-    // Per-tile scratch, reused across tiles (no allocation in the loop).
-    let mut trans = vec![1.0f32; ts * ts];
-    let mut color = vec![[0.0f32; 3]; ts * ts];
-    let scoring = contributions.is_some();
-    let mut partial: Vec<f32> = Vec::new();
-
-    for (t, list) in lists.iter().enumerate() {
-        let rect = grid.rect(t);
-        if scoring {
-            partial.clear();
-            partial.resize(list.len(), 0.0);
-        }
-        let (w, h) = render_tile(
-            splats,
-            list,
-            &rect,
-            grid,
-            opts,
-            masks,
-            &mut trans,
-            &mut color,
-            if scoring { Some(partial.as_mut_slice()) } else { None },
-            &mut stats,
-        );
-        if let Some(sc) = contributions.as_deref_mut() {
-            fold_tile_scores(sc, splats, list, &partial);
-        }
-        // Composite over background.
-        let x_lo = rect.x0 as u32;
-        let y_lo = rect.y0 as u32;
-        for py in 0..h {
-            for px in 0..w {
-                let idx = py * ts + px;
-                let tr = trans[idx];
-                let c = color[idx];
-                img.set(
-                    x_lo + px as u32,
-                    y_lo + py as u32,
-                    [
-                        c[0] + tr * opts.background[0],
-                        c[1] + tr * opts.background[1],
-                        c[2] + tr * opts.background[2],
-                    ],
-                );
-            }
-        }
-    }
-    RenderOutput { image: img, stats }
-}
-
-/// Tile-parallel core: each tile renders independently (fresh mask provider
-/// from `source`, tile-local scratch) on the scoped worker pool, then the
-/// composited tiles are stitched in index order. Falls back to
-/// [`render_lists`] when one worker resolves.
-pub fn render_lists_parallel(
-    splats: &[Splat],
-    lists: &[Vec<u32>],
-    grid: &TileGrid,
-    opts: &RenderOptions,
-    source: &dyn MaskSource,
-) -> RenderOutput {
-    render_lists_core(splats, lists, grid, opts, source, None)
-}
-
-/// Tile-parallel render that also accumulates per-Gaussian contribution
-/// scores (Σ T·α, the pruning signal) into `scores` — the global score
-/// array indexed by Gaussian id. Each tile accumulates into a private
-/// list-aligned partial buffer on its worker, and partials are reduced in
-/// ascending tile order after the fan-out, so `scores` is bit-identical to
-/// the sequential [`render_lists`] pass for any worker count.
-pub fn render_lists_scored(
-    splats: &[Splat],
-    lists: &[Vec<u32>],
-    grid: &TileGrid,
-    opts: &RenderOptions,
-    source: &dyn MaskSource,
-    scores: &mut [f32],
-) -> RenderOutput {
-    render_lists_core(splats, lists, grid, opts, source, Some(scores))
-}
-
-/// Shared tile-parallel implementation behind [`render_lists_parallel`] and
-/// [`render_lists_scored`]: fan tiles across the pool, then stitch pixels,
-/// absorb stats, and fold score partials in ascending tile index.
-fn render_lists_core(
-    splats: &[Splat],
-    lists: &[Vec<u32>],
-    grid: &TileGrid,
-    opts: &RenderOptions,
-    source: &dyn MaskSource,
-    mut scores: Option<&mut [f32]>,
-) -> RenderOutput {
-    let workers = pool::resolve_workers(opts.workers).min(lists.len().max(1));
-    if workers <= 1 {
-        let mut masks = source.tile_masks();
-        return render_lists(splats, lists, grid, opts, masks.as_mut(), scores.as_deref_mut());
-    }
-    let ts = grid.tile as usize;
-    let want_scores = scores.is_some();
-    let tiles: Vec<(Vec<f32>, Vec<f32>, RenderStats)> =
-        pool::map_indexed(lists.len(), workers, |t| {
-            let mut masks = source.tile_masks();
-            let mut trans = vec![1.0f32; ts * ts];
-            let mut color = vec![[0.0f32; 3]; ts * ts];
-            let mut stats = RenderStats::default();
-            // Private per-tile score partials, aligned to this tile's list.
-            let mut partial = vec![0.0f32; if want_scores { lists[t].len() } else { 0 }];
-            let rect = grid.rect(t);
-            let (w, h) = render_tile(
-                splats,
-                &lists[t],
-                &rect,
-                grid,
-                opts,
-                masks.as_mut(),
-                &mut trans,
-                &mut color,
-                if want_scores { Some(partial.as_mut_slice()) } else { None },
-                &mut stats,
-            );
-            // Composite over background into a w×h tile pixel block.
-            let mut pixels = vec![0.0f32; w * h * 3];
-            for py in 0..h {
-                for px in 0..w {
-                    let idx = py * ts + px;
-                    let tr = trans[idx];
-                    let c = color[idx];
-                    let o = (py * w + px) * 3;
-                    pixels[o] = c[0] + tr * opts.background[0];
-                    pixels[o + 1] = c[1] + tr * opts.background[1];
-                    pixels[o + 2] = c[2] + tr * opts.background[2];
-                }
-            }
-            (pixels, partial, stats)
-        });
-
-    let mut img = Image::new(grid.width, grid.height);
-    let mut stats = frame_stats(splats, lists, grid);
-    for (t, (pixels, partial, tile_stats)) in tiles.iter().enumerate() {
-        stats.absorb(tile_stats);
-        if let Some(sc) = scores.as_deref_mut() {
-            fold_tile_scores(sc, splats, &lists[t], partial);
-        }
-        let rect = grid.rect(t);
-        let x_lo = rect.x0 as u32;
-        let y_lo = rect.y0 as u32;
-        let w = (grid.width - x_lo).min(grid.tile) as usize;
-        let h = (grid.height - y_lo).min(grid.tile) as usize;
-        for py in 0..h {
-            for px in 0..w {
-                let o = (py * w + px) * 3;
-                img.set(
-                    x_lo + px as u32,
-                    y_lo + py as u32,
-                    [pixels[o], pixels[o + 1], pixels[o + 2]],
-                );
-            }
-        }
-    }
-    RenderOutput { image: img, stats }
+    FramePlan::build(scene, cam, opts).render_with(masks, contributions)
 }
 
 #[cfg(test)]
@@ -727,46 +380,6 @@ mod tests {
                 par.stats.tiles_early_terminated
             );
         }
-    }
-
-    #[test]
-    fn scored_parallel_matches_sequential_bitwise() {
-        let scene = generate_scaled(&preset("truck"), 0.01);
-        let c = cam(96);
-        // Sequential reference: render_masked folds the same per-tile
-        // partial sums in tile order.
-        let mut seq = vec![0.0f32; scene.len()];
-        let opts = RenderOptions::default();
-        let seq_out = render_masked(&scene, &c, &opts, &mut AllOnes, Some(&mut seq));
-        assert!(seq.iter().any(|&s| s > 0.0), "scene must contribute");
-        for workers in [2, 4, 0] {
-            let mut par = vec![0.0f32; scene.len()];
-            let popts = RenderOptions {
-                workers,
-                ..RenderOptions::default()
-            };
-            let par_out = render_scored(&scene, &c, &popts, &VanillaMasks, &mut par);
-            let seq_bits: Vec<u32> = seq.iter().map(|s| s.to_bits()).collect();
-            let par_bits: Vec<u32> = par.iter().map(|s| s.to_bits()).collect();
-            assert_eq!(seq_bits, par_bits, "workers={workers}");
-            assert_eq!(seq_out.image.data, par_out.image.data, "workers={workers}");
-            assert_eq!(seq_out.stats.pairs_blended, par_out.stats.pairs_blended);
-        }
-    }
-
-    #[test]
-    fn scoring_does_not_change_the_image() {
-        let scene = generate_scaled(&preset("garden"), 0.01);
-        let c = cam(96);
-        let opts = RenderOptions {
-            workers: 0,
-            ..RenderOptions::default()
-        };
-        let plain = render(&scene, &c, &opts);
-        let mut scores = vec![0.0f32; scene.len()];
-        let scored = render_scored(&scene, &c, &opts, &VanillaMasks, &mut scores);
-        assert_eq!(plain.image.data, scored.image.data);
-        assert_eq!(plain.stats.pairs_tested, scored.stats.pairs_tested);
     }
 
     #[test]

@@ -7,17 +7,21 @@
 //! renormalization that compensates lost transmittance (the part of
 //! fine-tuning that matters for downstream workload shape).
 //!
-//! **Determinism contract.** The scoring pass ([`score_views`]) fans
-//! scoring views across the worker pool (and each view's tiles across the
-//! remaining budget, the same split as `coordinator::render_orbit`). Every
-//! view accumulates into a private score buffer built from per-tile partial
-//! sums reduced in tile order; per-view buffers then reduce in view order.
-//! The accumulated scores — and therefore the pruning decision — are
+//! **Determinism contract.** The scoring pass ([`score_views`]) builds a
+//! [`FramePlan`] per view, then drains one flattened (view × tile) work
+//! queue through the pool's atomic work-stealing counter — any worker can
+//! score any tile of any view, so a few views on many cores still saturate
+//! the machine (no views-first budget split to strand workers). The
+//! reduction order stays fixed regardless of who computed what: per-tile
+//! partials fold into a private per-view score buffer in ascending tile
+//! index, and per-view buffers fold in ascending view index. The
+//! accumulated scores — and therefore the pruning decision — are
 //! bit-identical for any worker count.
 
 use super::gaussian::Scene;
 use crate::camera::Camera;
-use crate::render::raster::{render_scored, RenderOptions, RenderStats, VanillaMasks};
+use crate::render::plan::FramePlan;
+use crate::render::raster::{RenderOptions, RenderStats, VanillaMasks};
 use crate::util::pool;
 
 /// Pruning configuration.
@@ -29,8 +33,9 @@ pub struct PruneConfig {
     /// Opacity boost factor applied as the fine-tune stand-in.
     pub finetune_opacity_gain: f32,
     /// Worker threads for the contribution-scoring pass (0 = auto, 1 =
-    /// sequential). The budget splits across scoring views first and each
-    /// view's tile fan-out second; scores are bit-identical for any value.
+    /// sequential). All tiles of all scoring views drain through one
+    /// flattened work-stealing queue; scores are bit-identical for any
+    /// value.
     pub workers: usize,
 }
 
@@ -64,11 +69,15 @@ pub struct PruneReport {
 /// sequential). Returns the score array (indexed by Gaussian id) and the
 /// [`RenderStats`] absorbed across all scoring views.
 ///
-/// The worker budget splits like `coordinator::render_orbit`: up to one
-/// thread per view, with each view spending the remainder on its tile
-/// fan-out. Scores are bit-identical for any worker count — per-tile
-/// partial sums reduce in tile order within a view, and per-view sums
-/// reduce in view order.
+/// A [`FramePlan`] is built per view (projection, binning, and depth sort
+/// run once per view, fanned across the pool), then **all tiles of all
+/// views** drain through one flattened work queue: a single work-stealing
+/// counter hands out `(view, tile)` pairs, so few views on many cores
+/// still use every worker — the regime where a views-first budget split
+/// would strand most of the machine. Scores are bit-identical for any
+/// worker count: tile partials fold into a per-view buffer in ascending
+/// tile index, and per-view buffers fold in ascending view index, no
+/// matter which worker computed which tile.
 pub fn score_views(
     scene: &Scene,
     views: &[Camera],
@@ -77,27 +86,47 @@ pub fn score_views(
 ) -> (Vec<f32>, RenderStats) {
     assert!(!views.is_empty(), "need at least one scoring view");
     let total_workers = pool::resolve_workers(workers);
-    let view_workers = total_workers.min(views.len());
-    let tile_workers = (total_workers / view_workers.max(1)).max(1);
-    let per_view: Vec<(Vec<f32>, RenderStats)> =
-        pool::map_indexed(views.len(), view_workers, |v| {
-            let mut scores = vec![0.0f32; scene.len()];
-            let vopts = RenderOptions {
-                workers: tile_workers,
-                ..*opts
-            };
-            let out = render_scored(scene, &views[v], &vopts, &VanillaMasks, &mut scores);
-            (scores, out.stats)
+
+    // Stage 1: one FramePlan per view (frame preparation fans over views).
+    let plans: Vec<FramePlan> =
+        pool::map_indexed(views.len(), total_workers.min(views.len()), |v| {
+            FramePlan::build(scene, &views[v], opts)
         });
-    // Fixed (view-index) reduce order on top of the rasterizer's fixed
-    // (tile-index) order — the whole scoring pass is order-deterministic.
+
+    // Stage 2: flatten (view × tile) into one queue, view-major so the
+    // sequential (workers = 1) drain visits tiles in the reduce order.
+    // Tiles complete out of order, so every tile's partial is retained
+    // until the stage-3 fold — O(Σ tile-list lengths) f32s, the same
+    // order of memory as the plans' tile lists themselves.
+    let items: Vec<(u32, u32)> = plans
+        .iter()
+        .enumerate()
+        .flat_map(|(v, p)| (0..p.num_tiles() as u32).map(move |t| (v as u32, t)))
+        .collect();
+    let partials: Vec<(Vec<f32>, RenderStats)> =
+        pool::map_indexed(items.len(), total_workers, |i| {
+            let (v, t) = items[i];
+            plans[v as usize].score_tile(t as usize, &VanillaMasks)
+        });
+
+    // Stage 3: fold view-major then tile-major — the fixed reduce order
+    // that makes the whole pass order-deterministic.
     let mut scores = vec![0.0f32; scene.len()];
     let mut stats = RenderStats::default();
-    for (view_scores, view_stats) in &per_view {
-        for (acc, s) in scores.iter_mut().zip(view_scores) {
+    let mut k = 0;
+    for plan in &plans {
+        let mut view_scores = vec![0.0f32; scene.len()];
+        let mut view_stats = plan.frame_stats();
+        for t in 0..plan.num_tiles() {
+            let (partial, tile_stats) = &partials[k];
+            k += 1;
+            plan.fold_scores(t, partial, &mut view_scores);
+            view_stats.absorb(tile_stats);
+        }
+        for (acc, s) in scores.iter_mut().zip(&view_scores) {
             *acc += *s;
         }
-        stats.absorb(view_stats);
+        stats.absorb(&view_stats);
     }
     (scores, stats)
 }

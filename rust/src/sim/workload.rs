@@ -10,12 +10,10 @@
 use super::{HwConfig, SubtileTest};
 use crate::camera::Camera;
 use crate::cat::{CatConfig, CatEngine};
-use crate::render::project::{project_scene, Splat, ALPHA_MIN};
-use crate::render::raster::MINITILE;
-use crate::render::sort::sort_by_depth;
-use crate::render::tile::{
-    build_tile_lists, intersects_aabb, intersects_obb, Rect, Strategy, TileGrid,
-};
+use crate::render::plan::FramePlan;
+use crate::render::project::{Splat, ALPHA_MIN};
+use crate::render::raster::{RenderOptions, MINITILE};
+use crate::render::tile::{intersects_aabb, intersects_obb, Rect, Strategy};
 use crate::scene::gaussian::Scene;
 
 /// One Gaussian's entry in a sub-tile stream.
@@ -87,21 +85,41 @@ impl FrameWorkload {
     }
 }
 
-/// Extract the frame workload for a hardware config.
+/// Extract the frame workload for a hardware config. Builds a fresh
+/// [`FramePlan`] (16×16 AABB tiling, the paper's fixed configuration) and
+/// delegates to [`extract_from_plan`] — callers that already hold a plan
+/// for this view (e.g. after rendering it) should call that directly.
 pub fn extract(scene: &Scene, cam: &Camera, hw: &HwConfig) -> FrameWorkload {
-    let splats = project_scene(scene, cam);
-    let grid = TileGrid::new(cam.intr.width, cam.intr.height, 16);
-    let mut lists = build_tile_lists(&splats, &grid, Strategy::Aabb);
-    for list in &mut lists {
-        sort_by_depth(list, &splats);
-    }
+    let plan = FramePlan::build(scene, cam, &RenderOptions::default());
+    extract_from_plan(scene, &plan, hw)
+}
 
+/// Extract the frame workload from a prebuilt [`FramePlan`] — projection,
+/// tile binning, and depth sorting are reused from the plan instead of
+/// re-derived, so a view that was just rendered can be simulated without
+/// repeating its frame preparation.
+///
+/// # Panics
+///
+/// The sub-tile/mini-tile sweep below hard-codes the paper's fixed
+/// geometry (16×16 AABB tiles split into 8×8 sub-tiles of 4×4
+/// mini-tiles), so plans built with any other `tile_size`/`strategy` are
+/// rejected rather than silently miscounted.
+pub fn extract_from_plan(scene: &Scene, plan: &FramePlan, hw: &HwConfig) -> FrameWorkload {
+    assert!(
+        plan.grid.tile == 16 && plan.opts.strategy == Strategy::Aabb,
+        "workload extraction assumes the paper's 16×16 AABB tiling \
+         (got tile_size {} / {:?})",
+        plan.grid.tile,
+        plan.opts.strategy
+    );
+    let (splats, grid, lists) = (&plan.splats, &plan.grid, &plan.lists);
     let mut wl = FrameWorkload {
         scene_gaussians: scene.len(),
         visible_splats: splats.len(),
         tile_pairs: lists.iter().map(|l| l.len()).sum(),
-        width: cam.intr.width,
-        height: cam.intr.height,
+        width: grid.width,
+        height: grid.height,
         ..Default::default()
     };
     let mut cat = CatEngine::new(CatConfig {
@@ -252,6 +270,25 @@ mod tests {
 
     fn scene() -> Scene {
         generate_scaled(&preset("garden"), 0.01)
+    }
+
+    #[test]
+    fn extract_from_plan_matches_extract() {
+        // Reusing a render's FramePlan must produce the identical workload
+        // trace (extract() is just build + extract_from_plan).
+        let s = scene();
+        let c = cam();
+        let hw = HwConfig::flicker32();
+        let base = extract(&s, &c, &hw);
+        let plan = FramePlan::build(&s, &c, &RenderOptions::default());
+        let reused = extract_from_plan(&s, &plan, &hw);
+        assert_eq!(base.visible_splats, reused.visible_splats);
+        assert_eq!(base.tile_pairs, reused.tile_pairs);
+        assert_eq!(base.stage1_pairs, reused.stage1_pairs);
+        assert_eq!(base.stage2_pairs, reused.stage2_pairs);
+        assert_eq!(base.minitile_pairs, reused.minitile_pairs);
+        assert_eq!(base.blended_pairs, reused.blended_pairs);
+        assert_eq!(base.tiles.len(), reused.tiles.len());
     }
 
     #[test]

@@ -37,11 +37,20 @@ pub struct Bencher {
     pub id: String,
 }
 
+/// True when the bench-smoke knob is on: the `FLICKER_BENCH_QUICK` env var
+/// or a `--quick` CLI argument (what `make bench-smoke` / the CI
+/// bench-smoke lane pass via `cargo bench -- --quick`). Quick mode runs
+/// every measurement once-ish at a reduced default resolution so bench
+/// targets are exercised end-to-end without paying for full sampling.
+pub fn quick_mode() -> bool {
+    std::env::var("FLICKER_BENCH_QUICK").is_ok() || std::env::args().any(|a| a == "--quick")
+}
+
 impl Bencher {
     /// New harness for the figure/table `id` (sidecar filename).
     pub fn new(id: &str) -> Self {
         // Keep runs short: single-core machine, many bench targets.
-        let quick = std::env::var("FLICKER_BENCH_QUICK").is_ok();
+        let quick = quick_mode();
         Bencher {
             warmup_iters: if quick { 1 } else { 2 },
             sample_iters: if quick { 3 } else { 7 },

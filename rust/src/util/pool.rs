@@ -5,7 +5,6 @@
 //! `available_parallelism()` and degrades gracefully to sequential execution.
 
 use std::sync::atomic::{AtomicUsize, Ordering};
-use std::sync::Arc;
 
 /// Number of workers to use by default.
 pub fn default_workers() -> usize {
@@ -26,8 +25,11 @@ pub fn resolve_workers(workers: usize) -> usize {
 
 /// Run `f(i)` for every index in `0..n`, distributing indices across
 /// `workers` threads via an atomic work-stealing counter. `f` must be
-/// `Sync` (it only gets shared access); results are written through
-/// interior mutability or returned via `map_indexed`.
+/// `Sync` (it only gets shared access). This is the side-effect variant
+/// of the pool API — callers write results through interior mutability
+/// (atomics, pre-sliced buffers). Use [`map_indexed`] when each index
+/// produces an owned value; it carries its own drain loop because its
+/// workers also accumulate thread-local result buffers.
 pub fn for_each_index<F>(n: usize, workers: usize, f: F)
 where
     F: Fn(usize) + Sync,
@@ -56,24 +58,57 @@ where
     });
 }
 
-/// Parallel map preserving order.
+/// Parallel map preserving order: `out[i] = f(i)` for `i in 0..n`, with
+/// indices drained through one atomic work-stealing counter.
+///
+/// `T` needs no `Default`/`Clone` and there is no per-element locking on
+/// the hot fan-out path: each worker collects its `(index, value)` results
+/// locally, and the caller thread scatters them into index order after the
+/// joins. Every slot is produced exactly once (the counter hands each
+/// index to one worker), so the scatter is collision-free.
 pub fn map_indexed<T, F>(n: usize, workers: usize, f: F) -> Vec<T>
 where
-    T: Send + Default + Clone,
+    T: Send,
     F: Fn(usize) -> T + Sync,
 {
-    let out: Arc<Vec<std::sync::Mutex<T>>> =
-        Arc::new((0..n).map(|_| std::sync::Mutex::new(T::default())).collect());
-    {
-        let out = Arc::clone(&out);
-        for_each_index(n, workers, move |i| {
-            *out[i].lock().unwrap() = f(i);
-        });
+    if n == 0 {
+        return Vec::new();
     }
-    Arc::try_unwrap(out)
-        .unwrap_or_else(|_| panic!("pool: outstanding refs"))
+    let workers = workers.max(1).min(n);
+    if workers == 1 {
+        return (0..n).map(f).collect();
+    }
+    let next = AtomicUsize::new(0);
+    let chunks: Vec<Vec<(usize, T)>> = std::thread::scope(|scope| {
+        let handles: Vec<_> = (0..workers)
+            .map(|_| {
+                scope.spawn(|| {
+                    let mut local = Vec::new();
+                    loop {
+                        let i = next.fetch_add(1, Ordering::Relaxed);
+                        if i >= n {
+                            break;
+                        }
+                        local.push((i, f(i)));
+                    }
+                    local
+                })
+            })
+            .collect();
+        handles
+            .into_iter()
+            .map(|h| h.join().expect("pool worker panicked"))
+            .collect()
+    });
+    let mut slots: Vec<Option<T>> = Vec::with_capacity(n);
+    slots.resize_with(n, || None);
+    for (i, v) in chunks.into_iter().flatten() {
+        debug_assert!(slots[i].is_none(), "index {i} produced twice");
+        slots[i] = Some(v);
+    }
+    slots
         .into_iter()
-        .map(|m| m.into_inner().unwrap())
+        .map(|s| s.expect("pool fills every slot"))
         .collect()
 }
 
@@ -106,6 +141,17 @@ mod tests {
     fn map_preserves_order() {
         let v = map_indexed(16, 4, |i| i * i);
         assert_eq!(v, (0..16).map(|i| i * i).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn map_needs_neither_default_nor_clone() {
+        // Regression for the old `T: Default + Clone` bounds (per-element
+        // `Mutex<T>` double-initialized every slot).
+        struct Opaque(usize);
+        let v = map_indexed(9, 3, Opaque);
+        for (i, o) in v.iter().enumerate() {
+            assert_eq!(o.0, i);
+        }
     }
 
     #[test]

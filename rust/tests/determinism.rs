@@ -3,14 +3,18 @@
 //! sequential execution for every backend, because tiles and frames are
 //! independent work units and the per-tile blending loop is shared between
 //! both paths. Contribution scoring obeys the same contract via per-tile
-//! (and per-view) partial sums reduced in a fixed order.
+//! (and per-view) partial sums reduced in a fixed order — including the
+//! flattened view×tile work-stealing queue, where any worker may compute
+//! any tile of any view. Plan reuse obeys it too: a `FramePlan` rendered
+//! twice (or through the legacy one-shot wrappers) is bit-identical.
 
 use flicker::camera::{orbit_path, Camera, Intrinsics};
 use flicker::cat::{CatConfig, LeaderMode, Precision};
 use flicker::config::ExperimentConfig;
 use flicker::coordinator::{render_frame, render_orbit, FrameRequest, Golden, GoldenCat};
 use flicker::numeric::linalg::v3;
-use flicker::render::raster::{render, RenderOptions};
+use flicker::render::plan::FramePlan;
+use flicker::render::raster::{render, render_masked, AllOnes, RenderOptions, VanillaMasks};
 use flicker::scene::gaussian::Scene;
 use flicker::scene::pruning::score_views;
 use flicker::scene::synthetic::{generate_scaled, preset};
@@ -104,6 +108,55 @@ fn orbit_frame_parallel_is_bit_identical() {
     }
 }
 
+#[test]
+fn frame_plan_matches_legacy_oneshot_bitwise() {
+    // FramePlan::render must reproduce the legacy one-shot paths bit for
+    // bit — image, stats, and contribution scores — for workers 1/2/8/0.
+    let (scene, cam) = truck_frame();
+    let legacy = render(&scene, &cam, &opts_with_workers(1));
+    let mut legacy_scores = vec![0.0f32; scene.len()];
+    let legacy_scored = render_masked(
+        &scene,
+        &cam,
+        &opts_with_workers(1),
+        &mut AllOnes,
+        Some(&mut legacy_scores),
+    );
+    assert_eq!(legacy.image.data, legacy_scored.image.data);
+    for workers in [1, 2, 8, 0] {
+        let plan = FramePlan::build(&scene, &cam, &opts_with_workers(workers));
+        let mut scores = vec![0.0f32; scene.len()];
+        let out = plan.render(&VanillaMasks, Some(&mut scores));
+        assert_eq!(legacy.image.data, out.image.data, "workers={workers}");
+        assert_eq!(legacy.stats.pairs_tested, out.stats.pairs_tested, "workers={workers}");
+        assert_eq!(legacy.stats.pairs_blended, out.stats.pairs_blended, "workers={workers}");
+        assert_eq!(score_bits(&legacy_scores), score_bits(&scores), "workers={workers}");
+    }
+}
+
+#[test]
+fn frame_plan_reuse_is_bit_stable_across_renders() {
+    // The sweep pattern: one plan, many renders (vanilla + CAT) — every
+    // repetition must be bit-identical to the first.
+    let (scene, cam) = truck_frame();
+    let plan = FramePlan::build(&scene, &cam, &opts_with_workers(0));
+    let v1 = plan.render(&VanillaMasks, None);
+    let v2 = plan.render(&VanillaMasks, None);
+    assert_eq!(v1.image.data, v2.image.data);
+    let cat = CatConfig {
+        mode: LeaderMode::SmoothFocused,
+        precision: Precision::Mixed,
+        stage1: true,
+    };
+    let c1 = plan.render(&cat, None);
+    let c2 = plan.render(&cat, None);
+    assert_eq!(c1.image.data, c2.image.data);
+    assert_eq!(c1.stats.pairs_tested, c2.stats.pairs_tested);
+    // Rendering CAT in between must not perturb the vanilla output.
+    let v_again = plan.render(&VanillaMasks, None);
+    assert_eq!(v1.image.data, v_again.image.data);
+}
+
 fn scoring_setup() -> (Scene, Vec<Camera>) {
     let scene = generate_scaled(&preset("truck"), 0.02);
     let views = orbit_path(
@@ -148,6 +201,40 @@ fn contribution_scores_stable_across_repeated_runs() {
     let opts = RenderOptions::default();
     let (a, _) = score_views(&scene, &views, &opts, 0);
     let (b, _) = score_views(&scene, &views, &opts, 0);
+    assert_eq!(score_bits(&a), score_bits(&b));
+}
+
+#[test]
+fn viewtile_scoring_few_views_many_workers_bit_identical() {
+    // The regime the flattened (view × tile) queue exists for: fewer views
+    // than workers. Every worker drains tiles from both views through one
+    // work-stealing counter, yet the view-major/tile-major fold keeps the
+    // scores bit-identical to the sequential pass — across workers 1/2/8/0
+    // and repeated runs.
+    let scene = generate_scaled(&preset("garden"), 0.02);
+    let views = orbit_path(
+        Intrinsics::from_fov(96, 96, 1.2),
+        v3(0.0, 0.5, 0.0),
+        12.0,
+        3.0,
+        2,
+    );
+    let opts = RenderOptions::default();
+    let (base, base_stats) = score_views(&scene, &views, &opts, 1);
+    assert!(base.iter().any(|&s| s > 0.0), "scoring must see the scene");
+    for workers in [2, 8, 0] {
+        let (scores, stats) = score_views(&scene, &views, &opts, workers);
+        assert_eq!(score_bits(&base), score_bits(&scores), "workers={workers}");
+        assert_eq!(base_stats.pairs_tested, stats.pairs_tested, "workers={workers}");
+        assert_eq!(base_stats.pairs_blended, stats.pairs_blended, "workers={workers}");
+        assert_eq!(
+            base_stats.tiles_early_terminated, stats.tiles_early_terminated,
+            "workers={workers}"
+        );
+    }
+    // Repeated runs at a fixed worker count are stable too.
+    let (a, _) = score_views(&scene, &views, &opts, 8);
+    let (b, _) = score_views(&scene, &views, &opts, 8);
     assert_eq!(score_bits(&a), score_bits(&b));
 }
 

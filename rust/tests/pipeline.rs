@@ -8,7 +8,8 @@ use flicker::config::ExperimentConfig;
 use flicker::coordinator::{render_frame, FrameRequest, Golden, GoldenCat};
 use flicker::numeric::linalg::v3;
 use flicker::render::metrics::{psnr, ssim};
-use flicker::render::raster::{render, render_masked, RenderOptions};
+use flicker::render::plan::FramePlan;
+use flicker::render::raster::{render, RenderOptions, VanillaMasks};
 use flicker::scene::clustering::cluster;
 use flicker::scene::pruning::{prune, PruneConfig};
 use flicker::scene::synthetic::{generate_scaled, preset};
@@ -36,7 +37,10 @@ fn full_quality_ladder_ordering() {
     let s = scene("garden");
     let c = cam(128);
     let opts = RenderOptions::default();
-    let golden = render(&s, &c, &opts);
+    // The sweep pattern: one FramePlan reused across the golden render and
+    // every CAT mode.
+    let plan = FramePlan::build(&s, &c, &opts);
+    let golden = plan.render(&VanillaMasks, None);
 
     let run = |mode| {
         let mut e = CatEngine::new(CatConfig {
@@ -44,7 +48,7 @@ fn full_quality_ladder_ordering() {
             precision: Precision::Fp32,
             stage1: true,
         });
-        render_masked(&s, &c, &opts, &mut e, None)
+        plan.render_with(&mut e, None)
     };
     let dense = run(LeaderMode::UniformDense);
     let adaptive = run(LeaderMode::SmoothFocused);
@@ -61,12 +65,13 @@ fn cat_beats_obb_subtile_on_work_at_similar_quality() {
     let s = scene("bicycle");
     let c = cam(128);
     let opts = RenderOptions::default();
-    let golden = render(&s, &c, &opts);
+    let plan = FramePlan::build(&s, &c, &opts);
+    let golden = plan.render(&VanillaMasks, None);
 
     let mut obb = ObbSubtileMask::new();
-    let obb_out = render_masked(&s, &c, &opts, &mut obb, None);
+    let obb_out = plan.render_with(&mut obb, None);
     let mut catp = CatEngine::new(CatConfig::default());
-    let cat_out = render_masked(&s, &c, &opts, &mut catp, None);
+    let cat_out = plan.render_with(&mut catp, None);
 
     assert!(
         cat_out.stats.pairs_tested < obb_out.stats.pairs_tested,
