@@ -5,7 +5,7 @@
 CARGO ?= cargo
 PYTHON ?= python3
 
-.PHONY: build test bench bench-smoke fmt clippy docs artifacts pytest ci clean
+.PHONY: build test bench bench-smoke examples fmt clippy docs artifacts pytest ci clean
 
 build:
 	$(CARGO) build --release
@@ -22,6 +22,12 @@ bench:
 # perf PRs. Mirrored by the CI bench-smoke lane.
 bench-smoke:
 	$(CARGO) bench -- --quick
+
+# Run the Session-API showcase examples end-to-end (CI: examples lane) so
+# the quickstart code in README/examples can't bitrot.
+examples:
+	$(CARGO) run --release --example quickstart
+	$(CARGO) run --release --example adaptive_modes
 
 fmt:
 	$(CARGO) fmt --all -- --check
@@ -49,7 +55,7 @@ pytest:
 		echo "pytest not installed - skipping python tests"; \
 	fi
 
-ci: build test fmt clippy docs pytest bench-smoke
+ci: build test fmt clippy docs pytest bench-smoke examples
 	$(CARGO) build --release --features pjrt
 	$(CARGO) test -q --features pjrt
 

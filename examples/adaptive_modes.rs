@@ -7,9 +7,8 @@
 use flicker::cat::{CatConfig, CatEngine, LeaderMode, Precision};
 use flicker::config::ExperimentConfig;
 use flicker::coordinator::report::Report;
+use flicker::coordinator::{Golden, Session};
 use flicker::render::metrics::psnr;
-use flicker::render::plan::FramePlan;
-use flicker::render::raster::{RenderOptions, VanillaMasks};
 use flicker::scene::synthetic::presets;
 
 fn main() -> flicker::util::error::Result<()> {
@@ -18,19 +17,16 @@ fn main() -> flicker::util::error::Result<()> {
         "Leader-pixel modes across scenes (PSNR vs vanilla / leader-pixel saving)",
     );
     for preset in presets() {
-        let cfg = ExperimentConfig {
+        // One session per scene: the golden reference and all four
+        // leader-pixel modes re-render the same cached FramePlan.
+        let session = Session::builder(ExperimentConfig {
             scene: preset.name.into(),
             resolution: 160,
             frames: 1,
             ..Default::default()
-        };
-        let scene = cfg.build_scene()?;
-        let cam = &cfg.build_cameras()[0];
-        let opts = RenderOptions::default();
-        // One FramePlan per scene: the golden reference and all four
-        // leader-pixel modes re-render the same prepared view.
-        let plan = FramePlan::build(&scene, cam, &opts);
-        let golden = plan.render(&VanillaMasks, None);
+        })
+        .build()?;
+        let golden = session.frame(0, &Golden)?;
 
         let mut metrics: Vec<(&str, f64)> = Vec::new();
         for (name, mode) in [
@@ -44,9 +40,14 @@ fn main() -> flicker::util::error::Result<()> {
                 precision: Precision::Fp32,
                 stage1: true,
             });
-            let out = plan.render_with(&mut engine, None);
+            let out = session.plan(0).render_with(&mut engine, None);
             metrics.push((name, psnr(&golden.image, &out.image)));
         }
+        assert_eq!(
+            session.plan_cache_stats().builds,
+            1,
+            "golden + 4 modes must share one plan"
+        );
         report.row(preset.name, &metrics);
     }
     report.emit();

@@ -1,26 +1,25 @@
 //! End-to-end edge deployment driver — the full-system validation run
 //! recorded in EXPERIMENTS.md.
 //!
-//! Exercises every layer on a real workload: build a scene, prune + cluster
-//! it (the paper's model pipeline), render a camera orbit through BOTH the
-//! golden Rust rasterizer and the AOT JAX/Pallas artifacts via PJRT
-//! (proving L1/L2/L3 compose), verify the two backends agree, and run the
-//! cycle-accurate simulator per frame for FLICKER / GSCore / the edge GPU,
-//! reporting FPS, energy, and quality.
+//! Exercises every layer on a real workload through one
+//! `coordinator::Session`: build + prune a scene (the paper's model
+//! pipeline, with the `PruneReport` recorded as report provenance),
+//! cluster it, render the camera orbit through BOTH the golden Rust
+//! rasterizer and the AOT JAX/Pallas artifacts via PJRT from the same
+//! cached per-view `FramePlan`s (proving L1/L2/L3 compose), verify the two
+//! backends agree, and run the cycle-accurate simulator per frame for
+//! FLICKER / GSCore / the edge GPU, reporting FPS, energy, and quality.
 //!
 //! Run: `cargo run --release --example edge_deployment`
 //! (the PJRT leg needs a `--features pjrt` build with a real `xla` crate
 //! plus `make artifacts`; it is skipped gracefully otherwise)
 
 use flicker::config::ExperimentConfig;
-use flicker::coordinator::report::Report;
-use flicker::coordinator::{render_frame, FrameRequest, Golden};
-use flicker::render::raster::RenderOptions;
+use flicker::coordinator::{Golden, Session};
 use flicker::scene::clustering::cluster;
-use flicker::scene::pruning::{prune, PruneConfig};
 use flicker::sim::gpu::{estimate, GpuParams};
 use flicker::sim::top::simulate_frame;
-use flicker::sim::workload::extract;
+use flicker::sim::workload::extract_for;
 use flicker::sim::{HwConfig, SubtileTest};
 use flicker::util::stats::harmonic_mean;
 
@@ -28,7 +27,7 @@ use flicker::util::stats::harmonic_mean;
 /// a no-op otherwise so the example always completes end-to-end.
 #[cfg(feature = "pjrt")]
 mod pjrt_leg {
-    use flicker::coordinator::{render_frame, FrameRequest, Pjrt};
+    use flicker::coordinator::{Pjrt, Session};
     use flicker::render::image::Image;
     use flicker::render::metrics::{psnr, ssim};
     use flicker::runtime::{default_artifact_dir, Runtime};
@@ -59,14 +58,16 @@ mod pjrt_leg {
             }
         }
 
-        /// Render through PJRT, returning (wall_ms, psnr, ssim) vs golden.
+        /// Render view `i` through PJRT from the session's cached plan,
+        /// returning (wall_ms, psnr, ssim) vs golden.
         pub fn eval(
             &self,
-            req: &FrameRequest,
+            session: &Session,
+            i: usize,
             golden: &Image,
         ) -> Result<Option<(f64, f64, f64)>> {
             let Some(rt) = &self.0 else { return Ok(None) };
-            let m = render_frame(req, &Pjrt::new(rt))?;
+            let m = session.frame(i, &Pjrt::new(rt))?;
             Ok(Some((m.wall_ms, psnr(golden, &m.image), ssim(golden, &m.image))))
         }
     }
@@ -74,7 +75,7 @@ mod pjrt_leg {
 
 #[cfg(not(feature = "pjrt"))]
 mod pjrt_leg {
-    use flicker::coordinator::FrameRequest;
+    use flicker::coordinator::Session;
     use flicker::render::image::Image;
     use flicker::util::error::Result;
 
@@ -88,7 +89,8 @@ mod pjrt_leg {
 
         pub fn eval(
             &self,
-            _req: &FrameRequest,
+            _session: &Session,
+            _i: usize,
             _golden: &Image,
         ) -> Result<Option<(f64, f64, f64)>> {
             Ok(None)
@@ -97,22 +99,22 @@ mod pjrt_leg {
 }
 
 fn main() -> flicker::util::error::Result<()> {
-    let cfg = ExperimentConfig {
+    // ---- model pipeline: train-time preparation ----
+    // `prune: true` runs contribution pruning during session build and
+    // keeps the PruneReport for provenance.
+    let session = Session::builder(ExperimentConfig {
         scene: "garden".into(),
         resolution: 192,
         frames: 4,
+        prune: true,
         ..Default::default()
-    };
-
-    // ---- model pipeline: train-time preparation ----
-    let mut scene = cfg.build_scene()?;
-    let n0 = scene.len();
-    let views = cfg.build_cameras();
-    let rep = prune(&mut scene, &views, &PruneConfig::default());
-    let cl = cluster(&scene, 32);
+    })
+    .build()?;
+    let rep = session.prune_report().expect("prune requested").clone();
+    let cl = cluster(session.scene(), 32);
     println!(
         "model prep: {} → {} gaussians (pruned), {} clusters (mean {:.1})",
-        n0,
+        rep.before,
         rep.after,
         cl.num_clusters(),
         cl.mean_size()
@@ -121,8 +123,10 @@ fn main() -> flicker::util::error::Result<()> {
     // ---- PJRT runtime (L1/L2 artifacts) ----
     let pjrt = pjrt_leg::PjrtEval::init();
 
-    let mut report =
-        Report::new("edge_deployment", "End-to-end orbit on garden (pruned+clustered)");
+    let mut report = session.report(
+        "edge_deployment",
+        "End-to-end orbit on garden (pruned+clustered)",
+    );
     let mut golden_ms = Vec::new();
     let mut pjrt_psnr = Vec::new();
     let mut fl_fps = Vec::new();
@@ -130,18 +134,13 @@ fn main() -> flicker::util::error::Result<()> {
     let mut xnx_fps = Vec::new();
     let mut fl_uj = Vec::new();
 
-    for (i, cam) in views.iter().enumerate() {
-        let req = FrameRequest {
-            scene: &scene,
-            camera: cam,
-            options: RenderOptions::default(),
-        };
-        let golden = render_frame(&req, &Golden)?;
+    for i in 0..session.num_frames() {
+        let golden = session.frame(i, &Golden)?;
         golden_ms.push(golden.wall_ms);
 
-        // PJRT backend: all three layers compose.
+        // PJRT backend: all three layers compose on one cached plan.
         let mut metrics: Vec<(&str, f64)> = vec![("golden_ms", golden.wall_ms)];
-        if let Some((ms, p, s)) = pjrt.eval(&req, &golden.image)? {
+        if let Some((ms, p, s)) = pjrt.eval(&session, i, &golden.image)? {
             pjrt_psnr.push(p);
             metrics.push(("pjrt_ms", ms));
             metrics.push(("pjrt_psnr", p));
@@ -149,11 +148,16 @@ fn main() -> flicker::util::error::Result<()> {
         }
 
         // Cycle-accurate accelerator + GPU baselines.
-        let fl = simulate_frame(&scene, cam, &HwConfig::flicker32());
-        let gs = simulate_frame(&scene, cam, &HwConfig::gscore64());
-        let wl = extract(
-            &scene,
+        let cam = session.camera(i);
+        let fl = simulate_frame(session.scene(), cam, &HwConfig::flicker32());
+        let gs = simulate_frame(session.scene(), cam, &HwConfig::gscore64());
+        // The GPU-baseline workload reuses the plan session.frame already
+        // built and cached for this exact view.
+        let wl = extract_for(
+            session.scene(),
             cam,
+            session.options(),
+            || session.plan(i),
             &HwConfig {
                 subtile_test: SubtileTest::None,
                 ..HwConfig::simplified32()

@@ -4,32 +4,36 @@
 //! Run: `cargo run --release --example fifo_tuning [-- --scene garden]`
 
 use flicker::config::ExperimentConfig;
-use flicker::coordinator::report::Report;
+use flicker::coordinator::Session;
 use flicker::sim::area::{area, AreaParams};
 use flicker::sim::top::simulate_workload;
-use flicker::sim::workload::extract;
+use flicker::sim::workload::extract_for;
 use flicker::sim::HwConfig;
 use flicker::util::cli::Args;
 
 fn main() -> flicker::util::error::Result<()> {
     let args = Args::from_env(&[]);
     let cfg = ExperimentConfig::from_args(&args)?;
-    let scene = cfg.build_scene()?;
-    let cam = &cfg.build_cameras()[0];
+    let session = Session::builder(cfg).build()?;
+    let scene = session.scene();
+    let cam = session.camera(0);
     let base = HwConfig {
         clustering: false,
-        ..cfg.build_hw()?
+        ..session.config().build_hw()?
     };
-    let wl = extract(&scene, cam, &base);
+    // Reuse the session's cached FramePlan for the workload trace
+    // (extract_for falls back to default geometry — and skips the plan
+    // build entirely — when the configured geometry is incompatible).
+    let wl = extract_for(scene, cam, session.options(), || session.plan(0), &base);
 
-    let mut report = Report::new("fifo_tuning", "FIFO depth: speedup / stalls / SRAM");
+    let mut report = session.report("fifo_tuning", "FIFO depth: speedup / stalls / SRAM");
     let mut rows = Vec::new();
     for depth in [1usize, 2, 4, 8, 16, 32, 64, 128] {
         let hw = HwConfig {
             fifo_depth: depth,
             ..base.clone()
         };
-        let r = simulate_workload(&scene, cam, &hw, wl.clone());
+        let r = simulate_workload(scene, cam, &hw, wl.clone());
         let fifo_mm2 = area(&hw, &AreaParams::default()).fifo_mm2;
         rows.push((depth, r.render_cycles, r.pipe.stall_rate(), fifo_mm2));
     }

@@ -1,4 +1,5 @@
-//! Quickstart: render a synthetic scene with and without Mini-Tile CAT,
+//! Quickstart: drive the `coordinator::Session` API — render a synthetic
+//! scene with and without Mini-Tile CAT from one cached `FramePlan`,
 //! report the quality delta and the workload reduction, and run the cycle
 //! simulator on both FLICKER and GSCore configurations.
 //!
@@ -6,22 +7,24 @@
 
 use flicker::cat::{CatConfig, CatEngine, LeaderMode, Precision};
 use flicker::config::ExperimentConfig;
-use flicker::coordinator::{render_frame, FrameRequest, Golden, GoldenCat};
+use flicker::coordinator::{Golden, GoldenCat, Session};
 use flicker::render::metrics::{psnr, ssim};
-use flicker::render::raster::RenderOptions;
 use flicker::sim::top::simulate_frame;
 use flicker::sim::HwConfig;
 use flicker::util::pool::default_workers;
 
 fn main() -> flicker::util::error::Result<()> {
-    let cfg = ExperimentConfig {
+    // One session = one prepared experiment: the scene, the cameras, the
+    // resolved render options, and a lazily-built per-view FramePlan cache
+    // every backend shares.
+    let session = Session::builder(ExperimentConfig {
         scene: "garden".into(),
         resolution: 192,
         frames: 1,
         ..Default::default()
-    };
-    let scene = cfg.build_scene()?;
-    let cam = &cfg.build_cameras()[0];
+    })
+    .build()?;
+    let scene = session.scene();
     println!(
         "scene '{}': {} gaussians ({:.0}% spiky)",
         scene.name,
@@ -30,12 +33,7 @@ fn main() -> flicker::util::error::Result<()> {
     );
 
     // 1) Vanilla render (golden model).
-    let req = FrameRequest {
-        scene: &scene,
-        camera: cam,
-        options: RenderOptions::default(),
-    };
-    let vanilla = render_frame(&req, &Golden)?;
+    let vanilla = session.frame(0, &Golden)?;
     println!(
         "vanilla:  {:.1} ms, {:.1} gaussians tested per pixel",
         vanilla.wall_ms,
@@ -43,15 +41,18 @@ fn main() -> flicker::util::error::Result<()> {
     );
 
     // 1b) Same frame with the tile fan-out on every core — bit-identical.
-    let par_req = FrameRequest {
-        scene: &scene,
-        camera: cam,
-        options: RenderOptions {
-            workers: 0, // auto
-            ..RenderOptions::default()
-        },
-    };
-    let parallel = render_frame(&par_req, &Golden)?;
+    // The builder's .scene() override reuses the already-built scene
+    // instead of regenerating it.
+    let par_session = Session::builder(ExperimentConfig {
+        scene: "garden".into(),
+        resolution: 192,
+        frames: 1,
+        workers: 0, // auto
+        ..Default::default()
+    })
+    .scene(scene.clone())
+    .build()?;
+    let parallel = par_session.frame(0, &Golden)?;
     assert_eq!(
         vanilla.image.data, parallel.image.data,
         "tile-parallel render must match sequential bit-for-bit"
@@ -62,13 +63,15 @@ fn main() -> flicker::util::error::Result<()> {
         default_workers()
     );
 
-    // 2) Mini-Tile CAT render (adaptive leaders, mixed precision).
+    // 2) Mini-Tile CAT render (adaptive leaders, mixed precision) — the
+    // same cached plan, a different backend: projection, tile binning, and
+    // depth sorting do NOT run again.
     let cat_cfg = CatConfig {
         mode: LeaderMode::SmoothFocused,
         precision: Precision::Mixed,
         stage1: true,
     };
-    let cat = render_frame(&req, &GoldenCat(cat_cfg))?;
+    let cat = session.frame(0, &GoldenCat(cat_cfg))?;
     println!(
         "with CAT: {:.1} ms, {:.1} gaussians tested per pixel",
         cat.wall_ms,
@@ -79,13 +82,16 @@ fn main() -> flicker::util::error::Result<()> {
         psnr(&vanilla.image, &cat.image),
         ssim(&vanilla.image, &cat.image)
     );
+    let cache = session.plan_cache_stats();
+    println!(
+        "plan cache: {} build, {} hits (vanilla + CAT shared one FramePlan)",
+        cache.builds, cache.hits
+    );
 
-    // A standalone CAT engine exposes the Stage-1/Stage-2 filter funnel.
-    // Re-rendering the same view? Build the FramePlan once and reuse it —
-    // projection, tile binning, and depth sorting don't run again.
-    let plan = flicker::render::plan::FramePlan::build(&scene, cam, &req.options);
+    // A standalone CAT engine exposes the Stage-1/Stage-2 filter funnel;
+    // the session hands out its cached plan for stateful instrumentation.
     let mut engine = CatEngine::new(cat_cfg);
-    let _ = plan.render_with(&mut engine, None);
+    let _ = session.plan(0).render_with(&mut engine, None);
     println!(
         "CAT funnel: stage1 cut {:.0}%, minitile pass rate {:.0}%, leader saving {:.0}%",
         engine.stats.stage1_reject_rate() * 100.0,
@@ -95,7 +101,7 @@ fn main() -> flicker::util::error::Result<()> {
 
     // 3) Cycle-accurate simulation: FLICKER vs GSCore.
     for hw in [HwConfig::flicker32(), HwConfig::gscore64()] {
-        let r = simulate_frame(&scene, cam, &hw);
+        let r = simulate_frame(scene, session.camera(0), &hw);
         println!(
             "sim {:<22} {:>9} render-cycles  {:>7.2} ms/frame  {:>6.1} µJ  (stall {:.1}%)",
             r.config,

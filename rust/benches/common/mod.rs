@@ -3,9 +3,11 @@
 //! Every bench regenerates one paper artifact. Scenes default to a small
 //! scale so `cargo bench` finishes on CI hardware; set
 //! `FLICKER_SCENE_SCALE=1.0` for paper-scale runs (same code path).
+#![allow(dead_code)] // each bench target compiles its own copy and uses a subset
 
 use flicker::camera::{orbit_path, Camera, Intrinsics};
-use flicker::config::default_scene_scale;
+use flicker::config::{default_scene_scale, ExperimentConfig};
+use flicker::coordinator::Session;
 use flicker::scene::gaussian::Scene;
 use flicker::scene::synthetic::{generate_scaled, preset, presets};
 
@@ -33,6 +35,24 @@ pub fn bench_scene(name: &str) -> Scene {
 /// All eight evaluation scenes.
 pub fn all_scene_names() -> Vec<&'static str> {
     presets().iter().map(|p| p.name).collect()
+}
+
+/// The orbit view index `bench_camera` corresponds to inside the standard
+/// 8-view bench orbit (see [`bench_session`]).
+pub const BENCH_VIEW: usize = 1;
+
+/// A prepared `coordinator::Session` over the standard 8-view bench orbit
+/// for `name` at the bench resolution. `session.camera(BENCH_VIEW)` is
+/// exactly [`bench_camera`], and `session.plan(BENCH_VIEW)` is the cached
+/// FramePlan the figure sweeps re-render.
+pub fn bench_session(name: &str) -> Session {
+    let cfg = ExperimentConfig {
+        scene: name.into(),
+        resolution: bench_resolution(),
+        frames: 8,
+        ..Default::default()
+    };
+    Session::builder(cfg).build().expect("bench session")
 }
 
 /// The standard evaluation camera for a scene.

@@ -12,19 +12,16 @@ mod common;
 use flicker::cat::pr::{acu_op_cost_4px, pr_op_cost};
 use flicker::cat::{CatConfig, CatEngine, LeaderMode, Precision};
 use flicker::coordinator::report::Report;
+use flicker::coordinator::Golden;
 use flicker::render::metrics::psnr;
-use flicker::render::plan::FramePlan;
-use flicker::render::raster::{RenderOptions, VanillaMasks};
 
 fn main() {
-    let res = common::bench_resolution();
-    let cam = common::bench_camera(res);
-    let scene = common::bench_scene("garden");
-    let opts = RenderOptions::default();
-    // One FramePlan for the whole mode sweep: the golden reference and all
-    // four leader-pixel configs re-render the same prepared view.
-    let plan = FramePlan::build(&scene, &cam, &opts);
-    let golden = plan.render(&VanillaMasks, None);
+    // One session-cached FramePlan for the whole mode sweep: the golden
+    // reference and all four leader-pixel configs re-render the same
+    // prepared view.
+    let session = common::bench_session("garden");
+    let golden = session.frame(common::BENCH_VIEW, &Golden).expect("golden render");
+    let plan = session.plan(common::BENCH_VIEW);
 
     let mut report = Report::new("fig3", "Fig.3(a): adaptive leader pixels");
     let mut results = Vec::new();

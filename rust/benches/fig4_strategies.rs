@@ -8,37 +8,41 @@
 mod common;
 
 use flicker::cat::{CatConfig, CatEngine, LeaderMode, ObbSubtileMask, Precision};
+use flicker::config::ExperimentConfig;
 use flicker::coordinator::report::Report;
-use flicker::render::plan::FramePlan;
-use flicker::render::raster::{RenderOptions, VanillaMasks};
+use flicker::coordinator::{Golden, Session};
 use flicker::render::tile::{build_tile_lists, duplicate_count, Strategy, TileGrid};
-use flicker::sim::workload::extract;
+use flicker::sim::workload::extract_from_plan;
 use flicker::sim::{HwConfig, SubtileTest};
 
 fn main() {
     let res = common::bench_resolution();
-    let cam = common::bench_camera(res);
-    let scene = common::bench_scene("garden");
-    let opts = RenderOptions::default();
 
-    // Per-pixel processed Gaussians by strategy. One AABB FramePlan serves
-    // the vanilla, OBB-subtile, and Mini-Tile CAT rows (same tile lists,
-    // different masks); only the OBB binning needs its own plan.
+    // Per-pixel processed Gaussians by strategy. One session-cached AABB
+    // FramePlan serves the vanilla, OBB-subtile, and Mini-Tile CAT rows
+    // (same tile lists, different masks); the OBB binning gets its own
+    // session with the strategy threaded through the config — the
+    // options-aware path the coordinator used to drop.
     let mut report = Report::new("fig4", "Fig.4: per-pixel processed Gaussians by strategy");
-    let plan = FramePlan::build(&scene, &cam, &opts);
-    let aabb16 = plan.render(&VanillaMasks, None);
+    let session = common::bench_session("garden");
+    let scene = session.scene();
+    let plan = session.plan(common::BENCH_VIEW);
+    let aabb16 = session.frame(common::BENCH_VIEW, &Golden).expect("aabb render");
     let pp_aabb = aabb16.stats.per_pixel_tested();
     report.row("aabb-16x16", &[("pp", pp_aabb), ("rel", 1.0)]);
 
-    let obb16 = FramePlan::build(
-        &scene,
-        &cam,
-        &RenderOptions {
-            strategy: Strategy::Obb,
-            ..opts
-        },
-    )
-    .render(&VanillaMasks, None);
+    let obb_session = Session::builder(ExperimentConfig {
+        scene: "garden".into(),
+        resolution: res,
+        frames: 8,
+        strategy: Some("obb".into()),
+        ..Default::default()
+    })
+    .build()
+    .expect("obb session");
+    let obb16 = obb_session
+        .frame(common::BENCH_VIEW, &Golden)
+        .expect("obb render");
     report.row(
         "obb-16x16",
         &[
@@ -85,16 +89,17 @@ fn main() {
     }
     dup.emit();
 
-    // Stage-1 CTU-load reduction.
-    let wl_none = extract(
-        &scene,
-        &cam,
+    // Stage-1 CTU-load reduction. The workload extractor reuses the
+    // session's cached plan instead of re-deriving frame preparation.
+    let wl_none = extract_from_plan(
+        scene,
+        plan,
         &HwConfig {
             subtile_test: SubtileTest::None,
             ..HwConfig::flicker32()
         },
     );
-    let wl_aabb = extract(&scene, &cam, &HwConfig::flicker32());
+    let wl_aabb = extract_from_plan(scene, plan, &HwConfig::flicker32());
     let cut = 1.0 - wl_aabb.stage2_pairs as f64 / wl_none.stage2_pairs as f64;
     let mut s1 = Report::new("fig4c", "Fig.4: Stage-1 sub-tile AABB CTU-load cut");
     s1.row("no-stage1", &[("ctu_pairs", wl_none.stage2_pairs as f64)]);

@@ -8,19 +8,15 @@ mod common;
 
 use flicker::cat::{CatConfig, CatEngine, LeaderMode, Precision};
 use flicker::coordinator::report::Report;
+use flicker::coordinator::Golden;
 use flicker::render::metrics::{psnr, ssim};
-use flicker::render::plan::FramePlan;
-use flicker::render::raster::{RenderOptions, VanillaMasks};
 
 fn main() {
-    let res = common::bench_resolution();
-    let cam = common::bench_camera(res);
-    let scene = common::bench_scene("garden");
-    let opts = RenderOptions::default();
-    // One FramePlan reused across the golden reference and all four
-    // precision configs (the fig-sweep plan-reuse pattern).
-    let plan = FramePlan::build(&scene, &cam, &opts);
-    let golden = plan.render(&VanillaMasks, None);
+    // One session-cached FramePlan reused across the golden reference and
+    // all four precision configs (the fig-sweep plan-reuse pattern).
+    let session = common::bench_session("garden");
+    let golden = session.frame(common::BENCH_VIEW, &Golden).expect("golden render");
+    let plan = session.plan(common::BENCH_VIEW);
 
     let mut report = Report::new("fig7c", "Fig.7(c): CTU precision schemes");
     let mut vals = Vec::new();

@@ -6,6 +6,8 @@ mod common;
 
 use flicker::camera::{orbit_path, Intrinsics};
 use flicker::cat::{CatConfig, CatEngine, LeaderMode, Precision};
+use flicker::config::ExperimentConfig;
+use flicker::coordinator::{Golden, Session};
 use flicker::numeric::linalg::v3;
 use flicker::render::plan::FramePlan;
 use flicker::render::project::project_scene;
@@ -66,6 +68,29 @@ fn main() {
     let plan = FramePlan::build(&scene, &cam, &RenderOptions::default());
     b.bench("plan_reuse", || {
         black_box(plan.render(&VanillaMasks, None));
+    });
+
+    // Session steady state: the cached-plan render behind session.frame —
+    // must track plan_reuse (the cache adds only two atomic bumps).
+    let session = common::bench_session("garden");
+    session.frame(common::BENCH_VIEW, &Golden).unwrap(); // warm the cache
+    b.bench("session_frame_cached", || {
+        black_box(session.frame(common::BENCH_VIEW, &Golden).unwrap());
+    });
+
+    // Streaming a short orbit across the full pool (completion-order
+    // fan-out + orbit-order re-sort), plans cached after the first pass.
+    let stream_session = Session::builder(ExperimentConfig {
+        scene: "garden".into(),
+        resolution: res,
+        frames: 4,
+        workers: 0, // auto
+        ..Default::default()
+    })
+    .build()
+    .unwrap();
+    b.bench("session_stream_orbit", || {
+        black_box(stream_session.stream(&Golden).ordered().unwrap());
     });
 
     // Tile fan-out across all cores (bit-identical output, wall-clock win).

@@ -9,31 +9,37 @@ mod common;
 
 use flicker::cat::{CatConfig, CatEngine, LeaderMode, Precision};
 use flicker::coordinator::report::Report;
+use flicker::coordinator::Golden;
 use flicker::render::metrics::{psnr, ssim};
 use flicker::render::plan::FramePlan;
-use flicker::render::raster::{render, RenderOptions, VanillaMasks};
+use flicker::render::raster::VanillaMasks;
 use flicker::scene::pruning::{prune, PruneConfig};
 
 fn main() {
     let res = common::bench_resolution();
-    let cam = common::bench_camera(res);
     let views = common::bench_orbit(res, 3);
-    let opts = RenderOptions::default();
 
     let mut report = Report::new("table1", "Table I: PSNR/SSIM across approaches");
     let mut deltas_prune = Vec::new();
     let mut deltas_ours = Vec::new();
 
     for name in common::all_scene_names() {
-        let scene = common::bench_scene(name);
+        // One session per scene: the unpruned baseline render and the
+        // standard evaluation camera come from the session.
+        let session = common::bench_session(name);
+        let cam = session.camera(common::BENCH_VIEW);
         // "Baseline" reference image: vanilla render of the unpruned model.
-        let gt = render(&scene, &cam, &opts).image;
+        let gt = session
+            .frame(common::BENCH_VIEW, &Golden)
+            .expect("baseline render")
+            .image;
 
-        // Pruned model: one FramePlan serves both the "Prun." and "Ours"
-        // rows (same scene + view, different masks).
-        let mut pruned = scene.clone();
+        // Pruned model (explicit 3-view scoring orbit, Table I's setup):
+        // one FramePlan serves both the "Prun." and "Ours" rows (same
+        // scene + view, different masks).
+        let mut pruned = session.scene().clone();
         prune(&mut pruned, &views, &PruneConfig::default());
-        let pruned_plan = FramePlan::build(&pruned, &cam, &opts);
+        let pruned_plan = FramePlan::build(&pruned, cam, session.options());
         let img_pruned = pruned_plan.render(&VanillaMasks, None).image;
 
         // Ours: pruned + adaptive CAT at mixed precision.

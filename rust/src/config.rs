@@ -9,6 +9,8 @@ use crate::camera::{orbit_path, Camera, Intrinsics};
 use crate::cat::{LeaderMode, Precision};
 use crate::err;
 use crate::numeric::linalg::v3;
+use crate::render::raster::RenderOptions;
+use crate::render::tile::Strategy;
 use crate::scene::gaussian::Scene;
 use crate::scene::synthetic::{generate_scaled, preset};
 use crate::sim::HwConfig;
@@ -34,6 +36,10 @@ pub struct ExperimentConfig {
     pub precision: Option<String>,
     /// FIFO depth override.
     pub fifo_depth: Option<usize>,
+    /// Tile edge override in pixels (None = the paper's 16).
+    pub tile_size: Option<u32>,
+    /// Tile-intersection strategy override ("aabb", "obb"; None = aabb).
+    pub strategy: Option<String>,
     /// Apply contribution pruning before evaluation.
     pub prune: bool,
     /// Worker threads for frame/tile parallel rendering and pruning's
@@ -55,6 +61,8 @@ impl Default for ExperimentConfig {
             cat_mode: None,
             precision: None,
             fifo_depth: None,
+            tile_size: None,
+            strategy: None,
             prune: false,
             workers: 1,
             seed: 0xF11C,
@@ -83,6 +91,30 @@ impl ExperimentConfig {
     pub fn build_cameras(&self) -> Vec<Camera> {
         let intr = Intrinsics::from_fov(self.resolution, self.resolution, 1.2);
         orbit_path(intr, v3(0.0, 0.5, 0.0), 12.0, 3.0, self.frames.max(1))
+    }
+
+    /// Resolve the **full** rasterization options this experiment asked
+    /// for: tile size, intersection strategy, and the worker budget. Every
+    /// render driven from a config (the CLI, `coordinator::Session`,
+    /// benches) must thread options through here — the pre-`Session`
+    /// coordinator hardcoded `RenderOptions::default()` for orbits and
+    /// silently dropped a configured strategy/tile size.
+    pub fn render_options(&self) -> Result<RenderOptions> {
+        let mut o = RenderOptions {
+            workers: self.workers,
+            ..RenderOptions::default()
+        };
+        if let Some(ts) = self.tile_size {
+            if ts == 0 {
+                return Err(err!("tile_size must be positive"));
+            }
+            o.tile_size = ts;
+        }
+        if let Some(s) = &self.strategy {
+            o.strategy =
+                Strategy::parse(s).ok_or_else(|| err!("unknown strategy '{s}' (aabb|obb)"))?;
+        }
+        Ok(o)
     }
 
     /// Resolve the hardware config with overrides applied.
@@ -123,6 +155,11 @@ impl ExperimentConfig {
             cfg.fifo_depth =
                 Some(d.parse().map_err(|_| err!("--fifo-depth: bad integer '{d}'"))?);
         }
+        if let Some(t) = args.get("tile-size") {
+            cfg.tile_size =
+                Some(t.parse().map_err(|_| err!("--tile-size: bad integer '{t}'"))?);
+        }
+        cfg.strategy = args.get("strategy").map(|s| s.to_string()).or(cfg.strategy);
         if args.flag("prune") {
             cfg.prune = true;
         }
@@ -158,6 +195,10 @@ impl ExperimentConfig {
         if let Some(v) = n("fifo_depth") {
             cfg.fifo_depth = Some(v as usize);
         }
+        if let Some(v) = n("tile_size") {
+            cfg.tile_size = Some(v as u32);
+        }
+        cfg.strategy = s("strategy").or(cfg.strategy);
         if let Some(v) = j.at(&["prune"]).and_then(Json::as_bool) {
             cfg.prune = v;
         }
@@ -186,6 +227,12 @@ impl ExperimentConfig {
         }
         if let Some(d) = self.fifo_depth {
             o.insert("fifo_depth", jnum(d as f64));
+        }
+        if let Some(t) = self.tile_size {
+            o.insert("tile_size", jnum(t as f64));
+        }
+        if let Some(s) = &self.strategy {
+            o.insert("strategy", jstr(s));
         }
         o.insert("prune", Json::Bool(self.prune));
         o.insert("workers", jnum(self.workers as f64));
@@ -241,6 +288,34 @@ mod tests {
     }
 
     #[test]
+    fn render_options_thread_strategy_and_tile_size() {
+        let a = args(&["render", "--strategy", "obb", "--tile-size", "16", "--workers", "3"]);
+        let cfg = ExperimentConfig::from_args(&a).unwrap();
+        let o = cfg.render_options().unwrap();
+        assert_eq!(o.strategy, Strategy::Obb);
+        assert_eq!(o.tile_size, 16);
+        assert_eq!(o.workers, 3);
+        // Defaults stay the paper's geometry.
+        let d = ExperimentConfig::default().render_options().unwrap();
+        assert_eq!(d.strategy, Strategy::Aabb);
+        assert_eq!(d.tile_size, 16);
+    }
+
+    #[test]
+    fn bad_strategy_is_error() {
+        let cfg = ExperimentConfig {
+            strategy: Some("bogus".into()),
+            ..Default::default()
+        };
+        assert!(cfg.render_options().is_err());
+        let zero = ExperimentConfig {
+            tile_size: Some(0),
+            ..Default::default()
+        };
+        assert!(zero.render_options().is_err());
+    }
+
+    #[test]
     fn bad_hardware_is_error() {
         let a = args(&["x", "--hardware", "bogus"]);
         let cfg = ExperimentConfig::from_args(&a).unwrap();
@@ -252,6 +327,8 @@ mod tests {
         let cfg = ExperimentConfig {
             cat_mode: Some("sparse".into()),
             fifo_depth: Some(8),
+            strategy: Some("obb".into()),
+            tile_size: Some(16),
             workers: 3,
             ..Default::default()
         };
@@ -263,6 +340,8 @@ mod tests {
         assert_eq!(back.scene, cfg.scene);
         assert_eq!(back.cat_mode, cfg.cat_mode);
         assert_eq!(back.fifo_depth, cfg.fifo_depth);
+        assert_eq!(back.strategy, cfg.strategy);
+        assert_eq!(back.tile_size, cfg.tile_size);
         assert_eq!(back.workers, cfg.workers);
     }
 }

@@ -2,12 +2,15 @@
 //!
 //! [`RenderBackend`] is the extension point: a backend turns a prepared
 //! [`FramePlan`] into an image + stats, and new execution engines slot in
-//! without touching `render_frame`/`render_orbit` callers. The coordinator
-//! builds the plan (project → tile-bin → depth-sort) exactly once per
-//! frame and hands every backend the same intermediates — sweeps that
-//! re-render one view through many backends or configs reuse the plan via
-//! [`render_planned`]. Backends must be `Sync` so [`render_orbit`] can fan
-//! frames across the worker pool.
+//! without touching callers. The preferred driver is
+//! [`super::session::Session`] — it owns the prepared scene, the camera
+//! orbit, and a per-view plan cache, and every backend renders from the
+//! same cached intermediates. This module keeps the backend trait, the
+//! per-frame types, [`render_planned`] (the caller-held-plan primitive the
+//! session is built on), and two deprecated one-shot shims
+//! ([`render_frame`], [`render_orbit`]) for callers mid-migration.
+//! Backends must be `Sync` so frame streams can fan across the worker
+//! pool.
 
 use crate::camera::Camera;
 use crate::cat::CatConfig;
@@ -17,10 +20,10 @@ use crate::render::plan::FramePlan;
 use crate::render::raster::{RenderOptions, RenderOutput, RenderStats, VanillaMasks};
 use crate::scene::gaussian::Scene;
 use crate::util::error::Result;
-use crate::util::pool;
 use std::time::Instant;
 
-/// A frame to render.
+/// A frame to render (the one-shot request shape; sessions derive frames
+/// from their config instead).
 pub struct FrameRequest<'a> {
     /// The scene to render.
     pub scene: &'a Scene,
@@ -41,6 +44,10 @@ pub struct FrameMetrics {
     pub wall_ms: f64,
     /// Name of the backend that rendered the frame.
     pub backend: &'static str,
+    /// Orbit/view index the frame was rendered from (0 for one-shot
+    /// renders outside a session). `FrameStream` consumers use this to
+    /// re-sort completion-order results into orbit order.
+    pub view: usize,
 }
 
 /// An execution engine for a prepared frame's tiles.
@@ -90,7 +97,7 @@ impl RenderBackend for GoldenCat {
 /// re-projection or re-binning. Tiles run sequentially, and whole frames
 /// serialize through an internal gate: the executor chunks splat lists and
 /// carries transmittance on the host, and PJRT executable thread-safety is
-/// owned by the runtime, so concurrent frames (the `render_orbit` fan-out)
+/// owned by the runtime, so concurrent frames (a session's stream fan-out)
 /// queue rather than enter `exec_f32` in parallel.
 #[cfg(feature = "pjrt")]
 pub struct Pjrt<'rt> {
@@ -140,9 +147,30 @@ impl RenderBackend for Pjrt<'_> {
     }
 }
 
+/// Render a **prebuilt** plan through the chosen backend — the primitive
+/// `Session::frame`/`Session::sweep` are built on: build the plan once per
+/// view, then render it under many backends/configs. The wall-clock covers
+/// only the render; `view` is 0 (sessions stamp the real index).
+pub fn render_planned(plan: &FramePlan, backend: &dyn RenderBackend) -> Result<FrameMetrics> {
+    let t0 = Instant::now();
+    let out = backend.render_plan(plan)?;
+    Ok(FrameMetrics {
+        image: out.image,
+        stats: out.stats,
+        wall_ms: t0.elapsed().as_secs_f64() * 1e3,
+        backend: backend.name(),
+        view: 0,
+    })
+}
+
 /// Render one frame through the chosen backend: build the [`FramePlan`]
 /// and render it once. The wall-clock covers build + render — the
-/// one-shot cost a sweep amortizes away via [`render_planned`].
+/// one-shot cost a session amortizes away through its plan cache.
+#[deprecated(
+    note = "build a coordinator::Session (Session::builder) and call \
+            session.frame(i, &backend) — the session caches the FramePlan \
+            across backends and repeat renders"
+)]
 pub fn render_frame(req: &FrameRequest, backend: &dyn RenderBackend) -> Result<FrameMetrics> {
     let t0 = Instant::now();
     let plan = FramePlan::build(req.scene, req.camera, &req.options);
@@ -152,67 +180,28 @@ pub fn render_frame(req: &FrameRequest, backend: &dyn RenderBackend) -> Result<F
         stats: out.stats,
         wall_ms: t0.elapsed().as_secs_f64() * 1e3,
         backend: backend.name(),
+        view: 0,
     })
 }
 
-/// Render a **prebuilt** plan through the chosen backend — the sweep
-/// primitive: build the plan once per view, then render it under many
-/// backends/configs. The wall-clock covers only the render.
-pub fn render_planned(plan: &FramePlan, backend: &dyn RenderBackend) -> Result<FrameMetrics> {
-    let t0 = Instant::now();
-    let out = backend.render_plan(plan)?;
-    Ok(FrameMetrics {
-        image: out.image,
-        stats: out.stats,
-        wall_ms: t0.elapsed().as_secs_f64() * 1e3,
-        backend: backend.name(),
-    })
-}
-
-/// Render an experiment's whole camera orbit, fanning frames across the
-/// worker pool (`cfg.workers`; 0 = auto, 1 = sequential). Frames are
-/// independent, so any worker count returns bit-identical images in orbit
-/// order. The worker budget is split: up to one thread per frame, and each
-/// frame spends the remainder on its tile fan-out, so short orbits on wide
-/// machines still use the whole allotment without oversubscribing.
+/// Render an experiment's whole camera orbit in orbit order.
+///
+/// Thin shim over [`super::session::Session`]: builds a session from the
+/// config and drains `session.stream(backend)` through the
+/// [`super::session::FrameStream::ordered`] adapter (bit-identical to
+/// sequential rendering for any worker count). Unlike the pre-`Session`
+/// version, the configured `RenderOptions` (strategy, tile size) and the
+/// `prune` flag are honored instead of silently dropped.
+#[deprecated(
+    note = "build a coordinator::Session (Session::builder) and use \
+            session.stream(&backend) / .ordered()"
+)]
 pub fn render_orbit(
     cfg: &ExperimentConfig,
     backend: &dyn RenderBackend,
 ) -> Result<Vec<FrameMetrics>> {
-    let scene = cfg.build_scene()?;
-    let cams = cfg.build_cameras();
-    let total_workers = pool::resolve_workers(cfg.workers);
-    let frame_workers = total_workers.min(cams.len().max(1));
-    let tile_workers = (total_workers / frame_workers.max(1)).max(1);
-    let frames: Vec<Result<FrameMetrics>> =
-        pool::map_indexed(cams.len(), frame_workers, |i| {
-            let req = FrameRequest {
-                scene: &scene,
-                camera: &cams[i],
-                options: RenderOptions {
-                    workers: tile_workers,
-                    ..RenderOptions::default()
-                },
-            };
-            render_frame(&req, backend)
-        });
-    frames.into_iter().collect()
-}
-
-/// Convenience: render the same frame through Golden and a mask provider,
-/// returning (golden, masked) images — the quality-delta primitive used by
-/// Table I / Fig. 3 / Fig. 7 experiments. Both renders share one
-/// [`FramePlan`], so frame preparation runs once.
-pub fn golden_vs_masked(
-    scene: &Scene,
-    cam: &Camera,
-    opts: &RenderOptions,
-    masks: &mut dyn crate::render::raster::MaskProvider,
-) -> (Image, Image) {
-    let plan = FramePlan::build(scene, cam, opts);
-    let golden = plan.render(&VanillaMasks, None);
-    let masked = plan.render_with(masks, None);
-    (golden.image, masked.image)
+    let session = super::session::Session::builder(cfg.clone()).build()?;
+    session.stream(backend).ordered()
 }
 
 #[cfg(test)]
@@ -220,6 +209,7 @@ mod tests {
     use super::*;
     use crate::camera::Intrinsics;
     use crate::cat::{LeaderMode, Precision};
+    use crate::coordinator::session::Session;
     use crate::numeric::linalg::v3;
     use crate::render::metrics::psnr;
     use crate::scene::synthetic::{generate_scaled, preset};
@@ -235,51 +225,77 @@ mod tests {
         (scene, cam)
     }
 
+    fn session() -> Session {
+        let (scene, cam) = setup();
+        Session::builder(ExperimentConfig::default())
+            .scene(scene)
+            .cameras(vec![cam])
+            .build()
+            .unwrap()
+    }
+
     #[test]
     fn golden_and_cat_agree_visually() {
+        let s = session();
+        let golden = s.frame(0, &Golden).unwrap();
+        let cat = s
+            .frame(
+                0,
+                &GoldenCat(CatConfig {
+                    mode: LeaderMode::UniformDense,
+                    precision: Precision::Fp32,
+                    stage1: true,
+                }),
+            )
+            .unwrap();
+        let p = psnr(&golden.image, &cat.image);
+        assert!(p > 30.0, "CAT vs golden PSNR {p}");
+        // CAT must reduce tested work.
+        assert!(cat.stats.pairs_tested < golden.stats.pairs_tested);
+        // Both renders shared one cached plan.
+        assert_eq!(s.plan_cache_stats().builds, 1);
+    }
+
+    #[test]
+    fn planned_render_matches_session_frame() {
+        // render_planned over a caller-held plan must reproduce the
+        // session's cached-plan render bit for bit.
+        let (scene, cam) = setup();
+        let opts = RenderOptions::default();
+        let plan = FramePlan::build(&scene, &cam, &opts);
+        let a = render_planned(&plan, &Golden).unwrap();
+        let b = render_planned(&plan, &Golden).unwrap();
+        assert_eq!(a.image.data, b.image.data, "plan reuse must be stable");
+        assert_eq!(a.backend, "golden");
+        let s = Session::builder(ExperimentConfig::default())
+            .scene(scene)
+            .cameras(vec![cam])
+            .build()
+            .unwrap();
+        let m = s.frame(0, &Golden).unwrap();
+        assert_eq!(m.image.data, a.image.data);
+        assert_eq!(m.view, 0);
+    }
+
+    #[test]
+    #[allow(deprecated)]
+    fn deprecated_shims_match_session() {
+        // The migration contract: the legacy one-shot free functions are
+        // thin wrappers whose output is bit-identical to the Session path.
         let (scene, cam) = setup();
         let req = FrameRequest {
             scene: &scene,
             camera: &cam,
             options: RenderOptions::default(),
         };
-        let golden = render_frame(&req, &Golden).unwrap();
-        let cat = render_frame(
-            &req,
-            &GoldenCat(CatConfig {
-                mode: LeaderMode::UniformDense,
-                precision: Precision::Fp32,
-                stage1: true,
-            }),
-        )
-        .unwrap();
-        let p = psnr(&golden.image, &cat.image);
-        assert!(p > 30.0, "CAT vs golden PSNR {p}");
-        // CAT must reduce tested work.
-        assert!(cat.stats.pairs_tested < golden.stats.pairs_tested);
-    }
+        let legacy = render_frame(&req, &Golden).unwrap();
+        let s = Session::builder(ExperimentConfig::default())
+            .scene(scene)
+            .cameras(vec![cam])
+            .build()
+            .unwrap();
+        assert_eq!(legacy.image.data, s.frame(0, &Golden).unwrap().image.data);
 
-    #[test]
-    fn planned_render_matches_oneshot() {
-        // render_planned over a reused plan must reproduce render_frame.
-        let (scene, cam) = setup();
-        let opts = RenderOptions::default();
-        let req = FrameRequest {
-            scene: &scene,
-            camera: &cam,
-            options: opts,
-        };
-        let oneshot = render_frame(&req, &Golden).unwrap();
-        let plan = FramePlan::build(&scene, &cam, &opts);
-        let a = render_planned(&plan, &Golden).unwrap();
-        let b = render_planned(&plan, &Golden).unwrap();
-        assert_eq!(oneshot.image.data, a.image.data);
-        assert_eq!(a.image.data, b.image.data, "plan reuse must be stable");
-        assert_eq!(a.backend, "golden");
-    }
-
-    #[test]
-    fn orbit_runs_all_frames() {
         let cfg = ExperimentConfig {
             scene: "truck".into(),
             scene_scale: 0.01,
@@ -287,11 +303,15 @@ mod tests {
             frames: 2,
             ..Default::default()
         };
-        let frames = render_orbit(&cfg, &Golden).unwrap();
-        assert_eq!(frames.len(), 2);
-        for f in frames {
-            assert_eq!(f.backend, "golden");
-            assert!(f.wall_ms > 0.0);
+        let orbit = render_orbit(&cfg, &Golden).unwrap();
+        let session = Session::builder(cfg).build().unwrap();
+        let frames = session.stream(&Golden).ordered().unwrap();
+        assert_eq!(orbit.len(), frames.len());
+        for (a, b) in orbit.iter().zip(&frames) {
+            assert_eq!(a.image.data, b.image.data);
+            assert_eq!(a.view, b.view);
+            assert_eq!(b.backend, "golden");
+            assert!(b.wall_ms > 0.0);
         }
     }
 
@@ -310,15 +330,11 @@ mod tests {
                 return;
             }
         };
-        let (scene, cam) = setup();
-        let req = FrameRequest {
-            scene: &scene,
-            camera: &cam,
-            options: RenderOptions::default(),
-        };
-        let golden = render_frame(&req, &Golden).unwrap();
-        let pjrt = render_frame(&req, &Pjrt::new(&rt)).unwrap();
-        let p = psnr(&golden.image, &pjrt.image);
+        let s = session();
+        let pjrt = Pjrt::new(&rt);
+        let outs = s.sweep(0, &[&Golden, &pjrt]).unwrap();
+        let p = psnr(&outs[0].image, &outs[1].image);
         assert!(p > 28.0, "PJRT vs golden PSNR {p}");
+        assert_eq!(s.plan_cache_stats().builds, 1, "sweep shares one plan");
     }
 }

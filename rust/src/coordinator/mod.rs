@@ -1,10 +1,18 @@
-//! Layer-3 frame coordinator: builds one `FramePlan` per frame, schedules
-//! per-tile work across backends, collects frame metrics, and drives
-//! multi-frame evaluation runs.
+//! Layer-3 frame coordinator: the [`session::Session`] rendering API, the
+//! [`frame::RenderBackend`] execution-engine trait, and the report writer.
 //!
-//! Backends implement the [`frame::RenderBackend`] trait and consume a
-//! prepared `render::plan::FramePlan` (they never re-derive splats or tile
-//! lists):
+//! A session is built once from an `ExperimentConfig` (scene prep,
+//! optional pruning, camera orbit, worker-budget split) and owns a
+//! per-view `FramePlan` cache shared across backends:
+//!
+//! * `session.frame(i, &backend)` — render one view from the cached plan.
+//! * `session.sweep(i, &backends)` — many backends, one plan build.
+//! * `session.stream(&backend)` — a [`session::FrameStream`] that fans
+//!   frames across the worker pool and yields them in completion order
+//!   (`.ordered()` restores orbit order, bit-identical to sequential).
+//!
+//! Backends implement [`frame::RenderBackend`] and consume a prepared
+//! `render::plan::FramePlan` (they never re-derive splats or tile lists):
 //! * [`frame::Golden`] — the in-process Rust rasterizer (reference
 //!   numerics) with vanilla masks.
 //! * [`frame::GoldenCat`] — the golden rasterizer driven by Mini-Tile CAT
@@ -14,18 +22,23 @@
 //!   compiled with `--features pjrt`.
 //!
 //! The per-frame flow mirrors the accelerator's: project → tile-bin →
-//! depth-sort (the plan, built once) → (CAT-mask) → blend (per render),
-//! with tiles fanned across the worker pool (`RenderOptions::workers`) and
-//! orbits fanned across frames (`ExperimentConfig::workers`). Sweeps that
-//! re-render one view reuse the plan through [`frame::render_planned`].
+//! depth-sort (the plan, built once per view) → (CAT-mask) → blend (per
+//! render), with tiles fanned across the worker pool
+//! (`RenderOptions::workers`) and streamed orbits fanned across frames
+//! (the session's budget split). The legacy free functions
+//! `render_frame`/`render_orbit` survive as deprecated shims over the
+//! session.
 
 pub mod frame;
 pub mod report;
+pub mod session;
 
+#[allow(deprecated)]
 pub use frame::{
     render_frame, render_orbit, render_planned, FrameMetrics, FrameRequest, Golden, GoldenCat,
     RenderBackend,
 };
+pub use session::{FrameStream, PlanCacheStats, Session, SessionBuilder};
 
 #[cfg(feature = "pjrt")]
 pub use frame::Pjrt;

@@ -13,6 +13,7 @@ pub struct Report {
     pub title: String,
     rows: Vec<(String, Vec<(String, f64)>)>,
     provenance: Option<Json>,
+    prune: Option<Json>,
 }
 
 impl Report {
@@ -28,6 +29,15 @@ impl Report {
     /// Attach the experiment config that produced this report.
     pub fn set_provenance(&mut self, j: Json) {
         self.provenance = Some(j);
+    }
+
+    /// Record the pruning pass that shaped this report's scene. The
+    /// `PruneReport` (before/after counts, threshold, scoring views,
+    /// pairs/px tested) is emitted under the `"prune"` key next to the
+    /// config provenance — previously the prune summary was printed to
+    /// stdout and lost.
+    pub fn set_prune_provenance(&mut self, rep: &crate::scene::pruning::PruneReport) {
+        self.prune = Some(rep.to_json());
     }
 
     /// Add a row with (metric, value) pairs.
@@ -108,6 +118,9 @@ impl Report {
         if let Some(p) = &self.provenance {
             o.insert("provenance", p.clone());
         }
+        if let Some(p) = &self.prune {
+            o.insert("prune", p.clone());
+        }
         let rows: Vec<Json> = self
             .rows
             .iter()
@@ -159,6 +172,31 @@ mod tests {
         assert_eq!(r.get("speedup", "flicker"), Some(1.5));
         assert_eq!(r.get("speedup", "nope"), None);
         assert_eq!(r.get("nope", "flicker"), None);
+    }
+
+    #[test]
+    fn prune_provenance_is_emitted() {
+        use crate::render::raster::RenderStats;
+        use crate::scene::pruning::PruneReport;
+        let mut r = Report::new("t", "Test");
+        r.set_prune_provenance(&PruneReport {
+            before: 100,
+            after: 60,
+            threshold: 0.5,
+            views: 3,
+            stats: RenderStats {
+                pairs_tested: 500,
+                pixels: 100,
+                ..Default::default()
+            },
+        });
+        let j = r.to_json();
+        assert_eq!(j.at(&["prune", "before"]).and_then(Json::as_f64), Some(100.0));
+        assert_eq!(j.at(&["prune", "after"]).and_then(Json::as_f64), Some(60.0));
+        assert_eq!(
+            j.at(&["prune", "pairs_per_px_tested"]).and_then(Json::as_f64),
+            Some(5.0)
+        );
     }
 
     #[test]

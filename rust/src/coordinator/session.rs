@@ -1,0 +1,499 @@
+//! `Session`: the typed, plan-cached, streaming rendering API.
+//!
+//! FLICKER's contribution-aware pipeline amortizes its win by testing once
+//! and reusing everywhere; the host-side analog is the `FramePlan`, and a
+//! [`Session`] is the object that owns the reuse. Built once from an
+//! [`ExperimentConfig`] via [`SessionBuilder`], it holds:
+//!
+//! * the prepared scene (optionally pruned, with the [`PruneReport`] kept
+//!   for provenance instead of printed and lost),
+//! * the camera orbit and the **full** resolved [`RenderOptions`]
+//!   (strategy, tile size, worker budget — nothing silently dropped),
+//! * the resolved worker-budget split (frames × tiles), and
+//! * a lazily-built **per-view [`FramePlan`] cache** shared across
+//!   backends, with build/hit counters.
+//!
+//! ```text
+//!   ExperimentConfig ─► SessionBuilder ─► Session
+//!                                          ├─ frame(i, backend)   one view, cached plan
+//!                                          ├─ sweep(i, backends)  many backends, ONE plan
+//!                                          └─ stream(backend)     FrameStream: frames fan
+//!                                                                 across the pool, yielded
+//!                                                                 in completion order per
+//!                                                                 dispatch window
+//!                                                                 (.ordered() = orbit order)
+//! ```
+//!
+//! **Determinism.** Plans are immutable after build and every consumer
+//! shares the one blending loop, so `frame`, `sweep`, and `stream` (in any
+//! completion order, re-sorted by [`FrameMetrics::view`] or drained
+//! through [`FrameStream::ordered`]) are bit-identical to sequential
+//! rendering for any worker count — enforced by
+//! `rust/tests/determinism.rs`.
+
+use crate::camera::Camera;
+use crate::config::ExperimentConfig;
+use crate::coordinator::frame::{render_planned, FrameMetrics, RenderBackend};
+use crate::coordinator::report::Report;
+use crate::err;
+use crate::render::plan::FramePlan;
+use crate::render::raster::RenderOptions;
+use crate::scene::gaussian::Scene;
+use crate::scene::pruning::{prune, PruneConfig, PruneReport};
+use crate::util::error::Result;
+use crate::util::pool;
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::OnceLock;
+
+/// Builder for a [`Session`]: start from an [`ExperimentConfig`] with
+/// [`Session::builder`], optionally override the scene, cameras, render
+/// options, or pruning, then [`SessionBuilder::build`].
+pub struct SessionBuilder {
+    cfg: ExperimentConfig,
+    scene: Option<Scene>,
+    cameras: Option<Vec<Camera>>,
+    options: Option<RenderOptions>,
+    prune: Option<PruneConfig>,
+}
+
+impl SessionBuilder {
+    /// Use this scene instead of building one from the config
+    /// (`cfg.build_scene()`). Pruning, if requested, still applies.
+    pub fn scene(mut self, scene: Scene) -> SessionBuilder {
+        self.scene = Some(scene);
+        self
+    }
+
+    /// Use these evaluation cameras instead of the config's orbit
+    /// (`cfg.build_cameras()`). They are also the scoring views when
+    /// pruning is requested.
+    pub fn cameras(mut self, cams: Vec<Camera>) -> SessionBuilder {
+        self.cameras = Some(cams);
+        self
+    }
+
+    /// Use these render options **verbatim** for every plan, instead of
+    /// the config-derived options with the frames×tiles budget split.
+    /// `options.workers` then drives each frame's tile fan-out directly,
+    /// and [`Session::stream`] still fans frames across up to
+    /// `min(resolve(options.workers), frames)` workers — callers that both
+    /// stream and set explicit options own the oversubscription trade-off
+    /// (outputs are bit-identical regardless).
+    pub fn options(mut self, options: RenderOptions) -> SessionBuilder {
+        self.options = Some(options);
+        self
+    }
+
+    /// Prune the scene with this config before any rendering, even if the
+    /// experiment config's `prune` flag is off. Without this override,
+    /// pruning runs when `cfg.prune` is set, using `PruneConfig::default()`
+    /// with the config's worker budget.
+    pub fn prune(mut self, cfg: PruneConfig) -> SessionBuilder {
+        self.prune = Some(cfg);
+        self
+    }
+
+    /// Prepare the session: build (or take) the scene and cameras, run the
+    /// pruning pass if requested, resolve the worker-budget split, and set
+    /// up the (empty) per-view plan cache. No `FramePlan` is built here —
+    /// plans materialize lazily on first use of each view.
+    pub fn build(self) -> Result<Session> {
+        let SessionBuilder {
+            cfg,
+            scene,
+            cameras,
+            options,
+            prune: prune_override,
+        } = self;
+        let mut scene = match scene {
+            Some(s) => s,
+            None => cfg.build_scene()?,
+        };
+        let cams = cameras.unwrap_or_else(|| cfg.build_cameras());
+        if cams.is_empty() {
+            return Err(err!("session needs at least one camera"));
+        }
+        let prune_report = if prune_override.is_some() || cfg.prune {
+            let pcfg = prune_override.unwrap_or_else(|| PruneConfig {
+                workers: cfg.workers,
+                ..PruneConfig::default()
+            });
+            Some(prune(&mut scene, &cams, &pcfg))
+        } else {
+            None
+        };
+
+        // Worker-budget split: up to one worker per frame for streaming,
+        // the remainder to each frame's tile fan-out — short orbits on
+        // wide machines still use the whole allotment without
+        // oversubscribing. Explicit options are taken verbatim.
+        let explicit = options.is_some();
+        let base = match options {
+            Some(o) => o,
+            None => cfg.render_options()?,
+        };
+        let total = pool::resolve_workers(base.workers);
+        let frame_workers = total.min(cams.len());
+        let opts = if explicit {
+            base
+        } else {
+            RenderOptions {
+                workers: (total / frame_workers.max(1)).max(1),
+                ..base
+            }
+        };
+
+        let plans = (0..cams.len()).map(|_| OnceLock::new()).collect();
+        Ok(Session {
+            cfg,
+            scene,
+            cams,
+            opts,
+            frame_workers,
+            prune_report,
+            plans,
+            plan_builds: AtomicUsize::new(0),
+            plan_requests: AtomicUsize::new(0),
+        })
+    }
+}
+
+/// Plan-cache counters (see [`Session::plan_cache_stats`]).
+#[derive(Clone, Copy, Debug)]
+pub struct PlanCacheStats {
+    /// Cache misses: `FramePlan`s actually constructed. A config sweep
+    /// over one view builds exactly one plan regardless of backend count.
+    pub builds: usize,
+    /// Requests served from the cache without rebuilding.
+    pub hits: usize,
+}
+
+/// A prepared rendering session: scene + orbit + options + per-view
+/// [`FramePlan`] cache, shared across any number of backends. See the
+/// [module docs](self) for the surface and the determinism contract.
+pub struct Session {
+    cfg: ExperimentConfig,
+    scene: Scene,
+    cams: Vec<Camera>,
+    opts: RenderOptions,
+    frame_workers: usize,
+    prune_report: Option<PruneReport>,
+    plans: Vec<OnceLock<FramePlan>>,
+    plan_builds: AtomicUsize,
+    plan_requests: AtomicUsize,
+}
+
+impl Session {
+    /// Start building a session from an experiment config.
+    pub fn builder(cfg: ExperimentConfig) -> SessionBuilder {
+        SessionBuilder {
+            cfg,
+            scene: None,
+            cameras: None,
+            options: None,
+            prune: None,
+        }
+    }
+
+    /// The experiment config the session was built from (report
+    /// provenance, hardware presets).
+    pub fn config(&self) -> &ExperimentConfig {
+        &self.cfg
+    }
+
+    /// The prepared (possibly pruned) scene.
+    pub fn scene(&self) -> &Scene {
+        &self.scene
+    }
+
+    /// All evaluation cameras, in orbit order.
+    pub fn cameras(&self) -> &[Camera] {
+        &self.cams
+    }
+
+    /// Camera of view `i`.
+    ///
+    /// # Panics
+    /// If `i >= num_frames()` (like slice indexing).
+    pub fn camera(&self, i: usize) -> &Camera {
+        &self.cams[i]
+    }
+
+    /// Number of views in the orbit.
+    pub fn num_frames(&self) -> usize {
+        self.cams.len()
+    }
+
+    /// The resolved render options every plan is built with. When derived
+    /// from the config, `workers` holds the per-frame tile budget after
+    /// the frames×tiles split.
+    pub fn options(&self) -> &RenderOptions {
+        &self.opts
+    }
+
+    /// The pruning pass that shaped the scene, if one ran. Feed it to
+    /// [`Report::set_prune_provenance`] (done automatically by
+    /// [`Session::report`]).
+    pub fn prune_report(&self) -> Option<&PruneReport> {
+        self.prune_report.as_ref()
+    }
+
+    /// The cached [`FramePlan`] for view `i`, building it on first access.
+    /// Concurrent callers for the same view block on one build; different
+    /// views build independently.
+    ///
+    /// # Panics
+    /// If `i >= num_frames()` (like slice indexing).
+    pub fn plan(&self, i: usize) -> &FramePlan {
+        self.plan_requests.fetch_add(1, Ordering::Relaxed);
+        self.plans[i].get_or_init(|| {
+            self.plan_builds.fetch_add(1, Ordering::Relaxed);
+            FramePlan::build(&self.scene, &self.cams[i], &self.opts)
+        })
+    }
+
+    /// Plan-cache counters: `builds` = plans constructed (≤ one per view
+    /// for the session's lifetime), `hits` = requests served from the
+    /// cache. The acceptance contract for sweeps: one build per view
+    /// regardless of backend count.
+    pub fn plan_cache_stats(&self) -> PlanCacheStats {
+        let builds = self.plan_builds.load(Ordering::Relaxed);
+        let requests = self.plan_requests.load(Ordering::Relaxed);
+        PlanCacheStats {
+            builds,
+            hits: requests.saturating_sub(builds),
+        }
+    }
+
+    /// Render view `i` through `backend` from the cached plan. The
+    /// wall-clock covers only the render (the plan build, if this was the
+    /// view's first use, is amortized session state). `FrameMetrics::view`
+    /// carries `i`.
+    pub fn frame(&self, i: usize, backend: &dyn RenderBackend) -> Result<FrameMetrics> {
+        if i >= self.cams.len() {
+            return Err(err!("frame index {i} out of range ({} views)", self.cams.len()));
+        }
+        let mut m = render_planned(self.plan(i), backend)?;
+        m.view = i;
+        Ok(m)
+    }
+
+    /// Render view `i` through **many** backends from one cached plan —
+    /// the sweep primitive: frame preparation runs at most once no matter
+    /// how many backends re-render the view. Results are in backend order.
+    pub fn sweep(&self, i: usize, backends: &[&dyn RenderBackend]) -> Result<Vec<FrameMetrics>> {
+        if i >= self.cams.len() {
+            return Err(err!("frame index {i} out of range ({} views)", self.cams.len()));
+        }
+        let plan = self.plan(i);
+        backends
+            .iter()
+            .map(|b| {
+                let mut m = render_planned(plan, *b)?;
+                m.view = i;
+                Ok(m)
+            })
+            .collect()
+    }
+
+    /// Stream the whole orbit through `backend`: frames fan across the
+    /// frame-worker budget and are yielded as `Result<FrameMetrics>` in
+    /// **completion order within each dispatch window** — the
+    /// serving-scale primitive frame-level sharding builds on. Frames are
+    /// dispatched in windows of the frame-worker budget (the in-flight
+    /// set): memory stays bounded by the window, not the orbit, and
+    /// `next()` joins the current window before yielding its results (the
+    /// safe-borrow trade-off for a pool that borrows the session; a full
+    /// drain should use [`FrameStream::ordered`], which skips the
+    /// windowing entirely). Re-sorting everything yielded by
+    /// [`FrameMetrics::view`] — or draining through `ordered()` — is
+    /// bit-identical to calling [`Session::frame`] sequentially.
+    pub fn stream<'s>(&'s self, backend: &'s dyn RenderBackend) -> FrameStream<'s> {
+        FrameStream {
+            session: self,
+            backend,
+            dispatched: 0,
+            buf: VecDeque::new(),
+        }
+    }
+
+    /// A [`Report`] pre-wired with this session's provenance: the
+    /// experiment config and, when the session pruned, the
+    /// [`PruneReport`].
+    pub fn report(&self, id: &str, title: &str) -> Report {
+        let mut r = Report::new(id, title);
+        r.set_provenance(self.cfg.to_json());
+        if let Some(rep) = &self.prune_report {
+            r.set_prune_provenance(rep);
+        }
+        r
+    }
+}
+
+/// Streaming frame iterator returned by [`Session::stream`]: yields
+/// `Result<FrameMetrics>` in completion order, windowed by the session's
+/// frame-worker budget. Dropping the stream mid-orbit abandons the
+/// remaining (not yet dispatched) frames without rendering them.
+pub struct FrameStream<'s> {
+    session: &'s Session,
+    backend: &'s dyn RenderBackend,
+    dispatched: usize,
+    buf: VecDeque<Result<FrameMetrics>>,
+}
+
+impl FrameStream<'_> {
+    /// Render the next window of frames across the pool and buffer the
+    /// results in completion order (ties broken by completion sequence).
+    fn fill(&mut self) {
+        let n = self.session.cams.len();
+        if self.dispatched >= n {
+            return;
+        }
+        let window = self.session.frame_workers.max(1).min(n - self.dispatched);
+        let start = self.dispatched;
+        self.dispatched += window;
+        let session = self.session;
+        let backend = self.backend;
+        let seq = AtomicUsize::new(0);
+        let mut chunk: Vec<(usize, Result<FrameMetrics>)> =
+            pool::map_indexed(window, window, |k| {
+                let m = session.frame(start + k, backend);
+                (seq.fetch_add(1, Ordering::Relaxed), m)
+            });
+        chunk.sort_by_key(|(done, _)| *done);
+        self.buf.extend(chunk.into_iter().map(|(_, m)| m));
+    }
+
+    /// Drain the **remaining** frames and return them in orbit order — on
+    /// a fresh stream that is the whole orbit, bit-identical to sequential
+    /// `session.frame(i)` for any worker count. Frames already consumed
+    /// via `next()` are not re-rendered and do not reappear; call
+    /// `ordered()` on a fresh stream for a complete orbit. Fails on the
+    /// first frame error.
+    ///
+    /// A full drain has no reason to window: everything not yet dispatched
+    /// renders through one continuous work-stealing fan-out (the whole
+    /// frame-worker budget stays saturated until the orbit is done),
+    /// rather than `next()`'s bounded in-flight windows.
+    pub fn ordered(mut self) -> Result<Vec<FrameMetrics>> {
+        let mut frames: Vec<FrameMetrics> = Vec::with_capacity(self.session.cams.len());
+        for m in self.buf.drain(..) {
+            frames.push(m?);
+        }
+        let n = self.session.cams.len();
+        let start = self.dispatched;
+        self.dispatched = n;
+        if start < n {
+            let session = self.session;
+            let backend = self.backend;
+            let rest = pool::map_indexed(n - start, session.frame_workers, |k| {
+                session.frame(start + k, backend)
+            });
+            for m in rest {
+                frames.push(m?);
+            }
+        }
+        frames.sort_by_key(|m| m.view);
+        Ok(frames)
+    }
+}
+
+impl Iterator for FrameStream<'_> {
+    type Item = Result<FrameMetrics>;
+
+    fn next(&mut self) -> Option<Self::Item> {
+        if self.buf.is_empty() {
+            self.fill();
+        }
+        self.buf.pop_front()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::frame::Golden;
+
+    fn cfg(frames: usize, workers: usize) -> ExperimentConfig {
+        ExperimentConfig {
+            scene: "truck".into(),
+            scene_scale: 0.01,
+            resolution: 64,
+            frames,
+            workers,
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn builder_splits_the_worker_budget() {
+        // 8-thread budget over 2 frames: 2 frame workers × 4 tile workers.
+        let s = Session::builder(cfg(2, 8)).build().unwrap();
+        assert_eq!(s.frame_workers, 2);
+        assert_eq!(s.options().workers, 4);
+        // Explicit options are verbatim.
+        let s = Session::builder(cfg(2, 8))
+            .options(RenderOptions {
+                workers: 8,
+                ..RenderOptions::default()
+            })
+            .build()
+            .unwrap();
+        assert_eq!(s.options().workers, 8);
+    }
+
+    #[test]
+    fn plan_cache_counts_builds_and_hits() {
+        let s = Session::builder(cfg(2, 1)).build().unwrap();
+        let a = s.frame(0, &Golden).unwrap();
+        let b = s.frame(0, &Golden).unwrap();
+        assert_eq!(a.image.data, b.image.data);
+        let st = s.plan_cache_stats();
+        assert_eq!(st.builds, 1);
+        assert_eq!(st.hits, 1);
+        s.frame(1, &Golden).unwrap();
+        assert_eq!(s.plan_cache_stats().builds, 2);
+    }
+
+    #[test]
+    fn frame_out_of_range_is_an_error_not_a_panic() {
+        let s = Session::builder(cfg(1, 1)).build().unwrap();
+        assert!(s.frame(1, &Golden).is_err());
+        assert!(s.sweep(1, &[&Golden]).is_err());
+    }
+
+    #[test]
+    fn empty_cameras_is_an_error() {
+        assert!(Session::builder(cfg(1, 1)).cameras(Vec::new()).build().is_err());
+    }
+
+    #[test]
+    fn pruned_session_keeps_the_report() {
+        let pruned = Session::builder(ExperimentConfig {
+            prune: true,
+            ..cfg(2, 1)
+        })
+        .build()
+        .unwrap();
+        let rep = pruned.prune_report().expect("prune ran");
+        assert!(rep.after < rep.before);
+        assert_eq!(rep.views, 2);
+        assert_eq!(pruned.scene().len(), rep.after);
+        // The session report carries the prune provenance.
+        let j = pruned.report("t", "t").to_json();
+        assert!(j.at(&["prune", "before"]).is_some());
+        // An unpruned session has neither.
+        let plain = Session::builder(cfg(2, 1)).build().unwrap();
+        assert!(plain.prune_report().is_none());
+        assert!(plain.report("t", "t").to_json().at(&["prune"]).is_none());
+    }
+
+    #[test]
+    fn stream_yields_every_frame_once() {
+        let s = Session::builder(cfg(3, 2)).build().unwrap();
+        let mut views: Vec<usize> = s.stream(&Golden).map(|m| m.unwrap().view).collect();
+        views.sort_unstable();
+        assert_eq!(views, vec![0, 1, 2]);
+    }
+}

@@ -17,9 +17,10 @@
 //! * [`runtime`], [`coordinator`] — the Layer-3 driver: the artifact
 //!   manifest plus (behind the `pjrt` cargo feature) the PJRT client that
 //!   loads the AOT-compiled JAX/Pallas artifacts (`artifacts/*.hlo.txt`),
-//!   and the frame coordinator that schedules tile/frame work across
-//!   [`coordinator::frame::RenderBackend`] implementations on the worker
-//!   pool.
+//!   and the [`coordinator::Session`] rendering API — one prepared
+//!   session per experiment, a cached `FramePlan` per view, frames
+//!   streamed across [`coordinator::frame::RenderBackend`]
+//!   implementations on the worker pool.
 //! * [`util`], [`numeric`] — in-tree substrates (RNG, JSON, CLI, errors,
 //!   bench harness, property tests, FP16/FP8 emulation, linear algebra).
 

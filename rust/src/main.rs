@@ -8,16 +8,20 @@
 //!   quality   PSNR/SSIM of CAT modes vs the vanilla render (Table I style).
 //!   area      Print the area model breakdown (Table II style).
 //!   info      Print scene/workload statistics.
+//!
+//! Every rendering subcommand drives one `coordinator::Session`: scene
+//! prep (with `--prune` recorded as report provenance), the full
+//! `RenderOptions` from the config (`--strategy`, `--tile-size`,
+//! `--workers`), and a per-view `FramePlan` cache shared across backends.
 
-use flicker::camera::Camera;
 use flicker::cat::{CatConfig, LeaderMode, Precision};
 use flicker::config::ExperimentConfig;
 use flicker::coordinator::report::Report;
-use flicker::coordinator::{render_frame, FrameRequest, Golden, GoldenCat, RenderBackend};
+use flicker::coordinator::{Golden, GoldenCat, RenderBackend, Session};
 use flicker::render::metrics::{psnr, ssim};
-use flicker::render::raster::RenderOptions;
 use flicker::sim::area::{area, AreaParams};
 use flicker::sim::top::simulate_frame;
+use flicker::sim::workload::{extract_for, FrameWorkload};
 use flicker::sim::HwConfig;
 use flicker::util::cli::Args;
 use flicker::util::error::Result;
@@ -45,6 +49,8 @@ COMMON OPTIONS
   --workers      tile/frame/prune-scoring worker threads, 0 = auto
                  (default 1; output — images and pruning decisions — is
                  bit-identical for any worker count)
+  --strategy     tile intersection: aabb|obb           (default aabb)
+  --tile-size    tile edge in pixels                   (default 16)
   --hardware     flicker32|flicker32-sparse|simplified32|simplified64|gscore64
 
 The pjrt backend requires a build with `--features pjrt` and AOT artifacts
@@ -79,20 +85,10 @@ fn run(args: &Args) -> Result<()> {
     }
 }
 
-fn prepared_scene(cfg: &ExperimentConfig) -> Result<flicker::scene::gaussian::Scene> {
-    let mut scene = cfg.build_scene()?;
-    if cfg.prune {
-        let views = cfg.build_cameras();
-        // Contribution scoring honors the CLI worker budget; the pruning
-        // decision is bit-identical for any --workers value.
-        let rep = flicker::scene::pruning::prune(
-            &mut scene,
-            &views,
-            &flicker::scene::pruning::PruneConfig {
-                workers: cfg.workers,
-                ..Default::default()
-            },
-        );
+/// Echo the session's pruning pass to the console (it is also recorded as
+/// report provenance by `session.report`).
+fn announce_prune(session: &Session) {
+    if let Some(rep) = session.prune_report() {
         println!(
             "pruned {} → {} gaussians ({} scoring views, {:.1} pairs/px tested)",
             rep.before,
@@ -101,17 +97,30 @@ fn prepared_scene(cfg: &ExperimentConfig) -> Result<flicker::scene::gaussian::Sc
             rep.stats.per_pixel_tested()
         );
     }
-    Ok(scene)
+}
+
+/// Workload trace for view 0, reusing the session's cached plan when its
+/// geometry is extractor-compatible (the rule lives in
+/// `sim::workload::extract_for`; with incompatible options the plan is
+/// never built).
+fn workload_for(session: &Session, hw: &HwConfig) -> FrameWorkload {
+    extract_for(
+        session.scene(),
+        session.camera(0),
+        session.options(),
+        || session.plan(0),
+        hw,
+    )
 }
 
 fn cmd_render(args: &Args) -> Result<()> {
     let cfg = ExperimentConfig::from_args(args)?;
-    let scene = prepared_scene(&cfg)?;
-    let cams = cfg.build_cameras();
+    let session = Session::builder(cfg).build()?;
+    announce_prune(&session);
     let backend_name = args.str_or("backend", "golden");
 
     match backend_name.as_str() {
-        "golden" => render_orbit_to_disk(args, &cfg, &scene, &cams, &Golden),
+        "golden" => orbit_to_disk(args, &session, &Golden),
         "golden-cat" => {
             let mode = LeaderMode::parse(&args.str_or("cat-mode", "adaptive"))
                 .ok_or_else(|| err!("bad --cat-mode"))?;
@@ -122,62 +131,44 @@ fn cmd_render(args: &Args) -> Result<()> {
                 precision,
                 stage1: true,
             });
-            render_orbit_to_disk(args, &cfg, &scene, &cams, &backend)
+            orbit_to_disk(args, &session, &backend)
         }
-        "pjrt" => cmd_render_pjrt(args, &cfg, &scene, &cams),
+        "pjrt" => cmd_render_pjrt(args, &session),
         other => bail!("unknown backend '{other}'"),
     }
 }
 
 #[cfg(feature = "pjrt")]
-fn cmd_render_pjrt(
-    args: &Args,
-    cfg: &ExperimentConfig,
-    scene: &flicker::scene::gaussian::Scene,
-    cams: &[Camera],
-) -> Result<()> {
+fn cmd_render_pjrt(args: &Args, session: &Session) -> Result<()> {
     let rt = flicker::runtime::Runtime::load(&flicker::runtime::default_artifact_dir())?;
     println!("pjrt platform: {}", rt.platform());
-    render_orbit_to_disk(args, cfg, scene, cams, &flicker::coordinator::Pjrt::new(&rt))
+    let backend = flicker::coordinator::Pjrt::new(&rt);
+    orbit_to_disk(args, session, &backend)
 }
 
 #[cfg(not(feature = "pjrt"))]
-fn cmd_render_pjrt(
-    _args: &Args,
-    _cfg: &ExperimentConfig,
-    _scene: &flicker::scene::gaussian::Scene,
-    _cams: &[Camera],
-) -> Result<()> {
+fn cmd_render_pjrt(_args: &Args, _session: &Session) -> Result<()> {
     bail!("this build has no PJRT runtime; rebuild with `cargo build --features pjrt`")
 }
 
-/// Shared render-command loop: render every orbit camera through `backend`,
-/// write PPM frames, and emit the metrics report.
-fn render_orbit_to_disk(
-    args: &Args,
-    cfg: &ExperimentConfig,
-    scene: &flicker::scene::gaussian::Scene,
-    cams: &[Camera],
-    backend: &dyn RenderBackend,
-) -> Result<()> {
+/// Shared render-command loop: stream the session's orbit through
+/// `backend` (frames fan across the worker budget) and write each PPM as
+/// its frame completes — memory stays bounded by the stream's dispatch
+/// window, not the orbit. Only the small report rows are buffered, then
+/// sorted into orbit order so the emitted report is deterministic.
+fn orbit_to_disk(args: &Args, session: &Session, backend: &dyn RenderBackend) -> Result<()> {
     let out_dir = std::path::PathBuf::from(args.str_or("out-dir", "target/frames"));
     std::fs::create_dir_all(&out_dir)?;
-    let mut report = Report::new(
+    let scene_name = session.scene().name.clone();
+    let mut report = session.report(
         "render",
-        &format!("render {} ({})", scene.name, backend.name()),
+        &format!("render {} ({})", scene_name, backend.name()),
     );
-    report.set_provenance(cfg.to_json());
-    for (i, cam) in cams.iter().enumerate() {
-        let req = FrameRequest {
-            scene,
-            camera: cam,
-            options: RenderOptions {
-                workers: cfg.workers,
-                ..RenderOptions::default()
-            },
-        };
-        let m = render_frame(&req, backend)?;
-        let path = out_dir.join(format!("{}_{i:03}.ppm", scene.name));
+    let mut rows = Vec::with_capacity(session.num_frames());
+    for m in session.stream(backend) {
+        let m = m?;
+        let i = m.view;
+        let path = out_dir.join(format!("{scene_name}_{i:03}.ppm"));
         m.image.write_ppm(&path)?;
         println!(
             "frame {i}: {:.1} ms, {} splats, {} tile-pairs → {}",
@@ -186,15 +177,19 @@ fn render_orbit_to_disk(
             m.stats.tile_pairs,
             path.display()
         );
-        report.row(
-            &format!("frame{i}"),
-            &[
+        rows.push((
+            i,
+            [
                 ("wall_ms", m.wall_ms),
                 ("splats", m.stats.splats as f64),
                 ("tile_pairs", m.stats.tile_pairs as f64),
                 ("pp_tested", m.stats.per_pixel_tested()),
             ],
-        );
+        ));
+    }
+    rows.sort_by_key(|(i, _)| *i);
+    for (i, metrics) in &rows {
+        report.row(&format!("frame{i}"), metrics);
     }
     report.emit();
     Ok(())
@@ -202,16 +197,15 @@ fn render_orbit_to_disk(
 
 fn cmd_simulate(args: &Args) -> Result<()> {
     let cfg = ExperimentConfig::from_args(args)?;
-    let scene = prepared_scene(&cfg)?;
-    let cams = cfg.build_cameras();
-    let hw = cfg.build_hw()?;
-    let mut report = Report::new(
+    let session = Session::builder(cfg).build()?;
+    announce_prune(&session);
+    let hw = session.config().build_hw()?;
+    let mut report = session.report(
         "simulate",
-        &format!("simulate {} on {}", scene.name, hw.name),
+        &format!("simulate {} on {}", session.scene().name, hw.name),
     );
-    report.set_provenance(cfg.to_json());
-    for (i, cam) in cams.iter().enumerate() {
-        let r = simulate_frame(&scene, cam, &hw);
+    for (i, cam) in session.cameras().iter().enumerate() {
+        let r = simulate_frame(session.scene(), cam, &hw);
         println!(
             "frame {i}: {} render-cycles, {:.2} ms, {:.1} fps, stall {:.1}%, {:.1} µJ",
             r.render_cycles,
@@ -238,20 +232,27 @@ fn cmd_simulate(args: &Args) -> Result<()> {
 
 fn cmd_sweep(args: &Args) -> Result<()> {
     let cfg = ExperimentConfig::from_args(args)?;
-    let scene = prepared_scene(&cfg)?;
-    let cam = &cfg.build_cameras()[0];
+    let session = Session::builder(cfg).build()?;
+    announce_prune(&session);
     let depths = args.u64_list_or("depths", &[1, 2, 4, 8, 16, 32, 64, 128])?;
-    let base_hw = cfg.build_hw()?;
-    let wl = flicker::sim::workload::extract(&scene, cam, &base_hw);
-    let mut report = Report::new("sweep", &format!("FIFO sweep on {}", scene.name));
-    report.set_provenance(cfg.to_json());
+    let base_hw = session.config().build_hw()?;
+    let wl = workload_for(&session, &base_hw);
+    let mut report = session.report(
+        "sweep",
+        &format!("FIFO sweep on {}", session.scene().name),
+    );
     let mut base_cycles = None;
     for d in depths {
         let hw = HwConfig {
             fifo_depth: d as usize,
             ..base_hw.clone()
         };
-        let r = flicker::sim::top::simulate_workload(&scene, cam, &hw, wl.clone());
+        let r = flicker::sim::top::simulate_workload(
+            session.scene(),
+            session.camera(0),
+            &hw,
+            wl.clone(),
+        );
         let base = *base_cycles.get_or_insert(r.render_cycles as f64);
         report.row(
             &format!("depth={d}"),
@@ -268,32 +269,40 @@ fn cmd_sweep(args: &Args) -> Result<()> {
 
 fn cmd_quality(args: &Args) -> Result<()> {
     let cfg = ExperimentConfig::from_args(args)?;
-    let scene = prepared_scene(&cfg)?;
-    let cam = &cfg.build_cameras()[0];
-    let opts = RenderOptions {
-        workers: cfg.workers,
-        ..RenderOptions::default()
-    };
+    // One swept view — no frame fan-out, so hand the whole worker budget
+    // to the tile loop via explicit options.
+    let opts = cfg.render_options()?;
+    let session = Session::builder(cfg).options(opts).build()?;
+    announce_prune(&session);
     // One FramePlan for the whole sweep: projection, tile binning, and
-    // depth sorting run once; every CAT config re-renders from the same
-    // prepared intermediates.
-    let plan = flicker::render::plan::FramePlan::build(&scene, cam, &opts);
-    let golden = plan.render(&flicker::render::raster::VanillaMasks, None);
-    let mut report = Report::new("quality", &format!("CAT quality on {}", scene.name));
-    report.set_provenance(cfg.to_json());
-    for (name, mode, precision) in [
+    // depth sorting run once; the golden reference and every CAT config
+    // re-render from the same cached intermediates.
+    let golden = session.frame(0, &Golden)?;
+    let mut report = session.report(
+        "quality",
+        &format!("CAT quality on {}", session.scene().name),
+    );
+    let configs = [
         ("uniform-dense", LeaderMode::UniformDense, Precision::Fp32),
         ("uniform-sparse", LeaderMode::UniformSparse, Precision::Fp32),
         ("adaptive", LeaderMode::SmoothFocused, Precision::Fp32),
         ("adaptive-mixed", LeaderMode::SmoothFocused, Precision::Mixed),
         ("adaptive-fp8", LeaderMode::SmoothFocused, Precision::Fp8),
-    ] {
-        let cat = CatConfig {
-            mode,
-            precision,
-            stage1: true,
-        };
-        let out = plan.render(&cat, None);
+    ];
+    let backends: Vec<GoldenCat> = configs
+        .iter()
+        .map(|(_, mode, precision)| {
+            GoldenCat(CatConfig {
+                mode: *mode,
+                precision: *precision,
+                stage1: true,
+            })
+        })
+        .collect();
+    let refs: Vec<&dyn RenderBackend> =
+        backends.iter().map(|b| b as &dyn RenderBackend).collect();
+    let outs = session.sweep(0, &refs)?;
+    for ((name, _, _), out) in configs.into_iter().zip(&outs) {
         report.row(
             name,
             &[
@@ -303,6 +312,13 @@ fn cmd_quality(args: &Args) -> Result<()> {
             ],
         );
     }
+    let cache = session.plan_cache_stats();
+    println!(
+        "plan cache: {} build, {} hits across {} renders",
+        cache.builds,
+        cache.hits,
+        outs.len() + 1
+    );
     report.emit();
     Ok(())
 }
@@ -322,10 +338,11 @@ fn cmd_area(args: &Args) -> Result<()> {
 
 fn cmd_info(args: &Args) -> Result<()> {
     let cfg = ExperimentConfig::from_args(args)?;
-    let scene = cfg.build_scene()?;
-    let cam: &Camera = &cfg.build_cameras()[0];
-    let hw = cfg.build_hw()?;
-    let wl = flicker::sim::workload::extract(&scene, cam, &hw);
+    let session = Session::builder(cfg).build()?;
+    announce_prune(&session);
+    let hw = session.config().build_hw()?;
+    let scene = session.scene();
+    let wl = workload_for(&session, &hw);
     println!("scene {}: {} gaussians", scene.name, scene.len());
     println!("  spiky fraction (ratio≥3): {:.2}", scene.spiky_fraction(3.0));
     println!("  visible splats: {}", wl.visible_splats);

@@ -192,6 +192,25 @@ pub enum Strategy {
     Obb,
 }
 
+impl Strategy {
+    /// Parse a config/CLI name ("aabb" | "obb").
+    pub fn parse(s: &str) -> Option<Strategy> {
+        match s {
+            "aabb" => Some(Strategy::Aabb),
+            "obb" => Some(Strategy::Obb),
+            _ => None,
+        }
+    }
+
+    /// The stable config/CLI name ([`Strategy::parse`]'s inverse).
+    pub fn name(self) -> &'static str {
+        match self {
+            Strategy::Aabb => "aabb",
+            Strategy::Obb => "obb",
+        }
+    }
+}
+
 /// Build per-tile splat index lists with the chosen strategy. Splat order
 /// is preserved (callers depth-sort afterwards). Returns
 /// `lists[tile] -> Vec<splat idx>`.

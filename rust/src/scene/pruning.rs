@@ -22,6 +22,7 @@ use super::gaussian::Scene;
 use crate::camera::Camera;
 use crate::render::plan::FramePlan;
 use crate::render::raster::{RenderOptions, RenderStats, VanillaMasks};
+use crate::util::json::{jnum, Json};
 use crate::util::pool;
 
 /// Pruning configuration.
@@ -62,6 +63,23 @@ pub struct PruneReport {
     pub views: usize,
     /// Rasterizer workload counters absorbed across all scoring views.
     pub stats: RenderStats,
+}
+
+impl PruneReport {
+    /// Provenance serialization: before/after counts, the score threshold,
+    /// scoring-view count, and the pairs-per-pixel the scoring pass
+    /// tested. `coordinator::report::Report::set_prune_provenance` embeds
+    /// this in every report produced from a pruned session, so a result is
+    /// never divorced from the pruning pass that shaped its scene.
+    pub fn to_json(&self) -> Json {
+        let mut o = Json::obj();
+        o.insert("before", jnum(self.before as f64));
+        o.insert("after", jnum(self.after as f64));
+        o.insert("threshold", jnum(self.threshold as f64));
+        o.insert("views", jnum(self.views as f64));
+        o.insert("pairs_per_px_tested", jnum(self.stats.per_pixel_tested()));
+        Json::Obj(o)
+    }
 }
 
 /// Accumulate per-Gaussian contribution scores (Σ T·α) over `views`,
@@ -310,6 +328,17 @@ mod tests {
         assert_eq!(rep.stats.pixels, 4 * 96 * 96);
         assert!(rep.stats.pairs_blended > 0);
         assert!(rep.stats.splats > 0);
+    }
+
+    #[test]
+    fn prune_report_serializes_provenance() {
+        let mut scene = generate_scaled(&preset("truck"), 0.01);
+        let rep = prune(&mut scene, &views(), &PruneConfig::default());
+        let j = rep.to_json();
+        assert_eq!(j.at(&["before"]).and_then(Json::as_f64), Some(rep.before as f64));
+        assert_eq!(j.at(&["after"]).and_then(Json::as_f64), Some(rep.after as f64));
+        assert_eq!(j.at(&["views"]).and_then(Json::as_f64), Some(4.0));
+        assert!(j.at(&["pairs_per_px_tested"]).and_then(Json::as_f64).unwrap() > 0.0);
     }
 
     #[test]

@@ -88,10 +88,33 @@ impl FrameWorkload {
 /// Extract the frame workload for a hardware config. Builds a fresh
 /// [`FramePlan`] (16×16 AABB tiling, the paper's fixed configuration) and
 /// delegates to [`extract_from_plan`] — callers that already hold a plan
-/// for this view (e.g. after rendering it) should call that directly.
+/// for this view (a `coordinator::Session`'s cached `session.plan(i)`, or
+/// a view just rendered) should call that directly.
 pub fn extract(scene: &Scene, cam: &Camera, hw: &HwConfig) -> FrameWorkload {
     let plan = FramePlan::build(scene, cam, &RenderOptions::default());
     extract_from_plan(scene, &plan, hw)
+}
+
+/// Workload trace for a view that may have a cheaply reachable prepared
+/// plan: when `opts` matches the extractor's fixed 16×16 AABB geometry,
+/// the plan is obtained from the (lazy) `plan` thunk and reused via
+/// [`extract_from_plan`]; otherwise a fresh default-geometry [`extract`]
+/// runs and the thunk is never called — so a `coordinator::Session` with
+/// incompatible options does not build (or fetch) a plan just to have it
+/// rejected. This is the one place that knows the compatibility rule;
+/// callers (the CLI, examples) go through here instead of re-encoding it.
+pub fn extract_for<'a>(
+    scene: &Scene,
+    cam: &Camera,
+    opts: &RenderOptions,
+    plan: impl FnOnce() -> &'a FramePlan,
+    hw: &HwConfig,
+) -> FrameWorkload {
+    if opts.tile_size == 16 && opts.strategy == Strategy::Aabb {
+        extract_from_plan(scene, plan(), hw)
+    } else {
+        extract(scene, cam, hw)
+    }
 }
 
 /// Extract the frame workload from a prebuilt [`FramePlan`] — projection,
@@ -289,6 +312,34 @@ mod tests {
         assert_eq!(base.minitile_pairs, reused.minitile_pairs);
         assert_eq!(base.blended_pairs, reused.blended_pairs);
         assert_eq!(base.tiles.len(), reused.tiles.len());
+    }
+
+    #[test]
+    fn extract_for_reuses_compatible_plans_and_falls_back() {
+        let s = scene();
+        let c = cam();
+        let hw = HwConfig::flicker32();
+        let base = extract(&s, &c, &hw);
+        let opts = RenderOptions::default();
+        let plan = FramePlan::build(&s, &c, &opts);
+        let reused = extract_for(&s, &c, &opts, || &plan, &hw);
+        assert_eq!(base.minitile_pairs, reused.minitile_pairs);
+        assert_eq!(base.tile_pairs, reused.tile_pairs);
+        // Incompatible geometry (OBB binning) must fall back to a fresh
+        // default-geometry extraction WITHOUT touching the plan thunk.
+        let obb_opts = RenderOptions {
+            strategy: Strategy::Obb,
+            ..RenderOptions::default()
+        };
+        let fell_back = extract_for(
+            &s,
+            &c,
+            &obb_opts,
+            || panic!("incompatible options must not build a plan"),
+            &hw,
+        );
+        assert_eq!(base.minitile_pairs, fell_back.minitile_pairs);
+        assert_eq!(base.tile_pairs, fell_back.tile_pairs);
     }
 
     #[test]

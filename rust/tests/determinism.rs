@@ -7,14 +7,22 @@
 //! flattened view×tile work-stealing queue, where any worker may compute
 //! any tile of any view. Plan reuse obeys it too: a `FramePlan` rendered
 //! twice (or through the legacy one-shot wrappers) is bit-identical.
+//!
+//! The `Session` streaming surface inherits the whole contract:
+//! `FrameStream` completion-order collection re-sorted by view index, and
+//! the `ordered()` adapter, are bit-identical to sequential
+//! `session.frame(i)` for workers 1/2/8/0, and `session.sweep` matches
+//! per-backend one-shot renders bitwise while building exactly one
+//! `FramePlan` per view regardless of backend count.
 
 use flicker::camera::{orbit_path, Camera, Intrinsics};
 use flicker::cat::{CatConfig, LeaderMode, Precision};
 use flicker::config::ExperimentConfig;
-use flicker::coordinator::{render_frame, render_orbit, FrameRequest, Golden, GoldenCat};
+use flicker::coordinator::{FrameMetrics, Golden, GoldenCat, RenderBackend, Session};
 use flicker::numeric::linalg::v3;
 use flicker::render::plan::FramePlan;
 use flicker::render::raster::{render, render_masked, AllOnes, RenderOptions, VanillaMasks};
+use flicker::render::tile::Strategy;
 use flicker::scene::gaussian::Scene;
 use flicker::scene::pruning::score_views;
 use flicker::scene::synthetic::{generate_scaled, preset};
@@ -54,6 +62,16 @@ fn golden_tile_parallel_is_bit_identical() {
     }
 }
 
+/// Session over a borrowed (scene, camera) pair with explicit options.
+fn single_view_session(scene: &Scene, cam: &Camera, workers: usize) -> Session {
+    Session::builder(ExperimentConfig::default())
+        .scene(scene.clone())
+        .cameras(vec![*cam])
+        .options(opts_with_workers(workers))
+        .build()
+        .unwrap()
+}
+
 #[test]
 fn cat_backend_tile_parallel_is_bit_identical() {
     let (scene, cam) = truck_frame();
@@ -62,50 +80,144 @@ fn cat_backend_tile_parallel_is_bit_identical() {
         precision: Precision::Mixed,
         stage1: true,
     });
-    let seq = render_frame(
-        &FrameRequest {
-            scene: &scene,
-            camera: &cam,
-            options: opts_with_workers(1),
-        },
-        &backend,
-    )
-    .unwrap();
-    let par = render_frame(
-        &FrameRequest {
-            scene: &scene,
-            camera: &cam,
-            options: opts_with_workers(4),
-        },
-        &backend,
-    )
-    .unwrap();
+    let seq = single_view_session(&scene, &cam, 1)
+        .frame(0, &backend)
+        .unwrap();
+    let par = single_view_session(&scene, &cam, 4)
+        .frame(0, &backend)
+        .unwrap();
     assert_eq!(seq.image.data, par.image.data);
     assert_eq!(seq.stats.pairs_tested, par.stats.pairs_tested);
     assert_eq!(seq.backend, "golden+cat");
 }
 
-#[test]
-fn orbit_frame_parallel_is_bit_identical() {
-    let base = ExperimentConfig {
+fn orbit_cfg(workers: usize) -> ExperimentConfig {
+    ExperimentConfig {
         scene: "truck".into(),
         scene_scale: 0.01,
         resolution: 64,
         frames: 3,
+        workers,
         ..Default::default()
-    };
-    let seq = render_orbit(&base, &Golden).unwrap();
-    let par_cfg = ExperimentConfig {
-        workers: 3,
-        ..base.clone()
-    };
-    let par = render_orbit(&par_cfg, &Golden).unwrap();
-    assert_eq!(seq.len(), par.len());
-    for (i, (a, b)) in seq.iter().zip(&par).enumerate() {
-        assert_eq!(a.image.data, b.image.data, "frame {i}");
-        assert_eq!(a.stats.pairs_blended, b.stats.pairs_blended, "frame {i}");
-        assert_eq!(b.backend, "golden");
     }
+}
+
+#[test]
+fn stream_is_bit_identical_to_sequential_frames() {
+    // The streaming contract: FrameStream completion-order collection
+    // re-sorted by view index, and the ordered() adapter, must match
+    // sequential session.frame(i) bitwise for workers 1/2/8/0.
+    let reference = Session::builder(orbit_cfg(1)).build().unwrap();
+    let seq: Vec<FrameMetrics> = (0..reference.num_frames())
+        .map(|i| reference.frame(i, &Golden).unwrap())
+        .collect();
+    for workers in [1, 2, 8, 0] {
+        let session = Session::builder(orbit_cfg(workers)).build().unwrap();
+
+        // Completion-order collection, re-sorted by frame index.
+        let mut done: Vec<FrameMetrics> = session
+            .stream(&Golden)
+            .collect::<flicker::util::error::Result<Vec<_>>>()
+            .unwrap();
+        done.sort_by_key(|m| m.view);
+        assert_eq!(seq.len(), done.len(), "workers={workers}");
+        for (a, b) in seq.iter().zip(&done) {
+            assert_eq!(a.image.data, b.image.data, "workers={workers}");
+            assert_eq!(a.stats.pairs_blended, b.stats.pairs_blended, "workers={workers}");
+            assert_eq!(b.backend, "golden");
+        }
+
+        // The ordered() adapter (fresh session so plans rebuild cold).
+        let session = Session::builder(orbit_cfg(workers)).build().unwrap();
+        let ordered = session.stream(&Golden).ordered().unwrap();
+        for (i, (a, b)) in seq.iter().zip(&ordered).enumerate() {
+            assert_eq!(a.image.data, b.image.data, "workers={workers} frame {i}");
+            assert_eq!(b.view, i, "ordered() must restore orbit order");
+        }
+    }
+}
+
+#[test]
+fn sweep_matches_per_backend_oneshot_renders() {
+    // session.sweep: many backends over ONE cached plan — bitwise equal to
+    // fresh one-shot renders per backend, with exactly one plan build.
+    let (scene, cam) = truck_frame();
+    let cat = GoldenCat(CatConfig {
+        mode: LeaderMode::UniformDense,
+        precision: Precision::Fp32,
+        stage1: true,
+    });
+    let session = single_view_session(&scene, &cam, 1);
+    let outs = session.sweep(0, &[&Golden, &cat]).unwrap();
+    assert_eq!(
+        session.plan_cache_stats().builds,
+        1,
+        "a sweep builds exactly one FramePlan regardless of backend count"
+    );
+
+    let opts = opts_with_workers(1);
+    let golden_oneshot = render(&scene, &cam, &opts);
+    assert_eq!(outs[0].image.data, golden_oneshot.image.data);
+    assert_eq!(outs[0].stats.pairs_tested, golden_oneshot.stats.pairs_tested);
+    let cat_oneshot = FramePlan::build(&scene, &cam, &opts).render(&cat.0, None);
+    assert_eq!(outs[1].image.data, cat_oneshot.image.data);
+    assert_eq!(outs[1].stats.pairs_tested, cat_oneshot.stats.pairs_tested);
+}
+
+#[test]
+fn plan_cache_builds_once_per_view_for_any_backend_count() {
+    // The cmd_quality shape: sweep every view through several backends,
+    // then re-render — the cache must report one build per view, ever.
+    let session = Session::builder(orbit_cfg(1)).build().unwrap();
+    let cat = GoldenCat(CatConfig {
+        mode: LeaderMode::SmoothFocused,
+        precision: Precision::Mixed,
+        stage1: true,
+    });
+    let backends: [&dyn RenderBackend; 2] = [&Golden, &cat];
+    for i in 0..session.num_frames() {
+        session.sweep(i, &backends).unwrap();
+    }
+    assert_eq!(session.plan_cache_stats().builds, session.num_frames());
+    for i in 0..session.num_frames() {
+        session.frame(i, &Golden).unwrap();
+        session.frame(i, &cat).unwrap();
+    }
+    let stats = session.plan_cache_stats();
+    assert_eq!(
+        stats.builds,
+        session.num_frames(),
+        "repeat renders must hit the cache, not rebuild"
+    );
+    assert!(stats.hits >= 2 * session.num_frames());
+}
+
+#[test]
+fn configured_strategy_reaches_orbit_renders() {
+    // Regression: the pre-Session render_orbit hardcoded
+    // RenderOptions::default() except workers, silently dropping a
+    // configured Strategy::Obb. The session threads the full options.
+    let obb_cfg = ExperimentConfig {
+        strategy: Some("obb".into()),
+        ..orbit_cfg(1)
+    };
+    let obb = Session::builder(obb_cfg).build().unwrap();
+    assert_eq!(obb.options().strategy, Strategy::Obb);
+    let obb_frames = obb.stream(&Golden).ordered().unwrap();
+    assert_eq!(
+        obb.plan(0).opts.strategy,
+        Strategy::Obb,
+        "the configured strategy must reach the rendered plans"
+    );
+    let aabb = Session::builder(orbit_cfg(1)).build().unwrap();
+    let aabb_frames = aabb.stream(&Golden).ordered().unwrap();
+    // OBB binning never inflates tile pairs relative to AABB.
+    let obb_pairs: usize = obb_frames.iter().map(|m| m.stats.tile_pairs).sum();
+    let aabb_pairs: usize = aabb_frames.iter().map(|m| m.stats.tile_pairs).sum();
+    assert!(
+        obb_pairs <= aabb_pairs,
+        "OBB orbit must not test more tile pairs ({obb_pairs} vs {aabb_pairs})"
+    );
 }
 
 #[test]
@@ -247,12 +359,22 @@ fn orbit_auto_workers_is_bit_identical() {
         frames: 2,
         ..Default::default()
     };
-    let seq = render_orbit(&base, &Golden).unwrap();
+    let seq = Session::builder(base.clone())
+        .build()
+        .unwrap()
+        .stream(&Golden)
+        .ordered()
+        .unwrap();
     let auto_cfg = ExperimentConfig {
         workers: 0,
         ..base.clone()
     };
-    let auto = render_orbit(&auto_cfg, &Golden).unwrap();
+    let auto = Session::builder(auto_cfg)
+        .build()
+        .unwrap()
+        .stream(&Golden)
+        .ordered()
+        .unwrap();
     for (a, b) in seq.iter().zip(&auto) {
         assert_eq!(a.image.data, b.image.data);
     }

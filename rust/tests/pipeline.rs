@@ -5,7 +5,7 @@
 use flicker::camera::{orbit_path, Camera, Intrinsics};
 use flicker::cat::{CatConfig, CatEngine, LeaderMode, ObbSubtileMask, Precision};
 use flicker::config::ExperimentConfig;
-use flicker::coordinator::{render_frame, FrameRequest, Golden, GoldenCat};
+use flicker::coordinator::{Golden, GoldenCat, RenderBackend, Session};
 use flicker::numeric::linalg::v3;
 use flicker::render::metrics::{psnr, ssim};
 use flicker::render::plan::FramePlan;
@@ -130,24 +130,33 @@ fn all_eight_scenes_render_and_simulate() {
 
 #[test]
 fn backend_parity_golden_vs_cat_modes() {
-    let s = scene("playroom");
-    let c = cam(96);
-    let req = FrameRequest {
-        scene: &s,
-        camera: &c,
-        options: RenderOptions::default(),
-    };
-    let golden = render_frame(&req, &Golden).unwrap();
-    for precision in [Precision::Fp32, Precision::Fp16, Precision::Mixed] {
-        let m = render_frame(
-            &req,
-            &GoldenCat(CatConfig {
+    // One Session, one cached plan, four backends: the cmd_quality shape.
+    let session = Session::builder(ExperimentConfig::default())
+        .scene(scene("playroom"))
+        .cameras(vec![cam(96)])
+        .build()
+        .unwrap();
+    let precisions = [Precision::Fp32, Precision::Fp16, Precision::Mixed];
+    let cats: Vec<GoldenCat> = precisions
+        .iter()
+        .map(|&precision| {
+            GoldenCat(CatConfig {
                 mode: LeaderMode::UniformDense,
                 precision,
                 stage1: true,
-            }),
-        )
-        .unwrap();
+            })
+        })
+        .collect();
+    let mut backends: Vec<&dyn RenderBackend> = vec![&Golden];
+    backends.extend(cats.iter().map(|b| b as &dyn RenderBackend));
+    let outs = session.sweep(0, &backends).unwrap();
+    assert_eq!(
+        session.plan_cache_stats().builds,
+        1,
+        "the sweep must share one FramePlan across all backends"
+    );
+    let golden = &outs[0];
+    for (precision, m) in precisions.iter().zip(&outs[1..]) {
         let p = psnr(&golden.image, &m.image);
         assert!(p > 30.0, "{precision:?}: PSNR {p}");
         let sm = ssim(&golden.image, &m.image);
