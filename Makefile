@@ -5,7 +5,7 @@
 CARGO ?= cargo
 PYTHON ?= python3
 
-.PHONY: build test bench bench-smoke examples fmt clippy docs artifacts pytest ci clean
+.PHONY: build test bench bench-smoke prop-heavy examples fmt clippy docs artifacts pytest ci clean
 
 build:
 	$(CARGO) build --release
@@ -19,9 +19,18 @@ bench:
 
 # Run every bench once at tiny scale (`--quick` halves the resolution and
 # drops to 1 warmup + 3 samples) so bench targets can't bitrot between
-# perf PRs. Mirrored by the CI bench-smoke lane.
+# perf PRs. Mirrored by the CI bench-smoke lane. The second invocation
+# re-runs hotpath with the pjrt feature so the exec_tile_single /
+# exec_tile_batched rows (stub-backed) can't bitrot either.
 bench-smoke:
 	$(CARGO) bench -- --quick
+	$(CARGO) bench --features pjrt --bench hotpath -- --quick
+
+# Heavier property coverage (CI: prop-heavy lane): 512 generated cases per
+# property across the property suite and the PJRT roundtrip tests, running
+# against the offline stub runtime.
+prop-heavy:
+	FLICKER_PROP_CASES=512 $(CARGO) test -q --features pjrt --test properties --test pjrt_roundtrip
 
 # Run the Session-API showcase examples end-to-end (CI: examples lane) so
 # the quickstart code in README/examples can't bitrot.
@@ -58,6 +67,7 @@ pytest:
 ci: build test fmt clippy docs pytest bench-smoke examples
 	$(CARGO) build --release --features pjrt
 	$(CARGO) test -q --features pjrt
+	$(MAKE) prop-heavy
 
 clean:
 	$(CARGO) clean

@@ -35,7 +35,7 @@ def f32(*shape):
 
 
 def entries():
-    n, m, t = model.N_GAUSS, model.N_PR, model.TILE
+    n, m, t, b = model.N_GAUSS, model.N_PR, model.TILE, model.N_BATCH
     return {
         "project": (
             model.project_entry,
@@ -53,6 +53,22 @@ def entries():
             model.render_tile_entry,
             (f32(n, 2), f32(n, 3), f32(n), f32(n, 3), f32(2), f32(m, 2), f32(m, 2)),
         ),
+        # Batched variant: B tiles per dispatch along a leading batch dim
+        # (manifest field n_batch). The Rust executor drains its tile
+        # queue through this artifact and pads ragged final batches with
+        # zero-opacity rows (exact no-ops through CAT and blending).
+        "render_tile_batched": (
+            model.render_tiles_entry,
+            (
+                f32(b, n, 2),
+                f32(b, n, 3),
+                f32(b, n),
+                f32(b, n, 3),
+                f32(b, 2),
+                f32(b, m, 2),
+                f32(b, m, 2),
+            ),
+        ),
         "_unused_tile": (lambda: None, (t,)),  # keeps TILE in the manifest
     }
 
@@ -67,6 +83,7 @@ def main() -> None:
         "n_gauss": model.N_GAUSS,
         "n_pr": model.N_PR,
         "tile": model.TILE,
+        "n_batch": model.N_BATCH,
         "artifacts": {},
     }
     for name, (fn, specs) in entries().items():

@@ -15,6 +15,7 @@ with opacity 0 never pass CAT and never blend, so zero-padded tails are
 exact no-ops.
 """
 
+import jax
 import jax.numpy as jnp
 
 from .kernels.blend import blend_tile
@@ -24,9 +25,13 @@ from .kernels.project import project
 # Artifact shapes (see aot.py). N = Gaussian batch, M = PR batch.
 # M = 16: the four dense PRs of each of the tile's four sub-tiles, so the
 # artifact's CAT gate covers the full 16x16 tile (cat::leader::dense_layout).
+# B = tiles stacked along the leading dim of the batched render artifact
+# (one PJRT dispatch renders up to B tiles; the Rust executor pads ragged
+# final batches with zero-opacity rows, which never pass CAT or blend).
 N_GAUSS = 256
 N_PR = 16
 TILE = 16
+N_BATCH = 8
 
 
 def project_entry(pos_cam, cov6_cam, cam_params):
@@ -59,3 +64,17 @@ def render_tile_entry(mu, conic, opacity, color, origin, p_top, p_bot):
     gated_opacity = opacity * passes
     rgb, trans = blend_tile(mu, conic, gated_opacity, color, origin)
     return rgb, trans, passes
+
+
+def render_tiles_entry(mu, conic, opacity, color, origin, p_top, p_bot):
+    """Batched tile render: `render_tile_entry` vmapped over a leading
+    tile-batch dim B, so one PJRT dispatch renders B tiles.
+
+    Shapes gain a leading B: mu (B,N,2), conic (B,N,3), opacity (B,N),
+    color (B,N,3), origin (B,2), p_top/p_bot (B,M,2). Returns rgb
+    (B,16,16,3), transmittance (B,16,16), skip masks (B,N). Each batch
+    slot is the same per-tile computation as `render_tile_entry` — tiles
+    never interact, so slots with zero-opacity padding are exact no-ops
+    and the Rust executor may fill a ragged final batch freely.
+    """
+    return jax.vmap(render_tile_entry)(mu, conic, opacity, color, origin, p_top, p_bot)

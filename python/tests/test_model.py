@@ -82,6 +82,30 @@ def test_zero_opacity_padding_is_noop():
     np.testing.assert_allclose(np.asarray(rgb_full), np.asarray(rgb_moved), atol=1e-5)
 
 
+def test_render_tiles_entry_matches_per_tile_calls():
+    # The batched artifact is render_tile_entry vmapped over a leading
+    # batch dim: every slot must reproduce the single-tile entry (the
+    # Rust-side differential harness additionally enforces bit-identity
+    # of the executor paths against the offline stub).
+    rng = np.random.default_rng(3)
+    slots = [make_batch(rng) for _ in range(model.N_BATCH)]
+    # Give each slot its own tile origin so broadcasting bugs can't hide.
+    for b, slot in enumerate(slots):
+        slot[4][:] = [16.0 * b, 8.0 * b]
+    batched = [jnp.array(np.stack([s[i] for s in slots])) for i in range(7)]
+    rgb_b, trans_b, passes_b = model.render_tiles_entry(*batched)
+    assert rgb_b.shape == (model.N_BATCH, 16, 16, 3)
+    assert trans_b.shape == (model.N_BATCH, 16, 16)
+    assert passes_b.shape == (model.N_BATCH, model.N_GAUSS)
+    for b, slot in enumerate(slots):
+        rgb, trans, passes = model.render_tile_entry(*map(jnp.array, slot))
+        np.testing.assert_allclose(np.asarray(rgb_b)[b], np.asarray(rgb), rtol=1e-6, atol=1e-6)
+        np.testing.assert_allclose(
+            np.asarray(trans_b)[b], np.asarray(trans), rtol=1e-6, atol=1e-7
+        )
+        np.testing.assert_array_equal(np.asarray(passes_b)[b], np.asarray(passes))
+
+
 def test_all_entries_lower_to_hlo_text():
     for name, (fn, specs) in entries().items():
         if name.startswith("_"):

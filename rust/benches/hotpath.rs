@@ -161,6 +161,43 @@ fn main() {
         black_box(score_views(&scene, &few_cams, &RenderOptions::default(), 0));
     });
 
+    // PJRT dispatch overhead: one exec per tile-chunk (exec_tile_single)
+    // vs the batched artifact draining n_batch tiles per dispatch
+    // (exec_tile_batched). Runs against the offline stub runtime —
+    // identical pixels, fewer invocations; with real XLA the batched row
+    // additionally amortizes PJRT call overhead.
+    #[cfg(feature = "pjrt")]
+    {
+        use flicker::render::image::Image;
+        use flicker::runtime::executor::{TileExecutor, TileJob};
+        use flicker::runtime::{write_stub_artifacts, Runtime};
+
+        let dir = std::env::temp_dir().join("flicker_hotpath_stub_artifacts");
+        write_stub_artifacts(&dir, 64, 16, 16, 8).unwrap();
+        match Runtime::load(&dir) {
+            Ok(rt) => {
+                let plan = FramePlan::build(&scene, &cam, &RenderOptions::default());
+                let jobs = TileJob::for_grid(&plan.grid, &plan.lists);
+                b.bench("exec_tile_single", || {
+                    let mut img = Image::new(plan.grid.width, plan.grid.height);
+                    let mut ex = TileExecutor::new(&rt);
+                    for job in &jobs {
+                        ex.render_tile(&job.rect, &plan.splats, job.order, &mut img, [0.0; 3])
+                            .unwrap();
+                    }
+                    black_box(img);
+                });
+                b.bench("exec_tile_batched", || {
+                    let mut img = Image::new(plan.grid.width, plan.grid.height);
+                    let mut ex = TileExecutor::new(&rt);
+                    ex.render_tiles(&jobs, &plan.splats, &mut img, [0.0; 3]).unwrap();
+                    black_box(img);
+                });
+            }
+            Err(e) => eprintln!("skipping exec_tile rows: pjrt runtime unavailable ({e})"),
+        }
+    }
+
     let hw = HwConfig::flicker32();
     b.bench("workload_extract", || {
         black_box(extract(&scene, &cam, &hw));

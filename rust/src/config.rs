@@ -46,6 +46,13 @@ pub struct ExperimentConfig {
     /// contribution scoring (0 = auto, 1 = sequential; parallel output is
     /// bit-identical to sequential).
     pub workers: usize,
+    /// Tiles per PJRT dispatch (0 = the batched artifact's full
+    /// `n_batch`, 1 = single-tile-artifact dispatch; intermediate values
+    /// serve the differential tests). Only the `pjrt` backend reads it.
+    /// Output is bit-identical across values under the stub-interpreted
+    /// artifacts (CI-enforced); real XLA agrees within float tolerance
+    /// (vmap lowering carries no cross-program bit-identity guarantee).
+    pub batch: usize,
     /// RNG seed for synthetic scene generation.
     pub seed: u64,
 }
@@ -65,6 +72,7 @@ impl Default for ExperimentConfig {
             strategy: None,
             prune: false,
             workers: 1,
+            batch: 0,
             seed: 0xF11C,
         }
     }
@@ -102,6 +110,7 @@ impl ExperimentConfig {
     pub fn render_options(&self) -> Result<RenderOptions> {
         let mut o = RenderOptions {
             workers: self.workers,
+            batch: self.batch,
             ..RenderOptions::default()
         };
         if let Some(ts) = self.tile_size {
@@ -164,6 +173,7 @@ impl ExperimentConfig {
             cfg.prune = true;
         }
         cfg.workers = args.usize_or("workers", cfg.workers)?;
+        cfg.batch = args.usize_or("batch", cfg.batch)?;
         cfg.seed = args.u64_or("seed", cfg.seed)?;
         Ok(cfg)
     }
@@ -205,6 +215,9 @@ impl ExperimentConfig {
         if let Some(v) = n("workers") {
             cfg.workers = v as usize;
         }
+        if let Some(v) = n("batch") {
+            cfg.batch = v as usize;
+        }
         if let Some(v) = n("seed") {
             cfg.seed = v as u64;
         }
@@ -236,6 +249,7 @@ impl ExperimentConfig {
         }
         o.insert("prune", Json::Bool(self.prune));
         o.insert("workers", jnum(self.workers as f64));
+        o.insert("batch", jnum(self.batch as f64));
         o.insert("seed", jnum(self.seed as f64));
         Json::Obj(o)
     }
@@ -289,16 +303,20 @@ mod tests {
 
     #[test]
     fn render_options_thread_strategy_and_tile_size() {
-        let a = args(&["render", "--strategy", "obb", "--tile-size", "16", "--workers", "3"]);
+        let a = args(&[
+            "render", "--strategy", "obb", "--tile-size", "16", "--workers", "3", "--batch", "4",
+        ]);
         let cfg = ExperimentConfig::from_args(&a).unwrap();
         let o = cfg.render_options().unwrap();
         assert_eq!(o.strategy, Strategy::Obb);
         assert_eq!(o.tile_size, 16);
         assert_eq!(o.workers, 3);
-        // Defaults stay the paper's geometry.
+        assert_eq!(o.batch, 4);
+        // Defaults stay the paper's geometry (batch 0 = artifact width).
         let d = ExperimentConfig::default().render_options().unwrap();
         assert_eq!(d.strategy, Strategy::Aabb);
         assert_eq!(d.tile_size, 16);
+        assert_eq!(d.batch, 0);
     }
 
     #[test]
@@ -330,6 +348,7 @@ mod tests {
             strategy: Some("obb".into()),
             tile_size: Some(16),
             workers: 3,
+            batch: 4,
             ..Default::default()
         };
         let dir = std::env::temp_dir().join("flicker_cfg");
@@ -343,5 +362,6 @@ mod tests {
         assert_eq!(back.strategy, cfg.strategy);
         assert_eq!(back.tile_size, cfg.tile_size);
         assert_eq!(back.workers, cfg.workers);
+        assert_eq!(back.batch, cfg.batch);
     }
 }

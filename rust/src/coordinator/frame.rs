@@ -94,11 +94,17 @@ impl RenderBackend for GoldenCat {
 
 /// AOT JAX/Pallas artifacts through PJRT (only with `--features pjrt`).
 /// Consumes the coordinator's [`FramePlan`] directly — no host-side
-/// re-projection or re-binning. Tiles run sequentially, and whole frames
-/// serialize through an internal gate: the executor chunks splat lists and
-/// carries transmittance on the host, and PJRT executable thread-safety is
-/// owned by the runtime, so concurrent frames (a session's stream fan-out)
-/// queue rather than enter `exec_f32` in parallel.
+/// re-projection or re-binning. The tile queue drains through the batched
+/// `render_tile_batched` artifact, up to `RenderOptions::batch` tiles per
+/// dispatch (0 = the artifact's full `n_batch`; ragged final batches are
+/// padded with zero-opacity rows), instead of serializing one `exec_f32`
+/// call per tile — images are identical for every batch setting
+/// (bit-identical under the stub-interpreted artifacts, enforced in CI).
+/// Whole frames still serialize through an internal gate: the executor
+/// chunks splat lists and carries transmittance on the host, and PJRT
+/// executable thread-safety is owned by the runtime, so concurrent frames
+/// (a session's stream fan-out) queue rather than enter `exec_f32` in
+/// parallel.
 #[cfg(feature = "pjrt")]
 pub struct Pjrt<'rt> {
     rt: &'rt crate::runtime::Runtime,
@@ -123,23 +129,16 @@ impl RenderBackend for Pjrt<'_> {
     }
 
     fn render_plan(&self, plan: &FramePlan) -> Result<RenderOutput> {
-        use crate::runtime::executor::TileExecutor;
+        use crate::runtime::executor::{TileExecutor, TileJob};
 
         let _serial = self
             .gate
             .lock()
             .unwrap_or_else(std::sync::PoisonError::into_inner);
         let mut img = Image::new(plan.grid.width, plan.grid.height);
-        let mut ex = TileExecutor::new(self.rt);
-        for (t, list) in plan.lists.iter().enumerate() {
-            ex.render_tile(
-                &plan.grid.rect(t),
-                &plan.splats,
-                list,
-                &mut img,
-                plan.opts.background,
-            )?;
-        }
+        let mut ex = TileExecutor::new(self.rt).with_batch(plan.opts.batch);
+        let jobs = TileJob::for_grid(&plan.grid, &plan.lists);
+        ex.render_tiles(&jobs, &plan.splats, &mut img, plan.opts.background)?;
         Ok(RenderOutput {
             image: img,
             stats: plan.frame_stats(),

@@ -51,10 +51,15 @@ COMMON OPTIONS
                  bit-identical for any worker count)
   --strategy     tile intersection: aabb|obb           (default aabb)
   --tile-size    tile edge in pixels                   (default 16)
+  --batch        tiles per PJRT dispatch (0 = the batched artifact's
+                 full n_batch, 1 = single-tile-artifact dispatches;
+                 pjrt backend only — output is bit-identical across
+                 values on the offline stub, tolerance-equal on real XLA)
   --hardware     flicker32|flicker32-sparse|simplified32|simplified64|gscore64
 
 The pjrt backend requires a build with `--features pjrt` and AOT artifacts
-(`make artifacts`).
+(`make artifacts`, or any directory written by
+runtime::write_stub_artifacts when running against the offline xla stub).
 ";
 
 fn main() {

@@ -49,6 +49,15 @@ pub struct RenderOptions {
     /// Worker threads for the tile fan-out (0 = auto, 1 = sequential).
     /// Tiles are independent, so any value yields bit-identical images.
     pub workers: usize,
+    /// Tiles per PJRT dispatch: 0 = the batched artifact's full
+    /// `n_batch` width (best fill rate), 1 = the monomorphic single-tile
+    /// artifact (one `exec_f32` per tile-chunk, no batch padding).
+    /// Intermediate values still ship `n_batch`-wide tensors with fewer
+    /// real slots — they exist for the differential test matrix, not as
+    /// a performance setting. Only the `Pjrt` backend reads it; rendered
+    /// pixels are identical for every setting (bit-identical under the
+    /// stub-interpreted artifacts, enforced in CI).
+    pub batch: usize,
 }
 
 impl Default for RenderOptions {
@@ -59,6 +68,7 @@ impl Default for RenderOptions {
             t_min: 1e-4,
             background: [0.0, 0.0, 0.0],
             workers: 1,
+            batch: 0,
         }
     }
 }

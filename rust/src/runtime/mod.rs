@@ -1,12 +1,15 @@
 //! Artifact manifest + (feature-gated) PJRT runtime.
 //!
-//! The manifest layer (`Manifest`, [`default_artifact_dir`]) is pure Rust
-//! and always compiled: tests and tooling can inspect
-//! `artifacts/manifest.json` (written by python/compile/aot.py) without any
-//! XLA linkage. The PJRT execution path ([`Runtime`], [`executor`]) loads
-//! the AOT-compiled JAX/Pallas artifacts (`artifacts/*.hlo.txt`) and only
-//! exists under the `pjrt` cargo feature; the default build is offline and
-//! dependency-free.
+//! The manifest layer (`Manifest`, [`default_artifact_dir`],
+//! [`write_stub_artifacts`]) is pure Rust and always compiled: tests and
+//! tooling can inspect `artifacts/manifest.json` (written by
+//! python/compile/aot.py) without any XLA linkage. The PJRT execution path
+//! ([`Runtime`], [`executor`]) loads the AOT-compiled JAX/Pallas artifacts
+//! (`artifacts/*.hlo.txt`) and only exists under the `pjrt` cargo feature;
+//! the default build is offline and dependency-free. With the default
+//! in-tree `xla` stub, a runtime loaded from a [`write_stub_artifacts`]
+//! directory executes through the stub's built-in reference kernels — the
+//! offline backbone of the batched-execution differential test harness.
 
 #[cfg(feature = "pjrt")]
 pub mod executor;
@@ -31,6 +34,11 @@ pub struct Manifest {
     pub n_pr: usize,
     /// Tile edge the artifacts are compiled for (pixels).
     pub tile: usize,
+    /// Tile-batch width of the `render_tile_batched` artifact: one
+    /// dispatch renders up to `n_batch` tiles stacked along its leading
+    /// dim. Manifests predating the batched artifact omit the field and
+    /// parse as 1 (single-tile dispatch only).
+    pub n_batch: usize,
     /// name -> artifact filename.
     pub files: HashMap<String, String>,
 }
@@ -60,9 +68,80 @@ impl Manifest {
             n_gauss: need("n_gauss")? as usize,
             n_pr: need("n_pr")? as usize,
             tile: need("tile")? as usize,
+            n_batch: j.at(&["n_batch"]).and_then(Json::as_u64).unwrap_or(1) as usize,
             files,
         })
     }
+}
+
+/// Names of the artifacts the AOT compiler emits (and the offline stub
+/// can interpret): keep in sync with `python/compile/aot.py::entries`.
+pub const ARTIFACT_NAMES: [&str; 5] = [
+    "project",
+    "pr_weight",
+    "cat_masks",
+    "render_tile",
+    "render_tile_batched",
+];
+
+/// Synthesize a stub-interpretable artifact set: a `manifest.json` with
+/// the given monomorphization plus placeholder `*.hlo.txt` files for
+/// every artifact in [`ARTIFACT_NAMES`].
+///
+/// The offline `rust/xla-stub` fake does not parse HLO — it recognizes
+/// artifacts by file stem and interprets them with built-in pure-Rust
+/// reference kernels — so a runtime loaded from this directory executes
+/// end to end with no jax, no network, and no native XLA. This is what
+/// lets the PJRT differential/property harness (batched vs single-tile
+/// execution, executor vs golden rasterizer) run in default CI. Against
+/// the real `xla` crate the placeholders fail HLO parsing, so tests built
+/// on this helper skip cleanly in the `xla-real` lane (which exercises
+/// real artifacts via `make artifacts` instead).
+///
+/// Small `n_gauss` values keep chunk-boundary tests cheap; `tile` must be
+/// 16 (the blend kernels are written for 16×16 tiles) and `n_pr` must be
+/// 16 (the executor's dense PR layout covers exactly the tile's four
+/// sub-tiles) — other values are rejected rather than silently
+/// miscomposited or CAT-gated against regions outside the tile.
+pub fn write_stub_artifacts(
+    dir: &Path,
+    n_gauss: usize,
+    n_pr: usize,
+    tile: usize,
+    n_batch: usize,
+) -> Result<()> {
+    if tile != 16 {
+        return Err(err!("stub artifacts are monomorphic at tile 16 (got {tile})"));
+    }
+    if n_pr != 16 {
+        return Err(err!(
+            "stub artifacts need n_pr 16 (dense PR coverage of the 16×16 tile; got {n_pr})"
+        ));
+    }
+    if n_gauss == 0 || n_batch == 0 {
+        return Err(err!(
+            "stub artifact shapes must be positive (n_gauss {n_gauss}, n_batch {n_batch})"
+        ));
+    }
+    std::fs::create_dir_all(dir)?;
+    let mut arts = String::new();
+    for (i, name) in ARTIFACT_NAMES.iter().enumerate() {
+        let file = format!("{name}.hlo.txt");
+        std::fs::write(
+            dir.join(&file),
+            "placeholder artifact: interpreted by rust/xla-stub's built-in kernels\n",
+        )?;
+        if i > 0 {
+            arts.push_str(",\n");
+        }
+        arts.push_str(&format!("    \"{name}\": {{\"file\": \"{file}\"}}"));
+    }
+    let manifest = format!(
+        "{{\n  \"n_gauss\": {n_gauss},\n  \"n_pr\": {n_pr},\n  \"tile\": {tile},\n  \
+         \"n_batch\": {n_batch},\n  \"artifacts\": {{\n{arts}\n  }}\n}}\n"
+    );
+    std::fs::write(dir.join("manifest.json"), manifest)?;
+    Ok(())
 }
 
 /// Locate the artifacts directory: $FLICKER_ARTIFACTS, ./artifacts, or the
@@ -102,5 +181,45 @@ mod tests {
         std::fs::create_dir_all(&dir).unwrap();
         let e = Manifest::load(&dir).unwrap_err();
         assert!(e.to_string().contains("make artifacts"), "{e}");
+    }
+
+    #[test]
+    fn stub_artifacts_roundtrip_through_the_manifest() {
+        let dir = std::env::temp_dir().join("flicker_stubgen_test");
+        write_stub_artifacts(&dir, 32, 16, 16, 8).unwrap();
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.n_gauss, 32);
+        assert_eq!(m.n_pr, 16);
+        assert_eq!(m.tile, 16);
+        assert_eq!(m.n_batch, 8);
+        for name in ARTIFACT_NAMES {
+            let file = m.files.get(name).expect(name);
+            assert!(dir.join(file).is_file(), "missing placeholder {file}");
+        }
+    }
+
+    #[test]
+    fn stub_artifacts_reject_unsupported_geometry() {
+        let dir = std::env::temp_dir().join("flicker_stubgen_reject");
+        // The stub kernels are monomorphic at 16×16 tiles with dense
+        // 16-PR coverage; anything else would miscomposite or CAT-gate
+        // outside the tile, so the writer refuses up front.
+        assert!(write_stub_artifacts(&dir, 32, 16, 8, 4).is_err());
+        assert!(write_stub_artifacts(&dir, 32, 32, 16, 4).is_err());
+        assert!(write_stub_artifacts(&dir, 0, 16, 16, 4).is_err());
+        assert!(write_stub_artifacts(&dir, 32, 16, 16, 0).is_err());
+    }
+
+    #[test]
+    fn manifests_without_n_batch_default_to_single_tile() {
+        let dir = std::env::temp_dir().join("flicker_manifest_no_batch");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(
+            dir.join("manifest.json"),
+            r#"{"n_gauss": 256, "n_pr": 16, "tile": 16, "artifacts": {}}"#,
+        )
+        .unwrap();
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.n_batch, 1);
     }
 }

@@ -3,9 +3,14 @@
 //!
 //! Interchange is HLO *text* (xla_extension 0.5.1 rejects jax>=0.5's 64-bit
 //! instruction-id protos; the text parser reassigns ids). Python never runs
-//! at frame time. The default `xla` dependency is the in-tree API stub
-//! (`rust/xla-stub`) whose client constructor fails cleanly — callers skip
-//! the PJRT path when [`Runtime::load`] errors.
+//! at frame time. The default `xla` dependency is the in-tree functional
+//! fake (`rust/xla-stub`): it does not parse HLO but recognizes each
+//! artifact by file stem and interprets it with a built-in pure-Rust
+//! reference kernel, so a runtime over real or synthesized
+//! ([`crate::runtime::write_stub_artifacts`]) artifacts executes offline.
+//! Callers still skip the PJRT path when [`Runtime::load`] errors (e.g. a
+//! real-XLA build pointed at stub placeholder files, or missing
+//! artifacts).
 
 use super::Manifest;
 use crate::err;

@@ -2,13 +2,25 @@
 //! must agree with the Rust golden implementations of the same math
 //! (cat::pr for Alg. 1, the rasterizer for tile blending, render::project
 //! for EWA projection). The whole file only compiles with `--features
-//! pjrt`, and every test skips gracefully when `make artifacts` has not
-//! run or when the `xla` dependency is the offline stub.
+//! pjrt`.
+//!
+//! Two runtime sources feed the tests:
+//! * [`runtime`] — real AOT artifacts from `make artifacts`
+//!   (`default_artifact_dir`); tests skip when they were never built.
+//!   Against the offline stub these run too: the stub interprets the
+//!   artifacts with built-in reference kernels.
+//! * [`stub_runtime`] — a synthesized `write_stub_artifacts` set, which
+//!   needs no jax at all, so the batched-equivalence tests below run in
+//!   the **default** CI lane. Real-XLA builds cannot parse the
+//!   placeholder files and skip (the `xla-real` lane covers them through
+//!   `runtime()` instead).
 #![cfg(feature = "pjrt")]
 
 use flicker::cat::pr::{pr_weights, shared_threshold};
 use flicker::numeric::linalg::{v2, Sym2};
-use flicker::runtime::{default_artifact_dir, Runtime};
+use flicker::render::tile::Rect;
+use flicker::runtime::executor::TileExecutor;
+use flicker::runtime::{default_artifact_dir, write_stub_artifacts, Runtime};
 use flicker::util::rng::Pcg32;
 
 fn runtime() -> Option<Runtime> {
@@ -21,6 +33,21 @@ fn runtime() -> Option<Runtime> {
         Ok(rt) => Some(rt),
         Err(e) => {
             eprintln!("skipping: pjrt runtime unavailable ({e})");
+            None
+        }
+    }
+}
+
+/// Load a runtime over a synthesized stub artifact set (small N for cheap
+/// chunk-boundary coverage). `None` when the `xla` dependency is the real
+/// crate (placeholders don't parse as HLO) — callers skip.
+fn stub_runtime(tag: &str, n_gauss: usize, n_batch: usize) -> Option<Runtime> {
+    let dir = std::env::temp_dir().join(format!("flicker_roundtrip_stub_{tag}"));
+    write_stub_artifacts(&dir, n_gauss, 16, 16, n_batch).unwrap();
+    match Runtime::load(&dir) {
+        Ok(rt) => Some(rt),
+        Err(e) => {
+            eprintln!("skipping: stub runtime unavailable ({e})");
             None
         }
     }
@@ -328,4 +355,227 @@ fn render_tile_artifact_blends_like_golden_math() {
     assert!((trans[8 * 16 + 8] - (1.0 - alpha)).abs() < 1e-3);
     // Green/blue stay zero.
     assert!(rgb[center + 1].abs() < 1e-6);
+}
+
+/// Fill random single-tile inputs for one batch slot. Means hover around
+/// the slot's tile so CAT passes and fails both occur; the PR corners
+/// come from the executor's own [`TileExecutor::dense_prs`] layout, so
+/// the roundtrip exercises exactly the geometry the executor ships.
+#[allow(clippy::type_complexity)]
+fn random_tile_inputs(
+    rt: &Runtime,
+    rng: &mut Pcg32,
+    origin: [f32; 2],
+) -> (Vec<f32>, Vec<f32>, Vec<f32>, Vec<f32>, Vec<f32>, Vec<f32>) {
+    let n = rt.manifest.n_gauss;
+    let tile = rt.manifest.tile as f32;
+    let mut mu = vec![0.0f32; n * 2];
+    let mut conic = vec![0.0f32; n * 3];
+    let mut opacity = vec![0.0f32; n];
+    let mut color = vec![0.0f32; n * 3];
+    for i in 0..n {
+        mu[i * 2] = origin[0] + rng.range_f32(-8.0, 24.0);
+        mu[i * 2 + 1] = origin[1] + rng.range_f32(-8.0, 24.0);
+        let c = random_conic(rng);
+        conic[i * 3] = c.a;
+        conic[i * 3 + 1] = c.b;
+        conic[i * 3 + 2] = c.c;
+        opacity[i] = rng.range_f32(0.0, 1.0);
+        color[i * 3] = rng.range_f32(0.0, 1.0);
+        color[i * 3 + 1] = rng.range_f32(0.0, 1.0);
+        color[i * 3 + 2] = rng.range_f32(0.0, 1.0);
+    }
+    let rect = Rect {
+        x0: origin[0],
+        y0: origin[1],
+        x1: origin[0] + tile,
+        y1: origin[1] + tile,
+    };
+    let (p_top, p_bot) = TileExecutor::new(rt).dense_prs(&rect);
+    (mu, conic, opacity, color, p_top, p_bot)
+}
+
+/// The batched artifact must reproduce B independent single-tile
+/// dispatches (the executor's batching contract). `bitwise` is asserted
+/// only against the stub runtime, whose batched kernel is the single
+/// kernel per slot by construction; real XLA gives no cross-program
+/// bit-identity guarantee (vmap may fuse differently), so the xla-real
+/// lane checks within a tight float tolerance instead.
+fn check_batched_matches_single(rt: &Runtime, seed: u64, bitwise: bool) {
+    let n = rt.manifest.n_gauss;
+    let m = rt.manifest.n_pr;
+    let b = rt.manifest.n_batch;
+    assert!(b > 1, "manifest has no tile batching (n_batch = {b})");
+    let mut rng = Pcg32::new(seed);
+
+    let mut slots = Vec::with_capacity(b);
+    for s in 0..b {
+        let origin = [16.0 * s as f32, 8.0 * s as f32];
+        slots.push((origin, random_tile_inputs(rt, &mut rng, origin)));
+    }
+
+    // Batched: stack every slot along the leading dim.
+    let mut mu = Vec::new();
+    let mut conic = Vec::new();
+    let mut opacity = Vec::new();
+    let mut color = Vec::new();
+    let mut origin = Vec::new();
+    let mut p_top = Vec::new();
+    let mut p_bot = Vec::new();
+    for (o, (smu, sconic, sopacity, scolor, spt, spb)) in &slots {
+        mu.extend_from_slice(smu);
+        conic.extend_from_slice(sconic);
+        opacity.extend_from_slice(sopacity);
+        color.extend_from_slice(scolor);
+        origin.extend_from_slice(o);
+        p_top.extend_from_slice(spt);
+        p_bot.extend_from_slice(spb);
+    }
+    let out = rt
+        .exec_f32(
+            "render_tile_batched",
+            &[
+                (&mu, &[b as i64, n as i64, 2]),
+                (&conic, &[b as i64, n as i64, 3]),
+                (&opacity, &[b as i64, n as i64]),
+                (&color, &[b as i64, n as i64, 3]),
+                (&origin, &[b as i64, 2]),
+                (&p_top, &[b as i64, m as i64, 2]),
+                (&p_bot, &[b as i64, m as i64, 2]),
+            ],
+        )
+        .unwrap();
+    assert_eq!(out[0].len(), b * 16 * 16 * 3, "batched rgb shape");
+    assert_eq!(out[1].len(), b * 16 * 16, "batched trans shape");
+    assert_eq!(out[2].len(), b * n, "batched passes shape");
+
+    for (s, (o, (smu, sconic, sopacity, scolor, spt, spb))) in slots.iter().enumerate() {
+        let single = rt
+            .exec_f32(
+                "render_tile",
+                &[
+                    (smu, &[n as i64, 2]),
+                    (sconic, &[n as i64, 3]),
+                    (sopacity, &[n as i64]),
+                    (scolor, &[n as i64, 3]),
+                    (o, &[2]),
+                    (spt, &[m as i64, 2]),
+                    (spb, &[m as i64, 2]),
+                ],
+            )
+            .unwrap();
+        let px = 16 * 16;
+        let pairs = [
+            ("rgb", &single[0], &out[0][s * px * 3..(s + 1) * px * 3]),
+            ("transmittance", &single[1], &out[1][s * px..(s + 1) * px]),
+            ("CAT passes", &single[2], &out[2][s * n..(s + 1) * n]),
+        ];
+        for (what, want, got) in pairs {
+            assert_eq!(want.len(), got.len(), "slot {s}: {what} shape");
+            for (i, (w, g)) in want.iter().zip(got.iter()).enumerate() {
+                if bitwise {
+                    assert_eq!(
+                        w.to_bits(),
+                        g.to_bits(),
+                        "slot {s}: {what}[{i}] differs from single-tile dispatch"
+                    );
+                } else {
+                    let tol = 1e-5 * (1.0 + w.abs());
+                    assert!(
+                        (w - g).abs() <= tol,
+                        "slot {s}: {what}[{i}] {g} vs single-tile {w}"
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn batched_artifact_matches_single_tile_artifact() {
+    // Real artifacts (xla-real lane, or a local `make artifacts` build).
+    let Some(rt) = runtime() else { return };
+    if !rt.has("render_tile_batched") {
+        eprintln!("skipping: artifacts predate the batched render (re-run `make artifacts`)");
+        return;
+    }
+    check_batched_matches_single(&rt, 0xBA7C, false);
+}
+
+#[test]
+fn batched_stub_artifact_matches_single_tile_stub() {
+    // Synthesized stub artifacts — no jax needed, runs in default CI.
+    let Some(rt) = stub_runtime("batched_eq", 24, 4) else { return };
+    check_batched_matches_single(&rt, 0xBA7D, true);
+}
+
+#[test]
+fn stub_runtime_loads_and_reports_batch_width() {
+    let Some(rt) = stub_runtime("manifest", 24, 4) else { return };
+    assert_eq!(rt.platform(), "stub");
+    assert_eq!(rt.manifest.n_gauss, 24);
+    assert_eq!(rt.manifest.n_batch, 4);
+    for name in flicker::runtime::ARTIFACT_NAMES {
+        assert!(rt.has(name), "artifact {name} not compiled");
+    }
+}
+
+#[test]
+fn stub_pr_weight_matches_rust_alg1_bitwise() {
+    // The stub's built-in kernel mirrors cat::pr::pr_weights term for
+    // term, so the roundtrip is exact — the offline anchor for the
+    // tolerance-based real-XLA comparison above.
+    let Some(rt) = stub_runtime("prw", 24, 4) else { return };
+    let n = rt.manifest.n_gauss;
+    let m = rt.manifest.n_pr;
+    let mut rng = Pcg32::new(0xA77);
+    let mut mu = vec![0.0f32; n * 2];
+    let mut conic = vec![0.0f32; n * 3];
+    let mut conics = Vec::with_capacity(n);
+    for i in 0..n {
+        mu[i * 2] = rng.range_f32(0.0, 64.0);
+        mu[i * 2 + 1] = rng.range_f32(0.0, 64.0);
+        let c = random_conic(&mut rng);
+        conic[i * 3] = c.a;
+        conic[i * 3 + 1] = c.b;
+        conic[i * 3 + 2] = c.c;
+        conics.push(c);
+    }
+    let mut p_top = vec![0.0f32; m * 2];
+    let mut p_bot = vec![0.0f32; m * 2];
+    for k in 0..m {
+        p_top[k * 2] = rng.range_f32(0.0, 60.0);
+        p_top[k * 2 + 1] = rng.range_f32(0.0, 60.0);
+        p_bot[k * 2] = p_top[k * 2] + 3.0;
+        p_bot[k * 2 + 1] = p_top[k * 2 + 1] + 3.0;
+    }
+    let out = rt
+        .exec_f32(
+            "pr_weight",
+            &[
+                (&mu, &[n as i64, 2]),
+                (&conic, &[n as i64, 3]),
+                (&p_top, &[m as i64, 2]),
+                (&p_bot, &[m as i64, 2]),
+            ],
+        )
+        .unwrap();
+    let e = &out[0];
+    for k in 0..m {
+        for i in 0..n {
+            let w = pr_weights(
+                v2(mu[i * 2], mu[i * 2 + 1]),
+                conics[i],
+                v2(p_top[k * 2], p_top[k * 2 + 1]),
+                v2(p_bot[k * 2], p_bot[k * 2 + 1]),
+            );
+            for c in 0..4 {
+                assert_eq!(
+                    e[(k * n + i) * 4 + c].to_bits(),
+                    w.e[c].to_bits(),
+                    "PR {k} gaussian {i} corner {c}"
+                );
+            }
+        }
+    }
 }

@@ -320,3 +320,182 @@ fn prop_pipe_conserves_work_and_depth_monotone() {
         },
     );
 }
+
+/// Differential properties of the batched PJRT tile executor, run against
+/// the offline stub runtime (`write_stub_artifacts` + the functional
+/// `rust/xla-stub` fake) so they execute in the default CI lane. Against
+/// a real-XLA build the placeholder artifacts fail to parse and the
+/// properties skip; the `xla-real` lane covers real artifacts through
+/// rust/tests/pjrt_roundtrip.rs instead.
+#[cfg(feature = "pjrt")]
+mod pjrt_batched {
+    use flicker::render::image::Image;
+    use flicker::render::project::Splat;
+    use flicker::render::tile::TileGrid;
+    use flicker::runtime::executor::{TileExecutor, TileJob};
+    use flicker::runtime::{write_stub_artifacts, Runtime};
+    use flicker::util::prop::{check, ensure, PropConfig};
+    use flicker::util::rng::Pcg32;
+
+    /// Stub monomorphization for the properties: tiny N_GAUSS so random
+    /// lists straddle the chunk boundary constantly.
+    const N_GAUSS: usize = 16;
+    const N_BATCH: usize = 8;
+
+    fn stub_runtime(tag: &str) -> Option<Runtime> {
+        let dir = std::env::temp_dir().join(format!("flicker_prop_stub_{tag}"));
+        write_stub_artifacts(&dir, N_GAUSS, 16, 16, N_BATCH).unwrap();
+        match Runtime::load(&dir) {
+            Ok(rt) => Some(rt),
+            Err(e) => {
+                eprintln!("skipping: stub runtime unavailable ({e})");
+                None
+            }
+        }
+    }
+
+    /// One generated frame: random splats, a random tile grid whose tile
+    /// count rarely divides the batch size, and random per-tile lists
+    /// (empty through several-chunks long).
+    #[derive(Debug)]
+    struct Frame {
+        splats: Vec<Splat>,
+        lists: Vec<Vec<u32>>,
+        width: u32,
+        height: u32,
+        batch: usize,
+        background: [f32; 3],
+    }
+
+    fn random_splat(rng: &mut Pcg32, width: u32, height: u32, i: u32) -> Splat {
+        use flicker::numeric::linalg::{v2, Sym2};
+        let l11 = rng.range_f32(0.05, 0.9);
+        let l21 = rng.range_f32(-0.4, 0.4);
+        let l22 = rng.range_f32(0.05, 0.9);
+        let conic = Sym2 {
+            a: l11 * l11,
+            b: l11 * l21,
+            c: l21 * l21 + l22 * l22,
+        };
+        Splat {
+            id: i,
+            mean: v2(
+                rng.range_f32(-8.0, width as f32 + 8.0),
+                rng.range_f32(-8.0, height as f32 + 8.0),
+            ),
+            cov: Sym2 { a: 1.0, b: 0.0, c: 1.0 },
+            conic,
+            depth: rng.range_f32(0.1, 50.0),
+            opacity: rng.range_f32(0.0, 1.0),
+            color: [rng.f32(), rng.f32(), rng.f32()],
+            radius: 8.0,
+            axis_ratio: 1.0,
+        }
+    }
+
+    fn generate_frame(rng: &mut Pcg32, size: f32) -> Frame {
+        let tiles_x = rng.range_u32(1, 4); // 1..=4 tile columns
+        let tiles_y = rng.range_u32(1, 4); // tile counts 1..16: most don't divide B
+        let (width, height) = (tiles_x * 16, tiles_y * 16);
+        let n_splats = 1 + (size * 40.0) as usize;
+        let splats: Vec<Splat> = (0..n_splats)
+            .map(|i| random_splat(rng, width, height, i as u32))
+            .collect();
+        // Random list lengths 0..=3×N_GAUSS: empty tiles, exact-chunk
+        // tiles, and lists straddling the chunk boundary all occur.
+        let lists: Vec<Vec<u32>> = (0..(tiles_x * tiles_y))
+            .map(|_| {
+                let len = rng.below(3 * N_GAUSS as u32 + 1) as usize;
+                (0..len).map(|_| rng.below(n_splats as u32)).collect()
+            })
+            .collect();
+        let batch = *rng.pick(&[1usize, 2, 3, N_BATCH]);
+        Frame {
+            splats,
+            lists,
+            width,
+            height,
+            batch,
+            background: [rng.f32(), rng.f32(), rng.f32()],
+        }
+    }
+
+    #[test]
+    fn prop_render_tiles_bit_identical_to_single_tile_loop() {
+        let Some(rt) = stub_runtime("bitident") else { return };
+        check(
+            "render_tiles == looped render_tile (bitwise)",
+            PropConfig::default(),
+            generate_frame,
+            |f| {
+                let grid = TileGrid::new(f.width, f.height, 16);
+                // Reference: one dispatch per tile-chunk.
+                let mut img_one = Image::new(f.width, f.height);
+                let mut ex_one = TileExecutor::new(&rt);
+                for (t, list) in f.lists.iter().enumerate() {
+                    ex_one
+                        .render_tile(&grid.rect(t), &f.splats, list, &mut img_one, f.background)
+                        .map_err(|e| format!("single-tile render failed: {e}"))?;
+                }
+                // Batched: up to f.batch tiles per dispatch.
+                let jobs = TileJob::for_grid(&grid, &f.lists);
+                let mut img_b = Image::new(f.width, f.height);
+                let mut ex_b = TileExecutor::new(&rt).with_batch(f.batch);
+                ex_b.render_tiles(&jobs, &f.splats, &mut img_b, f.background)
+                    .map_err(|e| format!("batched render failed: {e}"))?;
+
+                let a: Vec<u32> = img_one.data.iter().map(|x| x.to_bits()).collect();
+                let b: Vec<u32> = img_b.data.iter().map(|x| x.to_bits()).collect();
+                ensure(
+                    a == b,
+                    format!("image differs at batch {} over {} tiles", f.batch, f.lists.len()),
+                )?;
+                ensure(
+                    ex_b.stats.tiles == ex_one.stats.tiles
+                        && ex_b.stats.chunks == ex_one.stats.chunks
+                        && ex_b.stats.splats_submitted == ex_one.stats.splats_submitted
+                        && ex_b.stats.splats_passed_cat == ex_one.stats.splats_passed_cat,
+                    format!(
+                        "real-work stats diverged: batched {:?} vs single {:?}",
+                        ex_b.stats, ex_one.stats
+                    ),
+                )?;
+                ensure(
+                    ex_b.stats.splats_submitted <= ex_b.stats.rows_submitted,
+                    "padding accounting went negative",
+                )?;
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn prop_batch_width_never_changes_pixels() {
+        // Sweep every batch width over one frame per case: all widths must
+        // agree bitwise (transitively pins B∈{1,2,3,8} to each other).
+        let Some(rt) = stub_runtime("widths") else { return };
+        check(
+            "all batch widths agree bitwise",
+            PropConfig::default(),
+            |rng, size| generate_frame(rng, size),
+            |f| {
+                let grid = TileGrid::new(f.width, f.height, 16);
+                let jobs = TileJob::for_grid(&grid, &f.lists);
+                let mut reference: Option<Vec<u32>> = None;
+                for b in [1usize, 2, 3, N_BATCH] {
+                    let mut img = Image::new(f.width, f.height);
+                    let mut ex = TileExecutor::new(&rt).with_batch(b);
+                    ensure(ex.effective_batch() == b.min(N_BATCH), "batch clamp")?;
+                    ex.render_tiles(&jobs, &f.splats, &mut img, f.background)
+                        .map_err(|e| format!("batch {b} failed: {e}"))?;
+                    let bits: Vec<u32> = img.data.iter().map(|x| x.to_bits()).collect();
+                    match &reference {
+                        None => reference = Some(bits),
+                        Some(r) => ensure(*r == bits, format!("batch {b} changed pixels"))?,
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+}

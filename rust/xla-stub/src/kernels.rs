@@ -1,0 +1,330 @@
+//! Pure-Rust reference kernels for the flicker artifact set.
+//!
+//! The stub's "compiler" does not parse HLO — it recognizes each artifact
+//! by its file stem and `execute` dispatches here. Every function mirrors
+//! the corresponding JAX/Pallas kernel in `python/compile` **operation for
+//! operation** (same formulas, same association order), so the stub is a
+//! faithful functional fake of the AOT artifacts: the Rust differential
+//! and property harness (batched vs single-tile execution, PJRT vs golden
+//! rasterizer) runs offline in default CI, and the opt-in `xla-real` lane
+//! re-validates the same tests against real XLA.
+//!
+//! Shapes are taken from the input literals, so the stub serves any
+//! monomorphization (tests synthesize small-N manifests for speed). The
+//! tile edge is fixed at 16 like the Pallas kernels.
+
+use crate::{Error, Literal, Result};
+
+/// Tile edge the blend kernel is written for (python blend.py TILE).
+const TILE: usize = 16;
+/// Blending alpha cutoff (python blend.py ALPHA_MIN).
+const ALPHA_MIN: f32 = 1.0 / 255.0;
+/// Early-termination transmittance threshold (blend_tile default t_min).
+const T_MIN: f32 = 1e-4;
+
+/// Dispatch artifact `name` over input literals. Returns the output
+/// literals in the artifact's tuple order.
+pub(crate) fn run(name: &str, inputs: &[&Literal]) -> Result<Vec<Literal>> {
+    match name {
+        "project" => project(inputs),
+        "pr_weight" => pr_weight(inputs),
+        "cat_masks" => cat_masks_entry(inputs),
+        "render_tile" => render_tile(inputs),
+        "render_tile_batched" => render_tile_batched(inputs),
+        other => Err(Error::Message(format!(
+            "xla stub: no built-in kernel for artifact '{other}'"
+        ))),
+    }
+}
+
+fn arg<'a>(inputs: &[&'a Literal], i: usize, name: &str) -> Result<(&'a [f32], &'a [i64])> {
+    inputs
+        .get(i)
+        .map(|l| l.f32_view())
+        .transpose()?
+        .ok_or_else(|| Error::Message(format!("{name}: missing input {i}")))
+}
+
+fn dim(dims: &[i64], i: usize) -> usize {
+    dims.get(i).copied().unwrap_or(0) as usize
+}
+
+fn expect_rank(dims: &[i64], rank: usize, what: &str) -> Result<()> {
+    if dims.len() == rank {
+        Ok(())
+    } else {
+        Err(Error::Message(format!(
+            "{what}: expected rank {rank}, got shape {dims:?}"
+        )))
+    }
+}
+
+/// `project.hlo.txt`: EWA projection datapath (python kernels/project.py).
+/// (N,3) pos, (N,6) packed cov, (4,) [fx,fy,cx,cy] ->
+/// mean (N,2), conic (N,3), depth (N,), radius (N,).
+fn project(inputs: &[&Literal]) -> Result<Vec<Literal>> {
+    let (pos, pd) = arg(inputs, 0, "project")?;
+    let (cov, _) = arg(inputs, 1, "project")?;
+    let (cam, _) = arg(inputs, 2, "project")?;
+    expect_rank(pd, 2, "project pos")?;
+    let n = dim(pd, 0);
+    let (fx, fy, cx, cy) = (cam[0], cam[1], cam[2], cam[3]);
+    const DILATION: f32 = 0.3;
+
+    let mut mean = vec![0.0f32; n * 2];
+    let mut conic = vec![0.0f32; n * 3];
+    let mut depth = vec![0.0f32; n];
+    let mut radius = vec![0.0f32; n];
+    for i in 0..n {
+        let (x, y, z) = (pos[i * 3], pos[i * 3 + 1], pos[i * 3 + 2]);
+        let inv_z = 1.0 / z;
+        mean[i * 2] = fx * x * inv_z + cx;
+        mean[i * 2 + 1] = fy * y * inv_z + cy;
+        depth[i] = z;
+
+        let j00 = fx * inv_z;
+        let j02 = -fx * x * inv_z * inv_z;
+        let j11 = fy * inv_z;
+        let j12 = -fy * y * inv_z * inv_z;
+        let (cxx, cxy, cxz) = (cov[i * 6], cov[i * 6 + 1], cov[i * 6 + 2]);
+        let (cyy, cyz, czz) = (cov[i * 6 + 3], cov[i * 6 + 4], cov[i * 6 + 5]);
+
+        let a = j00 * j00 * cxx + 2.0 * j00 * j02 * cxz + j02 * j02 * czz + DILATION;
+        let b = j00 * j11 * cxy + j00 * j12 * cxz + j02 * j11 * cyz + j02 * j12 * czz;
+        let c = j11 * j11 * cyy + 2.0 * j11 * j12 * cyz + j12 * j12 * czz + DILATION;
+        let det = a * c - b * b;
+        let inv_det = 1.0 / det;
+        conic[i * 3] = c * inv_det;
+        conic[i * 3 + 1] = -b * inv_det;
+        conic[i * 3 + 2] = a * inv_det;
+
+        let mid = 0.5 * (a + c);
+        let lam1 = mid + (mid * mid - det).max(0.0).sqrt();
+        radius[i] = 3.0 * lam1.sqrt();
+    }
+    Ok(vec![
+        Literal::from_parts(mean, vec![n as i64, 2]),
+        Literal::from_parts(conic, vec![n as i64, 3]),
+        Literal::from_parts(depth, vec![n as i64]),
+        Literal::from_parts(radius, vec![n as i64]),
+    ])
+}
+
+/// Alg. 1 corner weights for one (PR, Gaussian) pair — the shared core of
+/// `pr_weight` and the CAT decision. Mirrors kernels/pr_weight.py (and
+/// `cat::pr::pr_weights`) term for term.
+fn corner_weights(mu: &[f32], conic: &[f32], i: usize, pt: [f32; 2], pb: [f32; 2]) -> [f32; 4] {
+    let (mx, my) = (mu[i * 2], mu[i * 2 + 1]);
+    let (ca, cb, cc) = (conic[i * 3], conic[i * 3 + 1], conic[i * 3 + 2]);
+    let dtx = pt[0] - mx;
+    let dty = pt[1] - my;
+    let dbx = pb[0] - mx;
+    let dby = pb[1] - my;
+    let s_tx = 0.5 * dtx * dtx * ca;
+    let s_ty = 0.5 * dty * dty * cc;
+    let s_bx = 0.5 * dbx * dbx * ca;
+    let s_by = 0.5 * dby * dby * cc;
+    let t0 = dtx * dty * cb;
+    let t1 = dbx * dty * cb;
+    let t2 = dtx * dby * cb;
+    let t3 = dbx * dby * cb;
+    [
+        s_tx + s_ty + t0,
+        s_bx + s_ty + t1,
+        s_tx + s_by + t2,
+        s_bx + s_by + t3,
+    ]
+}
+
+/// `pr_weight.hlo.txt`: (N,2), (N,3), (M,2), (M,2) -> (M,N,4) weights.
+fn pr_weight(inputs: &[&Literal]) -> Result<Vec<Literal>> {
+    let (mu, md) = arg(inputs, 0, "pr_weight")?;
+    let (conic, _) = arg(inputs, 1, "pr_weight")?;
+    let (p_top, td) = arg(inputs, 2, "pr_weight")?;
+    let (p_bot, _) = arg(inputs, 3, "pr_weight")?;
+    expect_rank(md, 2, "pr_weight mu")?;
+    let n = dim(md, 0);
+    let m = dim(td, 0);
+    let mut out = vec![0.0f32; m * n * 4];
+    for k in 0..m {
+        let pt = [p_top[k * 2], p_top[k * 2 + 1]];
+        let pb = [p_bot[k * 2], p_bot[k * 2 + 1]];
+        for i in 0..n {
+            let e = corner_weights(mu, conic, i, pt, pb);
+            out[(k * n + i) * 4..(k * n + i) * 4 + 4].copy_from_slice(&e);
+        }
+    }
+    Ok(vec![Literal::from_parts(out, vec![m as i64, n as i64, 4])])
+}
+
+/// Eq. 2 pass masks: ln(255·max(o, 1e-12)) > E, as {0,1} f32 (M,N,4).
+fn cat_mask_values(
+    mu: &[f32],
+    conic: &[f32],
+    opacity: &[f32],
+    p_top: &[f32],
+    p_bot: &[f32],
+    n: usize,
+    m: usize,
+) -> Vec<f32> {
+    let mut out = vec![0.0f32; m * n * 4];
+    for k in 0..m {
+        let pt = [p_top[k * 2], p_top[k * 2 + 1]];
+        let pb = [p_bot[k * 2], p_bot[k * 2 + 1]];
+        for i in 0..n {
+            let lhs = (255.0 * opacity[i].max(1e-12)).ln();
+            let e = corner_weights(mu, conic, i, pt, pb);
+            for c in 0..4 {
+                out[(k * n + i) * 4 + c] = if lhs > e[c] { 1.0 } else { 0.0 };
+            }
+        }
+    }
+    out
+}
+
+/// `cat_masks.hlo.txt`: (N,2), (N,3), (N,), (M,2), (M,2) -> (M,N,4) masks.
+fn cat_masks_entry(inputs: &[&Literal]) -> Result<Vec<Literal>> {
+    let (mu, md) = arg(inputs, 0, "cat_masks")?;
+    let (conic, _) = arg(inputs, 1, "cat_masks")?;
+    let (opacity, _) = arg(inputs, 2, "cat_masks")?;
+    let (p_top, td) = arg(inputs, 3, "cat_masks")?;
+    let (p_bot, _) = arg(inputs, 4, "cat_masks")?;
+    expect_rank(md, 2, "cat_masks mu")?;
+    let n = dim(md, 0);
+    let m = dim(td, 0);
+    let out = cat_mask_values(mu, conic, opacity, p_top, p_bot, n, m);
+    Ok(vec![Literal::from_parts(out, vec![m as i64, n as i64, 4])])
+}
+
+/// The single-tile render: CAT-gated front-to-back blend over a 16×16
+/// tile (python model.render_tile_entry + kernels/blend.py). Writes rgb
+/// (T,T,3), trans (T,T), passes (N,) into caller-provided slices.
+#[allow(clippy::too_many_arguments)]
+fn render_tile_into(
+    mu: &[f32],
+    conic: &[f32],
+    opacity: &[f32],
+    color: &[f32],
+    origin: &[f32],
+    p_top: &[f32],
+    p_bot: &[f32],
+    n: usize,
+    m: usize,
+    rgb: &mut [f32],
+    trans: &mut [f32],
+    passes: &mut [f32],
+) {
+    // CAT gate: a splat passes if any corner of any PR passes Eq. 2.
+    let masks = cat_mask_values(mu, conic, opacity, p_top, p_bot, n, m);
+    for (i, p) in passes.iter_mut().enumerate() {
+        let mut any = 0.0f32;
+        for k in 0..m {
+            for c in 0..4 {
+                any = any.max(masks[(k * n + i) * 4 + c]);
+            }
+        }
+        *p = any;
+    }
+
+    // Blend with CAT-gated opacities, exactly like blend.py's fori_loop:
+    // per pixel, walk splats in order; a saturated pixel (T < t_min)
+    // stops changing rather than breaking the loop.
+    let (ox, oy) = (origin[0], origin[1]);
+    trans.fill(1.0);
+    rgb.fill(0.0);
+    for i in 0..n {
+        let gated = opacity[i] * passes[i];
+        let (mx, my) = (mu[i * 2], mu[i * 2 + 1]);
+        let (ca, cb, cc) = (conic[i * 3], conic[i * 3 + 1], conic[i * 3 + 2]);
+        let col = [color[i * 3], color[i * 3 + 1], color[i * 3 + 2]];
+        for py in 0..TILE {
+            let dy = oy + py as f32 + 0.5 - my;
+            for px in 0..TILE {
+                let dx = ox + px as f32 + 0.5 - mx;
+                let e = 0.5 * (ca * dx * dx + cc * dy * dy) + cb * dx * dy;
+                let mut alpha = (gated * (-e).exp()).min(0.999);
+                if alpha < ALPHA_MIN {
+                    alpha = 0.0;
+                }
+                let idx = py * TILE + px;
+                let t_cur = trans[idx];
+                if t_cur >= T_MIN {
+                    let w = alpha * t_cur;
+                    rgb[idx * 3] += w * col[0];
+                    rgb[idx * 3 + 1] += w * col[1];
+                    rgb[idx * 3 + 2] += w * col[2];
+                    trans[idx] = t_cur * (1.0 - alpha);
+                }
+            }
+        }
+    }
+}
+
+/// `render_tile.hlo.txt`: the full single-tile composition.
+fn render_tile(inputs: &[&Literal]) -> Result<Vec<Literal>> {
+    let (mu, md) = arg(inputs, 0, "render_tile")?;
+    let (conic, _) = arg(inputs, 1, "render_tile")?;
+    let (opacity, _) = arg(inputs, 2, "render_tile")?;
+    let (color, _) = arg(inputs, 3, "render_tile")?;
+    let (origin, _) = arg(inputs, 4, "render_tile")?;
+    let (p_top, td) = arg(inputs, 5, "render_tile")?;
+    let (p_bot, _) = arg(inputs, 6, "render_tile")?;
+    expect_rank(md, 2, "render_tile mu")?;
+    let n = dim(md, 0);
+    let m = dim(td, 0);
+    let mut rgb = vec![0.0f32; TILE * TILE * 3];
+    let mut trans = vec![0.0f32; TILE * TILE];
+    let mut passes = vec![0.0f32; n];
+    render_tile_into(
+        mu, conic, opacity, color, origin, p_top, p_bot, n, m, &mut rgb, &mut trans, &mut passes,
+    );
+    let t = TILE as i64;
+    Ok(vec![
+        Literal::from_parts(rgb, vec![t, t, 3]),
+        Literal::from_parts(trans, vec![t, t]),
+        Literal::from_parts(passes, vec![n as i64]),
+    ])
+}
+
+/// `render_tile_batched.hlo.txt`: `render_tile` over a leading batch dim.
+/// Each slot runs the identical single-tile computation (the vmap
+/// semantics of python model.render_tiles_entry), which is what makes the
+/// batched executor path bit-identical to looped single-tile dispatches.
+fn render_tile_batched(inputs: &[&Literal]) -> Result<Vec<Literal>> {
+    let (mu, md) = arg(inputs, 0, "render_tile_batched")?;
+    let (conic, _) = arg(inputs, 1, "render_tile_batched")?;
+    let (opacity, _) = arg(inputs, 2, "render_tile_batched")?;
+    let (color, _) = arg(inputs, 3, "render_tile_batched")?;
+    let (origin, _) = arg(inputs, 4, "render_tile_batched")?;
+    let (p_top, td) = arg(inputs, 5, "render_tile_batched")?;
+    let (p_bot, _) = arg(inputs, 6, "render_tile_batched")?;
+    expect_rank(md, 3, "render_tile_batched mu")?;
+    let b = dim(md, 0);
+    let n = dim(md, 1);
+    let m = dim(td, 1);
+    let mut rgb = vec![0.0f32; b * TILE * TILE * 3];
+    let mut trans = vec![0.0f32; b * TILE * TILE];
+    let mut passes = vec![0.0f32; b * n];
+    for s in 0..b {
+        render_tile_into(
+            &mu[s * n * 2..(s + 1) * n * 2],
+            &conic[s * n * 3..(s + 1) * n * 3],
+            &opacity[s * n..(s + 1) * n],
+            &color[s * n * 3..(s + 1) * n * 3],
+            &origin[s * 2..(s + 1) * 2],
+            &p_top[s * m * 2..(s + 1) * m * 2],
+            &p_bot[s * m * 2..(s + 1) * m * 2],
+            n,
+            m,
+            &mut rgb[s * TILE * TILE * 3..(s + 1) * TILE * TILE * 3],
+            &mut trans[s * TILE * TILE..(s + 1) * TILE * TILE],
+            &mut passes[s * n..(s + 1) * n],
+        );
+    }
+    let (bi, t) = (b as i64, TILE as i64);
+    Ok(vec![
+        Literal::from_parts(rgb, vec![bi, t, t, 3]),
+        Literal::from_parts(trans, vec![bi, t, t]),
+        Literal::from_parts(passes, vec![bi, n as i64]),
+    ])
+}

@@ -1,24 +1,33 @@
-//! Offline stub of the `xla` crate (xla_extension 0.5.1 bindings).
+//! Offline functional fake of the `xla` crate (xla_extension 0.5.1
+//! bindings).
 //!
 //! The flicker build must stay pure-Rust and offline, but the `pjrt`
 //! feature's runtime code is written against the published `xla` crate's
-//! API. This stub mirrors exactly the surface `flicker::runtime` uses so
+//! API. This crate mirrors exactly the surface `flicker::runtime` uses so
 //! `cargo build --features pjrt` type-checks and links with no network and
-//! no native XLA library present.
+//! no native XLA library present — and, since the batched-execution PR, it
+//! **executes** the flicker artifact set too: instead of parsing HLO,
+//! [`HloModuleProto::from_text_file`] records the artifact's file stem and
+//! [`PjRtLoadedExecutable::execute`] dispatches to a built-in pure-Rust
+//! reference kernel (see [`kernels`]) that mirrors the JAX/Pallas source
+//! in `python/compile` operation for operation.
 //!
-//! Every entry point that would touch a real PJRT client fails at runtime
-//! with [`Error::StubUnavailable`]; callers (tests, examples, the CLI)
-//! treat that as "PJRT runtime unavailable" and skip. To execute real AOT
-//! artifacts, point the `xla` dependency in `rust/Cargo.toml` at the
-//! published crate instead of this path.
+//! That upgrade is what lets the PJRT differential/property harness —
+//! batched vs single-tile tile execution, executor vs golden rasterizer —
+//! run in default CI with no jax, no network, and no native XLA. Artifacts
+//! whose stem has no built-in kernel compile fine and fail at `execute`
+//! with a clear error. To execute real AOT artifacts, point the `xla`
+//! dependency in `rust/Cargo.toml` at the published crate instead of this
+//! path (the opt-in `xla-real` CI lane does exactly that).
+
+mod kernels;
 
 use std::fmt;
 
-/// Error surface of the real bindings; the stub only ever produces
-/// `StubUnavailable`.
+/// Error surface of the real bindings; every fake failure (missing
+/// artifact file, unknown kernel, shape mismatch) carries its own
+/// message.
 pub enum Error {
-    /// The stub cannot create a PJRT client.
-    StubUnavailable,
     /// Catch-all mirroring the real crate's error payloads.
     Message(String),
 }
@@ -26,9 +35,6 @@ pub enum Error {
 impl fmt::Debug for Error {
     fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
         match self {
-            Error::StubUnavailable => f.write_str(
-                "xla stub: PJRT runtime not linked (swap rust/xla-stub for the real `xla` crate)",
-            ),
             Error::Message(m) => f.write_str(m),
         }
     }
@@ -44,82 +50,200 @@ impl std::error::Error for Error {}
 
 pub type Result<T> = std::result::Result<T, Error>;
 
-/// PJRT client handle. The stub's constructor always fails, so no method
-/// past construction is ever reached at runtime.
+/// PJRT client handle. The fake client "compiles" by capturing the
+/// artifact name recorded at parse time.
 pub struct PjRtClient;
 
 impl PjRtClient {
-    /// Create a CPU PJRT client. Always fails in the stub.
+    /// Create a CPU PJRT client. Always succeeds in the functional fake.
     pub fn cpu() -> Result<PjRtClient> {
-        Err(Error::StubUnavailable)
+        Ok(PjRtClient)
     }
 
     pub fn platform_name(&self) -> String {
         "stub".to_string()
     }
 
-    pub fn compile(&self, _computation: &XlaComputation) -> Result<PjRtLoadedExecutable> {
-        Err(Error::StubUnavailable)
+    pub fn compile(&self, computation: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Ok(PjRtLoadedExecutable {
+            name: computation.name.clone(),
+        })
     }
 }
 
-/// Parsed HLO module (text form in the real crate).
-pub struct HloModuleProto;
+/// Parsed HLO module (text form in the real crate). The fake records the
+/// artifact name (the file stem, minus a trailing `.hlo`) instead of
+/// parsing — artifact files written by `python/compile/aot.py` are named
+/// `{name}.hlo.txt`, and placeholder files synthesized by
+/// `flicker::runtime::write_stub_artifacts` follow the same convention.
+pub struct HloModuleProto {
+    name: String,
+}
 
 impl HloModuleProto {
-    pub fn from_text_file(_path: &str) -> Result<HloModuleProto> {
-        Err(Error::StubUnavailable)
+    pub fn from_text_file(path: &str) -> Result<HloModuleProto> {
+        let p = std::path::Path::new(path);
+        if !p.is_file() {
+            return Err(Error::Message(format!("xla stub: no such artifact file: {path}")));
+        }
+        let stem = p
+            .file_stem()
+            .and_then(|s| s.to_str())
+            .ok_or_else(|| Error::Message(format!("xla stub: bad artifact path: {path}")))?;
+        let name = stem.strip_suffix(".hlo").unwrap_or(stem).to_string();
+        Ok(HloModuleProto { name })
     }
 }
 
 /// An XLA computation wrapping an HLO module.
-pub struct XlaComputation;
+pub struct XlaComputation {
+    name: String,
+}
 
 impl XlaComputation {
-    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
-        XlaComputation
+    pub fn from_proto(proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation {
+            name: proto.name.clone(),
+        }
     }
 }
 
-/// Host-side literal (tensor) value.
-pub struct Literal;
+/// Host-side literal (tensor) value: f32 data with a shape, or a tuple of
+/// literals (artifact results arrive as one tuple).
+pub struct Literal {
+    repr: Repr,
+}
+
+enum Repr {
+    F32 { data: Vec<f32>, dims: Vec<i64> },
+    Tuple(Vec<Literal>),
+}
 
 impl Literal {
     /// Build a rank-1 f32 literal.
-    pub fn vec1(_data: &[f32]) -> Literal {
-        Literal
+    pub fn vec1(data: &[f32]) -> Literal {
+        Literal {
+            repr: Repr::F32 {
+                data: data.to_vec(),
+                dims: vec![data.len() as i64],
+            },
+        }
     }
 
-    pub fn reshape(&self, _dims: &[i64]) -> Result<Literal> {
-        Err(Error::StubUnavailable)
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal> {
+        match &self.repr {
+            Repr::F32 { data, .. } => {
+                let expect: i64 = dims.iter().product();
+                if expect as usize != data.len() {
+                    return Err(Error::Message(format!(
+                        "xla stub: cannot reshape {} elements to {dims:?}",
+                        data.len()
+                    )));
+                }
+                Ok(Literal {
+                    repr: Repr::F32 {
+                        data: data.clone(),
+                        dims: dims.to_vec(),
+                    },
+                })
+            }
+            Repr::Tuple(_) => Err(Error::Message("xla stub: cannot reshape a tuple".into())),
+        }
     }
 
     pub fn to_tuple(self) -> Result<Vec<Literal>> {
-        Err(Error::StubUnavailable)
+        match self.repr {
+            Repr::Tuple(parts) => Ok(parts),
+            Repr::F32 { .. } => {
+                Err(Error::Message("xla stub: literal is not a tuple".into()))
+            }
+        }
     }
 
-    pub fn to_vec<T>(&self) -> Result<Vec<T>> {
-        Err(Error::StubUnavailable)
+    pub fn to_vec<T: Clone + 'static>(&self) -> Result<Vec<T>> {
+        match &self.repr {
+            Repr::F32 { data, .. } => {
+                let any: &dyn std::any::Any = data;
+                any.downcast_ref::<Vec<T>>().cloned().ok_or_else(|| {
+                    Error::Message("xla stub: only f32 element reads are supported".into())
+                })
+            }
+            Repr::Tuple(_) => Err(Error::Message("xla stub: cannot to_vec a tuple".into())),
+        }
+    }
+
+    /// Internal kernel view: (data, dims) of an f32 literal.
+    pub(crate) fn f32_view(&self) -> Result<(&[f32], &[i64])> {
+        match &self.repr {
+            Repr::F32 { data, dims } => Ok((data, dims)),
+            Repr::Tuple(_) => Err(Error::Message("xla stub: tuple passed as input".into())),
+        }
+    }
+
+    pub(crate) fn from_parts(data: Vec<f32>, dims: Vec<i64>) -> Literal {
+        Literal {
+            repr: Repr::F32 { data, dims },
+        }
+    }
+
+    fn tuple(parts: Vec<Literal>) -> Literal {
+        Literal {
+            repr: Repr::Tuple(parts),
+        }
     }
 }
 
-/// Device-side buffer returned by an execution.
-pub struct PjRtBuffer;
+/// Device-side buffer returned by an execution (the fake keeps the result
+/// literal inline).
+pub struct PjRtBuffer {
+    result: Literal,
+}
 
 impl PjRtBuffer {
     pub fn to_literal_sync(&self) -> Result<Literal> {
-        Err(Error::StubUnavailable)
+        match &self.result.repr {
+            Repr::Tuple(parts) => {
+                let cloned = parts
+                    .iter()
+                    .map(|p| match &p.repr {
+                        Repr::F32 { data, dims } => {
+                            Ok(Literal::from_parts(data.clone(), dims.clone()))
+                        }
+                        Repr::Tuple(_) => {
+                            Err(Error::Message("xla stub: nested tuple result".into()))
+                        }
+                    })
+                    .collect::<Result<Vec<_>>>()?;
+                Ok(Literal::tuple(cloned))
+            }
+            Repr::F32 { data, dims } => Ok(Literal::from_parts(data.clone(), dims.clone())),
+        }
     }
 }
 
-/// A compiled, loaded executable.
-pub struct PjRtLoadedExecutable(());
+/// A compiled, loaded executable: dispatches to the built-in reference
+/// kernel matching the artifact name.
+pub struct PjRtLoadedExecutable {
+    name: String,
+}
 
 impl PjRtLoadedExecutable {
     /// Execute on the given argument literals; one result buffer list per
-    /// device (the runtime uses `result[0][0]`).
-    pub fn execute<T>(&self, _args: &[T]) -> Result<Vec<Vec<PjRtBuffer>>> {
-        Err(Error::StubUnavailable)
+    /// device (the runtime uses `result[0][0]`). The generic parameter
+    /// mirrors the real crate's surface; the fake only accepts
+    /// [`Literal`] arguments.
+    pub fn execute<T: 'static>(&self, args: &[T]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        let mut lits: Vec<&Literal> = Vec::with_capacity(args.len());
+        for a in args {
+            let any: &dyn std::any::Any = a;
+            lits.push(any.downcast_ref::<Literal>().ok_or_else(|| {
+                Error::Message("xla stub: execute only accepts Literal arguments".into())
+            })?);
+        }
+        let outs = kernels::run(&self.name, &lits)?;
+        Ok(vec![vec![PjRtBuffer {
+            result: Literal::tuple(outs),
+        }]])
     }
 }
 
@@ -128,17 +252,61 @@ mod tests {
     use super::*;
 
     #[test]
-    fn client_creation_fails_cleanly() {
-        assert!(PjRtClient::cpu().is_err());
-        let msg = format!("{:?}", PjRtClient::cpu().unwrap_err());
-        assert!(msg.contains("stub"));
+    fn client_and_literals_are_functional() {
+        let client = PjRtClient::cpu().unwrap();
+        assert_eq!(client.platform_name(), "stub");
+        let lit = Literal::vec1(&[1.0, 2.0, 3.0, 4.0]);
+        let re = lit.reshape(&[2, 2]).unwrap();
+        assert_eq!(re.to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
+        assert!(lit.reshape(&[3]).is_err());
+        assert!(lit.to_vec::<i32>().is_err());
     }
 
     #[test]
-    fn literal_surface_is_inert() {
-        let lit = Literal::vec1(&[1.0, 2.0]);
-        assert!(lit.reshape(&[2]).is_err());
-        assert!(lit.to_vec::<f32>().is_err());
-        assert!(lit.to_tuple().is_err());
+    fn parse_records_the_artifact_stem() {
+        let dir = std::env::temp_dir().join("xla_stub_parse_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("pr_weight.hlo.txt");
+        std::fs::write(&path, "placeholder").unwrap();
+        let proto = HloModuleProto::from_text_file(path.to_str().unwrap()).unwrap();
+        assert_eq!(proto.name, "pr_weight");
+        assert!(HloModuleProto::from_text_file("/no/such/file.hlo.txt").is_err());
+    }
+
+    #[test]
+    fn unknown_artifact_fails_at_execute_not_compile() {
+        let dir = std::env::temp_dir().join("xla_stub_unknown_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("mystery.hlo.txt");
+        std::fs::write(&path, "placeholder").unwrap();
+        let proto = HloModuleProto::from_text_file(path.to_str().unwrap()).unwrap();
+        let comp = XlaComputation::from_proto(&proto);
+        let exe = PjRtClient::cpu().unwrap().compile(&comp).unwrap();
+        let err = exe.execute::<Literal>(&[]).unwrap_err();
+        assert!(format!("{err:?}").contains("no built-in kernel"));
+    }
+
+    #[test]
+    fn pr_weight_kernel_runs_end_to_end() {
+        // One Gaussian with a diagonal conic; PR corners at mu and mu+3.
+        let dir = std::env::temp_dir().join("xla_stub_prw_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("pr_weight.hlo.txt");
+        std::fs::write(&path, "placeholder").unwrap();
+        let proto = HloModuleProto::from_text_file(path.to_str().unwrap()).unwrap();
+        let exe = PjRtClient::cpu()
+            .unwrap()
+            .compile(&XlaComputation::from_proto(&proto))
+            .unwrap();
+        let mu = Literal::vec1(&[10.0, 10.0]).reshape(&[1, 2]).unwrap();
+        let conic = Literal::vec1(&[0.5, 0.0, 0.5]).reshape(&[1, 3]).unwrap();
+        let pt = Literal::vec1(&[10.0, 10.0]).reshape(&[1, 2]).unwrap();
+        let pb = Literal::vec1(&[13.0, 13.0]).reshape(&[1, 2]).unwrap();
+        let out = exe.execute::<Literal>(&[mu, conic, pt, pb]).unwrap();
+        let parts = out[0][0].to_literal_sync().unwrap().to_tuple().unwrap();
+        let e = parts[0].to_vec::<f32>().unwrap();
+        assert_eq!(e.len(), 4);
+        assert!(e[0].abs() < 1e-6, "E0 at mu must be 0: {}", e[0]);
+        assert!((e[3] - 4.5).abs() < 1e-5, "E3 = {}", e[3]);
     }
 }
