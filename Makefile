@@ -5,7 +5,7 @@
 CARGO ?= cargo
 PYTHON ?= python3
 
-.PHONY: build test bench bench-smoke prop-heavy examples fmt clippy docs artifacts pytest ci clean
+.PHONY: build test bench bench-smoke bench-record prop-heavy examples fmt clippy docs artifacts pytest ci clean
 
 build:
 	$(CARGO) build --release
@@ -25,6 +25,15 @@ bench:
 bench-smoke:
 	$(CARGO) bench -- --quick
 	$(CARGO) bench --features pjrt --bench hotpath -- --quick
+
+# Record the perf trajectory (CI: bench-record lane, push-to-main only):
+# run hotpath (with the pjrt feature so the exec_tile_single/batched rows
+# land, stub-backed) and the gating bench in quick mode, then merge their
+# JSON sidecars into a commit-stamped BENCH_6.json.
+bench-record:
+	$(CARGO) bench --features pjrt --bench hotpath -- --quick
+	$(CARGO) bench --bench fig11_gating -- --quick
+	$(PYTHON) scripts/collect_bench.py BENCH_6.json
 
 # Heavier property coverage (CI: prop-heavy lane): 512 generated cases per
 # property across the property suite and the PJRT roundtrip tests, running

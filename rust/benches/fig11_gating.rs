@@ -1,0 +1,109 @@
+//! Coarse-to-fine gating bench (paper §"hierarchical Gaussian testing"):
+//! how many Gaussian×tile pairs the pyramid gate removes before the fine
+//! per-pixel loop, at what quality cost. At the default threshold (the
+//! 1/255 blend floor) the gate is lossless — PSNR rows print as 99 (the
+//! JSON-safe cap for infinite PSNR) and `splats_submitted` is the whole
+//! story. The threshold sweep shows the lossy knee: raising `--gate-
+//! threshold` trades PSNR for extra culling.
+//!
+//! Emitted as `target/bench-reports/fig11_gating.json`; the `bench-record`
+//! CI lane merges it with `hotpath.json` into `BENCH_6.json`.
+
+mod common;
+
+use flicker::render::metrics::psnr;
+use flicker::render::plan::FramePlan;
+use flicker::render::project::ALPHA_MIN;
+use flicker::render::pyramid::GateConfig;
+use flicker::render::raster::{RenderOptions, VanillaMasks};
+use flicker::util::bench::{black_box, Bencher};
+
+fn main() {
+    let res = common::bench_resolution();
+    let cam = common::bench_camera(res);
+    let mut b = Bencher::new("fig11_gating");
+
+    for scene_name in ["garden", "truck"] {
+        let scene = common::bench_scene(scene_name);
+        let off_plan = FramePlan::build(&scene, &cam, &RenderOptions::default());
+        let on_plan = FramePlan::build(
+            &scene,
+            &cam,
+            &RenderOptions {
+                gate: GateConfig::on(),
+                ..RenderOptions::default()
+            },
+        );
+        let off = off_plan.render(&VanillaMasks, None);
+        let on = on_plan.render(&VanillaMasks, None);
+
+        b.record(
+            &format!("{scene_name}/gate_off/splats_submitted"),
+            off.stats.splats_submitted as f64,
+        );
+        b.record(
+            &format!("{scene_name}/gate_on/splats_submitted"),
+            on.stats.splats_submitted as f64,
+        );
+        b.record(
+            &format!("{scene_name}/gate_on/tile_rejected"),
+            on.stats.gate_tile_rejected as f64,
+        );
+        b.record(
+            &format!("{scene_name}/gate_on/quad_rejected"),
+            on.stats.gate_quad_rejected as f64,
+        );
+        b.record(
+            &format!("{scene_name}/gate_on/tile_reject_rate"),
+            on.stats.gate_tile_reject_rate(),
+        );
+        b.record(
+            &format!("{scene_name}/gate_on/quad_reject_rate"),
+            on.stats.gate_quad_reject_rate(),
+        );
+        let cut = 1.0 - on.stats.splats_submitted as f64 / off.stats.splats_submitted.max(1) as f64;
+        b.record(&format!("{scene_name}/gate_on/submitted_cut"), cut);
+        // Identical images give infinite PSNR; cap at 99 so the JSON report
+        // stays finite.
+        b.record(
+            &format!("{scene_name}/gate_on/psnr_vs_off"),
+            psnr(&off.image, &on.image).min(99.0),
+        );
+
+        // Lossy knee: coarser thresholds (in units of the 1/255 floor).
+        for mult in [2.0f32, 4.0] {
+            let cfg = GateConfig {
+                enabled: true,
+                levels: 2,
+                threshold: ALPHA_MIN * mult,
+            };
+            let plan = FramePlan::build(
+                &scene,
+                &cam,
+                &RenderOptions {
+                    gate: cfg,
+                    ..RenderOptions::default()
+                },
+            );
+            let out = plan.render(&VanillaMasks, None);
+            let cut =
+                1.0 - out.stats.splats_submitted as f64 / off.stats.splats_submitted.max(1) as f64;
+            b.record(&format!("{scene_name}/thr{mult}x/submitted_cut"), cut);
+            b.record(
+                &format!("{scene_name}/thr{mult}x/psnr_vs_off"),
+                psnr(&off.image, &out.image).min(99.0),
+            );
+        }
+
+        // Wall-clock: the gate must pay for itself — rejected pairs skip
+        // both masking and the fine loop.
+        b.bench(&format!("{scene_name}/render_gate_off"), || {
+            black_box(off_plan.render(&VanillaMasks, None));
+        });
+        b.bench(&format!("{scene_name}/render_gate_on"), || {
+            black_box(on_plan.render(&VanillaMasks, None));
+        });
+    }
+
+    b.finish("coarse-to-fine gating: submitted-work cut vs quality");
+}

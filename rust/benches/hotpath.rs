@@ -70,6 +70,21 @@ fn main() {
         black_box(plan.render(&VanillaMasks, None));
     });
 
+    // Same cached-plan render with the coarse-to-fine gate on (lossless
+    // default threshold): whole-tile rejects skip masking + the fine loop,
+    // so this should track or beat plan_reuse.
+    let gated_plan = FramePlan::build(
+        &scene,
+        &cam,
+        &RenderOptions {
+            gate: flicker::render::pyramid::GateConfig::on(),
+            ..RenderOptions::default()
+        },
+    );
+    b.bench("plan_reuse_gated", || {
+        black_box(gated_plan.render(&VanillaMasks, None));
+    });
+
     // Session steady state: the cached-plan render behind session.frame —
     // must track plan_reuse (the cache adds only two atomic bumps).
     let session = common::bench_session("garden");

@@ -59,6 +59,10 @@ pub struct CatStats {
     pub minitiles_passed: u64,
     /// Mini-tile bits examined.
     pub minitiles_tested: u64,
+    /// Sub-tiles never offered to Stage 1 because the coarse gate
+    /// (`render::pyramid`) already rejected their quadrant — work the CTU
+    /// hierarchy saves on top of its own stage-1/stage-2 rejection.
+    pub gate_skipped_subtiles: u64,
     /// Arithmetic ops spent on CAT itself (the "overhead" side).
     pub ops: OpCount,
 }
@@ -166,15 +170,20 @@ impl CatEngine {
     pub fn prs_for(&self, splat: &Splat) -> usize {
         prs_per_subtile(self.cfg.mode.sampling(splat))
     }
-}
 
-impl MaskProvider for CatEngine {
-    /// Full-tile mask: 16 bits, one per 4×4 mini-tile of a 16×16 tile,
-    /// row-major as consumed by the rasterizer.
-    fn mask(&mut self, tile: &Rect, splat: &Splat) -> u32 {
+    /// Full-tile mask restricted to the quadrants in `quad_live` (bit
+    /// `q = sy·2 + sx` — the coarse gate's [TL, TR, BL, BR] order, which
+    /// is exactly this sweep's order). Dead quadrants skip Stage 1 and the
+    /// CTU entirely and are tallied in `stats.gate_skipped_subtiles`;
+    /// `quad_live = 0xF` is the ungated full-tile mask.
+    fn tile_mask(&mut self, tile: &Rect, splat: &Splat, quad_live: u8) -> u32 {
         let mut out = 0u32;
         for sy in 0..2u32 {
             for sx in 0..2u32 {
+                if quad_live & (1 << (sy * 2 + sx)) == 0 {
+                    self.stats.gate_skipped_subtiles += 1;
+                    continue;
+                }
                 let sub = Rect {
                     x0: tile.x0 + (sx * 8) as f32,
                     y0: tile.y0 + (sy * 8) as f32,
@@ -201,6 +210,22 @@ impl MaskProvider for CatEngine {
             }
         }
         out
+    }
+}
+
+impl MaskProvider for CatEngine {
+    /// Full-tile mask: 16 bits, one per 4×4 mini-tile of a 16×16 tile,
+    /// row-major as consumed by the rasterizer.
+    fn mask(&mut self, tile: &Rect, splat: &Splat) -> u32 {
+        self.tile_mask(tile, splat, 0xF)
+    }
+
+    /// Gated full-tile mask: sub-tiles whose quadrant the coarse gate
+    /// killed are skipped, saving their Stage-1/CTU work. The caller ANDs
+    /// the result with the surviving quadrants' mini-tile bits, so the
+    /// blended pixels are identical to the ungated mask.
+    fn mask_gated(&mut self, tile: &Rect, splat: &Splat, quad_live: u8) -> u32 {
+        self.tile_mask(tile, splat, quad_live)
     }
 }
 
@@ -481,6 +506,29 @@ mod tests {
         let mc = cat.mask(&tile, &s);
         let mo = oracle.mask(&tile, &s);
         assert_eq!(mc & !mo, 0, "cat {mc:#06x} claims minitiles oracle rejects {mo:#06x}");
+    }
+
+    #[test]
+    fn gated_mask_skips_dead_quadrants_without_adding_bits() {
+        let s = splat(v3(2.0, 2.0, 2.0), (104.0, 104.0), 0.95);
+        let tile = tile_at(96.0, 96.0);
+        let mut full = CatEngine::new(CatConfig::default());
+        let mut gated = CatEngine::new(CatConfig::default());
+        let mf = full.mask(&tile, &s);
+        // Only TL + BR quadrants live: the dead sub-tiles never reach
+        // Stage 1, and the live quadrants' bits match the full mask.
+        let mg = gated.tile_mask(&tile, &s, 0b1001);
+        assert_eq!(gated.stats.gate_skipped_subtiles, 2);
+        assert_eq!(gated.stats.stage1_tested, 2);
+        let tl_bits: u32 = 1 | (1 << 1) | (1 << 4) | (1 << 5);
+        let br_bits: u32 = (1 << 10) | (1 << 11) | (1 << 14) | (1 << 15);
+        assert_eq!(mg & tl_bits, mf & tl_bits);
+        assert_eq!(mg & br_bits, mf & br_bits);
+        assert_eq!(mg & !(tl_bits | br_bits), 0, "dead quadrants contributed bits");
+        // An all-live hint is exactly the ungated mask, with no skips.
+        let mut all = CatEngine::new(CatConfig::default());
+        assert_eq!(all.tile_mask(&tile, &s, 0xF), mf);
+        assert_eq!(all.stats.gate_skipped_subtiles, 0);
     }
 
     #[test]

@@ -117,6 +117,17 @@ pub fn shared_threshold(opacity: f32) -> f32 {
     (255.0 * opacity).ln()
 }
 
+/// [`shared_threshold`] generalized to an arbitrary alpha cutoff:
+/// ln(o / α_min) — a point with E at or above this value cannot reach
+/// α ≥ α_min. `shared_threshold(o)` is the α_min = 1/255 case (up to
+/// rounding). The clamp keeps zero-opacity splats finite (they reject
+/// everywhere, as they should). The coarse gate (`render::pyramid`) uses
+/// this as its per-level cutoff.
+#[inline]
+pub fn shared_threshold_at(opacity: f32, alpha_min: f32) -> f32 {
+    (opacity / alpha_min).max(1e-12).ln()
+}
+
 /// Eq. 2 decision: does the pixel pass (contribute)?
 /// α = o·e^{−E} ≥ 1/255  ⇔  ln(255·o) > E.
 #[inline]
@@ -216,6 +227,23 @@ mod tests {
                 "o={o} e={e} alpha={alpha}"
             );
         }
+    }
+
+    #[test]
+    fn generalized_threshold_matches_specialized() {
+        let mut rng = Pcg32::new(74);
+        for _ in 0..200 {
+            let o = rng.range_f32(0.01, 1.0);
+            let a = shared_threshold(o);
+            let b = shared_threshold_at(o, 1.0 / 255.0);
+            assert!((a - b).abs() < 1e-5, "{a} vs {b}");
+            // A coarser (higher-alpha) cutoff lowers the E threshold.
+            assert!(shared_threshold_at(o, 8.0 / 255.0) < b);
+        }
+        // Zero opacity stays finite and rejects even E = 0.
+        let z = shared_threshold_at(0.0, 1.0 / 255.0);
+        assert!(z.is_finite() && z < 0.0);
+        assert!(!passes(z, 0.0));
     }
 
     #[test]

@@ -53,6 +53,16 @@ pub struct ExperimentConfig {
     /// artifacts (CI-enforced); real XLA agrees within float tolerance
     /// (vmap lowering carries no cross-program bit-identity guarantee).
     pub batch: usize,
+    /// Coarse-to-fine contribution gate switch (`render::pyramid`):
+    /// `Some(true)` enables it, `Some(false)` forces it off, `None` keeps
+    /// the renderer default (off). At the default threshold the gate is
+    /// lossless — identical pixels, fewer submitted splats.
+    pub gate: Option<bool>,
+    /// Gate levels override (1 = whole-tile only, 2 = tile + quadrants).
+    pub gate_levels: Option<u32>,
+    /// Gate alpha threshold override (default 1/255 = lossless; higher
+    /// trades quality for a deeper cut).
+    pub gate_threshold: Option<f32>,
     /// RNG seed for synthetic scene generation.
     pub seed: u64,
 }
@@ -73,6 +83,9 @@ impl Default for ExperimentConfig {
             prune: false,
             workers: 1,
             batch: 0,
+            gate: None,
+            gate_levels: None,
+            gate_threshold: None,
             seed: 0xF11C,
         }
     }
@@ -122,6 +135,21 @@ impl ExperimentConfig {
         if let Some(s) = &self.strategy {
             o.strategy =
                 Strategy::parse(s).ok_or_else(|| err!("unknown strategy '{s}' (aabb|obb)"))?;
+        }
+        if let Some(g) = self.gate {
+            o.gate.enabled = g;
+        }
+        if let Some(l) = self.gate_levels {
+            if !(1..=2).contains(&l) {
+                return Err(err!("gate_levels must be 1 or 2 (got {l})"));
+            }
+            o.gate.levels = l;
+        }
+        if let Some(t) = self.gate_threshold {
+            if !(t > 0.0 && t <= 1.0) {
+                return Err(err!("gate_threshold must be in (0, 1] (got {t})"));
+            }
+            o.gate.threshold = t;
         }
         Ok(o)
     }
@@ -174,6 +202,21 @@ impl ExperimentConfig {
         }
         cfg.workers = args.usize_or("workers", cfg.workers)?;
         cfg.batch = args.usize_or("batch", cfg.batch)?;
+        if let Some(g) = args.get("gate") {
+            cfg.gate = Some(match g {
+                "on" | "true" | "1" => true,
+                "off" | "false" | "0" => false,
+                _ => return Err(err!("--gate: expected on|off, got '{g}'")),
+            });
+        }
+        if let Some(l) = args.get("gate-levels") {
+            cfg.gate_levels =
+                Some(l.parse().map_err(|_| err!("--gate-levels: bad integer '{l}'"))?);
+        }
+        if let Some(t) = args.get("gate-threshold") {
+            cfg.gate_threshold =
+                Some(t.parse().map_err(|_| err!("--gate-threshold: bad number '{t}'"))?);
+        }
         cfg.seed = args.u64_or("seed", cfg.seed)?;
         Ok(cfg)
     }
@@ -218,6 +261,15 @@ impl ExperimentConfig {
         if let Some(v) = n("batch") {
             cfg.batch = v as usize;
         }
+        if let Some(v) = j.at(&["gate"]).and_then(Json::as_bool) {
+            cfg.gate = Some(v);
+        }
+        if let Some(v) = n("gate_levels") {
+            cfg.gate_levels = Some(v as u32);
+        }
+        if let Some(v) = n("gate_threshold") {
+            cfg.gate_threshold = Some(v as f32);
+        }
         if let Some(v) = n("seed") {
             cfg.seed = v as u64;
         }
@@ -250,6 +302,15 @@ impl ExperimentConfig {
         o.insert("prune", Json::Bool(self.prune));
         o.insert("workers", jnum(self.workers as f64));
         o.insert("batch", jnum(self.batch as f64));
+        if let Some(g) = self.gate {
+            o.insert("gate", Json::Bool(g));
+        }
+        if let Some(l) = self.gate_levels {
+            o.insert("gate_levels", jnum(l as f64));
+        }
+        if let Some(t) = self.gate_threshold {
+            o.insert("gate_threshold", jnum(t as f64));
+        }
         o.insert("seed", jnum(self.seed as f64));
         Json::Obj(o)
     }
@@ -320,6 +381,50 @@ mod tests {
     }
 
     #[test]
+    fn gate_flags_thread_to_render_options() {
+        let a = args(&[
+            "render",
+            "--gate",
+            "on",
+            "--gate-levels",
+            "1",
+            "--gate-threshold",
+            "0.0157",
+        ]);
+        let cfg = ExperimentConfig::from_args(&a).unwrap();
+        assert_eq!(cfg.gate, Some(true));
+        let o = cfg.render_options().unwrap();
+        assert!(o.gate.enabled);
+        assert_eq!(o.gate.levels, 1);
+        assert!((o.gate.threshold - 0.0157).abs() < 1e-6);
+        // Off by default, and `--gate off` parses too.
+        let d = ExperimentConfig::default().render_options().unwrap();
+        assert!(!d.gate.enabled);
+        let off = ExperimentConfig::from_args(&args(&["render", "--gate", "off"])).unwrap();
+        assert_eq!(off.gate, Some(false));
+        assert!(ExperimentConfig::from_args(&args(&["render", "--gate", "maybe"])).is_err());
+    }
+
+    #[test]
+    fn bad_gate_settings_are_errors() {
+        let levels = ExperimentConfig {
+            gate_levels: Some(3),
+            ..Default::default()
+        };
+        assert!(levels.render_options().is_err());
+        let thr = ExperimentConfig {
+            gate_threshold: Some(0.0),
+            ..Default::default()
+        };
+        assert!(thr.render_options().is_err());
+        let thr2 = ExperimentConfig {
+            gate_threshold: Some(1.5),
+            ..Default::default()
+        };
+        assert!(thr2.render_options().is_err());
+    }
+
+    #[test]
     fn bad_strategy_is_error() {
         let cfg = ExperimentConfig {
             strategy: Some("bogus".into()),
@@ -349,6 +454,9 @@ mod tests {
             tile_size: Some(16),
             workers: 3,
             batch: 4,
+            gate: Some(true),
+            gate_levels: Some(2),
+            gate_threshold: Some(0.0078),
             ..Default::default()
         };
         let dir = std::env::temp_dir().join("flicker_cfg");
@@ -363,5 +471,9 @@ mod tests {
         assert_eq!(back.tile_size, cfg.tile_size);
         assert_eq!(back.workers, cfg.workers);
         assert_eq!(back.batch, cfg.batch);
+        assert_eq!(back.gate, cfg.gate);
+        assert_eq!(back.gate_levels, cfg.gate_levels);
+        let (a, b) = (back.gate_threshold.unwrap(), cfg.gate_threshold.unwrap());
+        assert!((a - b).abs() < 1e-6);
     }
 }

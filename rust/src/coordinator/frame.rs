@@ -137,11 +137,26 @@ impl RenderBackend for Pjrt<'_> {
             .unwrap_or_else(std::sync::PoisonError::into_inner);
         let mut img = Image::new(plan.grid.width, plan.grid.height);
         let mut ex = TileExecutor::new(self.rt).with_batch(plan.opts.batch);
-        let jobs = TileJob::for_grid(&plan.grid, &plan.lists);
+        // Coarse tile-level gate: the device kernel zeroes α < 1/255
+        // itself, so dropping whole-tile rejects from the job lists is
+        // lossless (the gate rejects exactly the pairs whose max in-tile
+        // α is below the blend floor).
+        let gated = plan.gated_lists();
+        let lists = gated.as_ref().map(|(l, _)| l).unwrap_or(&plan.lists);
+        let jobs = TileJob::for_grid(&plan.grid, lists);
         ex.render_tiles(&jobs, &plan.splats, &mut img, plan.opts.background)?;
+        let mut stats = plan.frame_stats();
+        match &gated {
+            Some((_, rejected)) => {
+                stats.gate_tile_tested = stats.tile_pairs as u64;
+                stats.gate_tile_rejected = *rejected;
+                stats.splats_submitted = stats.tile_pairs as u64 - *rejected;
+            }
+            None => stats.splats_submitted = stats.tile_pairs as u64,
+        }
         Ok(RenderOutput {
             image: img,
-            stats: plan.frame_stats(),
+            stats,
         })
     }
 }

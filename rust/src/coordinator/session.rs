@@ -457,6 +457,33 @@ mod tests {
     }
 
     #[test]
+    fn gate_config_threads_into_session_plans() {
+        // A gate-enabled config must reach the session's resolved options
+        // and, through them, every cached plan — and the gated render must
+        // stay bit-identical to the ungated one (lossless default
+        // threshold) while cutting submitted work.
+        let s = Session::builder(ExperimentConfig {
+            gate: Some(true),
+            ..cfg(1, 1)
+        })
+        .build()
+        .unwrap();
+        assert!(s.options().gate.enabled);
+        let gated = s.frame(0, &Golden).unwrap();
+        assert!(gated.stats.gate_tile_tested > 0);
+        assert_eq!(
+            gated.stats.splats_submitted + gated.stats.gate_tile_rejected,
+            gated.stats.gate_tile_tested
+        );
+        let plain = Session::builder(cfg(1, 1)).build().unwrap();
+        assert!(!plain.options().gate.enabled);
+        let base = plain.frame(0, &Golden).unwrap();
+        assert_eq!(gated.image.data, base.image.data);
+        assert_eq!(base.stats.gate_tile_tested, 0);
+        assert!(base.stats.splats_submitted <= base.stats.tile_pairs as u64);
+    }
+
+    #[test]
     fn frame_out_of_range_is_an_error_not_a_panic() {
         let s = Session::builder(cfg(1, 1)).build().unwrap();
         assert!(s.frame(1, &Golden).is_err());

@@ -56,6 +56,14 @@ COMMON OPTIONS
                  pjrt backend only — output is bit-identical across
                  values on the offline stub, tolerance-equal on real XLA)
   --hardware     flicker32|flicker32-sparse|simplified32|simplified64|gscore64
+  --gate         coarse-to-fine contribution gate: on|off  (default off;
+                 at the default threshold the gate is lossless — output is
+                 bit-identical to ungated rendering)
+  --gate-levels  pyramid depth: 1 = whole-tile test only, 2 = + 2×2
+                 quadrant tests                         (default 2)
+  --gate-threshold  min peak alpha a pair must reach to survive the gate
+                 (default 1/255 — the blend floor, i.e. lossless; raise
+                 for lossy extra culling)
 
 The pjrt backend requires a build with `--features pjrt` and AOT artifacts
 (`make artifacts`, or any directory written by
@@ -176,10 +184,11 @@ fn orbit_to_disk(args: &Args, session: &Session, backend: &dyn RenderBackend) ->
         let path = out_dir.join(format!("{scene_name}_{i:03}.ppm"));
         m.image.write_ppm(&path)?;
         println!(
-            "frame {i}: {:.1} ms, {} splats, {} tile-pairs → {}",
+            "frame {i}: {:.1} ms, {} splats, {} tile-pairs, {} submitted → {}",
             m.wall_ms,
             m.stats.splats,
             m.stats.tile_pairs,
+            m.stats.splats_submitted,
             path.display()
         );
         rows.push((
@@ -188,6 +197,9 @@ fn orbit_to_disk(args: &Args, session: &Session, backend: &dyn RenderBackend) ->
                 ("wall_ms", m.wall_ms),
                 ("splats", m.stats.splats as f64),
                 ("tile_pairs", m.stats.tile_pairs as f64),
+                ("splats_submitted", m.stats.splats_submitted as f64),
+                ("gate_tile_rejected", m.stats.gate_tile_rejected as f64),
+                ("gate_quad_rejected", m.stats.gate_quad_rejected as f64),
                 ("pp_tested", m.stats.per_pixel_tested()),
             ],
         ));

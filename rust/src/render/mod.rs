@@ -6,6 +6,7 @@ pub mod image;
 pub mod metrics;
 pub mod plan;
 pub mod project;
+pub mod pyramid;
 pub mod raster;
 pub mod sort;
 pub mod tile;

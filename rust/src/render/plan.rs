@@ -10,9 +10,14 @@
 //! ```text
 //!   build:  project_scene ─► build_tile_lists ─► sort_by_depth
 //!                       (splats)          (lists)        (lists, sorted)
-//!   render: for each tile: mask ─► blend ─► composite      (per consumer)
-//!   score:  for each tile: mask ─► blend ─► fold partials  (per consumer)
+//!   render: for each tile: gate ─► mask ─► blend ─► composite    (per consumer)
+//!   score:  for each tile: gate ─► mask ─► blend ─► fold partials
 //! ```
+//!
+//! The optional **gate** stage (`opts.gate`, see [`super::pyramid`])
+//! rejects (tile, splat) and (quadrant, splat) pairs on conservative
+//! contribution bounds before any mask provider or per-pixel work runs;
+//! at the default threshold it is lossless and off by default.
 //!
 //! **Determinism contract.** A plan is immutable after `build`, tiles are
 //! independent work units, and every consumer shares the one blending loop
@@ -24,6 +29,7 @@
 
 use super::image::Image;
 use super::project::{project_scene, Splat, ALPHA_MIN};
+use super::pyramid::TilePyramid;
 use super::raster::{
     MaskProvider, MaskSource, RenderOptions, RenderOutput, RenderStats, MINITILE,
 };
@@ -284,6 +290,36 @@ impl FramePlan {
         }
     }
 
+    /// The plan's per-tile lists after the level-1 (whole-tile) coarse
+    /// gate — for consumers that ship splat **lists** to a backend
+    /// instead of masking pixels (the PJRT executor). Returns `None` when
+    /// the gate is inactive; otherwise the filtered lists plus the number
+    /// of rejected (tile, splat) pairs. At the default threshold the
+    /// removed entries are exactly pairs the fine kernel would have
+    /// zeroed (its α < 1/255 clamp), so rendering the gated lists is
+    /// bit-identical to rendering `self.lists`.
+    pub fn gated_lists(&self) -> Option<(Vec<Vec<u32>>, u64)> {
+        if !self.opts.gate.active() {
+            return None;
+        }
+        let mut rejected = 0u64;
+        let mut out = Vec::with_capacity(self.lists.len());
+        for (t, list) in self.lists.iter().enumerate() {
+            let rect = self.grid.rect(t);
+            let pyr = TilePyramid::new(&rect, self.grid.tile);
+            let mut kept = Vec::with_capacity(list.len());
+            for &si in list {
+                if pyr.rejects_tile(&self.splats[si as usize], &self.opts.gate) {
+                    rejected += 1;
+                } else {
+                    kept.push(si);
+                }
+            }
+            out.push(kept);
+        }
+        Some((out, rejected))
+    }
+
     /// Fold tile `t`'s list-aligned contribution partials into the global
     /// per-Gaussian score array (indexed by Gaussian id). Callers must fold
     /// in ascending tile index (and, across plans, ascending view index) —
@@ -354,10 +390,35 @@ fn render_tile(
         *c = [0.0; 3];
     }
     let mut active = (w * h) as u32;
+    // Coarse-to-fine gate (render::pyramid): built once per tile, consulted
+    // per splat ahead of mask generation. Inactive ⇒ the pre-gate code
+    // path, bit for bit.
+    let pyramid = if opts.gate.active() {
+        Some(TilePyramid::new(rect, grid.tile))
+    } else {
+        None
+    };
 
     'splat_loop: for (li, &si) in list.iter().enumerate() {
         let s = &splats[si as usize];
-        let mask = masks.mask(rect, s);
+        let mask = match &pyramid {
+            Some(pyr) => {
+                stats.gate_tile_tested += 1;
+                let d = pyr.gate(s, &opts.gate);
+                if d.tile_rejected {
+                    stats.gate_tile_rejected += 1;
+                    continue;
+                }
+                stats.splats_submitted += 1;
+                stats.gate_quad_tested += d.quads_tested as u64;
+                stats.gate_quad_rejected += d.quads_rejected as u64;
+                masks.mask_gated(rect, s, d.quad_mask) & pyr.minitile_mask(d.quad_mask)
+            }
+            None => {
+                stats.splats_submitted += 1;
+                masks.mask(rect, s)
+            }
+        };
         if mask == 0 {
             continue;
         }
@@ -500,6 +561,57 @@ mod tests {
         let scored = plan.render(&VanillaMasks, Some(&mut scores));
         assert_eq!(plain.image.data, scored.image.data);
         assert_eq!(plain.stats.pairs_tested, scored.stats.pairs_tested);
+    }
+
+    #[test]
+    fn gated_render_is_bitwise_identical_and_cuts_submissions() {
+        use crate::render::pyramid::GateConfig;
+        let scene = generate_scaled(&preset("garden"), 0.01);
+        let c = cam(96);
+        let off = FramePlan::build(&scene, &c, &RenderOptions::default());
+        let on = FramePlan::build(
+            &scene,
+            &c,
+            &RenderOptions {
+                gate: GateConfig::on(),
+                ..RenderOptions::default()
+            },
+        );
+        let a = off.render(&VanillaMasks, None);
+        let b = on.render(&VanillaMasks, None);
+        // Lossless at the default threshold: pixels and blends identical,
+        // strictly less per-pixel testing.
+        assert_eq!(a.image.data, b.image.data);
+        assert_eq!(a.stats.pairs_blended, b.stats.pairs_blended);
+        assert!(b.stats.pairs_tested <= a.stats.pairs_tested);
+        // Counter consistency: every gate-tested list entry is either
+        // submitted or tile-rejected; early-terminated tiles may skip the
+        // tail of their lists, gate included.
+        assert_eq!(
+            b.stats.splats_submitted + b.stats.gate_tile_rejected,
+            b.stats.gate_tile_tested
+        );
+        assert!(b.stats.gate_tile_tested <= b.stats.tile_pairs as u64);
+        if b.stats.tiles_early_terminated == 0 {
+            assert_eq!(b.stats.gate_tile_tested, b.stats.tile_pairs as u64);
+        }
+        assert!(b.stats.gate_tile_rejected > 0, "gate never fired");
+        assert!(b.stats.gate_quad_rejected <= b.stats.gate_quad_tested);
+        // Ungated renders submit everything they process and never touch
+        // gate counters.
+        assert!(a.stats.splats_submitted <= a.stats.tile_pairs as u64);
+        assert_eq!(a.stats.gate_tile_tested, 0);
+        // gated_lists scans full lists (no early termination), so its
+        // reject count can only meet or exceed the render's.
+        let (lists, rejected) = on.gated_lists().unwrap();
+        assert!(rejected >= b.stats.gate_tile_rejected);
+        let kept: usize = lists.iter().map(|l| l.len()).sum();
+        assert_eq!(kept as u64 + rejected, b.stats.tile_pairs as u64);
+        if b.stats.tiles_early_terminated == 0 {
+            assert_eq!(rejected, b.stats.gate_tile_rejected);
+            assert_eq!(kept as u64, b.stats.splats_submitted);
+        }
+        assert!(off.gated_lists().is_none());
     }
 
     #[test]

@@ -1,0 +1,396 @@
+//! Coarse-to-fine contribution gating: the per-tile mip pyramid (paper:
+//! "hierarchical Gaussian testing", coarse half).
+//!
+//! The CAT engine tests at leader-pixel granularity, but every tile-binned
+//! Gaussian still reaches it — and then the per-pixel loop — even when its
+//! whole contribution to the tile is provably below the blending threshold.
+//! This module adds the two coarse levels above CAT:
+//!
+//! ```text
+//!   level 1: whole tile      — reject the (tile, splat) pair outright
+//!   level 2: 2×2 quadrants   — reject (quadrant, splat) pairs
+//!   level 3: pixel-rectangles — the existing CatEngine leader tests
+//!   fine:    per-pixel loop  — render_tile's Eq.-1 evaluation
+//! ```
+//!
+//! Each level uses the same conservative bound: the exact minimum of the
+//! quadratic form E over the rectangle ([`min_quad_on_rect`]), so the
+//! maximum achievable alpha anywhere in the rect is `o·e^{−minE}`. A rect
+//! is rejected when that maximum falls below the gate threshold — the
+//! `shared_threshold`-style cutoff of Eq. 2 ([`shared_threshold_at`]),
+//! generalized from 1/255 to a configurable `GateConfig::threshold`.
+//!
+//! **Losslessness.** At the default threshold (`ALPHA_MIN` = 1/255) the
+//! gate removes only pairs whose every pixel the blending loop would have
+//! skipped anyway (`E ≥ ln(255·o)` ⇒ α < 1/255 ⇒ no blend), so images,
+//! contribution scores, and `pairs_blended` are bit-identical with the
+//! gate on or off; only the tested-pair counters shrink. Raising the
+//! threshold trades quality for work like a coarser CAT would.
+//!
+//! Quadrants are split on mini-tile boundaries and ordered [TL, TR, BL,
+//! BR] — bit `q = row·2 + col` — matching both `CatEngine`'s sub-tile
+//! iteration order and `sim::workload::subtile_rects`, so a quadrant bit
+//! maps 1:1 onto an 8×8 sub-tile for the paper's 16×16 tiles.
+
+use super::project::{Splat, ALPHA_MIN};
+use super::raster::MINITILE;
+use super::tile::{min_quad_on_rect, Rect};
+use crate::cat::pr::shared_threshold_at;
+
+/// Coarse-gate configuration, threaded through `RenderOptions` /
+/// `ExperimentConfig` / the CLI (`--gate on`, `--gate-levels`,
+/// `--gate-threshold`).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct GateConfig {
+    /// Master switch. Off (the default) renders through the exact pre-gate
+    /// code path — bit-identical to a build without this module.
+    pub enabled: bool,
+    /// Coarse levels to apply when enabled: 1 = whole-tile only,
+    /// 2 = tile + quadrants (the default).
+    pub levels: u32,
+    /// Minimum alpha a splat must be able to reach inside a rect to
+    /// survive it. The default, `ALPHA_MIN` (1/255), is exactly the
+    /// blending loop's skip threshold, which makes the gate lossless.
+    pub threshold: f32,
+}
+
+impl Default for GateConfig {
+    fn default() -> Self {
+        GateConfig {
+            enabled: false,
+            levels: 2,
+            threshold: ALPHA_MIN,
+        }
+    }
+}
+
+impl GateConfig {
+    /// Default thresholds with the master switch on.
+    pub fn on() -> GateConfig {
+        GateConfig {
+            enabled: true,
+            ..GateConfig::default()
+        }
+    }
+
+    /// Does any coarse level run?
+    pub fn active(&self) -> bool {
+        self.enabled && self.levels > 0
+    }
+
+    /// The E-space cutoff for a splat: a rect whose minimum E reaches this
+    /// value cannot contribute α ≥ `threshold` anywhere inside it. At the
+    /// default threshold this is computed with the **same expression** as
+    /// the blending loop's `e_max` (`ln(255·o)`), so the gate's reject
+    /// region and the loop's skip region agree bit-for-bit.
+    pub fn cutoff(&self, opacity: f32) -> f32 {
+        if self.threshold == ALPHA_MIN {
+            (255.0 * opacity).max(1e-12).ln()
+        } else {
+            shared_threshold_at(opacity, self.threshold)
+        }
+    }
+}
+
+/// Per-level outcome of gating one splat against one tile.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct GateDecision {
+    /// Level 1 rejected the whole (tile, splat) pair.
+    pub tile_rejected: bool,
+    /// Surviving quadrants, bit `q = row·2 + col` ([TL, TR, BL, BR]).
+    /// All live quadrants when `levels < 2`.
+    pub quad_mask: u8,
+    /// Quadrants the level-2 bound was evaluated on.
+    pub quads_tested: u8,
+    /// Quadrants level 2 rejected.
+    pub quads_rejected: u8,
+}
+
+/// The per-tile pyramid: the tile rect, its 2×2 mini-tile-aligned
+/// quadrants, and each quadrant's mini-tile bits (for masking the fine
+/// loop). Built once per tile and reused for every splat in the tile's
+/// list — construction is a handful of adds, no per-splat state.
+pub struct TilePyramid {
+    tile: Rect,
+    quads: [Rect; 4],
+    /// Mini-tile bits (bit = `row·mt_cols + col`) covered by each quadrant.
+    quad_masks: [u32; 4],
+    /// Bits of non-degenerate quadrants (small tiles can have empty ones).
+    live: u8,
+}
+
+impl TilePyramid {
+    /// Build the pyramid for one tile rect. The quadrant split lands on a
+    /// mini-tile boundary (for 16×16 tiles: exact 8×8 sub-tiles), so every
+    /// mini-tile belongs to exactly one quadrant.
+    pub fn new(tile: &Rect, tile_size: u32) -> TilePyramid {
+        let mt_cols = tile_size.div_ceil(MINITILE) as usize;
+        let half = mt_cols.div_ceil(2);
+        let sx = (tile.x0 + (half as u32 * MINITILE) as f32).min(tile.x1);
+        let sy = (tile.y0 + (half as u32 * MINITILE) as f32).min(tile.y1);
+        let quads = [
+            Rect { x0: tile.x0, y0: tile.y0, x1: sx, y1: sy },
+            Rect { x0: sx, y0: tile.y0, x1: tile.x1, y1: sy },
+            Rect { x0: tile.x0, y0: sy, x1: sx, y1: tile.y1 },
+            Rect { x0: sx, y0: sy, x1: tile.x1, y1: tile.y1 },
+        ];
+        let mut quad_masks = [0u32; 4];
+        for row in 0..mt_cols {
+            for col in 0..mt_cols {
+                let q = (row >= half) as usize * 2 + (col >= half) as usize;
+                quad_masks[q] |= 1 << (row * mt_cols + col);
+            }
+        }
+        let mut live = 0u8;
+        for q in 0..4 {
+            if quads[q].x1 > quads[q].x0 && quads[q].y1 > quads[q].y0 && quad_masks[q] != 0 {
+                live |= 1 << q;
+            }
+        }
+        TilePyramid {
+            tile: *tile,
+            quads,
+            quad_masks,
+            live,
+        }
+    }
+
+    /// Level 1 alone: can the splat contribute α ≥ threshold anywhere in
+    /// the tile? Used by list-level consumers (`FramePlan::gated_lists`)
+    /// that ship filtered lists to a backend instead of masking pixels.
+    pub fn rejects_tile(&self, s: &Splat, cfg: &GateConfig) -> bool {
+        min_quad_on_rect(s, &self.tile) >= cfg.cutoff(s.opacity)
+    }
+
+    /// Run the configured coarse levels for one splat.
+    pub fn gate(&self, s: &Splat, cfg: &GateConfig) -> GateDecision {
+        let cutoff = cfg.cutoff(s.opacity);
+        if min_quad_on_rect(s, &self.tile) >= cutoff {
+            return GateDecision {
+                tile_rejected: true,
+                ..GateDecision::default()
+            };
+        }
+        if cfg.levels < 2 {
+            return GateDecision {
+                quad_mask: self.live,
+                ..GateDecision::default()
+            };
+        }
+        let mut d = GateDecision::default();
+        for q in 0..4 {
+            if self.live & (1 << q) == 0 {
+                continue;
+            }
+            d.quads_tested += 1;
+            if min_quad_on_rect(s, &self.quads[q]) >= cutoff {
+                d.quads_rejected += 1;
+            } else {
+                d.quad_mask |= 1 << q;
+            }
+        }
+        d
+    }
+
+    /// Mini-tile bits covered by the surviving quadrants — ANDed with the
+    /// mask provider's bits so the fine loop never visits a rejected
+    /// quadrant's pixels.
+    pub fn minitile_mask(&self, quad_mask: u8) -> u32 {
+        let mut m = 0u32;
+        for q in 0..4 {
+            if quad_mask & (1 << q) != 0 {
+                m |= self.quad_masks[q];
+            }
+        }
+        m
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::numeric::linalg::{v2, Sym2};
+    use crate::util::rng::Pcg32;
+
+    fn splat(mx: f32, my: f32, conic: Sym2, opacity: f32) -> Splat {
+        Splat {
+            id: 0,
+            mean: v2(mx, my),
+            cov: Sym2 { a: 1.0, b: 0.0, c: 1.0 },
+            conic,
+            depth: 1.0,
+            opacity,
+            color: [1.0; 3],
+            radius: 10.0,
+            axis_ratio: 1.0,
+        }
+    }
+
+    fn random_conic(rng: &mut Pcg32) -> Sym2 {
+        // Positive-definite via LLᵀ (same construction as cat::pr tests).
+        let l11 = rng.range_f32(0.05, 1.0);
+        let l21 = rng.range_f32(-0.5, 0.5);
+        let l22 = rng.range_f32(0.05, 1.0);
+        Sym2 {
+            a: l11 * l11,
+            b: l11 * l21,
+            c: l21 * l21 + l22 * l22,
+        }
+    }
+
+    fn tile() -> Rect {
+        Rect { x0: 32.0, y0: 48.0, x1: 48.0, y1: 64.0 }
+    }
+
+    #[test]
+    fn quadrants_tile_the_rect_in_subtile_order() {
+        let p = TilePyramid::new(&tile(), 16);
+        // [TL, TR, BL, BR]: same order as CatEngine's sy/sx sweep.
+        assert_eq!(p.quads[0], Rect { x0: 32.0, y0: 48.0, x1: 40.0, y1: 56.0 });
+        assert_eq!(p.quads[1], Rect { x0: 40.0, y0: 48.0, x1: 48.0, y1: 56.0 });
+        assert_eq!(p.quads[2], Rect { x0: 32.0, y0: 56.0, x1: 40.0, y1: 64.0 });
+        assert_eq!(p.quads[3], Rect { x0: 40.0, y0: 56.0, x1: 48.0, y1: 64.0 });
+        assert_eq!(p.live, 0xF);
+        // Mini-tile bits: disjoint, and together the full 4×4 grid.
+        let mut seen = 0u32;
+        for q in 0..4 {
+            assert_eq!(seen & p.quad_masks[q], 0, "overlapping quadrant bits");
+            seen |= p.quad_masks[q];
+            assert_eq!(p.quad_masks[q].count_ones(), 4);
+        }
+        assert_eq!(seen, 0xFFFF);
+        assert_eq!(p.minitile_mask(0xF), 0xFFFF);
+        assert_eq!(p.minitile_mask(0b0001), p.quad_masks[0]);
+        // TL quadrant = mini-tile rows 0–1 × cols 0–1.
+        assert_eq!(p.quad_masks[0], 0b0000_0000_0011_0011);
+    }
+
+    #[test]
+    fn rejection_is_conservative_at_pixel_centers() {
+        // A rejected rect (tile or quadrant) must have every pixel-center
+        // alpha strictly below the threshold — the losslessness invariant.
+        let mut rng = Pcg32::new(91);
+        let t = tile();
+        let cfg = GateConfig::on();
+        let p = TilePyramid::new(&t, 16);
+        let mut tile_rejects = 0;
+        let mut quad_rejects = 0;
+        for _ in 0..2000 {
+            let s = splat(
+                rng.range_f32(0.0, 80.0),
+                rng.range_f32(16.0, 96.0),
+                random_conic(&mut rng),
+                rng.range_f32(0.001, 1.0),
+            );
+            let d = p.gate(&s, &cfg);
+            let check_rect = |r: &Rect| {
+                let mut py = r.y0 + 0.5;
+                while py < r.y1 {
+                    let mut px = r.x0 + 0.5;
+                    while px < r.x1 {
+                        assert!(
+                            s.alpha_at(px, py) < ALPHA_MIN,
+                            "rejected rect contains visible pixel ({px},{py})"
+                        );
+                        px += 1.0;
+                    }
+                    py += 1.0;
+                }
+            };
+            if d.tile_rejected {
+                tile_rejects += 1;
+                check_rect(&t);
+                continue;
+            }
+            for q in 0..4 {
+                if d.quad_mask & (1 << q) == 0 {
+                    quad_rejects += 1;
+                    check_rect(&p.quads[q]);
+                }
+            }
+        }
+        assert!(tile_rejects > 100, "gate never fired at tile level: {tile_rejects}");
+        assert!(quad_rejects > 100, "gate never fired at quadrant level: {quad_rejects}");
+    }
+
+    #[test]
+    fn tile_pass_keeps_at_least_one_quadrant_for_interior_means() {
+        // min over the tile == min over some quadrant, so a splat whose
+        // mean lies inside the tile (minE = 0) and passes level 1 must
+        // keep the quadrant containing the mean.
+        let mut rng = Pcg32::new(92);
+        let t = tile();
+        let cfg = GateConfig::on();
+        let p = TilePyramid::new(&t, 16);
+        for _ in 0..500 {
+            let s = splat(
+                rng.range_f32(t.x0, t.x1),
+                rng.range_f32(t.y0, t.y1),
+                random_conic(&mut rng),
+                rng.range_f32(0.01, 1.0),
+            );
+            let d = p.gate(&s, &cfg);
+            if !d.tile_rejected {
+                assert_ne!(d.quad_mask, 0, "tile passed but every quadrant rejected");
+            }
+        }
+    }
+
+    #[test]
+    fn sub_threshold_opacity_rejects_everywhere() {
+        // o < threshold ⇒ max alpha = o < threshold even at the mean.
+        let p = TilePyramid::new(&tile(), 16);
+        let s = splat(40.0, 56.0, Sym2 { a: 0.5, b: 0.0, c: 0.5 }, 0.5 / 255.0);
+        assert!(p.rejects_tile(&s, &GateConfig::on()));
+        assert!(p.gate(&s, &GateConfig::on()).tile_rejected);
+    }
+
+    #[test]
+    fn levels_one_skips_quadrant_tests() {
+        let p = TilePyramid::new(&tile(), 16);
+        let cfg = GateConfig { levels: 1, ..GateConfig::on() };
+        // Far-off splat: tile-level reject still fires.
+        let far = splat(500.0, 500.0, Sym2 { a: 0.5, b: 0.0, c: 0.5 }, 0.9);
+        assert!(p.gate(&far, &cfg).tile_rejected);
+        // Passing splat: all live quadrants survive untested.
+        let near = splat(40.0, 56.0, Sym2 { a: 0.5, b: 0.0, c: 0.5 }, 0.9);
+        let d = p.gate(&near, &cfg);
+        assert_eq!(d.quad_mask, 0xF);
+        assert_eq!(d.quads_tested, 0);
+        assert_eq!(d.quads_rejected, 0);
+    }
+
+    #[test]
+    fn higher_threshold_rejects_more() {
+        let p = TilePyramid::new(&tile(), 16);
+        // Mean two pixels outside the tile edge: peak in-tile alpha ≈ 0.009.
+        let s = splat(30.0, 56.0, Sym2 { a: 1.2, b: 0.0, c: 1.2 }, 0.1);
+        let lossless = GateConfig::on();
+        let lossy = GateConfig { threshold: 16.0 / 255.0, ..GateConfig::on() };
+        assert!(!p.rejects_tile(&s, &lossless));
+        assert!(p.rejects_tile(&s, &lossy));
+    }
+
+    #[test]
+    fn inactive_configs() {
+        let off = GateConfig::default();
+        assert!(!off.active());
+        assert!(!GateConfig { levels: 0, ..GateConfig::on() }.active());
+        assert!(GateConfig::on().active());
+    }
+
+    #[test]
+    fn edge_sized_tiles_have_degenerate_quadrants() {
+        // A 4-px tile has one mini-tile column: everything lands in TL and
+        // the other quadrants are dead.
+        let r = Rect { x0: 0.0, y0: 0.0, x1: 4.0, y1: 4.0 };
+        let p = TilePyramid::new(&r, 4);
+        assert_eq!(p.live, 0b0001);
+        assert_eq!(p.quad_masks[0], 0b1);
+        assert_eq!(p.minitile_mask(0xF), 0b1);
+        let s = splat(2.0, 2.0, Sym2 { a: 0.5, b: 0.0, c: 0.5 }, 0.9);
+        let d = p.gate(&s, &GateConfig::on());
+        assert!(!d.tile_rejected);
+        assert_eq!(d.quad_mask, 0b0001);
+    }
+}

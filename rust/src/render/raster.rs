@@ -28,6 +28,7 @@
 use super::image::Image;
 use super::plan::FramePlan;
 use super::project::Splat;
+use super::pyramid::GateConfig;
 use super::tile::{Rect, Strategy};
 use crate::camera::Camera;
 use crate::scene::gaussian::Scene;
@@ -58,6 +59,12 @@ pub struct RenderOptions {
     /// pixels are identical for every setting (bit-identical under the
     /// stub-interpreted artifacts, enforced in CI).
     pub batch: usize,
+    /// Coarse-to-fine contribution gate (`render::pyramid`): whole-tile
+    /// and quadrant rejection ahead of the CAT leader tests and the
+    /// per-pixel loop. Off by default; at the default threshold (1/255)
+    /// enabling it is lossless — bit-identical images with fewer
+    /// submitted splats.
+    pub gate: GateConfig,
 }
 
 impl Default for RenderOptions {
@@ -69,6 +76,7 @@ impl Default for RenderOptions {
             background: [0.0, 0.0, 0.0],
             workers: 1,
             batch: 0,
+            gate: GateConfig::default(),
         }
     }
 }
@@ -88,6 +96,23 @@ pub struct RenderStats {
     pub pixels: u64,
     /// Tiles whose loop ended early on full opacity.
     pub tiles_early_terminated: usize,
+    /// (tile, splat) list entries that reached the fine pipeline — i.e.
+    /// survived the coarse gate. Equals `tile_pairs` when gating is off
+    /// (minus any list tail skipped by early-terminated tiles); the gating
+    /// benches track the cut in this number.
+    pub splats_submitted: u64,
+    /// (tile, splat) pairs offered to the level-1 (whole-tile) gate.
+    /// At most `tile_pairs`: a tile that saturates to full opacity stops
+    /// consuming its list, gate included.
+    pub gate_tile_tested: u64,
+    /// Pairs the level-1 gate rejected. The invariant `splats_submitted +
+    /// gate_tile_rejected == gate_tile_tested` always holds when the gate
+    /// ran (with equality to `tile_pairs` when no tile early-terminated).
+    pub gate_tile_rejected: u64,
+    /// (quadrant, splat) pairs offered to the level-2 gate.
+    pub gate_quad_tested: u64,
+    /// Quadrant pairs the level-2 gate rejected.
+    pub gate_quad_rejected: u64,
 }
 
 impl RenderStats {
@@ -101,6 +126,19 @@ impl RenderStats {
         self.pairs_blended as f64 / self.pixels.max(1) as f64
     }
 
+    /// Fraction of (tile, splat) pairs removed by the whole-tile gate
+    /// (level 1) — the coarse analog of [`crate::cat::CatStats`]'s
+    /// `stage1_reject_rate`.
+    pub fn gate_tile_reject_rate(&self) -> f64 {
+        self.gate_tile_rejected as f64 / self.gate_tile_tested.max(1) as f64
+    }
+
+    /// Fraction of (quadrant, splat) pairs removed by the quadrant gate
+    /// (level 2), among pairs that survived level 1.
+    pub fn gate_quad_reject_rate(&self) -> f64 {
+        self.gate_quad_rejected as f64 / self.gate_quad_tested.max(1) as f64
+    }
+
     /// Fold another tile's counters into this one. Integer sums are
     /// order-independent, so parallel tile stats match sequential exactly.
     pub fn absorb(&mut self, other: &RenderStats) {
@@ -110,6 +148,11 @@ impl RenderStats {
         self.pairs_blended += other.pairs_blended;
         self.pixels += other.pixels;
         self.tiles_early_terminated += other.tiles_early_terminated;
+        self.splats_submitted += other.splats_submitted;
+        self.gate_tile_tested += other.gate_tile_tested;
+        self.gate_tile_rejected += other.gate_tile_rejected;
+        self.gate_quad_tested += other.gate_quad_tested;
+        self.gate_quad_rejected += other.gate_quad_rejected;
     }
 }
 
@@ -120,6 +163,17 @@ impl RenderStats {
 pub trait MaskProvider {
     /// Mini-tile bits for `splat` within `tile` (1 = process).
     fn mask(&mut self, tile: &Rect, splat: &Splat) -> u32;
+
+    /// Like [`MaskProvider::mask`], with the coarse gate's surviving
+    /// quadrants as a hint (bit `q = row·2 + col`, [TL, TR, BL, BR] —
+    /// `render::pyramid`'s order). Providers that test per sub-tile (the
+    /// CAT engine) skip the dead quadrants' work; the default ignores the
+    /// hint. Callers AND the result with the surviving quadrants'
+    /// mini-tile bits, so the hint can only remove work, never pixels.
+    fn mask_gated(&mut self, tile: &Rect, splat: &Splat, quad_live: u8) -> u32 {
+        let _ = quad_live;
+        self.mask(tile, splat)
+    }
 
     /// Number of mini-tile columns for a tile of `tile_size`.
     fn minitiles_per_row(&self, tile_size: u32) -> u32 {

@@ -12,6 +12,7 @@ use crate::camera::Camera;
 use crate::cat::{CatConfig, CatEngine};
 use crate::render::plan::FramePlan;
 use crate::render::project::{Splat, ALPHA_MIN};
+use crate::render::pyramid::TilePyramid;
 use crate::render::raster::{RenderOptions, MINITILE};
 use crate::render::tile::{intersects_aabb, intersects_obb, Rect, Strategy};
 use crate::scene::gaussian::Scene;
@@ -71,6 +72,15 @@ pub struct FrameWorkload {
     pub sparse_jobs: u64,
     /// Per-pixel blends actually performed (energy model).
     pub blended_pairs: u64,
+    /// (tile, splat) pairs surviving the plan's coarse gate
+    /// (`render::pyramid`); equals `tile_pairs` when the gate is off.
+    pub splats_submitted: u64,
+    /// Pairs the whole-tile gate removed — they never generate sub-tile
+    /// (Stage 1 / CTU / VRU) traffic downstream.
+    pub gate_tile_rejected: u64,
+    /// (quadrant, splat) pairs the level-2 gate removed; their sub-tiles
+    /// are skipped before Stage 1.
+    pub gate_quad_rejected: u64,
     /// Frame width (pixels).
     pub width: u32,
     /// Frame height (pixels).
@@ -158,13 +168,43 @@ pub fn extract_from_plan(scene: &Scene, plan: &FramePlan, hw: &HwConfig) -> Fram
 
     for (t, list) in lists.iter().enumerate() {
         let rect = grid.rect(t);
+        // The plan's coarse gate, when on, removes (tile, splat) and
+        // (quadrant, splat) pairs before any sub-tile traffic — the cycle
+        // and DRAM/energy models then see the reduced streams, matching
+        // what the gated rasterizer executes.
+        let pyramid = if plan.opts.gate.active() {
+            Some(TilePyramid::new(&rect, grid.tile))
+        } else {
+            None
+        };
         let mut tile = TileWork::default();
         trans = [[1.0f32; 16]; 16];
         done = [false; 16];
 
         for &si in list {
             let s = &splats[si as usize];
+            let quad_live = match &pyramid {
+                Some(pyr) => {
+                    let d = pyr.gate(s, &plan.opts.gate);
+                    if d.tile_rejected {
+                        wl.gate_tile_rejected += 1;
+                        continue;
+                    }
+                    wl.splats_submitted += 1;
+                    wl.gate_quad_rejected += d.quads_rejected as u64;
+                    d.quad_mask
+                }
+                None => {
+                    wl.splats_submitted += 1;
+                    0xF
+                }
+            };
             for (sub_idx, sub) in subtile_rects(&rect).iter().enumerate() {
+                // Gate level 2: dead quadrants produce no Stage-1 pairs
+                // (sub-tile index == quadrant bit, both [TL, TR, BL, BR]).
+                if quad_live & (1 << sub_idx) == 0 {
+                    continue;
+                }
                 wl.stage1_pairs += 1;
                 let pass1 = match hw.subtile_test {
                     SubtileTest::None => true,
@@ -340,6 +380,39 @@ mod tests {
         );
         assert_eq!(base.minitile_pairs, fell_back.minitile_pairs);
         assert_eq!(base.tile_pairs, fell_back.tile_pairs);
+    }
+
+    #[test]
+    fn gated_plan_extraction_cuts_subtile_traffic() {
+        use crate::render::pyramid::GateConfig;
+        let s = scene();
+        let c = cam();
+        let hw = HwConfig::flicker32();
+        let plan_off = FramePlan::build(&s, &c, &RenderOptions::default());
+        let off = extract_from_plan(&s, &plan_off, &hw);
+        let plan_on = FramePlan::build(
+            &s,
+            &c,
+            &RenderOptions {
+                gate: GateConfig::on(),
+                ..RenderOptions::default()
+            },
+        );
+        let on = extract_from_plan(&s, &plan_on, &hw);
+        // Same upstream visibility and binning.
+        assert_eq!(off.visible_splats, on.visible_splats);
+        assert_eq!(off.tile_pairs, on.tile_pairs);
+        // Ungated: everything is submitted, gate counters stay zero.
+        assert_eq!(off.splats_submitted, off.tile_pairs as u64);
+        assert_eq!(off.gate_tile_rejected, 0);
+        assert_eq!(off.gate_quad_rejected, 0);
+        // Gated: every pair is either submitted or tile-rejected, the
+        // sub-tile streams shrink, and (lossless threshold) blends don't.
+        assert_eq!(on.splats_submitted + on.gate_tile_rejected, on.tile_pairs as u64);
+        assert!(on.gate_tile_rejected > 0, "gate never fired");
+        assert!(on.stage1_pairs < off.stage1_pairs);
+        assert!(on.minitile_pairs <= off.minitile_pairs);
+        assert_eq!(on.blended_pairs, off.blended_pairs, "default gate must be lossless");
     }
 
     #[test]

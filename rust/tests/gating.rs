@@ -1,0 +1,272 @@
+//! The coarse-to-fine gating contract (paper §"hierarchical Gaussian
+//! testing"):
+//!
+//! 1. **Off is really off.** `GateConfig { enabled: false }` renders
+//!    bit-identically to the pre-gate pipeline and leaves every gate
+//!    counter at zero — the gate is a pure opt-in.
+//! 2. **The default threshold is lossless.** At the 1/255 blend floor the
+//!    gate rejects exactly the Gaussian×tile / Gaussian×quadrant pairs the
+//!    fine loop would have skipped pixel-by-pixel, so the gated image (and
+//!    `pairs_blended`) is bitwise identical to the ungated one — for the
+//!    vanilla rasterizer, for CAT masks, and for every worker count.
+//! 3. **Counters add up.** `splats_submitted + gate_tile_rejected ==
+//!    tile_pairs`, quadrant counters only move when level 2 runs, and all
+//!    of it is worker- and batch-invariant.
+//! 4. **The cut is real.** On the synthetic orbit scenes the lossless
+//!    default removes ≥30% of submitted pairs (the acceptance bar for this
+//!    stage of the paper's hierarchy) at PSNR > 30 dB vs golden — in fact
+//!    identical pixels.
+
+use flicker::camera::{orbit_path, Camera, Intrinsics};
+use flicker::cat::{CatConfig, LeaderMode, Precision};
+use flicker::config::ExperimentConfig;
+use flicker::coordinator::{Golden, Session};
+use flicker::numeric::linalg::v3;
+use flicker::render::metrics::psnr;
+use flicker::render::plan::FramePlan;
+use flicker::render::project::ALPHA_MIN;
+use flicker::render::pyramid::GateConfig;
+use flicker::render::raster::{RenderOptions, VanillaMasks};
+use flicker::scene::gaussian::Scene;
+use flicker::scene::synthetic::{generate_scaled, preset};
+
+fn scene_and_orbit(name: &str, frames: usize) -> (Scene, Vec<Camera>) {
+    let scene = generate_scaled(&preset(name), 0.01);
+    let cams = orbit_path(
+        Intrinsics::from_fov(96, 96, 1.2),
+        v3(0.0, 0.5, 0.0),
+        12.0,
+        3.0,
+        frames,
+    );
+    (scene, cams)
+}
+
+fn gate_opts(gate: GateConfig, workers: usize) -> RenderOptions {
+    RenderOptions {
+        gate,
+        workers,
+        ..RenderOptions::default()
+    }
+}
+
+#[test]
+fn gate_off_matches_default_bitwise() {
+    let (scene, cams) = scene_and_orbit("garden", 1);
+    let base = FramePlan::build(&scene, &cams[0], &RenderOptions::default())
+        .render(&VanillaMasks, None);
+    let off = GateConfig {
+        enabled: false,
+        levels: 2,
+        threshold: ALPHA_MIN,
+    };
+    let explicit =
+        FramePlan::build(&scene, &cams[0], &gate_opts(off, 1)).render(&VanillaMasks, None);
+    assert_eq!(base.image.data, explicit.image.data);
+    assert_eq!(base.stats.pairs_tested, explicit.stats.pairs_tested);
+    assert_eq!(base.stats.pairs_blended, explicit.stats.pairs_blended);
+    // Off leaves the gate counters untouched: everything processed is
+    // "submitted" (early-terminated tiles may skip their list tails).
+    assert_eq!(base.stats.splats_submitted, explicit.stats.splats_submitted);
+    for s in [&base.stats, &explicit.stats] {
+        assert_eq!(s.gate_tile_tested, 0);
+        assert_eq!(s.gate_tile_rejected, 0);
+        assert_eq!(s.gate_quad_tested, 0);
+        assert_eq!(s.gate_quad_rejected, 0);
+        assert!(s.splats_submitted <= s.tile_pairs as u64);
+    }
+}
+
+#[test]
+fn lossless_gate_is_bitwise_identical_for_vanilla_and_cat() {
+    let (scene, cams) = scene_and_orbit("truck", 1);
+    let base_opts = RenderOptions::default();
+    let base = FramePlan::build(&scene, &cams[0], &base_opts).render(&VanillaMasks, None);
+    let cat_cfg = CatConfig {
+        mode: LeaderMode::SmoothFocused,
+        precision: Precision::Mixed,
+        stage1: true,
+    };
+    let base_cat = FramePlan::build(&scene, &cams[0], &base_opts).render(&cat_cfg, None);
+
+    for levels in [1u32, 2] {
+        let gate = GateConfig {
+            enabled: true,
+            levels,
+            threshold: ALPHA_MIN,
+        };
+        let plan = FramePlan::build(&scene, &cams[0], &gate_opts(gate, 1));
+        let gated = plan.render(&VanillaMasks, None);
+        assert_eq!(base.image.data, gated.image.data, "levels={levels}");
+        assert_eq!(base.stats.pairs_blended, gated.stats.pairs_blended, "levels={levels}");
+        // The gate can only remove per-pixel tests, never add them.
+        assert!(gated.stats.pairs_tested <= base.stats.pairs_tested);
+
+        let gated_cat = plan.render(&cat_cfg, None);
+        assert_eq!(base_cat.image.data, gated_cat.image.data, "cat levels={levels}");
+        assert_eq!(
+            base_cat.stats.pairs_blended, gated_cat.stats.pairs_blended,
+            "cat levels={levels}"
+        );
+    }
+}
+
+#[test]
+fn gated_render_is_worker_invariant() {
+    let (scene, cams) = scene_and_orbit("garden", 1);
+    let gate = GateConfig::on();
+    let seq = FramePlan::build(&scene, &cams[0], &gate_opts(gate, 1)).render(&VanillaMasks, None);
+    for workers in [2usize, 8, 0] {
+        let par =
+            FramePlan::build(&scene, &cams[0], &gate_opts(gate, workers)).render(&VanillaMasks, None);
+        assert_eq!(seq.image.data, par.image.data, "workers={workers}");
+        assert_eq!(seq.stats.splats_submitted, par.stats.splats_submitted, "workers={workers}");
+        assert_eq!(
+            seq.stats.gate_tile_rejected, par.stats.gate_tile_rejected,
+            "workers={workers}"
+        );
+        assert_eq!(
+            seq.stats.gate_quad_rejected, par.stats.gate_quad_rejected,
+            "workers={workers}"
+        );
+    }
+}
+
+#[test]
+fn gate_counters_sum_consistently() {
+    let (scene, cams) = scene_and_orbit("truck", 1);
+    for levels in [1u32, 2] {
+        let gate = GateConfig {
+            enabled: true,
+            levels,
+            threshold: ALPHA_MIN,
+        };
+        let out =
+            FramePlan::build(&scene, &cams[0], &gate_opts(gate, 1)).render(&VanillaMasks, None);
+        let s = &out.stats;
+        assert!(s.gate_tile_tested <= s.tile_pairs as u64, "levels={levels}");
+        assert!(s.gate_tile_tested > 0, "levels={levels}");
+        assert_eq!(
+            s.splats_submitted + s.gate_tile_rejected,
+            s.gate_tile_tested,
+            "levels={levels}"
+        );
+        assert!(s.gate_tile_rejected > 0, "levels={levels}: tile gate never fired");
+        if levels == 1 {
+            assert_eq!(s.gate_quad_tested, 0);
+            assert_eq!(s.gate_quad_rejected, 0);
+        } else {
+            // Level 2 only sees survivors of level 1: at most 4 quadrant
+            // tests per submitted pair.
+            assert!(s.gate_quad_tested > 0);
+            assert!(s.gate_quad_tested <= 4 * s.splats_submitted);
+            assert!(s.gate_quad_rejected <= s.gate_quad_tested);
+        }
+    }
+}
+
+/// The acceptance bar: at the lossless default threshold the gate removes
+/// at least 30% of Gaussian×tile submissions on the synthetic orbit
+/// scenes while the rendered orbit stays above 30 dB vs golden (identical
+/// pixels give infinite PSNR, which passes).
+#[test]
+fn default_gate_cuts_submitted_work_on_orbit_scenes() {
+    for name in ["garden", "truck"] {
+        let base = Session::builder(ExperimentConfig {
+            scene: name.into(),
+            scene_scale: 0.01,
+            resolution: 96,
+            frames: 3,
+            ..Default::default()
+        })
+        .build()
+        .unwrap();
+        let gated = Session::builder(ExperimentConfig {
+            scene: name.into(),
+            scene_scale: 0.01,
+            resolution: 96,
+            frames: 3,
+            gate: Some(true),
+            ..Default::default()
+        })
+        .build()
+        .unwrap();
+        let (mut submitted_off, mut submitted_on) = (0u64, 0u64);
+        for i in 0..3 {
+            let a = base.frame(i, &Golden).unwrap();
+            let b = gated.frame(i, &Golden).unwrap();
+            let q = psnr(&a.image, &b.image);
+            assert!(q > 30.0, "{name} view {i}: gated PSNR {q}");
+            submitted_off += a.stats.splats_submitted;
+            submitted_on += b.stats.splats_submitted;
+        }
+        let cut = 1.0 - submitted_on as f64 / submitted_off.max(1) as f64;
+        assert!(
+            cut >= 0.30,
+            "{name}: gate cut only {:.1}% of submissions ({submitted_off} → {submitted_on})",
+            cut * 100.0
+        );
+    }
+}
+
+/// The PJRT path drops whole-tile rejects from the dispatch lists
+/// (`FramePlan::gated_lists`); because the device kernel zeroes α < 1/255
+/// itself, the gated stream must stay bit-identical to the ungated one for
+/// every batch width. Stub-backed, so it runs in the default `--features
+/// pjrt` CI lane.
+#[cfg(feature = "pjrt")]
+mod pjrt_gating {
+    use super::*;
+    use flicker::coordinator::Pjrt;
+    use flicker::runtime::{write_stub_artifacts, Runtime};
+
+    fn stub_runtime() -> Option<Runtime> {
+        let dir = std::env::temp_dir().join("flicker_gating_stub");
+        write_stub_artifacts(&dir, 48, 16, 16, 8).unwrap();
+        match Runtime::load(&dir) {
+            Ok(rt) => Some(rt),
+            Err(e) => {
+                eprintln!("skipping: stub runtime unavailable ({e})");
+                None
+            }
+        }
+    }
+
+    fn cfg(gate: bool, batch: usize) -> ExperimentConfig {
+        ExperimentConfig {
+            scene: "truck".into(),
+            scene_scale: 0.01,
+            resolution: 64,
+            frames: 2,
+            batch,
+            gate: Some(gate),
+            ..Default::default()
+        }
+    }
+
+    #[test]
+    fn gated_pjrt_is_lossless_and_batch_invariant() {
+        let Some(rt) = stub_runtime() else { return };
+        let pjrt = Pjrt::new(&rt);
+
+        let base = Session::builder(cfg(false, 1)).build().unwrap();
+        let reference: Vec<_> =
+            (0..base.num_frames()).map(|i| base.frame(i, &pjrt).unwrap()).collect();
+
+        for batch in [1usize, 2, 8] {
+            let s = Session::builder(cfg(true, batch)).build().unwrap();
+            for (i, r) in reference.iter().enumerate() {
+                let g = s.frame(i, &pjrt).unwrap();
+                assert_eq!(r.image.data, g.image.data, "batch={batch} view={i}");
+                // The gate shrank the dispatched lists…
+                assert!(g.stats.gate_tile_rejected > 0, "batch={batch} view={i}");
+                assert_eq!(
+                    g.stats.splats_submitted + g.stats.gate_tile_rejected,
+                    g.stats.tile_pairs as u64
+                );
+                // …while the ungated reference submitted everything.
+                assert_eq!(r.stats.splats_submitted, r.stats.tile_pairs as u64);
+            }
+        }
+    }
+}

@@ -499,3 +499,56 @@ mod pjrt_batched {
         );
     }
 }
+
+#[test]
+fn prop_gate_rejection_is_conservative() {
+    // The coarse-to-fine gate may only drop pairs the fine loop would have
+    // skipped anyway: whenever the pyramid rejects a tile (or clears a
+    // quadrant), every pixel center in that region must sit below the
+    // 1/255 blend floor.
+    use flicker::render::project::{Splat, ALPHA_MIN};
+    use flicker::render::pyramid::{GateConfig, TilePyramid};
+    check(
+        "coarse gate never rejects a contributing pair",
+        PropConfig::default(),
+        |rng, size| {
+            let spread = 8.0 + size * 48.0;
+            let mean = v2(
+                rng.range_f32(24.0 - spread, 24.0 + spread),
+                rng.range_f32(24.0 - spread, 24.0 + spread),
+            );
+            (mean, random_conic(rng), rng.range_f32(0.005, 1.0))
+        },
+        |&(mean, conic, opacity)| {
+            let s = Splat {
+                id: 0,
+                mean,
+                cov: Sym2 { a: 1.0, b: 0.0, c: 1.0 },
+                conic,
+                depth: 1.0,
+                opacity,
+                color: [1.0; 3],
+                radius: 10.0,
+                axis_ratio: 1.0,
+            };
+            let rect = Rect { x0: 16.0, y0: 16.0, x1: 32.0, y1: 32.0 };
+            let pyr = TilePyramid::new(&rect, 16);
+            let d = pyr.gate(&s, &GateConfig::on());
+            for py in 16u32..32 {
+                for px in 16u32..32 {
+                    let q = (py >= 24) as u8 * 2 + (px >= 24) as u8;
+                    let dead = d.tile_rejected || d.quad_mask & (1 << q) == 0;
+                    if !dead {
+                        continue;
+                    }
+                    let a = s.alpha_at(px as f32 + 0.5, py as f32 + 0.5);
+                    ensure(
+                        a < ALPHA_MIN,
+                        format!("gated-out pair contributes alpha={a} at ({px},{py})"),
+                    )?;
+                }
+            }
+            Ok(())
+        },
+    );
+}

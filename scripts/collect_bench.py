@@ -1,0 +1,51 @@
+#!/usr/bin/env python3
+"""Merge bench JSON sidecars into one commit-stamped BENCH_6.json.
+
+The bench-record CI lane (push-to-main only) runs the hotpath and
+fig11_gating benches in quick mode, then calls this script to fold their
+`rust/target/bench-reports/*.json` sidecars into a single artifact that
+starts the repo's perf trajectory: plan build/reuse timings, PJRT
+single-vs-batched dispatch, and the coarse-to-fine gating rows
+(splats_submitted, per-level reject counts, gating on/off).
+
+Stdlib only — the CI image must not need pip installs.
+"""
+
+import json
+import os
+import sys
+
+REPORTS = ["hotpath", "fig11_gating"]
+
+
+def main():
+    out_path = sys.argv[1] if len(sys.argv) > 1 else "BENCH_6.json"
+    report_dir = os.environ.get(
+        "FLICKER_BENCH_REPORTS", os.path.join("rust", "target", "bench-reports")
+    )
+    merged = {"commit": os.environ.get("GITHUB_SHA", "local"), "reports": {}}
+    missing = []
+    for rid in REPORTS:
+        path = os.path.join(report_dir, rid + ".json")
+        if not os.path.exists(path):
+            missing.append(path)
+            continue
+        with open(path) as f:
+            merged["reports"][rid] = json.load(f)
+    if missing:
+        sys.exit(
+            "missing bench reports: %s (run `make bench-record` first)"
+            % ", ".join(missing)
+        )
+    with open(out_path, "w") as f:
+        json.dump(merged, f, indent=2)
+        f.write("\n")
+    rows = sum(len(r.get("results", [])) for r in merged["reports"].values())
+    print(
+        "wrote %s: %d rows from %d reports @ %s"
+        % (out_path, rows, len(REPORTS), merged["commit"][:12])
+    )
+
+
+if __name__ == "__main__":
+    main()
