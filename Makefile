@@ -28,18 +28,21 @@ bench-smoke:
 
 # Record the perf trajectory (CI: bench-record lane, push-to-main only):
 # run hotpath (with the pjrt feature so the exec_tile_single/batched rows
-# land, stub-backed) and the gating bench in quick mode, then merge their
-# JSON sidecars into a commit-stamped BENCH_6.json.
+# land, stub-backed), the gating bench, and the temporal plan-delta bench
+# in quick mode, then merge their JSON sidecars into a commit-stamped
+# BENCH_7.json.
 bench-record:
 	$(CARGO) bench --features pjrt --bench hotpath -- --quick
 	$(CARGO) bench --bench fig11_gating -- --quick
-	$(PYTHON) scripts/collect_bench.py BENCH_6.json
+	$(CARGO) bench --bench fig12_temporal -- --quick
+	$(PYTHON) scripts/collect_bench.py BENCH_7.json
 
 # Heavier property coverage (CI: prop-heavy lane): 512 generated cases per
-# property across the property suite and the PJRT roundtrip tests, running
-# against the offline stub runtime.
+# property across the property suite (including the temporal plan-delta
+# chain/motion-bound properties), the plan-delta differential harness, and
+# the PJRT roundtrip tests, running against the offline stub runtime.
 prop-heavy:
-	FLICKER_PROP_CASES=512 $(CARGO) test -q --features pjrt --test properties --test pjrt_roundtrip
+	FLICKER_PROP_CASES=512 $(CARGO) test -q --features pjrt --test properties --test plan_delta --test pjrt_roundtrip
 
 # Run the Session-API showcase examples end-to-end (CI: examples lane) so
 # the quickstart code in README/examples can't bitrot.

@@ -7,7 +7,7 @@
 //! threshold` trades PSNR for extra culling.
 //!
 //! Emitted as `target/bench-reports/fig11_gating.json`; the `bench-record`
-//! CI lane merges it with `hotpath.json` into `BENCH_6.json`.
+//! CI lane merges it with the other reports into `BENCH_7.json`.
 
 mod common;
 

@@ -1,0 +1,100 @@
+//! Temporal plan-delta bench (paper §"frame-to-frame coherence"):
+//! amortized frame-preparation cost vs orbit step size. For each orbit
+//! granularity the bench times cold `FramePlan::build` per view against
+//! chained `FramePlan::advance`, and records the reuse accounting behind
+//! the ratio — how many splats changed tiles, how many tiles were patched,
+//! how many (tile, splat) entries were carried. Coarse orbits (steps past
+//! `DeltaConfig::max_angle`) show the fallback regime: `advance` degrades
+//! to a cold build and the ratio goes to ~1.
+//!
+//! Emitted as `target/bench-reports/fig12_temporal.json`; the
+//! `bench-record` CI lane merges it with the other reports into
+//! `BENCH_7.json`.
+
+mod common;
+
+use flicker::render::delta::DeltaConfig;
+use flicker::render::plan::FramePlan;
+use flicker::render::raster::{RenderOptions, VanillaMasks};
+use flicker::util::bench::{black_box, quick_mode, Bencher};
+
+fn main() {
+    let res = common::bench_resolution();
+    let scene = common::bench_scene("garden");
+    let opts = RenderOptions {
+        plan_delta: DeltaConfig::on(),
+        ..RenderOptions::default()
+    };
+    // Views advanced per timed iteration: enough to amortize, small enough
+    // that the coarse-orbit (cold-fallback) rows stay cheap.
+    let window = if quick_mode() { 3 } else { 6 };
+    let mut b = Bencher::new("fig12_temporal");
+
+    for frames in [8usize, 16, 32, 64] {
+        let cams = common::bench_orbit(res, frames);
+        let step = std::f32::consts::TAU / frames as f32;
+        b.record(&format!("orbit{frames}/step_rad"), step as f64);
+
+        let base = FramePlan::build(&scene, &cams[0], &opts);
+        let cold_p50 = b
+            .bench(&format!("orbit{frames}/plan_cold"), || {
+                for cam in cams.iter().skip(1).take(window) {
+                    black_box(FramePlan::build(&scene, cam, &opts));
+                }
+            })
+            .summary
+            .p50;
+        let delta_p50 = b
+            .bench(&format!("orbit{frames}/plan_delta"), || {
+                let mut plan = base.advance(&scene, &cams[1], &opts);
+                for cam in cams.iter().skip(2).take(window - 1) {
+                    plan = plan.advance(&scene, cam, &opts);
+                }
+                black_box(plan);
+            })
+            .summary
+            .p50;
+        b.record(
+            &format!("orbit{frames}/amortized_ratio"),
+            delta_p50 / cold_p50.max(1e-12),
+        );
+
+        // Reuse accounting for one representative step, plus the pixels
+        // check every row of this figure rests on: delta == cold, bitwise.
+        let out = base.advance_detailed(&scene, &cams[1], &opts);
+        b.record(
+            &format!("orbit{frames}/fell_back"),
+            out.stats.fell_back as u8 as f64,
+        );
+        if !out.stats.fell_back {
+            let total = out.plan.splats.len().max(1);
+            b.record(
+                &format!("orbit{frames}/rebinned_frac"),
+                out.stats.splats_reprojected as f64 / total as f64,
+            );
+            b.record(
+                &format!("orbit{frames}/entries_carried"),
+                out.stats.entries_carried as f64,
+            );
+            b.record(
+                &format!("orbit{frames}/tiles_patched"),
+                out.stats.tiles_patched as f64,
+            );
+            b.record(
+                &format!("orbit{frames}/sort_fallbacks"),
+                out.stats.sort_fallbacks as f64,
+            );
+        }
+        let cold = FramePlan::build(&scene, &cams[1], &opts);
+        let (a, c) = (
+            out.plan.render(&VanillaMasks, None),
+            cold.render(&VanillaMasks, None),
+        );
+        assert_eq!(
+            a.image.data, c.image.data,
+            "orbit{frames}: delta plan must render bit-identically"
+        );
+    }
+
+    b.finish("temporal plan deltas: amortized plan cost vs orbit step");
+}

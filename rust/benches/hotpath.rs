@@ -9,6 +9,7 @@ use flicker::cat::{CatConfig, CatEngine, LeaderMode, Precision};
 use flicker::config::ExperimentConfig;
 use flicker::coordinator::{Golden, Session};
 use flicker::numeric::linalg::v3;
+use flicker::render::delta::DeltaConfig;
 use flicker::render::plan::FramePlan;
 use flicker::render::project::project_scene;
 use flicker::render::raster::{render, render_masked, RenderOptions, VanillaMasks};
@@ -62,13 +63,45 @@ fn main() {
     // re-rendered under many configs. `plan_build` is the amortized cost,
     // `plan_reuse` the steady-state per-render cost; plan_reuse must beat
     // raster_vanilla by roughly plan_build per call.
-    b.bench("plan_build", || {
-        black_box(FramePlan::build(&scene, &cam, &RenderOptions::default()));
-    });
+    let plan_build_p50 = b
+        .bench("plan_build", || {
+            black_box(FramePlan::build(&scene, &cam, &RenderOptions::default()));
+        })
+        .summary
+        .p50;
     let plan = FramePlan::build(&scene, &cam, &RenderOptions::default());
     b.bench("plan_reuse", || {
         black_box(plan.render(&VanillaMasks, None));
     });
+
+    // Temporal plan delta: advancing a cached plan one fine orbit step vs
+    // cold-building the next view. Both paths pay the full re-projection
+    // (bit-identity requires it); the delta saves tile binning and most of
+    // the depth sort. `plan_delta/cost_vs_build` records the amortized
+    // per-step ratio fig12_temporal sweeps across orbit step sizes.
+    let delta_opts = RenderOptions {
+        plan_delta: DeltaConfig::on(),
+        ..RenderOptions::default()
+    };
+    let fine_orbit = common::bench_orbit(res, 64); // ~0.1 rad per step
+    let prev = FramePlan::build(&scene, &fine_orbit[0], &delta_opts);
+    let plan_delta_p50 = b
+        .bench("plan_delta", || {
+            black_box(prev.advance(&scene, &fine_orbit[1], &delta_opts));
+        })
+        .summary
+        .p50;
+    b.bench("plan_delta_chain", || {
+        let mut p = prev.advance(&scene, &fine_orbit[1], &delta_opts);
+        for c in &fine_orbit[2..6] {
+            p = p.advance(&scene, c, &delta_opts);
+        }
+        black_box(p);
+    });
+    b.record(
+        "plan_delta/cost_vs_build",
+        plan_delta_p50 / plan_build_p50.max(1e-12),
+    );
 
     // Same cached-plan render with the coarse-to-fine gate on (lossless
     // default threshold): whole-tile rejects skip masking + the fine loop,

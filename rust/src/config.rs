@@ -63,6 +63,15 @@ pub struct ExperimentConfig {
     /// Gate alpha threshold override (default 1/255 = lossless; higher
     /// trades quality for a deeper cut).
     pub gate_threshold: Option<f32>,
+    /// Temporal plan-delta switch (`render::delta`): `Some(true)` lets the
+    /// session advance plans from already-built neighbor views instead of
+    /// cold-building, `Some(false)` forces it off, `None` keeps the
+    /// renderer default (off). Advanced plans are bitwise identical to
+    /// cold builds — this only changes preparation cost.
+    pub plan_delta: Option<bool>,
+    /// Largest pose step (radians) the delta path accepts before falling
+    /// back to a cold build (None = the renderer default, ~0.35).
+    pub plan_delta_angle: Option<f32>,
     /// RNG seed for synthetic scene generation.
     pub seed: u64,
 }
@@ -86,6 +95,8 @@ impl Default for ExperimentConfig {
             gate: None,
             gate_levels: None,
             gate_threshold: None,
+            plan_delta: None,
+            plan_delta_angle: None,
             seed: 0xF11C,
         }
     }
@@ -150,6 +161,15 @@ impl ExperimentConfig {
                 return Err(err!("gate_threshold must be in (0, 1] (got {t})"));
             }
             o.gate.threshold = t;
+        }
+        if let Some(pd) = self.plan_delta {
+            o.plan_delta.enabled = pd;
+        }
+        if let Some(a) = self.plan_delta_angle {
+            if !(a > 0.0 && a.is_finite()) {
+                return Err(err!("plan_delta_angle must be a positive angle in radians (got {a})"));
+            }
+            o.plan_delta.max_angle = a;
         }
         Ok(o)
     }
@@ -217,6 +237,17 @@ impl ExperimentConfig {
             cfg.gate_threshold =
                 Some(t.parse().map_err(|_| err!("--gate-threshold: bad number '{t}'"))?);
         }
+        if let Some(pd) = args.get("plan-delta") {
+            cfg.plan_delta = Some(match pd {
+                "on" | "true" | "1" => true,
+                "off" | "false" | "0" => false,
+                _ => return Err(err!("--plan-delta: expected on|off, got '{pd}'")),
+            });
+        }
+        if let Some(a) = args.get("plan-delta-angle") {
+            cfg.plan_delta_angle =
+                Some(a.parse().map_err(|_| err!("--plan-delta-angle: bad number '{a}'"))?);
+        }
         cfg.seed = args.u64_or("seed", cfg.seed)?;
         Ok(cfg)
     }
@@ -270,6 +301,12 @@ impl ExperimentConfig {
         if let Some(v) = n("gate_threshold") {
             cfg.gate_threshold = Some(v as f32);
         }
+        if let Some(v) = j.at(&["plan_delta"]).and_then(Json::as_bool) {
+            cfg.plan_delta = Some(v);
+        }
+        if let Some(v) = n("plan_delta_angle") {
+            cfg.plan_delta_angle = Some(v as f32);
+        }
         if let Some(v) = n("seed") {
             cfg.seed = v as u64;
         }
@@ -310,6 +347,12 @@ impl ExperimentConfig {
         }
         if let Some(t) = self.gate_threshold {
             o.insert("gate_threshold", jnum(t as f64));
+        }
+        if let Some(pd) = self.plan_delta {
+            o.insert("plan_delta", Json::Bool(pd));
+        }
+        if let Some(a) = self.plan_delta_angle {
+            o.insert("plan_delta_angle", jnum(a as f64));
         }
         o.insert("seed", jnum(self.seed as f64));
         Json::Obj(o)
@@ -406,6 +449,33 @@ mod tests {
     }
 
     #[test]
+    fn plan_delta_flags_thread_to_render_options() {
+        let a = args(&["render", "--plan-delta", "on", "--plan-delta-angle", "0.1"]);
+        let cfg = ExperimentConfig::from_args(&a).unwrap();
+        assert_eq!(cfg.plan_delta, Some(true));
+        let o = cfg.render_options().unwrap();
+        assert!(o.plan_delta.enabled);
+        assert!((o.plan_delta.max_angle - 0.1).abs() < 1e-6);
+        // Off by default; `--plan-delta off` parses; junk is an error.
+        let d = ExperimentConfig::default().render_options().unwrap();
+        assert!(!d.plan_delta.enabled);
+        let off = ExperimentConfig::from_args(&args(&["render", "--plan-delta", "off"])).unwrap();
+        assert_eq!(off.plan_delta, Some(false));
+        assert!(ExperimentConfig::from_args(&args(&["render", "--plan-delta", "maybe"])).is_err());
+        // Bad angles are config errors, not silent clamps.
+        let bad = ExperimentConfig {
+            plan_delta_angle: Some(0.0),
+            ..Default::default()
+        };
+        assert!(bad.render_options().is_err());
+        let bad = ExperimentConfig {
+            plan_delta_angle: Some(-1.0),
+            ..Default::default()
+        };
+        assert!(bad.render_options().is_err());
+    }
+
+    #[test]
     fn bad_gate_settings_are_errors() {
         let levels = ExperimentConfig {
             gate_levels: Some(3),
@@ -457,6 +527,8 @@ mod tests {
             gate: Some(true),
             gate_levels: Some(2),
             gate_threshold: Some(0.0078),
+            plan_delta: Some(true),
+            plan_delta_angle: Some(0.25),
             ..Default::default()
         };
         let dir = std::env::temp_dir().join("flicker_cfg");
@@ -474,6 +546,9 @@ mod tests {
         assert_eq!(back.gate, cfg.gate);
         assert_eq!(back.gate_levels, cfg.gate_levels);
         let (a, b) = (back.gate_threshold.unwrap(), cfg.gate_threshold.unwrap());
+        assert!((a - b).abs() < 1e-6);
+        assert_eq!(back.plan_delta, cfg.plan_delta);
+        let (a, b) = (back.plan_delta_angle.unwrap(), cfg.plan_delta_angle.unwrap());
         assert!((a - b).abs() < 1e-6);
     }
 }

@@ -36,6 +36,7 @@ use crate::config::ExperimentConfig;
 use crate::coordinator::frame::{render_planned, FrameMetrics, RenderBackend};
 use crate::coordinator::report::Report;
 use crate::err;
+use crate::render::delta::pose_angle;
 use crate::render::plan::FramePlan;
 use crate::render::raster::RenderOptions;
 use crate::scene::gaussian::Scene;
@@ -155,18 +156,38 @@ impl SessionBuilder {
             plans,
             plan_builds: AtomicUsize::new(0),
             plan_requests: AtomicUsize::new(0),
+            delta_builds: AtomicUsize::new(0),
+            delta_splats: AtomicUsize::new(0),
+            delta_tiles: AtomicUsize::new(0),
         })
     }
 }
 
 /// Plan-cache counters (see [`Session::plan_cache_stats`]).
+///
+/// Invariant for any interleaving of `frame`/`sweep`/`stream` calls:
+/// `builds + delta_builds + hits == requests` — every `plan()` call is
+/// exactly one cold build, one delta advance, or one cache hit.
 #[derive(Clone, Copy, Debug)]
 pub struct PlanCacheStats {
-    /// Cache misses: `FramePlan`s actually constructed. A config sweep
-    /// over one view builds exactly one plan regardless of backend count.
+    /// Cold cache misses: `FramePlan`s constructed from scratch (including
+    /// delta attempts that fell back). A config sweep over one view builds
+    /// exactly one plan regardless of backend count.
     pub builds: usize,
+    /// Cache misses served by advancing an already-built neighbor view's
+    /// plan (`RenderOptions::plan_delta`; bitwise identical to a cold
+    /// build). Zero when the delta path is disabled.
+    pub delta_builds: usize,
     /// Requests served from the cache without rebuilding.
     pub hits: usize,
+    /// Total `plan()` calls (`builds + delta_builds + hits`).
+    pub requests: usize,
+    /// Splats the delta advances re-binned (newly visible or moved across
+    /// tile boundaries), summed over all `delta_builds`.
+    pub delta_splats_reprojected: usize,
+    /// Tiles whose lists changed membership, summed over all
+    /// `delta_builds`.
+    pub delta_tiles_patched: usize,
 }
 
 /// A prepared rendering session: scene + orbit + options + per-view
@@ -182,6 +203,9 @@ pub struct Session {
     plans: Vec<OnceLock<FramePlan>>,
     plan_builds: AtomicUsize,
     plan_requests: AtomicUsize,
+    delta_builds: AtomicUsize,
+    delta_splats: AtomicUsize,
+    delta_tiles: AtomicUsize,
 }
 
 impl Session {
@@ -243,26 +267,76 @@ impl Session {
     /// Concurrent callers for the same view block on one build; different
     /// views build independently.
     ///
+    /// With `RenderOptions::plan_delta` enabled, a first access tries to
+    /// **advance** the nearest already-built neighbor view's plan (poses
+    /// within `plan_delta.max_angle`) instead of cold-building — bitwise
+    /// identical output, counted in [`PlanCacheStats::delta_builds`].
+    /// Under concurrent streaming the cold/delta *split* depends on which
+    /// neighbors happen to be finished, but the rendered output and the
+    /// counter invariant (`builds + delta_builds + hits == requests`) do
+    /// not.
+    ///
     /// # Panics
     /// If `i >= num_frames()` (like slice indexing).
     pub fn plan(&self, i: usize) -> &FramePlan {
         self.plan_requests.fetch_add(1, Ordering::Relaxed);
         self.plans[i].get_or_init(|| {
+            let dcfg = self.opts.plan_delta;
+            if dcfg.enabled {
+                if let Some(prev) = self.nearest_built_neighbor(i, dcfg.max_angle) {
+                    let out = prev.advance_detailed(&self.scene, &self.cams[i], &self.opts);
+                    if out.stats.fell_back {
+                        self.plan_builds.fetch_add(1, Ordering::Relaxed);
+                    } else {
+                        self.delta_builds.fetch_add(1, Ordering::Relaxed);
+                        self.delta_splats
+                            .fetch_add(out.stats.splats_reprojected, Ordering::Relaxed);
+                        self.delta_tiles
+                            .fetch_add(out.stats.tiles_patched, Ordering::Relaxed);
+                    }
+                    return out.plan;
+                }
+            }
             self.plan_builds.fetch_add(1, Ordering::Relaxed);
             FramePlan::build(&self.scene, &self.cams[i], &self.opts)
         })
     }
 
-    /// Plan-cache counters: `builds` = plans constructed (≤ one per view
-    /// for the session's lifetime), `hits` = requests served from the
-    /// cache. The acceptance contract for sweeps: one build per view
+    /// The already-built plan whose camera pose is nearest to view `i`'s,
+    /// if any is within `max_angle` radians. Non-blocking: views still
+    /// mid-build elsewhere are simply not candidates.
+    fn nearest_built_neighbor(&self, i: usize, max_angle: f32) -> Option<&FramePlan> {
+        let mut best: Option<(&FramePlan, f32)> = None;
+        for (j, slot) in self.plans.iter().enumerate() {
+            if j == i {
+                continue;
+            }
+            if let Some(plan) = slot.get() {
+                let a = pose_angle(&self.cams[j], &self.cams[i]);
+                if a.is_finite() && a <= max_angle && best.map_or(true, |(_, ba)| a < ba) {
+                    best = Some((plan, a));
+                }
+            }
+        }
+        best.map(|(p, _)| p)
+    }
+
+    /// Plan-cache counters: `builds` + `delta_builds` = plans constructed
+    /// (≤ one per view for the session's lifetime), `hits` = requests
+    /// served from the cache; `builds + delta_builds + hits == requests`
+    /// always. The acceptance contract for sweeps: one build per view
     /// regardless of backend count.
     pub fn plan_cache_stats(&self) -> PlanCacheStats {
         let builds = self.plan_builds.load(Ordering::Relaxed);
+        let delta_builds = self.delta_builds.load(Ordering::Relaxed);
         let requests = self.plan_requests.load(Ordering::Relaxed);
         PlanCacheStats {
             builds,
-            hits: requests.saturating_sub(builds),
+            delta_builds,
+            hits: requests.saturating_sub(builds + delta_builds),
+            requests,
+            delta_splats_reprojected: self.delta_splats.load(Ordering::Relaxed),
+            delta_tiles_patched: self.delta_tiles.load(Ordering::Relaxed),
         }
     }
 
@@ -452,8 +526,36 @@ mod tests {
         let st = s.plan_cache_stats();
         assert_eq!(st.builds, 1);
         assert_eq!(st.hits, 1);
+        assert_eq!(st.requests, 2);
+        assert_eq!(st.delta_builds, 0, "delta path is off by default");
         s.frame(1, &Golden).unwrap();
-        assert_eq!(s.plan_cache_stats().builds, 2);
+        let st = s.plan_cache_stats();
+        assert_eq!(st.builds, 2);
+        assert_eq!(st.builds + st.delta_builds + st.hits, st.requests);
+    }
+
+    #[test]
+    fn delta_plan_path_is_bit_identical_and_counted() {
+        use crate::render::delta::DeltaConfig;
+        // 24-view orbit: adjacent poses ~0.26 rad apart, inside the
+        // default delta step, so sequential access advances each view
+        // from its predecessor.
+        let opts = RenderOptions {
+            plan_delta: DeltaConfig::on(),
+            ..RenderOptions::default()
+        };
+        let s = Session::builder(cfg(24, 1)).options(opts).build().unwrap();
+        let cold = Session::builder(cfg(24, 1)).build().unwrap();
+        for i in 0..24 {
+            let a = s.frame(i, &Golden).unwrap();
+            let b = cold.frame(i, &Golden).unwrap();
+            assert_eq!(a.image.data, b.image.data, "view {i}");
+        }
+        let st = s.plan_cache_stats();
+        assert_eq!(st.builds + st.delta_builds, 24, "one construction per view");
+        assert!(st.delta_builds >= 20, "delta path barely used: {st:?}");
+        assert_eq!(st.builds + st.delta_builds + st.hits, st.requests);
+        assert!(st.delta_tiles_patched > 0 || st.delta_splats_reprojected == 0);
     }
 
     #[test]

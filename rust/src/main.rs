@@ -64,6 +64,11 @@ COMMON OPTIONS
   --gate-threshold  min peak alpha a pair must reach to survive the gate
                  (default 1/255 — the blend floor, i.e. lossless; raise
                  for lossy extra culling)
+  --plan-delta   temporal plan deltas: on|off  (default off; advance each
+                 view's FramePlan from the nearest already-built neighbor
+                 view instead of cold-building — output is bit-identical)
+  --plan-delta-angle  largest pose step in radians the delta path accepts
+                 before falling back to a cold build  (default 0.35)
 
 The pjrt backend requires a build with `--features pjrt` and AOT artifacts
 (`make artifacts`, or any directory written by

@@ -1,0 +1,477 @@
+//! Temporal plan deltas: advance a [`FramePlan`] to the next view of a
+//! smooth camera path instead of rebuilding it from scratch.
+//!
+//! Adjacent views on an orbit share almost all of the frame-preparation
+//! structure — the per-tile membership of most splats is unchanged and the
+//! depth order is only locally perturbed. [`FramePlan::advance`] exploits
+//! that:
+//!
+//! ```text
+//!   advance:  project_scene (full, new view)        — exactness anchor
+//!             ├─ id-match old ↔ new splats          — O(P) two-pointer walk
+//!             ├─ tile-membership diff               — exact integer ranges
+//!             │    unmoved: carry the old tile entries (index-remapped)
+//!             │    moved/arrived: re-bin into their new candidate range
+//!             └─ per-tile depth repair              — bounded insertion pass
+//!   carry-forward: the gate's per-tile pyramid geometry (camera-invariant)
+//! ```
+//!
+//! **Bit-identity contract.** An advanced plan is *bitwise identical* to a
+//! cold [`FramePlan::build`] of the same `(scene, camera, options)` triple:
+//! same splat vector, same per-tile lists in the same depth order, hence
+//! the same pixels and the same [`RenderStats`](super::raster::RenderStats)
+//! for every backend, gated or not. Two facts make this possible:
+//!
+//! 1. Projection is a pure per-view map, so `advance` always re-projects
+//!    the full scene — a camera move changes *every* splat's screen-space
+//!    parameters, and reusing stale ones would change pixels. The
+//!    incremental savings are in binning and sorting, not projection.
+//!    (The conservative per-splat [`motion_bound`] models the skip
+//!    threshold a hardware pipeline would use; here it is property-tested
+//!    and reported, while correctness-critical work is never skipped.)
+//! 2. For [`Strategy::Aabb`], a splat's tile membership equals its clamped
+//!    integer candidate range exactly (`build_tile_lists` tests
+//!    `intersects_aabb` only inside `candidate_range`, where it cannot
+//!    fail), so "did this splat change tiles?" is an exact integer
+//!    comparison, and the carried entries are exactly the cold lists'
+//!    entries. Cold depth order is a stable sort by depth over
+//!    ascending-index lists — i.e. ascending `(depth, index)`, a *unique*
+//!    total key — so [`repair_depth_order`] reproduces it bit-for-bit from
+//!    the carried near-sorted order.
+//!
+//! When the pose step is too large ([`DeltaConfig::max_angle`]), the grid
+//! geometry differs, or the strategy is not AABB, `advance` falls back to
+//! a cold build (reported in [`DeltaStats::fell_back`]). The
+//! [`Session`](crate::coordinator::session::Session) plan cache uses this
+//! via `RenderOptions::plan_delta` / `--plan-delta` (off by default).
+
+use super::plan::{build_pyramids, FramePlan};
+use super::project::{project_scene, Splat};
+use super::raster::RenderOptions;
+use super::tile::{Strategy, TileGrid};
+use crate::camera::Camera;
+use crate::scene::gaussian::Scene;
+use std::cmp::Ordering;
+
+/// Temporal plan-delta configuration (`RenderOptions::plan_delta`).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct DeltaConfig {
+    /// Let [`Session::plan`](crate::coordinator::session::Session::plan)
+    /// advance plans from already-built neighbor views instead of always
+    /// cold-building. Off by default; output is bit-identical either way.
+    pub enabled: bool,
+    /// Largest relative pose rotation (radians) `advance` accepts before
+    /// falling back to a cold build. Direct `advance` calls honor it too.
+    pub max_angle: f32,
+}
+
+impl Default for DeltaConfig {
+    fn default() -> Self {
+        DeltaConfig {
+            enabled: false,
+            // ~20°: generous for real orbit steps, small enough that the
+            // carried lists are still near-sorted.
+            max_angle: 0.35,
+        }
+    }
+}
+
+impl DeltaConfig {
+    /// The default delta configuration with the session path enabled.
+    pub fn on() -> DeltaConfig {
+        DeltaConfig {
+            enabled: true,
+            ..DeltaConfig::default()
+        }
+    }
+}
+
+/// What one [`FramePlan::advance_detailed`] call reused vs recomputed.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct DeltaStats {
+    /// The delta path was not applicable (pose jump beyond
+    /// [`DeltaConfig::max_angle`], grid geometry mismatch, or a non-AABB
+    /// strategy) and a cold [`FramePlan::build`] ran instead. All other
+    /// counters are zero when set.
+    pub fell_back: bool,
+    /// Relative pose rotation between the plans' cameras, radians.
+    pub pose_angle: f32,
+    /// Splats whose tile membership was recomputed from scratch: newly
+    /// visible ones plus those whose candidate tile range changed.
+    pub splats_reprojected: usize,
+    /// Tiles whose lists changed membership (lost or gained entries).
+    /// Every non-empty tile still gets a depth-repair pass — depths move
+    /// with the camera even when membership does not.
+    pub tiles_patched: usize,
+    /// (tile, splat) entries carried over from the previous plan.
+    pub entries_carried: usize,
+    /// Tiles whose bounded insertion repair exceeded its move budget and
+    /// fell back to a full (identical-result) sort.
+    pub sort_fallbacks: usize,
+}
+
+/// A delta-advanced plan plus the reuse accounting behind it.
+pub struct DeltaOutcome {
+    /// The next frame's plan — bitwise identical to a cold build.
+    pub plan: FramePlan,
+    /// What was reused vs recomputed.
+    pub stats: DeltaStats,
+}
+
+/// Relative rotation angle (radians) between two camera poses, from the
+/// trace of `R_b · R_aᵀ`. Zero for identical orientations, π for opposed.
+pub fn pose_angle(a: &Camera, b: &Camera) -> f32 {
+    let rel = b.r_wc.mul(&a.r_wc.transpose());
+    let trace = rel.at(0, 0) + rel.at(1, 1) + rel.at(2, 2);
+    ((trace - 1.0) * 0.5).clamp(-1.0, 1.0).acos()
+}
+
+/// Conservative bound (pixels) on how far `s`'s projected mean can move
+/// when the camera goes from `prev` to `next` — the tile-crossing test a
+/// skip-reprojection hardware pipeline would use, derived purely from the
+/// pose delta and the splat's *previous* projection.
+///
+/// Derivation: with `t0 = R0(p−c0)` and `t1 = R1(p−c1) = ΔR·t0 + d`
+/// (`ΔR = R1·R0ᵀ`, `d = R1(c0−c1)`), the camera-space displacement is
+/// `‖t1−t0‖ ≤ 2·sin(θ/2)·‖t0‖ + ‖d‖ = ε`. Per image axis,
+/// `|Δ(x/z)| ≤ ε·(1+|x0/z0|)/(z0−ε)` for `z0 > ε`, and `x0/z0` is
+/// recovered from the stored mean via the shared intrinsics. The result
+/// is inflated by a small safety margin so it stays an upper bound under
+/// f32 rounding; `prop_motion_bound_is_conservative` checks it against
+/// actual projections. Returns `f32::INFINITY` when the intrinsics differ
+/// or the camera-space motion `ε` reaches the splat's depth.
+pub fn motion_bound(prev: &Camera, next: &Camera, s: &Splat) -> f32 {
+    if prev.intr != next.intr {
+        return f32::INFINITY;
+    }
+    let theta = pose_angle(prev, next);
+    let d = next.r_wc.mul_vec(prev.position - next.position);
+    let z0 = s.depth;
+    let xz = (s.mean.x - prev.intr.cx) / prev.intr.fx;
+    let yz = (s.mean.y - prev.intr.cy) / prev.intr.fy;
+    let t0_norm = z0 * (1.0 + xz * xz + yz * yz).sqrt();
+    let eps = 2.0 * (theta * 0.5).sin() * t0_norm + d.norm();
+    if !(eps < z0) {
+        return f32::INFINITY;
+    }
+    let bu = prev.intr.fx * eps * (1.0 + xz.abs()) / (z0 - eps);
+    let bv = prev.intr.fy * eps * (1.0 + yz.abs()) / (z0 - eps);
+    (bu * bu + bv * bv).sqrt() * 1.05 + 0.5
+}
+
+/// Restore a tile list to the canonical cold-build depth order — ascending
+/// `(depth, index)`, the unique total key equal to `sort_by_depth`'s stable
+/// result — with a bounded insertion pass. Near-sorted lists (the smooth
+/// camera-path case) finish in `O(n + inversions)`; a list that blows the
+/// move budget falls back to a full unstable sort on the same key, which
+/// produces the identical order (the key has no ties). Returns `false` iff
+/// the fallback ran.
+pub fn repair_depth_order(list: &mut [u32], splats: &[Splat]) -> bool {
+    let n = list.len();
+    if n <= 1 {
+        return true;
+    }
+    let budget = 8 * n + 32;
+    let mut moves = 0usize;
+    for i in 1..n {
+        let v = list[i];
+        let dv = splats[v as usize].depth;
+        let mut j = i;
+        while j > 0 {
+            let u = list[j - 1];
+            let du = splats[u as usize].depth;
+            // Stop once the predecessor's (depth, index) key is below v's.
+            if du < dv || (du == dv && u < v) {
+                break;
+            }
+            list[j] = u;
+            j -= 1;
+            moves += 1;
+        }
+        list[j] = v;
+        if moves > budget {
+            list.sort_unstable_by(|&a, &b| {
+                let (da, db) = (splats[a as usize].depth, splats[b as usize].depth);
+                da.partial_cmp(&db).unwrap_or(Ordering::Equal).then(a.cmp(&b))
+            });
+            return false;
+        }
+    }
+    true
+}
+
+impl FramePlan {
+    /// Advance this plan to `new_cam`, reusing tile membership and
+    /// near-sorted depth order where the view change allows it. The result
+    /// is **bitwise identical** to `FramePlan::build(scene, new_cam, opts)`
+    /// — see the [module docs](self) for why. Falls back to a cold build
+    /// on large pose jumps (`opts.plan_delta.max_angle`), grid geometry
+    /// changes, or non-AABB strategies.
+    pub fn advance(&self, scene: &Scene, new_cam: &Camera, opts: &RenderOptions) -> FramePlan {
+        self.advance_detailed(scene, new_cam, opts).plan
+    }
+
+    /// [`FramePlan::advance`] plus the reuse accounting ([`DeltaStats`]) —
+    /// the entry the `Session` plan cache uses for its delta counters.
+    pub fn advance_detailed(
+        &self,
+        scene: &Scene,
+        new_cam: &Camera,
+        opts: &RenderOptions,
+    ) -> DeltaOutcome {
+        let angle = pose_angle(&self.cam, new_cam);
+        let compatible = opts.tile_size == self.opts.tile_size
+            && opts.strategy == Strategy::Aabb
+            && self.opts.strategy == Strategy::Aabb
+            && new_cam.intr.width == self.cam.intr.width
+            && new_cam.intr.height == self.cam.intr.height
+            && angle.is_finite()
+            && angle <= opts.plan_delta.max_angle;
+        if !compatible {
+            return DeltaOutcome {
+                plan: FramePlan::build(scene, new_cam, opts),
+                stats: DeltaStats {
+                    fell_back: true,
+                    pose_angle: angle,
+                    ..DeltaStats::default()
+                },
+            };
+        }
+
+        // Stage 1 — full re-projection with the new camera. This is the
+        // exactness anchor: every splat's screen parameters depend on the
+        // view, so the delta savings live downstream of here.
+        let new_splats = project_scene(scene, new_cam);
+        let grid = TileGrid::new(new_cam.intr.width, new_cam.intr.height, opts.tile_size);
+        debug_assert_eq!(grid.num_tiles(), self.grid.num_tiles());
+
+        // Stage 2 — id-match old and new splats (both ascending by id) and
+        // diff tile membership. `rebin[j]` marks new splats that must be
+        // re-binned: newly visible ones, or survivors whose exact integer
+        // candidate range changed (for AABB, range == membership).
+        let old = &self.splats;
+        let ranges: Vec<(u32, u32, u32, u32)> =
+            new_splats.iter().map(|s| grid.candidate_range(s)).collect();
+        let mut old_to_new = vec![u32::MAX; old.len()];
+        let mut rebin = vec![true; new_splats.len()];
+        {
+            let (mut i, mut j) = (0usize, 0usize);
+            while i < old.len() && j < new_splats.len() {
+                match old[i].id.cmp(&new_splats[j].id) {
+                    Ordering::Less => i += 1, // culled this frame: entries drop below
+                    Ordering::Greater => j += 1, // newly visible: stays marked
+                    Ordering::Equal => {
+                        old_to_new[i] = j as u32;
+                        rebin[j] = grid.candidate_range(&old[i]) != ranges[j];
+                        i += 1;
+                        j += 1;
+                    }
+                }
+            }
+        }
+        let splats_reprojected = rebin.iter().filter(|&&b| b).count();
+
+        // Stage 3 — patch tile lists: carry unmoved entries (remapped to
+        // new indices, preserving the old near-sorted order), drop departed
+        // and moved ones.
+        let mut lists: Vec<Vec<u32>> = Vec::with_capacity(self.lists.len());
+        let mut patched = vec![false; self.lists.len()];
+        let mut entries_carried = 0usize;
+        for (t, old_list) in self.lists.iter().enumerate() {
+            let mut nl = Vec::with_capacity(old_list.len() + 2);
+            for &oi in old_list {
+                let j = old_to_new[oi as usize];
+                if j != u32::MAX && !rebin[j as usize] {
+                    nl.push(j);
+                }
+            }
+            if nl.len() != old_list.len() {
+                patched[t] = true;
+            }
+            entries_carried += nl.len();
+            lists.push(nl);
+        }
+        // ... and insert the re-binned splats into their new ranges.
+        for (j, r) in ranges.iter().enumerate() {
+            if !rebin[j] {
+                continue;
+            }
+            for ty in r.1..r.3 {
+                for tx in r.0..r.2 {
+                    let t = (ty * grid.tiles_x + tx) as usize;
+                    lists[t].push(j as u32);
+                    patched[t] = true;
+                }
+            }
+        }
+        let tiles_patched = patched.iter().filter(|&&p| p).count();
+
+        // Stage 4 — local depth repair. Every non-empty tile needs it
+        // (depths moved with the camera even where membership did not),
+        // but the carried order is near-sorted so the pass is cheap.
+        let mut sort_fallbacks = 0usize;
+        for l in &mut lists {
+            if !repair_depth_order(l, &new_splats) {
+                sort_fallbacks += 1;
+            }
+        }
+
+        // Stage 5 — carry forward the gate's per-tile pyramid geometry:
+        // it is a pure function of the (unchanged) tile grid, so the whole
+        // delta chain shares one copy. Per-splat gate *verdicts* are NOT
+        // carried — they depend on the new view's geometry and re-deriving
+        // them is what keeps gated rendering bit-identical.
+        let pyramids = if opts.gate.active() {
+            match &self.pyramids {
+                Some(p) => Some(p.clone()),
+                None => build_pyramids(&grid, &opts.gate),
+            }
+        } else {
+            None
+        };
+
+        DeltaOutcome {
+            plan: FramePlan {
+                splats: new_splats,
+                grid,
+                lists,
+                opts: *opts,
+                cam: *new_cam,
+                pyramids,
+            },
+            stats: DeltaStats {
+                fell_back: false,
+                pose_angle: angle,
+                splats_reprojected,
+                tiles_patched,
+                entries_carried,
+                sort_fallbacks,
+            },
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::camera::{orbit_path, Intrinsics};
+    use crate::numeric::linalg::v3;
+    use crate::render::raster::VanillaMasks;
+    use crate::render::sort::sort_by_depth;
+    use crate::scene::synthetic::{generate_scaled, preset};
+    use crate::util::rng::Pcg32;
+
+    fn orbit(frames: usize) -> Vec<Camera> {
+        orbit_path(
+            Intrinsics::from_fov(64, 64, 1.2),
+            v3(0.0, 0.5, 0.0),
+            12.0,
+            3.0,
+            frames,
+        )
+    }
+
+    #[test]
+    fn pose_angle_basics() {
+        let cams = orbit(8);
+        assert!(pose_angle(&cams[0], &cams[0]).abs() < 1e-4);
+        let step = pose_angle(&cams[0], &cams[1]);
+        // Adjacent orbit views differ by roughly the orbit step (2π/8).
+        assert!(step > 0.3 && step < 1.2, "step {step}");
+        // Symmetric.
+        assert!((step - pose_angle(&cams[1], &cams[0])).abs() < 1e-4);
+    }
+
+    #[test]
+    fn repair_matches_cold_sort_from_any_permutation() {
+        let scene = generate_scaled(&preset("truck"), 0.02);
+        let cam = orbit(16)[1];
+        let plan = FramePlan::build(&scene, &cam, &RenderOptions::default());
+        let mut rng = Pcg32::new(0xDE17A);
+        for (t, cold) in plan.lists.iter().enumerate().filter(|(_, l)| l.len() > 1) {
+            let mut shuffled = cold.clone();
+            rng.shuffle(&mut shuffled);
+            repair_depth_order(&mut shuffled, &plan.splats);
+            let mut resorted = shuffled.clone();
+            sort_by_depth(&mut resorted, &plan.splats);
+            assert_eq!(&shuffled, cold, "tile {t}");
+            assert_eq!(shuffled, resorted, "tile {t} vs stable re-sort");
+        }
+    }
+
+    #[test]
+    fn advance_is_bit_identical_to_cold_build() {
+        let scene = generate_scaled(&preset("garden"), 0.02);
+        let cams = orbit(24);
+        let opts = RenderOptions {
+            plan_delta: DeltaConfig::on(),
+            ..RenderOptions::default()
+        };
+        let prev = FramePlan::build(&scene, &cams[0], &opts);
+        let out = prev.advance_detailed(&scene, &cams[1], &opts);
+        assert!(!out.stats.fell_back, "24-view orbit step must be in range");
+        let cold = FramePlan::build(&scene, &cams[1], &opts);
+        assert_eq!(out.plan.lists, cold.lists);
+        assert_eq!(out.plan.splats.len(), cold.splats.len());
+        let a = out.plan.render(&VanillaMasks, None);
+        let b = cold.render(&VanillaMasks, None);
+        assert_eq!(a.image.data, b.image.data);
+        assert_eq!(format!("{:?}", a.stats), format!("{:?}", b.stats));
+        assert!(out.stats.entries_carried > 0, "nothing was reused");
+    }
+
+    #[test]
+    fn large_pose_jump_falls_back() {
+        let scene = generate_scaled(&preset("truck"), 0.02);
+        let cams = orbit(3); // 120° steps — far beyond max_angle
+        let opts = RenderOptions::default();
+        let prev = FramePlan::build(&scene, &cams[0], &opts);
+        let out = prev.advance_detailed(&scene, &cams[1], &opts);
+        assert!(out.stats.fell_back);
+        let cold = FramePlan::build(&scene, &cams[1], &opts);
+        assert_eq!(out.plan.lists, cold.lists);
+    }
+
+    #[test]
+    fn obb_strategy_falls_back() {
+        let scene = generate_scaled(&preset("truck"), 0.02);
+        let cams = orbit(32);
+        let opts = RenderOptions {
+            strategy: Strategy::Obb,
+            ..RenderOptions::default()
+        };
+        let prev = FramePlan::build(&scene, &cams[0], &opts);
+        let out = prev.advance_detailed(&scene, &cams[1], &opts);
+        assert!(out.stats.fell_back, "OBB membership is not range-exact");
+        assert_eq!(out.plan.lists, FramePlan::build(&scene, &cams[1], &opts).lists);
+    }
+
+    #[test]
+    fn motion_bound_covers_an_orbit_step() {
+        let scene = generate_scaled(&preset("garden"), 0.02);
+        let cams = orbit(48);
+        let a = project_scene(&scene, &cams[0]);
+        let b = project_scene(&scene, &cams[1]);
+        let (mut i, mut j) = (0usize, 0usize);
+        let mut checked = 0usize;
+        while i < a.len() && j < b.len() {
+            match a[i].id.cmp(&b[j].id) {
+                Ordering::Less => i += 1,
+                Ordering::Greater => j += 1,
+                Ordering::Equal => {
+                    let moved = (b[j].mean - a[i].mean).norm();
+                    let bound = motion_bound(&cams[0], &cams[1], &a[i]);
+                    assert!(
+                        moved <= bound,
+                        "splat {}: moved {moved}px > bound {bound}px",
+                        a[i].id
+                    );
+                    checked += 1;
+                    i += 1;
+                    j += 1;
+                }
+            }
+        }
+        assert!(checked > 50, "too few shared splats ({checked})");
+    }
+}

@@ -2,6 +2,7 @@
 //! depth sort, the staged [`plan::FramePlan`] pipeline, reference
 //! rasterizer entry points, framebuffer, and quality metrics.
 
+pub mod delta;
 pub mod image;
 pub mod metrics;
 pub mod plan;

@@ -29,7 +29,7 @@
 
 use super::image::Image;
 use super::project::{project_scene, Splat, ALPHA_MIN};
-use super::pyramid::TilePyramid;
+use super::pyramid::{GateConfig, TilePyramid};
 use super::raster::{
     MaskProvider, MaskSource, RenderOptions, RenderOutput, RenderStats, MINITILE,
 };
@@ -38,6 +38,7 @@ use super::tile::{build_tile_lists, Rect, TileGrid};
 use crate::camera::Camera;
 use crate::scene::gaussian::Scene;
 use crate::util::pool;
+use std::sync::Arc;
 
 /// The reusable frame-preparation product: projected splats, the tile grid,
 /// and depth-sorted per-tile splat lists for one `(scene, camera, options)`
@@ -55,6 +56,30 @@ pub struct FramePlan {
     /// `strategy` are baked into `grid`/`lists`; `t_min`, `background`,
     /// and `workers` apply at render time.
     pub opts: RenderOptions,
+    /// The camera the plan was prepared for — the pose anchor
+    /// [`FramePlan::advance`](crate::render::delta) measures the next
+    /// view's step against.
+    pub cam: Camera,
+    // Per-tile gate pyramids (`Some` ⇔ `opts.gate.active()`). A pure
+    // function of the tile grid — camera-invariant — so delta-advanced
+    // descendants share this one allocation instead of rebuilding per
+    // tile per render.
+    pub(crate) pyramids: Option<Arc<Vec<TilePyramid>>>,
+}
+
+/// Build the per-tile gate pyramid cache for `grid`, or `None` when the
+/// gate is inactive. Pyramid geometry depends only on the tile rects, so
+/// one cache serves every render of the plan — and every plan a delta
+/// chain derives from it.
+pub(crate) fn build_pyramids(grid: &TileGrid, gate: &GateConfig) -> Option<Arc<Vec<TilePyramid>>> {
+    if !gate.active() {
+        return None;
+    }
+    Some(Arc::new(
+        (0..grid.num_tiles())
+            .map(|t| TilePyramid::new(&grid.rect(t), grid.tile))
+            .collect(),
+    ))
 }
 
 impl FramePlan {
@@ -89,12 +114,20 @@ impl FramePlan {
         for list in &mut lists {
             sort_by_depth(list, &splats);
         }
+        let pyramids = build_pyramids(&grid, &opts.gate);
         FramePlan {
             splats,
             grid,
             lists,
             opts: *opts,
+            cam: *cam,
+            pyramids,
         }
+    }
+
+    /// Tile `t`'s gate pyramid, when the gate is active.
+    fn pyramid(&self, t: usize) -> Option<&TilePyramid> {
+        self.pyramids.as_ref().map(|p| &p[t])
     }
 
     /// Number of tiles in the plan (== `lists.len()`).
@@ -211,6 +244,7 @@ impl FramePlan {
                 &rect,
                 grid,
                 opts,
+                self.pyramid(t),
                 masks,
                 &mut trans,
                 &mut color,
@@ -274,6 +308,7 @@ impl FramePlan {
             &rect,
             &self.grid,
             &self.opts,
+            self.pyramid(t),
             masks.as_mut(),
             &mut trans,
             &mut color,
@@ -302,11 +337,14 @@ impl FramePlan {
         if !self.opts.gate.active() {
             return None;
         }
+        let pyramids = self
+            .pyramids
+            .as_ref()
+            .expect("gate active ⇒ pyramids built (build/advance invariant)");
         let mut rejected = 0u64;
         let mut out = Vec::with_capacity(self.lists.len());
         for (t, list) in self.lists.iter().enumerate() {
-            let rect = self.grid.rect(t);
-            let pyr = TilePyramid::new(&rect, self.grid.tile);
+            let pyr = &pyramids[t];
             let mut kept = Vec::with_capacity(list.len());
             for &si in list {
                 if pyr.rejects_tile(&self.splats[si as usize], &self.opts.gate) {
@@ -373,6 +411,7 @@ fn render_tile(
     rect: &Rect,
     grid: &TileGrid,
     opts: &RenderOptions,
+    pyramid: Option<&TilePyramid>,
     masks: &mut dyn MaskProvider,
     trans: &mut [f32],
     color: &mut [[f32; 3]],
@@ -390,18 +429,13 @@ fn render_tile(
         *c = [0.0; 3];
     }
     let mut active = (w * h) as u32;
-    // Coarse-to-fine gate (render::pyramid): built once per tile, consulted
-    // per splat ahead of mask generation. Inactive ⇒ the pre-gate code
-    // path, bit for bit.
-    let pyramid = if opts.gate.active() {
-        Some(TilePyramid::new(rect, grid.tile))
-    } else {
-        None
-    };
+    // Coarse-to-fine gate (render::pyramid): the plan-owned pyramid for
+    // this tile (`Some` ⇔ the gate is active), consulted per splat ahead
+    // of mask generation. Inactive ⇒ the pre-gate code path, bit for bit.
 
     'splat_loop: for (li, &si) in list.iter().enumerate() {
         let s = &splats[si as usize];
-        let mask = match &pyramid {
+        let mask = match pyramid {
             Some(pyr) => {
                 stats.gate_tile_tested += 1;
                 let d = pyr.gate(s, &opts.gate);

@@ -25,6 +25,7 @@
 //! buffer, and partials are reduced into the global per-Gaussian array in
 //! ascending tile index, whether tiles ran on one thread or many.
 
+use super::delta::DeltaConfig;
 use super::image::Image;
 use super::plan::FramePlan;
 use super::project::Splat;
@@ -65,6 +66,12 @@ pub struct RenderOptions {
     /// enabling it is lossless — bit-identical images with fewer
     /// submitted splats.
     pub gate: GateConfig,
+    /// Temporal plan deltas (`render::delta`): when enabled, the
+    /// `Session` plan cache advances plans from already-built neighbor
+    /// views within `plan_delta.max_angle` instead of cold-building.
+    /// Off by default; advanced plans are bitwise identical to cold
+    /// builds, so this is purely a preparation-cost knob.
+    pub plan_delta: DeltaConfig,
 }
 
 impl Default for RenderOptions {
@@ -77,6 +84,7 @@ impl Default for RenderOptions {
             workers: 1,
             batch: 0,
             gate: GateConfig::default(),
+            plan_delta: DeltaConfig::default(),
         }
     }
 }

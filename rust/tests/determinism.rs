@@ -14,6 +14,12 @@
 //! `session.frame(i)` for workers 1/2/8/0, and `session.sweep` matches
 //! per-backend one-shot renders bitwise while building exactly one
 //! `FramePlan` per view regardless of backend count.
+//!
+//! Temporal plan deltas (`--plan-delta`) inherit it all: a delta-advanced
+//! plan is bitwise identical to a cold build (rust/tests/plan_delta.rs),
+//! and the plan-cache counters stay exact — sequential orbits report a
+//! deterministic cold/delta split, streamed orbits a deterministic total,
+//! and `builds + delta_builds + hits == requests` always.
 
 use flicker::camera::{orbit_path, Camera, Intrinsics};
 use flicker::cat::{CatConfig, LeaderMode, Precision};
@@ -190,6 +196,65 @@ fn plan_cache_builds_once_per_view_for_any_backend_count() {
         "repeat renders must hit the cache, not rebuild"
     );
     assert!(stats.hits >= 2 * session.num_frames());
+}
+
+#[test]
+fn plan_cache_delta_counts_exact_sequential_invariant_streamed() {
+    // The latent PlanCacheStats gap: counters were only ever checked
+    // loosely (builds exact, hits >=). With the delta path in play the
+    // accounting must be airtight — every plan() call lands in exactly
+    // one of builds / delta_builds / hits.
+    let cfg = |workers: usize| ExperimentConfig {
+        frames: 24, // 2π/24 ≈ 0.26 rad per step, inside the 0.35 default
+        plan_delta: Some(true),
+        ..orbit_cfg(workers)
+    };
+
+    // Sequential: view 0 cold-builds, every later view advances from its
+    // just-built neighbor — the split is exact, not approximate.
+    let session = Session::builder(cfg(1)).build().unwrap();
+    for i in 0..session.num_frames() {
+        session.frame(i, &Golden).unwrap();
+    }
+    let st = session.plan_cache_stats();
+    assert_eq!(st.builds, 1, "only view 0 lacks a built neighbor");
+    assert_eq!(st.delta_builds, session.num_frames() - 1);
+    assert_eq!(st.hits, 0);
+    assert_eq!(st.requests, session.num_frames());
+    assert!(st.delta_splats_reprojected > 0, "orbit steps must re-bin some splats");
+    assert!(st.delta_tiles_patched > 0, "orbit steps must patch some tiles");
+
+    // Re-rendering the same views is pure cache hits — no new builds of
+    // either kind, and the invariant still balances.
+    for i in 0..session.num_frames() {
+        session.frame(i, &Golden).unwrap();
+    }
+    let st = session.plan_cache_stats();
+    assert_eq!(st.builds, 1);
+    assert_eq!(st.delta_builds, session.num_frames() - 1);
+    assert_eq!(st.hits, session.num_frames());
+    assert_eq!(st.builds + st.delta_builds + st.hits, st.requests);
+
+    // Streamed: completion order decides which views find a built
+    // neighbor, so the cold/delta split is scheduling-dependent — but the
+    // totals are not, and the invariant must hold regardless.
+    for workers in [2usize, 8, 0] {
+        let s = Session::builder(cfg(workers)).build().unwrap();
+        let frames = s.stream(&Golden).ordered().unwrap();
+        assert_eq!(frames.len(), s.num_frames(), "workers={workers}");
+        let st = s.plan_cache_stats();
+        assert_eq!(
+            st.builds + st.delta_builds,
+            s.num_frames(),
+            "workers={workers}: one plan per view, cold or delta"
+        );
+        assert_eq!(
+            st.builds + st.delta_builds + st.hits,
+            st.requests,
+            "workers={workers}: counters must balance"
+        );
+        assert!(st.builds >= 1, "workers={workers}: someone has to go first");
+    }
 }
 
 #[test]

@@ -1,0 +1,336 @@
+//! Differential harness for temporal plan deltas: an advance-chained
+//! `FramePlan` must be *bitwise identical* to a cold `FramePlan::build`
+//! of the same `(scene, camera, options)` triple — same tile lists in the
+//! same depth order, same pixels, same `RenderStats` — for every backend,
+//! with and without the coarse-to-fine gate, at every worker count. The
+//! delta path is an optimization with zero observable effect; these tests
+//! are the contract that keeps it one.
+
+use flicker::camera::{orbit_path, Camera, Intrinsics};
+use flicker::cat::{CatConfig, LeaderMode, Precision};
+use flicker::config::ExperimentConfig;
+use flicker::coordinator::{FrameMetrics, Golden, GoldenCat, Session};
+use flicker::numeric::linalg::{v3, Quat};
+use flicker::render::delta::DeltaConfig;
+use flicker::render::plan::FramePlan;
+use flicker::render::pyramid::GateConfig;
+use flicker::render::raster::{RenderOptions, VanillaMasks};
+use flicker::scene::gaussian::Scene;
+use flicker::scene::synthetic::{generate_scaled, preset};
+use flicker::util::rng::Pcg32;
+
+fn orbit(res: u32, frames: usize) -> Vec<Camera> {
+    orbit_path(
+        Intrinsics::from_fov(res, res, 1.2),
+        v3(0.0, 0.5, 0.0),
+        12.0,
+        3.0,
+        frames,
+    )
+}
+
+fn delta_opts(gate: bool) -> RenderOptions {
+    RenderOptions {
+        plan_delta: DeltaConfig::on(),
+        gate: if gate { GateConfig::on() } else { GateConfig::default() },
+        ..RenderOptions::default()
+    }
+}
+
+fn cat() -> CatConfig {
+    CatConfig {
+        mode: LeaderMode::SmoothFocused,
+        precision: Precision::Mixed,
+        stage1: true,
+    }
+}
+
+/// Assert `adv` (delta-advanced) equals `cold` bitwise: the plan structure
+/// (lists carry the depth order), the rendered pixels, and the full
+/// `RenderStats` (compared via Debug formatting — the struct carries
+/// counters, not floats, so the rendering is byte-stable) for both the
+/// vanilla and the CAT mask source.
+fn assert_plans_bit_identical(adv: &FramePlan, cold: &FramePlan, ctx: &str) {
+    assert_eq!(adv.lists, cold.lists, "{ctx}: tile lists / depth order");
+    assert_eq!(adv.splats.len(), cold.splats.len(), "{ctx}: splat count");
+    for (a, b) in adv.splats.iter().zip(&cold.splats) {
+        assert_eq!(a.id, b.id, "{ctx}: splat ids");
+        assert_eq!(a.depth.to_bits(), b.depth.to_bits(), "{ctx}: splat depths");
+    }
+    let (av, cv) = (adv.render(&VanillaMasks, None), cold.render(&VanillaMasks, None));
+    assert_eq!(av.image.data, cv.image.data, "{ctx}: vanilla pixels");
+    assert_eq!(
+        format!("{:?}", av.stats),
+        format!("{:?}", cv.stats),
+        "{ctx}: vanilla stats"
+    );
+    let c = cat();
+    let (ac, cc) = (adv.render(&c, None), cold.render(&c, None));
+    assert_eq!(ac.image.data, cc.image.data, "{ctx}: CAT pixels");
+    assert_eq!(
+        format!("{:?}", ac.stats),
+        format!("{:?}", cc.stats),
+        "{ctx}: CAT stats"
+    );
+}
+
+#[test]
+fn randomized_advance_chains_match_cold_builds() {
+    // Randomized scenes and orbit step sizes: chain `advance` along the
+    // path and diff every link against a cold build, gated and ungated.
+    let mut rng = Pcg32::new(0xF11C_0007);
+    for case in 0..4 {
+        let name = *rng.pick(&["truck", "garden"]);
+        let scale = rng.range_f32(0.008, 0.02);
+        let scene = generate_scaled(&preset(name), scale);
+        let frames = 18 + rng.below(23) as usize; // 18..=40: steps within max_angle
+        let cams = orbit(48, frames);
+        for gate in [false, true] {
+            let opts = delta_opts(gate);
+            let mut plan = FramePlan::build(&scene, &cams[0], &opts);
+            for step in 1..5usize.min(frames) {
+                let out = plan.advance_detailed(&scene, &cams[step], &opts);
+                assert!(
+                    !out.stats.fell_back,
+                    "case {case} ({name} x{frames}) step {step}: unexpected fallback \
+                     (angle {})",
+                    out.stats.pose_angle
+                );
+                let cold = FramePlan::build(&scene, &cams[step], &opts);
+                assert_plans_bit_identical(
+                    &out.plan,
+                    &cold,
+                    &format!("case {case} ({name} x{frames}) gate={gate} step {step}"),
+                );
+                plan = out.plan; // chain: next advance starts from the delta plan
+            }
+        }
+    }
+}
+
+#[test]
+fn session_delta_is_bit_identical_for_all_worker_counts() {
+    // The Session surface: plan_delta on vs off must stream identical
+    // frames for workers 1/2/8/0, in both completion-order and ordered()
+    // collection, and the cache counters must balance.
+    let cfg = |workers: usize, delta: bool| ExperimentConfig {
+        scene: "truck".into(),
+        scene_scale: 0.01,
+        resolution: 64,
+        frames: 24,
+        workers,
+        plan_delta: Some(delta),
+        ..Default::default()
+    };
+    let reference = Session::builder(cfg(1, false)).build().unwrap();
+    let seq: Vec<FrameMetrics> = (0..reference.num_frames())
+        .map(|i| reference.frame(i, &Golden).unwrap())
+        .collect();
+    for workers in [1usize, 2, 8, 0] {
+        let session = Session::builder(cfg(workers, true)).build().unwrap();
+        let mut done: Vec<FrameMetrics> = session
+            .stream(&Golden)
+            .collect::<flicker::util::error::Result<Vec<_>>>()
+            .unwrap();
+        done.sort_by_key(|m| m.view);
+        assert_eq!(seq.len(), done.len(), "workers={workers}");
+        for (a, b) in seq.iter().zip(&done) {
+            assert_eq!(a.image.data, b.image.data, "workers={workers} view {}", a.view);
+            assert_eq!(
+                a.stats.pairs_blended, b.stats.pairs_blended,
+                "workers={workers} view {}",
+                a.view
+            );
+        }
+        let st = session.plan_cache_stats();
+        assert_eq!(
+            st.builds + st.delta_builds + st.hits,
+            st.requests,
+            "workers={workers}: cache counters must balance"
+        );
+        assert_eq!(
+            st.builds + st.delta_builds,
+            session.num_frames(),
+            "workers={workers}: one plan per view, cold or delta"
+        );
+
+        // ordered() over a fresh session (plans rebuild, possibly via a
+        // different cold/delta split under concurrency — pixels may not).
+        let ordered = Session::builder(cfg(workers, true))
+            .build()
+            .unwrap()
+            .stream(&Golden)
+            .ordered()
+            .unwrap();
+        for (i, (a, b)) in seq.iter().zip(&ordered).enumerate() {
+            assert_eq!(a.image.data, b.image.data, "workers={workers} ordered frame {i}");
+            assert_eq!(b.view, i, "ordered() must restore orbit order");
+        }
+    }
+}
+
+#[test]
+fn session_delta_with_gating_matches_cold_session() {
+    // Gate + delta together: the carried pyramid geometry must not perturb
+    // gated pixels or the gate counters.
+    let cfg = |delta: bool| ExperimentConfig {
+        scene: "garden".into(),
+        scene_scale: 0.01,
+        resolution: 64,
+        frames: 20,
+        workers: 1,
+        gate: Some(true),
+        plan_delta: Some(delta),
+        ..Default::default()
+    };
+    let cold = Session::builder(cfg(false)).build().unwrap();
+    let delta = Session::builder(cfg(true)).build().unwrap();
+    assert!(delta.options().gate.active(), "gate must reach the options");
+    for i in 0..cold.num_frames() {
+        let a = cold.frame(i, &Golden).unwrap();
+        let b = delta.frame(i, &Golden).unwrap();
+        assert_eq!(a.image.data, b.image.data, "view {i}");
+        assert_eq!(
+            format!("{:?}", a.stats),
+            format!("{:?}", b.stats),
+            "view {i}: stats (incl. gate counters)"
+        );
+    }
+    let st = delta.plan_cache_stats();
+    assert!(st.delta_builds > 0, "sequential orbit must exercise the delta path");
+}
+
+#[test]
+fn large_pose_jump_makes_the_session_fall_back_cold() {
+    // A 3-frame orbit steps 120° per view — far beyond the 0.35 rad
+    // default — so every plan must cold-build even with delta enabled,
+    // and the output must still match a delta-off session.
+    let cfg = |delta: bool| ExperimentConfig {
+        scene: "truck".into(),
+        scene_scale: 0.01,
+        resolution: 64,
+        frames: 3,
+        workers: 1,
+        plan_delta: Some(delta),
+        ..Default::default()
+    };
+    let cold = Session::builder(cfg(false)).build().unwrap();
+    let delta = Session::builder(cfg(true)).build().unwrap();
+    for i in 0..cold.num_frames() {
+        let a = cold.frame(i, &Golden).unwrap();
+        let b = delta.frame(i, &Golden).unwrap();
+        assert_eq!(a.image.data, b.image.data, "view {i}");
+    }
+    let st = delta.plan_cache_stats();
+    assert_eq!(st.delta_builds, 0, "every step exceeds max_angle");
+    assert_eq!(st.builds, 3);
+    assert_eq!(st.builds + st.delta_builds + st.hits, st.requests);
+}
+
+#[test]
+fn empty_scene_advance_matches_cold() {
+    // Degenerate: nothing survives projection (the lone Gaussian sits
+    // behind every orbit camera's far plane) — all tile lists are empty
+    // and advance must agree with build on the empty structure.
+    let mut scene = Scene::with_capacity(1, "empty");
+    scene.push(
+        v3(0.0, 5000.0, 0.0), // far outside every view frustum
+        Quat::IDENTITY,
+        v3(0.1, 0.1, 0.1),
+        0.9,
+        [1.0; 3],
+        [[0.0; 3]; 3],
+    );
+    let cams = orbit(48, 24);
+    let opts = delta_opts(false);
+    let prev = FramePlan::build(&scene, &cams[0], &opts);
+    assert!(prev.lists.iter().all(|l| l.is_empty()), "scene must be culled");
+    let out = prev.advance_detailed(&scene, &cams[1], &opts);
+    assert!(!out.stats.fell_back);
+    assert_eq!(out.stats.entries_carried, 0);
+    let cold = FramePlan::build(&scene, &cams[1], &opts);
+    assert_plans_bit_identical(&out.plan, &cold, "empty scene");
+}
+
+#[test]
+fn single_gaussian_scene_advances_around_a_full_orbit() {
+    // Degenerate: one Gaussian, chained through a whole 24-view orbit —
+    // it enters and leaves tiles (and possibly the frustum) along the way.
+    let mut scene = Scene::with_capacity(1, "single");
+    scene.push(
+        v3(0.4, 0.6, -0.2),
+        Quat::from_axis_angle(v3(0.0, 1.0, 0.0), 0.7),
+        v3(0.5, 0.3, 0.4),
+        0.8,
+        [0.9, 0.4, 0.2],
+        [[0.0; 3]; 3],
+    );
+    let cams = orbit(64, 24);
+    for gate in [false, true] {
+        let opts = delta_opts(gate);
+        let mut plan = FramePlan::build(&scene, &cams[0], &opts);
+        for (i, cam) in cams.iter().enumerate().skip(1) {
+            let out = plan.advance_detailed(&scene, cam, &opts);
+            assert!(!out.stats.fell_back, "gate={gate} step {i}");
+            let cold = FramePlan::build(&scene, cam, &opts);
+            assert_plans_bit_identical(
+                &out.plan,
+                &cold,
+                &format!("single gaussian gate={gate} step {i}"),
+            );
+            plan = out.plan;
+        }
+    }
+}
+
+/// The PJRT backend inherits the delta contract through the Session: a
+/// plan-delta session renders the same pixels as a cold one through the
+/// batched tile executor. Runs against the offline stub runtime so it
+/// executes in the default CI lane; a real-XLA build cannot parse the
+/// synthesized placeholders and skips.
+#[cfg(feature = "pjrt")]
+mod pjrt_delta {
+    use super::*;
+    use flicker::coordinator::Pjrt;
+    use flicker::runtime::{write_stub_artifacts, Runtime};
+
+    fn stub_runtime() -> Option<Runtime> {
+        let dir = std::env::temp_dir().join("flicker_plan_delta_stub");
+        write_stub_artifacts(&dir, 64, 16, 16, 8).unwrap();
+        match Runtime::load(&dir) {
+            Ok(rt) => Some(rt),
+            Err(e) => {
+                eprintln!("skipping: stub runtime unavailable ({e})");
+                None
+            }
+        }
+    }
+
+    #[test]
+    fn pjrt_session_delta_is_bit_identical_to_cold() {
+        let Some(rt) = stub_runtime() else { return };
+        let pjrt = Pjrt::new(&rt);
+        let cfg = |delta: bool| ExperimentConfig {
+            scene: "truck".into(),
+            scene_scale: 0.01,
+            resolution: 64,
+            frames: 20,
+            workers: 1,
+            batch: 4,
+            plan_delta: Some(delta),
+            ..Default::default()
+        };
+        let cold = Session::builder(cfg(false)).build().unwrap();
+        let delta = Session::builder(cfg(true)).build().unwrap();
+        let a = cold.stream(&pjrt).ordered().unwrap();
+        let b = delta.stream(&pjrt).ordered().unwrap();
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.image.data, y.image.data, "view {}", x.view);
+            assert_eq!(y.backend, "pjrt");
+        }
+        let st = delta.plan_cache_stats();
+        assert!(st.delta_builds > 0, "sequential orbit must exercise the delta path");
+        assert_eq!(st.builds + st.delta_builds + st.hits, st.requests);
+    }
+}

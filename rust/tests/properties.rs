@@ -8,10 +8,14 @@ use flicker::cat::pr::{acu_weight, pr_weights, shared_threshold};
 use flicker::numeric::fp16::quantize_f16;
 use flicker::numeric::fp8::{quantize_fp8, Fp8Format};
 use flicker::numeric::linalg::{v2, v3, Quat, Sym2};
-use flicker::render::project::project_one;
+use flicker::render::delta::{motion_bound, DeltaConfig};
+use flicker::render::plan::FramePlan;
+use flicker::render::project::{project_one, project_scene};
+use flicker::render::raster::{RenderOptions, VanillaMasks};
 use flicker::render::sort::{depth_key, sort_by_key16};
 use flicker::render::tile::{intersects_aabb, min_quad_on_rect, Rect};
 use flicker::scene::gaussian::Scene;
+use flicker::scene::synthetic::{generate_scaled, preset};
 use flicker::sim::pipe::run_subtile;
 use flicker::sim::workload::{GaussianJob, SubtileStream};
 use flicker::util::prop::{check, ensure, PropConfig};
@@ -315,6 +319,121 @@ fn prop_pipe_conserves_work_and_depth_monotone() {
                     )?;
                 }
                 prev_cycles = Some(st.cycles);
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_delta_chain_equals_cold_build() {
+    // Temporal plan deltas: chaining `FramePlan::advance` along a random
+    // smooth pose path stays bitwise equal to cold builds — tile lists
+    // (hence depth order) at every link, pixels at the end of the chain.
+    let scene = generate_scaled(&preset("truck"), 0.008);
+    let opts = RenderOptions {
+        plan_delta: DeltaConfig::on(),
+        ..RenderOptions::default()
+    };
+    check(
+        "advance chain == cold builds (bitwise)",
+        PropConfig::default(),
+        |rng, size| {
+            let intr = Intrinsics::from_fov(48, 48, 1.2);
+            let target = v3(0.0, 0.5, 0.0);
+            let mk = move |az: f32, h: f32| {
+                Camera::look_at(
+                    intr,
+                    v3(12.0 * az.cos(), h, 12.0 * az.sin()),
+                    target,
+                    v3(0.0, 1.0, 0.0),
+                )
+            };
+            let mut az = rng.range_f32(0.0, std::f32::consts::TAU);
+            let mut h = rng.range_f32(1.5, 4.0);
+            let len = 1 + (size * 7.0) as usize; // chains of 1..=8 steps
+            let mut cams = vec![mk(az, h)];
+            for _ in 0..len {
+                // Bounded perturbations: each step stays under the default
+                // max_angle (0.35 rad) so the delta path must engage.
+                az += rng.range_f32(0.02, 0.22) * if rng.chance(0.5) { 1.0 } else { -1.0 };
+                h = (h + rng.range_f32(-0.3, 0.3)).clamp(1.0, 4.5);
+                cams.push(mk(az, h));
+            }
+            cams
+        },
+        |cams| {
+            let mut plan = FramePlan::build(&scene, &cams[0], &opts);
+            for (i, cam) in cams.iter().enumerate().skip(1) {
+                let out = plan.advance_detailed(&scene, cam, &opts);
+                ensure(
+                    !out.stats.fell_back,
+                    format!("step {i} fell back at angle {}", out.stats.pose_angle),
+                )?;
+                let cold = FramePlan::build(&scene, cam, &opts);
+                ensure(
+                    out.plan.lists == cold.lists,
+                    format!("step {i}: tile lists / depth order diverged"),
+                )?;
+                plan = out.plan;
+            }
+            let adv = plan.render(&VanillaMasks, None);
+            let cold =
+                FramePlan::build(&scene, cams.last().unwrap(), &opts).render(&VanillaMasks, None);
+            let a: Vec<u32> = adv.image.data.iter().map(|x| x.to_bits()).collect();
+            let b: Vec<u32> = cold.image.data.iter().map(|x| x.to_bits()).collect();
+            ensure(a == b, "chain-final pixels diverged from cold build")?;
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_motion_bound_is_conservative() {
+    // The per-splat motion bound must upper-bound the actual screen-space
+    // travel of every id-matched splat under a random bounded pose change
+    // — it is the skip threshold a hardware delta pipeline would trust.
+    let scene = generate_scaled(&preset("garden"), 0.008);
+    check(
+        "motion bound covers actual projected motion",
+        PropConfig::default(),
+        |rng, size| {
+            let intr = Intrinsics::from_fov(96, 96, 1.2);
+            let target = v3(0.0, 0.5, 0.0);
+            let mk = move |az: f32, h: f32| {
+                Camera::look_at(
+                    intr,
+                    v3(12.0 * az.cos(), h, 12.0 * az.sin()),
+                    target,
+                    v3(0.0, 1.0, 0.0),
+                )
+            };
+            let az = rng.range_f32(0.0, std::f32::consts::TAU);
+            let h = rng.range_f32(1.5, 4.0);
+            let step = size * rng.range_f32(0.01, 0.3)
+                * if rng.chance(0.5) { 1.0 } else { -1.0 };
+            let h2 = (h + rng.range_f32(-0.4, 0.4)).clamp(1.0, 4.5);
+            (mk(az, h), mk(az + step, h2))
+        },
+        |(c0, c1)| {
+            let a = project_scene(&scene, c0);
+            let b = project_scene(&scene, c1);
+            let (mut i, mut j) = (0usize, 0usize);
+            while i < a.len() && j < b.len() {
+                match a[i].id.cmp(&b[j].id) {
+                    std::cmp::Ordering::Less => i += 1,
+                    std::cmp::Ordering::Greater => j += 1,
+                    std::cmp::Ordering::Equal => {
+                        let moved = (b[j].mean - a[i].mean).norm();
+                        let bound = motion_bound(c0, c1, &a[i]);
+                        ensure(
+                            moved <= bound,
+                            format!("splat {}: moved {moved}px > bound {bound}px", a[i].id),
+                        )?;
+                        i += 1;
+                        j += 1;
+                    }
+                }
             }
             Ok(())
         },

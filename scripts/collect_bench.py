@@ -1,12 +1,14 @@
 #!/usr/bin/env python3
-"""Merge bench JSON sidecars into one commit-stamped BENCH_6.json.
+"""Merge bench JSON sidecars into one commit-stamped BENCH_7.json.
 
-The bench-record CI lane (push-to-main only) runs the hotpath and
-fig11_gating benches in quick mode, then calls this script to fold their
-`rust/target/bench-reports/*.json` sidecars into a single artifact that
-starts the repo's perf trajectory: plan build/reuse timings, PJRT
-single-vs-batched dispatch, and the coarse-to-fine gating rows
-(splats_submitted, per-level reject counts, gating on/off).
+The bench-record CI lane (push-to-main only) runs the hotpath,
+fig11_gating, and fig12_temporal benches in quick mode, then calls this
+script to fold their `rust/target/bench-reports/*.json` sidecars into a
+single artifact that extends the repo's perf trajectory: plan
+build/reuse/delta timings, PJRT single-vs-batched dispatch, the
+coarse-to-fine gating rows (splats_submitted, per-level reject counts,
+gating on/off), and the temporal plan-delta amortization sweep
+(amortized_ratio, rebinned_frac, entries_carried per orbit step).
 
 Stdlib only — the CI image must not need pip installs.
 """
@@ -15,11 +17,11 @@ import json
 import os
 import sys
 
-REPORTS = ["hotpath", "fig11_gating"]
+REPORTS = ["hotpath", "fig11_gating", "fig12_temporal"]
 
 
 def main():
-    out_path = sys.argv[1] if len(sys.argv) > 1 else "BENCH_6.json"
+    out_path = sys.argv[1] if len(sys.argv) > 1 else "BENCH_7.json"
     report_dir = os.environ.get(
         "FLICKER_BENCH_REPORTS", os.path.join("rust", "target", "bench-reports")
     )
