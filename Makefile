@@ -28,14 +28,15 @@ bench-smoke:
 
 # Record the perf trajectory (CI: bench-record lane, push-to-main only):
 # run hotpath (with the pjrt feature so the exec_tile_single/batched rows
-# land, stub-backed), the gating bench, and the temporal plan-delta bench
-# in quick mode, then merge their JSON sidecars into a commit-stamped
-# BENCH_7.json.
+# land, stub-backed), the gating bench, the temporal plan-delta bench, and
+# the adaptive-precision bench in quick mode, then merge their JSON
+# sidecars into a commit-stamped BENCH_8.json.
 bench-record:
 	$(CARGO) bench --features pjrt --bench hotpath -- --quick
 	$(CARGO) bench --bench fig11_gating -- --quick
 	$(CARGO) bench --bench fig12_temporal -- --quick
-	$(PYTHON) scripts/collect_bench.py BENCH_7.json
+	$(CARGO) bench --bench fig13_precision -- --quick
+	$(PYTHON) scripts/collect_bench.py BENCH_8.json
 
 # Heavier property coverage (CI: prop-heavy lane): 512 generated cases per
 # property across the property suite (including the temporal plan-delta
@@ -53,8 +54,10 @@ examples:
 fmt:
 	$(CARGO) fmt --all -- --check
 
+# --all-features keeps the pjrt-gated code (executor waves, stub kernels)
+# under the same lint bar as the default build.
 clippy:
-	$(CARGO) clippy --all-targets -- -D warnings
+	$(CARGO) clippy --all-targets --all-features -- -D warnings
 
 # API docs must build warning-free (missing_docs is warn at the crate
 # root), and the doctest examples must pass.

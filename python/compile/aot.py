@@ -36,6 +36,15 @@ def f32(*shape):
 
 def entries():
     n, m, t, b = model.N_GAUSS, model.N_PR, model.TILE, model.N_BATCH
+    batched_specs = (
+        f32(b, n, 2),
+        f32(b, n, 3),
+        f32(b, n),
+        f32(b, n, 3),
+        f32(b, 2),
+        f32(b, m, 2),
+        f32(b, m, 2),
+    )
     return {
         "project": (
             model.project_entry,
@@ -57,18 +66,15 @@ def entries():
         # (manifest field n_batch). The Rust executor drains its tile
         # queue through this artifact and pads ragged final batches with
         # zero-opacity rows (exact no-ops through CAT and blending).
-        "render_tile_batched": (
-            model.render_tiles_entry,
-            (
-                f32(b, n, 2),
-                f32(b, n, 3),
-                f32(b, n),
-                f32(b, n, 3),
-                f32(b, 2),
-                f32(b, m, 2),
-                f32(b, m, 2),
-            ),
-        ),
+        "render_tile_batched": (model.render_tiles_entry, batched_specs),
+        # Per-precision-class monomorphizations of the batched render:
+        # the adaptive-precision executor groups classed tiles into
+        # precision-pure waves and dispatches each wave to the artifact
+        # whose CAT datapath matches its class (fp32 waves reuse the
+        # plain `render_tile_batched`). Same shapes, same padding rules.
+        "render_tile_batched_fp16": (model.render_tiles_fp16_entry, batched_specs),
+        "render_tile_batched_fp8": (model.render_tiles_fp8_entry, batched_specs),
+        "render_tile_batched_mixed": (model.render_tiles_mixed_entry, batched_specs),
         "_unused_tile": (lambda: None, (t,)),  # keeps TILE in the manifest
     }
 

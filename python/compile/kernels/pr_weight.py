@@ -7,9 +7,12 @@ per-axis terms s_x, s_y are computed once per (PR, Gaussian) pair and the
 four corners are assembled by cheap adds, mirroring the ~2x multiply saving
 of the hardware unit.
 
-The mixed-precision variant emulates the CTU datapath with
-quantize-dequantize pairs (fp16 deltas -> fp8 products -> fp16 accumulate);
-on a real TPU these map onto bf16 MXU passes.
+The precision variants emulate the CTU datapath with quantize-dequantize
+pairs at the exact points the hardware converts (rust/src/cat/mixed.rs is
+the authoritative scheme table): ``fp16`` runs everything at FP16, ``fp8``
+everything at E4M3 including the absolute coordinates, and ``mixed`` keeps
+line 1 (the subtract) at FP16 before narrowing to FP8 products with FP16
+accumulation. On a real TPU these map onto bf16 MXU passes.
 
 All kernels run with interpret=True: the CPU PJRT plugin cannot execute
 Mosaic custom-calls, and correctness (not CPU wallclock) is the goal of the
@@ -39,33 +42,42 @@ def _q8(x):
     return jnp.clip(x, -448.0, 448.0).astype(jnp.float8_e4m3fn).astype(jnp.float32)
 
 
-def _pr_weight_kernel(mu_ref, conic_ref, ptop_ref, pbot_ref, out_ref, *, mixed):
+def _id(x):
+    return x
+
+
+# Per-precision rounding plan: (delta, conic, multiply, accumulate).
+# ``delta(p, m)`` is Alg. 1 line 1; the rest follow rust/src/cat/mixed.rs.
+_SCHEMES = {
+    "fp32": (lambda p, m: p - m, _id, _id, _id),
+    # All operands + ops at FP16.
+    "fp16": (lambda p, m: _q16(_q16(p) - _q16(m)), _q16, _q16, _q16),
+    # Everything at E4M3 — including the absolute coordinates.
+    "fp8": (lambda p, m: _q8(_q8(p) - _q8(m)), _q8, _q8, _q8),
+    # Line 1 at FP16, then convert to FP8 (the paper's key trick:
+    # subtract *before* narrowing, so relative position survives);
+    # FP8 products, FP16 accumulation (QAU).
+    "mixed": (lambda p, m: _q8(_q16(_q16(p) - _q16(m))), _q8, _q8, _q16),
+}
+
+PRECISIONS = tuple(_SCHEMES)
+
+
+def _pr_weight_kernel(mu_ref, conic_ref, ptop_ref, pbot_ref, out_ref, *, precision):
     """One (BLOCK_M, BLOCK_N) grid step."""
     mu = mu_ref[...]          # (BLOCK_N, 2)
     conic = conic_ref[...]    # (BLOCK_N, 3)
     ptop = ptop_ref[...]      # (BLOCK_M, 2)
     pbot = pbot_ref[...]      # (BLOCK_M, 2)
 
-    if mixed:
-        # Line 1 at FP16, then convert to FP8 (the paper's key trick:
-        # subtract *before* narrowing, so relative position survives).
-        dtx = _q8(_q16(_q16(ptop[:, None, 0]) - _q16(mu[None, :, 0])))
-        dty = _q8(_q16(_q16(ptop[:, None, 1]) - _q16(mu[None, :, 1])))
-        dbx = _q8(_q16(_q16(pbot[:, None, 0]) - _q16(mu[None, :, 0])))
-        dby = _q8(_q16(_q16(pbot[:, None, 1]) - _q16(mu[None, :, 1])))
-        ca = _q8(conic[None, :, 0])
-        cb = _q8(conic[None, :, 1])
-        cc = _q8(conic[None, :, 2])
-        qm, qa = _q8, _q16
-    else:
-        dtx = ptop[:, None, 0] - mu[None, :, 0]
-        dty = ptop[:, None, 1] - mu[None, :, 1]
-        dbx = pbot[:, None, 0] - mu[None, :, 0]
-        dby = pbot[:, None, 1] - mu[None, :, 1]
-        ca = conic[None, :, 0]
-        cb = conic[None, :, 1]
-        cc = conic[None, :, 2]
-        qm = qa = lambda x: x
+    delta, qc, qm, qa = _SCHEMES[precision]
+    dtx = delta(ptop[:, None, 0], mu[None, :, 0])
+    dty = delta(ptop[:, None, 1], mu[None, :, 1])
+    dbx = delta(pbot[:, None, 0], mu[None, :, 0])
+    dby = delta(pbot[:, None, 1], mu[None, :, 1])
+    ca = qc(conic[None, :, 0])
+    cb = qc(conic[None, :, 1])
+    cc = qc(conic[None, :, 2])
 
     # Lines 2-3: per-axis quadratic terms (shared between corners).
     s_tx = qm(qm(0.5 * dtx * dtx) * ca)
@@ -85,18 +97,20 @@ def _pr_weight_kernel(mu_ref, conic_ref, ptop_ref, pbot_ref, out_ref, *, mixed):
     out_ref[...] = jnp.stack([e0, e1, e2, e3], axis=-1)
 
 
-@functools.partial(jax.jit, static_argnames=("mixed",))
-def pr_weights(mu, conic, p_top, p_bot, mixed=False):
+@functools.partial(jax.jit, static_argnames=("precision",))
+def pr_weights(mu, conic, p_top, p_bot, precision="fp32"):
     """Batched Alg. 1 on the Pallas grid.
 
     Shapes: mu (N,2), conic (N,3), p_top/p_bot (M,2) -> (M,N,4).
     M must be a multiple of BLOCK_M and N of BLOCK_N (the coordinator pads).
+    ``precision`` is one of ``PRECISIONS`` ("fp32"|"fp16"|"fp8"|"mixed").
     """
+    assert precision in _SCHEMES, f"unknown precision {precision!r}"
     m, n = p_top.shape[0], mu.shape[0]
     assert m % BLOCK_M == 0, f"M={m} not a multiple of {BLOCK_M}"
     assert n % BLOCK_N == 0, f"N={n} not a multiple of {BLOCK_N}"
     grid = (m // BLOCK_M, n // BLOCK_N)
-    kernel = functools.partial(_pr_weight_kernel, mixed=mixed)
+    kernel = functools.partial(_pr_weight_kernel, precision=precision)
     return pl.pallas_call(
         kernel,
         grid=grid,
@@ -112,12 +126,18 @@ def pr_weights(mu, conic, p_top, p_bot, mixed=False):
     )(mu, conic, p_top, p_bot)
 
 
-@jax.jit
-def cat_masks(mu, conic, opacity, p_top, p_bot):
+# The Eq. 2 threshold rounds on the narrow side of the comparator: FP16
+# for the fp16 and mixed schemes, E4M3 for fp8 (rust/src/cat/mixed.rs
+# `shared_threshold_quant`).
+_LHS_Q = {"fp32": _id, "fp16": _q16, "fp8": _q8, "mixed": _q16}
+
+
+@functools.partial(jax.jit, static_argnames=("precision",))
+def cat_masks(mu, conic, opacity, p_top, p_bot, precision="fp32"):
     """Eq. 2 pass masks from the Pallas weights: ln(255*o) > E.
 
     Returns (M, N, 4) float32 in {0,1} (bool upsets some PJRT paths).
     """
-    e = pr_weights(mu, conic, p_top, p_bot, mixed=False)
-    lhs = jnp.log(255.0 * jnp.maximum(opacity, 1e-12))
+    e = pr_weights(mu, conic, p_top, p_bot, precision=precision)
+    lhs = _LHS_Q[precision](jnp.log(255.0 * jnp.maximum(opacity, 1e-12)))
     return (lhs[None, :, None] > e).astype(jnp.float32)

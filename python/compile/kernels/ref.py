@@ -177,27 +177,65 @@ def quantize_fp8(x):
     return jnp.clip(x, -448.0, 448.0).astype(jnp.float8_e4m3fn).astype(jnp.float32)
 
 
+def _identity(x):
+    return x
+
+
+# Per-precision rounding plan (delta, conic, multiply, accumulate) —
+# mirrors rust/src/cat/mixed.rs `pr_weights_quant` scheme for scheme.
+_QUANT_SCHEMES = {
+    "fp32": (lambda p, m: p - m, _identity, _identity, _identity),
+    "fp16": (
+        lambda p, m: quantize_fp16(quantize_fp16(p) - quantize_fp16(m)),
+        quantize_fp16,
+        quantize_fp16,
+        quantize_fp16,
+    ),
+    "fp8": (
+        lambda p, m: quantize_fp8(quantize_fp8(p) - quantize_fp8(m)),
+        quantize_fp8,
+        quantize_fp8,
+        quantize_fp8,
+    ),
+    "mixed": (
+        lambda p, m: quantize_fp8(quantize_fp16(quantize_fp16(p) - quantize_fp16(m))),
+        quantize_fp8,
+        quantize_fp8,
+        quantize_fp16,
+    ),
+}
+
+
+def pr_weights_quant_ref(mu, conic, p_top, p_bot, precision):
+    """Alg. 1 under a precision scheme (paper Sec. IV-C): quantize at the
+    exact points the CTU hardware converts. ``fp16`` runs everything at
+    FP16, ``fp8`` everything at E4M3 including the absolute coordinates,
+    and ``mixed`` keeps line 1 at FP16 before narrowing to FP8 products
+    with FP16 accumulation (QAU)."""
+    delta, qc, qm, qa = _QUANT_SCHEMES[precision]
+    dtx = delta(p_top[:, None, 0], mu[None, :, 0])
+    dty = delta(p_top[:, None, 1], mu[None, :, 1])
+    dbx = delta(p_bot[:, None, 0], mu[None, :, 0])
+    dby = delta(p_bot[:, None, 1], mu[None, :, 1])
+    ca = qc(conic[None, :, 0])
+    cb = qc(conic[None, :, 1])
+    cc = qc(conic[None, :, 2])
+    s_tx = qm(qm(0.5 * dtx * dtx) * ca)
+    s_ty = qm(qm(0.5 * dty * dty) * cc)
+    s_bx = qm(qm(0.5 * dbx * dbx) * ca)
+    s_by = qm(qm(0.5 * dby * dby) * cc)
+    t0 = qm(qm(dtx * dty) * cb)
+    t1 = qm(qm(dbx * dty) * cb)
+    t2 = qm(qm(dtx * dby) * cb)
+    t3 = qm(qm(dbx * dby) * cb)
+    e0 = qa(qa(s_tx + s_ty) + t0)
+    e1 = qa(qa(s_bx + s_ty) + t1)
+    e2 = qa(qa(s_tx + s_by) + t2)
+    e3 = qa(qa(s_bx + s_by) + t3)
+    return jnp.stack([e0, e1, e2, e3], axis=-1)
+
+
 def pr_weights_mixed_ref(mu, conic, p_top, p_bot):
     """Mixed-precision Alg. 1 (paper Sec. IV-C): deltas in FP16, converted
     to FP8 for the quadratic stage, FP16 accumulation (QAU)."""
-    q16, q8 = quantize_fp16, quantize_fp8
-    dtx = q8(q16(q16(p_top[:, None, 0]) - q16(mu[None, :, 0])))
-    dty = q8(q16(q16(p_top[:, None, 1]) - q16(mu[None, :, 1])))
-    dbx = q8(q16(q16(p_bot[:, None, 0]) - q16(mu[None, :, 0])))
-    dby = q8(q16(q16(p_bot[:, None, 1]) - q16(mu[None, :, 1])))
-    ca = q8(conic[None, :, 0])
-    cb = q8(conic[None, :, 1])
-    cc = q8(conic[None, :, 2])
-    s_tx = q8(q8(0.5 * dtx * dtx) * ca)
-    s_ty = q8(q8(0.5 * dty * dty) * cc)
-    s_bx = q8(q8(0.5 * dbx * dbx) * ca)
-    s_by = q8(q8(0.5 * dby * dby) * cc)
-    t0 = q8(q8(dtx * dty) * cb)
-    t1 = q8(q8(dbx * dty) * cb)
-    t2 = q8(q8(dtx * dby) * cb)
-    t3 = q8(q8(dbx * dby) * cb)
-    e0 = q16(q16(s_tx + s_ty) + t0)
-    e1 = q16(q16(s_bx + s_ty) + t1)
-    e2 = q16(q16(s_tx + s_by) + t2)
-    e3 = q16(q16(s_bx + s_by) + t3)
-    return jnp.stack([e0, e1, e2, e3], axis=-1)
+    return pr_weights_quant_ref(mu, conic, p_top, p_bot, "mixed")

@@ -8,6 +8,11 @@ Entry points (each AOT-lowered by aot.py to one HLO artifact):
 * ``cat_masks_entry``  - Eq. 2 mini-tile pass decisions for a batch of PRs.
 * ``render_tile_entry``- CAT-masked tile render: CAT masks gate which splats
   the blend loop sees, reproducing CTU -> FIFO -> VRU functionally.
+* ``render_tiles_entry`` and its ``_fp16``/``_fp8``/``_mixed`` variants -
+  batched renders monomorphized per CAT precision class. PJRT executables
+  cannot branch on a runtime precision flag, so the adaptive-precision
+  executor dispatches each precision-pure wave to its own artifact
+  (``render_tile_batched[_fp16|_fp8|_mixed]``).
 
 Shapes are fixed at lowering time (PJRT executables are monomorphic); the
 Rust coordinator pads batches to these shapes. Padding convention: splats
@@ -41,7 +46,7 @@ def project_entry(pos_cam, cov6_cam, cam_params):
 
 def pr_weight_entry(mu, conic, p_top, p_bot):
     """(N,2), (N,3), (M,2), (M,2) -> (M,N,4) Alg.1 weights."""
-    return (pr_weights(mu, conic, p_top, p_bot, mixed=False),)
+    return (pr_weights(mu, conic, p_top, p_bot, precision="fp32"),)
 
 
 def cat_masks_entry(mu, conic, opacity, p_top, p_bot):
@@ -49,26 +54,33 @@ def cat_masks_entry(mu, conic, opacity, p_top, p_bot):
     return (cat_masks(mu, conic, opacity, p_top, p_bot),)
 
 
-def render_tile_entry(mu, conic, opacity, color, origin, p_top, p_bot):
+def _render_tile(mu, conic, opacity, color, origin, p_top, p_bot, precision):
     """CAT-gated tile render (the full L1+L2 composition).
 
     The CAT decision for a splat gates its opacity before blending: a splat
     whose PR corners all fail Eq. 2 in every mini-tile is skipped exactly
     like the hardware drops it from the FIFOs. Gating by opacity keeps the
-    blend kernel oblivious to CAT, as the VRUs are.
+    blend kernel oblivious to CAT, as the VRUs are. ``precision`` quantizes
+    the CAT decision datapath only — blending stays fp32 in every class,
+    exactly like the Rust GoldenCat semantics.
 
     Returns rgb (16,16,3), transmittance (16,16), skip mask (N,).
     """
-    masks = cat_masks(mu, conic, opacity, p_top, p_bot)  # (M, N, 4)
+    masks = cat_masks(mu, conic, opacity, p_top, p_bot, precision=precision)
     passes = jnp.max(masks, axis=(0, 2))  # (N,) 1 if any leader pixel passes
     gated_opacity = opacity * passes
     rgb, trans = blend_tile(mu, conic, gated_opacity, color, origin)
     return rgb, trans, passes
 
 
-def render_tiles_entry(mu, conic, opacity, color, origin, p_top, p_bot):
-    """Batched tile render: `render_tile_entry` vmapped over a leading
-    tile-batch dim B, so one PJRT dispatch renders B tiles.
+def render_tile_entry(mu, conic, opacity, color, origin, p_top, p_bot):
+    """Single-tile fp32 render (see `_render_tile`)."""
+    return _render_tile(mu, conic, opacity, color, origin, p_top, p_bot, "fp32")
+
+
+def _render_tiles(precision):
+    """Batched tile render at one CAT precision: `_render_tile` vmapped
+    over a leading tile-batch dim B, so one PJRT dispatch renders B tiles.
 
     Shapes gain a leading B: mu (B,N,2), conic (B,N,3), opacity (B,N),
     color (B,N,3), origin (B,2), p_top/p_bot (B,M,2). Returns rgb
@@ -77,4 +89,16 @@ def render_tiles_entry(mu, conic, opacity, color, origin, p_top, p_bot):
     never interact, so slots with zero-opacity padding are exact no-ops
     and the Rust executor may fill a ragged final batch freely.
     """
-    return jax.vmap(render_tile_entry)(mu, conic, opacity, color, origin, p_top, p_bot)
+
+    def entry(mu, conic, opacity, color, origin, p_top, p_bot):
+        return jax.vmap(
+            lambda *a: _render_tile(*a, precision)
+        )(mu, conic, opacity, color, origin, p_top, p_bot)
+
+    return entry
+
+
+render_tiles_entry = _render_tiles("fp32")
+render_tiles_fp16_entry = _render_tiles("fp16")
+render_tiles_fp8_entry = _render_tiles("fp8")
+render_tiles_mixed_entry = _render_tiles("mixed")

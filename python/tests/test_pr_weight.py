@@ -1,12 +1,21 @@
 """Pallas PR-weight kernel vs pure-jnp oracle (the core L1 signal)."""
 
+import functools
+
 import numpy as np
 import pytest
 from hypothesis import given, settings, strategies as st
 
+import jax
 import jax.numpy as jnp
 
-from compile.kernels.pr_weight import BLOCK_M, BLOCK_N, cat_masks, pr_weights
+from compile.kernels.pr_weight import (
+    BLOCK_M,
+    BLOCK_N,
+    PRECISIONS,
+    cat_masks,
+    pr_weights,
+)
 from compile.kernels import ref
 
 
@@ -42,10 +51,30 @@ def test_matches_ref_multi_block():
 def test_mixed_matches_mixed_ref():
     rng = np.random.default_rng(2)
     mu, conic, _, pt, pb = make_case(rng, BLOCK_M, BLOCK_N)
-    got = pr_weights(jnp.array(mu), jnp.array(conic), jnp.array(pt), jnp.array(pb), mixed=True)
+    got = pr_weights(
+        jnp.array(mu), jnp.array(conic), jnp.array(pt), jnp.array(pb), precision="mixed"
+    )
     want = ref.pr_weights_mixed_ref(
         jnp.array(mu), jnp.array(conic), jnp.array(pt), jnp.array(pb)
     )
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-6, atol=1e-6)
+
+
+@pytest.mark.parametrize("precision", PRECISIONS)
+def test_quant_schemes_match_ref(precision):
+    # One contract per precision class: the Pallas kernel and the pure-jnp
+    # oracle insert quantization at the same Alg. 1 points. The oracle runs
+    # under jit so both sides get XLA's convert-chain fusion — XLA folds
+    # f32->f16->f32 round-trips around an op into genuine f16 arithmetic,
+    # whose double rounding differs from eager op-by-op rounding by one
+    # f16 ulp on rare inputs.
+    rng = np.random.default_rng(7)
+    mu, conic, _, pt, pb = make_case(rng, BLOCK_M, BLOCK_N)
+    got = pr_weights(
+        jnp.array(mu), jnp.array(conic), jnp.array(pt), jnp.array(pb), precision=precision
+    )
+    oracle = jax.jit(functools.partial(ref.pr_weights_quant_ref, precision=precision))
+    want = oracle(jnp.array(mu), jnp.array(conic), jnp.array(pt), jnp.array(pb))
     np.testing.assert_allclose(np.asarray(got), np.asarray(want), rtol=1e-6, atol=1e-6)
 
 
@@ -63,7 +92,9 @@ def test_mixed_close_to_fp32_near_gaussian():
     pb = pt + 3.0
     full = np.asarray(pr_weights(jnp.array(mu), jnp.array(conic), jnp.array(pt), jnp.array(pb)))
     mix = np.asarray(
-        pr_weights(jnp.array(mu), jnp.array(conic), jnp.array(pt), jnp.array(pb), mixed=True)
+        pr_weights(
+            jnp.array(mu), jnp.array(conic), jnp.array(pt), jnp.array(pb), precision="mixed"
+        )
     )
     rel = np.abs(mix - full) / (1.0 + np.abs(full))
     # E4M3 carries ~6% per-operand rounding; squared terms land ~10-12%.

@@ -1,0 +1,118 @@
+//! Adaptive-precision bench (paper §IV-C applied per tile): what the
+//! contribution-driven tile classing buys. For each evaluation scene it
+//! reports the realized class mix (tile counts and CTU PR counts per
+//! class), the quality cost against a global-fp32 CAT render, and the
+//! CTU energy of the realized mix priced next to running the same frame
+//! entirely at fp32. The per-PR op-mix prices (`sim::energy::pr_pj`) are
+//! recorded once so the JSON is self-describing.
+//!
+//! Emitted as `target/bench-reports/fig13_precision.json`; the
+//! `bench-record` CI lane merges it with the other reports into
+//! `BENCH_8.json`.
+
+mod common;
+
+use flicker::cat::{CatConfig, LeaderMode, Precision};
+use flicker::render::metrics::psnr;
+use flicker::render::plan::FramePlan;
+use flicker::render::precision::{class_index, PrecisionPolicy, CLASSES};
+use flicker::render::raster::RenderOptions;
+use flicker::sim::energy::{frame_energy, pr_pj, EnergyParams};
+use flicker::sim::workload::extract_from_plan;
+use flicker::sim::HwConfig;
+use flicker::util::bench::{black_box, Bencher};
+
+fn main() {
+    let res = common::bench_resolution();
+    let cam = common::bench_camera(res);
+    let mut b = Bencher::new("fig13_precision");
+
+    let cat = CatConfig {
+        mode: LeaderMode::SmoothFocused,
+        precision: Precision::Fp32,
+        stage1: true,
+    };
+    let fp32_opts = RenderOptions::default();
+    let adaptive_opts = RenderOptions {
+        precision: PrecisionPolicy::adaptive(),
+        ..RenderOptions::default()
+    };
+    let hw = HwConfig {
+        cat_precision: Precision::Fp32,
+        ..HwConfig::flicker32()
+    };
+    let energy = EnergyParams::default();
+
+    for c in CLASSES {
+        b.record(&format!("pr_pj/{}", c.name()), pr_pj(&energy, c));
+    }
+
+    for scene_name in ["garden", "truck"] {
+        let scene = common::bench_scene(scene_name);
+        let fp32_plan = FramePlan::build(&scene, &cam, &fp32_opts);
+        let adaptive_plan = FramePlan::build(&scene, &cam, &adaptive_opts);
+        let classes = adaptive_plan
+            .tile_classes()
+            .expect("adaptive plans class every tile");
+
+        // Realized class mix over populated tiles (empty tiles class at
+        // the floor for free and would flatter the shares).
+        let mut tiles = [0usize; 4];
+        let mut populated = 0usize;
+        for (t, class) in classes.iter().enumerate() {
+            if adaptive_plan.lists[t].is_empty() {
+                continue;
+            }
+            populated += 1;
+            tiles[class_index(*class)] += 1;
+        }
+        for c in CLASSES {
+            b.record(
+                &format!("{scene_name}/tiles/{}", c.name()),
+                tiles[class_index(c)] as f64,
+            );
+        }
+        let below = populated - tiles[class_index(Precision::Fp32)];
+        b.record(
+            &format!("{scene_name}/tiles/below_fp32_share"),
+            below as f64 / populated.max(1) as f64,
+        );
+
+        // Quality: adaptive CAT render vs global-fp32 CAT render.
+        let reference = fp32_plan.render(&cat, None);
+        let adaptive = adaptive_plan.render(&cat, None);
+        b.record(
+            &format!("{scene_name}/psnr_vs_fp32"),
+            psnr(&reference.image, &adaptive.image).min(99.0),
+        );
+
+        // CTU energy: realized class mix vs the same frame all-fp32.
+        let wl_adaptive = extract_from_plan(&scene, &adaptive_plan, &hw);
+        let wl_fp32 = extract_from_plan(&scene, &fp32_plan, &hw);
+        for c in CLASSES {
+            b.record(
+                &format!("{scene_name}/ctu_prs/{}", c.name()),
+                wl_adaptive.ctu_prs_by_class[class_index(c)] as f64,
+            );
+        }
+        let e_adaptive = frame_energy(&wl_adaptive, &hw, 0, 0, &energy).ctu_uj;
+        let e_fp32 = frame_energy(&wl_fp32, &hw, 0, 0, &energy).ctu_uj;
+        b.record(&format!("{scene_name}/ctu_uj/adaptive"), e_adaptive);
+        b.record(&format!("{scene_name}/ctu_uj/all_fp32"), e_fp32);
+        b.record(
+            &format!("{scene_name}/ctu_uj/saving"),
+            1.0 - e_adaptive / e_fp32.max(1e-30),
+        );
+
+        // Wall-clock: classing happens at plan time, so the render loop
+        // itself must not pay for the policy.
+        b.bench(&format!("{scene_name}/render_fp32"), || {
+            black_box(fp32_plan.render(&cat, None));
+        });
+        b.bench(&format!("{scene_name}/render_adaptive"), || {
+            black_box(adaptive_plan.render(&cat, None));
+        });
+    }
+
+    b.finish("adaptive precision: class mix, quality, CTU energy");
+}

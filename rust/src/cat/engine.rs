@@ -238,6 +238,17 @@ impl MaskSource for CatConfig {
     fn tile_masks(&self) -> Box<dyn MaskProvider + '_> {
         Box::new(CatEngine::new(*self))
     }
+
+    /// Adaptive-precision hook: the tile's engine runs at the classed
+    /// precision instead of the config's global one. Everything else
+    /// (sampling mode, stage 1) carries over, so a class equal to
+    /// `self.precision` yields the identical provider.
+    fn tile_masks_at(&self, class: Precision) -> Box<dyn MaskProvider + '_> {
+        Box::new(CatEngine::new(CatConfig {
+            precision: class,
+            ..*self
+        }))
+    }
 }
 
 /// GSCore-style mask provider: OBB test per 8×8 sub-tile; every mini-tile of

@@ -29,15 +29,26 @@ pub enum Precision {
 }
 
 impl Precision {
-    /// Parse a CLI/config precision name ("fp32", "fp16", "fp8", "mixed").
+    /// Parse a CLI/config precision name ("fp32", "fp16", "fp8", "mixed"),
+    /// case-insensitively ("FP16" and "Mixed" are accepted).
     pub fn parse(s: &str) -> Option<Precision> {
-        Some(match s {
+        Some(match s.to_ascii_lowercase().as_str() {
             "fp32" => Precision::Fp32,
             "fp16" => Precision::Fp16,
             "fp8" => Precision::Fp8,
             "mixed" => Precision::Mixed,
             _ => return None,
         })
+    }
+
+    /// The canonical CLI/config name of this precision.
+    pub fn name(self) -> &'static str {
+        match self {
+            Precision::Fp32 => "fp32",
+            Precision::Fp16 => "fp16",
+            Precision::Fp8 => "fp8",
+            Precision::Mixed => "mixed",
+        }
     }
 }
 
@@ -342,5 +353,12 @@ mod tests {
         assert_eq!(Precision::parse("mixed"), Some(Precision::Mixed));
         assert_eq!(Precision::parse("fp8"), Some(Precision::Fp8));
         assert_eq!(Precision::parse("x"), None);
+        // Case-insensitive: config files and CLIs disagree about casing.
+        assert_eq!(Precision::parse("FP32"), Some(Precision::Fp32));
+        assert_eq!(Precision::parse("Mixed"), Some(Precision::Mixed));
+        assert_eq!(Precision::parse("fP16"), Some(Precision::Fp16));
+        for p in [Precision::Fp32, Precision::Fp16, Precision::Fp8, Precision::Mixed] {
+            assert_eq!(Precision::parse(p.name()), Some(p));
+        }
     }
 }

@@ -9,6 +9,7 @@ use crate::camera::{orbit_path, Camera, Intrinsics};
 use crate::cat::{LeaderMode, Precision};
 use crate::err;
 use crate::numeric::linalg::v3;
+use crate::render::precision::{PrecisionMode, PrecisionPolicy, PrecisionThresholds};
 use crate::render::raster::RenderOptions;
 use crate::render::tile::Strategy;
 use crate::scene::gaussian::Scene;
@@ -32,8 +33,12 @@ pub struct ExperimentConfig {
     pub hardware: String,
     /// Leader mode override ("dense", "sparse", "adaptive", "spiky-focused").
     pub cat_mode: Option<String>,
-    /// Precision override ("fp32", "fp16", "fp8", "mixed").
+    /// Precision override ("fp32", "fp16", "fp8", "mixed", or "adaptive"
+    /// for contribution-driven per-tile classing; case-insensitive).
     pub precision: Option<String>,
+    /// Adaptive thresholds spec `"FP32MIN,FP16MIN[,FLOOR]"` (e.g.
+    /// `"0.6,0.25"` or `"0.5,0.2,fp16"`). Requires `precision: adaptive`.
+    pub precision_thresholds: Option<String>,
     /// FIFO depth override.
     pub fifo_depth: Option<usize>,
     /// Tile edge override in pixels (None = the paper's 16).
@@ -86,6 +91,7 @@ impl Default for ExperimentConfig {
             hardware: "flicker32".into(),
             cat_mode: None,
             precision: None,
+            precision_thresholds: None,
             fifo_depth: None,
             tile_size: None,
             strategy: None,
@@ -162,6 +168,23 @@ impl ExperimentConfig {
             }
             o.gate.threshold = t;
         }
+        if let Some(p) = &self.precision {
+            o.precision = PrecisionPolicy::parse(p).ok_or_else(|| {
+                err!("unknown precision '{p}' (valid: fp32|fp16|fp8|mixed|adaptive)")
+            })?;
+        }
+        if let Some(spec) = &self.precision_thresholds {
+            let PrecisionMode::Adaptive { thresholds, floor } = &mut o.precision.mode else {
+                return Err(err!("precision_thresholds requires precision = adaptive"));
+            };
+            let (t, fl) = PrecisionThresholds::parse(spec).ok_or_else(|| {
+                err!("precision_thresholds: expected 'FP32MIN,FP16MIN[,FLOOR]', got '{spec}'")
+            })?;
+            *thresholds = t;
+            if let Some(f) = fl {
+                *floor = f;
+            }
+        }
         if let Some(pd) = self.plan_delta {
             o.plan_delta.enabled = pd;
         }
@@ -182,8 +205,14 @@ impl ExperimentConfig {
             hw.cat_mode = LeaderMode::parse(m).ok_or_else(|| err!("unknown cat mode '{m}'"))?;
         }
         if let Some(p) = &self.precision {
-            hw.cat_precision =
-                Precision::parse(p).ok_or_else(|| err!("unknown precision '{p}'"))?;
+            // "adaptive" keeps the preset's global CTU precision — the
+            // realized per-tile class mix is reported by `sim::workload`
+            // instead of a single hardware-wide knob.
+            if !p.eq_ignore_ascii_case("adaptive") {
+                hw.cat_precision = Precision::parse(p).ok_or_else(|| {
+                    err!("unknown precision '{p}' (valid: fp32|fp16|fp8|mixed|adaptive)")
+                })?;
+            }
         }
         if let Some(d) = self.fifo_depth {
             hw.fifo_depth = d;
@@ -208,6 +237,10 @@ impl ExperimentConfig {
         }
         cfg.cat_mode = args.get("cat-mode").map(|s| s.to_string()).or(cfg.cat_mode);
         cfg.precision = args.get("precision").map(|s| s.to_string()).or(cfg.precision);
+        cfg.precision_thresholds = args
+            .get("precision-thresholds")
+            .map(|s| s.to_string())
+            .or(cfg.precision_thresholds);
         if let Some(d) = args.get("fifo-depth") {
             cfg.fifo_depth =
                 Some(d.parse().map_err(|_| err!("--fifo-depth: bad integer '{d}'"))?);
@@ -276,6 +309,7 @@ impl ExperimentConfig {
         }
         cfg.cat_mode = s("cat_mode").or(cfg.cat_mode);
         cfg.precision = s("precision").or(cfg.precision);
+        cfg.precision_thresholds = s("precision_thresholds").or(cfg.precision_thresholds);
         if let Some(v) = n("fifo_depth") {
             cfg.fifo_depth = Some(v as usize);
         }
@@ -326,6 +360,9 @@ impl ExperimentConfig {
         }
         if let Some(p) = &self.precision {
             o.insert("precision", jstr(p));
+        }
+        if let Some(t) = &self.precision_thresholds {
+            o.insert("precision_thresholds", jstr(t));
         }
         if let Some(d) = self.fifo_depth {
             o.insert("fifo_depth", jnum(d as f64));
@@ -476,6 +513,68 @@ mod tests {
     }
 
     #[test]
+    fn precision_flags_thread_to_render_options() {
+        use crate::render::precision::PrecisionMode;
+        let a = args(&[
+            "render",
+            "--precision",
+            "adaptive",
+            "--precision-thresholds",
+            "0.5,0.2,fp16",
+        ]);
+        let cfg = ExperimentConfig::from_args(&a).unwrap();
+        let o = cfg.render_options().unwrap();
+        assert!(o.precision.is_adaptive());
+        match o.precision.mode {
+            PrecisionMode::Adaptive { thresholds, floor } => {
+                assert_eq!(thresholds.fp32_min, 0.5);
+                assert_eq!(thresholds.fp16_min, 0.2);
+                assert_eq!(floor, Precision::Fp16);
+            }
+            _ => unreachable!(),
+        }
+        // Adaptive leaves the hardware preset's global CTU precision alone.
+        assert_eq!(cfg.build_hw().unwrap().cat_precision, Precision::Mixed);
+        // A global name threads to both the options and the hardware,
+        // case-insensitively.
+        let g = ExperimentConfig::from_args(&args(&["render", "--precision", "FP16"])).unwrap();
+        assert_eq!(
+            g.render_options().unwrap().precision,
+            PrecisionPolicy::global(Precision::Fp16)
+        );
+        assert_eq!(g.build_hw().unwrap().cat_precision, Precision::Fp16);
+        // Default stays the inert global policy.
+        let d = ExperimentConfig::default().render_options().unwrap();
+        assert!(!d.precision.is_adaptive());
+        assert_eq!(d.precision, PrecisionPolicy::default());
+    }
+
+    #[test]
+    fn bad_precision_settings_are_errors() {
+        // Unknown names are errors listing the valid set, not silent
+        // fallbacks — in render options and hardware resolution both.
+        let bogus = ExperimentConfig {
+            precision: Some("int4".into()),
+            ..Default::default()
+        };
+        let msg = format!("{}", bogus.render_options().unwrap_err());
+        assert!(msg.contains("fp32|fp16|fp8|mixed|adaptive"), "{msg}");
+        assert!(bogus.build_hw().is_err());
+        // Thresholds demand the adaptive mode and a well-formed spec.
+        let orphan = ExperimentConfig {
+            precision_thresholds: Some("0.6,0.25".into()),
+            ..Default::default()
+        };
+        assert!(orphan.render_options().is_err());
+        let malformed = ExperimentConfig {
+            precision: Some("adaptive".into()),
+            precision_thresholds: Some("0.2,0.6".into()),
+            ..Default::default()
+        };
+        assert!(malformed.render_options().is_err());
+    }
+
+    #[test]
     fn bad_gate_settings_are_errors() {
         let levels = ExperimentConfig {
             gate_levels: Some(3),
@@ -519,6 +618,8 @@ mod tests {
     fn json_roundtrip() {
         let cfg = ExperimentConfig {
             cat_mode: Some("sparse".into()),
+            precision: Some("adaptive".into()),
+            precision_thresholds: Some("0.5,0.2,fp16".into()),
             fifo_depth: Some(8),
             strategy: Some("obb".into()),
             tile_size: Some(16),
@@ -538,6 +639,8 @@ mod tests {
         let back = ExperimentConfig::from_json_file(&p).unwrap();
         assert_eq!(back.scene, cfg.scene);
         assert_eq!(back.cat_mode, cfg.cat_mode);
+        assert_eq!(back.precision, cfg.precision);
+        assert_eq!(back.precision_thresholds, cfg.precision_thresholds);
         assert_eq!(back.fifo_depth, cfg.fifo_depth);
         assert_eq!(back.strategy, cfg.strategy);
         assert_eq!(back.tile_size, cfg.tile_size);

@@ -143,7 +143,15 @@ impl RenderBackend for Pjrt<'_> {
         // α is below the blend floor).
         let gated = plan.gated_lists();
         let lists = gated.as_ref().map(|(l, _)| l).unwrap_or(&plan.lists);
-        let jobs = TileJob::for_grid(&plan.grid, lists);
+        // Adaptive precision: classify tiles from the plan (the gate keeps
+        // per-tile index alignment, so classes stay valid for gated lists)
+        // and dispatch precision-pure waves through the per-class
+        // monomorphized artifacts.
+        let classes = plan.tile_classes();
+        let jobs = match &classes {
+            Some(c) => TileJob::for_grid_classed(&plan.grid, lists, c),
+            None => TileJob::for_grid(&plan.grid, lists),
+        };
         ex.render_tiles(&jobs, &plan.splats, &mut img, plan.opts.background)?;
         let mut stats = plan.frame_stats();
         match &gated {

@@ -19,6 +19,7 @@ use flicker::config::ExperimentConfig;
 use flicker::coordinator::report::Report;
 use flicker::coordinator::{Golden, GoldenCat, RenderBackend, Session};
 use flicker::render::metrics::{psnr, ssim};
+use flicker::render::precision::{PrecisionMode, PrecisionPolicy};
 use flicker::sim::area::{area, AreaParams};
 use flicker::sim::top::simulate_frame;
 use flicker::sim::workload::{extract_for, FrameWorkload};
@@ -69,6 +70,15 @@ COMMON OPTIONS
                  view instead of cold-building — output is bit-identical)
   --plan-delta-angle  largest pose step in radians the delta path accepts
                  before falling back to a cold build  (default 0.35)
+  --precision    CTU precision: fp32|fp16|fp8|mixed|adaptive
+                 (default mixed; case-insensitive). `adaptive` classes
+                 each tile by its contribution bound — low-energy tiles
+                 run the cheap mixed/fp8 datapath, leader tiles keep
+                 fp32. Deterministic for any worker count or batch
+                 width, but not bitwise-equal to a global mode.
+  --precision-thresholds  adaptive split points 'FP32MIN,FP16MIN[,FLOOR]'
+                 (default 0.6,0.25 with floor mixed; requires
+                 --precision adaptive)
 
 The pjrt backend requires a build with `--features pjrt` and AOT artifacts
 (`make artifacts`, or any directory written by
@@ -142,8 +152,17 @@ fn cmd_render(args: &Args) -> Result<()> {
         "golden-cat" => {
             let mode = LeaderMode::parse(&args.str_or("cat-mode", "adaptive"))
                 .ok_or_else(|| err!("bad --cat-mode"))?;
-            let precision = Precision::parse(&args.str_or("precision", "mixed"))
-                .ok_or_else(|| err!("bad --precision"))?;
+            let spec = args.str_or("precision", "mixed");
+            let policy = PrecisionPolicy::parse(&spec).ok_or_else(|| {
+                err!("unknown --precision '{spec}' (valid: fp32|fp16|fp8|mixed|adaptive)")
+            })?;
+            let precision = match policy.mode {
+                PrecisionMode::Global(p) => p,
+                // Adaptive: the per-tile class (threaded through the
+                // session's RenderOptions) overrides this base engine
+                // precision at every tile; the floor is the inert default.
+                PrecisionMode::Adaptive { floor, .. } => floor,
+            };
             let backend = GoldenCat(CatConfig {
                 mode,
                 precision,

@@ -6,6 +6,7 @@ pub mod delta;
 pub mod image;
 pub mod metrics;
 pub mod plan;
+pub mod precision;
 pub mod project;
 pub mod pyramid;
 pub mod raster;

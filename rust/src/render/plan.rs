@@ -28,6 +28,7 @@
 //! index whether tiles ran on one thread or many.
 
 use super::image::Image;
+use super::precision;
 use super::project::{project_scene, Splat, ALPHA_MIN};
 use super::pyramid::{GateConfig, TilePyramid};
 use super::raster::{
@@ -36,6 +37,7 @@ use super::raster::{
 use super::sort::sort_by_depth;
 use super::tile::{build_tile_lists, Rect, TileGrid};
 use crate::camera::Camera;
+use crate::cat::Precision;
 use crate::scene::gaussian::Scene;
 use crate::util::pool;
 use std::sync::Arc;
@@ -135,6 +137,34 @@ impl FramePlan {
         self.lists.len()
     }
 
+    /// Tile `t`'s precision class under `opts.precision`, or `None` when
+    /// the policy is `Global` (the inert default — every consumer falls
+    /// through to its pre-policy code path, bit for bit). The classifier
+    /// is a pure function of the plan (depth-sorted list + tile rect), so
+    /// the class never depends on worker count or batch width.
+    pub fn tile_class(&self, t: usize) -> Option<Precision> {
+        if !self.opts.precision.is_adaptive() {
+            return None;
+        }
+        let e = precision::tile_energy(&self.splats, &self.lists[t], &self.grid.rect(t));
+        self.opts.precision.classify(e)
+    }
+
+    /// Per-tile precision classes for the whole plan (row-major tile
+    /// order), or `None` when the policy is `Global`. Consumers that form
+    /// their own work queues (the PJRT executor, the workload extractor)
+    /// read this once and index it by tile.
+    pub fn tile_classes(&self) -> Option<Vec<Precision>> {
+        if !self.opts.precision.is_adaptive() {
+            return None;
+        }
+        Some(
+            (0..self.lists.len())
+                .map(|t| self.tile_class(t).expect("adaptive policy classes every tile"))
+                .collect(),
+        )
+    }
+
     /// Frame-level stats skeleton: the per-tile loops only touch the pair
     /// and early-termination counters, so these totals are fixed at build
     /// time. Consumers that drain tiles themselves (PJRT, the view×tile
@@ -158,16 +188,22 @@ impl FramePlan {
     /// blending loop and folds score partials in ascending tile index.
     pub fn render(&self, source: &dyn MaskSource, mut scores: Option<&mut [f32]>) -> RenderOutput {
         let workers = pool::resolve_workers(self.opts.workers).min(self.lists.len().max(1));
-        if workers <= 1 {
+        // Adaptive precision needs a per-tile (per-class) mask provider, so
+        // it always takes the per-tile fan-out below — `map_indexed` runs
+        // it sequentially at one worker. Global policies keep the original
+        // shared-provider path, bit for bit.
+        let classes = self.tile_classes();
+        if workers <= 1 && classes.is_none() {
             let mut masks = source.tile_masks();
             return self.render_with(masks.as_mut(), scores.as_deref_mut());
         }
         let ts = self.grid.tile as usize;
         let want_scores = scores.is_some();
         let opts = &self.opts;
+        let classes = classes.as_deref();
         let tiles: Vec<(Vec<f32>, Vec<f32>, RenderStats)> =
             pool::map_indexed(self.lists.len(), workers, |t| {
-                let run = self.run_tile(t, source, want_scores);
+                let run = self.run_tile(t, source, want_scores, classes.map(|c| c[t]));
                 // Composite over background into a w×h tile pixel block.
                 let mut pixels = vec![0.0f32; run.w * run.h * 3];
                 for py in 0..run.h {
@@ -284,7 +320,7 @@ impl FramePlan {
     /// work queue: any worker can score any `(plan, tile)` pair, and the
     /// caller folds partials in a fixed order via [`FramePlan::fold_scores`].
     pub fn score_tile(&self, t: usize, source: &dyn MaskSource) -> (Vec<f32>, RenderStats) {
-        let run = self.run_tile(t, source, true);
+        let run = self.run_tile(t, source, true, self.tile_class(t));
         (run.partial, run.stats)
     }
 
@@ -293,9 +329,18 @@ impl FramePlan {
     /// tile-local scratch, one [`render_tile`] call. Keeping a single
     /// entry keeps the rendering and scoring paths structurally identical
     /// — the bit-identity contract cannot drift between them.
-    fn run_tile(&self, t: usize, source: &dyn MaskSource, want_scores: bool) -> TileRun {
+    fn run_tile(
+        &self,
+        t: usize,
+        source: &dyn MaskSource,
+        want_scores: bool,
+        class: Option<Precision>,
+    ) -> TileRun {
         let ts = self.grid.tile as usize;
-        let mut masks = source.tile_masks();
+        let mut masks = match class {
+            Some(c) => source.tile_masks_at(c),
+            None => source.tile_masks(),
+        };
         let mut trans = vec![1.0f32; ts * ts];
         let mut color = vec![[0.0f32; 3]; ts * ts];
         let mut stats = RenderStats::default();

@@ -1,0 +1,368 @@
+//! Contribution-driven per-tile precision classing (paper Sec. IV-C made
+//! adaptive).
+//!
+//! The paper's mixed-precision CTU (Fig. 7) is a single global knob: every
+//! tile pays the same datapath cost regardless of how much it contributes
+//! to the frame. This module turns that static scheme into
+//! contribution-driven precision: before rendering, each tile is classed
+//! by a conservative bound on the energy it can absorb — the same
+//! `min_quad_on_rect` bound the coarse gate uses, folded front-to-back the
+//! way the blending loop folds Σ T·α — and low-contribution tiles run the
+//! cheap fp8/mixed CTU path while leader/high-energy tiles keep fp32.
+//!
+//! **Determinism.** [`tile_energy`] is a pure function of the prepared
+//! [`super::plan::FramePlan`] (projected splats, per-tile depth-sorted
+//! lists, tile rects), so the class assignment is identical for any worker
+//! count and any PJRT batch width — classing happens strictly before tile
+//! execution fans out.
+//!
+//! **Compatibility.** [`PrecisionMode::Global`] is *inert*:
+//! [`PrecisionPolicy::classify`] returns `None` and every render path
+//! falls through to the exact pre-policy code (global precision remains a
+//! `cat::CatConfig` / `sim::HwConfig` construction-site concern), so the
+//! default options are bitwise identical to a build without this module.
+//! `Adaptive` is deterministic but intentionally *not* bitwise-equal to
+//! any `Global` mode unless the thresholds force a single class.
+
+use super::project::{Splat, ALPHA_MIN};
+use super::tile::{min_quad_on_rect, Rect};
+use crate::cat::Precision;
+
+/// The four CTU precision classes in **wave-dispatch order**: the batched
+/// PJRT executor drains same-class tiles together, one class at a time, in
+/// this fixed order (cheapest-last), so wave formation is deterministic.
+/// Also the index order of every per-class counter array
+/// (`ExecStats::fill_rate_by_class`, `FrameWorkload::ctu_prs_by_class`).
+pub const CLASSES: [Precision; 4] = [
+    Precision::Fp32,
+    Precision::Fp16,
+    Precision::Mixed,
+    Precision::Fp8,
+];
+
+/// Index of a precision class into per-class counter arrays (the
+/// [`CLASSES`] order).
+pub fn class_index(p: Precision) -> usize {
+    match p {
+        Precision::Fp32 => 0,
+        Precision::Fp16 => 1,
+        Precision::Mixed => 2,
+        Precision::Fp8 => 3,
+    }
+}
+
+/// Absorbed-energy thresholds splitting the class ladder. Energies are the
+/// [`tile_energy`] bound in [0, 1): a tile must be able to absorb at least
+/// `fp32_min` to earn the full-precision datapath, at least `fp16_min` for
+/// fp16; everything below runs the policy's floor class.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct PrecisionThresholds {
+    /// Minimum absorbed-energy bound for an fp32-classed tile.
+    pub fp32_min: f32,
+    /// Minimum absorbed-energy bound for an fp16-classed tile (must not
+    /// exceed `fp32_min`).
+    pub fp16_min: f32,
+}
+
+impl Default for PrecisionThresholds {
+    /// Defaults pinned by `rust/tests/precision.rs` on the garden/truck
+    /// orbits: ≥ 40% of tiles classed below fp32 at PSNR ≥ 30 dB against
+    /// the all-fp32 reference. The orbit camera keeps the object well
+    /// inside the frame, so only the tiles over its dense core can absorb
+    /// more than ~0.6 of the incoming light.
+    fn default() -> Self {
+        PrecisionThresholds {
+            fp32_min: 0.60,
+            fp16_min: 0.25,
+        }
+    }
+}
+
+impl PrecisionThresholds {
+    /// Parse the CLI `--precision-thresholds` spec:
+    /// `"FP32MIN,FP16MIN[,FLOOR]"` (e.g. `"0.6,0.25"` or
+    /// `"0.5,0.2,fp16"`). Returns the thresholds plus the optional floor
+    /// override. Rejects non-finite, negative, or mis-ordered values
+    /// (`fp32_min < fp16_min`) and unknown floor names.
+    pub fn parse(spec: &str) -> Option<(PrecisionThresholds, Option<Precision>)> {
+        let parts: Vec<&str> = spec.split(',').map(str::trim).collect();
+        if parts.len() < 2 || parts.len() > 3 {
+            return None;
+        }
+        let fp32_min: f32 = parts[0].parse().ok()?;
+        let fp16_min: f32 = parts[1].parse().ok()?;
+        if !fp32_min.is_finite() || !fp16_min.is_finite() {
+            return None;
+        }
+        if fp16_min < 0.0 || fp32_min < fp16_min {
+            return None;
+        }
+        let floor = match parts.get(2) {
+            Some(name) => Some(Precision::parse(name)?),
+            None => None,
+        };
+        Some((PrecisionThresholds { fp32_min, fp16_min }, floor))
+    }
+}
+
+/// How tiles pick their CTU precision.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum PrecisionMode {
+    /// One global class — the paper's static scheme. Inert in the render
+    /// paths ([`PrecisionPolicy::classify`] returns `None`): the global
+    /// class keeps flowing through `cat::CatConfig`/`sim::HwConfig`
+    /// exactly as before this module existed, so `Global` reproduces the
+    /// pre-policy behavior bitwise.
+    Global(Precision),
+    /// Per-tile classes from the absorbed-energy bound: `≥ fp32_min` →
+    /// fp32, `≥ fp16_min` → fp16, below → `floor`.
+    Adaptive {
+        /// The class-ladder split points.
+        thresholds: PrecisionThresholds,
+        /// Class for tiles below every threshold. Defaults to
+        /// [`Precision::Mixed`] — the paper's FP16-delta/FP8-product
+        /// datapath — because pure fp8 quantizes absolute pixel
+        /// coordinates and collapses quality (Fig. 7).
+        floor: Precision,
+    },
+}
+
+/// The precision policy carried by `render::raster::RenderOptions` and
+/// threaded to every backend (golden CAT masks, the batched PJRT
+/// executor, and the `sim` workload models).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct PrecisionPolicy {
+    /// Global-vs-adaptive selection.
+    pub mode: PrecisionMode,
+}
+
+impl Default for PrecisionPolicy {
+    /// Global at the paper's default CTU precision (`Mixed`) — inert, so
+    /// default options render bit-identically to earlier builds.
+    fn default() -> Self {
+        PrecisionPolicy::global(Precision::Mixed)
+    }
+}
+
+impl PrecisionPolicy {
+    /// Global policy at a fixed class.
+    pub fn global(p: Precision) -> Self {
+        PrecisionPolicy {
+            mode: PrecisionMode::Global(p),
+        }
+    }
+
+    /// Adaptive policy at the default thresholds with the `Mixed` floor.
+    pub fn adaptive() -> Self {
+        PrecisionPolicy {
+            mode: PrecisionMode::Adaptive {
+                thresholds: PrecisionThresholds::default(),
+                floor: Precision::Mixed,
+            },
+        }
+    }
+
+    /// Does this policy assign per-tile classes?
+    pub fn is_adaptive(&self) -> bool {
+        matches!(self.mode, PrecisionMode::Adaptive { .. })
+    }
+
+    /// Parse a CLI/config policy name: `"adaptive"` (any case) or a
+    /// global class name accepted by [`Precision::parse`].
+    pub fn parse(s: &str) -> Option<PrecisionPolicy> {
+        if s.eq_ignore_ascii_case("adaptive") {
+            return Some(PrecisionPolicy::adaptive());
+        }
+        Precision::parse(s).map(PrecisionPolicy::global)
+    }
+
+    /// Stable policy name for reports and errors.
+    pub fn name(&self) -> &'static str {
+        match self.mode {
+            PrecisionMode::Adaptive { .. } => "adaptive",
+            PrecisionMode::Global(Precision::Fp32) => "fp32",
+            PrecisionMode::Global(Precision::Fp16) => "fp16",
+            PrecisionMode::Global(Precision::Fp8) => "fp8",
+            PrecisionMode::Global(Precision::Mixed) => "mixed",
+        }
+    }
+
+    /// Class a tile by its absorbed-energy bound. `None` under `Global` —
+    /// the caller must fall through to its pre-policy path (that
+    /// fall-through is what keeps `Global` bitwise-identical to builds
+    /// without the policy).
+    pub fn classify(&self, energy: f32) -> Option<Precision> {
+        match self.mode {
+            PrecisionMode::Global(_) => None,
+            PrecisionMode::Adaptive { thresholds, floor } => Some(if energy >= thresholds.fp32_min
+            {
+                Precision::Fp32
+            } else if energy >= thresholds.fp16_min {
+                Precision::Fp16
+            } else {
+                floor
+            }),
+        }
+    }
+}
+
+/// Conservative bound on the energy a tile can absorb: fold the tile's
+/// depth-sorted splat list front-to-back, giving every splat its **peak**
+/// in-tile alpha `min(0.999, o·e^{-min E})` — the same
+/// [`min_quad_on_rect`] bound the coarse gate uses — and accumulate
+/// Σ T·α exactly the way the blending loop folds contribution scores.
+/// Splats whose peak alpha sits below the 1/255 blend floor contribute
+/// nothing (they are exactly the pairs the lossless gate drops), and the
+/// fold stops at the loop's `T < 1e-4` early-termination point.
+///
+/// The result lies in [0, 1): 0 for empty/dead tiles, approaching 1 for
+/// tiles whose splat stack saturates every pixel. It over-estimates real
+/// absorption (every splat is scored at its best pixel), which is the safe
+/// direction: tiles are promoted toward fp32, never demoted past it.
+pub fn tile_energy(splats: &[Splat], list: &[u32], rect: &Rect) -> f32 {
+    let mut trans = 1.0f32;
+    let mut energy = 0.0f32;
+    for &si in list {
+        let s = &splats[si as usize];
+        let peak = (s.opacity * (-min_quad_on_rect(s, rect)).exp()).min(0.999);
+        if peak < ALPHA_MIN {
+            continue;
+        }
+        energy += trans * peak;
+        trans *= 1.0 - peak;
+        if trans < 1e-4 {
+            break;
+        }
+    }
+    energy
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::numeric::linalg::{v2, Sym2};
+
+    fn splat(mx: f32, my: f32, opacity: f32) -> Splat {
+        Splat {
+            id: 0,
+            mean: v2(mx, my),
+            cov: Sym2 { a: 1.0, b: 0.0, c: 1.0 },
+            conic: Sym2 { a: 0.5, b: 0.0, c: 0.5 },
+            depth: 1.0,
+            opacity,
+            color: [1.0; 3],
+            radius: 10.0,
+            axis_ratio: 1.0,
+        }
+    }
+
+    fn rect() -> Rect {
+        Rect { x0: 0.0, y0: 0.0, x1: 16.0, y1: 16.0 }
+    }
+
+    #[test]
+    fn global_policy_is_inert() {
+        for p in CLASSES {
+            let policy = PrecisionPolicy::global(p);
+            assert!(!policy.is_adaptive());
+            assert_eq!(policy.classify(0.0), None);
+            assert_eq!(policy.classify(0.99), None);
+        }
+    }
+
+    #[test]
+    fn adaptive_ladder_orders_classes() {
+        let policy = PrecisionPolicy::adaptive();
+        assert!(policy.is_adaptive());
+        assert_eq!(policy.classify(0.95), Some(Precision::Fp32));
+        assert_eq!(policy.classify(0.60), Some(Precision::Fp32));
+        assert_eq!(policy.classify(0.40), Some(Precision::Fp16));
+        assert_eq!(policy.classify(0.25), Some(Precision::Fp16));
+        assert_eq!(policy.classify(0.10), Some(Precision::Mixed));
+        assert_eq!(policy.classify(0.0), Some(Precision::Mixed));
+    }
+
+    #[test]
+    fn thresholds_forced_to_zero_class_everything_fp32() {
+        let policy = PrecisionPolicy {
+            mode: PrecisionMode::Adaptive {
+                thresholds: PrecisionThresholds { fp32_min: 0.0, fp16_min: 0.0 },
+                floor: Precision::Fp8,
+            },
+        };
+        for e in [0.0f32, 0.1, 0.5, 0.999] {
+            assert_eq!(policy.classify(e), Some(Precision::Fp32), "e={e}");
+        }
+    }
+
+    #[test]
+    fn parse_accepts_names_and_rejects_junk() {
+        assert_eq!(PrecisionPolicy::parse("adaptive"), Some(PrecisionPolicy::adaptive()));
+        assert_eq!(PrecisionPolicy::parse("ADAPTIVE"), Some(PrecisionPolicy::adaptive()));
+        assert_eq!(
+            PrecisionPolicy::parse("fp32"),
+            Some(PrecisionPolicy::global(Precision::Fp32))
+        );
+        assert_eq!(
+            PrecisionPolicy::parse("Mixed"),
+            Some(PrecisionPolicy::global(Precision::Mixed))
+        );
+        assert_eq!(PrecisionPolicy::parse("int4"), None);
+        assert_eq!(PrecisionPolicy::parse(""), None);
+    }
+
+    #[test]
+    fn policy_names_roundtrip() {
+        for name in ["fp32", "fp16", "fp8", "mixed", "adaptive"] {
+            let p = PrecisionPolicy::parse(name).unwrap();
+            assert_eq!(p.name(), name);
+        }
+    }
+
+    #[test]
+    fn threshold_spec_parses_and_validates() {
+        let (t, floor) = PrecisionThresholds::parse("0.6,0.25").unwrap();
+        assert_eq!(t, PrecisionThresholds::default());
+        assert_eq!(floor, None);
+        let (t, floor) = PrecisionThresholds::parse("0.5, 0.2, fp16").unwrap();
+        assert_eq!(t.fp32_min, 0.5);
+        assert_eq!(t.fp16_min, 0.2);
+        assert_eq!(floor, Some(Precision::Fp16));
+        // Zeroed thresholds (the force-fp32 property config) are valid.
+        assert!(PrecisionThresholds::parse("0,0").is_some());
+        // Mis-ordered, negative, non-finite, junk floor, wrong arity.
+        assert!(PrecisionThresholds::parse("0.2,0.6").is_none());
+        assert!(PrecisionThresholds::parse("-0.1,-0.2").is_none());
+        assert!(PrecisionThresholds::parse("nan,0.1").is_none());
+        assert!(PrecisionThresholds::parse("0.6,0.25,int4").is_none());
+        assert!(PrecisionThresholds::parse("0.6").is_none());
+        assert!(PrecisionThresholds::parse("0.6,0.3,fp16,extra").is_none());
+    }
+
+    #[test]
+    fn tile_energy_bounds_and_monotonicity() {
+        let r = rect();
+        assert_eq!(tile_energy(&[], &[], &r), 0.0);
+        // One splat centered in the tile: energy == its (clamped) opacity.
+        let s = vec![splat(8.0, 8.0, 0.7)];
+        let e1 = tile_energy(&s, &[0], &r);
+        assert!((e1 - 0.7).abs() < 1e-6, "e1={e1}");
+        // Stacking a second absorber raises the bound, but never past 1.
+        let s2 = vec![splat(8.0, 8.0, 0.7), splat(8.0, 8.0, 0.7)];
+        let e2 = tile_energy(&s2, &[0, 1], &r);
+        assert!(e2 > e1 && e2 < 1.0, "e2={e2}");
+        // A far-away splat is gated by its peak alpha and contributes 0.
+        let far = vec![splat(500.0, 500.0, 0.9)];
+        assert_eq!(tile_energy(&far, &[0], &r), 0.0);
+        // Sub-floor opacity contributes 0 as well.
+        let dim = vec![splat(8.0, 8.0, 0.5 / 255.0)];
+        assert_eq!(tile_energy(&dim, &[0], &r), 0.0);
+    }
+
+    #[test]
+    fn class_index_matches_dispatch_order() {
+        for (i, c) in CLASSES.iter().enumerate() {
+            assert_eq!(class_index(*c), i);
+        }
+    }
+}

@@ -28,10 +28,12 @@
 use super::delta::DeltaConfig;
 use super::image::Image;
 use super::plan::FramePlan;
+use super::precision::PrecisionPolicy;
 use super::project::Splat;
 use super::pyramid::GateConfig;
 use super::tile::{Rect, Strategy};
 use crate::camera::Camera;
+use crate::cat::Precision;
 use crate::scene::gaussian::Scene;
 
 /// Mini-tile edge in pixels (paper: 4×4 mini-tiles inside 16×16 tiles).
@@ -72,6 +74,13 @@ pub struct RenderOptions {
     /// Off by default; advanced plans are bitwise identical to cold
     /// builds, so this is purely a preparation-cost knob.
     pub plan_delta: DeltaConfig,
+    /// Per-tile CTU precision policy (`render::precision`). The default
+    /// (`Global(Mixed)`) is inert — global precision keeps flowing through
+    /// `cat::CatConfig`/`sim::HwConfig` exactly as before, bitwise.
+    /// `Adaptive` classes every tile by its absorbed-energy bound before
+    /// rendering; classes are identical for any worker count or PJRT
+    /// batch width.
+    pub precision: PrecisionPolicy,
 }
 
 impl Default for RenderOptions {
@@ -85,6 +94,7 @@ impl Default for RenderOptions {
             batch: 0,
             gate: GateConfig::default(),
             plan_delta: DeltaConfig::default(),
+            precision: PrecisionPolicy::default(),
         }
     }
 }
@@ -208,6 +218,17 @@ impl MaskProvider for AllOnes {
 pub trait MaskSource: Sync {
     /// Hand out a fresh per-tile mask provider for one worker.
     fn tile_masks(&self) -> Box<dyn MaskProvider + '_>;
+
+    /// Hand out a provider for one tile of the given precision class —
+    /// the adaptive-precision hook. The default ignores the class (mask
+    /// sources without a precision datapath, like [`VanillaMasks`], are
+    /// class-blind); `cat::CatConfig` overrides it to build its per-tile
+    /// `CatEngine` at the tile's class instead of the config's global
+    /// precision.
+    fn tile_masks_at(&self, class: Precision) -> Box<dyn MaskProvider + '_> {
+        let _ = class;
+        self.tile_masks()
+    }
 }
 
 /// Mask source for the vanilla pipeline: every mini-tile processes every

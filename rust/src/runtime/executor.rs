@@ -19,7 +19,10 @@
 
 use super::Runtime;
 use crate::cat::leader::dense_layout;
+use crate::cat::Precision;
+use crate::err;
 use crate::render::image::Image;
+use crate::render::precision::{class_index, CLASSES};
 use crate::render::project::Splat;
 use crate::render::tile::{Rect, TileGrid};
 use crate::util::error::Result;
@@ -49,24 +52,59 @@ pub struct ExecStats {
     pub rows_submitted: usize,
     /// Real splats that passed the artifact's CAT filter.
     pub splats_passed_cat: usize,
+    /// Tiles rendered per precision class, indexed by
+    /// [`class_index`] in [`CLASSES`] order. Unclassed (global-precision)
+    /// jobs never touch these buckets.
+    pub tiles_by_class: [usize; 4],
+    /// Batched dispatches per precision class.
+    pub batches_by_class: [usize; 4],
+    /// Real batch slots per precision class.
+    pub slots_by_class: [usize; 4],
+    /// Real (non-padding) splat rows submitted per precision class.
+    pub splats_by_class: [usize; 4],
+    /// Total splat rows shipped (padding included) per precision class.
+    pub rows_by_class: [usize; 4],
 }
 
 impl ExecStats {
     /// Fraction of shipped splat rows that carried a real splat — the
     /// batching fill rate (1.0 = every row useful, low values mean the
-    /// monomorphic shapes are mostly padding for this workload).
+    /// monomorphic shapes are mostly padding for this workload). An
+    /// executor that shipped nothing (no tiles, or every list empty)
+    /// reports 0.0 rather than dividing by zero.
     pub fn fill_rate(&self) -> f64 {
-        self.splats_submitted as f64 / self.rows_submitted.max(1) as f64
+        if self.rows_submitted == 0 {
+            return 0.0;
+        }
+        self.splats_submitted as f64 / self.rows_submitted as f64
+    }
+
+    /// Per-class batching fill rate — the padding cost of precision-pure
+    /// waves (a rare class strands most of its dispatch slots). Classes
+    /// that shipped no rows — including every class of an all-global
+    /// render, and any empty wave — report 0.0 rather than dividing by
+    /// zero.
+    pub fn fill_rate_by_class(&self, class: Precision) -> f64 {
+        let i = class_index(class);
+        if self.rows_by_class[i] == 0 {
+            return 0.0;
+        }
+        self.splats_by_class[i] as f64 / self.rows_by_class[i] as f64
     }
 }
 
-/// One unit of batched tile work: the tile's pixel rect and its
-/// depth-sorted splat index list.
+/// One unit of batched tile work: the tile's pixel rect, its depth-sorted
+/// splat index list, and (under an adaptive policy) its precision class.
+#[derive(Clone, Copy)]
 pub struct TileJob<'a> {
     /// Tile rect in pixels.
     pub rect: Rect,
     /// Depth-sorted indices into the frame's splat array.
     pub order: &'a [u32],
+    /// Precision class assigned by `FramePlan::tile_classes` (`None` for
+    /// global-precision renders). Waves never mix classes: the executor
+    /// partitions jobs by class before forming dispatch groups.
+    pub class: Option<Precision>,
 }
 
 impl<'a> TileJob<'a> {
@@ -81,6 +119,28 @@ impl<'a> TileJob<'a> {
             .map(|(t, list)| TileJob {
                 rect: grid.rect(t),
                 order: list,
+                class: None,
+            })
+            .collect()
+    }
+
+    /// [`TileJob::for_grid`] with per-tile precision classes attached
+    /// (`classes[t]` pairs with `lists[t]` — both row-major tile order,
+    /// which `FramePlan::gated_lists` preserves).
+    pub fn for_grid_classed(
+        grid: &TileGrid,
+        lists: &'a [Vec<u32>],
+        classes: &[Precision],
+    ) -> Vec<TileJob<'a>> {
+        assert_eq!(lists.len(), classes.len(), "one class per tile list");
+        lists
+            .iter()
+            .zip(classes)
+            .enumerate()
+            .map(|(t, (list, &class))| TileJob {
+                rect: grid.rect(t),
+                order: list,
+                class: Some(class),
             })
             .collect()
     }
@@ -323,6 +383,13 @@ impl<'rt> TileExecutor<'rt> {
     /// the manifest has no batched artifact or the effective batch is 1
     /// (one real tile per B-wide dispatch would ship B× the work of the
     /// monomorphic single-tile artifact).
+    /// For classed jobs (adaptive precision) waves are **precision-pure**:
+    /// jobs are partitioned by class (preserving within-class order) and
+    /// drained one class at a time in [`CLASSES`] order through that
+    /// class's monomorphized artifact — a batched call never mixes
+    /// classes. At effective batch 1 a classed queue still dispatches the
+    /// class artifact, one filled slot per wave, so narrowing the batch
+    /// reproduces the batched pixels bit for bit on the stub runtime.
     pub fn render_tiles(
         &mut self,
         jobs: &[TileJob],
@@ -330,21 +397,49 @@ impl<'rt> TileExecutor<'rt> {
         img: &mut Image,
         background: [f32; 3],
     ) -> Result<()> {
-        let b_eff = self.effective_batch();
-        if b_eff == 1 || !self.rt.has("render_tile_batched") {
-            for job in jobs {
-                self.render_tile(&job.rect, splats, job.order, img, background)?;
+        if jobs.iter().all(|j| j.class.is_none()) {
+            let b_eff = self.effective_batch();
+            if b_eff == 1 || !self.rt.has("render_tile_batched") {
+                for job in jobs {
+                    self.render_tile(&job.rect, splats, job.order, img, background)?;
+                }
+                return Ok(());
+            }
+            for group in jobs.chunks(b_eff) {
+                self.render_tile_group(group, splats, img, background)?;
             }
             return Ok(());
         }
-        for group in jobs.chunks(b_eff) {
-            self.render_tile_group(group, splats, img, background)?;
+        // Unclassed stragglers in a mixed queue drain first through the
+        // single-tile artifact, then each class forms its own waves.
+        for job in jobs.iter().filter(|j| j.class.is_none()) {
+            self.render_tile(&job.rect, splats, job.order, img, background)?;
+        }
+        let b_eff = self.effective_batch();
+        for class in CLASSES {
+            let subset: Vec<TileJob> =
+                jobs.iter().filter(|j| j.class == Some(class)).copied().collect();
+            if subset.is_empty() {
+                continue;
+            }
+            let artifact = batched_artifact(Some(class));
+            if !self.rt.has(artifact) {
+                return Err(err!(
+                    "runtime has no '{artifact}' artifact for the {class:?} precision class \
+                     (regenerate artifacts: make artifacts)"
+                ));
+            }
+            for group in subset.chunks(b_eff) {
+                self.render_tile_group(group, splats, img, background)?;
+            }
         }
         Ok(())
     }
 
-    /// One group of ≤ B tiles through the wave loop (see
-    /// [`TileExecutor::render_tiles`]).
+    /// One group of ≤ B same-class tiles through the wave loop (see
+    /// [`TileExecutor::render_tiles`]). The group's class (uniform by
+    /// construction — `render_tiles` partitions before grouping) picks the
+    /// batched artifact and the per-class stat buckets.
     fn render_tile_group(
         &mut self,
         group: &[TileJob],
@@ -357,6 +452,13 @@ impl<'rt> TileExecutor<'rt> {
         let t = self.rt.manifest.tile as u32;
         let b = self.rt.manifest.n_batch;
         let px = (t * t) as usize;
+        let class = group.first().and_then(|j| j.class);
+        debug_assert!(
+            group.iter().all(|j| j.class == class),
+            "mixed-precision wave: render_tiles must partition by class"
+        );
+        let artifact = batched_artifact(class);
+        let ci = class.map(class_index);
 
         let mut states: Vec<TileAcc> = group
             .iter()
@@ -415,7 +517,7 @@ impl<'rt> TileExecutor<'rt> {
             }
 
             let out = self.rt.exec_f32(
-                "render_tile_batched",
+                artifact,
                 &[
                     (&mu, &[b as i64, n as i64, 2]),
                     (&conic, &[b as i64, n as i64, 3]),
@@ -433,9 +535,17 @@ impl<'rt> TileExecutor<'rt> {
             self.stats.batches += 1;
             self.stats.slots_filled += slots.len();
             self.stats.rows_submitted += b * n;
+            if let Some(i) = ci {
+                self.stats.batches_by_class[i] += 1;
+                self.stats.slots_by_class[i] += slots.len();
+                self.stats.rows_by_class[i] += b * n;
+            }
             for (s, &(k, chunk)) in slots.iter().enumerate() {
                 self.stats.chunks += 1;
                 self.stats.splats_submitted += chunk.len();
+                if let Some(i) = ci {
+                    self.stats.splats_by_class[i] += chunk.len();
+                }
                 self.stats.splats_passed_cat += passes[s * n..s * n + chunk.len()]
                     .iter()
                     .filter(|&&p| p > 0.5)
@@ -453,10 +563,26 @@ impl<'rt> TileExecutor<'rt> {
         }
 
         self.stats.tiles += group.len();
+        if let Some(i) = ci {
+            self.stats.tiles_by_class[i] += group.len();
+        }
         for (k, st) in states.iter().enumerate() {
             self.write_tile(&group[k].rect, &st.acc_rgb, &st.acc_t, img, background);
         }
         Ok(())
+    }
+}
+
+/// The batched blend artifact serving a precision class. Unclassed and
+/// fp32-classed waves share the original `render_tile_batched` (its CAT
+/// gate is fp32), so an adaptive render whose thresholds force every tile
+/// to fp32 forms exactly the dispatches a `Global(Fp32)` render forms.
+pub fn batched_artifact(class: Option<Precision>) -> &'static str {
+    match class {
+        None | Some(Precision::Fp32) => "render_tile_batched",
+        Some(Precision::Fp16) => "render_tile_batched_fp16",
+        Some(Precision::Fp8) => "render_tile_batched_fp8",
+        Some(Precision::Mixed) => "render_tile_batched_mixed",
     }
 }
 
@@ -559,6 +685,120 @@ mod tests {
         };
         assert_eq!(rt.manifest.n_batch, 4);
         check_executor_matches_golden(&rt);
+    }
+
+    #[test]
+    fn fill_rate_guards_the_empty_wave() {
+        // A fresh executor (and every class of one) reports 0.0 — not NaN,
+        // not a division panic — before any wave ships.
+        let stats = ExecStats::default();
+        assert_eq!(stats.fill_rate(), 0.0);
+        for c in CLASSES {
+            assert_eq!(stats.fill_rate_by_class(c), 0.0);
+        }
+        // One class shipping rows leaves the others at 0.0.
+        let mut some = ExecStats::default();
+        some.splats_by_class[class_index(Precision::Fp16)] = 3;
+        some.rows_by_class[class_index(Precision::Fp16)] = 8;
+        assert_eq!(some.fill_rate_by_class(Precision::Fp16), 3.0 / 8.0);
+        assert_eq!(some.fill_rate_by_class(Precision::Fp8), 0.0);
+    }
+
+    #[test]
+    fn empty_and_classed_empty_queues_ship_nothing() {
+        let dir = std::env::temp_dir().join("flicker_emptywave_stub_artifacts");
+        write_stub_artifacts(&dir, 8, 16, 16, 4).unwrap();
+        let rt = match Runtime::load(&dir) {
+            Ok(rt) => rt,
+            Err(e) => {
+                eprintln!("skipping: stub runtime unavailable ({e})");
+                return;
+            }
+        };
+        let mut img = Image::new(32, 32);
+        let mut ex = TileExecutor::new(&rt);
+        ex.render_tiles(&[], &[], &mut img, [0.0; 3]).unwrap();
+        assert_eq!(ex.stats.fill_rate(), 0.0);
+        assert_eq!(ex.stats.batches, 0);
+        // Classed tiles whose lists are all empty form no wave at all —
+        // and the per-class fill rate stays on its 0.0 guard.
+        let grid = TileGrid::new(32, 32, 16);
+        let lists: Vec<Vec<u32>> = vec![Vec::new(); 4];
+        let jobs = TileJob::for_grid_classed(&grid, &lists, &[Precision::Fp16; 4]);
+        ex.render_tiles(&jobs, &[], &mut img, [0.0; 3]).unwrap();
+        assert_eq!(ex.stats.batches, 0);
+        assert_eq!(ex.stats.rows_submitted, 0);
+        assert_eq!(ex.stats.tiles, 4);
+        assert_eq!(ex.stats.tiles_by_class[class_index(Precision::Fp16)], 4);
+        assert_eq!(ex.stats.fill_rate(), 0.0);
+        assert_eq!(ex.stats.fill_rate_by_class(Precision::Fp16), 0.0);
+    }
+
+    #[test]
+    fn classed_waves_are_precision_pure() {
+        let dir = std::env::temp_dir().join("flicker_classed_stub_artifacts");
+        write_stub_artifacts(&dir, 64, 16, 16, 4).unwrap();
+        let rt = match Runtime::load(&dir) {
+            Ok(rt) => rt,
+            Err(e) => {
+                eprintln!("skipping: stub runtime unavailable ({e})");
+                return;
+            }
+        };
+        let (scene, cam) = test_scene();
+        let splats = project_scene(&scene, &cam);
+        let grid = TileGrid::new(32, 32, 16);
+        let mut lists = build_tile_lists(&splats, &grid, Strategy::Aabb);
+        for l in &mut lists {
+            sort_by_depth(l, &splats);
+        }
+        let classes = [Precision::Fp32, Precision::Fp16, Precision::Fp16, Precision::Mixed];
+        let jobs = TileJob::for_grid_classed(&grid, &lists, &classes);
+        let mut img = Image::new(32, 32);
+        let mut ex = TileExecutor::new(&rt);
+        ex.render_tiles(&jobs, &splats, &mut img, [0.0; 3]).unwrap();
+        // 4 tiles fit one n_batch=4 dispatch, but waves never mix classes:
+        // each populated class formed its own dispatches.
+        assert_eq!(ex.stats.tiles, 4);
+        assert_eq!(ex.stats.tiles_by_class, [1, 2, 1, 0]);
+        let populated = CLASSES
+            .iter()
+            .filter(|&&c| {
+                lists
+                    .iter()
+                    .zip(&classes)
+                    .any(|(l, &lc)| lc == c && !l.is_empty())
+            })
+            .count();
+        assert!(populated >= 2, "test scene too sparse to exercise waves");
+        assert!(ex.stats.batches >= populated, "waves mixed classes");
+        assert_eq!(ex.stats.batches, ex.stats.batches_by_class.iter().sum::<usize>());
+        assert_eq!(ex.stats.rows_submitted, ex.stats.rows_by_class.iter().sum::<usize>());
+        assert_eq!(
+            ex.stats.splats_submitted,
+            ex.stats.splats_by_class.iter().sum::<usize>()
+        );
+        for (i, c) in CLASSES.iter().enumerate() {
+            let fr = ex.stats.fill_rate_by_class(*c);
+            if ex.stats.rows_by_class[i] == 0 {
+                assert_eq!(fr, 0.0, "{c:?}");
+            } else {
+                assert!(fr > 0.0 && fr <= 1.0, "{c:?} fill rate {fr}");
+            }
+        }
+        // Forcing every class to fp32 reproduces the unclassed batched
+        // render bit for bit — same artifact, same groups, same waves.
+        let fp32_jobs = TileJob::for_grid_classed(&grid, &lists, &[Precision::Fp32; 4]);
+        let mut forced = Image::new(32, 32);
+        let mut exf = TileExecutor::new(&rt);
+        exf.render_tiles(&fp32_jobs, &splats, &mut forced, [0.0; 3]).unwrap();
+        let plain_jobs = TileJob::for_grid(&grid, &lists);
+        let mut plain = Image::new(32, 32);
+        let mut exp = TileExecutor::new(&rt);
+        exp.render_tiles(&plain_jobs, &splats, &mut plain, [0.0; 3]).unwrap();
+        assert_eq!(forced.data, plain.data);
+        assert_eq!(exf.stats.batches, exp.stats.batches);
+        assert_eq!(exf.stats.splats_submitted, exp.stats.splats_submitted);
     }
 
     #[test]

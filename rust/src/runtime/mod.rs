@@ -76,12 +76,21 @@ impl Manifest {
 
 /// Names of the artifacts the AOT compiler emits (and the offline stub
 /// can interpret): keep in sync with `python/compile/aot.py::entries`.
-pub const ARTIFACT_NAMES: [&str; 5] = [
+///
+/// The `render_tile_batched_*` variants are the same batched blend kernel
+/// monomorphized per CTU precision class — adaptive-precision waves
+/// dispatch one class per call, so the per-class CAT gating is baked into
+/// the artifact instead of branching inside it. `render_tile_batched`
+/// (no suffix) remains the fp32-gated kernel global renders use.
+pub const ARTIFACT_NAMES: [&str; 8] = [
     "project",
     "pr_weight",
     "cat_masks",
     "render_tile",
     "render_tile_batched",
+    "render_tile_batched_fp16",
+    "render_tile_batched_fp8",
+    "render_tile_batched_mixed",
 ];
 
 /// Synthesize a stub-interpretable artifact set: a `manifest.json` with

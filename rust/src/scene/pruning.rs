@@ -21,6 +21,7 @@
 use super::gaussian::Scene;
 use crate::camera::Camera;
 use crate::render::plan::FramePlan;
+use crate::render::pyramid::GateConfig;
 use crate::render::raster::{RenderOptions, RenderStats, VanillaMasks};
 use crate::util::json::{jnum, Json};
 use crate::util::pool;
@@ -96,6 +97,12 @@ impl PruneReport {
 /// worker count: tile partials fold into a per-view buffer in ascending
 /// tile index, and per-view buffers fold in ascending view index, no
 /// matter which worker computed which tile.
+///
+/// When the caller's `opts.gate` is off, scoring runs under
+/// [`GateConfig::on`] anyway: at the default threshold the coarse gate is
+/// lossless for Σ T·α (bit-identical scores, verified by test), so the
+/// pass skips dead (tile, splat) pairs for free. Caller-configured gates
+/// are honored unchanged.
 pub fn score_views(
     scene: &Scene,
     views: &[Camera],
@@ -104,6 +111,24 @@ pub fn score_views(
 ) -> (Vec<f32>, RenderStats) {
     assert!(!views.is_empty(), "need at least one scoring view");
     let total_workers = pool::resolve_workers(workers);
+
+    // The scoring pass always runs the coarse-to-fine contribution gate
+    // (`render::pyramid`): at the default threshold — exactly the blend
+    // loop's α < 1/255 floor — a rejected (tile, splat) or (quadrant,
+    // splat) pair contributes 0 to every pixel AND 0 to every Σ T·α
+    // partial, so the scores are bit-identical to ungated scoring while
+    // whole tiles of dead work are skipped before mask generation. A
+    // caller that configured its own gate keeps those thresholds (a lossy
+    // gate is then their scoring contract, as it is their render contract).
+    let opts = if opts.gate.enabled {
+        *opts
+    } else {
+        RenderOptions {
+            gate: GateConfig::on(),
+            ..*opts
+        }
+    };
+    let opts = &opts;
 
     // Stage 1: one FramePlan per view (frame preparation fans over views).
     let plans: Vec<FramePlan> =
@@ -316,6 +341,36 @@ mod tests {
             assert_eq!(a.x.to_bits(), b.x.to_bits());
             assert_eq!(a.y.to_bits(), b.y.to_bits());
             assert_eq!(a.z.to_bits(), b.z.to_bits());
+        }
+    }
+
+    #[test]
+    fn scoring_gate_is_bitwise_lossless() {
+        // score_views substitutes the coarse gate for gate-off callers;
+        // the Σ T·α scores must be bit-identical to ungated scoring (the
+        // default threshold is exactly the blend floor), and the gate must
+        // actually remove work.
+        let scene = generate_scaled(&preset("garden"), 0.02);
+        let vs = views();
+        let opts = RenderOptions::default();
+        assert!(!opts.gate.enabled, "test needs the gate-off default");
+        let (scores, stats) = score_views(&scene, &vs, &opts, 1);
+        assert!(stats.gate_tile_rejected > 0, "scoring gate never fired");
+        // Manually accumulated ungated per-view scores, same fold order.
+        let mut reference = vec![0.0f32; scene.len()];
+        for cam in &vs {
+            let plan = FramePlan::build(&scene, cam, &opts);
+            let mut view_scores = vec![0.0f32; scene.len()];
+            for t in 0..plan.num_tiles() {
+                let (partial, _) = plan.score_tile(t, &VanillaMasks);
+                plan.fold_scores(t, &partial, &mut view_scores);
+            }
+            for (acc, s) in reference.iter_mut().zip(&view_scores) {
+                *acc += *s;
+            }
+        }
+        for (i, (a, b)) in scores.iter().zip(&reference).enumerate() {
+            assert_eq!(a.to_bits(), b.to_bits(), "score {i}: {a} vs {b}");
         }
     }
 

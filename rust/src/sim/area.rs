@@ -45,7 +45,13 @@ impl Default for AreaParams {
 
 /// PRTU scaling with datapath precision (multiplier area ∝ ~mantissa²;
 /// mixed = FP16 front + FP8 quad-accumulate).
-fn prtu_scale(p: Precision) -> f64 {
+///
+/// Public for adaptive-precision reporting: a chip that classes tiles at
+/// runtime must still *provision* its PRTUs for the widest class it may
+/// dispatch, so the area of an adaptive config is the ceiling
+/// `prtu_scale(Fp32)` — only the energy model prices the realized
+/// per-tile class mix (see `sim::energy`).
+pub fn prtu_scale(p: Precision) -> f64 {
     match p {
         Precision::Fp32 => 1.0,
         Precision::Fp16 => 0.38,

@@ -10,6 +10,7 @@
 use super::workload::FrameWorkload;
 use super::HwConfig;
 use crate::cat::Precision;
+use crate::render::precision::{class_index, CLASSES};
 
 /// Per-op energies in picojoules (28 nm).
 #[derive(Clone, Copy, Debug)]
@@ -88,9 +89,11 @@ fn blend_pair_pj(p: &EnergyParams) -> f64 {
     13.0 * p.fp16_mul_pj + 6.0 * p.fp16_add_pj
 }
 
-/// CTU energy per PR at the configured precision (Alg. 1: 20 mul + 8 add
+/// CTU energy per PR at the given precision (Alg. 1: 20 mul + 8 add
 /// + 4 cmp on the quantized path, plus FP16 convert costs for mixed).
-fn pr_pj(p: &EnergyParams, prec: Precision) -> f64 {
+/// Public so benches can report the per-class op-mix cost of an adaptive
+/// frame next to the realized `ctu_prs_by_class` counts.
+pub fn pr_pj(p: &EnergyParams, prec: Precision) -> f64 {
     match prec {
         Precision::Fp32 => 20.0 * p.fp32_mul_pj + 12.0 * p.fp32_add_pj,
         Precision::Fp16 => 20.0 * p.fp16_mul_pj + 12.0 * p.fp16_add_pj,
@@ -117,12 +120,21 @@ pub fn frame_energy(
     let vru_evals = wl.minitile_pairs * 16;
     e.vru_uj = vru_evals as f64 * blend_pair_pj(p) * 1e-6;
 
-    // CTU: PRs at the configured precision + shared ln(255·o) term per job.
+    // CTU: PRs priced per precision class + shared ln(255·o) term per job.
+    // Global workloads fill exactly one `ctu_prs_by_class` bucket, and the
+    // zero buckets contribute exactly 0.0 to the fold, so single-class
+    // pricing is bit-identical to the historical `ctu_prs × pr_pj(tier)`.
+    // PRs a hand-built workload never classed (counters set, buckets left
+    // zero) are priced at the configured tier as before.
     if hw.ctu {
         let jobs = wl.dense_jobs + wl.sparse_jobs;
-        e.ctu_uj = (wl.ctu_prs as f64 * pr_pj(p, hw.cat_precision)
-            + jobs as f64 * (2.0 * p.fp16_mul_pj))
-            * 1e-6;
+        let classed: u64 = wl.ctu_prs_by_class.iter().sum();
+        let mut prs_pj = 0.0f64;
+        for c in CLASSES {
+            prs_pj += wl.ctu_prs_by_class[class_index(c)] as f64 * pr_pj(p, c);
+        }
+        prs_pj += wl.ctu_prs.saturating_sub(classed) as f64 * pr_pj(p, hw.cat_precision);
+        e.ctu_uj = (prs_pj + jobs as f64 * (2.0 * p.fp16_mul_pj)) * 1e-6;
     }
 
     // Feature FIFOs: one push + one pop per (job, masked channel); a feature
@@ -214,6 +226,30 @@ mod tests {
         assert!(pr_pj(&p, Precision::Mixed) < pr_pj(&p, Precision::Fp16));
         assert!(pr_pj(&p, Precision::Fp16) < pr_pj(&p, Precision::Fp32));
         assert!(pr_pj(&p, Precision::Fp8) < pr_pj(&p, Precision::Mixed));
+    }
+
+    #[test]
+    fn classed_ctu_pricing_is_single_bucket_compatible() {
+        let p = EnergyParams::default();
+        let hw = HwConfig::flicker32();
+        let w = wl(&hw);
+        let classed = frame_energy(&w, &hw, 0, 0, &p);
+        // A legacy workload (counters set, class buckets empty) prices at
+        // the configured tier — which must equal the classed global price.
+        let mut legacy = w.clone();
+        legacy.ctu_prs_by_class = [0; 4];
+        let legacy_e = frame_energy(&legacy, &hw, 0, 0, &p);
+        assert_eq!(classed.ctu_uj.to_bits(), legacy_e.ctu_uj.to_bits());
+        // Re-classing PRs from the mixed tier up to fp32 raises CTU energy.
+        let mut promoted = w.clone();
+        let i_mixed = class_index(Precision::Mixed);
+        let i_fp32 = class_index(Precision::Fp32);
+        let moved = promoted.ctu_prs_by_class[i_mixed] / 2;
+        assert!(moved > 0, "flicker32 workload should have mixed-tier PRs");
+        promoted.ctu_prs_by_class[i_mixed] -= moved;
+        promoted.ctu_prs_by_class[i_fp32] += moved;
+        let promoted_e = frame_energy(&promoted, &hw, 0, 0, &p);
+        assert!(promoted_e.ctu_uj > classed.ctu_uj);
     }
 
     #[test]

@@ -11,6 +11,7 @@ use super::{HwConfig, SubtileTest};
 use crate::camera::Camera;
 use crate::cat::{CatConfig, CatEngine};
 use crate::render::plan::FramePlan;
+use crate::render::precision::class_index;
 use crate::render::project::{Splat, ALPHA_MIN};
 use crate::render::pyramid::TilePyramid;
 use crate::render::raster::{RenderOptions, MINITILE};
@@ -66,6 +67,12 @@ pub struct FrameWorkload {
     pub minitile_pairs: u64,
     /// Σ CTU PRs evaluated (mixed-precision datapath activations).
     pub ctu_prs: u64,
+    /// `ctu_prs` split by the precision class that evaluated them, indexed
+    /// by [`class_index`] ([Fp32, Fp16, Mixed, Fp8]). Global-precision
+    /// plans put everything in the configured tier's bucket; adaptive
+    /// plans spread PRs across the realized per-tile class mix, which is
+    /// what the energy model prices per class.
+    pub ctu_prs_by_class: [u64; 4],
     /// Dense/sparse split of CTU jobs.
     pub dense_jobs: u64,
     /// Sparse-sampled CTU jobs.
@@ -160,6 +167,12 @@ pub fn extract_from_plan(scene: &Scene, plan: &FramePlan, hw: &HwConfig) -> Fram
         precision: hw.cat_precision,
         stage1: false, // stage 1 handled explicitly below
     });
+    // Adaptive plans class each tile; the CTU then evaluates that tile's
+    // PRs at the class precision instead of `hw.cat_precision`. The
+    // engine's one-entry PreQuant cache is keyed on splat id only, so a
+    // classed tile gets its own engine — reusing `cat` across precision
+    // changes would serve operands quantized for the wrong scheme.
+    let classes = plan.tile_classes();
 
     wl.tiles.reserve(lists.len());
     // Per-mini-tile transmittance state, reset per tile.
@@ -177,6 +190,15 @@ pub fn extract_from_plan(scene: &Scene, plan: &FramePlan, hw: &HwConfig) -> Fram
         } else {
             None
         };
+        let class = classes.as_ref().map(|c| c[t]);
+        let mut tile_cat = class.map(|precision| {
+            CatEngine::new(CatConfig {
+                mode: hw.cat_mode,
+                precision,
+                stage1: false,
+            })
+        });
+        let class_bucket = class_index(class.unwrap_or(hw.cat_precision));
         let mut tile = TileWork::default();
         trans = [[1.0f32; 16]; 16];
         done = [false; 16];
@@ -217,14 +239,16 @@ pub fn extract_from_plan(scene: &Scene, plan: &FramePlan, hw: &HwConfig) -> Fram
                 wl.stage2_pairs += 1;
 
                 let (mask, ctu_cycles) = if hw.ctu {
-                    let prs = cat.prs_for(s);
-                    let m = cat.subtile_mask(sub, s);
+                    let eng = tile_cat.as_mut().unwrap_or(&mut cat);
+                    let prs = eng.prs_for(s);
+                    let m = eng.subtile_mask(sub, s);
                     if prs == 4 {
                         wl.dense_jobs += 1;
                     } else {
                         wl.sparse_jobs += 1;
                     }
                     wl.ctu_prs += prs as u64;
+                    wl.ctu_prs_by_class[class_bucket] += prs as u64;
                     (m, (prs as u8).div_ceil(2))
                 } else {
                     (0xF, 1)
@@ -413,6 +437,40 @@ mod tests {
         assert!(on.stage1_pairs < off.stage1_pairs);
         assert!(on.minitile_pairs <= off.minitile_pairs);
         assert_eq!(on.blended_pairs, off.blended_pairs, "default gate must be lossless");
+    }
+
+    #[test]
+    fn ctu_prs_class_split_tracks_the_policy() {
+        use crate::render::precision::PrecisionPolicy;
+        let s = scene();
+        let c = cam();
+        let hw = HwConfig::flicker32();
+        // Global precision: every PR lands in the configured tier's bucket.
+        let plan = FramePlan::build(&s, &c, &RenderOptions::default());
+        let global = extract_from_plan(&s, &plan, &hw);
+        assert_eq!(global.ctu_prs_by_class.iter().sum::<u64>(), global.ctu_prs);
+        assert_eq!(
+            global.ctu_prs_by_class[class_index(hw.cat_precision)],
+            global.ctu_prs
+        );
+        // Adaptive: the realized class mix splits the same total.
+        let adaptive_plan = FramePlan::build(
+            &s,
+            &c,
+            &RenderOptions {
+                precision: PrecisionPolicy::adaptive(),
+                ..RenderOptions::default()
+            },
+        );
+        let adaptive = extract_from_plan(&s, &adaptive_plan, &hw);
+        assert_eq!(adaptive.ctu_prs_by_class.iter().sum::<u64>(), adaptive.ctu_prs);
+        assert_eq!(adaptive.ctu_prs, global.ctu_prs, "classing must not change PR counts");
+        let populated = adaptive.ctu_prs_by_class.iter().filter(|&&x| x > 0).count();
+        assert!(
+            populated >= 2,
+            "adaptive class mix degenerate: {:?}",
+            adaptive.ctu_prs_by_class
+        );
     }
 
     #[test]

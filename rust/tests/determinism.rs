@@ -20,6 +20,14 @@
 //! and the plan-cache counters stay exact — sequential orbits report a
 //! deterministic cold/delta split, streamed orbits a deterministic total,
 //! and `builds + delta_builds + hits == requests` always.
+//!
+//! Adaptive precision (`--precision adaptive`) joins the contract on its
+//! own terms: tile classes are a pure function of the plan (invariant
+//! across worker counts and PJRT batch widths), an adaptive render is
+//! bit-identical for any worker count / batch width, and forcing every
+//! threshold to 0 (all tiles class fp32) reproduces the global-fp32
+//! render bitwise. Adaptive is deterministic but — by design — not
+//! bitwise-equal to a global policy at reduced tiers.
 
 use flicker::camera::{orbit_path, Camera, Intrinsics};
 use flicker::cat::{CatConfig, LeaderMode, Precision};
@@ -334,6 +342,86 @@ fn frame_plan_reuse_is_bit_stable_across_renders() {
     assert_eq!(v1.image.data, v_again.image.data);
 }
 
+#[test]
+fn adaptive_forced_fp32_is_bitwise_global_fp32() {
+    // Thresholds forced to 0 class every tile fp32; the per-tile adaptive
+    // machinery (tile_masks_at providers, per-tile fan-out) must then
+    // reproduce the global-fp32 render bit for bit, for any worker count.
+    use flicker::render::precision::{PrecisionMode, PrecisionPolicy, PrecisionThresholds};
+    let (scene, cam) = truck_frame();
+    let cat = CatConfig {
+        mode: LeaderMode::SmoothFocused,
+        precision: Precision::Fp32,
+        stage1: true,
+    };
+    let global = FramePlan::build(&scene, &cam, &opts_with_workers(1)).render(&cat, None);
+    let forced = RenderOptions {
+        precision: PrecisionPolicy {
+            mode: PrecisionMode::Adaptive {
+                thresholds: PrecisionThresholds {
+                    fp32_min: 0.0,
+                    fp16_min: 0.0,
+                },
+                floor: Precision::Mixed,
+            },
+        },
+        ..opts_with_workers(1)
+    };
+    let classes = FramePlan::build(&scene, &cam, &forced)
+        .tile_classes()
+        .expect("adaptive plans class every tile");
+    assert!(classes.iter().all(|&c| c == Precision::Fp32));
+    for workers in [1, 2, 8, 0] {
+        let plan = FramePlan::build(&scene, &cam, &RenderOptions { workers, ..forced });
+        let out = plan.render(&cat, None);
+        assert_eq!(global.image.data, out.image.data, "workers={workers}");
+        assert_eq!(global.stats.pairs_tested, out.stats.pairs_tested, "workers={workers}");
+    }
+}
+
+#[test]
+fn adaptive_classes_and_renders_are_worker_invariant() {
+    use flicker::render::precision::PrecisionPolicy;
+    let (scene, cam) = truck_frame();
+    let adaptive = |workers, batch| RenderOptions {
+        precision: PrecisionPolicy::adaptive(),
+        workers,
+        batch,
+        ..RenderOptions::default()
+    };
+    let base = FramePlan::build(&scene, &cam, &adaptive(1, 1));
+    let reference = base.tile_classes().expect("adaptive plans class every tile");
+    let mut present = [false; 4];
+    for &c in &reference {
+        present[flicker::render::precision::class_index(c)] = true;
+    }
+    let distinct = present.iter().filter(|&&b| b).count();
+    assert!(distinct >= 2, "degenerate class mix: {reference:?}");
+    // Class assignment is a pure function of the plan: worker count and
+    // batch width must not perturb it.
+    for (workers, batch) in [(2usize, 1usize), (8, 3), (0, 8)] {
+        let plan = FramePlan::build(&scene, &cam, &adaptive(workers, batch));
+        assert_eq!(
+            plan.tile_classes().unwrap(),
+            reference,
+            "workers={workers} batch={batch}"
+        );
+    }
+    // And the adaptive render itself is bit-identical across worker counts
+    // (deterministic — though not bitwise-equal to any global policy).
+    let cat = CatConfig {
+        mode: LeaderMode::SmoothFocused,
+        precision: Precision::Mixed,
+        stage1: true,
+    };
+    let seq = base.render(&cat, None);
+    for workers in [2, 8, 0] {
+        let out = FramePlan::build(&scene, &cam, &adaptive(workers, 1)).render(&cat, None);
+        assert_eq!(seq.image.data, out.image.data, "workers={workers}");
+        assert_eq!(seq.stats.pairs_tested, out.stats.pairs_tested, "workers={workers}");
+    }
+}
+
 fn scoring_setup() -> (Scene, Vec<Camera>) {
     let scene = generate_scaled(&preset("truck"), 0.02);
     let views = orbit_path(
@@ -524,6 +612,42 @@ mod pjrt_stream {
         for (g, p) in golden.iter().zip(&reference) {
             let q = psnr(&g.image, &p.image);
             assert!(q > 30.0, "view {}: PJRT vs golden PSNR {q}", g.view);
+        }
+    }
+
+    #[test]
+    fn pjrt_adaptive_waves_are_batch_invariant() {
+        // Adaptive precision forms precision-pure waves through the
+        // per-class monomorphized artifacts; width-1 waves (the single-tile
+        // adaptive loop) through width-8 waves must be bit-identical, and
+        // the orbit must stay close to the golden adaptive render.
+        let Some(rt) = stub_runtime() else { return };
+        let pjrt = Pjrt::new(&rt);
+        let cfg = |batch: usize| ExperimentConfig {
+            batch,
+            precision: Some("adaptive".into()),
+            ..orbit_cfg()
+        };
+        let base = Session::builder(cfg(1)).build().unwrap();
+        let reference: Vec<FrameMetrics> =
+            (0..base.num_frames()).map(|i| base.frame(i, &pjrt).unwrap()).collect();
+        for batch in [2usize, 3, 8] {
+            let s = Session::builder(cfg(batch)).build().unwrap();
+            let frames = s.stream(&pjrt).ordered().unwrap();
+            assert_eq!(frames.len(), reference.len());
+            for (a, b) in reference.iter().zip(&frames) {
+                assert_eq!(
+                    a.image.data, b.image.data,
+                    "batch={batch} view={}",
+                    a.view
+                );
+            }
+        }
+        let golden_session = Session::builder(cfg(1)).build().unwrap();
+        let golden = golden_session.stream(&Golden).ordered().unwrap();
+        for (g, p) in golden.iter().zip(&reference) {
+            let q = psnr(&g.image, &p.image);
+            assert!(q > 30.0, "view {}: adaptive PJRT vs golden PSNR {q}", g.view);
         }
     }
 }

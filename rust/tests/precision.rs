@@ -1,0 +1,135 @@
+//! Acceptance guardrails for contribution-driven adaptive precision.
+//!
+//! The adaptive policy exists to buy CTU energy with tiles the viewer
+//! cannot tell apart from fp32. These tests pin that bargain on the
+//! garden + truck evaluation orbits at the **default** thresholds:
+//!
+//! * coverage — a substantial share (≥ 40%) of populated tiles class
+//!   below fp32, otherwise the policy is decorative;
+//! * quality — every orbit view renders within 30 dB PSNR of the
+//!   global-fp32 reference;
+//! * energy — the realized class mix prices cheaper in `sim::energy`
+//!   than running the same workload's CTU entirely at fp32.
+//!
+//! The default thresholds themselves are pinned too: changing them is a
+//! deliberate quality/energy retune and must show up in this file.
+
+use flicker::camera::{orbit_path, Camera, Intrinsics};
+use flicker::cat::{CatConfig, LeaderMode, Precision};
+use flicker::numeric::linalg::v3;
+use flicker::render::metrics::psnr;
+use flicker::render::plan::FramePlan;
+use flicker::render::precision::{PrecisionMode, PrecisionPolicy, PrecisionThresholds};
+use flicker::render::raster::RenderOptions;
+use flicker::scene::gaussian::Scene;
+use flicker::scene::synthetic::{generate_scaled, preset};
+use flicker::sim::energy::{frame_energy, EnergyParams};
+use flicker::sim::workload::extract_from_plan;
+use flicker::sim::HwConfig;
+
+fn orbit(res: u32, frames: usize) -> Vec<Camera> {
+    orbit_path(
+        Intrinsics::from_fov(res, res, 1.2),
+        v3(0.0, 0.5, 0.0),
+        12.0,
+        3.0,
+        frames,
+    )
+}
+
+fn eval_scene(name: &str) -> Scene {
+    generate_scaled(&preset(name), 0.02)
+}
+
+fn cat(precision: Precision) -> CatConfig {
+    CatConfig {
+        mode: LeaderMode::SmoothFocused,
+        precision,
+        stage1: true,
+    }
+}
+
+#[test]
+fn default_thresholds_are_pinned() {
+    let t = PrecisionThresholds::default();
+    assert_eq!(t.fp32_min, 0.60);
+    assert_eq!(t.fp16_min, 0.25);
+    let PrecisionMode::Adaptive { thresholds, floor } = PrecisionPolicy::adaptive().mode else {
+        panic!("PrecisionPolicy::adaptive() must be Adaptive");
+    };
+    assert_eq!(thresholds, t);
+    assert_eq!(floor, Precision::Mixed);
+    // The inert default: no policy configured means global at the CTU's
+    // own precision, which renders through the exact pre-policy path.
+    assert!(!PrecisionPolicy::default().is_adaptive());
+}
+
+#[test]
+fn adaptive_orbits_hold_the_coverage_quality_energy_bargain() {
+    let views = orbit(96, 3);
+    let fp32_opts = RenderOptions::default();
+    let adaptive_opts = RenderOptions {
+        precision: PrecisionPolicy::adaptive(),
+        ..RenderOptions::default()
+    };
+    let hw_fp32 = HwConfig {
+        cat_precision: Precision::Fp32,
+        ..HwConfig::flicker32()
+    };
+    let energy = EnergyParams::default();
+
+    for scene_name in ["garden", "truck"] {
+        let scene = eval_scene(scene_name);
+        let mut populated = 0usize;
+        let mut below_fp32 = 0usize;
+        let mut ctu_adaptive_uj = 0.0f64;
+        let mut ctu_fp32_uj = 0.0f64;
+
+        for (v, cam) in views.iter().enumerate() {
+            let fp32_plan = FramePlan::build(&scene, cam, &fp32_opts);
+            let adaptive_plan = FramePlan::build(&scene, cam, &adaptive_opts);
+            let classes = adaptive_plan
+                .tile_classes()
+                .expect("adaptive plans class every tile");
+
+            // Coverage over populated tiles only — empty tiles class at the
+            // floor for free and would flatter the ratio.
+            for (t, class) in classes.iter().enumerate() {
+                if adaptive_plan.lists[t].is_empty() {
+                    continue;
+                }
+                populated += 1;
+                if *class != Precision::Fp32 {
+                    below_fp32 += 1;
+                }
+            }
+
+            // Quality: adaptive CAT render vs the global-fp32 CAT render.
+            let reference = fp32_plan.render(&cat(Precision::Fp32), None);
+            let adaptive = adaptive_plan.render(&cat(Precision::Fp32), None);
+            let q = psnr(&reference.image, &adaptive.image);
+            assert!(
+                q >= 30.0,
+                "{scene_name} view {v}: adaptive PSNR {q} dB vs global fp32"
+            );
+
+            // Energy: price the realized class mix against an all-fp32 CTU
+            // over the same frame (identical cycles/DRAM contributions).
+            let wl_adaptive = extract_from_plan(&scene, &adaptive_plan, &hw_fp32);
+            let wl_fp32 = extract_from_plan(&scene, &fp32_plan, &hw_fp32);
+            ctu_adaptive_uj += frame_energy(&wl_adaptive, &hw_fp32, 0, 0, &energy).ctu_uj;
+            ctu_fp32_uj += frame_energy(&wl_fp32, &hw_fp32, 0, 0, &energy).ctu_uj;
+        }
+
+        let share = below_fp32 as f64 / populated.max(1) as f64;
+        assert!(
+            share >= 0.40,
+            "{scene_name}: only {share:.2} of {populated} populated tiles classed below fp32"
+        );
+        assert!(
+            ctu_adaptive_uj < ctu_fp32_uj,
+            "{scene_name}: adaptive CTU energy {ctu_adaptive_uj} µJ \
+             must beat all-fp32 {ctu_fp32_uj} µJ"
+        );
+    }
+}

@@ -13,6 +13,7 @@
 //! monomorphization (tests synthesize small-N manifests for speed). The
 //! tile edge is fixed at 16 like the Pallas kernels.
 
+use crate::quant::{quantize_f16, quantize_fp8_e4m3};
 use crate::{Error, Literal, Result};
 
 /// Tile edge the blend kernel is written for (python blend.py TILE).
@@ -30,11 +31,31 @@ pub(crate) fn run(name: &str, inputs: &[&Literal]) -> Result<Vec<Literal>> {
         "pr_weight" => pr_weight(inputs),
         "cat_masks" => cat_masks_entry(inputs),
         "render_tile" => render_tile(inputs),
-        "render_tile_batched" => render_tile_batched(inputs),
+        "render_tile_batched" => render_tile_batched(inputs, Prec::Fp32),
+        "render_tile_batched_fp16" => render_tile_batched(inputs, Prec::Fp16),
+        "render_tile_batched_fp8" => render_tile_batched(inputs, Prec::Fp8),
+        "render_tile_batched_mixed" => render_tile_batched(inputs, Prec::Mixed),
         other => Err(Error::Message(format!(
             "xla stub: no built-in kernel for artifact '{other}'"
         ))),
     }
+}
+
+/// CTU precision class a blend artifact is monomorphized for. The three
+/// reduced schemes quantize only the CAT decision datapath (corner weights
+/// + shared threshold) — compositing itself stays fp32, exactly like the
+/// software `GoldenCat` backend, whose precision knob also touches the
+/// mask engine only. Mirrors `flicker::cat::mixed::Precision`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum Prec {
+    /// Reference: no quantization anywhere (the historical kernel).
+    Fp32,
+    /// All CAT operands + ops at binary16.
+    Fp16,
+    /// All CAT operands at E4M3, including absolute coordinates.
+    Fp8,
+    /// FP16 deltas → FP8 products → FP16 accumulation (paper Sec. IV-C).
+    Mixed,
 }
 
 fn arg<'a>(inputs: &[&'a Literal], i: usize, name: &str) -> Result<(&'a [f32], &'a [i64])> {
@@ -136,6 +157,99 @@ fn corner_weights(mu: &[f32], conic: &[f32], i: usize, pt: [f32; 2], pb: [f32; 2
     ]
 }
 
+/// Lines 2–7 of Alg. 1 with injectable rounding for the multiply stage
+/// (`qm`) and the accumulate stage (`qa`) — the quantized twin of
+/// [`corner_weights`], mirroring `cat::mixed::weights_from_deltas` term
+/// for term.
+#[allow(clippy::too_many_arguments)]
+fn weights_from_deltas(
+    dtx: f32,
+    dty: f32,
+    dbx: f32,
+    dby: f32,
+    ca: f32,
+    cb: f32,
+    cc: f32,
+    qm: fn(f32) -> f32,
+    qa: fn(f32) -> f32,
+) -> [f32; 4] {
+    // lines 2–3
+    let s_tx = qm(qm(0.5 * dtx * dtx) * ca);
+    let s_ty = qm(qm(0.5 * dty * dty) * cc);
+    let s_bx = qm(qm(0.5 * dbx * dbx) * ca);
+    let s_by = qm(qm(0.5 * dby * dby) * cc);
+    // lines 4–5
+    let t0 = qm(qm(dtx * dty) * cb);
+    let t1 = qm(qm(dbx * dty) * cb);
+    let t2 = qm(qm(dtx * dby) * cb);
+    let t3 = qm(qm(dbx * dby) * cb);
+    // lines 6–7 (accumulate precision)
+    [
+        qa(qa(s_tx + s_ty) + t0),
+        qa(qa(s_bx + s_ty) + t1),
+        qa(qa(s_tx + s_by) + t2),
+        qa(qa(s_bx + s_by) + t3),
+    ]
+}
+
+/// [`corner_weights`] under a CTU precision scheme: quantization inserted
+/// at the exact points `cat::mixed::pr_weights_quant` converts, so the
+/// per-class artifacts reproduce the software CTU's mask decisions bit
+/// for bit. `Fp32` takes the historical exact path.
+fn corner_weights_quant(
+    mu: &[f32],
+    conic: &[f32],
+    i: usize,
+    pt: [f32; 2],
+    pb: [f32; 2],
+    prec: Prec,
+) -> [f32; 4] {
+    let q16 = quantize_f16;
+    let q8 = quantize_fp8_e4m3;
+    let (mx, my) = (mu[i * 2], mu[i * 2 + 1]);
+    let (ca, cb, cc) = (conic[i * 3], conic[i * 3 + 1], conic[i * 3 + 2]);
+    match prec {
+        Prec::Fp32 => corner_weights(mu, conic, i, pt, pb),
+        Prec::Fp16 => {
+            // All operands + ops at FP16.
+            let dtx = q16(q16(pt[0]) - q16(mx));
+            let dty = q16(q16(pt[1]) - q16(my));
+            let dbx = q16(q16(pb[0]) - q16(mx));
+            let dby = q16(q16(pb[1]) - q16(my));
+            weights_from_deltas(dtx, dty, dbx, dby, q16(ca), q16(cb), q16(cc), q16, q16)
+        }
+        Prec::Fp8 => {
+            // Everything at E4M3 — including the absolute coordinates.
+            let dtx = q8(q8(pt[0]) - q8(mx));
+            let dty = q8(q8(pt[1]) - q8(my));
+            let dbx = q8(q8(pb[0]) - q8(mx));
+            let dby = q8(q8(pb[1]) - q8(my));
+            weights_from_deltas(dtx, dty, dbx, dby, q8(ca), q8(cb), q8(cc), q8, q8)
+        }
+        Prec::Mixed => {
+            // Deltas exact at FP16, then converted to FP8; products at FP8,
+            // accumulation at FP16 (QAU).
+            let dtx = q8(q16(q16(pt[0]) - q16(mx)));
+            let dty = q8(q16(q16(pt[1]) - q16(my)));
+            let dbx = q8(q16(q16(pb[0]) - q16(mx)));
+            let dby = q8(q16(q16(pb[1]) - q16(my)));
+            weights_from_deltas(dtx, dty, dbx, dby, q8(ca), q8(cb), q8(cc), q8, q16)
+        }
+    }
+}
+
+/// The Eq. 2 left-hand side ln(255·o) at the precision's shared unit —
+/// FP16 in all reduced schemes except Fp8 (mirrors
+/// `cat::mixed::shared_threshold_quant`).
+fn cat_lhs(opacity: f32, prec: Prec) -> f32 {
+    let t = (255.0 * opacity.max(1e-12)).ln();
+    match prec {
+        Prec::Fp32 => t,
+        Prec::Fp16 | Prec::Mixed => quantize_f16(t),
+        Prec::Fp8 => quantize_fp8_e4m3(t),
+    }
+}
+
 /// `pr_weight.hlo.txt`: (N,2), (N,3), (M,2), (M,2) -> (M,N,4) weights.
 fn pr_weight(inputs: &[&Literal]) -> Result<Vec<Literal>> {
     let (mu, md) = arg(inputs, 0, "pr_weight")?;
@@ -157,7 +271,9 @@ fn pr_weight(inputs: &[&Literal]) -> Result<Vec<Literal>> {
     Ok(vec![Literal::from_parts(out, vec![m as i64, n as i64, 4])])
 }
 
-/// Eq. 2 pass masks: ln(255·max(o, 1e-12)) > E, as {0,1} f32 (M,N,4).
+/// Eq. 2 pass masks: ln(255·max(o, 1e-12)) > E, as {0,1} f32 (M,N,4),
+/// with both sides evaluated at `prec`.
+#[allow(clippy::too_many_arguments)]
 fn cat_mask_values(
     mu: &[f32],
     conic: &[f32],
@@ -166,14 +282,15 @@ fn cat_mask_values(
     p_bot: &[f32],
     n: usize,
     m: usize,
+    prec: Prec,
 ) -> Vec<f32> {
     let mut out = vec![0.0f32; m * n * 4];
     for k in 0..m {
         let pt = [p_top[k * 2], p_top[k * 2 + 1]];
         let pb = [p_bot[k * 2], p_bot[k * 2 + 1]];
         for i in 0..n {
-            let lhs = (255.0 * opacity[i].max(1e-12)).ln();
-            let e = corner_weights(mu, conic, i, pt, pb);
+            let lhs = cat_lhs(opacity[i], prec);
+            let e = corner_weights_quant(mu, conic, i, pt, pb, prec);
             for c in 0..4 {
                 out[(k * n + i) * 4 + c] = if lhs > e[c] { 1.0 } else { 0.0 };
             }
@@ -192,13 +309,15 @@ fn cat_masks_entry(inputs: &[&Literal]) -> Result<Vec<Literal>> {
     expect_rank(md, 2, "cat_masks mu")?;
     let n = dim(md, 0);
     let m = dim(td, 0);
-    let out = cat_mask_values(mu, conic, opacity, p_top, p_bot, n, m);
+    let out = cat_mask_values(mu, conic, opacity, p_top, p_bot, n, m, Prec::Fp32);
     Ok(vec![Literal::from_parts(out, vec![m as i64, n as i64, 4])])
 }
 
 /// The single-tile render: CAT-gated front-to-back blend over a 16×16
 /// tile (python model.render_tile_entry + kernels/blend.py). Writes rgb
-/// (T,T,3), trans (T,T), passes (N,) into caller-provided slices.
+/// (T,T,3), trans (T,T), passes (N,) into caller-provided slices. `prec`
+/// selects the CAT gate's numeric scheme; the blend itself is fp32 for
+/// every class.
 #[allow(clippy::too_many_arguments)]
 fn render_tile_into(
     mu: &[f32],
@@ -210,12 +329,13 @@ fn render_tile_into(
     p_bot: &[f32],
     n: usize,
     m: usize,
+    prec: Prec,
     rgb: &mut [f32],
     trans: &mut [f32],
     passes: &mut [f32],
 ) {
     // CAT gate: a splat passes if any corner of any PR passes Eq. 2.
-    let masks = cat_mask_values(mu, conic, opacity, p_top, p_bot, n, m);
+    let masks = cat_mask_values(mu, conic, opacity, p_top, p_bot, n, m, prec);
     for (i, p) in passes.iter_mut().enumerate() {
         let mut any = 0.0f32;
         for k in 0..m {
@@ -276,7 +396,19 @@ fn render_tile(inputs: &[&Literal]) -> Result<Vec<Literal>> {
     let mut trans = vec![0.0f32; TILE * TILE];
     let mut passes = vec![0.0f32; n];
     render_tile_into(
-        mu, conic, opacity, color, origin, p_top, p_bot, n, m, &mut rgb, &mut trans, &mut passes,
+        mu,
+        conic,
+        opacity,
+        color,
+        origin,
+        p_top,
+        p_bot,
+        n,
+        m,
+        Prec::Fp32,
+        &mut rgb,
+        &mut trans,
+        &mut passes,
     );
     let t = TILE as i64;
     Ok(vec![
@@ -286,11 +418,14 @@ fn render_tile(inputs: &[&Literal]) -> Result<Vec<Literal>> {
     ])
 }
 
-/// `render_tile_batched.hlo.txt`: `render_tile` over a leading batch dim.
-/// Each slot runs the identical single-tile computation (the vmap
-/// semantics of python model.render_tiles_entry), which is what makes the
-/// batched executor path bit-identical to looped single-tile dispatches.
-fn render_tile_batched(inputs: &[&Literal]) -> Result<Vec<Literal>> {
+/// `render_tile_batched[_fp16|_fp8|_mixed].hlo.txt`: `render_tile` over a
+/// leading batch dim, monomorphized per CAT precision class. Each slot
+/// runs the identical single-tile computation (the vmap semantics of
+/// python model.render_tiles_entry), which is what makes the batched
+/// executor path bit-identical to looped single-tile dispatches — and why
+/// a precision-pure wave of width 1 is bit-identical to the wider waves
+/// the adaptive executor forms.
+fn render_tile_batched(inputs: &[&Literal], prec: Prec) -> Result<Vec<Literal>> {
     let (mu, md) = arg(inputs, 0, "render_tile_batched")?;
     let (conic, _) = arg(inputs, 1, "render_tile_batched")?;
     let (opacity, _) = arg(inputs, 2, "render_tile_batched")?;
@@ -316,6 +451,7 @@ fn render_tile_batched(inputs: &[&Literal]) -> Result<Vec<Literal>> {
             &p_bot[s * m * 2..(s + 1) * m * 2],
             n,
             m,
+            prec,
             &mut rgb[s * TILE * TILE * 3..(s + 1) * TILE * TILE * 3],
             &mut trans[s * TILE * TILE..(s + 1) * TILE * TILE],
             &mut passes[s * n..(s + 1) * n],

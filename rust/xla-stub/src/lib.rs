@@ -21,6 +21,7 @@
 //! path (the opt-in `xla-real` CI lane does exactly that).
 
 mod kernels;
+mod quant;
 
 use std::fmt;
 

@@ -1,0 +1,156 @@
+//! Quantization primitives for the per-precision blend kernels.
+//!
+//! These are verbatim copies of the flicker crate's software float
+//! emulation (`numeric::fp16::quantize_f16`, `numeric::fp8::quantize_fp8`
+//! at E4M3): the stub cannot depend on the flicker crate (the dependency
+//! points the other way), but the per-precision artifact kernels must
+//! produce bit-identical CAT decisions to the CTU model in `cat::mixed`.
+//! Both sides implement IEEE round-to-nearest-even, so any divergence
+//! would be a bug; the duplication is covered by the kernels' differential
+//! tests against `GoldenCat` in `flicker::runtime::executor`.
+
+/// Round-trip an f32 through IEEE binary16 (RNE, subnormals, saturating
+/// to ±∞ like hardware FCVT).
+#[inline]
+pub(crate) fn quantize_f16(x: f32) -> f32 {
+    f16_bits_to_f32(f32_to_f16_bits(x))
+}
+
+fn f32_to_f16_bits(x: f32) -> u16 {
+    let bits = x.to_bits();
+    let sign = ((bits >> 16) & 0x8000) as u16;
+    let exp = ((bits >> 23) & 0xFF) as i32;
+    let man = bits & 0x7F_FFFF;
+
+    if exp == 0xFF {
+        // Inf / NaN
+        return if man == 0 { sign | 0x7C00 } else { sign | 0x7E00 };
+    }
+
+    // Unbiased exponent, rebiased for half (bias 15).
+    let e = exp - 127 + 15;
+    if e >= 0x1F {
+        return sign | 0x7C00; // overflow → infinity
+    }
+    if e <= 0 {
+        // Subnormal or underflow to zero.
+        if e < -10 {
+            return sign;
+        }
+        let man = man | 0x80_0000; // implicit leading 1
+        let shift = (14 - e) as u32; // 14..24
+        let half_ulp = 1u32 << (shift - 1);
+        let rounded = man + half_ulp - 1 + ((man >> shift) & 1);
+        return sign | (rounded >> shift) as u16;
+    }
+    // Normal: round mantissa from 23 to 10 bits, RNE.
+    let half_ulp = 0x0FFF + ((man >> 13) & 1);
+    let man_r = man + half_ulp;
+    if man_r & 0x80_0000 != 0 {
+        // Mantissa overflow bumps exponent.
+        let e2 = e + 1;
+        if e2 >= 0x1F {
+            return sign | 0x7C00;
+        }
+        return sign | ((e2 as u16) << 10);
+    }
+    sign | ((e as u16) << 10) | (man_r >> 13) as u16
+}
+
+fn f16_bits_to_f32(h: u16) -> f32 {
+    let sign = ((h & 0x8000) as u32) << 16;
+    let exp = ((h >> 10) & 0x1F) as u32;
+    let man = (h & 0x3FF) as u32;
+    let bits = if exp == 0 {
+        if man == 0 {
+            sign
+        } else {
+            // Subnormal: value = man · 2⁻²⁴, exact in f32.
+            let v = man as f32 * 2.0f32.powi(-24);
+            return if sign != 0 { -v } else { v };
+        }
+    } else if exp == 0x1F {
+        sign | 0x7F80_0000 | (man << 13)
+    } else {
+        sign | ((exp + 127 - 15) << 23) | (man << 13)
+    };
+    f32::from_bits(bits)
+}
+
+/// Round-trip an f32 through FP8 E4M3 (OCP: bias 7, no infinities,
+/// saturating at ±448 like accelerator convert units), RNE.
+#[inline]
+pub(crate) fn quantize_fp8_e4m3(x: f32) -> f32 {
+    if x.is_nan() {
+        return x;
+    }
+    let ax = x.abs();
+    if ax >= 448.0 {
+        return 448.0_f32.copysign(x);
+    }
+    const MIN_NORMAL: f32 = 0.015625; // 2⁻⁶
+    if ax < MIN_NORMAL {
+        // Subnormals: multiples of 2⁻⁹; RNE via round_ties_even.
+        let q = (ax * 512.0).round_ties_even() * (1.0 / 512.0);
+        return q.copysign(x);
+    }
+    // Normals: RNE the f32 mantissa down to 3 bits; carries propagate into
+    // the exponent naturally through the integer add.
+    const SHIFT: u32 = 23 - 3;
+    let bits = ax.to_bits();
+    let half = (1u32 << (SHIFT - 1)) - 1 + ((bits >> SHIFT) & 1);
+    let r = (bits + half) & !((1u32 << SHIFT) - 1);
+    let q = f32::from_bits(r).min(448.0);
+    q.copysign(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn f16_reference_values() {
+        for x in [0.0f32, 1.0, 0.5, 0.25, 1.5, -1.5, 2048.0, 65504.0] {
+            assert_eq!(quantize_f16(x), x, "{x}");
+        }
+        // RNE ties: 1 + 2⁻¹¹ is halfway to 1 + 2⁻¹⁰ → rounds to even (1.0).
+        assert_eq!(quantize_f16(1.0 + 2.0f32.powi(-11)), 1.0);
+        assert_eq!(
+            quantize_f16(1.0 + 3.0 * 2.0f32.powi(-11)),
+            1.0 + 2.0f32.powi(-9)
+        );
+        // Overflow saturates to infinity, subnormals survive.
+        assert!(quantize_f16(1e6).is_infinite());
+        let min_sub = 2.0f32.powi(-24);
+        assert_eq!(quantize_f16(min_sub * 3.0), min_sub * 3.0);
+        assert_eq!(quantize_f16(min_sub * 0.4), 0.0);
+    }
+
+    #[test]
+    fn fp8_reference_values() {
+        for p in -6..=8 {
+            let x = 2.0f32.powi(p);
+            assert_eq!(quantize_fp8_e4m3(x), x, "2^{p}");
+        }
+        assert_eq!(quantize_fp8_e4m3(1.5), 1.5);
+        assert_eq!(quantize_fp8_e4m3(500.0), 448.0);
+        assert_eq!(quantize_fp8_e4m3(-1e9), -448.0);
+        // RNE ties at the 1/8 step around 1.0.
+        assert_eq!(quantize_fp8_e4m3(1.0625), 1.0);
+        assert_eq!(quantize_fp8_e4m3(1.1875), 1.25);
+        // E4M3 steps near 500 are 32 px wide — absolute coords collapse.
+        assert_eq!(quantize_fp8_e4m3(500.0), quantize_fp8_e4m3(503.0));
+    }
+
+    #[test]
+    fn idempotent() {
+        let mut x = 0.01f32;
+        while x < 600.0 {
+            let q16 = quantize_f16(x);
+            assert_eq!(quantize_f16(q16), q16);
+            let q8 = quantize_fp8_e4m3(x);
+            assert_eq!(quantize_fp8_e4m3(q8), q8);
+            x *= 1.37;
+        }
+    }
+}

@@ -1,14 +1,16 @@
 #!/usr/bin/env python3
-"""Merge bench JSON sidecars into one commit-stamped BENCH_7.json.
+"""Merge bench JSON sidecars into one commit-stamped BENCH_8.json.
 
 The bench-record CI lane (push-to-main only) runs the hotpath,
-fig11_gating, and fig12_temporal benches in quick mode, then calls this
-script to fold their `rust/target/bench-reports/*.json` sidecars into a
-single artifact that extends the repo's perf trajectory: plan
-build/reuse/delta timings, PJRT single-vs-batched dispatch, the
+fig11_gating, fig12_temporal, and fig13_precision benches in quick mode,
+then calls this script to fold their `rust/target/bench-reports/*.json`
+sidecars into a single artifact that extends the repo's perf trajectory:
+plan build/reuse/delta timings, PJRT single-vs-batched dispatch, the
 coarse-to-fine gating rows (splats_submitted, per-level reject counts,
-gating on/off), and the temporal plan-delta amortization sweep
-(amortized_ratio, rebinned_frac, entries_carried per orbit step).
+gating on/off), the temporal plan-delta amortization sweep
+(amortized_ratio, rebinned_frac, entries_carried per orbit step), and the
+adaptive-precision rows (per-class tile/PR mix, PSNR vs global fp32, CTU
+energy saving).
 
 Stdlib only — the CI image must not need pip installs.
 """
@@ -17,11 +19,11 @@ import json
 import os
 import sys
 
-REPORTS = ["hotpath", "fig11_gating", "fig12_temporal"]
+REPORTS = ["hotpath", "fig11_gating", "fig12_temporal", "fig13_precision"]
 
 
 def main():
-    out_path = sys.argv[1] if len(sys.argv) > 1 else "BENCH_7.json"
+    out_path = sys.argv[1] if len(sys.argv) > 1 else "BENCH_8.json"
     report_dir = os.environ.get(
         "FLICKER_BENCH_REPORTS", os.path.join("rust", "target", "bench-reports")
     )
