@@ -28,15 +28,17 @@ bench-smoke:
 
 # Record the perf trajectory (CI: bench-record lane, push-to-main only):
 # run hotpath (with the pjrt feature so the exec_tile_single/batched rows
-# land, stub-backed), the gating bench, the temporal plan-delta bench, and
-# the adaptive-precision bench in quick mode, then merge their JSON
-# sidecars into a commit-stamped BENCH_8.json.
+# land, stub-backed), the gating bench, the temporal plan-delta bench, the
+# adaptive-precision bench, and the multi-tenant service bench (with the
+# pjrt feature so the coalesced fill-rate rows land, stub-backed) in quick
+# mode, then merge their JSON sidecars into a commit-stamped BENCH_9.json.
 bench-record:
 	$(CARGO) bench --features pjrt --bench hotpath -- --quick
 	$(CARGO) bench --bench fig11_gating -- --quick
 	$(CARGO) bench --bench fig12_temporal -- --quick
 	$(CARGO) bench --bench fig13_precision -- --quick
-	$(PYTHON) scripts/collect_bench.py BENCH_8.json
+	$(CARGO) bench --features pjrt --bench fig14_service -- --quick
+	$(PYTHON) scripts/collect_bench.py BENCH_9.json
 
 # Heavier property coverage (CI: prop-heavy lane): 512 generated cases per
 # property across the property suite (including the temporal plan-delta

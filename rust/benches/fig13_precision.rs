@@ -8,7 +8,7 @@
 //!
 //! Emitted as `target/bench-reports/fig13_precision.json`; the
 //! `bench-record` CI lane merges it with the other reports into
-//! `BENCH_8.json`.
+//! `BENCH_9.json`.
 
 mod common;
 

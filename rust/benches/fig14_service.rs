@@ -1,0 +1,159 @@
+//! Multi-tenant serving bench (`coordinator::service`): golden-backend
+//! latency under interleaved clients, cross-tenant plan-cache
+//! amortization, and — with the `pjrt` feature, stub-backed — the
+//! cross-client tile coalescer's fill-rate advantage over each client
+//! dispatching its own uncoalesced waves. The coalesced fill row landing
+//! strictly above the uncoalesced aggregate/per-client rows is the
+//! padding-amortization claim in machine-checkable form.
+//!
+//! Emitted as `target/bench-reports/fig14_service.json`; the
+//! `bench-record` CI lane merges it with the other reports into
+//! `BENCH_9.json`.
+
+mod common;
+
+use flicker::camera::Camera;
+use flicker::coordinator::{Golden, RenderRequest, RenderService, SceneId, ServiceConfig};
+use flicker::render::metrics::latency_summary;
+use flicker::render::raster::RenderOptions;
+use flicker::util::bench::{black_box, Bencher};
+
+/// Ragged interleaved request trace: client `c` renders `orbit.len() - c`
+/// views phase-shifted by `c`, submitted round-robin (view 0 of every
+/// client, then view 1, …). Assumes `clients < orbit.len()`.
+fn requests(
+    clients: usize,
+    id: SceneId,
+    orbit: &[Camera],
+    opts: RenderOptions,
+) -> Vec<RenderRequest> {
+    let mut reqs = Vec::new();
+    for v in 0..orbit.len() {
+        for c in 0..clients {
+            if v < orbit.len() - c {
+                reqs.push(RenderRequest {
+                    client: c,
+                    view: v,
+                    scene: id,
+                    camera: orbit[(v + c) % orbit.len()],
+                    options: opts,
+                });
+            }
+        }
+    }
+    reqs
+}
+
+fn golden_rows(b: &mut Bencher, res: u32) {
+    let scene = common::bench_scene("garden");
+    let orbit = common::bench_orbit(res, 8);
+    let opts = RenderOptions::default();
+    for clients in [1usize, 2, 4] {
+        let svc = RenderService::new(ServiceConfig {
+            workers: 0,
+            max_queue: 1024,
+            ..Default::default()
+        });
+        let id = svc.register_scene(scene.clone());
+        let reqs = requests(clients, id, &orbit, opts);
+        for &r in &reqs {
+            svc.submit(r).unwrap();
+        }
+        let frames = svc.drain(&Golden).unwrap();
+        let lat: Vec<f64> = frames.iter().map(|f| f.metrics.wall_ms).collect();
+        let s = latency_summary(&lat);
+        b.record(&format!("clients{clients}/frames"), frames.len() as f64);
+        b.record(&format!("clients{clients}/p50_ms"), s.p50);
+        b.record(&format!("clients{clients}/p99_ms"), s.p99);
+        let st = svc.stats();
+        b.record(
+            &format!("clients{clients}/plans_materialized"),
+            (st.plan_builds + st.plan_delta_builds) as f64,
+        );
+        b.record(&format!("clients{clients}/plan_hits"), st.plan_hits as f64);
+        // Warm-cache serving throughput: every pose is already cached, so
+        // this times admission + queue + render, not plan building.
+        b.bench(&format!("clients{clients}/drain_warm"), || {
+            for &r in &reqs {
+                svc.submit(r).unwrap();
+            }
+            black_box(svc.drain(&Golden).unwrap());
+        });
+    }
+}
+
+/// Stub-backed coalescer fill rates: three ragged clients, batch-8 waves.
+#[cfg(feature = "pjrt")]
+fn pjrt_rows(b: &mut Bencher, res: u32) {
+    use flicker::render::image::Image;
+    use flicker::render::plan::FramePlan;
+    use flicker::runtime::executor::{TileExecutor, TileJob};
+    use flicker::runtime::{write_stub_artifacts, Runtime};
+
+    let dir = std::env::temp_dir().join("flicker_fig14_stub");
+    write_stub_artifacts(&dir, 48, 16, 16, 8).unwrap();
+    let rt = match Runtime::load(&dir) {
+        Ok(rt) => rt,
+        Err(e) => {
+            eprintln!("fig14_service: stub runtime unavailable ({e}) - skipping pjrt rows");
+            return;
+        }
+    };
+    let scene = common::bench_scene("garden");
+    let orbit = common::bench_orbit(res, 8);
+    let opts = RenderOptions::default();
+    let (clients, batch) = (3usize, 8usize);
+
+    // Uncoalesced baseline: each client's frames dispatch their own waves,
+    // so every client pays its own ragged-tail padding.
+    let mut agg = (0usize, 0usize);
+    let mut best = 0.0f64;
+    for c in 0..clients {
+        let mut ex = TileExecutor::new(&rt).with_batch(batch);
+        for v in 0..orbit.len() - c {
+            let cam = orbit[(v + c) % orbit.len()];
+            let plan = FramePlan::build(&scene, &cam, &opts);
+            let jobs = TileJob::for_grid(&plan.grid, &plan.lists);
+            let mut img = Image::new(res, res);
+            ex.render_tiles(&jobs, &plan.splats, &mut img, opts.background).unwrap();
+            black_box(&img);
+        }
+        b.record(&format!("pjrt/fill_rate_client{c}"), ex.stats.fill_rate());
+        best = best.max(ex.stats.fill_rate());
+        agg.0 += ex.stats.splats_submitted;
+        agg.1 += ex.stats.rows_submitted;
+    }
+
+    // Coalesced: the same trace through the service daemon, all clients'
+    // tiles merged into shared waves.
+    let svc = RenderService::new(ServiceConfig {
+        workers: 0,
+        batch,
+        max_queue: 1024,
+        ..Default::default()
+    });
+    let id = svc.register_scene(scene.clone());
+    for r in requests(clients, id, &orbit, opts) {
+        svc.submit(r).unwrap();
+    }
+    let (frames, ex) = svc.drain_coalesced(&rt).unwrap();
+    black_box(frames);
+    b.record("pjrt/fill_rate_coalesced", ex.fill_rate());
+    let aggregate = if agg.1 > 0 { agg.0 as f64 / agg.1 as f64 } else { 0.0 };
+    b.record("pjrt/fill_rate_uncoalesced_aggregate", aggregate);
+    b.record("pjrt/fill_rate_per_client_best", best);
+    b.record("pjrt/rows_saved", agg.1.saturating_sub(ex.rows_submitted) as f64);
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn pjrt_rows(_b: &mut Bencher, _res: u32) {
+    eprintln!("fig14_service: pjrt feature off - skipping coalescer fill rows");
+}
+
+fn main() {
+    let res = common::bench_resolution();
+    let mut b = Bencher::new("fig14_service");
+    golden_rows(&mut b, res);
+    pjrt_rows(&mut b, res);
+    b.finish("multi-tenant service: latency, plan sharing, coalesced fill");
+}

@@ -34,6 +34,29 @@ impl Intrinsics {
     }
 }
 
+/// Quantized camera pose: a hashable cell identifier for plan caches and
+/// neighbor lookup.
+///
+/// Two cameras share a `PoseKey` exactly when every pose component rounds to
+/// the same lattice cell at the chosen quantum *and* their intrinsics / clip
+/// planes are bit-identical (plans are never shared across different image
+/// geometry, so those components are not quantized). Collisions between
+/// *distinct* poses inside one cell are by design — a cache that keys on
+/// `PoseKey` must verify the exact pose on a key hit and treat a mismatch as
+/// a near-miss (a delta-advance candidate), never as a servable entry.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct PoseKey {
+    /// Rounded world-space position cell: `round(position / quantum)`.
+    pub cell: [i64; 3],
+    /// Rounded world→camera rotation entries: `round(r_wc / quantum)`.
+    pub rot: [i64; 9],
+    /// Intrinsics, bit-exact: `fx`/`fy`/`cx`/`cy` as `f32` bit patterns,
+    /// then `width` and `height`.
+    pub intr: [u32; 6],
+    /// Near/far clip distances as `f32` bit patterns.
+    pub clip: [u32; 2],
+}
+
 /// Camera pose: world→camera rotation and camera position in world space.
 #[derive(Clone, Copy, Debug)]
 pub struct Camera {
@@ -90,6 +113,51 @@ impl Camera {
     #[inline]
     pub fn view_dir(&self, p: Vec3) -> Vec3 {
         (p - self.position).normalized()
+    }
+
+    /// Quantize this pose onto a lattice with cell size `quantum`.
+    ///
+    /// `quantum` is in world units for the position and dimensionless for
+    /// the rotation entries (which live in `[-1, 1]`); rounding (not
+    /// flooring) keeps the key stable under tiny float jitter around zero.
+    /// The cell distance between two keys is bounded by the pose distance:
+    /// `|cell_a - cell_b| <= |Δposition| / quantum + 1` per axis, so keys
+    /// never jump more than the camera moved. See [`PoseKey`] for the
+    /// collision contract.
+    pub fn pose_key(&self, quantum: f32) -> PoseKey {
+        let q = quantum.max(1e-9);
+        let qi = |x: f32| (x / q).round() as i64;
+        let mut rot = [0i64; 9];
+        for (k, slot) in rot.iter_mut().enumerate() {
+            *slot = qi(self.r_wc.0[k]);
+        }
+        PoseKey {
+            cell: [qi(self.position.x), qi(self.position.y), qi(self.position.z)],
+            rot,
+            intr: [
+                self.intr.fx.to_bits(),
+                self.intr.fy.to_bits(),
+                self.intr.cx.to_bits(),
+                self.intr.cy.to_bits(),
+                self.intr.width,
+                self.intr.height,
+            ],
+            clip: [self.near.to_bits(), self.far.to_bits()],
+        }
+    }
+
+    /// Bitwise pose equality: every float component of the two cameras has
+    /// the identical bit pattern. This is the exact-match verification a
+    /// [`PoseKey`]-keyed cache runs on a key hit.
+    pub fn same_pose(&self, other: &Camera) -> bool {
+        let fb = |a: f32, b: f32| a.to_bits() == b.to_bits();
+        (0..9).all(|k| fb(self.r_wc.0[k], other.r_wc.0[k]))
+            && fb(self.position.x, other.position.x)
+            && fb(self.position.y, other.position.y)
+            && fb(self.position.z, other.position.z)
+            && fb(self.near, other.near)
+            && fb(self.far, other.far)
+            && self.intr == other.intr
     }
 
     /// Conservative sphere-vs-frustum test (used for frustum culling,
@@ -209,5 +277,82 @@ mod tests {
         let c = cam();
         let d = c.view_dir(v3(3.0, 4.0, 0.0));
         assert!((d.norm() - 1.0).abs() < 1e-5);
+    }
+
+    fn orbit24() -> Vec<Camera> {
+        let intr = Intrinsics::from_fov(320, 240, 1.2);
+        orbit_path(intr, v3(0.0, 0.0, 0.0), 12.0, 2.5, 24)
+    }
+
+    #[test]
+    fn pose_key_is_stable_for_the_same_camera() {
+        let c = cam();
+        for q in [1e-4, 1e-3, 1e-1, 1.0, 1e4] {
+            assert_eq!(c.pose_key(q), c.pose_key(q));
+        }
+        assert!(c.same_pose(&c));
+    }
+
+    #[test]
+    fn pose_key_separates_orbit_views_at_the_default_quantum() {
+        // At the plan-cache default quantum (1e-3 world units) every view of
+        // the standard 24-step orbit lands in its own cell: orbit steps move
+        // the camera by ~3 world units and the rotation rows by ~0.25, both
+        // thousands of quanta.
+        let path = orbit24();
+        let keys: Vec<PoseKey> = path.iter().map(|c| c.pose_key(1e-3)).collect();
+        for i in 0..keys.len() {
+            for j in (i + 1)..keys.len() {
+                assert_ne!(keys[i], keys[j], "orbit views {i} and {j} collided");
+            }
+        }
+    }
+
+    #[test]
+    fn pose_key_cell_distance_is_monotone_in_orbit_step_size() {
+        // Chord length on the orbit circle grows monotonically up to the
+        // half-orbit, and at q = 1e-3 each doubling of the step size moves
+        // the camera by thousands of cells — far beyond the ±1 rounding
+        // noise — so the L1 cell distance from view 0 must strictly grow
+        // through steps 1, 2, 4, 8.
+        let path = orbit24();
+        let base = path[0].pose_key(1e-3);
+        let l1 = |k: &PoseKey| -> i64 {
+            (0..3).map(|a| (k.cell[a] - base.cell[a]).abs()).sum()
+        };
+        let mut prev = 0i64;
+        for step in [1usize, 2, 4, 8] {
+            let d = l1(&path[step].pose_key(1e-3));
+            assert!(d > prev, "step {step}: cell distance {d} <= {prev}");
+            prev = d;
+        }
+    }
+
+    #[test]
+    fn pose_key_collides_under_quantum_and_splits_above_it() {
+        // A sub-quantum nudge keeps the key (collision: the cache must then
+        // verify the exact pose — same_pose distinguishes the two), while a
+        // many-quanta nudge splits it.
+        let intr = Intrinsics::from_fov(640, 480, 1.2);
+        let a = Camera::look_at(intr, v3(0.2, 2.5, -12.0), v3(0.0, 0.0, 0.0), v3(0.0, 1.0, 0.0));
+        let mut b = a;
+        b.position.x += 1e-9; // far below q=1.0, and 0.2 is far from a cell edge
+        assert_eq!(a.pose_key(1.0), b.pose_key(1.0));
+        assert!(!a.same_pose(&b), "distinct poses must fail exact verification");
+        let mut c = a;
+        c.position.x += 10.0; // ten cells at q=1.0
+        assert_ne!(a.pose_key(1.0), c.pose_key(1.0));
+    }
+
+    #[test]
+    fn pose_key_pins_image_geometry_bit_exactly() {
+        let a = cam();
+        let mut b = a;
+        b.intr.width = 321;
+        assert_ne!(a.pose_key(1e-3), b.pose_key(1e-3));
+        let mut c = a;
+        c.near = 0.06;
+        // Clip planes are not quantized: any change forks the key.
+        assert_ne!(a.pose_key(1e4), c.pose_key(1e4));
     }
 }

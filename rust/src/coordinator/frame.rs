@@ -6,32 +6,17 @@
 //! [`super::session::Session`] — it owns the prepared scene, the camera
 //! orbit, and a per-view plan cache, and every backend renders from the
 //! same cached intermediates. This module keeps the backend trait, the
-//! per-frame types, [`render_planned`] (the caller-held-plan primitive the
-//! session is built on), and two deprecated one-shot shims
-//! ([`render_frame`], [`render_orbit`]) for callers mid-migration.
+//! per-frame types, and [`render_planned`] (the caller-held-plan primitive
+//! the session and the multi-tenant [`super::service`] are built on).
 //! Backends must be `Sync` so frame streams can fan across the worker
 //! pool.
 
-use crate::camera::Camera;
 use crate::cat::CatConfig;
-use crate::config::ExperimentConfig;
 use crate::render::image::Image;
 use crate::render::plan::FramePlan;
-use crate::render::raster::{RenderOptions, RenderOutput, RenderStats, VanillaMasks};
-use crate::scene::gaussian::Scene;
+use crate::render::raster::{RenderOutput, RenderStats, VanillaMasks};
 use crate::util::error::Result;
 use std::time::Instant;
-
-/// A frame to render (the one-shot request shape; sessions derive frames
-/// from their config instead).
-pub struct FrameRequest<'a> {
-    /// The scene to render.
-    pub scene: &'a Scene,
-    /// The viewpoint.
-    pub camera: &'a Camera,
-    /// Rasterization settings (tile size, strategy, workers, …).
-    pub options: RenderOptions,
-}
 
 /// What came back.
 #[derive(Clone)]
@@ -48,6 +33,10 @@ pub struct FrameMetrics {
     /// renders outside a session). `FrameStream` consumers use this to
     /// re-sort completion-order results into orbit order.
     pub view: usize,
+    /// Owning client in a multi-tenant drain (0 outside the render
+    /// service). Together with `view` this re-joins coalesced
+    /// completion-order output into per-client frame sequences.
+    pub client: usize,
 }
 
 /// An execution engine for a prepared frame's tiles.
@@ -182,58 +171,21 @@ pub fn render_planned(plan: &FramePlan, backend: &dyn RenderBackend) -> Result<F
         wall_ms: t0.elapsed().as_secs_f64() * 1e3,
         backend: backend.name(),
         view: 0,
+        client: 0,
     })
-}
-
-/// Render one frame through the chosen backend: build the [`FramePlan`]
-/// and render it once. The wall-clock covers build + render — the
-/// one-shot cost a session amortizes away through its plan cache.
-#[deprecated(
-    note = "build a coordinator::Session (Session::builder) and call \
-            session.frame(i, &backend) — the session caches the FramePlan \
-            across backends and repeat renders"
-)]
-pub fn render_frame(req: &FrameRequest, backend: &dyn RenderBackend) -> Result<FrameMetrics> {
-    let t0 = Instant::now();
-    let plan = FramePlan::build(req.scene, req.camera, &req.options);
-    let out = backend.render_plan(&plan)?;
-    Ok(FrameMetrics {
-        image: out.image,
-        stats: out.stats,
-        wall_ms: t0.elapsed().as_secs_f64() * 1e3,
-        backend: backend.name(),
-        view: 0,
-    })
-}
-
-/// Render an experiment's whole camera orbit in orbit order.
-///
-/// Thin shim over [`super::session::Session`]: builds a session from the
-/// config and drains `session.stream(backend)` through the
-/// [`super::session::FrameStream::ordered`] adapter (bit-identical to
-/// sequential rendering for any worker count). Unlike the pre-`Session`
-/// version, the configured `RenderOptions` (strategy, tile size) and the
-/// `prune` flag are honored instead of silently dropped.
-#[deprecated(
-    note = "build a coordinator::Session (Session::builder) and use \
-            session.stream(&backend) / .ordered()"
-)]
-pub fn render_orbit(
-    cfg: &ExperimentConfig,
-    backend: &dyn RenderBackend,
-) -> Result<Vec<FrameMetrics>> {
-    let session = super::session::Session::builder(cfg.clone()).build()?;
-    session.stream(backend).ordered()
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::camera::Intrinsics;
+    use crate::camera::{Camera, Intrinsics};
     use crate::cat::{LeaderMode, Precision};
+    use crate::config::ExperimentConfig;
     use crate::coordinator::session::Session;
     use crate::numeric::linalg::v3;
     use crate::render::metrics::psnr;
+    use crate::render::raster::RenderOptions;
+    use crate::scene::gaussian::Scene;
     use crate::scene::synthetic::{generate_scaled, preset};
 
     fn setup() -> (Scene, Camera) {
@@ -297,44 +249,6 @@ mod tests {
         let m = s.frame(0, &Golden).unwrap();
         assert_eq!(m.image.data, a.image.data);
         assert_eq!(m.view, 0);
-    }
-
-    #[test]
-    #[allow(deprecated)]
-    fn deprecated_shims_match_session() {
-        // The migration contract: the legacy one-shot free functions are
-        // thin wrappers whose output is bit-identical to the Session path.
-        let (scene, cam) = setup();
-        let req = FrameRequest {
-            scene: &scene,
-            camera: &cam,
-            options: RenderOptions::default(),
-        };
-        let legacy = render_frame(&req, &Golden).unwrap();
-        let s = Session::builder(ExperimentConfig::default())
-            .scene(scene)
-            .cameras(vec![cam])
-            .build()
-            .unwrap();
-        assert_eq!(legacy.image.data, s.frame(0, &Golden).unwrap().image.data);
-
-        let cfg = ExperimentConfig {
-            scene: "truck".into(),
-            scene_scale: 0.01,
-            resolution: 64,
-            frames: 2,
-            ..Default::default()
-        };
-        let orbit = render_orbit(&cfg, &Golden).unwrap();
-        let session = Session::builder(cfg).build().unwrap();
-        let frames = session.stream(&Golden).ordered().unwrap();
-        assert_eq!(orbit.len(), frames.len());
-        for (a, b) in orbit.iter().zip(&frames) {
-            assert_eq!(a.image.data, b.image.data);
-            assert_eq!(a.view, b.view);
-            assert_eq!(b.backend, "golden");
-            assert!(b.wall_ms > 0.0);
-        }
     }
 
     #[cfg(feature = "pjrt")]

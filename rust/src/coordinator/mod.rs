@@ -25,18 +25,22 @@
 //! depth-sort (the plan, built once per view) → (CAT-mask) → blend (per
 //! render), with tiles fanned across the worker pool
 //! (`RenderOptions::workers`) and streamed orbits fanned across frames
-//! (the session's budget split). The legacy free functions
-//! `render_frame`/`render_orbit` survive as deprecated shims over the
-//! session.
+//! (the session's budget split).
+//!
+//! Above the session sits the multi-tenant [`service::RenderService`]: a
+//! shared scene store, a cross-session plan cache keyed by quantized
+//! camera pose, a bounded request queue, and (under `--features pjrt`) the
+//! cross-client tile coalescer that merges many clients' frames into
+//! shared precision-pure waves.
 
 pub mod frame;
 pub mod report;
+pub mod service;
 pub mod session;
 
-#[allow(deprecated)]
-pub use frame::{
-    render_frame, render_orbit, render_planned, FrameMetrics, FrameRequest, Golden, GoldenCat,
-    RenderBackend,
+pub use frame::{render_planned, FrameMetrics, Golden, GoldenCat, RenderBackend};
+pub use service::{
+    RenderRequest, RenderService, SceneId, ServiceConfig, ServiceFrame, ServiceStats,
 };
 pub use session::{FrameStream, PlanCacheStats, Session, SessionBuilder};
 

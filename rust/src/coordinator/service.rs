@@ -1,0 +1,788 @@
+//! Multi-tenant render service: many clients, one accelerator.
+//!
+//! [`RenderService`] promotes the one-experiment [`super::session::Session`]
+//! into a serving daemon:
+//!
+//! * **Scene store** — scenes register once ([`RenderService::register_scene`])
+//!   and are shared immutably (`Arc`) across every client; refcounts
+//!   ([`RenderService::retain_scene`] / [`RenderService::release_scene`])
+//!   decide eviction, which also purges the scene's cached plans.
+//! * **Cross-session plan cache** — `FramePlan`s are keyed by
+//!   `(scene, resolved options, quantized camera pose)` using
+//!   [`Camera::pose_key`], replacing the per-session `Vec<OnceLock<_>>`:
+//!   two clients orbiting the same scene share every plan. A key hit is
+//!   verified against the exact pose ([`Camera::same_pose`] — quantization
+//!   collisions are near-misses, never servable entries); on a miss the
+//!   cache delta-advances from the nearest cached pose (same-cell
+//!   neighbors first, then a `pose_angle` scan within the request's
+//!   `plan_delta.max_angle`) via `FramePlan::advance`, which is
+//!   bit-identical to a cold build.
+//! * **Request queue** — [`RenderService::submit`] applies admission
+//!   control (bounded queue, rejects counted) ahead of
+//!   [`RenderService::drain`], which renders windows of requests across
+//!   the one shared [`WorkerPool`] and yields frames in completion order,
+//!   `FrameStream`-style.
+//! * **Cross-client tile coalescer** (`--features pjrt`) —
+//!   [`RenderService::drain_coalesced`] merges every in-flight frame's
+//!   tile jobs into shared precision-pure waves through
+//!   `TileExecutor::render_tiles_coalesced`, so batch padding amortizes
+//!   across tenants and the aggregate `fill_rate` stays near 1.0 even
+//!   when each individual frame is ragged.
+//!
+//! Determinism contract: every frame a drain returns is bit-identical to
+//! the same (scene, camera, options) rendered through an isolated
+//! `Session` — for any pool size, window, executor batch, interleaving of
+//! clients, and cache state (hit, delta-advance, or cold build). Frames
+//! re-join their clients via [`FrameMetrics::client`] + `view`; per-client
+//! totals re-separate with [`stats_by_client`] (`RenderStats::absorb`).
+
+use crate::camera::{Camera, PoseKey};
+use crate::coordinator::frame::{render_planned, FrameMetrics, RenderBackend};
+use crate::err;
+use crate::render::delta::pose_angle;
+use crate::render::plan::FramePlan;
+use crate::render::precision::{class_index, PrecisionMode};
+use crate::render::raster::{RenderOptions, RenderStats};
+use crate::render::tile::Strategy;
+use crate::scene::gaussian::Scene;
+use crate::util::error::Result;
+use crate::util::pool::WorkerPool;
+use std::collections::{BTreeMap, HashMap, VecDeque};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex, MutexGuard, PoisonError};
+
+fn lock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(PoisonError::into_inner)
+}
+
+/// Handle to a scene resident in the service's shared store.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct SceneId(u64);
+
+/// Service tuning knobs.
+#[derive(Clone, Copy, Debug)]
+pub struct ServiceConfig {
+    /// Shared worker-pool size (0 = auto). One pool serves every client —
+    /// steady-state serving spawns no threads per request.
+    pub workers: usize,
+    /// Admission bound: [`RenderService::submit`] rejects once this many
+    /// requests are queued.
+    pub max_queue: usize,
+    /// Frames in flight per [`RenderService::drain`] window (0 = the pool
+    /// size). Purely a scheduling knob — output is bit-identical for
+    /// every setting.
+    pub window: usize,
+    /// Pose-quantization cell size for the plan-cache key (world units
+    /// for position, dimensionless for rotation entries). See
+    /// [`Camera::pose_key`].
+    pub pose_quantum: f32,
+    /// Cached plans per `(scene, options)` bucket; the oldest entry is
+    /// evicted first.
+    pub max_plans: usize,
+    /// Tiles per coalesced PJRT dispatch (0 = the artifact's full
+    /// `n_batch`). Only [`RenderService::drain_coalesced`] reads it;
+    /// rendered pixels are identical for every setting.
+    pub batch: usize,
+}
+
+impl Default for ServiceConfig {
+    fn default() -> Self {
+        ServiceConfig {
+            workers: 0,
+            max_queue: 64,
+            window: 0,
+            pose_quantum: 1e-3,
+            max_plans: 64,
+            batch: 0,
+        }
+    }
+}
+
+/// One client frame request: which scene, from where, rendered how.
+#[derive(Clone, Copy, Debug)]
+pub struct RenderRequest {
+    /// Requesting client (tag only — the service does not authenticate).
+    pub client: usize,
+    /// The client's own frame sequence number, echoed into
+    /// [`FrameMetrics::view`] so completion-order output re-joins per
+    /// client.
+    pub view: usize,
+    /// Scene to render, previously registered in the store.
+    pub scene: SceneId,
+    /// The viewpoint.
+    pub camera: Camera,
+    /// Resolved render options. Options are part of the plan-cache key:
+    /// requests share a cached plan only when every field matches.
+    pub options: RenderOptions,
+}
+
+/// A completed service frame: the admission ticket plus the rendered
+/// metrics (tagged with the owning client and its view index).
+#[derive(Clone)]
+pub struct ServiceFrame {
+    /// Ticket returned by [`RenderService::submit`] for this request.
+    pub ticket: u64,
+    /// The rendered frame, `client`/`view`-tagged.
+    pub metrics: FrameMetrics,
+}
+
+/// Aggregate service counters (see [`RenderService::stats`]).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ServiceStats {
+    /// Scenes resident in the store.
+    pub scenes: usize,
+    /// Plans currently cached across all buckets.
+    pub cached_plans: usize,
+    /// Plan lookups served (hits + builds + delta builds).
+    pub plan_requests: usize,
+    /// Cold `FramePlan::build` calls.
+    pub plan_builds: usize,
+    /// Plans advanced from a cached neighbor pose (`FramePlan::advance`).
+    pub plan_delta_builds: usize,
+    /// Exact-pose cache hits.
+    pub plan_hits: usize,
+    /// Requests admitted by [`RenderService::submit`].
+    pub submitted: u64,
+    /// Requests rejected by admission control (queue full).
+    pub rejected: u64,
+    /// Frames delivered by drains.
+    pub completed: u64,
+    /// Requests currently queued.
+    pub pending: usize,
+}
+
+struct SceneEntry {
+    scene: Arc<Scene>,
+    refs: usize,
+}
+
+struct PlanEntry {
+    pose: PoseKey,
+    cam: Camera,
+    plan: Arc<FramePlan>,
+}
+
+struct Queued {
+    ticket: u64,
+    req: RenderRequest,
+}
+
+/// Bucket key: scene id + the injectively-encoded resolved options (see
+/// [`options_words`]) — comparing keys compares options exactly, so two
+/// requests share a bucket iff every option field matches bit for bit.
+type BucketKey = (u64, Vec<u64>);
+
+/// The multi-tenant serving daemon. See the module docs for the
+/// architecture; `&self` methods are safe to call from multiple threads.
+pub struct RenderService {
+    cfg: ServiceConfig,
+    pool: WorkerPool,
+    scenes: Mutex<HashMap<u64, SceneEntry>>,
+    next_scene: AtomicU64,
+    plans: Mutex<HashMap<BucketKey, Vec<PlanEntry>>>,
+    queue: Mutex<VecDeque<Queued>>,
+    next_ticket: AtomicU64,
+    submitted: AtomicU64,
+    rejected: AtomicU64,
+    completed: AtomicU64,
+    plan_requests: AtomicUsize,
+    plan_builds: AtomicUsize,
+    plan_delta_builds: AtomicUsize,
+    plan_hits: AtomicUsize,
+}
+
+impl RenderService {
+    /// Start a service (and its shared worker pool) with the given config.
+    pub fn new(cfg: ServiceConfig) -> RenderService {
+        RenderService {
+            pool: WorkerPool::new(cfg.workers),
+            cfg,
+            scenes: Mutex::new(HashMap::new()),
+            next_scene: AtomicU64::new(0),
+            plans: Mutex::new(HashMap::new()),
+            queue: Mutex::new(VecDeque::new()),
+            next_ticket: AtomicU64::new(0),
+            submitted: AtomicU64::new(0),
+            rejected: AtomicU64::new(0),
+            completed: AtomicU64::new(0),
+            plan_requests: AtomicUsize::new(0),
+            plan_builds: AtomicUsize::new(0),
+            plan_delta_builds: AtomicUsize::new(0),
+            plan_hits: AtomicUsize::new(0),
+        }
+    }
+
+    /// The service configuration.
+    pub fn config(&self) -> &ServiceConfig {
+        &self.cfg
+    }
+
+    /// Register a scene in the shared store (refcount 1) and get its
+    /// handle. The scene is immutable from here on — every client renders
+    /// from the same `Arc`.
+    pub fn register_scene(&self, scene: Scene) -> SceneId {
+        let id = self.next_scene.fetch_add(1, Ordering::Relaxed) + 1;
+        lock(&self.scenes).insert(
+            id,
+            SceneEntry {
+                scene: Arc::new(scene),
+                refs: 1,
+            },
+        );
+        SceneId(id)
+    }
+
+    /// Shared handle to a stored scene (`None` once evicted).
+    pub fn scene(&self, id: SceneId) -> Option<Arc<Scene>> {
+        lock(&self.scenes).get(&id.0).map(|e| e.scene.clone())
+    }
+
+    /// Add a reference to a stored scene (a second client attaching).
+    /// Returns `false` if the scene is unknown.
+    pub fn retain_scene(&self, id: SceneId) -> bool {
+        match lock(&self.scenes).get_mut(&id.0) {
+            Some(e) => {
+                e.refs += 1;
+                true
+            }
+            None => false,
+        }
+    }
+
+    /// Drop a reference to a stored scene. When the last reference goes,
+    /// the scene is evicted and every cached plan for it is purged.
+    /// Returns `true` if this release evicted the scene.
+    pub fn release_scene(&self, id: SceneId) -> bool {
+        let evicted = {
+            let mut scenes = lock(&self.scenes);
+            match scenes.get_mut(&id.0) {
+                Some(e) if e.refs > 1 => {
+                    e.refs -= 1;
+                    false
+                }
+                Some(_) => {
+                    scenes.remove(&id.0);
+                    true
+                }
+                None => false,
+            }
+        };
+        if evicted {
+            lock(&self.plans).retain(|(sid, _), _| *sid != id.0);
+        }
+        evicted
+    }
+
+    /// Submit a request. Fails when the scene is unknown or the queue is
+    /// at `max_queue` (the rejection is counted — backpressure is the
+    /// caller's signal to slow down, not a crash). Returns the admission
+    /// ticket, unique per accepted request.
+    pub fn submit(&self, req: RenderRequest) -> Result<u64> {
+        if self.scene(req.scene).is_none() {
+            return Err(err!(
+                "service: request for unknown scene (client {}, view {})",
+                req.client,
+                req.view
+            ));
+        }
+        let mut queue = lock(&self.queue);
+        if queue.len() >= self.cfg.max_queue {
+            self.rejected.fetch_add(1, Ordering::Relaxed);
+            return Err(err!(
+                "service: queue full ({} pending >= max_queue {})",
+                queue.len(),
+                self.cfg.max_queue
+            ));
+        }
+        let ticket = self.next_ticket.fetch_add(1, Ordering::Relaxed) + 1;
+        queue.push_back(Queued { ticket, req });
+        self.submitted.fetch_add(1, Ordering::Relaxed);
+        Ok(ticket)
+    }
+
+    /// Requests currently queued.
+    pub fn pending(&self) -> usize {
+        lock(&self.queue).len()
+    }
+
+    /// Aggregate counters.
+    pub fn stats(&self) -> ServiceStats {
+        ServiceStats {
+            scenes: lock(&self.scenes).len(),
+            cached_plans: lock(&self.plans).values().map(Vec::len).sum(),
+            plan_requests: self.plan_requests.load(Ordering::Relaxed),
+            plan_builds: self.plan_builds.load(Ordering::Relaxed),
+            plan_delta_builds: self.plan_delta_builds.load(Ordering::Relaxed),
+            plan_hits: self.plan_hits.load(Ordering::Relaxed),
+            submitted: self.submitted.load(Ordering::Relaxed),
+            rejected: self.rejected.load(Ordering::Relaxed),
+            completed: self.completed.load(Ordering::Relaxed),
+            pending: self.pending(),
+        }
+    }
+
+    /// Drain the queue through `backend`: windows of up to
+    /// `ServiceConfig::window` requests fan across the shared pool, and
+    /// frames are delivered in completion order within each window
+    /// (`FrameStream`-style; sort the result by
+    /// `(metrics.client, metrics.view)` or by ticket for a stable order).
+    /// The first failed request aborts the drain.
+    pub fn drain(&self, backend: &dyn RenderBackend) -> Result<Vec<ServiceFrame>> {
+        let window = if self.cfg.window == 0 {
+            self.pool.workers()
+        } else {
+            self.cfg.window
+        }
+        .max(1);
+        let mut out = Vec::new();
+        loop {
+            let batch: Vec<Queued> = {
+                let mut queue = lock(&self.queue);
+                let take = window.min(queue.len());
+                queue.drain(..take).collect()
+            };
+            if batch.is_empty() {
+                break;
+            }
+            let seq = AtomicUsize::new(0);
+            let mut results: Vec<(usize, Result<ServiceFrame>)> =
+                self.pool.map_indexed(batch.len(), |k| {
+                    let r = self.render_one(&batch[k], backend);
+                    (seq.fetch_add(1, Ordering::Relaxed), r)
+                });
+            results.sort_by_key(|(s, _)| *s);
+            for (_, r) in results {
+                out.push(r?);
+            }
+            self.completed.fetch_add(batch.len() as u64, Ordering::Relaxed);
+        }
+        Ok(out)
+    }
+
+    fn render_one(&self, q: &Queued, backend: &dyn RenderBackend) -> Result<ServiceFrame> {
+        let plan = self.plan_for(&q.req)?;
+        let mut metrics = render_planned(&plan, backend)?;
+        metrics.view = q.req.view;
+        metrics.client = q.req.client;
+        Ok(ServiceFrame {
+            ticket: q.ticket,
+            metrics,
+        })
+    }
+
+    /// Resolve a request's `FramePlan` through the cross-session cache:
+    /// exact-pose hit → shared `Arc`; near miss → delta-advance from the
+    /// nearest cached pose; otherwise a cold build. Every path yields
+    /// bit-identical plans, so which one fires is a pure performance
+    /// question (visible in [`ServiceStats`]).
+    fn plan_for(&self, req: &RenderRequest) -> Result<Arc<FramePlan>> {
+        let scene = self
+            .scene(req.scene)
+            .ok_or_else(|| err!("service: scene evicted mid-request (client {})", req.client))?;
+        self.plan_requests.fetch_add(1, Ordering::Relaxed);
+        let key: BucketKey = (req.scene.0, options_words(&req.options));
+        let pose = req.camera.pose_key(self.cfg.pose_quantum);
+
+        let neighbor: Option<Arc<FramePlan>> = {
+            let map = lock(&self.plans);
+            if let Some(bucket) = map.get(&key) {
+                if let Some(e) = Self::exact_entry(bucket, &pose, &req.camera) {
+                    self.plan_hits.fetch_add(1, Ordering::Relaxed);
+                    return Ok(e.plan.clone());
+                }
+                if req.options.plan_delta.enabled {
+                    // Same-cell entries are sub-quantum neighbors — the
+                    // cheapest delta bases — so the pose-key prefilter
+                    // goes first; otherwise scan for the nearest pose
+                    // within the delta radius.
+                    let radius = req.options.plan_delta.max_angle;
+                    let nearest = |es: &mut dyn Iterator<Item = &PlanEntry>| {
+                        es.map(|e| (pose_angle(&e.cam, &req.camera), e))
+                            .filter(|(a, _)| a.is_finite() && *a <= radius)
+                            .min_by(|(a, _), (b, _)| a.partial_cmp(b).expect("finite angles"))
+                            .map(|(_, e)| e.plan.clone())
+                    };
+                    nearest(&mut bucket.iter().filter(|e| e.pose == pose))
+                        .or_else(|| nearest(&mut bucket.iter()))
+                } else {
+                    None
+                }
+            } else {
+                None
+            }
+        };
+
+        // Build outside the cache lock: plan construction is the expensive
+        // path and must not serialize unrelated lookups.
+        let (plan, was_delta) = match &neighbor {
+            Some(base) => {
+                let outcome = base.advance_detailed(&scene, &req.camera, &req.options);
+                let was_delta = !outcome.stats.fell_back;
+                (Arc::new(outcome.plan), was_delta)
+            }
+            None => (
+                Arc::new(FramePlan::build(&scene, &req.camera, &req.options)),
+                false,
+            ),
+        };
+        if was_delta {
+            self.plan_delta_builds.fetch_add(1, Ordering::Relaxed);
+        } else {
+            self.plan_builds.fetch_add(1, Ordering::Relaxed);
+        }
+
+        let mut map = lock(&self.plans);
+        let bucket = map.entry(key).or_default();
+        if let Some(e) = Self::exact_entry(bucket, &pose, &req.camera) {
+            // Raced with another builder of the same pose; both plans are
+            // bit-identical, keep the resident one.
+            return Ok(e.plan.clone());
+        }
+        if bucket.len() >= self.cfg.max_plans.max(1) {
+            bucket.remove(0);
+        }
+        bucket.push(PlanEntry {
+            pose,
+            cam: req.camera,
+            plan: plan.clone(),
+        });
+        Ok(plan)
+    }
+
+    fn exact_entry<'b>(
+        bucket: &'b [PlanEntry],
+        pose: &PoseKey,
+        cam: &Camera,
+    ) -> Option<&'b PlanEntry> {
+        bucket
+            .iter()
+            .find(|e| e.pose == *pose && e.cam.same_pose(cam))
+    }
+
+    /// Drain **every** queued request through the cross-client tile
+    /// coalescer: all in-flight frames' tile jobs merge into shared
+    /// precision-pure waves (`TileExecutor::render_tiles_coalesced`), so
+    /// one client's padding slots carry another client's real chunks.
+    /// Returns the frames (ticket order) plus the aggregate `ExecStats`
+    /// of the shared waves — per-frame `RenderStats` stay separated
+    /// exactly as the per-client `Pjrt` backend reports them, and every
+    /// image is bit-identical to an isolated `Session` render. Frame
+    /// `wall_ms` is the whole coalesced drain (frames complete together
+    /// by construction).
+    #[cfg(feature = "pjrt")]
+    pub fn drain_coalesced(
+        &self,
+        rt: &crate::runtime::Runtime,
+    ) -> Result<(Vec<ServiceFrame>, crate::runtime::executor::ExecStats)> {
+        use crate::cat::Precision;
+        use crate::render::image::Image;
+        use crate::runtime::executor::{SourcedJob, TileExecutor, TileJob, TileSource};
+
+        let t0 = std::time::Instant::now();
+        let batch: Vec<Queued> = lock(&self.queue).drain(..).collect();
+        if batch.is_empty() {
+            return Ok((Vec::new(), Default::default()));
+        }
+        let plans: Vec<Arc<FramePlan>> = self
+            .pool
+            .map_indexed(batch.len(), |k| self.plan_for(&batch[k].req))
+            .into_iter()
+            .collect::<Result<Vec<_>>>()?;
+        let gated: Vec<Option<(Vec<Vec<u32>>, u64)>> =
+            plans.iter().map(|p| p.gated_lists()).collect();
+        let classes: Vec<Option<Vec<Precision>>> =
+            plans.iter().map(|p| p.tile_classes()).collect();
+        let mut sources: Vec<TileSource> = Vec::with_capacity(plans.len());
+        let mut per_jobs: Vec<Vec<TileJob>> = Vec::with_capacity(plans.len());
+        for (r, plan) in plans.iter().enumerate() {
+            let lists = gated[r].as_ref().map(|(l, _)| l).unwrap_or(&plan.lists);
+            per_jobs.push(match &classes[r] {
+                Some(c) => TileJob::for_grid_classed(&plan.grid, lists, c),
+                None => TileJob::for_grid(&plan.grid, lists),
+            });
+            sources.push(TileSource {
+                splats: &plan.splats,
+                background: plan.opts.background,
+            });
+        }
+        let jobs: Vec<SourcedJob> = per_jobs
+            .iter()
+            .enumerate()
+            .flat_map(|(r, tj)| tj.iter().map(move |&job| SourcedJob { source: r, job }))
+            .collect();
+        let mut images: Vec<Image> = plans
+            .iter()
+            .map(|p| Image::new(p.grid.width, p.grid.height))
+            .collect();
+        let mut ex = TileExecutor::new(rt).with_batch(self.cfg.batch);
+        ex.render_tiles_coalesced(&sources, &jobs, &mut images)?;
+        let wall_ms = t0.elapsed().as_secs_f64() * 1e3;
+
+        let mut out = Vec::with_capacity(batch.len());
+        for (r, q) in batch.iter().enumerate() {
+            let mut stats = plans[r].frame_stats();
+            match &gated[r] {
+                Some((_, rejected)) => {
+                    stats.gate_tile_tested = stats.tile_pairs as u64;
+                    stats.gate_tile_rejected = *rejected;
+                    stats.splats_submitted = stats.tile_pairs as u64 - *rejected;
+                }
+                None => stats.splats_submitted = stats.tile_pairs as u64,
+            }
+            out.push(ServiceFrame {
+                ticket: q.ticket,
+                metrics: FrameMetrics {
+                    image: std::mem::replace(&mut images[r], Image::new(0, 0)),
+                    stats,
+                    wall_ms,
+                    backend: "pjrt+coalesced",
+                    view: q.req.view,
+                    client: q.req.client,
+                },
+            });
+        }
+        self.completed.fetch_add(out.len() as u64, Ordering::Relaxed);
+        Ok((out, ex.stats))
+    }
+}
+
+/// Per-client totals from a drained frame set, summed via
+/// `RenderStats::absorb` — the re-separation half of the coalescing
+/// contract (waves mix clients; stats never do).
+pub fn stats_by_client(frames: &[ServiceFrame]) -> BTreeMap<usize, RenderStats> {
+    let mut out: BTreeMap<usize, RenderStats> = BTreeMap::new();
+    for f in frames {
+        out.entry(f.metrics.client)
+            .or_default()
+            .absorb(&f.metrics.stats);
+    }
+    out
+}
+
+/// Injective fixed-layout encoding of every [`RenderOptions`] field into
+/// `u64` words — the options half of the plan-cache key. Comparing two
+/// encodings compares the options exactly (floats by bit pattern), with no
+/// hash-collision risk. Scheduling-only knobs (`workers`, `batch`) are
+/// included too: a cached plan carries its options verbatim into the
+/// backends, so the cache never substitutes a plan whose embedded options
+/// differ in any way from the request's.
+pub fn options_words(o: &RenderOptions) -> Vec<u64> {
+    let mut w: Vec<u64> = Vec::with_capacity(16);
+    w.push(o.tile_size as u64);
+    w.push(match o.strategy {
+        Strategy::Aabb => 0,
+        Strategy::Obb => 1,
+    });
+    w.push(o.t_min.to_bits() as u64);
+    for c in o.background {
+        w.push(c.to_bits() as u64);
+    }
+    w.push(o.workers as u64);
+    w.push(o.batch as u64);
+    w.push(o.gate.enabled as u64);
+    w.push(o.gate.levels as u64);
+    w.push(o.gate.threshold.to_bits() as u64);
+    w.push(o.plan_delta.enabled as u64);
+    w.push(o.plan_delta.max_angle.to_bits() as u64);
+    match o.precision.mode {
+        PrecisionMode::Global(p) => {
+            w.push(1);
+            w.push(class_index(p) as u64);
+        }
+        PrecisionMode::Adaptive { thresholds, floor } => {
+            w.push(2);
+            w.push(thresholds.fp32_min.to_bits() as u64);
+            w.push(thresholds.fp16_min.to_bits() as u64);
+            w.push(class_index(floor) as u64);
+        }
+    }
+    w
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::camera::{orbit_path, Intrinsics};
+    use crate::coordinator::frame::Golden;
+    use crate::numeric::linalg::v3;
+    use crate::render::delta::DeltaConfig;
+    use crate::scene::synthetic::{generate_scaled, preset};
+
+    fn small_scene() -> Scene {
+        generate_scaled(&preset("truck"), 0.01)
+    }
+
+    fn cams(frames: usize) -> Vec<Camera> {
+        let intr = Intrinsics::from_fov(64, 64, 1.2);
+        orbit_path(intr, v3(0.0, 0.5, 0.0), 12.0, 2.5, frames)
+    }
+
+    fn requests(
+        client: usize,
+        scene: SceneId,
+        cams: &[Camera],
+        opts: RenderOptions,
+    ) -> Vec<RenderRequest> {
+        cams.iter()
+            .enumerate()
+            .map(|(view, &camera)| RenderRequest {
+                client,
+                view,
+                scene,
+                camera,
+                options: opts,
+            })
+            .collect()
+    }
+
+    #[test]
+    fn admission_control_bounds_the_queue() {
+        let svc = RenderService::new(ServiceConfig {
+            workers: 1,
+            max_queue: 2,
+            ..Default::default()
+        });
+        let id = svc.register_scene(small_scene());
+        let reqs = requests(0, id, &cams(3), RenderOptions::default());
+        assert!(svc.submit(reqs[0]).is_ok());
+        assert!(svc.submit(reqs[1]).is_ok());
+        let err = svc.submit(reqs[2]);
+        assert!(err.is_err(), "third submit must bounce off max_queue=2");
+        let st = svc.stats();
+        assert_eq!(st.submitted, 2);
+        assert_eq!(st.rejected, 1);
+        assert_eq!(st.pending, 2);
+        // Draining makes room again.
+        let frames = svc.drain(&Golden).unwrap();
+        assert_eq!(frames.len(), 2);
+        assert!(svc.submit(reqs[2]).is_ok());
+        assert_eq!(svc.stats().completed, 2);
+    }
+
+    #[test]
+    fn unknown_scene_is_rejected_at_submit() {
+        let svc = RenderService::new(ServiceConfig {
+            workers: 1,
+            ..Default::default()
+        });
+        let id = svc.register_scene(small_scene());
+        assert!(svc.release_scene(id), "sole reference: release evicts");
+        let req = requests(0, id, &cams(1), RenderOptions::default())[0];
+        assert!(svc.submit(req).is_err());
+        assert_eq!(svc.stats().scenes, 0);
+    }
+
+    #[test]
+    fn scene_refcounts_gate_eviction_and_purge_plans() {
+        let svc = RenderService::new(ServiceConfig {
+            workers: 1,
+            ..Default::default()
+        });
+        let id = svc.register_scene(small_scene());
+        assert!(svc.retain_scene(id), "second client attaches");
+        for req in requests(0, id, &cams(2), RenderOptions::default()) {
+            svc.submit(req).unwrap();
+        }
+        svc.drain(&Golden).unwrap();
+        assert_eq!(svc.stats().cached_plans, 2);
+        assert!(!svc.release_scene(id), "one ref left: no eviction");
+        assert_eq!(svc.stats().cached_plans, 2);
+        assert!(svc.release_scene(id), "last ref: evicted");
+        assert_eq!(svc.stats().cached_plans, 0, "eviction purges cached plans");
+        assert!(!svc.retain_scene(id), "evicted scenes cannot be retained");
+    }
+
+    #[test]
+    fn plan_cache_shares_across_clients_and_counts_each_path() {
+        // Two clients on the same orbit: client 1's drains hit client 0's
+        // cached plans exactly (pose-key + exact-pose verification), and
+        // the counter invariant hits + builds + deltas == requests holds.
+        // A 24-view orbit steps 15° ≈ 0.26 rad, inside the default delta
+        // radius (0.35), so client 0's views 1..24 all delta-advance from
+        // the previously cached neighbor.
+        let svc = RenderService::new(ServiceConfig {
+            workers: 1,
+            max_queue: 64,
+            ..Default::default()
+        });
+        let id = svc.register_scene(small_scene());
+        let path = cams(24);
+        let opts = RenderOptions {
+            plan_delta: DeltaConfig::on(),
+            ..Default::default()
+        };
+        for req in requests(0, id, &path, opts) {
+            svc.submit(req).unwrap();
+        }
+        let a = svc.drain(&Golden).unwrap();
+        let st = svc.stats();
+        assert_eq!(st.plan_requests, 24);
+        assert_eq!(st.plan_hits, 0);
+        assert_eq!(st.plan_builds, 1, "only view 0 is a cold build: {st:?}");
+        assert_eq!(st.plan_delta_builds, 23);
+
+        for req in requests(1, id, &path, opts) {
+            svc.submit(req).unwrap();
+        }
+        let b = svc.drain(&Golden).unwrap();
+        let st = svc.stats();
+        assert_eq!(st.plan_requests, 48);
+        assert_eq!(st.plan_hits, 24, "client 1 rides client 0's plans");
+        assert_eq!(st.cached_plans, 24);
+        // Shared plans render identically for both clients.
+        for (fa, fb) in a.iter().zip(&b) {
+            assert_eq!(fa.metrics.image.data, fb.metrics.image.data);
+            assert_eq!(fa.metrics.client, 0);
+            assert_eq!(fb.metrics.client, 1);
+            assert_eq!(fa.metrics.view, fb.metrics.view);
+        }
+    }
+
+    #[test]
+    fn options_fork_the_cache_key() {
+        let svc = RenderService::new(ServiceConfig {
+            workers: 1,
+            ..Default::default()
+        });
+        let id = svc.register_scene(small_scene());
+        let cam = cams(1);
+        let a = RenderOptions::default();
+        let b = RenderOptions {
+            background: [0.5, 0.0, 0.0],
+            ..RenderOptions::default()
+        };
+        assert_ne!(options_words(&a), options_words(&b));
+        svc.submit(requests(0, id, &cam, a)[0]).unwrap();
+        svc.submit(requests(1, id, &cam, b)[0]).unwrap();
+        let frames = svc.drain(&Golden).unwrap();
+        assert_eq!(svc.stats().plan_builds, 2, "different options never share plans");
+        assert_ne!(
+            frames[0].metrics.image.data, frames[1].metrics.image.data,
+            "the backgrounds differ, so the frames must too"
+        );
+    }
+
+    #[test]
+    fn stats_by_client_reseparates_totals() {
+        let svc = RenderService::new(ServiceConfig {
+            workers: 1,
+            ..Default::default()
+        });
+        let id = svc.register_scene(small_scene());
+        let path = cams(2);
+        for c in 0..2 {
+            for req in requests(c, id, &path, RenderOptions::default()) {
+                svc.submit(req).unwrap();
+            }
+        }
+        let frames = svc.drain(&Golden).unwrap();
+        let by_client = stats_by_client(&frames);
+        assert_eq!(by_client.len(), 2);
+        let total: u64 = frames.iter().map(|f| f.metrics.stats.pixels).sum();
+        let reseparated: u64 = by_client.values().map(|s| s.pixels).sum();
+        assert_eq!(total, reseparated);
+        // Symmetric clients (same orbit, same options) absorb to equal totals.
+        assert_eq!(by_client[&0].pixels, by_client[&1].pixels);
+        assert_eq!(by_client[&0].pairs_blended, by_client[&1].pairs_blended);
+    }
+}

@@ -263,6 +263,36 @@ impl Session {
         self.prune_report.as_ref()
     }
 
+    /// This session's orbit as a multi-tenant request stream: one
+    /// [`RenderRequest`](crate::coordinator::service::RenderRequest) per
+    /// view (in orbit order, `view` = the orbit index) against `scene` in
+    /// a [`RenderService`](crate::coordinator::service::RenderService)
+    /// store, tagged with `client` and carrying this session's resolved
+    /// options verbatim. Submitting these (interleaved with any other
+    /// clients) and re-joining the drained frames by
+    /// `(metrics.client, metrics.view)` reproduces `self.frame(i, ...)`
+    /// bit for bit — the service harness's bridge from single-tenant
+    /// sessions to the shared daemon. The caller registers the scene
+    /// (`service.register_scene(session.scene().clone())`) because the
+    /// store owns its copy.
+    pub fn service_requests(
+        &self,
+        client: usize,
+        scene: crate::coordinator::service::SceneId,
+    ) -> Vec<crate::coordinator::service::RenderRequest> {
+        self.cams
+            .iter()
+            .enumerate()
+            .map(|(view, &camera)| crate::coordinator::service::RenderRequest {
+                client,
+                view,
+                scene,
+                camera,
+                options: self.opts,
+            })
+            .collect()
+    }
+
     /// The cached [`FramePlan`] for view `i`, building it on first access.
     /// Concurrent callers for the same view block on one build; different
     /// views build independently.

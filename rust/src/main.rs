@@ -8,6 +8,9 @@
 //!   quality   PSNR/SSIM of CAT modes vs the vanilla render (Table I style).
 //!   area      Print the area model breakdown (Table II style).
 //!   info      Print scene/workload statistics.
+//!   serve     Multi-client render-service demo: a shared scene store, the
+//!             cross-session plan cache, bounded admission, and (pjrt) the
+//!             cross-client tile coalescer.
 //!
 //! Every rendering subcommand drives one `coordinator::Session`: scene
 //! prep (with `--prune` recorded as report provenance), the full
@@ -17,8 +20,11 @@
 use flicker::cat::{CatConfig, LeaderMode, Precision};
 use flicker::config::ExperimentConfig;
 use flicker::coordinator::report::Report;
-use flicker::coordinator::{Golden, GoldenCat, RenderBackend, Session};
-use flicker::render::metrics::{psnr, ssim};
+use flicker::coordinator::{
+    Golden, GoldenCat, RenderBackend, RenderRequest, RenderService, Session, ServiceConfig,
+    ServiceFrame,
+};
+use flicker::render::metrics::{latency_summary, psnr, ssim};
 use flicker::render::precision::{PrecisionMode, PrecisionPolicy};
 use flicker::sim::area::{area, AreaParams};
 use flicker::sim::top::simulate_frame;
@@ -41,6 +47,12 @@ COMMANDS
   quality   --scene S [--prune]           PSNR/SSIM of CAT modes
   area      [--hardware H]                area model breakdown
   info      --scene S                     scene & workload statistics
+  serve     --scene S [--clients N] [--queue Q] [--window W]
+            [--backend golden|pjrt]       multi-client service demo:
+            one shared scene, N interleaved ragged orbits through the
+            cross-session plan cache and bounded queue; the pjrt backend
+            drains all clients through coalesced precision-pure waves and
+            reports the aggregate fill rate
 
 COMMON OPTIONS
   --scene        garden|truck|train|bicycle|stump|flowers|playroom|drjohnson
@@ -109,6 +121,7 @@ fn run(args: &Args) -> Result<()> {
         "quality" => cmd_quality(args),
         "area" => cmd_area(args),
         "info" => cmd_info(args),
+        "serve" => cmd_serve(args),
         other => bail!("unknown command '{other}'\n{USAGE}"),
     }
 }
@@ -375,6 +388,160 @@ fn cmd_area(args: &Args) -> Result<()> {
     report.row("TOTAL", &[("mm2", r.total_mm2()), ("share", 1.0)]);
     report.emit();
     Ok(())
+}
+
+/// Multi-client service demo: one session prepares the scene and resolved
+/// options, the service stores the scene once, and `--clients` synthetic
+/// tenants submit ragged interleaved orbits (client `c` starts `c` views
+/// into the orbit and renders `c` fewer frames, so workloads differ).
+/// Submission rides the queue's backpressure — a rejected submit triggers
+/// a drain, then retries — and the drained frames re-join per client.
+fn cmd_serve(args: &Args) -> Result<()> {
+    let cfg = ExperimentConfig::from_args(args)?;
+    let clients = args.usize_or("clients", 3)?.max(1);
+    let backend_name = args.str_or("backend", "golden");
+    let session = Session::builder(cfg).build()?;
+    announce_prune(&session);
+    let svc = RenderService::new(ServiceConfig {
+        workers: session.options().workers,
+        max_queue: args.usize_or("queue", 64)?.max(1),
+        window: args.usize_or("window", 0)?,
+        batch: session.options().batch,
+        ..Default::default()
+    });
+    let scene_id = svc.register_scene(session.scene().clone());
+    let base = session.cameras();
+    let opts = *session.options();
+    let per_client: Vec<Vec<RenderRequest>> = (0..clients)
+        .map(|c| {
+            let take = base.len().saturating_sub(c).max(1);
+            (0..take)
+                .map(|i| RenderRequest {
+                    client: c,
+                    view: i,
+                    scene: scene_id,
+                    camera: base[(i + c) % base.len()],
+                    options: opts,
+                })
+                .collect()
+        })
+        .collect();
+
+    let mut frames: Vec<ServiceFrame> = Vec::new();
+    // Aggregate (real rows, shipped rows) across coalesced drains.
+    let mut fill: (u64, u64) = (0, 0);
+    let mut drain_all = |frames: &mut Vec<ServiceFrame>, fill: &mut (u64, u64)| -> Result<()> {
+        match backend_name.as_str() {
+            "golden" => frames.extend(svc.drain(&Golden)?),
+            "pjrt" => serve_drain_pjrt(&svc, frames, fill)?,
+            other => bail!("unknown backend '{other}' (serve supports golden|pjrt)"),
+        }
+        Ok(())
+    };
+    let longest = per_client.iter().map(Vec::len).max().unwrap_or(0);
+    for v in 0..longest {
+        for reqs in &per_client {
+            let Some(&req) = reqs.get(v) else { continue };
+            loop {
+                match svc.submit(req) {
+                    Ok(_) => break,
+                    Err(_) if svc.pending() > 0 => {
+                        // Queue full: drain the backlog, then retry.
+                        drain_all(&mut frames, &mut fill)?;
+                    }
+                    Err(e) => return Err(e),
+                }
+            }
+        }
+    }
+    drain_all(&mut frames, &mut fill)?;
+
+    let lat: Vec<f64> = frames.iter().map(|f| f.metrics.wall_ms).collect();
+    let l = latency_summary(&lat);
+    let st = svc.stats();
+    println!(
+        "serve: {clients} clients, {} frames via {backend_name}",
+        frames.len()
+    );
+    println!(
+        "  latency ms: p50 {:.2}  p99 {:.2}  mean {:.2}  max {:.2}",
+        l.p50, l.p99, l.mean, l.max
+    );
+    println!(
+        "  plans: {} cached — {} hits, {} delta, {} cold of {} lookups",
+        st.cached_plans, st.plan_hits, st.plan_delta_builds, st.plan_builds, st.plan_requests
+    );
+    println!(
+        "  queue: {} admitted, {} rejected (drained on backpressure)",
+        st.submitted, st.rejected
+    );
+    if fill.1 > 0 {
+        println!(
+            "  coalesced fill rate: {:.3} ({} real rows / {} shipped)",
+            fill.0 as f64 / fill.1 as f64,
+            fill.0,
+            fill.1
+        );
+    }
+    let mut report = session.report(
+        "serve",
+        &format!("{clients}-client service on {}", session.scene().name),
+    );
+    report.row(
+        "aggregate",
+        &[
+            ("frames", frames.len() as f64),
+            ("p50_ms", l.p50),
+            ("p99_ms", l.p99),
+            ("plan_hits", st.plan_hits as f64),
+            ("plan_delta_builds", st.plan_delta_builds as f64),
+            ("plan_builds", st.plan_builds as f64),
+            ("rejected", st.rejected as f64),
+        ],
+    );
+    for (c, s) in flicker::coordinator::service::stats_by_client(&frames) {
+        let n = frames.iter().filter(|f| f.metrics.client == c).count();
+        println!(
+            "  client {c}: {n} frames, {} tile-pairs, {} blended pairs",
+            s.tile_pairs, s.pairs_blended
+        );
+        report.row(
+            &format!("client{c}"),
+            &[
+                ("frames", n as f64),
+                ("tile_pairs", s.tile_pairs as f64),
+                ("pairs_blended", s.pairs_blended as f64),
+            ],
+        );
+    }
+    report.emit();
+    Ok(())
+}
+
+/// Coalesced drain for `serve --backend pjrt`: every queued frame's tiles
+/// merge into shared precision-pure waves. The runtime is (re)loaded per
+/// drain — cheap against the stub artifacts this demo targets.
+#[cfg(feature = "pjrt")]
+fn serve_drain_pjrt(
+    svc: &RenderService,
+    frames: &mut Vec<ServiceFrame>,
+    fill: &mut (u64, u64),
+) -> Result<()> {
+    let rt = flicker::runtime::Runtime::load(&flicker::runtime::default_artifact_dir())?;
+    let (fs, ex) = svc.drain_coalesced(&rt)?;
+    fill.0 += ex.splats_submitted as u64;
+    fill.1 += ex.rows_submitted as u64;
+    frames.extend(fs);
+    Ok(())
+}
+
+#[cfg(not(feature = "pjrt"))]
+fn serve_drain_pjrt(
+    _svc: &RenderService,
+    _frames: &mut Vec<ServiceFrame>,
+    _fill: &mut (u64, u64),
+) -> Result<()> {
+    bail!("this build has no PJRT runtime; rebuild with `cargo build --features pjrt`")
 }
 
 fn cmd_info(args: &Args) -> Result<()> {

@@ -1,6 +1,56 @@
-//! Image quality metrics: PSNR and SSIM (paper Table I).
+//! Image quality metrics (PSNR, SSIM — paper Table I) and serving-latency
+//! summaries (percentiles over frame wall times, used by the render
+//! service's stats and the `fig14_service` bench).
 
 use super::image::Image;
+
+/// Interpolated percentile of a sample set: `q` in `[0, 1]`, linear
+/// interpolation between order statistics (the same convention as numpy's
+/// default). Empty input returns 0.0.
+pub fn percentile(samples: &[f64], q: f64) -> f64 {
+    if samples.is_empty() {
+        return 0.0;
+    }
+    let mut sorted = samples.to_vec();
+    sorted.sort_by(|a, b| a.partial_cmp(b).expect("non-NaN samples"));
+    let q = q.clamp(0.0, 1.0);
+    let pos = q * (sorted.len() - 1) as f64;
+    let lo = pos.floor() as usize;
+    let hi = pos.ceil() as usize;
+    let frac = pos - lo as f64;
+    sorted[lo] * (1.0 - frac) + sorted[hi] * frac
+}
+
+/// Latency summary over a batch of frame wall times: the service and the
+/// `fig14_service` bench report p50/p99 alongside the mean and worst case.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct LatencySummary {
+    /// Number of samples.
+    pub n: usize,
+    /// Median (50th percentile).
+    pub p50: f64,
+    /// Tail latency (99th percentile).
+    pub p99: f64,
+    /// Arithmetic mean.
+    pub mean: f64,
+    /// Worst sample.
+    pub max: f64,
+}
+
+/// Summarize `samples` (e.g. per-frame wall milliseconds) into a
+/// [`LatencySummary`]. Empty input yields the all-zero summary.
+pub fn latency_summary(samples: &[f64]) -> LatencySummary {
+    if samples.is_empty() {
+        return LatencySummary::default();
+    }
+    LatencySummary {
+        n: samples.len(),
+        p50: percentile(samples, 0.50),
+        p99: percentile(samples, 0.99),
+        mean: samples.iter().sum::<f64>() / samples.len() as f64,
+        max: samples.iter().cloned().fold(f64::NEG_INFINITY, f64::max),
+    }
+}
 
 /// PSNR in dB over all RGB channels (peak = 1.0).
 pub fn psnr(a: &Image, b: &Image) -> f64 {
@@ -152,5 +202,28 @@ mod tests {
         let a = test_pattern(48, 48);
         let b = noisy(&a, 0.03, 4);
         assert!((ssim(&a, &b) - ssim(&b, &a)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn percentile_interpolates_order_statistics() {
+        let s = [4.0, 1.0, 3.0, 2.0];
+        assert_eq!(percentile(&s, 0.0), 1.0);
+        assert_eq!(percentile(&s, 1.0), 4.0);
+        assert!((percentile(&s, 0.5) - 2.5).abs() < 1e-12);
+        // Single sample: every percentile is that sample.
+        assert_eq!(percentile(&[7.5], 0.99), 7.5);
+        assert_eq!(percentile(&[], 0.5), 0.0);
+    }
+
+    #[test]
+    fn latency_summary_orders_p50_p99_max() {
+        let s: Vec<f64> = (1..=100).map(|i| i as f64).collect();
+        let l = latency_summary(&s);
+        assert_eq!(l.n, 100);
+        assert!((l.p50 - 50.5).abs() < 1e-9);
+        assert!(l.p50 <= l.p99 && l.p99 <= l.max);
+        assert!((l.max - 100.0).abs() < 1e-12);
+        assert!((l.mean - 50.5).abs() < 1e-9);
+        assert_eq!(latency_summary(&[]), LatencySummary::default());
     }
 }

@@ -16,6 +16,13 @@
 //! batched render is **bit-identical** to looped [`TileExecutor::render_tile`]
 //! calls for any batch size — enforced by the property suite in
 //! `rust/tests/properties.rs` against the offline stub runtime.
+//!
+//! [`TileExecutor::render_tiles_coalesced`] generalizes the queue to tiles
+//! from **multiple frames at once** (the render service's cross-client
+//! coalescer): each job carries a source index selecting its splat array
+//! and output image, so one client's padding slots carry another client's
+//! real chunks and the aggregate fill rate stays high even when every
+//! individual frame is ragged.
 
 use super::Runtime;
 use crate::cat::leader::dense_layout;
@@ -144,6 +151,31 @@ impl<'a> TileJob<'a> {
             })
             .collect()
     }
+}
+
+/// One frame's shared inputs in a coalesced cross-client tile queue: the
+/// projected splat array every [`TileJob::order`] of that frame indexes
+/// into, plus the frame's background color. See
+/// [`TileExecutor::render_tiles_coalesced`].
+#[derive(Clone, Copy)]
+pub struct TileSource<'a> {
+    /// The frame's projected, depth-sortable splat array.
+    pub splats: &'a [Splat],
+    /// Background composited under the residual transmittance.
+    pub background: [f32; 3],
+}
+
+/// A tile job bound to one of several in-flight frames: `source` indexes
+/// the `sources`/`images` arrays handed to
+/// [`TileExecutor::render_tiles_coalesced`], so tiles from different
+/// clients' frames can share the same precision-pure wave.
+#[derive(Clone, Copy)]
+pub struct SourcedJob<'a> {
+    /// Index of the owning frame in the coalesced call's source/image
+    /// arrays.
+    pub source: usize,
+    /// The tile job itself (rect, depth order, precision class).
+    pub job: TileJob<'a>,
 }
 
 /// Per-tile host accumulator state for the batched wave loop.
@@ -397,6 +429,7 @@ impl<'rt> TileExecutor<'rt> {
         img: &mut Image,
         background: [f32; 3],
     ) -> Result<()> {
+        let sources = [TileSource { splats, background }];
         if jobs.iter().all(|j| j.class.is_none()) {
             let b_eff = self.effective_batch();
             if b_eff == 1 || !self.rt.has("render_tile_batched") {
@@ -406,7 +439,9 @@ impl<'rt> TileExecutor<'rt> {
                 return Ok(());
             }
             for group in jobs.chunks(b_eff) {
-                self.render_tile_group(group, splats, img, background)?;
+                let group: Vec<SourcedJob> =
+                    group.iter().map(|&job| SourcedJob { source: 0, job }).collect();
+                self.render_tile_group(&group, &sources, std::slice::from_mut(img))?;
             }
             return Ok(());
         }
@@ -417,8 +452,11 @@ impl<'rt> TileExecutor<'rt> {
         }
         let b_eff = self.effective_batch();
         for class in CLASSES {
-            let subset: Vec<TileJob> =
-                jobs.iter().filter(|j| j.class == Some(class)).copied().collect();
+            let subset: Vec<SourcedJob> = jobs
+                .iter()
+                .filter(|j| j.class == Some(class))
+                .map(|&job| SourcedJob { source: 0, job })
+                .collect();
             if subset.is_empty() {
                 continue;
             }
@@ -430,32 +468,126 @@ impl<'rt> TileExecutor<'rt> {
                 ));
             }
             for group in subset.chunks(b_eff) {
-                self.render_tile_group(group, splats, img, background)?;
+                self.render_tile_group(group, &sources, std::slice::from_mut(img))?;
+            }
+        }
+        Ok(())
+    }
+
+    /// Render tile queues from **multiple frames** (different clients'
+    /// in-flight requests) through shared waves: `jobs[i].source` indexes
+    /// `sources`/`images`, and tiles from different sources are packed into
+    /// the same batched dispatch so one frame's padding slots carry another
+    /// frame's real chunks. This is the render service's cross-client
+    /// coalescer.
+    ///
+    /// Per-tile pixels are **bit-identical** to rendering each source's
+    /// jobs separately through [`TileExecutor::render_tiles`]: a slot's
+    /// artifact computation and the host chunk compositing depend only on
+    /// its own tile, never on wave co-residents (the property suite pins
+    /// this against the stub runtime). Within each precision class, jobs
+    /// are ordered by **descending chunk count** (ties keep submission
+    /// order) before grouping — longest-processing-time-first packing,
+    /// which minimizes the total wave count Σ max(chunks in group) over
+    /// contiguous groupings and therefore maximizes `fill_rate`: the
+    /// coalesced fill rate is never below the aggregate of the separate
+    /// per-source runs. Real-work counters (`chunks`, `splats_submitted`)
+    /// are grouping-invariant; only dispatch-shape counters differ from
+    /// the per-source runs.
+    ///
+    /// Mirrors [`TileExecutor::render_tiles`] in every mode: unclassed
+    /// queues fall back to the single-tile artifact when the effective
+    /// batch is 1 or no batched artifact exists; classed queues form
+    /// precision-pure waves per class in [`CLASSES`] order and error on a
+    /// missing class artifact.
+    pub fn render_tiles_coalesced(
+        &mut self,
+        sources: &[TileSource],
+        jobs: &[SourcedJob],
+        images: &mut [Image],
+    ) -> Result<()> {
+        assert_eq!(sources.len(), images.len(), "one output image per source");
+        assert!(
+            jobs.iter().all(|j| j.source < sources.len()),
+            "job source index out of range"
+        );
+        let n = self.rt.manifest.n_gauss.max(1);
+        let waves = |j: &SourcedJob| j.job.order.len().div_ceil(n);
+        let b_eff = self.effective_batch();
+        if jobs.iter().all(|j| j.job.class.is_none()) {
+            if b_eff == 1 || !self.rt.has("render_tile_batched") {
+                for j in jobs {
+                    let s = j.source;
+                    self.render_tile(
+                        &j.job.rect,
+                        sources[s].splats,
+                        j.job.order,
+                        &mut images[s],
+                        sources[s].background,
+                    )?;
+                }
+                return Ok(());
+            }
+            let mut queue: Vec<SourcedJob> = jobs.to_vec();
+            queue.sort_by(|a, b| waves(b).cmp(&waves(a))); // stable: ties keep order
+            for group in queue.chunks(b_eff) {
+                self.render_tile_group(group, sources, images)?;
+            }
+            return Ok(());
+        }
+        for j in jobs.iter().filter(|j| j.job.class.is_none()) {
+            let s = j.source;
+            self.render_tile(
+                &j.job.rect,
+                sources[s].splats,
+                j.job.order,
+                &mut images[s],
+                sources[s].background,
+            )?;
+        }
+        for class in CLASSES {
+            let mut subset: Vec<SourcedJob> =
+                jobs.iter().filter(|j| j.job.class == Some(class)).copied().collect();
+            if subset.is_empty() {
+                continue;
+            }
+            let artifact = batched_artifact(Some(class));
+            if !self.rt.has(artifact) {
+                return Err(err!(
+                    "runtime has no '{artifact}' artifact for the {class:?} precision class \
+                     (regenerate artifacts: make artifacts)"
+                ));
+            }
+            subset.sort_by(|a, b| waves(b).cmp(&waves(a)));
+            for group in subset.chunks(b_eff) {
+                self.render_tile_group(group, sources, images)?;
             }
         }
         Ok(())
     }
 
     /// One group of ≤ B same-class tiles through the wave loop (see
-    /// [`TileExecutor::render_tiles`]). The group's class (uniform by
-    /// construction — `render_tiles` partitions before grouping) picks the
+    /// [`TileExecutor::render_tiles`]). Each group member carries its
+    /// source index, so a wave may mix tiles from different frames — each
+    /// slot gathers from its own source's splat array and composites into
+    /// its own source's image. The group's class (uniform by construction —
+    /// both entry points partition by class before grouping) picks the
     /// batched artifact and the per-class stat buckets.
     fn render_tile_group(
         &mut self,
-        group: &[TileJob],
-        splats: &[Splat],
-        img: &mut Image,
-        background: [f32; 3],
+        group: &[SourcedJob],
+        sources: &[TileSource],
+        images: &mut [Image],
     ) -> Result<()> {
         let n = self.rt.manifest.n_gauss;
         let m = self.rt.manifest.n_pr;
         let t = self.rt.manifest.tile as u32;
         let b = self.rt.manifest.n_batch;
         let px = (t * t) as usize;
-        let class = group.first().and_then(|j| j.class);
+        let class = group.first().and_then(|j| j.job.class);
         debug_assert!(
-            group.iter().all(|j| j.class == class),
-            "mixed-precision wave: render_tiles must partition by class"
+            group.iter().all(|j| j.job.class == class),
+            "mixed-precision wave: the entry points must partition by class"
         );
         let artifact = batched_artifact(class);
         let ci = class.map(class_index);
@@ -470,7 +602,7 @@ impl<'rt> TileExecutor<'rt> {
             })
             .collect();
         let prs: Vec<(Vec<f32>, Vec<f32>)> =
-            group.iter().map(|j| self.dense_prs(&j.rect)).collect();
+            group.iter().map(|j| self.dense_prs(&j.job.rect)).collect();
 
         loop {
             // Gather the next chunk of every still-active tile.
@@ -479,7 +611,7 @@ impl<'rt> TileExecutor<'rt> {
                 if st.done {
                     continue;
                 }
-                let order = group[k].order;
+                let order = group[k].job.order;
                 if st.next >= order.len() {
                     st.done = true;
                     continue;
@@ -502,9 +634,10 @@ impl<'rt> TileExecutor<'rt> {
             let mut p_bot = vec![0.0f32; b * m * 2];
             for (s, &(k, chunk)) in slots.iter().enumerate() {
                 let base = s * n;
+                let splats = sources[group[k].source].splats;
                 self.fill_chunk(chunk, splats, base, &mut mu, &mut conic, &mut opacity, &mut color);
-                origin[s * 2] = group[k].rect.x0;
-                origin[s * 2 + 1] = group[k].rect.y0;
+                origin[s * 2] = group[k].job.rect.x0;
+                origin[s * 2 + 1] = group[k].job.rect.y0;
                 p_top[s * m * 2..(s + 1) * m * 2].copy_from_slice(&prs[k].0);
                 p_bot[s * m * 2..(s + 1) * m * 2].copy_from_slice(&prs[k].1);
             }
@@ -567,7 +700,14 @@ impl<'rt> TileExecutor<'rt> {
             self.stats.tiles_by_class[i] += group.len();
         }
         for (k, st) in states.iter().enumerate() {
-            self.write_tile(&group[k].rect, &st.acc_rgb, &st.acc_t, img, background);
+            let sj = &group[k];
+            self.write_tile(
+                &sj.job.rect,
+                &st.acc_rgb,
+                &st.acc_t,
+                &mut images[sj.source],
+                sources[sj.source].background,
+            );
         }
         Ok(())
     }
@@ -605,9 +745,17 @@ mod tests {
             v3(0.0, 1.0, 0.0),
         );
         let mut scene = Scene::with_capacity(3, "t");
-        scene.push(v3(0.0, 0.0, 0.0), Quat::IDENTITY, v3(0.6, 0.6, 0.6), 0.9, [1.5, 0.0, 0.0], [[0.0; 3]; 3]);
-        scene.push(v3(0.4, 0.2, 1.0), Quat::IDENTITY, v3(0.4, 0.4, 0.4), 0.7, [0.0, 1.5, 0.0], [[0.0; 3]; 3]);
-        scene.push(v3(-0.4, -0.2, 2.0), Quat::IDENTITY, v3(0.5, 0.5, 0.5), 0.5, [0.0, 0.0, 1.5], [[0.0; 3]; 3]);
+        let sh0 = [[0.0; 3]; 3];
+        scene.push(v3(0.0, 0.0, 0.0), Quat::IDENTITY, v3(0.6, 0.6, 0.6), 0.9, [1.5, 0.0, 0.0], sh0);
+        scene.push(v3(0.4, 0.2, 1.0), Quat::IDENTITY, v3(0.4, 0.4, 0.4), 0.7, [0.0, 1.5, 0.0], sh0);
+        scene.push(
+            v3(-0.4, -0.2, 2.0),
+            Quat::IDENTITY,
+            v3(0.5, 0.5, 0.5),
+            0.5,
+            [0.0, 0.0, 1.5],
+            sh0,
+        );
         (scene, cam)
     }
 
@@ -799,6 +947,139 @@ mod tests {
         assert_eq!(forced.data, plain.data);
         assert_eq!(exf.stats.batches, exp.stats.batches);
         assert_eq!(exf.stats.splats_submitted, exp.stats.splats_submitted);
+    }
+
+    #[test]
+    fn coalesced_waves_match_separate_renders_and_pack_tighter() {
+        // Two clients view the same scene from different cameras; each
+        // frame is ragged (4 tiles vs n_batch=4 is only full when both
+        // queues merge into shared waves). The coalesced render must be
+        // bit-identical per frame to separate render_tiles calls, and its
+        // fill rate must be at least the aggregate of the separate runs.
+        let dir = std::env::temp_dir().join("flicker_coalesce_stub_artifacts");
+        write_stub_artifacts(&dir, 8, 16, 16, 4).unwrap();
+        let rt = match Runtime::load(&dir) {
+            Ok(rt) => rt,
+            Err(e) => {
+                eprintln!("skipping: stub runtime unavailable ({e})");
+                return;
+            }
+        };
+        let (scene, cam_a) = test_scene();
+        let cam_b = Camera::look_at(
+            Intrinsics::from_fov(32, 32, 1.2),
+            v3(0.5, 0.3, -6.0),
+            v3(0.0, 0.0, 0.0),
+            v3(0.0, 1.0, 0.0),
+        );
+        let grid = TileGrid::new(32, 32, 16);
+        let mut per_client: Vec<(Vec<Splat>, Vec<Vec<u32>>)> = Vec::new();
+        for cam in [&cam_a, &cam_b] {
+            let splats = project_scene(&scene, cam);
+            let mut lists = build_tile_lists(&splats, &grid, Strategy::Aabb);
+            for l in &mut lists {
+                sort_by_depth(l, &splats);
+            }
+            per_client.push((splats, lists));
+        }
+
+        // Separate baseline: one render_tiles call per client, batch 3 so
+        // each client's 4 tiles leave a ragged final group.
+        let mut sep_imgs = vec![Image::new(32, 32), Image::new(32, 32)];
+        let mut sep_stats = ExecStats::default();
+        for (c, (splats, lists)) in per_client.iter().enumerate() {
+            let jobs = TileJob::for_grid(&grid, lists);
+            let mut ex = TileExecutor::new(&rt).with_batch(3);
+            ex.render_tiles(&jobs, splats, &mut sep_imgs[c], [0.0; 3]).unwrap();
+            sep_stats.splats_submitted += ex.stats.splats_submitted;
+            sep_stats.rows_submitted += ex.stats.rows_submitted;
+            sep_stats.chunks += ex.stats.chunks;
+        }
+
+        // Coalesced: both clients' jobs through shared waves.
+        let sources: Vec<TileSource> = per_client
+            .iter()
+            .map(|(splats, _)| TileSource { splats, background: [0.0; 3] })
+            .collect();
+        let per_jobs: Vec<Vec<TileJob>> = per_client
+            .iter()
+            .map(|(_, lists)| TileJob::for_grid(&grid, lists))
+            .collect();
+        let jobs: Vec<SourcedJob> = per_jobs
+            .iter()
+            .enumerate()
+            .flat_map(|(c, js)| js.iter().map(move |&job| SourcedJob { source: c, job }))
+            .collect();
+        let mut co_imgs = vec![Image::new(32, 32), Image::new(32, 32)];
+        let mut exc = TileExecutor::new(&rt).with_batch(3);
+        exc.render_tiles_coalesced(&sources, &jobs, &mut co_imgs).unwrap();
+
+        for c in 0..2 {
+            assert_eq!(
+                sep_imgs[c].data, co_imgs[c].data,
+                "client {c}: coalesced != separate render"
+            );
+        }
+        // Real work is grouping-invariant; packing only reduces shipped rows.
+        assert_eq!(exc.stats.splats_submitted, sep_stats.splats_submitted);
+        assert_eq!(exc.stats.chunks, sep_stats.chunks);
+        assert!(exc.stats.rows_submitted <= sep_stats.rows_submitted);
+        assert!(
+            exc.stats.fill_rate() >= sep_stats.fill_rate(),
+            "coalesced fill {} < separate aggregate {}",
+            exc.stats.fill_rate(),
+            sep_stats.fill_rate()
+        );
+    }
+
+    #[test]
+    fn coalesced_single_tile_fallback_and_classes() {
+        // Effective batch 1 routes every sourced job through the
+        // single-tile artifact; classed queues stay precision-pure.
+        let dir = std::env::temp_dir().join("flicker_coalesce1_stub_artifacts");
+        write_stub_artifacts(&dir, 8, 16, 16, 4).unwrap();
+        let rt = match Runtime::load(&dir) {
+            Ok(rt) => rt,
+            Err(e) => {
+                eprintln!("skipping: stub runtime unavailable ({e})");
+                return;
+            }
+        };
+        let (scene, cam) = test_scene();
+        let splats = project_scene(&scene, &cam);
+        let grid = TileGrid::new(32, 32, 16);
+        let mut lists = build_tile_lists(&splats, &grid, Strategy::Aabb);
+        for l in &mut lists {
+            sort_by_depth(l, &splats);
+        }
+        let jobs1 = TileJob::for_grid(&grid, &lists);
+        let sources = [TileSource { splats: &splats, background: [0.1, 0.0, 0.0] }];
+        let sjobs: Vec<SourcedJob> =
+            jobs1.iter().map(|&job| SourcedJob { source: 0, job }).collect();
+
+        let mut base = Image::new(32, 32);
+        let mut exb = TileExecutor::new(&rt).with_batch(1);
+        exb.render_tiles(&jobs1, &splats, &mut base, [0.1, 0.0, 0.0]).unwrap();
+        let mut co = vec![Image::new(32, 32)];
+        let mut exc = TileExecutor::new(&rt).with_batch(1);
+        exc.render_tiles_coalesced(&sources, &sjobs, &mut co).unwrap();
+        assert_eq!(base.data, co[0].data);
+        assert_eq!(exc.stats.batches, 0, "batch 1 must use the single-tile artifact");
+
+        // Classed: same classes through both entries, identical pixels.
+        let classes = [Precision::Fp32, Precision::Fp16, Precision::Fp16, Precision::Mixed];
+        let cjobs = TileJob::for_grid_classed(&grid, &lists, &classes);
+        let mut cbase = Image::new(32, 32);
+        let mut excb = TileExecutor::new(&rt);
+        excb.render_tiles(&cjobs, &splats, &mut cbase, [0.0; 3]).unwrap();
+        let scjobs: Vec<SourcedJob> =
+            cjobs.iter().map(|&job| SourcedJob { source: 0, job }).collect();
+        let csources = [TileSource { splats: &splats, background: [0.0; 3] }];
+        let mut cco = vec![Image::new(32, 32)];
+        let mut excc = TileExecutor::new(&rt);
+        excc.render_tiles_coalesced(&csources, &scjobs, &mut cco).unwrap();
+        assert_eq!(cbase.data, cco[0].data);
+        assert_eq!(excc.stats.batches, excc.stats.batches_by_class.iter().sum::<usize>());
     }
 
     #[test]

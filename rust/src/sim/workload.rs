@@ -100,6 +100,40 @@ impl FrameWorkload {
     pub fn per_pixel_processed(&self) -> f64 {
         (self.minitile_pairs * 16) as f64 / (self.width as u64 * self.height as u64) as f64
     }
+
+    /// Fold another frame's workload into this one — the aggregate view a
+    /// multi-tenant drain produces (many clients' frames, one accelerator).
+    /// Counters sum, tile streams concatenate, and the merged trace models
+    /// a virtual frame stacked vertically (`height` accumulates), so
+    /// [`per_pixel_processed`](Self::per_pixel_processed) stays the
+    /// work-per-rendered-pixel average across every absorbed frame.
+    /// `scene_gaussians` takes the max, not the sum: service clients share
+    /// one scene store, so the metadata universe does not grow per frame.
+    ///
+    /// # Panics
+    /// If the frames' widths differ (the stacked-frame model needs one
+    /// width; the service's synthetic workloads share intrinsics).
+    pub fn absorb(&mut self, other: &FrameWorkload) {
+        assert_eq!(self.width, other.width, "workload absorb: width mismatch");
+        self.tiles.extend(other.tiles.iter().cloned());
+        self.scene_gaussians = self.scene_gaussians.max(other.scene_gaussians);
+        self.visible_splats += other.visible_splats;
+        self.tile_pairs += other.tile_pairs;
+        self.stage1_pairs += other.stage1_pairs;
+        self.stage2_pairs += other.stage2_pairs;
+        self.minitile_pairs += other.minitile_pairs;
+        self.ctu_prs += other.ctu_prs;
+        for (acc, x) in self.ctu_prs_by_class.iter_mut().zip(other.ctu_prs_by_class) {
+            *acc += x;
+        }
+        self.dense_jobs += other.dense_jobs;
+        self.sparse_jobs += other.sparse_jobs;
+        self.blended_pairs += other.blended_pairs;
+        self.splats_submitted += other.splats_submitted;
+        self.gate_tile_rejected += other.gate_tile_rejected;
+        self.gate_quad_rejected += other.gate_quad_rejected;
+        self.height += other.height;
+    }
 }
 
 /// Extract the frame workload for a hardware config. Builds a fresh
@@ -471,6 +505,38 @@ mod tests {
             "adaptive class mix degenerate: {:?}",
             adaptive.ctu_prs_by_class
         );
+    }
+
+    #[test]
+    fn absorb_aggregates_frames_into_one_trace() {
+        let s = scene();
+        let hw = HwConfig::flicker32();
+        let c2 = Camera::look_at(
+            Intrinsics::from_fov(128, 128, 1.2),
+            v3(3.0, 2.5, -11.0),
+            v3(0.0, 0.5, 0.0),
+            v3(0.0, 1.0, 0.0),
+        );
+        let a = extract(&s, &cam(), &hw);
+        let b = extract(&s, &c2, &hw);
+        let mut agg = a.clone();
+        agg.absorb(&b);
+        assert_eq!(agg.tiles.len(), a.tiles.len() + b.tiles.len());
+        assert_eq!(agg.tile_pairs, a.tile_pairs + b.tile_pairs);
+        assert_eq!(agg.minitile_pairs, a.minitile_pairs + b.minitile_pairs);
+        assert_eq!(agg.blended_pairs, a.blended_pairs + b.blended_pairs);
+        assert_eq!(agg.ctu_prs, a.ctu_prs + b.ctu_prs);
+        assert_eq!(
+            agg.ctu_prs_by_class.iter().sum::<u64>(),
+            a.ctu_prs + b.ctu_prs
+        );
+        // Shared scene store: the metadata universe does not double.
+        assert_eq!(agg.scene_gaussians, a.scene_gaussians);
+        // Stacked-frame pixel accounting keeps the per-pixel average exact.
+        assert_eq!(agg.height, a.height + b.height);
+        let expect = ((a.minitile_pairs + b.minitile_pairs) * 16) as f64
+            / (128.0 * (a.height + b.height) as f64);
+        assert!((agg.per_pixel_processed() - expect).abs() < 1e-12);
     }
 
     #[test]

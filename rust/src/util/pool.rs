@@ -4,7 +4,10 @@
 //! threads. On this CI image there is a single core, so the pool defaults to
 //! `available_parallelism()` and degrades gracefully to sequential execution.
 
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::cell::UnsafeCell;
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard, PoisonError};
 
 /// Number of workers to use by default.
 pub fn default_workers() -> usize {
@@ -112,6 +115,223 @@ where
         .collect()
 }
 
+fn lock<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(PoisonError::into_inner)
+}
+
+/// One submitted fan-out: a lifetime-erased `Fn(usize)` plus the atomic
+/// work-stealing counter and a completion latch.
+///
+/// The raw pointer erases the caller's stack lifetime; soundness rests on
+/// [`WorkerPool::run`] blocking until every queued participation has
+/// signalled `done`, after which no worker dereferences `f` again (workers
+/// only hold the `Arc` past that point, never the closure).
+struct TaskShared {
+    f: *const (dyn Fn(usize) + Sync),
+    next: AtomicUsize,
+    n: usize,
+    done: Mutex<usize>,
+    finished: Condvar,
+    panicked: AtomicBool,
+}
+
+// SAFETY: `f` points at a `Sync` closure that outlives all dereferences
+// (see `run`); the remaining fields are themselves Send + Sync.
+unsafe impl Send for TaskShared {}
+unsafe impl Sync for TaskShared {}
+
+struct PoolQueue {
+    jobs: VecDeque<Arc<TaskShared>>,
+    closed: bool,
+}
+
+struct PoolShared {
+    q: Mutex<PoolQueue>,
+    cv: Condvar,
+}
+
+/// A persistent worker pool: `workers` parked OS threads draining
+/// index-parallel jobs, in contrast to the free [`for_each_index`] /
+/// [`map_indexed`] functions which spawn scoped threads per call.
+///
+/// The render service keeps one `WorkerPool` shared across all clients so
+/// steady-state serving pays no thread spawn/join per drained request
+/// window. Scheduling is identical to the free functions — one atomic
+/// counter hands each index to exactly one worker — so results are
+/// bit-identical to fresh scoped workers (pinned by the service test
+/// suite). Do not submit pool work from inside a pool task: a worker
+/// waiting on its own pool deadlocks.
+pub struct WorkerPool {
+    workers: usize,
+    shared: Arc<PoolShared>,
+    handles: Vec<std::thread::JoinHandle<()>>,
+}
+
+impl WorkerPool {
+    /// Spawn a pool with `workers` threads (`0` = auto, via
+    /// [`resolve_workers`]). A one-worker pool spawns no threads and runs
+    /// every job inline on the caller.
+    pub fn new(workers: usize) -> WorkerPool {
+        let workers = resolve_workers(workers);
+        let shared = Arc::new(PoolShared {
+            q: Mutex::new(PoolQueue {
+                jobs: VecDeque::new(),
+                closed: false,
+            }),
+            cv: Condvar::new(),
+        });
+        let handles = if workers <= 1 {
+            Vec::new()
+        } else {
+            (0..workers)
+                .map(|_| {
+                    let shared = shared.clone();
+                    std::thread::spawn(move || worker_loop(&shared))
+                })
+                .collect()
+        };
+        WorkerPool {
+            workers,
+            shared,
+            handles,
+        }
+    }
+
+    /// Resolved worker count.
+    pub fn workers(&self) -> usize {
+        self.workers
+    }
+
+    /// Run `f(i)` for every index in `0..n` across the pool's threads.
+    /// Blocks until all indices complete; panics (after completion of the
+    /// latch) if any worker participation panicked.
+    pub fn for_each_index<F>(&self, n: usize, f: F)
+    where
+        F: Fn(usize) + Sync,
+    {
+        self.run(n, &f);
+    }
+
+    /// Parallel map preserving order: `out[i] = f(i)`. Same scheduling as
+    /// the free [`map_indexed`], but on the persistent threads.
+    pub fn map_indexed<T, F>(&self, n: usize, f: F) -> Vec<T>
+    where
+        T: Send,
+        F: Fn(usize) -> T + Sync,
+    {
+        if n == 0 {
+            return Vec::new();
+        }
+        if self.workers <= 1 || n == 1 {
+            return (0..n).map(f).collect();
+        }
+        // Each index writes its own pre-allocated slot exactly once (the
+        // counter hands indices out uniquely), so unsynchronized interior
+        // writes are collision-free; the completion latch in `run` orders
+        // them before the caller's reads.
+        struct Slots<T>(Vec<UnsafeCell<Option<T>>>);
+        // SAFETY: disjoint per-index writes, read only after the latch.
+        unsafe impl<T: Send> Sync for Slots<T> {}
+        let slots = Slots((0..n).map(|_| UnsafeCell::new(None)).collect());
+        self.run(n, &|i| {
+            let v = f(i);
+            unsafe { *slots.0[i].get() = Some(v) };
+        });
+        slots
+            .0
+            .into_iter()
+            .map(|c| c.into_inner().expect("pool fills every slot"))
+            .collect()
+    }
+
+    fn run(&self, n: usize, f: &(dyn Fn(usize) + Sync)) {
+        if n == 0 {
+            return;
+        }
+        if self.workers <= 1 || n == 1 {
+            for i in 0..n {
+                f(i);
+            }
+            return;
+        }
+        let participations = self.workers.min(n);
+        let task = Arc::new(TaskShared {
+            f: f as *const (dyn Fn(usize) + Sync),
+            next: AtomicUsize::new(0),
+            n,
+            done: Mutex::new(0),
+            finished: Condvar::new(),
+            panicked: AtomicBool::new(false),
+        });
+        {
+            let mut q = lock(&self.shared.q);
+            for _ in 0..participations {
+                q.jobs.push_back(task.clone());
+            }
+        }
+        self.shared.cv.notify_all();
+        let mut done = lock(&task.done);
+        while *done < participations {
+            done = task
+                .finished
+                .wait(done)
+                .unwrap_or_else(PoisonError::into_inner);
+        }
+        drop(done);
+        if task.panicked.load(Ordering::Relaxed) {
+            panic!("worker pool task panicked");
+        }
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        {
+            let mut q = lock(&self.shared.q);
+            q.closed = true;
+        }
+        self.shared.cv.notify_all();
+        for h in self.handles.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+fn worker_loop(shared: &PoolShared) {
+    loop {
+        let task = {
+            let mut q = lock(&shared.q);
+            loop {
+                if let Some(t) = q.jobs.pop_front() {
+                    break t;
+                }
+                if q.closed {
+                    return;
+                }
+                q = shared.cv.wait(q).unwrap_or_else(PoisonError::into_inner);
+            }
+        };
+        let res = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            // SAFETY: the submitting `run` call blocks until this
+            // participation signals `done` below, so `f` is still alive.
+            let f = unsafe { &*task.f };
+            loop {
+                let i = task.next.fetch_add(1, Ordering::Relaxed);
+                if i >= task.n {
+                    break;
+                }
+                f(i);
+            }
+        }));
+        if res.is_err() {
+            task.panicked.store(true, Ordering::Relaxed);
+        }
+        let mut d = lock(&task.done);
+        *d += 1;
+        task.finished.notify_all();
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -166,5 +386,64 @@ mod tests {
         for_each_index(0, 4, |_| panic!("should not run"));
         let v: Vec<usize> = map_indexed(0, 4, |i| i);
         assert!(v.is_empty());
+    }
+
+    #[test]
+    fn worker_pool_covers_all_indices() {
+        let pool = WorkerPool::new(4);
+        assert_eq!(pool.workers(), 4);
+        let hits: Vec<AtomicU64> = (0..100).map(|_| AtomicU64::new(0)).collect();
+        pool.for_each_index(100, |i| {
+            hits[i].fetch_add(1, Ordering::Relaxed);
+        });
+        for (i, h) in hits.iter().enumerate() {
+            assert_eq!(h.load(Ordering::Relaxed), 1, "index {i}");
+        }
+    }
+
+    #[test]
+    fn worker_pool_map_matches_free_map_across_reuses() {
+        // The pool is persistent: the same threads serve many submissions,
+        // and each must match the scoped-thread free function exactly.
+        let pool = WorkerPool::new(3);
+        for round in 0..5usize {
+            let fresh = map_indexed(33, 3, |i| (i * 7 + round) % 13);
+            let pooled = pool.map_indexed(33, |i| (i * 7 + round) % 13);
+            assert_eq!(fresh, pooled, "round {round}");
+        }
+    }
+
+    #[test]
+    fn worker_pool_single_worker_runs_inline() {
+        let pool = WorkerPool::new(1);
+        assert!(pool.handles.is_empty());
+        let v = pool.map_indexed(8, |i| i * 2);
+        assert_eq!(v, vec![0, 2, 4, 6, 8, 10, 12, 14]);
+    }
+
+    #[test]
+    fn worker_pool_empty_and_tiny_jobs() {
+        let pool = WorkerPool::new(4);
+        let v: Vec<usize> = pool.map_indexed(0, |i| i);
+        assert!(v.is_empty());
+        // n < workers queues fewer participations than threads.
+        let v = pool.map_indexed(2, |i| i + 1);
+        assert_eq!(v, vec![1, 2]);
+    }
+
+    #[test]
+    fn worker_pool_survives_a_panicking_task() {
+        let pool = WorkerPool::new(2);
+        let r = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            pool.for_each_index(4, |i| {
+                if i == 2 {
+                    panic!("boom");
+                }
+            });
+        }));
+        assert!(r.is_err(), "task panic must propagate to the submitter");
+        // The pool threads stay alive and keep serving work.
+        let v = pool.map_indexed(4, |i| i);
+        assert_eq!(v, vec![0, 1, 2, 3]);
     }
 }

@@ -267,7 +267,7 @@ fn plan_cache_delta_counts_exact_sequential_invariant_streamed() {
 
 #[test]
 fn configured_strategy_reaches_orbit_renders() {
-    // Regression: the pre-Session render_orbit hardcoded
+    // Regression: the pre-Session orbit helper (removed) hardcoded
     // RenderOptions::default() except workers, silently dropping a
     // configured Strategy::Obb. The session threads the full options.
     let obb_cfg = ExperimentConfig {

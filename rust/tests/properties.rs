@@ -451,7 +451,7 @@ mod pjrt_batched {
     use flicker::render::image::Image;
     use flicker::render::project::Splat;
     use flicker::render::tile::TileGrid;
-    use flicker::runtime::executor::{TileExecutor, TileJob};
+    use flicker::runtime::executor::{ExecStats, SourcedJob, TileExecutor, TileJob, TileSource};
     use flicker::runtime::{write_stub_artifacts, Runtime};
     use flicker::util::prop::{check, ensure, PropConfig};
     use flicker::util::rng::Pcg32;
@@ -613,6 +613,118 @@ mod pjrt_batched {
                         Some(r) => ensure(*r == bits, format!("batch {b} changed pixels"))?,
                     }
                 }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn prop_coalesced_fill_dominates_separate_runs() {
+        // Cross-client coalescing claim: merging two frames' tile queues
+        // into shared waves (a) never changes any pixel, (b) submits the
+        // exact same real work, and (c) never pads MORE than the two
+        // separate runs combined — the separate runs' waves form a valid
+        // partition of the merged queue, and the coalescer's sorted
+        // grouping minimizes the summed per-wave maxima over all such
+        // partitions. For identical (cloned) clients the same argument
+        // bounds the merged padding by twice one run's, so coalesced
+        // fill_rate also dominates the per-client value — the symmetric
+        // special case of the acceptance property (heterogeneous clients
+        // only guarantee dominance over the aggregate, not each client's
+        // own fill_rate).
+        let Some(rt) = stub_runtime("coalesce") else { return };
+        check(
+            "coalesced fill_rate >= aggregate of separate runs",
+            PropConfig::default(),
+            |rng, size| (generate_frame(rng, size), generate_frame(rng, size)),
+            |(a, b)| {
+                let batch = a.batch; // one wave width for every run in this case
+                let run = |f: &Frame| -> Result<(Vec<u32>, ExecStats), String> {
+                    let grid = TileGrid::new(f.width, f.height, 16);
+                    let jobs = TileJob::for_grid(&grid, &f.lists);
+                    let mut img = Image::new(f.width, f.height);
+                    let mut ex = TileExecutor::new(&rt).with_batch(batch);
+                    ex.render_tiles(&jobs, &f.splats, &mut img, f.background)
+                        .map_err(|e| format!("separate render failed: {e}"))?;
+                    Ok((img.data.iter().map(|x| x.to_bits()).collect(), ex.stats))
+                };
+                let coalesce = |frames: &[&Frame]| -> Result<(Vec<Vec<u32>>, ExecStats), String> {
+                    let grids: Vec<TileGrid> = frames
+                        .iter()
+                        .map(|f| TileGrid::new(f.width, f.height, 16))
+                        .collect();
+                    let per_jobs: Vec<Vec<TileJob>> = frames
+                        .iter()
+                        .zip(&grids)
+                        .map(|(f, g)| TileJob::for_grid(g, &f.lists))
+                        .collect();
+                    let sources: Vec<TileSource> = frames
+                        .iter()
+                        .map(|f| TileSource { splats: &f.splats, background: f.background })
+                        .collect();
+                    let jobs: Vec<SourcedJob> = per_jobs
+                        .iter()
+                        .enumerate()
+                        .flat_map(|(s, js)| {
+                            js.iter().map(move |&job| SourcedJob { source: s, job })
+                        })
+                        .collect();
+                    let mut images: Vec<Image> =
+                        frames.iter().map(|f| Image::new(f.width, f.height)).collect();
+                    let mut ex = TileExecutor::new(&rt).with_batch(batch);
+                    ex.render_tiles_coalesced(&sources, &jobs, &mut images)
+                        .map_err(|e| format!("coalesced render failed: {e}"))?;
+                    let bits = images
+                        .iter()
+                        .map(|img| img.data.iter().map(|x| x.to_bits()).collect())
+                        .collect();
+                    Ok((bits, ex.stats))
+                };
+
+                let (bits_a, sa) = run(a)?;
+                let (bits_b, sb) = run(b)?;
+                let (merged_bits, sm) = coalesce(&[a, b])?;
+                ensure(merged_bits[0] == bits_a, "coalescing changed frame A's pixels")?;
+                ensure(merged_bits[1] == bits_b, "coalescing changed frame B's pixels")?;
+                ensure(
+                    sm.splats_submitted == sa.splats_submitted + sb.splats_submitted,
+                    format!(
+                        "real work not conserved: merged {} vs {} + {}",
+                        sm.splats_submitted, sa.splats_submitted, sb.splats_submitted
+                    ),
+                )?;
+                ensure(
+                    sm.rows_submitted <= sa.rows_submitted + sb.rows_submitted,
+                    format!(
+                        "coalescing padded more than separate runs: {} vs {} + {}",
+                        sm.rows_submitted, sa.rows_submitted, sb.rows_submitted
+                    ),
+                )?;
+                if sa.rows_submitted + sb.rows_submitted > 0 {
+                    let aggregate = (sa.splats_submitted + sb.splats_submitted) as f64
+                        / (sa.rows_submitted + sb.rows_submitted) as f64;
+                    ensure(
+                        sm.fill_rate() >= aggregate - 1e-12,
+                        format!(
+                            "coalesced fill {} below separate aggregate {aggregate}",
+                            sm.fill_rate()
+                        ),
+                    )?;
+                }
+
+                // Symmetric clients: coalesced fill dominates the
+                // per-client value itself.
+                let (twin_bits, st) = coalesce(&[a, a])?;
+                ensure(twin_bits[0] == bits_a, "twin coalescing changed pixels (slot 0)")?;
+                ensure(twin_bits[1] == bits_a, "twin coalescing changed pixels (slot 1)")?;
+                ensure(
+                    st.fill_rate() >= sa.fill_rate() - 1e-12,
+                    format!(
+                        "twin coalesced fill {} below per-client fill {}",
+                        st.fill_rate(),
+                        sa.fill_rate()
+                    ),
+                )?;
                 Ok(())
             },
         );

@@ -1,16 +1,18 @@
 #!/usr/bin/env python3
-"""Merge bench JSON sidecars into one commit-stamped BENCH_8.json.
+"""Merge bench JSON sidecars into one commit-stamped BENCH_9.json.
 
 The bench-record CI lane (push-to-main only) runs the hotpath,
-fig11_gating, fig12_temporal, and fig13_precision benches in quick mode,
-then calls this script to fold their `rust/target/bench-reports/*.json`
-sidecars into a single artifact that extends the repo's perf trajectory:
-plan build/reuse/delta timings, PJRT single-vs-batched dispatch, the
-coarse-to-fine gating rows (splats_submitted, per-level reject counts,
-gating on/off), the temporal plan-delta amortization sweep
-(amortized_ratio, rebinned_frac, entries_carried per orbit step), and the
-adaptive-precision rows (per-class tile/PR mix, PSNR vs global fp32, CTU
-energy saving).
+fig11_gating, fig12_temporal, fig13_precision, and fig14_service benches
+in quick mode, then calls this script to fold their
+`rust/target/bench-reports/*.json` sidecars into a single artifact that
+extends the repo's perf trajectory: plan build/reuse/delta timings, PJRT
+single-vs-batched dispatch, the coarse-to-fine gating rows
+(splats_submitted, per-level reject counts, gating on/off), the temporal
+plan-delta amortization sweep (amortized_ratio, rebinned_frac,
+entries_carried per orbit step), the adaptive-precision rows (per-class
+tile/PR mix, PSNR vs global fp32, CTU energy saving), and the
+multi-tenant service rows (per-client-count latency percentiles, plan
+sharing, and the coalesced vs uncoalesced fill rates).
 
 Stdlib only — the CI image must not need pip installs.
 """
@@ -19,11 +21,17 @@ import json
 import os
 import sys
 
-REPORTS = ["hotpath", "fig11_gating", "fig12_temporal", "fig13_precision"]
+REPORTS = [
+    "hotpath",
+    "fig11_gating",
+    "fig12_temporal",
+    "fig13_precision",
+    "fig14_service",
+]
 
 
 def main():
-    out_path = sys.argv[1] if len(sys.argv) > 1 else "BENCH_8.json"
+    out_path = sys.argv[1] if len(sys.argv) > 1 else "BENCH_9.json"
     report_dir = os.environ.get(
         "FLICKER_BENCH_REPORTS", os.path.join("rust", "target", "bench-reports")
     )
