@@ -31,14 +31,14 @@ bench-smoke:
 # land, stub-backed), the gating bench, the temporal plan-delta bench, the
 # adaptive-precision bench, and the multi-tenant service bench (with the
 # pjrt feature so the coalesced fill-rate rows land, stub-backed) in quick
-# mode, then merge their JSON sidecars into a commit-stamped BENCH_9.json.
+# mode, then merge their JSON sidecars into a commit-stamped BENCH_10.json.
 bench-record:
 	$(CARGO) bench --features pjrt --bench hotpath -- --quick
 	$(CARGO) bench --bench fig11_gating -- --quick
 	$(CARGO) bench --bench fig12_temporal -- --quick
 	$(CARGO) bench --bench fig13_precision -- --quick
 	$(CARGO) bench --features pjrt --bench fig14_service -- --quick
-	$(PYTHON) scripts/collect_bench.py BENCH_9.json
+	$(PYTHON) scripts/collect_bench.py BENCH_10.json
 
 # Heavier property coverage (CI: prop-heavy lane): 512 generated cases per
 # property across the property suite (including the temporal plan-delta

@@ -6,9 +6,14 @@
 //! entirely at fp32. The per-PR op-mix prices (`sim::energy::pr_pj`) are
 //! recorded once so the JSON is self-describing.
 //!
+//! The per-rect rows put the second-level quadrant classing next to the
+//! per-tile run: quadrant class mix, rect-vs-fp32 quality, and the
+//! quadrant-weighted CTU price, so the tile-vs-rect coverage/quality/
+//! energy tradeoff reads off one report.
+//!
 //! Emitted as `target/bench-reports/fig13_precision.json`; the
 //! `bench-record` CI lane merges it with the other reports into
-//! `BENCH_9.json`.
+//! `BENCH_10.json`.
 
 mod common;
 
@@ -35,6 +40,10 @@ fn main() {
     let fp32_opts = RenderOptions::default();
     let adaptive_opts = RenderOptions {
         precision: PrecisionPolicy::adaptive(),
+        ..RenderOptions::default()
+    };
+    let rect_opts = RenderOptions {
+        precision: PrecisionPolicy::rect(),
         ..RenderOptions::default()
     };
     let hw = HwConfig {
@@ -104,6 +113,53 @@ fn main() {
             1.0 - e_adaptive / e_fp32.max(1e-30),
         );
 
+        // Per-rect rows: the same mix/quality/energy columns one level
+        // down, over quadrant-rectangles of populated tiles.
+        let rect_plan = FramePlan::build(&scene, &cam, &rect_opts);
+        let maps = rect_plan
+            .tile_rect_classes()
+            .expect("rect plans class every tile");
+        let mut quads = [0usize; 4];
+        let mut quads_total = 0usize;
+        for (t, map) in maps.iter().enumerate() {
+            if rect_plan.lists[t].is_empty() {
+                continue;
+            }
+            for q in 0..4 {
+                quads_total += 1;
+                quads[class_index(map.quad(q))] += 1;
+            }
+        }
+        for c in CLASSES {
+            b.record(
+                &format!("{scene_name}/quads/{}", c.name()),
+                quads[class_index(c)] as f64,
+            );
+        }
+        let quads_below = quads_total - quads[class_index(Precision::Fp32)];
+        b.record(
+            &format!("{scene_name}/quads/below_fp32_share"),
+            quads_below as f64 / quads_total.max(1) as f64,
+        );
+        let rect = rect_plan.render(&cat, None);
+        b.record(
+            &format!("{scene_name}/psnr_rect_vs_fp32"),
+            psnr(&reference.image, &rect.image).min(99.0),
+        );
+        let wl_rect = extract_from_plan(&scene, &rect_plan, &hw);
+        for c in CLASSES {
+            b.record(
+                &format!("{scene_name}/ctu_prs_rect/{}", c.name()),
+                wl_rect.ctu_prs_by_class[class_index(c)] as f64,
+            );
+        }
+        let e_rect = frame_energy(&wl_rect, &hw, 0, 0, &energy).ctu_uj;
+        b.record(&format!("{scene_name}/ctu_uj/rect"), e_rect);
+        b.record(
+            &format!("{scene_name}/ctu_uj/rect_saving_vs_adaptive"),
+            1.0 - e_rect / e_adaptive.max(1e-30),
+        );
+
         // Wall-clock: classing happens at plan time, so the render loop
         // itself must not pay for the policy.
         b.bench(&format!("{scene_name}/render_fp32"), || {
@@ -112,7 +168,10 @@ fn main() {
         b.bench(&format!("{scene_name}/render_adaptive"), || {
             black_box(adaptive_plan.render(&cat, None));
         });
+        b.bench(&format!("{scene_name}/render_rect"), || {
+            black_box(rect_plan.render(&cat, None));
+        });
     }
 
-    b.finish("adaptive precision: class mix, quality, CTU energy");
+    b.finish("adaptive + rect precision: class mix, quality, CTU energy");
 }

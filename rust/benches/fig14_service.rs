@@ -8,7 +8,7 @@
 //!
 //! Emitted as `target/bench-reports/fig14_service.json`; the
 //! `bench-record` CI lane merges it with the other reports into
-//! `BENCH_9.json`.
+//! `BENCH_10.json`.
 
 mod common;
 

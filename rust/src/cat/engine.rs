@@ -543,6 +543,41 @@ mod tests {
     }
 
     #[test]
+    fn rect_stitched_masks_match_single_engine_per_quadrant() {
+        use crate::render::pyramid::TilePyramid;
+        let cfg = CatConfig::default();
+        let tile = tile_at(96.0, 96.0);
+        let splats = [
+            splat(v3(2.0, 2.0, 2.0), (104.0, 104.0), 0.95),
+            splat(v3(0.4, 0.12, 0.12), (100.0, 108.0), 0.9),
+            splat(v3(0.08, 0.08, 0.08), (110.0, 98.0), 0.95),
+        ];
+        let pyr = TilePyramid::new(&tile, 16);
+        // Uniform map: stitching must reproduce the single-engine mask.
+        let mut uniform = cfg.tile_masks_rect(16, [Precision::Fp16; 4]);
+        let mut single = cfg.tile_masks_at(Precision::Fp16);
+        for s in &splats {
+            assert_eq!(uniform.mask(&tile, s), single.mask(&tile, s));
+        }
+        // Mixed map: each quadrant's bits come from an engine at that
+        // quadrant's class, so per-quadrant they match a dedicated engine.
+        let classes = [Precision::Fp32, Precision::Fp16, Precision::Fp16, Precision::Mixed];
+        let mut stitched = cfg.tile_masks_rect(16, classes);
+        for s in &splats {
+            let m = stitched.mask(&tile, s);
+            for q in 0..4 {
+                let qbits = pyr.quad_minitile_mask(q);
+                let mut at = cfg.tile_masks_at(classes[q]);
+                assert_eq!(
+                    m & qbits,
+                    at.mask(&tile, s) & qbits,
+                    "quadrant {q} bits diverge from a dedicated engine"
+                );
+            }
+        }
+    }
+
+    #[test]
     fn cat_source_parallel_matches_sequential_engine() {
         use crate::render::plan::FramePlan;
         use crate::render::raster::{render_masked, RenderOptions};

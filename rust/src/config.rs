@@ -33,11 +33,13 @@ pub struct ExperimentConfig {
     pub hardware: String,
     /// Leader mode override ("dense", "sparse", "adaptive", "spiky-focused").
     pub cat_mode: Option<String>,
-    /// Precision override ("fp32", "fp16", "fp8", "mixed", or "adaptive"
-    /// for contribution-driven per-tile classing; case-insensitive).
+    /// Precision override ("fp32", "fp16", "fp8", "mixed", "adaptive" for
+    /// contribution-driven per-tile classing, or "rect" to refine
+    /// mid/high-energy tiles per quadrant-rectangle; case-insensitive).
     pub precision: Option<String>,
-    /// Adaptive thresholds spec `"FP32MIN,FP16MIN[,FLOOR]"` (e.g.
-    /// `"0.6,0.25"` or `"0.5,0.2,fp16"`). Requires `precision: adaptive`.
+    /// Thresholds spec `"FP32MIN,FP16MIN[,FLOOR]"` (e.g. `"0.6,0.25"` or
+    /// `"0.5,0.2,fp16"`). Requires `precision: adaptive` or `rect` (both
+    /// share the threshold vocabulary).
     pub precision_thresholds: Option<String>,
     /// FIFO depth override.
     pub fifo_depth: Option<usize>,
@@ -170,12 +172,14 @@ impl ExperimentConfig {
         }
         if let Some(p) = &self.precision {
             o.precision = PrecisionPolicy::parse(p).ok_or_else(|| {
-                err!("unknown precision '{p}' (valid: fp32|fp16|fp8|mixed|adaptive)")
+                err!("unknown precision '{p}' (valid: fp32|fp16|fp8|mixed|adaptive|rect)")
             })?;
         }
         if let Some(spec) = &self.precision_thresholds {
-            let PrecisionMode::Adaptive { thresholds, floor } = &mut o.precision.mode else {
-                return Err(err!("precision_thresholds requires precision = adaptive"));
+            let (PrecisionMode::Adaptive { thresholds, floor }
+            | PrecisionMode::Rect { thresholds, floor }) = &mut o.precision.mode
+            else {
+                return Err(err!("precision_thresholds requires precision = adaptive or rect"));
             };
             let (t, fl) = PrecisionThresholds::parse(spec).ok_or_else(|| {
                 err!("precision_thresholds: expected 'FP32MIN,FP16MIN[,FLOOR]', got '{spec}'")
@@ -205,12 +209,13 @@ impl ExperimentConfig {
             hw.cat_mode = LeaderMode::parse(m).ok_or_else(|| err!("unknown cat mode '{m}'"))?;
         }
         if let Some(p) = &self.precision {
-            // "adaptive" keeps the preset's global CTU precision — the
-            // realized per-tile class mix is reported by `sim::workload`
-            // instead of a single hardware-wide knob.
-            if !p.eq_ignore_ascii_case("adaptive") {
+            // "adaptive" and "rect" keep the preset's global CTU precision
+            // — the realized per-tile (or per-quadrant) class mix is
+            // reported by `sim::workload` instead of a single
+            // hardware-wide knob.
+            if !p.eq_ignore_ascii_case("adaptive") && !p.eq_ignore_ascii_case("rect") {
                 hw.cat_precision = Precision::parse(p).ok_or_else(|| {
-                    err!("unknown precision '{p}' (valid: fp32|fp16|fp8|mixed|adaptive)")
+                    err!("unknown precision '{p}' (valid: fp32|fp16|fp8|mixed|adaptive|rect)")
                 })?;
             }
         }
@@ -535,6 +540,26 @@ mod tests {
         }
         // Adaptive leaves the hardware preset's global CTU precision alone.
         assert_eq!(cfg.build_hw().unwrap().cat_precision, Precision::Mixed);
+        // Rect shares the threshold vocabulary and the hardware behavior.
+        let r = ExperimentConfig::from_args(&args(&[
+            "render",
+            "--precision",
+            "rect",
+            "--precision-thresholds",
+            "0.5,0.2,fp16",
+        ]))
+        .unwrap();
+        let ro = r.render_options().unwrap();
+        assert!(ro.precision.is_rect());
+        match ro.precision.mode {
+            PrecisionMode::Rect { thresholds, floor } => {
+                assert_eq!(thresholds.fp32_min, 0.5);
+                assert_eq!(thresholds.fp16_min, 0.2);
+                assert_eq!(floor, Precision::Fp16);
+            }
+            _ => unreachable!(),
+        }
+        assert_eq!(r.build_hw().unwrap().cat_precision, Precision::Mixed);
         // A global name threads to both the options and the hardware,
         // case-insensitively.
         let g = ExperimentConfig::from_args(&args(&["render", "--precision", "FP16"])).unwrap();
@@ -558,7 +583,7 @@ mod tests {
             ..Default::default()
         };
         let msg = format!("{}", bogus.render_options().unwrap_err());
-        assert!(msg.contains("fp32|fp16|fp8|mixed|adaptive"), "{msg}");
+        assert!(msg.contains("fp32|fp16|fp8|mixed|adaptive|rect"), "{msg}");
         assert!(bogus.build_hw().is_err());
         // Thresholds demand the adaptive mode and a well-formed spec.
         let orphan = ExperimentConfig {

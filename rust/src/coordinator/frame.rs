@@ -135,11 +135,15 @@ impl RenderBackend for Pjrt<'_> {
         // Adaptive precision: classify tiles from the plan (the gate keeps
         // per-tile index alignment, so classes stay valid for gated lists)
         // and dispatch precision-pure waves through the per-class
-        // monomorphized artifacts.
+        // monomorphized artifacts. Rect mode refines mid/high-energy tiles
+        // to per-quadrant classes; mixed tiles split into one job per
+        // distinct class and the executor stitches quadrant outputs.
         let classes = plan.tile_classes();
-        let jobs = match &classes {
-            Some(c) => TileJob::for_grid_classed(&plan.grid, lists, c),
-            None => TileJob::for_grid(&plan.grid, lists),
+        let rect_maps = plan.tile_rect_classes();
+        let jobs = match (&rect_maps, &classes) {
+            (Some(m), _) => TileJob::for_grid_rect_classed(&plan.grid, lists, m),
+            (None, Some(c)) => TileJob::for_grid_classed(&plan.grid, lists, c),
+            (None, None) => TileJob::for_grid(&plan.grid, lists),
         };
         ex.render_tiles(&jobs, &plan.splats, &mut img, plan.opts.background)?;
         let mut stats = plan.frame_stats();

@@ -492,13 +492,16 @@ impl RenderService {
             plans.iter().map(|p| p.gated_lists()).collect();
         let classes: Vec<Option<Vec<Precision>>> =
             plans.iter().map(|p| p.tile_classes()).collect();
+        let rect_maps: Vec<Option<Vec<crate::render::precision::TileClassMap>>> =
+            plans.iter().map(|p| p.tile_rect_classes()).collect();
         let mut sources: Vec<TileSource> = Vec::with_capacity(plans.len());
         let mut per_jobs: Vec<Vec<TileJob>> = Vec::with_capacity(plans.len());
         for (r, plan) in plans.iter().enumerate() {
             let lists = gated[r].as_ref().map(|(l, _)| l).unwrap_or(&plan.lists);
-            per_jobs.push(match &classes[r] {
-                Some(c) => TileJob::for_grid_classed(&plan.grid, lists, c),
-                None => TileJob::for_grid(&plan.grid, lists),
+            per_jobs.push(match (&rect_maps[r], &classes[r]) {
+                (Some(m), _) => TileJob::for_grid_rect_classed(&plan.grid, lists, m),
+                (None, Some(c)) => TileJob::for_grid_classed(&plan.grid, lists, c),
+                (None, None) => TileJob::for_grid(&plan.grid, lists),
             });
             sources.push(TileSource {
                 splats: &plan.splats,

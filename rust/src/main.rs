@@ -82,15 +82,18 @@ COMMON OPTIONS
                  view instead of cold-building — output is bit-identical)
   --plan-delta-angle  largest pose step in radians the delta path accepts
                  before falling back to a cold build  (default 0.35)
-  --precision    CTU precision: fp32|fp16|fp8|mixed|adaptive
+  --precision    CTU precision: fp32|fp16|fp8|mixed|adaptive|rect
                  (default mixed; case-insensitive). `adaptive` classes
                  each tile by its contribution bound — low-energy tiles
                  run the cheap mixed/fp8 datapath, leader tiles keep
-                 fp32. Deterministic for any worker count or batch
-                 width, but not bitwise-equal to a global mode.
-  --precision-thresholds  adaptive split points 'FP32MIN,FP16MIN[,FLOOR]'
+                 fp32. `rect` refines mid/high-energy tiles one level
+                 further, classing each 2×2 quadrant-rectangle from its
+                 own energy share. Both are deterministic for any worker
+                 count or batch width, but not bitwise-equal to a global
+                 mode.
+  --precision-thresholds  split points 'FP32MIN,FP16MIN[,FLOOR]'
                  (default 0.6,0.25 with floor mixed; requires
-                 --precision adaptive)
+                 --precision adaptive or rect)
 
 The pjrt backend requires a build with `--features pjrt` and AOT artifacts
 (`make artifacts`, or any directory written by
@@ -167,14 +170,15 @@ fn cmd_render(args: &Args) -> Result<()> {
                 .ok_or_else(|| err!("bad --cat-mode"))?;
             let spec = args.str_or("precision", "mixed");
             let policy = PrecisionPolicy::parse(&spec).ok_or_else(|| {
-                err!("unknown --precision '{spec}' (valid: fp32|fp16|fp8|mixed|adaptive)")
+                err!("unknown --precision '{spec}' (valid: fp32|fp16|fp8|mixed|adaptive|rect)")
             })?;
             let precision = match policy.mode {
                 PrecisionMode::Global(p) => p,
-                // Adaptive: the per-tile class (threaded through the
-                // session's RenderOptions) overrides this base engine
-                // precision at every tile; the floor is the inert default.
-                PrecisionMode::Adaptive { floor, .. } => floor,
+                // Adaptive/rect: the per-tile (or per-quadrant) class
+                // threaded through the session's RenderOptions overrides
+                // this base engine precision at every tile; the floor is
+                // the inert default.
+                PrecisionMode::Adaptive { floor, .. } | PrecisionMode::Rect { floor, .. } => floor,
             };
             let backend = GoldenCat(CatConfig {
                 mode,

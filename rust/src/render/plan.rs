@@ -28,7 +28,7 @@
 //! index whether tiles ran on one thread or many.
 
 use super::image::Image;
-use super::precision;
+use super::precision::{self, TileClassMap};
 use super::project::{project_scene, Splat, ALPHA_MIN};
 use super::pyramid::{GateConfig, TilePyramid};
 use super::raster::{
@@ -165,6 +165,69 @@ impl FramePlan {
         )
     }
 
+    /// Tile `t`'s quadrant class map under the rect precision policy, or
+    /// `None` for every other mode. Like [`FramePlan::tile_class`], a pure
+    /// function of the plan (depth-sorted list + quadrant rects): the map
+    /// is identical for any worker count, PJRT batch width, or
+    /// delta-advanced plan — the invariance `tests/properties.rs` pins.
+    pub fn tile_rect_class(&self, t: usize) -> Option<TileClassMap> {
+        if !self.opts.precision.is_rect() {
+            return None;
+        }
+        // The gate's pyramid cache carries the quadrant rects when it
+        // exists; rect classing must not depend on the gate switch, so
+        // build the (cheap) geometry on demand otherwise.
+        let energies = match self.pyramid(t) {
+            Some(pyr) => precision::quad_energies(&self.splats, &self.lists[t], pyr.quad_rects()),
+            None => {
+                let pyr = TilePyramid::new(&self.grid.rect(t), self.grid.tile);
+                precision::quad_energies(&self.splats, &self.lists[t], pyr.quad_rects())
+            }
+        };
+        self.opts.precision.classify_quads(&energies)
+    }
+
+    /// Per-tile quadrant class maps for the whole plan (row-major tile
+    /// order), or `None` unless the policy is `Rect`. The second-level
+    /// analog of [`FramePlan::tile_classes`]: the PJRT executor and the
+    /// workload extractor read this once and index it by tile.
+    pub fn tile_rect_classes(&self) -> Option<Vec<TileClassMap>> {
+        if !self.opts.precision.is_rect() {
+            return None;
+        }
+        Some(
+            (0..self.lists.len())
+                .map(|t| {
+                    self.tile_rect_class(t)
+                        .expect("rect policy classes every tile")
+                })
+                .collect(),
+        )
+    }
+
+    /// The class map the mask-provider selection keys on: adaptive tiles
+    /// are uniform maps at their tile class, rect tiles carry their
+    /// quadrant map, global policies have none. One helper so rendering
+    /// and scoring pick providers identically.
+    fn tile_map(&self, t: usize) -> Option<TileClassMap> {
+        if self.opts.precision.is_adaptive() {
+            self.tile_class(t).map(TileClassMap::Uniform)
+        } else {
+            self.tile_rect_class(t)
+        }
+    }
+
+    /// All tiles' provider-selection maps ([`FramePlan::tile_map`] for the
+    /// whole plan), or `None` under global policies.
+    fn tile_maps(&self) -> Option<Vec<TileClassMap>> {
+        if self.opts.precision.is_adaptive() {
+            self.tile_classes()
+                .map(|cs| cs.into_iter().map(TileClassMap::Uniform).collect())
+        } else {
+            self.tile_rect_classes()
+        }
+    }
+
     /// Frame-level stats skeleton: the per-tile loops only touch the pair
     /// and early-termination counters, so these totals are fixed at build
     /// time. Consumers that drain tiles themselves (PJRT, the view×tile
@@ -188,22 +251,23 @@ impl FramePlan {
     /// blending loop and folds score partials in ascending tile index.
     pub fn render(&self, source: &dyn MaskSource, mut scores: Option<&mut [f32]>) -> RenderOutput {
         let workers = pool::resolve_workers(self.opts.workers).min(self.lists.len().max(1));
-        // Adaptive precision needs a per-tile (per-class) mask provider, so
-        // it always takes the per-tile fan-out below — `map_indexed` runs
-        // it sequentially at one worker. Global policies keep the original
+        // Adaptive/rect precision needs a per-tile (per-class, or
+        // per-quadrant-stitched) mask provider, so classing policies always
+        // take the per-tile fan-out below — `map_indexed` runs it
+        // sequentially at one worker. Global policies keep the original
         // shared-provider path, bit for bit.
-        let classes = self.tile_classes();
-        if workers <= 1 && classes.is_none() {
+        let maps = self.tile_maps();
+        if workers <= 1 && maps.is_none() {
             let mut masks = source.tile_masks();
             return self.render_with(masks.as_mut(), scores.as_deref_mut());
         }
         let ts = self.grid.tile as usize;
         let want_scores = scores.is_some();
         let opts = &self.opts;
-        let classes = classes.as_deref();
+        let maps = maps.as_deref();
         let tiles: Vec<(Vec<f32>, Vec<f32>, RenderStats)> =
             pool::map_indexed(self.lists.len(), workers, |t| {
-                let run = self.run_tile(t, source, want_scores, classes.map(|c| c[t]));
+                let run = self.run_tile(t, source, want_scores, maps.map(|m| m[t]));
                 // Composite over background into a w×h tile pixel block.
                 let mut pixels = vec![0.0f32; run.w * run.h * 3];
                 for py in 0..run.h {
@@ -320,7 +384,7 @@ impl FramePlan {
     /// work queue: any worker can score any `(plan, tile)` pair, and the
     /// caller folds partials in a fixed order via [`FramePlan::fold_scores`].
     pub fn score_tile(&self, t: usize, source: &dyn MaskSource) -> (Vec<f32>, RenderStats) {
-        let run = self.run_tile(t, source, true, self.tile_class(t));
+        let run = self.run_tile(t, source, true, self.tile_map(t));
         (run.partial, run.stats)
     }
 
@@ -329,16 +393,23 @@ impl FramePlan {
     /// tile-local scratch, one [`render_tile`] call. Keeping a single
     /// entry keeps the rendering and scoring paths structurally identical
     /// — the bit-identity contract cannot drift between them.
+    ///
+    /// Provider selection honors the class map: uniform maps take the
+    /// exact single-class path (`tile_masks_at`), so a rect-mode tile
+    /// whose quadrants agree renders bit-identically to the per-tile
+    /// policy at that class; only genuinely mixed tiles pay for the
+    /// per-quadrant stitched provider.
     fn run_tile(
         &self,
         t: usize,
         source: &dyn MaskSource,
         want_scores: bool,
-        class: Option<Precision>,
+        map: Option<TileClassMap>,
     ) -> TileRun {
         let ts = self.grid.tile as usize;
-        let mut masks = match class {
-            Some(c) => source.tile_masks_at(c),
+        let mut masks = match map {
+            Some(TileClassMap::Uniform(c)) => source.tile_masks_at(c),
+            Some(TileClassMap::Mixed(quads)) => source.tile_masks_rect(self.grid.tile, quads),
             None => source.tile_masks(),
         };
         let mut trans = vec![1.0f32; ts * ts];

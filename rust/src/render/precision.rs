@@ -23,6 +23,17 @@
 //! default options are bitwise identical to a build without this module.
 //! `Adaptive` is deterministic but intentionally *not* bitwise-equal to
 //! any `Global` mode unless the thresholds force a single class.
+//!
+//! **Rect mode (paper: pixel-rectangle grouping).** [`PrecisionMode::Rect`]
+//! pushes the class decision one level below the tile: the energy fold runs
+//! once per tile but attributes every splat's absorbed term to the quadrant
+//! rect holding its peak ([`quad_energies`]), and mid-energy tiles carry a
+//! per-quadrant class map ([`TileClassMap`]) instead of one class. Low
+//! tiles floor as a whole and tiles whose quadrants agree collapse back to
+//! a single class, so uniform tiles render through the exact per-tile fast
+//! path. Quadrant classes never exceed the tile-level class (refinement
+//! only removes precision from quiet corners), which keeps the realized
+//! CTU mix priced at or below the per-tile adaptive run by construction.
 
 use super::project::{Splat, ALPHA_MIN};
 use super::tile::{min_quad_on_rect, Rect};
@@ -125,6 +136,75 @@ pub enum PrecisionMode {
         /// coordinates and collapses quality (Fig. 7).
         floor: Precision,
     },
+    /// Second-level classing at quadrant-rectangle granularity (the
+    /// paper's pixel-rectangle grouping): the tile-level ladder still runs
+    /// on the total absorbed energy, but mid/high-energy tiles refine each
+    /// 2×2 quadrant by its own attributed energy against the thresholds
+    /// scaled to quadrant area (`fp32_min/4`, `fp16_min/4`), capped at the
+    /// tile-level class. A tile with one bright splat keeps fp32 only in
+    /// the quadrant that absorbs it; its dark corners drop to fp16 or the
+    /// floor.
+    Rect {
+        /// The class-ladder split points (same vocabulary as `Adaptive`;
+        /// quadrants compare at a quarter of each threshold).
+        thresholds: PrecisionThresholds,
+        /// Class for tiles/quadrants below every threshold.
+        floor: Precision,
+    },
+}
+
+/// Per-tile outcome of rect-mode classing: either one class for the whole
+/// tile (the single-class fast path — low-energy tiles, saturated tiles,
+/// and any tile whose four quadrants agree) or a per-quadrant map in
+/// `render::pyramid` order ([TL, TR, BL, BR], bit `q = row·2 + col`).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TileClassMap {
+    /// All four quadrants share one class; renders through the exact
+    /// per-tile single-class path (bitwise, which the
+    /// `tests/precision_rect.rs` differential harness pins).
+    Uniform(Precision),
+    /// Genuinely mixed tile: one class per quadrant.
+    Mixed([Precision; 4]),
+}
+
+impl TileClassMap {
+    /// Collapse a quadrant array, detecting the uniform fast path.
+    pub fn from_quads(q: [Precision; 4]) -> TileClassMap {
+        if q[1] == q[0] && q[2] == q[0] && q[3] == q[0] {
+            TileClassMap::Uniform(q[0])
+        } else {
+            TileClassMap::Mixed(q)
+        }
+    }
+
+    /// The single class, if the map is uniform.
+    pub fn uniform(self) -> Option<Precision> {
+        match self {
+            TileClassMap::Uniform(c) => Some(c),
+            TileClassMap::Mixed(_) => None,
+        }
+    }
+
+    /// Class of quadrant `q` (pyramid order).
+    pub fn quad(self, q: usize) -> Precision {
+        match self {
+            TileClassMap::Uniform(c) => c,
+            TileClassMap::Mixed(m) => m[q],
+        }
+    }
+
+    /// The four quadrant classes (pyramid order).
+    pub fn quads(self) -> [Precision; 4] {
+        match self {
+            TileClassMap::Uniform(c) => [c; 4],
+            TileClassMap::Mixed(m) => m,
+        }
+    }
+
+    /// Does any quadrant run class `c`?
+    pub fn has(self, c: Precision) -> bool {
+        self.quads().contains(&c)
+    }
 }
 
 /// The precision policy carried by `render::raster::RenderOptions` and
@@ -162,16 +242,36 @@ impl PrecisionPolicy {
         }
     }
 
+    /// Rect policy (quadrant-rectangle classing) at the default thresholds
+    /// with the `Mixed` floor — the same ladder vocabulary as
+    /// [`PrecisionPolicy::adaptive`], refined one level down.
+    pub fn rect() -> Self {
+        PrecisionPolicy {
+            mode: PrecisionMode::Rect {
+                thresholds: PrecisionThresholds::default(),
+                floor: Precision::Mixed,
+            },
+        }
+    }
+
     /// Does this policy assign per-tile classes?
     pub fn is_adaptive(&self) -> bool {
         matches!(self.mode, PrecisionMode::Adaptive { .. })
     }
 
-    /// Parse a CLI/config policy name: `"adaptive"` (any case) or a
-    /// global class name accepted by [`Precision::parse`].
+    /// Does this policy assign per-quadrant class maps?
+    pub fn is_rect(&self) -> bool {
+        matches!(self.mode, PrecisionMode::Rect { .. })
+    }
+
+    /// Parse a CLI/config policy name: `"adaptive"` or `"rect"` (any
+    /// case) or a global class name accepted by [`Precision::parse`].
     pub fn parse(s: &str) -> Option<PrecisionPolicy> {
         if s.eq_ignore_ascii_case("adaptive") {
             return Some(PrecisionPolicy::adaptive());
+        }
+        if s.eq_ignore_ascii_case("rect") {
+            return Some(PrecisionPolicy::rect());
         }
         Precision::parse(s).map(PrecisionPolicy::global)
     }
@@ -180,6 +280,7 @@ impl PrecisionPolicy {
     pub fn name(&self) -> &'static str {
         match self.mode {
             PrecisionMode::Adaptive { .. } => "adaptive",
+            PrecisionMode::Rect { .. } => "rect",
             PrecisionMode::Global(Precision::Fp32) => "fp32",
             PrecisionMode::Global(Precision::Fp16) => "fp16",
             PrecisionMode::Global(Precision::Fp8) => "fp8",
@@ -190,19 +291,65 @@ impl PrecisionPolicy {
     /// Class a tile by its absorbed-energy bound. `None` under `Global` —
     /// the caller must fall through to its pre-policy path (that
     /// fall-through is what keeps `Global` bitwise-identical to builds
-    /// without the policy).
+    /// without the policy). Under `Rect` this is the tile-*level* class:
+    /// the cap no quadrant may exceed (used by list-level consumers that
+    /// need one class per tile, e.g. contribution scoring).
     pub fn classify(&self, energy: f32) -> Option<Precision> {
         match self.mode {
             PrecisionMode::Global(_) => None,
-            PrecisionMode::Adaptive { thresholds, floor } => Some(if energy >= thresholds.fp32_min
-            {
-                Precision::Fp32
-            } else if energy >= thresholds.fp16_min {
-                Precision::Fp16
-            } else {
-                floor
-            }),
+            PrecisionMode::Adaptive { thresholds, floor }
+            | PrecisionMode::Rect { thresholds, floor } => {
+                Some(level_class(ladder_level(energy, &thresholds), floor))
+            }
         }
+    }
+
+    /// Class one tile's quadrants from their attributed energies
+    /// ([`quad_energies`]). `None` unless the mode is `Rect`.
+    ///
+    /// The tile-level ladder runs on the fixed-order total
+    /// ([`quad_energy_total`]): tiles below `fp16_min` floor as a whole
+    /// (the low-energy fast path). Otherwise each quadrant is laddered at
+    /// a quarter of the thresholds — a quadrant holding a full
+    /// tile-quarter's worth of the split point earns the class — and
+    /// capped at the tile-level class, so refinement only moves precision
+    /// *down* relative to the per-tile adaptive policy. Saturated tiles
+    /// whose every quadrant clears the scaled fp32 bar collapse back to
+    /// `Uniform(Fp32)` (the high-energy fast path).
+    pub fn classify_quads(&self, quad_energies: &[f32; 4]) -> Option<TileClassMap> {
+        let PrecisionMode::Rect { thresholds, floor } = self.mode else {
+            return None;
+        };
+        let total = quad_energy_total(quad_energies);
+        let tile_level = ladder_level(total, &thresholds);
+        if tile_level == 0 {
+            return Some(TileClassMap::Uniform(floor));
+        }
+        let quads = std::array::from_fn(|q| {
+            let level = ladder_level(quad_energies[q] * 4.0, &thresholds).min(tile_level);
+            level_class(level, floor)
+        });
+        Some(TileClassMap::from_quads(quads))
+    }
+}
+
+/// The shared class ladder as a rung index: 2 = fp32, 1 = fp16, 0 = floor.
+fn ladder_level(energy: f32, t: &PrecisionThresholds) -> u8 {
+    if energy >= t.fp32_min {
+        2
+    } else if energy >= t.fp16_min {
+        1
+    } else {
+        0
+    }
+}
+
+/// Map a ladder rung back to its precision class.
+fn level_class(level: u8, floor: Precision) -> Precision {
+    match level {
+        2 => Precision::Fp32,
+        1 => Precision::Fp16,
+        _ => floor,
     }
 }
 
@@ -235,6 +382,62 @@ pub fn tile_energy(splats: &[Splat], list: &[u32], rect: &Rect) -> f32 {
         }
     }
     energy
+}
+
+/// Per-quadrant absorbed-energy bounds for rect-mode classing: the same
+/// single front-to-back fold as [`tile_energy`], but each surviving
+/// splat's whole `T·α` term is attributed to the **first quadrant (pyramid
+/// order) achieving the tile-minimum** of the quadratic form — the
+/// quadrant holding the splat's peak. Because the quadrants tile the rect
+/// exactly, the minimum over the four (non-degenerate) quadrant minima *is*
+/// the minimum over the tile, so the peak alphas, the skip decisions, and
+/// the transmittance sequence are those of a whole-tile fold.
+///
+/// **Exactness invariant** (pinned by `tests/properties.rs`): every term
+/// lands in exactly one accumulator, so the quadrant energies sum to the
+/// tile's total *in the same fold order* — [`quad_energy_total`] is the
+/// rect policy's tile energy, and it equals the sum of the four entries
+/// bitwise, by construction.
+///
+/// Degenerate quadrants of edge tiles (zero-area rects) are skipped in the
+/// min scan and stay at 0: the live quadrants still cover the whole tile.
+pub fn quad_energies(splats: &[Splat], list: &[u32], quads: &[Rect; 4]) -> [f32; 4] {
+    let mut trans = 1.0f32;
+    let mut energy = [0.0f32; 4];
+    for &si in list {
+        let s = &splats[si as usize];
+        let mut min_e = f32::INFINITY;
+        let mut at = 0usize;
+        for (q, rect) in quads.iter().enumerate() {
+            if rect.x1 <= rect.x0 || rect.y1 <= rect.y0 {
+                continue;
+            }
+            let e = min_quad_on_rect(s, rect);
+            if e < min_e {
+                min_e = e;
+                at = q;
+            }
+        }
+        let peak = (s.opacity * (-min_e).exp()).min(0.999);
+        if peak < ALPHA_MIN {
+            continue;
+        }
+        energy[at] += trans * peak;
+        trans *= 1.0 - peak;
+        if trans < 1e-4 {
+            break;
+        }
+    }
+    energy
+}
+
+/// The rect policy's tile energy: the four quadrant energies summed in
+/// fixed pyramid order. This is the quantity the tile-level ladder runs on
+/// in [`PrecisionPolicy::classify_quads`], and by construction it equals
+/// the sum of [`quad_energies`]'s entries bitwise — the "quadrant energies
+/// sum to the tile energy exactly" property.
+pub fn quad_energy_total(quads: &[f32; 4]) -> f32 {
+    ((quads[0] + quads[1]) + quads[2]) + quads[3]
 }
 
 #[cfg(test)]
@@ -313,10 +516,122 @@ mod tests {
 
     #[test]
     fn policy_names_roundtrip() {
-        for name in ["fp32", "fp16", "fp8", "mixed", "adaptive"] {
+        for name in ["fp32", "fp16", "fp8", "mixed", "adaptive", "rect"] {
             let p = PrecisionPolicy::parse(name).unwrap();
             assert_eq!(p.name(), name);
         }
+        assert!(PrecisionPolicy::parse("rect").unwrap().is_rect());
+        assert!(!PrecisionPolicy::parse("rect").unwrap().is_adaptive());
+        assert!(!PrecisionPolicy::parse("adaptive").unwrap().is_rect());
+    }
+
+    #[test]
+    fn rect_tile_ladder_matches_adaptive() {
+        // The tile-*level* class under rect is the same ladder adaptive
+        // runs — it is the cap quadrants may not exceed.
+        let rect = PrecisionPolicy::rect();
+        let adaptive = PrecisionPolicy::adaptive();
+        for e in [0.0f32, 0.1, 0.25, 0.4, 0.6, 0.95] {
+            assert_eq!(rect.classify(e), adaptive.classify(e), "e={e}");
+        }
+    }
+
+    #[test]
+    fn rect_low_band_floors_uniformly() {
+        let p = PrecisionPolicy::rect();
+        // Total below fp16_min: uniform floor even with one concentrated
+        // quadrant (a dark tile's bright corner still cannot matter).
+        assert_eq!(
+            p.classify_quads(&[0.2, 0.0, 0.0, 0.0]),
+            Some(TileClassMap::Uniform(Precision::Mixed))
+        );
+        // Global/adaptive policies never produce maps.
+        assert_eq!(PrecisionPolicy::default().classify_quads(&[0.9; 4]), None);
+        assert_eq!(PrecisionPolicy::adaptive().classify_quads(&[0.9; 4]), None);
+    }
+
+    #[test]
+    fn rect_refines_mid_and_high_tiles_per_quadrant() {
+        let p = PrecisionPolicy::rect();
+        // High tile (total 0.8 ≥ 0.60), one bright quadrant: fp32 stays
+        // only where the energy is; the dark corners drop.
+        let m = p.classify_quads(&[0.7, 0.08, 0.02, 0.0]).unwrap();
+        assert_eq!(
+            m,
+            TileClassMap::Mixed([
+                Precision::Fp32,  // 0.7·4 = 2.8 ≥ 0.60
+                Precision::Fp16,  // 0.08·4 = 0.32 ≥ 0.25
+                Precision::Mixed, // 0.02·4 = 0.08 < 0.25
+                Precision::Mixed,
+            ])
+        );
+        // Saturated everywhere: collapses to the uniform fp32 fast path.
+        assert_eq!(
+            p.classify_quads(&[0.24; 4]),
+            Some(TileClassMap::Uniform(Precision::Fp32))
+        );
+        // Mid tile (fp16 band): quadrants are capped at fp16 even when one
+        // concentrates enough energy to ladder fp32 on its own.
+        let m = p.classify_quads(&[0.4, 0.05, 0.0, 0.0]).unwrap();
+        assert_eq!(
+            m,
+            TileClassMap::Mixed([
+                Precision::Fp16, // capped by the tile-level fp16 band
+                Precision::Mixed,
+                Precision::Mixed,
+                Precision::Mixed,
+            ])
+        );
+    }
+
+    #[test]
+    fn class_map_accessors_roundtrip() {
+        let u = TileClassMap::from_quads([Precision::Fp16; 4]);
+        assert_eq!(u, TileClassMap::Uniform(Precision::Fp16));
+        assert_eq!(u.uniform(), Some(Precision::Fp16));
+        assert_eq!(u.quads(), [Precision::Fp16; 4]);
+        assert!(u.has(Precision::Fp16) && !u.has(Precision::Fp32));
+        let quads = [
+            Precision::Fp32,
+            Precision::Fp16,
+            Precision::Mixed,
+            Precision::Fp16,
+        ];
+        let m = TileClassMap::from_quads(quads);
+        assert_eq!(m, TileClassMap::Mixed(quads));
+        assert_eq!(m.uniform(), None);
+        for q in 0..4 {
+            assert_eq!(m.quad(q), quads[q]);
+        }
+        assert!(m.has(Precision::Fp32) && m.has(Precision::Mixed) && !m.has(Precision::Fp8));
+    }
+
+    #[test]
+    fn quad_energies_attribute_terms_to_the_peak_quadrant() {
+        use crate::render::pyramid::TilePyramid;
+        let r = rect();
+        let pyr = TilePyramid::new(&r, 16);
+        // A splat centered in the TL quadrant: its whole term lands there.
+        let s = vec![splat(4.0, 4.0, 0.7)];
+        let q = quad_energies(&s, &[0], pyr.quad_rects());
+        assert!((q[0] - 0.7).abs() < 1e-6, "q={q:?}");
+        assert_eq!(q[1], 0.0);
+        assert_eq!(q[2], 0.0);
+        assert_eq!(q[3], 0.0);
+        // The fixed-order total is the bitwise sum by construction, and it
+        // tracks the whole-tile fold closely (same peaks, same skips).
+        let total = quad_energy_total(&q);
+        assert_eq!(total, ((q[0] + q[1]) + q[2]) + q[3]);
+        let tile = tile_energy(&s, &[0], &r);
+        assert!((total - tile).abs() < 1e-6, "total={total} tile={tile}");
+        // Two splats in different quadrants: front-to-back transmittance is
+        // shared across quadrants — the BR term is scaled by TL's absorb.
+        let s2 = vec![splat(4.0, 4.0, 0.5), splat(12.0, 12.0, 0.5)];
+        let q2 = quad_energies(&s2, &[0, 1], pyr.quad_rects());
+        assert!((q2[0] - 0.5).abs() < 1e-6, "q2={q2:?}");
+        assert!((q2[3] - 0.25).abs() < 1e-6, "q2={q2:?}");
+        // Empty list: all zeros.
+        assert_eq!(quad_energies(&s2, &[], pyr.quad_rects()), [0.0; 4]);
     }
 
     #[test]

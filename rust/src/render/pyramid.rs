@@ -204,6 +204,47 @@ impl TilePyramid {
         }
         m
     }
+
+    /// The tile rect this pyramid was built for.
+    pub fn tile(&self) -> &Rect {
+        &self.tile
+    }
+
+    /// Quadrant rects in [TL, TR, BL, BR] order (bit `q = row·2 + col`).
+    /// The quadrants tile the rect exactly, so the minimum of the quadratic
+    /// form over the tile equals the minimum over the four quadrant minima
+    /// — the invariant the rect-precision energy fold relies on.
+    pub fn quad_rects(&self) -> &[Rect; 4] {
+        &self.quads
+    }
+
+    /// Mini-tile bits (bit = `row·mt_cols + col`) covered by quadrant `q`.
+    /// The four masks are pairwise disjoint and together cover every
+    /// mini-tile of the tile, so per-quadrant mask stitching touches each
+    /// pixel exactly once.
+    pub fn quad_minitile_mask(&self, q: usize) -> u32 {
+        self.quad_masks[q]
+    }
+
+    /// Bits of non-degenerate quadrants (small edge tiles can have dead
+    /// ones — their rects are empty and their mini-tile masks zero).
+    pub fn live(&self) -> u8 {
+        self.live
+    }
+}
+
+/// Quadrant index ([TL, TR, BL, BR], bit `q = row·2 + col`) of an absolute
+/// pixel inside `tile` — the pixel-space inverse of [`TilePyramid`]'s
+/// mini-tile split, used by the PJRT host compositor to stitch per-quadrant
+/// outputs. Splits at the same `half`-mini-tile boundary as
+/// `TilePyramid::new`, so a pixel's quadrant always agrees with the
+/// quadrant whose `quad_minitile_mask` covers its mini-tile.
+pub fn quad_of_pixel(tile: &Rect, tile_size: u32, px: u32, py: u32) -> usize {
+    let mt_cols = tile_size.div_ceil(MINITILE);
+    let half_px = (mt_cols.div_ceil(2) * MINITILE) as f32;
+    let row = (py as f32 - tile.y0 >= half_px) as usize;
+    let col = (px as f32 - tile.x0 >= half_px) as usize;
+    row * 2 + col
 }
 
 #[cfg(test)]
@@ -377,6 +418,23 @@ mod tests {
         assert!(!off.active());
         assert!(!GateConfig { levels: 0, ..GateConfig::on() }.active());
         assert!(GateConfig::on().active());
+    }
+
+    #[test]
+    fn quad_of_pixel_agrees_with_the_minitile_split() {
+        let t = tile();
+        let p = TilePyramid::new(&t, 16);
+        for py in 48..64u32 {
+            for px in 32..48u32 {
+                let q = quad_of_pixel(&t, 16, px, py);
+                let mt = ((py - 48) / MINITILE) * 4 + (px - 32) / MINITILE;
+                assert_ne!(
+                    p.quad_minitile_mask(q) & (1 << mt),
+                    0,
+                    "pixel ({px},{py}) mapped to quadrant {q} outside its mini-tile mask"
+                );
+            }
+        }
     }
 
     #[test]

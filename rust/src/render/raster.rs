@@ -30,7 +30,7 @@ use super::image::Image;
 use super::plan::FramePlan;
 use super::precision::PrecisionPolicy;
 use super::project::Splat;
-use super::pyramid::GateConfig;
+use super::pyramid::{GateConfig, TilePyramid};
 use super::tile::{Rect, Strategy};
 use crate::camera::Camera;
 use crate::cat::Precision;
@@ -228,6 +228,106 @@ pub trait MaskSource: Sync {
     fn tile_masks_at(&self, class: Precision) -> Box<dyn MaskProvider + '_> {
         let _ = class;
         self.tile_masks()
+    }
+
+    /// Hand out a provider for one *mixed-class* tile under the rect
+    /// precision policy: one [`MaskSource::tile_masks_at`] provider per
+    /// distinct quadrant class (so `cat::CatConfig` runs a `CatEngine` per
+    /// class — the engine's one-entry cache is precision-specific), with
+    /// each class's mask bits stitched back onto its own quadrants'
+    /// mini-tiles. The stitched bits cover each mini-tile exactly once
+    /// (the quadrant masks partition the tile), so a uniform class map
+    /// reproduces the single-provider mask bit-for-bit — which is why the
+    /// render paths only call this for genuinely mixed tiles.
+    fn tile_masks_rect(
+        &self,
+        tile_size: u32,
+        classes: [Precision; 4],
+    ) -> Box<dyn MaskProvider + '_> {
+        let mut providers: Vec<Box<dyn MaskProvider + '_>> = Vec::new();
+        let mut class_of: Vec<Precision> = Vec::new();
+        let mut by_quad = [0usize; 4];
+        for (q, &c) in classes.iter().enumerate() {
+            by_quad[q] = match class_of.iter().position(|&seen| seen == c) {
+                Some(i) => i,
+                None => {
+                    class_of.push(c);
+                    providers.push(self.tile_masks_at(c));
+                    class_of.len() - 1
+                }
+            };
+        }
+        Box::new(RectStitchMasks {
+            tile_size,
+            by_quad,
+            providers,
+            pyramid: None,
+        })
+    }
+}
+
+/// Per-quadrant mask stitching for mixed-class tiles (rect precision
+/// mode): each quadrant's class provider contributes only the mini-tile
+/// bits of its own quadrants. Built by [`MaskSource::tile_masks_rect`];
+/// like every provider it serves a single tile, so the quadrant geometry
+/// (a [`TilePyramid`]) is built lazily on first use and reused.
+struct RectStitchMasks<'a> {
+    tile_size: u32,
+    /// Quadrant → index into `providers` ([TL, TR, BL, BR] order).
+    by_quad: [usize; 4],
+    /// One provider per distinct class, in first-quadrant-seen order.
+    providers: Vec<Box<dyn MaskProvider + 'a>>,
+    pyramid: Option<TilePyramid>,
+}
+
+impl RectStitchMasks<'_> {
+    /// Quadrant mini-tile bits and per-provider quadrant ownership for
+    /// `tile`, (re)building the pyramid when the tile changes.
+    fn geometry(&mut self, tile: &Rect) -> ([u32; 4], [u8; 4]) {
+        if self.pyramid.as_ref().map(|p| p.tile() != tile).unwrap_or(true) {
+            self.pyramid = Some(TilePyramid::new(tile, self.tile_size));
+        }
+        let p = self.pyramid.as_ref().unwrap();
+        let bits = std::array::from_fn(|q| p.quad_minitile_mask(q));
+        let mut owned = [0u8; 4];
+        for q in 0..4 {
+            owned[self.by_quad[q]] |= 1 << q;
+        }
+        (bits, owned)
+    }
+
+    fn stitch(&mut self, tile: &Rect, splat: &Splat, quad_live: u8, gated: bool) -> u32 {
+        let (bits, owned) = self.geometry(tile);
+        let mut out = 0u32;
+        for (pi, provider) in self.providers.iter_mut().enumerate() {
+            let live = owned[pi] & quad_live;
+            if live == 0 {
+                continue;
+            }
+            let mut region = 0u32;
+            for q in 0..4 {
+                if live & (1 << q) != 0 {
+                    region |= bits[q];
+                }
+            }
+            let mask = if gated {
+                provider.mask_gated(tile, splat, live)
+            } else {
+                provider.mask(tile, splat)
+            };
+            out |= mask & region;
+        }
+        out
+    }
+}
+
+impl MaskProvider for RectStitchMasks<'_> {
+    fn mask(&mut self, tile: &Rect, splat: &Splat) -> u32 {
+        self.stitch(tile, splat, 0xF, false)
+    }
+
+    fn mask_gated(&mut self, tile: &Rect, splat: &Splat, quad_live: u8) -> u32 {
+        self.stitch(tile, splat, quad_live, true)
     }
 }
 

@@ -29,15 +29,18 @@ use crate::cat::leader::dense_layout;
 use crate::cat::Precision;
 use crate::err;
 use crate::render::image::Image;
-use crate::render::precision::{class_index, CLASSES};
+use crate::render::precision::{class_index, TileClassMap, CLASSES};
 use crate::render::project::Splat;
+use crate::render::pyramid::quad_of_pixel;
 use crate::render::tile::{Rect, TileGrid};
 use crate::util::error::Result;
 
 /// Per-tile PJRT render statistics.
 #[derive(Clone, Copy, Debug, Default)]
 pub struct ExecStats {
-    /// Tiles rendered.
+    /// Tile jobs rendered. A rect-mode mixed tile split across classes
+    /// (see [`TileJob::for_grid_rect_classed`]) counts once per class
+    /// wave it rode.
     pub tiles: usize,
     /// Tile-chunks submitted (a tile's splat list contributes
     /// `ceil(len / n_gauss)` chunks; empty lists contribute none). Counts
@@ -112,6 +115,13 @@ pub struct TileJob<'a> {
     /// global-precision renders). Waves never mix classes: the executor
     /// partitions jobs by class before forming dispatch groups.
     pub class: Option<Precision>,
+    /// Per-quadrant class map of a mixed-class (rect-mode) tile. A mixed
+    /// tile is split into one job per distinct class it contains — each
+    /// job runs the tile's full chunk sequence through its class's
+    /// precision-pure wave, and the host compositor stitches only the
+    /// pixels whose quadrant (`render::pyramid::quad_of_pixel`) carries
+    /// `class`. `None` for uniform tiles (the single-class fast path).
+    pub quads: Option<[Precision; 4]>,
 }
 
 impl<'a> TileJob<'a> {
@@ -127,6 +137,7 @@ impl<'a> TileJob<'a> {
                 rect: grid.rect(t),
                 order: list,
                 class: None,
+                quads: None,
             })
             .collect()
     }
@@ -148,8 +159,51 @@ impl<'a> TileJob<'a> {
                 rect: grid.rect(t),
                 order: list,
                 class: Some(class),
+                quads: None,
             })
             .collect()
+    }
+
+    /// [`TileJob::for_grid`] with per-tile **rect-mode** class maps
+    /// attached (`maps[t]` pairs with `lists[t]`, row-major tile order).
+    /// Uniform tiles emit exactly the job [`TileJob::for_grid_classed`]
+    /// would — so a rect plan whose maps all collapsed to `Uniform` forms
+    /// bit-identical waves to the per-tile classed queue. A mixed tile
+    /// emits one job per distinct class it contains, iterated in
+    /// [`CLASSES`] order for determinism, every job sharing the tile's
+    /// full depth order and carrying the quadrant map for output
+    /// stitching.
+    pub fn for_grid_rect_classed(
+        grid: &TileGrid,
+        lists: &'a [Vec<u32>],
+        maps: &[TileClassMap],
+    ) -> Vec<TileJob<'a>> {
+        assert_eq!(lists.len(), maps.len(), "one class map per tile list");
+        let mut jobs = Vec::new();
+        for (t, (list, &map)) in lists.iter().zip(maps).enumerate() {
+            match map {
+                TileClassMap::Uniform(class) => jobs.push(TileJob {
+                    rect: grid.rect(t),
+                    order: list,
+                    class: Some(class),
+                    quads: None,
+                }),
+                TileClassMap::Mixed(quads) => {
+                    for class in CLASSES {
+                        if !quads.contains(&class) {
+                            continue;
+                        }
+                        jobs.push(TileJob {
+                            rect: grid.rect(t),
+                            order: list,
+                            class: Some(class),
+                            quads: Some(quads),
+                        });
+                    }
+                }
+            }
+        }
+        jobs
     }
 }
 
@@ -253,6 +307,11 @@ impl<'rt> TileExecutor<'rt> {
 
     /// Write one tile's composited accumulators into the frame image,
     /// compositing the background under the residual transmittance.
+    ///
+    /// `stitch = Some((quads, class))` is the rect-mode path: only pixels
+    /// whose quadrant carries `class` are written, so the per-class jobs
+    /// of a mixed tile each own a disjoint pixel set and the stitched
+    /// tile is independent of the order their waves dispatched in.
     fn write_tile(
         &self,
         rect: &Rect,
@@ -260,6 +319,7 @@ impl<'rt> TileExecutor<'rt> {
         acc_t: &[f32],
         img: &mut Image,
         background: [f32; 3],
+        stitch: Option<([Precision; 4], Precision)>,
     ) {
         let t = self.rt.manifest.tile as u32;
         for py in 0..t {
@@ -268,6 +328,11 @@ impl<'rt> TileExecutor<'rt> {
                 let gy = rect.y0 as u32 + py;
                 if gx >= img.width || gy >= img.height {
                     continue;
+                }
+                if let Some((quads, class)) = stitch {
+                    if quads[quad_of_pixel(rect, t, gx, gy)] != class {
+                        continue;
+                    }
                 }
                 let p = (py * t + px) as usize;
                 let tr = acc_t[p];
@@ -394,7 +459,7 @@ impl<'rt> TileExecutor<'rt> {
             }
         }
 
-        self.write_tile(tile, &acc_rgb, &acc_t, img, background);
+        self.write_tile(tile, &acc_rgb, &acc_t, img, background, None);
         Ok(())
     }
 
@@ -701,12 +766,16 @@ impl<'rt> TileExecutor<'rt> {
         }
         for (k, st) in states.iter().enumerate() {
             let sj = &group[k];
+            let stitch = sj.job.quads.map(|quads| {
+                (quads, sj.job.class.expect("rect-stitched jobs are always classed"))
+            });
             self.write_tile(
                 &sj.job.rect,
                 &st.acc_rgb,
                 &st.acc_t,
                 &mut images[sj.source],
                 sources[sj.source].background,
+                stitch,
             );
         }
         Ok(())
@@ -947,6 +1016,78 @@ mod tests {
         assert_eq!(forced.data, plain.data);
         assert_eq!(exf.stats.batches, exp.stats.batches);
         assert_eq!(exf.stats.splats_submitted, exp.stats.splats_submitted);
+    }
+
+    #[test]
+    fn rect_split_jobs_stitch_per_quadrant_outputs() {
+        // A mixed-class tile splits into one job per distinct class; each
+        // quadrant's stitched pixels must equal a whole-tile render at
+        // that quadrant's class, and uniform maps must form the exact
+        // per-tile classed queue.
+        let dir = std::env::temp_dir().join("flicker_rectjob_stub_artifacts");
+        write_stub_artifacts(&dir, 64, 16, 16, 4).unwrap();
+        let rt = match Runtime::load(&dir) {
+            Ok(rt) => rt,
+            Err(e) => {
+                eprintln!("skipping: stub runtime unavailable ({e})");
+                return;
+            }
+        };
+        let (scene, cam) = test_scene();
+        let splats = project_scene(&scene, &cam);
+        let grid = TileGrid::new(32, 32, 16);
+        let mut lists = build_tile_lists(&splats, &grid, Strategy::Aabb);
+        for l in &mut lists {
+            sort_by_depth(l, &splats);
+        }
+        let quads = [Precision::Fp32, Precision::Fp16, Precision::Fp16, Precision::Mixed];
+        let maps: Vec<TileClassMap> = (0..4)
+            .map(|t| {
+                if t == 0 {
+                    TileClassMap::Mixed(quads)
+                } else {
+                    TileClassMap::Uniform(Precision::Fp16)
+                }
+            })
+            .collect();
+        let jobs = TileJob::for_grid_rect_classed(&grid, &lists, &maps);
+        // Tile 0 rides three class waves; tiles 1..3 one job each.
+        assert_eq!(jobs.len(), 6);
+        let bg = [0.05, 0.0, 0.0];
+        let mut img = Image::new(32, 32);
+        let mut ex = TileExecutor::new(&rt);
+        ex.render_tiles(&jobs, &splats, &mut img, bg).unwrap();
+        assert_eq!(ex.stats.tiles, 6, "rect splits count once per class wave");
+        let rect0 = grid.rect(0);
+        for class in [Precision::Fp32, Precision::Fp16, Precision::Mixed] {
+            let cjobs = TileJob::for_grid_classed(&grid, &lists, &[class; 4]);
+            let mut whole = Image::new(32, 32);
+            TileExecutor::new(&rt)
+                .render_tiles(&cjobs, &splats, &mut whole, bg)
+                .unwrap();
+            for py in 0..16u32 {
+                for px in 0..16u32 {
+                    let q = crate::render::pyramid::quad_of_pixel(&rect0, 16, px, py);
+                    if quads[q] == class {
+                        assert_eq!(
+                            img.get(px, py),
+                            whole.get(px, py),
+                            "pixel ({px},{py}) in quadrant {q} diverges from a \
+                             whole-tile {class:?} render"
+                        );
+                    }
+                }
+            }
+        }
+        // All-uniform maps are the per-tile classed queue, bit for bit.
+        let umaps = vec![TileClassMap::Uniform(Precision::Fp16); 4];
+        let ujobs = TileJob::for_grid_rect_classed(&grid, &lists, &umaps);
+        let mut uimg = Image::new(32, 32);
+        TileExecutor::new(&rt).render_tiles(&ujobs, &splats, &mut uimg, bg).unwrap();
+        let cjobs = TileJob::for_grid_classed(&grid, &lists, &[Precision::Fp16; 4]);
+        let mut cimg = Image::new(32, 32);
+        TileExecutor::new(&rt).render_tiles(&cjobs, &splats, &mut cimg, bg).unwrap();
+        assert_eq!(uimg.data, cimg.data, "uniform rect maps != per-tile classed queue");
     }
 
     #[test]

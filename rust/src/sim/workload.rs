@@ -11,7 +11,7 @@ use super::{HwConfig, SubtileTest};
 use crate::camera::Camera;
 use crate::cat::{CatConfig, CatEngine};
 use crate::render::plan::FramePlan;
-use crate::render::precision::class_index;
+use crate::render::precision::{class_index, TileClassMap};
 use crate::render::project::{Splat, ALPHA_MIN};
 use crate::render::pyramid::TilePyramid;
 use crate::render::raster::{RenderOptions, MINITILE};
@@ -206,7 +206,12 @@ pub fn extract_from_plan(scene: &Scene, plan: &FramePlan, hw: &HwConfig) -> Fram
     // engine's one-entry PreQuant cache is keyed on splat id only, so a
     // classed tile gets its own engine — reusing `cat` across precision
     // changes would serve operands quantized for the wrong scheme.
+    // Rect plans refine mid/high-energy tiles per quadrant: each sub-tile
+    // complex (sub-tile index == quadrant bit) runs its quadrant's class
+    // and its PRs land in that class's bucket — the quadrant-weighted CTU
+    // accounting the energy model prices.
     let classes = plan.tile_classes();
+    let rect_maps = plan.tile_rect_classes();
 
     wl.tiles.reserve(lists.len());
     // Per-mini-tile transmittance state, reset per tile.
@@ -224,7 +229,12 @@ pub fn extract_from_plan(scene: &Scene, plan: &FramePlan, hw: &HwConfig) -> Fram
         } else {
             None
         };
-        let class = classes.as_ref().map(|c| c[t]);
+        let map = rect_maps.as_ref().map(|m| m[t]);
+        let class = match map {
+            // Uniform rect tiles behave exactly like per-tile classed ones.
+            Some(m) => m.uniform(),
+            None => classes.as_ref().map(|c| c[t]),
+        };
         let mut tile_cat = class.map(|precision| {
             CatEngine::new(CatConfig {
                 mode: hw.cat_mode,
@@ -232,6 +242,18 @@ pub fn extract_from_plan(scene: &Scene, plan: &FramePlan, hw: &HwConfig) -> Fram
                 stage1: false,
             })
         });
+        // Mixed rect tiles: one engine per quadrant at its class (the
+        // PreQuant cache is precision-specific, so quadrants never share).
+        let mut quad_cat: Option<[CatEngine; 4]> = match map {
+            Some(TileClassMap::Mixed(quads)) => Some(std::array::from_fn(|q| {
+                CatEngine::new(CatConfig {
+                    mode: hw.cat_mode,
+                    precision: quads[q],
+                    stage1: false,
+                })
+            })),
+            _ => None,
+        };
         let class_bucket = class_index(class.unwrap_or(hw.cat_precision));
         let mut tile = TileWork::default();
         trans = [[1.0f32; 16]; 16];
@@ -273,7 +295,10 @@ pub fn extract_from_plan(scene: &Scene, plan: &FramePlan, hw: &HwConfig) -> Fram
                 wl.stage2_pairs += 1;
 
                 let (mask, ctu_cycles) = if hw.ctu {
-                    let eng = tile_cat.as_mut().unwrap_or(&mut cat);
+                    let eng = match &mut quad_cat {
+                        Some(qc) => &mut qc[sub_idx],
+                        None => tile_cat.as_mut().unwrap_or(&mut cat),
+                    };
                     let prs = eng.prs_for(s);
                     let m = eng.subtile_mask(sub, s);
                     if prs == 4 {
@@ -281,8 +306,12 @@ pub fn extract_from_plan(scene: &Scene, plan: &FramePlan, hw: &HwConfig) -> Fram
                     } else {
                         wl.sparse_jobs += 1;
                     }
+                    let bucket = match map {
+                        Some(m) => class_index(m.quad(sub_idx)),
+                        None => class_bucket,
+                    };
                     wl.ctu_prs += prs as u64;
-                    wl.ctu_prs_by_class[class_bucket] += prs as u64;
+                    wl.ctu_prs_by_class[bucket] += prs as u64;
                     (m, (prs as u8).div_ceil(2))
                 } else {
                     (0xF, 1)
@@ -504,6 +533,27 @@ mod tests {
             populated >= 2,
             "adaptive class mix degenerate: {:?}",
             adaptive.ctu_prs_by_class
+        );
+        // Rect: quadrant-weighted buckets still split the same total, and
+        // per-quadrant refinement only moves PRs below the tile class, so
+        // the fp32 bucket never grows past the adaptive run's.
+        let rect_plan = FramePlan::build(
+            &s,
+            &c,
+            &RenderOptions {
+                precision: PrecisionPolicy::rect(),
+                ..RenderOptions::default()
+            },
+        );
+        let rect = extract_from_plan(&s, &rect_plan, &hw);
+        assert_eq!(rect.ctu_prs_by_class.iter().sum::<u64>(), rect.ctu_prs);
+        assert_eq!(rect.ctu_prs, global.ctu_prs, "rect classing must not change PR counts");
+        let fp32 = class_index(crate::cat::Precision::Fp32);
+        assert!(
+            rect.ctu_prs_by_class[fp32] <= adaptive.ctu_prs_by_class[fp32],
+            "rect fp32 bucket {} exceeds adaptive {}",
+            rect.ctu_prs_by_class[fp32],
+            adaptive.ctu_prs_by_class[fp32]
         );
     }
 

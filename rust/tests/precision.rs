@@ -133,3 +133,84 @@ fn adaptive_orbits_hold_the_coverage_quality_energy_bargain() {
         );
     }
 }
+
+#[test]
+fn rect_orbits_refine_the_bargain_below_the_per_tile_run() {
+    // The rect mode's reason to exist: classing quadrant-rectangles
+    // inside mid/high-energy tiles converts more pixels to sub-fp32
+    // precision than per-tile classing can (≥ 55% of quadrants vs the
+    // ≥ 40% tile bar above), at the same PSNR floor, for strictly less
+    // CTU energy than the per-tile adaptive run.
+    let views = orbit(96, 3);
+    let fp32_opts = RenderOptions::default();
+    let adaptive_opts = RenderOptions {
+        precision: PrecisionPolicy::adaptive(),
+        ..RenderOptions::default()
+    };
+    let rect_opts = RenderOptions {
+        precision: PrecisionPolicy::rect(),
+        ..RenderOptions::default()
+    };
+    let hw_fp32 = HwConfig {
+        cat_precision: Precision::Fp32,
+        ..HwConfig::flicker32()
+    };
+    let energy = EnergyParams::default();
+
+    for scene_name in ["garden", "truck"] {
+        let scene = eval_scene(scene_name);
+        let mut quadrants = 0usize;
+        let mut below_fp32 = 0usize;
+        let mut ctu_rect_uj = 0.0f64;
+        let mut ctu_adaptive_uj = 0.0f64;
+
+        for (v, cam) in views.iter().enumerate() {
+            let fp32_plan = FramePlan::build(&scene, cam, &fp32_opts);
+            let adaptive_plan = FramePlan::build(&scene, cam, &adaptive_opts);
+            let rect_plan = FramePlan::build(&scene, cam, &rect_opts);
+            let maps = rect_plan
+                .tile_rect_classes()
+                .expect("rect plans class every tile");
+
+            // Coverage over populated tiles' quadrants only.
+            for (t, map) in maps.iter().enumerate() {
+                if rect_plan.lists[t].is_empty() {
+                    continue;
+                }
+                for q in 0..4 {
+                    quadrants += 1;
+                    if map.quad(q) != Precision::Fp32 {
+                        below_fp32 += 1;
+                    }
+                }
+            }
+
+            // Quality: rect CAT render vs the global-fp32 CAT render.
+            let reference = fp32_plan.render(&cat(Precision::Fp32), None);
+            let rect = rect_plan.render(&cat(Precision::Fp32), None);
+            let q = psnr(&reference.image, &rect.image);
+            assert!(
+                q >= 30.0,
+                "{scene_name} view {v}: rect PSNR {q} dB vs global fp32"
+            );
+
+            // Energy: the quadrant-weighted class mix must price strictly
+            // below the per-tile adaptive mix on the same workload.
+            let wl_rect = extract_from_plan(&scene, &rect_plan, &hw_fp32);
+            let wl_adaptive = extract_from_plan(&scene, &adaptive_plan, &hw_fp32);
+            ctu_rect_uj += frame_energy(&wl_rect, &hw_fp32, 0, 0, &energy).ctu_uj;
+            ctu_adaptive_uj += frame_energy(&wl_adaptive, &hw_fp32, 0, 0, &energy).ctu_uj;
+        }
+
+        let share = below_fp32 as f64 / quadrants.max(1) as f64;
+        assert!(
+            share >= 0.55,
+            "{scene_name}: only {share:.2} of {quadrants} quadrants classed below fp32"
+        );
+        assert!(
+            ctu_rect_uj < ctu_adaptive_uj,
+            "{scene_name}: rect CTU energy {ctu_rect_uj} µJ must beat \
+             per-tile adaptive {ctu_adaptive_uj} µJ"
+        );
+    }
+}

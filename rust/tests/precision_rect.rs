@@ -1,0 +1,332 @@
+//! Differential harness for rect-mode (quadrant-rectangle) precision
+//! classing: when the thresholds force every quadrant to a single class,
+//! the rect pipeline must collapse to the per-tile adaptive path **at that
+//! class, bitwise** — same class maps, same pixels, same stats — through
+//! the golden rasterizer, the CAT-masked rasterizer, and the batched PJRT
+//! executor, for every worker count and batch width, and across
+//! delta-advanced plans. Classing is a pure function of the plan; these
+//! tests are the contract that keeps the rect refinement inside the
+//! worker/batch/delta invariance envelope PR 8 established for tiles.
+
+use flicker::camera::{orbit_path, Camera, Intrinsics};
+use flicker::cat::{CatConfig, LeaderMode, Precision};
+use flicker::numeric::linalg::v3;
+use flicker::render::delta::DeltaConfig;
+use flicker::render::plan::FramePlan;
+use flicker::render::precision::{
+    PrecisionMode, PrecisionPolicy, PrecisionThresholds, TileClassMap,
+};
+use flicker::render::raster::{RenderOptions, VanillaMasks};
+use flicker::scene::synthetic::{generate_scaled, preset};
+
+fn orbit(res: u32, frames: usize) -> Vec<Camera> {
+    orbit_path(
+        Intrinsics::from_fov(res, res, 1.2),
+        v3(0.0, 0.5, 0.0),
+        12.0,
+        3.0,
+        frames,
+    )
+}
+
+fn rect_policy(thresholds: PrecisionThresholds, floor: Precision) -> PrecisionPolicy {
+    PrecisionPolicy {
+        mode: PrecisionMode::Rect { thresholds, floor },
+    }
+}
+
+fn tile_policy(thresholds: PrecisionThresholds, floor: Precision) -> PrecisionPolicy {
+    PrecisionPolicy {
+        mode: PrecisionMode::Adaptive { thresholds, floor },
+    }
+}
+
+fn cat() -> CatConfig {
+    CatConfig {
+        mode: LeaderMode::SmoothFocused,
+        precision: Precision::Mixed,
+        stage1: true,
+    }
+}
+
+/// Threshold settings that force every tile — and therefore every quadrant
+/// (the quadrant ladder caps at the tile level) — to one class:
+/// `(thresholds, floor, the forced class)`.
+fn forced_cases() -> [(PrecisionThresholds, Precision, Precision); 3] {
+    [
+        // Everything clears a zero fp32 bar.
+        (
+            PrecisionThresholds { fp32_min: 0.0, fp16_min: 0.0 },
+            Precision::Mixed,
+            Precision::Fp32,
+        ),
+        // Nothing reaches 9.0, everything clears the zero fp16 bar.
+        (
+            PrecisionThresholds { fp32_min: 9.0, fp16_min: 0.0 },
+            Precision::Mixed,
+            Precision::Fp16,
+        ),
+        // Nothing clears either bar: everything floors.
+        (
+            PrecisionThresholds { fp32_min: 9.0, fp16_min: 9.0 },
+            Precision::Fp8,
+            Precision::Fp8,
+        ),
+    ]
+}
+
+/// Every rect map must have collapsed to `Uniform(expect)`.
+fn assert_maps_forced(plan: &FramePlan, expect: Precision, ctx: &str) {
+    let maps = plan.tile_rect_classes().expect("rect plans class every tile");
+    for (t, m) in maps.iter().enumerate() {
+        assert_eq!(
+            *m,
+            TileClassMap::Uniform(expect),
+            "{ctx}: tile {t} did not collapse to the forced class"
+        );
+    }
+}
+
+#[test]
+fn forced_rect_matches_per_tile_class_for_golden_paths() {
+    let scene = generate_scaled(&preset("truck"), 0.01);
+    let cams = orbit(64, 2);
+    for (thresholds, floor, expect) in forced_cases() {
+        for workers in [1usize, 2, 8, 0] {
+            let rect_opts = RenderOptions {
+                precision: rect_policy(thresholds, floor),
+                workers,
+                ..RenderOptions::default()
+            };
+            let tile_opts = RenderOptions {
+                precision: tile_policy(thresholds, floor),
+                workers,
+                ..RenderOptions::default()
+            };
+            for (v, cam) in cams.iter().enumerate() {
+                let ctx = format!("class {expect:?} workers {workers} view {v}");
+                let rp = FramePlan::build(&scene, cam, &rect_opts);
+                let tp = FramePlan::build(&scene, cam, &tile_opts);
+                assert_maps_forced(&rp, expect, &ctx);
+                // The per-tile plan classes every tile at the same class.
+                for (t, c) in tp.tile_classes().unwrap().iter().enumerate() {
+                    assert_eq!(*c, expect, "{ctx}: adaptive tile {t}");
+                }
+                // Golden: class-blind masks — bitwise regardless of class.
+                let (rv, tv) = (rp.render(&VanillaMasks, None), tp.render(&VanillaMasks, None));
+                assert_eq!(rv.image.data, tv.image.data, "{ctx}: vanilla pixels");
+                assert_eq!(
+                    format!("{:?}", rv.stats),
+                    format!("{:?}", tv.stats),
+                    "{ctx}: vanilla stats"
+                );
+                // GoldenCat: the engine runs at the forced class in both.
+                let c = cat();
+                let (rc, tc) = (rp.render(&c, None), tp.render(&c, None));
+                assert_eq!(rc.image.data, tc.image.data, "{ctx}: CAT pixels");
+                assert_eq!(
+                    format!("{:?}", rc.stats),
+                    format!("{:?}", tc.stats),
+                    "{ctx}: CAT stats"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn forced_rect_survives_delta_advanced_plans() {
+    // `--plan-delta on`: an advance-chained rect plan must carry the same
+    // forced maps and render bitwise like the cold per-tile build.
+    let scene = generate_scaled(&preset("garden"), 0.01);
+    let cams = orbit(64, 12);
+    for (thresholds, floor, expect) in forced_cases() {
+        let rect_opts = RenderOptions {
+            precision: rect_policy(thresholds, floor),
+            plan_delta: DeltaConfig::on(),
+            ..RenderOptions::default()
+        };
+        let tile_opts = RenderOptions {
+            precision: tile_policy(thresholds, floor),
+            ..RenderOptions::default()
+        };
+        let mut plan = FramePlan::build(&scene, &cams[0], &rect_opts);
+        for step in 1..4usize {
+            let out = plan.advance_detailed(&scene, &cams[step], &rect_opts);
+            assert!(!out.stats.fell_back, "class {expect:?} step {step}: fallback");
+            let ctx = format!("class {expect:?} delta step {step}");
+            assert_maps_forced(&out.plan, expect, &ctx);
+            let cold_rect = FramePlan::build(&scene, &cams[step], &rect_opts);
+            assert_eq!(
+                out.plan.tile_rect_classes(),
+                cold_rect.tile_rect_classes(),
+                "{ctx}: advanced maps != cold maps"
+            );
+            let cold_tile = FramePlan::build(&scene, &cams[step], &tile_opts);
+            let c = cat();
+            let (a, b) = (out.plan.render(&c, None), cold_tile.render(&c, None));
+            assert_eq!(a.image.data, b.image.data, "{ctx}: CAT pixels");
+            plan = out.plan;
+        }
+    }
+}
+
+#[test]
+fn rect_maps_are_a_pure_function_of_the_view() {
+    // At the real default thresholds (genuinely mixed maps), the class map
+    // must not depend on worker count, and rendering must be bit-identical
+    // across the worker matrix — classing happens strictly before fan-out.
+    let scene = generate_scaled(&preset("truck"), 0.01);
+    let cam = &orbit(96, 2)[0];
+    let opts = |workers: usize| RenderOptions {
+        precision: PrecisionPolicy::rect(),
+        workers,
+        ..RenderOptions::default()
+    };
+    let reference = FramePlan::build(&scene, cam, &opts(1));
+    let ref_maps = reference.tile_rect_classes().unwrap();
+    let mixed = ref_maps
+        .iter()
+        .filter(|m| matches!(m, TileClassMap::Mixed(_)))
+        .count();
+    assert!(mixed > 0, "default thresholds must produce some mixed tiles");
+    let c = cat();
+    let ref_out = reference.render(&c, None);
+    for workers in [2usize, 8, 0] {
+        let plan = FramePlan::build(&scene, cam, &opts(workers));
+        assert_eq!(plan.tile_rect_classes().unwrap(), ref_maps, "workers {workers}");
+        let out = plan.render(&c, None);
+        assert_eq!(out.image.data, ref_out.image.data, "workers {workers}: pixels");
+        assert_eq!(
+            format!("{:?}", out.stats),
+            format!("{:?}", ref_out.stats),
+            "workers {workers}: stats"
+        );
+    }
+}
+
+/// The PJRT half of the contract, against the offline stub runtime (skips
+/// on real-XLA builds that cannot parse the placeholder artifacts).
+#[cfg(feature = "pjrt")]
+mod pjrt_rect {
+    use super::*;
+    use flicker::coordinator::{Pjrt, RenderBackend};
+    use flicker::render::image::Image;
+    use flicker::render::project::project_scene;
+    use flicker::render::sort::sort_by_depth;
+    use flicker::render::tile::{build_tile_lists, Strategy, TileGrid};
+    use flicker::runtime::executor::{TileExecutor, TileJob};
+    use flicker::runtime::{write_stub_artifacts, Runtime};
+    use flicker::scene::gaussian::Scene;
+
+    fn stub_runtime(tag: &str, n_gauss: usize, n_batch: usize) -> Option<Runtime> {
+        let dir = std::env::temp_dir().join(format!("flicker_precision_rect_stub_{tag}"));
+        write_stub_artifacts(&dir, n_gauss, 16, 16, n_batch).unwrap();
+        match Runtime::load(&dir) {
+            Ok(rt) => Some(rt),
+            Err(e) => {
+                eprintln!("skipping: stub runtime unavailable ({e})");
+                None
+            }
+        }
+    }
+
+    #[test]
+    fn forced_rect_matches_per_tile_class_through_batched_waves() {
+        let Some(rt) = stub_runtime("forced", 64, 8) else { return };
+        let pjrt = Pjrt::new(&rt);
+        let scene = generate_scaled(&preset("truck"), 0.01);
+        let cam = &orbit(64, 2)[0];
+        for (thresholds, floor, expect) in forced_cases() {
+            for batch in [1usize, 2, 8] {
+                let rect_opts = RenderOptions {
+                    precision: rect_policy(thresholds, floor),
+                    batch,
+                    ..RenderOptions::default()
+                };
+                let tile_opts = RenderOptions {
+                    precision: tile_policy(thresholds, floor),
+                    batch,
+                    ..RenderOptions::default()
+                };
+                let ctx = format!("class {expect:?} batch {batch}");
+                let rp = FramePlan::build(&scene, cam, &rect_opts);
+                assert_maps_forced(&rp, expect, &ctx);
+                let tp = FramePlan::build(&scene, cam, &tile_opts);
+                let a = pjrt.render_plan(&rp).unwrap();
+                let b = pjrt.render_plan(&tp).unwrap();
+                assert_eq!(a.image.data, b.image.data, "{ctx}: pjrt pixels");
+            }
+        }
+    }
+
+    /// The latent seam bug class: a Gaussian straddling two rects of
+    /// different class must blend identically whether its chunks are
+    /// dispatched through the fp32 wave first or the fp16 wave first.
+    /// Each class's wave runs the tile's full chunk sequence against its
+    /// own accumulator and the compositor stitches disjoint quadrant
+    /// pixels, so wave order must be unobservable.
+    #[test]
+    fn quadrant_seam_blend_is_wave_order_independent() {
+        use flicker::numeric::linalg::Quat;
+        // n_gauss 2 < the 3-splat list: each wave re-walks the full
+        // multi-chunk sequence with its own transmittance carry.
+        let Some(rt) = stub_runtime("seam", 2, 8) else { return };
+        let cam = Camera::look_at(
+            Intrinsics::from_fov(32, 32, 1.2),
+            v3(0.0, 0.0, -6.0),
+            v3(0.0, 0.0, 0.0),
+            v3(0.0, 1.0, 0.0),
+        );
+        // A wide splat centered at the image midpoint: it straddles every
+        // tile's quadrant seams; two dimmer ones force multi-splat chunks.
+        let mut scene = Scene::with_capacity(3, "seam");
+        let sh0 = [[0.0; 3]; 3];
+        scene.push(v3(0.0, 0.0, 0.0), Quat::IDENTITY, v3(0.7, 0.7, 0.7), 0.9, [1.5, 0.2, 0.1], sh0);
+        scene.push(v3(0.3, 0.1, 1.0), Quat::IDENTITY, v3(0.4, 0.4, 0.4), 0.6, [0.1, 1.4, 0.2], sh0);
+        scene.push(v3(-0.3, -0.1, 2.0), Quat::IDENTITY, v3(0.5, 0.5, 0.5), 0.5, [0.1, 0.2, 1.4], sh0);
+        let splats = project_scene(&scene, &cam);
+        let grid = TileGrid::new(32, 32, 16);
+        let mut lists = build_tile_lists(&splats, &grid, Strategy::Aabb);
+        for l in &mut lists {
+            sort_by_depth(l, &splats);
+        }
+        assert!(!lists[0].is_empty(), "seam splat must bin into tile 0");
+        // Tile 0: fp32 TL, fp16 elsewhere — the seam splits the splat.
+        let quads = [Precision::Fp32, Precision::Fp16, Precision::Fp16, Precision::Fp16];
+        let job_at = |class: Precision| TileJob {
+            rect: grid.rect(0),
+            order: &lists[0],
+            class: Some(class),
+            quads: Some(quads),
+        };
+        let bg = [0.02, 0.02, 0.02];
+        let mut fp32_first = Image::new(32, 32);
+        let mut ex1 = TileExecutor::new(&rt);
+        ex1.render_tiles(&[job_at(Precision::Fp32)], &splats, &mut fp32_first, bg).unwrap();
+        ex1.render_tiles(&[job_at(Precision::Fp16)], &splats, &mut fp32_first, bg).unwrap();
+        let mut fp16_first = Image::new(32, 32);
+        let mut ex2 = TileExecutor::new(&rt);
+        ex2.render_tiles(&[job_at(Precision::Fp16)], &splats, &mut fp16_first, bg).unwrap();
+        ex2.render_tiles(&[job_at(Precision::Fp32)], &splats, &mut fp16_first, bg).unwrap();
+        assert_eq!(
+            fp32_first.data, fp16_first.data,
+            "stitched tile depends on wave dispatch order"
+        );
+        // The straddling splat really lands on both sides of the seam.
+        let lit = |img: &Image, x: u32, y: u32| img.get(x, y) != [bg[0], bg[1], bg[2]];
+        assert!(lit(&fp32_first, 7, 7), "TL side of the seam is dark");
+        assert!(lit(&fp32_first, 8, 7), "TR side of the seam is dark");
+        // And the one-queue path (CLASSES-ordered waves) agrees with both.
+        let mut one_call = Image::new(32, 32);
+        let mut ex3 = TileExecutor::new(&rt);
+        ex3.render_tiles(
+            &[job_at(Precision::Fp32), job_at(Precision::Fp16)],
+            &splats,
+            &mut one_call,
+            bg,
+        )
+        .unwrap();
+        assert_eq!(one_call.data, fp32_first.data, "one-queue render diverges");
+    }
+}

@@ -783,3 +783,251 @@ fn prop_gate_rejection_is_conservative() {
         },
     );
 }
+
+#[test]
+fn prop_quad_energies_partition_the_tile_fold() {
+    // Rect-mode classing splits the plan-time Σ T·α fold across the 2×2
+    // quadrants. The split must be an exact partition of the per-tile
+    // fold: same peak per splat (the minimum over live quadrant minima IS
+    // the whole-rect minimum, bitwise), hence the same skip decisions and
+    // the same transmittance chain, with every term landing in exactly
+    // one accumulator.
+    use flicker::render::precision::{quad_energies, quad_energy_total, tile_energy};
+    use flicker::render::project::Splat;
+    use flicker::render::pyramid::TilePyramid;
+    check(
+        "quadrant energies are an exact partition of the tile fold",
+        PropConfig::default(),
+        |rng, size| {
+            let tx = rng.range_u32(0, 3) as f32;
+            let ty = rng.range_u32(0, 3) as f32;
+            let rect = Rect {
+                x0: tx * 16.0,
+                y0: ty * 16.0,
+                x1: tx * 16.0 + *rng.pick(&[16.0f32, 16.0, 11.0, 6.0]),
+                y1: ty * 16.0 + *rng.pick(&[16.0f32, 16.0, 9.0, 5.0]),
+            };
+            let n = 1 + (size * 24.0) as usize;
+            let splats: Vec<Splat> = (0..n)
+                .map(|i| Splat {
+                    id: i as u32,
+                    mean: v2(rng.range_f32(-8.0, 72.0), rng.range_f32(-8.0, 72.0)),
+                    cov: Sym2 { a: 1.0, b: 0.0, c: 1.0 },
+                    conic: random_conic(rng),
+                    depth: rng.range_f32(0.1, 50.0),
+                    opacity: rng.range_f32(0.0, 1.0),
+                    color: [1.0; 3],
+                    radius: 8.0,
+                    axis_ratio: 1.0,
+                })
+                .collect();
+            let list: Vec<u32> = (0..n as u32).collect();
+            (rect, splats, list)
+        },
+        |(rect, splats, list)| {
+            let pyr = TilePyramid::new(rect, 16);
+            let qe = quad_energies(splats, list, pyr.quad_rects());
+
+            // Same terms: the peak each splat is scored at in the quadrant
+            // fold is the whole-rect peak, bit for bit. This is what makes
+            // the quadrant fold "the tile fold, partitioned" rather than a
+            // different estimate.
+            for &si in list.iter() {
+                let s = &splats[si as usize];
+                let quad_min = pyr
+                    .quad_rects()
+                    .iter()
+                    .filter(|r| r.x1 > r.x0 && r.y1 > r.y0)
+                    .map(|r| min_quad_on_rect(s, r))
+                    .fold(f32::INFINITY, f32::min);
+                let tile_min = min_quad_on_rect(s, rect);
+                ensure(
+                    quad_min.to_bits() == tile_min.to_bits(),
+                    format!("splat {si}: quadrant min {quad_min} != tile min {tile_min}"),
+                )?;
+            }
+
+            // Energy lands only in live quadrants.
+            for q in 0..4 {
+                if pyr.live() & (1 << q) == 0 {
+                    ensure(qe[q] == 0.0, format!("dead quadrant {q} absorbed {}", qe[q]))?;
+                }
+            }
+
+            // The fixed-order sum is the rect policy's tile energy; it can
+            // differ from `tile_energy` only by float re-association of the
+            // identical term sequence.
+            let total = quad_energy_total(&qe);
+            let te = tile_energy(splats, list, rect);
+            ensure(
+                (total - te).abs() <= 1e-5 * (1.0 + te.abs()),
+                format!("quadrant total {total} drifted from tile energy {te}"),
+            )?;
+            // With at most one active accumulator there is nothing to
+            // re-associate: the totals agree bitwise.
+            if qe.iter().filter(|e| **e != 0.0).count() <= 1 {
+                ensure(
+                    total.to_bits() == te.to_bits(),
+                    format!("single-quadrant total {total} != tile energy {te} bitwise"),
+                )?;
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_rect_class_maps_are_a_pure_function_of_the_plan() {
+    // The determinism contract behind `--precision rect`: the class map
+    // depends only on (scene, camera, thresholds) — never on the worker
+    // count or PJRT batch width — and delta-advanced plans carry the same
+    // maps as cold builds of the same pose.
+    use flicker::cat::Precision;
+    use flicker::render::precision::{PrecisionMode, PrecisionPolicy, PrecisionThresholds};
+    let scene = generate_scaled(&preset("truck"), 0.005);
+    check(
+        "rect class maps ignore workers/batch and survive deltas",
+        PropConfig::default(),
+        |rng, _| {
+            let fp16_min = rng.range_f32(0.0, 0.5);
+            let fp32_min = fp16_min + rng.range_f32(0.0, 0.5);
+            let angle = rng.range_f32(0.0, std::f32::consts::TAU);
+            let step = rng.range_f32(0.0, 0.015);
+            let workers = *rng.pick(&[1usize, 2, 8, 0]);
+            let batch = *rng.pick(&[1usize, 2, 8]);
+            let floor = *rng.pick(&[Precision::Mixed, Precision::Fp8, Precision::Fp16]);
+            (fp32_min, fp16_min, angle, step, workers, batch, floor)
+        },
+        |&(fp32_min, fp16_min, angle, step, workers, batch, floor)| {
+            let cam_at = |a: f32| {
+                Camera::look_at(
+                    Intrinsics::from_fov(64, 64, 1.2),
+                    v3(12.0 * a.cos(), 3.0, 12.0 * a.sin()),
+                    v3(0.0, 0.5, 0.0),
+                    v3(0.0, 1.0, 0.0),
+                )
+            };
+            let base = RenderOptions {
+                precision: PrecisionPolicy {
+                    mode: PrecisionMode::Rect {
+                        thresholds: PrecisionThresholds { fp32_min, fp16_min },
+                        floor,
+                    },
+                },
+                plan_delta: DeltaConfig::on(),
+                ..RenderOptions::default()
+            };
+            let cam = cam_at(angle);
+            let reference = FramePlan::build(&scene, &cam, &base);
+            let ref_maps = reference
+                .tile_rect_classes()
+                .ok_or("rect plan did not class its tiles")?;
+            let alt = RenderOptions { workers, batch, ..base };
+            let varied = FramePlan::build(&scene, &cam, &alt);
+            ensure(
+                varied.tile_rect_classes().as_deref() == Some(&ref_maps[..]),
+                format!("workers {workers} / batch {batch} changed the class map"),
+            )?;
+            let out = reference.advance_detailed(&scene, &cam_at(angle + step), &base);
+            let cold = FramePlan::build(&scene, &cam_at(angle + step), &base);
+            ensure(
+                out.plan.tile_rect_classes() == cold.tile_rect_classes(),
+                format!("delta-advanced maps diverged (step {step}, fallback {})",
+                    out.stats.fell_back),
+            )?;
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn prop_quadrant_stitching_claims_each_pixel_exactly_once() {
+    // The stitching contract shared by the CAT mask path and the PJRT
+    // host compositor: the four quadrant mini-tile masks partition the
+    // tile, `quad_of_pixel` sends every pixel to the quadrant owning its
+    // mini-tile, and a stitched rect-mask provider reproduces, inside each
+    // quadrant, exactly the dedicated single-class engine's bits.
+    use flicker::cat::{CatConfig, LeaderMode, Precision};
+    use flicker::render::project::Splat;
+    use flicker::render::pyramid::{quad_of_pixel, TilePyramid};
+    use flicker::render::raster::{MaskSource, MINITILE};
+    check(
+        "quadrant masks partition; stitched masks claim pixels once",
+        PropConfig::default(),
+        |rng, _| {
+            let tx = rng.range_u32(0, 3) as f32;
+            let ty = rng.range_u32(0, 3) as f32;
+            let rect = Rect {
+                x0: tx * 16.0,
+                y0: ty * 16.0,
+                x1: tx * 16.0 + *rng.pick(&[16.0f32, 16.0, 11.0, 6.0]),
+                y1: ty * 16.0 + *rng.pick(&[16.0f32, 16.0, 9.0, 5.0]),
+            };
+            let splat = Splat {
+                id: 0,
+                mean: v2(rng.range_f32(-8.0, 72.0), rng.range_f32(-8.0, 72.0)),
+                cov: Sym2 { a: 1.0, b: 0.0, c: 1.0 },
+                conic: random_conic(rng),
+                depth: 1.0,
+                opacity: rng.range_f32(0.05, 1.0),
+                color: [1.0; 3],
+                radius: 8.0,
+                axis_ratio: 1.0,
+            };
+            let all = [Precision::Fp32, Precision::Fp16, Precision::Mixed, Precision::Fp8];
+            let classes: [Precision; 4] = std::array::from_fn(|_| *rng.pick(&all));
+            (rect, splat, classes)
+        },
+        |&(rect, splat, classes)| {
+            let pyr = TilePyramid::new(&rect, 16);
+            // (1) The quadrant mini-tile masks are pairwise disjoint...
+            let mut union = 0u32;
+            for q in 0..4 {
+                let m = pyr.quad_minitile_mask(q);
+                ensure(union & m == 0, format!("quadrant {q} overlaps an earlier one"))?;
+                union |= m;
+            }
+            // ...and cover every pixel of the rect through the quadrant
+            // `quad_of_pixel` routes it to.
+            let mt_cols = 16u32.div_ceil(MINITILE);
+            for py in rect.y0 as u32..rect.y1 as u32 {
+                for px in rect.x0 as u32..rect.x1 as u32 {
+                    let row = (py - rect.y0 as u32) / MINITILE;
+                    let col = (px - rect.x0 as u32) / MINITILE;
+                    let bit = 1u32 << (row * mt_cols + col);
+                    ensure(union & bit != 0, format!("({px},{py}): mini-tile unowned"))?;
+                    let q = quad_of_pixel(&rect, 16, px, py);
+                    ensure(
+                        pyr.quad_minitile_mask(q) & bit != 0,
+                        format!("({px},{py}): routed to quadrant {q}, owned elsewhere"),
+                    )?;
+                }
+            }
+            // (2) Stitched masks: inside each quadrant the stitched
+            // provider's bits equal the dedicated engine at that
+            // quadrant's class — so each pixel is decided by exactly one
+            // class engine.
+            let cfg = CatConfig {
+                mode: LeaderMode::SmoothFocused,
+                precision: Precision::Mixed,
+                stage1: true,
+            };
+            let stitched = cfg.tile_masks_rect(16, classes).mask(&rect, &splat);
+            ensure(stitched & !union == 0, "stitched mask claims unowned mini-tiles")?;
+            for q in 0..4 {
+                let own = pyr.quad_minitile_mask(q);
+                let dedicated = cfg.tile_masks_at(classes[q]).mask(&rect, &splat);
+                ensure(
+                    stitched & own == dedicated & own,
+                    format!(
+                        "quadrant {q} ({:?}): stitched {:#x} != dedicated {:#x} in {own:#x}",
+                        classes[q],
+                        stitched & own,
+                        dedicated & own
+                    ),
+                )?;
+            }
+            Ok(())
+        },
+    );
+}

@@ -1,5 +1,5 @@
 #!/usr/bin/env python3
-"""Merge bench JSON sidecars into one commit-stamped BENCH_9.json.
+"""Merge bench JSON sidecars into one commit-stamped BENCH_10.json.
 
 The bench-record CI lane (push-to-main only) runs the hotpath,
 fig11_gating, fig12_temporal, fig13_precision, and fig14_service benches
@@ -10,9 +10,11 @@ single-vs-batched dispatch, the coarse-to-fine gating rows
 (splats_submitted, per-level reject counts, gating on/off), the temporal
 plan-delta amortization sweep (amortized_ratio, rebinned_frac,
 entries_carried per orbit step), the adaptive-precision rows (per-class
-tile/PR mix, PSNR vs global fp32, CTU energy saving), and the
-multi-tenant service rows (per-client-count latency percentiles, plan
-sharing, and the coalesced vs uncoalesced fill rates).
+tile/PR mix, PSNR vs global fp32, CTU energy saving, plus the per-rect
+quadrant rows: quads/<class> mix, psnr_rect_vs_fp32, ctu_prs_rect, and
+the rect-vs-adaptive CTU saving), and the multi-tenant service rows
+(per-client-count latency percentiles, plan sharing, and the coalesced
+vs uncoalesced fill rates).
 
 Stdlib only — the CI image must not need pip installs.
 """
@@ -31,7 +33,7 @@ REPORTS = [
 
 
 def main():
-    out_path = sys.argv[1] if len(sys.argv) > 1 else "BENCH_9.json"
+    out_path = sys.argv[1] if len(sys.argv) > 1 else "BENCH_10.json"
     report_dir = os.environ.get(
         "FLICKER_BENCH_REPORTS", os.path.join("rust", "target", "bench-reports")
     )
